@@ -1,0 +1,87 @@
+//! Classification benches — the numeric hot path behind Figs. 3, 4, 9:
+//! spike-vector extraction, pairwise cosine distances, hierarchical
+//! clustering, and K-Means, at several problem sizes, on both the
+//! native and PJRT backends.
+//!
+//! Run with: `cargo bench --bench classification`
+
+use minos::benchkit::{bench, black_box, group};
+use minos::clustering::hierarchy::{Dendrogram, Linkage};
+use minos::clustering::kmeans::kmeans;
+use minos::clustering::metrics::{pairwise, Metric};
+use minos::features::spike_vector;
+use minos::runtime::MinosRuntime;
+use minos::sim::rng::Rng;
+use minos::trace::PowerTrace;
+use std::time::Duration;
+
+const BUDGET: Duration = Duration::from_millis(400);
+
+fn synth_trace(rng: &mut Rng, n: usize) -> PowerTrace {
+    let watts: Vec<f64> = (0..n).map(|_| rng.range(150.0, 1450.0)).collect();
+    PowerTrace::from_watts(watts, 1.5, 750.0)
+}
+
+fn main() {
+    let mut rng = Rng::new(42);
+    let rt_native = MinosRuntime::native();
+    let rt_pjrt = MinosRuntime::auto();
+
+    group("spike-vector extraction (one trace)");
+    for n in [2_048usize, 8_192, 16_384] {
+        let t = synth_trace(&mut rng, n);
+        let r = bench(&format!("native spike_vector T={n}"), BUDGET, 100_000, || {
+            black_box(spike_vector(&t, 0.1))
+        });
+        println!("{}", r.report());
+    }
+
+    group("spike-feature batch (32 traces) native vs PJRT artifact");
+    let traces: Vec<PowerTrace> = (0..32).map(|_| synth_trace(&mut rng, 4096)).collect();
+    let refs: Vec<&PowerTrace> = traces.iter().collect();
+    let r = bench("native batch-32 T=4096", BUDGET, 10_000, || {
+        black_box(rt_native.spike_features(&refs, 0.1).unwrap())
+    });
+    println!("{}", r.report());
+    if rt_pjrt.is_pjrt() {
+        let r = bench("pjrt   batch-32 T=4096", BUDGET, 10_000, || {
+            black_box(rt_pjrt.spike_features(&refs, 0.1).unwrap())
+        });
+        println!("{}", r.report());
+    }
+
+    group("pairwise cosine distance matrix");
+    let vecs: Vec<_> = traces.iter().map(|t| spike_vector(t, 0.1)).collect();
+    let rows: Vec<Vec<f64>> = vecs.iter().map(|v| v.v.clone()).collect();
+    let vrefs: Vec<_> = vecs.iter().collect();
+    let r = bench("native pairwise 32x64", BUDGET, 100_000, || {
+        black_box(pairwise(Metric::Cosine, &rows))
+    });
+    println!("{}", r.report());
+    if rt_pjrt.is_pjrt() {
+        let r = bench("pjrt   pairwise 32x64 (Gram kernel)", BUDGET, 10_000, || {
+            black_box(rt_pjrt.pairwise_cosine(&vrefs).unwrap())
+        });
+        println!("{}", r.report());
+    }
+
+    group("hierarchical clustering (ward + cosine) — Fig. 3 path");
+    for n in [16usize, 24, 32] {
+        let d = pairwise(Metric::Cosine, &rows[..n.min(rows.len())]);
+        let r = bench(&format!("dendrogram n={n}"), BUDGET, 100_000, || {
+            black_box(Dendrogram::build(&d, Linkage::Ward))
+        });
+        println!("{}", r.report());
+    }
+
+    group("K-Means on the utilization plane — Fig. 4 path");
+    let pts: Vec<Vec<f64>> = (0..33)
+        .map(|_| vec![rng.range(5.0, 95.0), rng.range(3.0, 55.0)])
+        .collect();
+    for k in [3usize, 8, 17] {
+        let r = bench(&format!("kmeans k={k} n=33 (10 restarts)"), BUDGET, 100_000, || {
+            black_box(kmeans(&pts, k, 7, 10))
+        });
+        println!("{}", r.report());
+    }
+}

@@ -1,0 +1,78 @@
+//! Algorithm 1 benches — the online decision path a cluster scheduler
+//! sits on: nearest-neighbor search, bin-size selection, cap selection,
+//! and the full hold-one-out evaluation loop of §7.2.
+//!
+//! Run with: `cargo bench --bench prediction`
+
+use minos::benchkit::{bench, black_box, group};
+use minos::config::{GpuSpec, MinosParams, SimParams};
+use minos::minos::algorithm::{Objective, SelectOptimalFreq, TargetProfile};
+use minos::minos::reference_set::ReferenceSet;
+use minos::workloads;
+use std::time::Duration;
+
+const BUDGET: Duration = Duration::from_millis(400);
+
+fn main() {
+    let spec = GpuSpec::mi300x();
+    let sim = SimParams::default();
+    let minos = MinosParams::default();
+    let reg = workloads::registry();
+
+    // Reference set over all reference workloads (built once; this is
+    // the offline step the paper amortizes).
+    let wls: Vec<&workloads::Workload> = reg.util_reference();
+    let t0 = std::time::Instant::now();
+    let refset = ReferenceSet::build(&spec, &sim, &minos, &wls);
+    println!(
+        "built reference set: {} entries x {} freqs in {:.2?}\n",
+        refset.entries.len(),
+        refset.entries[0].scaling.points.len(),
+        t0.elapsed()
+    );
+
+    let target = TargetProfile::from_entry(refset.by_name("sdxl-b64").unwrap());
+    let sel = SelectOptimalFreq::new(&refset, &minos);
+
+    group("Algorithm 1 components");
+    let r = bench("GetPwrNeighbor (cosine scan)", BUDGET, 1_000_000, || {
+        black_box(sel.pwr_neighbor(&target, 0.1))
+    });
+    println!("{}", r.report());
+    let r = bench("GetUtilNeighbor (euclid scan)", BUDGET, 1_000_000, || {
+        black_box(sel.util_neighbor(&target))
+    });
+    println!("{}", r.report());
+    let r = bench("ChooseBinSize (6 candidates)", BUDGET, 1_000_000, || {
+        black_box(sel.choose_bin_size(&target))
+    });
+    println!("{}", r.report());
+    let r = bench("SELECT_OPTIMAL_FREQ (full)", BUDGET, 1_000_000, || {
+        black_box(sel.select(&target, Objective::PowerCentric))
+    });
+    println!("{}", r.report());
+
+    group("hold-one-out evaluation (refset rebuild per holdout app)");
+    let holdouts: Vec<String> = reg.holdout_set().iter().map(|w| w.name.clone()).collect();
+    let r = bench(
+        &format!("holdout loop ({} workloads)", holdouts.len()),
+        Duration::from_secs(1),
+        10_000,
+        || {
+            let mut errs = Vec::new();
+            for name in &holdouts {
+                let e = refset.by_name(name).unwrap();
+                let t = TargetProfile::from_entry(e);
+                let cut = refset.without_app(&e.app);
+                let s = SelectOptimalFreq::new(&cut, &minos);
+                if let Some((nn, _)) = s.pwr_neighbor(&t, 0.1) {
+                    let (cap, pred) = s.cap_power_centric(nn);
+                    let obs = e.scaling.at(cap).map(|p| p.p90_rel).unwrap_or(f64::NAN);
+                    errs.push((pred - obs).abs());
+                }
+            }
+            black_box(errs)
+        },
+    );
+    println!("{}", r.report());
+}

@@ -1,0 +1,102 @@
+//! Runtime benches — PJRT artifact execution vs the native twins, per
+//! artifact, at artifact shapes.  This is the §Perf evidence for where
+//! the compiled path pays off (batched trace analytics) and where the
+//! native path is preferable (tiny K-Means steps).
+//!
+//! Run with: `cargo bench --bench runtime`
+
+use minos::benchkit::{bench, black_box, group};
+use minos::clustering::kmeans::lloyd_step;
+use minos::runtime::MinosRuntime;
+use minos::sim::kernel::KernelProfile;
+use minos::sim::rng::Rng;
+use minos::trace::PowerTrace;
+use std::time::Duration;
+
+const BUDGET: Duration = Duration::from_millis(500);
+
+fn main() {
+    let pjrt = MinosRuntime::auto();
+    let native = MinosRuntime::native();
+    println!("pjrt backend available: {}", pjrt.is_pjrt());
+    let mut rng = Rng::new(7);
+
+    // full-shape batch: 32 traces x 16384 samples
+    let traces: Vec<PowerTrace> = (0..32)
+        .map(|_| {
+            PowerTrace::from_watts(
+                (0..16_384).map(|_| rng.range(150.0, 1450.0)).collect(),
+                1.5,
+                750.0,
+            )
+        })
+        .collect();
+    let refs: Vec<&PowerTrace> = traces.iter().collect();
+
+    group("spike_features (32 x 16384)");
+    let r = bench("native", BUDGET, 10_000, || {
+        black_box(native.spike_features(&refs, 0.1).unwrap())
+    });
+    println!("{}", r.report());
+    if pjrt.is_pjrt() {
+        let r = bench("pjrt", BUDGET, 10_000, || {
+            black_box(pjrt.spike_features(&refs, 0.1).unwrap())
+        });
+        println!("{}", r.report());
+    }
+
+    group("percentiles (32 x 16384)");
+    let r = bench("native (sort per trace)", BUDGET, 10_000, || {
+        black_box(native.percentiles(&refs).unwrap())
+    });
+    println!("{}", r.report());
+    if pjrt.is_pjrt() {
+        let r = bench("pjrt (batched sort)", BUDGET, 10_000, || {
+            black_box(pjrt.percentiles(&refs).unwrap())
+        });
+        println!("{}", r.report());
+    }
+
+    group("kmeans_step (48 points, 8 centroids)");
+    let pts: Vec<Vec<f64>> = (0..48)
+        .map(|_| vec![rng.range(0.0, 100.0), rng.range(0.0, 60.0)])
+        .collect();
+    let cents: Vec<Vec<f64>> = (0..8)
+        .map(|_| vec![rng.range(0.0, 100.0), rng.range(0.0, 60.0)])
+        .collect();
+    let r = bench("native lloyd_step", BUDGET, 1_000_000, || {
+        black_box(lloyd_step(&pts, &cents))
+    });
+    println!("{}", r.report());
+    if pjrt.is_pjrt() {
+        let r = bench("pjrt kmeans_step", BUDGET, 100_000, || {
+            black_box(pjrt.kmeans_step(&pts, &cents).unwrap())
+        });
+        println!("{}", r.report());
+    }
+
+    group("util_aggregate (32 apps x 256 kernels)");
+    let apps: Vec<Vec<KernelProfile>> = (0..32)
+        .map(|a| {
+            (0..256)
+                .map(|k| KernelProfile {
+                    name: format!("k{a}_{k}"),
+                    duration_ms: rng.range(0.01, 5.0),
+                    sm_util: rng.range(0.0, 100.0),
+                    dram_util: rng.range(0.0, 100.0),
+                })
+                .collect()
+        })
+        .collect();
+    let slices: Vec<&[KernelProfile]> = apps.iter().map(|a| a.as_slice()).collect();
+    let r = bench("native weighted mean", BUDGET, 1_000_000, || {
+        black_box(native.util_aggregate(&slices).unwrap())
+    });
+    println!("{}", r.report());
+    if pjrt.is_pjrt() {
+        let r = bench("pjrt util_aggregate", BUDGET, 100_000, || {
+            black_box(pjrt.util_aggregate(&slices).unwrap())
+        });
+        println!("{}", r.report());
+    }
+}

@@ -1,0 +1,68 @@
+//! Simulator benches — substrate throughput: how fast the discrete-time
+//! GPU model generates telemetry, per workload and per DVFS mode, plus
+//! the full reference-set sweep that backs every experiment.
+//!
+//! Run with: `cargo bench --bench simulation`
+
+use minos::benchkit::{bench, black_box, group};
+use minos::config::{GpuSpec, SimParams};
+use minos::sim::dvfs::DvfsMode;
+use minos::sim::profiler::{profile, ProfileRequest};
+use minos::workloads;
+use std::time::Duration;
+
+const BUDGET: Duration = Duration::from_millis(600);
+
+fn main() {
+    let spec = GpuSpec::mi300x();
+    let params = SimParams::default();
+    let reg = workloads::registry();
+
+    group("single profiling run (default iterations)");
+    for name in ["sgemm", "llama3-infer-b32", "lsms", "milc-24"] {
+        let w = reg.by_name(name).unwrap();
+        let req = ProfileRequest::new(&spec, w, DvfsMode::Uncapped).with_params(&params);
+        let r = bench(&format!("profile {name}"), BUDGET, 10_000, || {
+            black_box(profile(&req))
+        });
+        // derived: simulated-seconds per wall-second
+        let p = profile(&req);
+        let sim_s = p.profiling_cost_s;
+        println!(
+            "{}   [{:.0}x realtime]",
+            r.report(),
+            sim_s / (r.mean_ns / 1e9)
+        );
+    }
+
+    group("DVFS modes (sgemm, 10 iterations)");
+    let w = reg.by_name("sgemm").unwrap();
+    for mode in [DvfsMode::Uncapped, DvfsMode::Cap(1300.0), DvfsMode::Pin(1700.0)] {
+        let req = ProfileRequest::new(&spec, w, mode)
+            .with_params(&params)
+            .with_iterations(10);
+        let r = bench(&format!("sgemm {}", mode.label()), BUDGET, 10_000, || {
+            black_box(profile(&req))
+        });
+        println!("{}", r.report());
+    }
+
+    group("frequency sweep (9 points, one workload) — refset build unit");
+    let w = reg.by_name("milc-6").unwrap();
+    let sweep = spec.sweep_frequencies();
+    let r = bench("sweep milc-6 x9", Duration::from_secs(2), 1_000, || {
+        let mut out = Vec::new();
+        for &f in &sweep {
+            let mode = if (f - spec.f_max_mhz).abs() < 0.5 {
+                DvfsMode::Uncapped
+            } else {
+                DvfsMode::Cap(f)
+            };
+            out.push(profile(
+                &ProfileRequest::new(&spec, w, mode).with_params(&params),
+            ));
+        }
+        black_box(out)
+    });
+    println!("{}", r.report());
+}

@@ -1,0 +1,152 @@
+//! End-to-end driver (recorded in EXPERIMENTS.md): exercises the FULL
+//! three-layer stack on a real workload of the paper's scale —
+//!
+//!   1. build the complete 30+-workload reference set with 9-point
+//!      frequency sweeps on the simulated MI300X node (the substrate),
+//!   2. run the classification pipeline THROUGH THE PJRT ARTIFACTS
+//!      (spike_features → pairwise_cosine → kmeans_step → percentiles →
+//!      util_aggregate), cross-checking every stage against the native
+//!      implementations,
+//!   3. run the §7.1 case study (FAISS, Qwen1.5-MoE) and the §7.2
+//!      hold-one-out validation,
+//!   4. report the paper's headline metrics.
+//!
+//! Run with: `cargo run --release --example end_to_end`
+
+use minos::config::Config;
+use minos::experiments::{holdout, ExperimentContext};
+use minos::minos::algorithm::{Objective, SelectOptimalFreq, TargetProfile};
+use minos::minos::prediction::{mean, profiling_savings};
+use minos::sim::dvfs::DvfsMode;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let t0 = Instant::now();
+    let mut ctx = ExperimentContext::new(Config::default()).without_cache();
+    println!("backend: {}", ctx.runtime.backend_name());
+    anyhow::ensure!(
+        ctx.runtime.is_pjrt(),
+        "end_to_end requires the PJRT artifacts — run `make artifacts` first"
+    );
+
+    // ---- 1. substrate: full reference set (sweeps every workload).
+    let t = Instant::now();
+    let refset = ctx.refset().clone();
+    println!(
+        "reference set: {} workloads x {} frequencies in {:.2?} (simulated {:.0} s of telemetry)",
+        refset.entries.len(),
+        refset.entries[0].scaling.points.len(),
+        t.elapsed(),
+        refset
+            .entries
+            .iter()
+            .map(|e| e.scaling.total_cost_s())
+            .sum::<f64>()
+    );
+
+    // ---- 2. the classification pipeline through PJRT, cross-checked.
+    let report = ctx.runtime.verify()?;
+    for (name, dev) in &report {
+        println!("  artifact {name:<28} max|pjrt-native| = {dev:.2e}");
+        anyhow::ensure!(
+            *dev < 2.0,
+            "artifact {name} deviates from native implementation"
+        );
+    }
+
+    // PJRT pairwise distances over the full power reference.
+    let c = ctx.config.minos.default_bin_size;
+    let entries = refset.power_entries(None);
+    let vecs: Vec<_> = entries.iter().map(|e| e.vector_for(c).unwrap()).collect();
+    let t = Instant::now();
+    let d = ctx.runtime.pairwise_cosine(&vecs)?;
+    println!(
+        "PJRT pairwise cosine over {} workloads: {:.2?} ({} distances)",
+        vecs.len(),
+        t.elapsed(),
+        d.len() * d.len()
+    );
+
+    // ---- 3a. case study (§7.1).
+    let params = ctx.config.minos.clone();
+    println!("\n--- case study ---");
+    for name in ["faiss-b4096", "qwen15-moe-b32"] {
+        let w = ctx.registry.by_name(name).unwrap().clone();
+        let prof = ctx.profile(name, DvfsMode::Uncapped)?;
+        let target = TargetProfile::from_profile(&w.app, &prof, &refset.bin_sizes);
+        let sel = SelectOptimalFreq::new(&refset, &params);
+        let pwr = sel.select(&target, Objective::PowerCentric).unwrap();
+        let perf = sel.select(&target, Objective::PerfCentric).unwrap();
+
+        // validate the PowerCentric cap on the target itself
+        let capped = ctx.profile(name, DvfsMode::Cap(pwr.f_cap_mhz))?;
+        let obs_p90 = capped.trace.percentile_rel(0.90);
+        let power_err_pp = ((obs_p90 - params.power_bound_x).max(0.0)) * 100.0;
+
+        // validate the PerfCentric cap
+        let base = ctx.profile(name, DvfsMode::Uncapped)?.iter_time_ms;
+        let t_cap = ctx.profile(name, DvfsMode::Cap(perf.f_cap_mhz))?.iter_time_ms;
+        let obs_degr = t_cap / base - 1.0;
+        let perf_err_pp = ((obs_degr - params.perf_bound_frac).max(0.0)) * 100.0;
+
+        // profiling savings vs sweeping the target
+        let mut sweep = 0.0;
+        for f in ctx.config.node.gpu.sweep_frequencies() {
+            let mode = if (f - ctx.config.node.gpu.f_max_mhz).abs() < 0.5 {
+                DvfsMode::Uncapped
+            } else {
+                DvfsMode::Cap(f)
+            };
+            sweep += ctx.profile(name, mode)?.profiling_cost_s;
+        }
+        let savings = profiling_savings(prof.profiling_cost_s, sweep);
+
+        println!(
+            "{name}: pwrNN {} (cos {:.3}) -> cap {:.0} MHz, p90 bound err {:+.1}%; \
+             perfNN {} (eucl {:.1}) -> cap {:.0} MHz, perf bound err {:+.1}%; savings {:.0}%",
+            pwr.pwr_neighbor,
+            pwr.pwr_distance,
+            pwr.f_cap_mhz,
+            power_err_pp,
+            perf.util_neighbor,
+            perf.util_distance,
+            perf.f_cap_mhz,
+            perf_err_pp,
+            savings * 100.0
+        );
+    }
+
+    // ---- 3b. hold-one-out (§7.2) + baseline comparison (§7.3).
+    println!("\n--- hold-one-out ---");
+    let power_results = holdout::evaluate(&mut ctx, 0.90)?;
+    let perf_results = holdout::evaluate_perf(&mut ctx)?;
+    let minos_err: Vec<f64> = power_results.iter().map(|r| r.minos_bound_err_pp).collect();
+    let guer_err: Vec<f64> = power_results
+        .iter()
+        .map(|r| r.guerreiro_bound_err_pp)
+        .collect();
+    let perf_err: Vec<f64> = perf_results.iter().map(|r| r.bound_err_pp).collect();
+    let perfect = perf_results.iter().filter(|r| r.bound_err_pp == 0.0).count();
+
+    println!(
+        "p90 power bound error: Minos {:.1}% vs Guerreiro {:.1}%  over {} workloads (paper: 4% vs 14%)",
+        mean(&minos_err),
+        mean(&guer_err),
+        power_results.len()
+    );
+    println!(
+        "perf bound error: {:.1}% mean, {}/{} perfect (paper: 3%, 8/11)",
+        mean(&perf_err),
+        perfect,
+        perf_results.len()
+    );
+
+    // ---- 4. headline assertions: the paper's ordering must hold.
+    anyhow::ensure!(
+        mean(&minos_err) <= mean(&guer_err) + 1e-9,
+        "Minos must beat the mean-power baseline"
+    );
+    anyhow::ensure!(perfect * 2 >= perf_results.len(), "majority perfect perf predictions");
+    println!("\nend_to_end OK in {:.2?}", t0.elapsed());
+    Ok(())
+}

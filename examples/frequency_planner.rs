@@ -1,0 +1,93 @@
+//! Frequency planner: the sysadmin workflow of §4.3/§7.1 — given a
+//! never-before-seen application, produce a frequency-cap plan from one
+//! profiling run, show the neighbor evidence, and quantify the
+//! profiling-time savings vs a full sweep.
+//!
+//! Run with: `cargo run --release --example frequency_planner [workload]`
+
+use minos::config::Config;
+use minos::experiments::ExperimentContext;
+use minos::minos::algorithm::{Objective, SelectOptimalFreq, TargetProfile};
+use minos::minos::prediction::profiling_savings;
+use minos::report::table;
+use minos::sim::dvfs::DvfsMode;
+
+fn main() -> anyhow::Result<()> {
+    let name = std::env::args()
+        .nth(1)
+        .unwrap_or_else(|| "faiss-b4096".to_string());
+    let mut ctx = ExperimentContext::new(Config::default());
+    let w = ctx
+        .registry
+        .by_name(&name)
+        .ok_or_else(|| anyhow::anyhow!("unknown workload {name}"))?
+        .clone();
+
+    // One-shot profile + classification.
+    let prof = ctx.profile(&name, DvfsMode::Uncapped)?;
+    let one_shot_cost = prof.profiling_cost_s;
+    let bins = ctx.config.minos.bin_sizes.clone();
+    let target = TargetProfile::from_profile(&w.app, &prof, &bins);
+    let params = ctx.config.minos.clone();
+    let refset = ctx.refset().clone();
+    let sel = SelectOptimalFreq::new(&refset, &params);
+
+    let plan_pwr = sel.select(&target, Objective::PowerCentric).unwrap();
+    let plan_perf = sel.select(&target, Objective::PerfCentric).unwrap();
+
+    println!("=== Frequency plan for {name} ===");
+    println!("chosen bin size: {}", plan_pwr.chosen_bin_size);
+    println!(
+        "power neighbor : {} (cosine {:.3})",
+        plan_pwr.pwr_neighbor, plan_pwr.pwr_distance
+    );
+    println!(
+        "perf neighbor  : {} (euclid {:.2})\n",
+        plan_pwr.util_neighbor, plan_pwr.util_distance
+    );
+
+    // Neighbor scaling evidence.
+    let nn = refset.by_name(&plan_pwr.pwr_neighbor).unwrap();
+    let rows: Vec<Vec<String>> = nn
+        .scaling
+        .points
+        .iter()
+        .map(|p| {
+            vec![
+                format!("{:.0}", p.f_mhz),
+                format!("{:.3}", p.p90_rel),
+                format!("{:+.1}%", nn.scaling.perf_degr_at(p.f_mhz).unwrap() * 100.0),
+            ]
+        })
+        .collect();
+    println!("{}", table(&["cap MHz", "NN p90/TDP", "NN slowdown"], &rows));
+
+    println!(
+        "PowerCentric -> cap {:.0} MHz (predict p90 {:.3}xTDP < {:.1})",
+        plan_pwr.f_cap_mhz, plan_pwr.predicted_quantile_rel, params.power_bound_x
+    );
+    println!(
+        "PerfCentric  -> cap {:.0} MHz (predict slowdown {:+.1}% <= {:.0}%)",
+        plan_perf.f_cap_mhz,
+        plan_perf.predicted_perf_degr * 100.0,
+        params.perf_bound_frac * 100.0
+    );
+
+    // What a full sweep would have cost (the thing Minos avoids).
+    let mut sweep_cost = 0.0;
+    for f in ctx.config.node.gpu.sweep_frequencies() {
+        let mode = if (f - ctx.config.node.gpu.f_max_mhz).abs() < 0.5 {
+            DvfsMode::Uncapped
+        } else {
+            DvfsMode::Cap(f)
+        };
+        sweep_cost += ctx.profile(&name, mode)?.profiling_cost_s;
+    }
+    println!(
+        "\nprofiling cost: one-shot {:.1}s vs full sweep {:.1}s -> {:.0}% saved (paper: 89-90%)",
+        one_shot_cost,
+        sweep_cost,
+        profiling_savings(one_shot_cost, sweep_cost) * 100.0
+    );
+    Ok(())
+}

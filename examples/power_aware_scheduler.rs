@@ -1,0 +1,83 @@
+//! Power-aware scheduler demo: the coordinator serving a mixed job queue
+//! on one 8×MI300X node under a constrained power budget, choosing caps
+//! via Minos online (§4.3's POLCA/TAPAS/PAL-style deployment).
+//!
+//! The node budget is deliberately over-subscribed (6 GPUs' worth of
+//! power for 8 GPUs) so the admission governor has to serialize hot jobs
+//! — exactly the situation Minos's p90 predictions enable.
+//!
+//! Run with: `cargo run --release --example power_aware_scheduler`
+
+use minos::config::Config;
+use minos::coordinator::{Job, PowerAwareScheduler, SchedulerConfig};
+use minos::experiments::ExperimentContext;
+use minos::minos::algorithm::Objective;
+
+fn main() -> anyhow::Result<()> {
+    let config = Config::default();
+    let mut ctx = ExperimentContext::new(config.clone());
+    let refset = ctx.refset().clone();
+
+    let mut node = config.node.clone();
+    node.power_budget_w = node.gpu.tdp_w * 6.0; // over-subscribed node
+    println!(
+        "node: {} x {} | budget {:.0} W ({}x TDP for {} GPUs)\n",
+        node.gpus_per_node, node.gpu.name, node.power_budget_w, 6, node.gpus_per_node
+    );
+
+    let sched = PowerAwareScheduler::new(
+        SchedulerConfig {
+            node,
+            sim: config.sim.clone(),
+            minos: config.minos.clone(),
+            // pace execution so the 8 jobs overlap on the node
+            sim_ms_per_wall_ms: 20.0,
+        },
+        refset,
+    );
+
+    // A realistic mixed queue: latency-bound inference (PerfCentric) and
+    // batch training/simulation (PowerCentric), with repeats that should
+    // hit the classification cache.
+    let queue = [
+        ("llama3-infer-b32", Objective::PerfCentric),
+        ("lammps-16x16x16", Objective::PowerCentric),
+        ("faiss-b4096", Objective::PerfCentric),
+        ("sdxl-b64", Objective::PowerCentric),
+        ("qwen15-moe-b32", Objective::PerfCentric),
+        ("lsms", Objective::PowerCentric),
+        ("llama3-infer-b32", Objective::PerfCentric), // cache hit
+        ("lammps-16x16x16", Objective::PowerCentric), // cache hit
+    ];
+    for (i, (wl, obj)) in queue.iter().enumerate() {
+        sched.submit(Job {
+            id: i as u64,
+            workload: wl.to_string(),
+            objective: *obj,
+            iterations: 4,
+        })?;
+    }
+
+    let outcomes = sched.collect(queue.len());
+    sched.shutdown();
+    println!("id  workload                 objective     cap MHz  p90 W (pred)  peak W  iter ms   class");
+    for o in &outcomes {
+        println!(
+            "{:>2}  {:<24} {:<12} {:>7.0}  {:>5.0} ({:>4.0})  {:>6.0}  {:>7.1}   {}",
+            o.job.id,
+            o.job.workload,
+            format!("{:?}", o.job.objective),
+            o.f_cap_mhz,
+            o.observed_p90_w,
+            o.predicted_p90_w,
+            o.observed_peak_w,
+            o.iter_time_ms,
+            if o.classification_cached { "cached" } else { "profiled" },
+        );
+    }
+    let m = sched.metrics();
+    println!("\n{}", m.summary());
+    anyhow::ensure!(m.completed == queue.len(), "not all jobs completed");
+    anyhow::ensure!(m.cache_hits >= 2, "expected classification cache hits");
+    Ok(())
+}

@@ -1,0 +1,61 @@
+//! Quickstart: profile one workload, classify it against the reference
+//! set, and pick a frequency cap with Algorithm 1.
+//!
+//! Run with: `cargo run --release --example quickstart`
+
+use minos::config::Config;
+use minos::experiments::ExperimentContext;
+use minos::minos::algorithm::{Objective, SelectOptimalFreq, TargetProfile};
+use minos::sim::dvfs::DvfsMode;
+
+fn main() -> anyhow::Result<()> {
+    let config = Config::default(); // MI300X node, paper defaults
+    let mut ctx = ExperimentContext::new(config);
+
+    // 1. One-shot profiling of a "new" workload at the default clock.
+    let name = "qwen15-moe-b32";
+    let w = ctx.registry.by_name(name).unwrap().clone();
+    let prof = ctx.profile(name, DvfsMode::Uncapped)?;
+    println!(
+        "profiled {name}: {} samples, mean {:.0} W, p90 {:.2}xTDP, SM {:.0}%, DRAM {:.0}%",
+        prof.trace.len(),
+        prof.trace.mean(),
+        prof.trace.percentile_rel(0.90),
+        prof.app_sm_util,
+        prof.app_dram_util
+    );
+
+    // 2. Classify against the (cached) reference set.
+    let bins = ctx.config.minos.bin_sizes.clone();
+    let target = TargetProfile::from_profile(&w.app, &prof, &bins);
+    let params = ctx.config.minos.clone();
+    let refset = ctx.refset().clone();
+    let sel = SelectOptimalFreq::new(&refset, &params);
+
+    // 3. Algorithm 1, both objectives.
+    for objective in [Objective::PowerCentric, Objective::PerfCentric] {
+        let plan = sel.select(&target, objective).expect("classification");
+        println!(
+            "{objective:?}: cap {:.0} MHz (power neighbor {} @cos {:.3}, perf neighbor {} @eucl {:.1})",
+            plan.f_cap_mhz,
+            plan.pwr_neighbor,
+            plan.pwr_distance,
+            plan.util_neighbor,
+            plan.util_distance
+        );
+    }
+
+    // 4. Validate: run the workload at the PowerCentric cap and check
+    //    the p90 bound actually held.
+    let plan = sel.select(&target, Objective::PowerCentric).unwrap();
+    let capped = ctx.profile(name, DvfsMode::Cap(plan.f_cap_mhz))?;
+    let p90 = capped.trace.percentile_rel(0.90);
+    println!(
+        "at cap {:.0} MHz: observed p90 {:.3}xTDP (bound {:.1}xTDP) -> {}",
+        plan.f_cap_mhz,
+        p90,
+        params.power_bound_x,
+        if p90 < params.power_bound_x { "OK" } else { "EXCEEDED" }
+    );
+    Ok(())
+}

@@ -1,0 +1,61 @@
+"""L1 Pallas kernel: one Lloyd (K-Means) iteration.
+
+The problem is tiny ((48, 2) points, <= 8 centroids) so the kernel is a
+single VMEM-resident block: point->centroid squared distances via the
+expanded |x|^2 + |c|^2 - 2 x.c form (the 2 x.c term is an MXU matmul),
+masked argmin, one-hot accumulation for the centroid update.  The win
+over host code is not FLOPs here -- it is that the whole classification
+pipeline (features -> distances -> clustering step) ships as PJRT
+artifacts with one calling convention.
+
+Inactive centroid slots (cmask=0) are held at distance 1e30 so no point
+selects them, and empty clusters keep their previous coordinates, which
+makes the Rust-side Lloyd driver's fixed-point test exact.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, xm_ref, c_ref, cm_ref, assign_ref, cnew_ref):
+    x = x_ref[...]  # (P, D)
+    xm = xm_ref[...]  # (P, 1)
+    c = c_ref[...]  # (K, D)
+    cm = cm_ref[...]  # (K, 1)
+    k = c.shape[0]
+    d2 = (
+        jnp.sum(x * x, axis=1)[:, None]
+        + jnp.sum(c * c, axis=1)[None, :]
+        - 2.0 * jnp.dot(x, c.T)
+    )
+    d2 = jnp.where(cm[:, 0][None, :] > 0.0, d2, 1e30)
+    assign = jnp.argmin(d2, axis=1).astype(jnp.int32)
+    slots = jax.lax.broadcasted_iota(jnp.int32, (x.shape[0], k), 1)
+    onehot = (assign[:, None] == slots).astype(jnp.float32) * xm
+    counts = jnp.sum(onehot, axis=0)
+    sums = jnp.dot(onehot.T, x)
+    cnew = jnp.where(
+        counts[:, None] > 0.0, sums / jnp.maximum(counts, 1.0)[:, None], c
+    )
+    assign_ref[...] = assign[:, None]
+    cnew_ref[...] = cnew
+
+
+def kmeans_step(x, xmask, c, cmask):
+    """One Lloyd iteration; see ref.kmeans_step_ref for the contract.
+
+    x: (P, D) f32, xmask: (P,) f32, c: (K, D) f32, cmask: (K,) f32.
+    Returns (assign (P,) i32, c_new (K, D) f32).
+    """
+    p, d = x.shape
+    k = c.shape[0]
+    assign2d, cnew = pl.pallas_call(
+        _kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((p, 1), jnp.int32),
+            jax.ShapeDtypeStruct((k, d), jnp.float32),
+        ),
+        interpret=True,
+    )(x, xmask[:, None], c, cmask[:, None])
+    return assign2d[:, 0], cnew

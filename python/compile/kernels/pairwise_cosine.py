@@ -1,0 +1,45 @@
+"""L1 Pallas kernel: pairwise cosine-distance matrix.
+
+Gram-matrix shape: each grid step computes one (BLK_R, BLK_R) tile of
+D = 1 - Vn @ Vn^T on the MXU, with the full feature axis (NBINS=64)
+resident so row norms are computed in-tile.  Tiles are (16, 64) input
+blocks -> MXU-friendly (the systolic array wants the contraction axis
+dense; 64 f32 lanes fill half a register tile and pad cleanly).
+
+Zero rows (a workload with no spikes at all) normalize against an
+epsilon-clamped norm, giving similarity 0 / distance 1 against
+everything -- the same convention as ref.pairwise_cosine_ref and the
+Rust native fallback.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLK_R = 16
+
+
+def _kernel(a_ref, b_ref, o_ref):
+    a = a_ref[...]  # (BLK_R, N)
+    b = b_ref[...]  # (BLK_R, N)
+    an = jnp.maximum(jnp.sqrt(jnp.sum(a * a, axis=1)), 1e-12)
+    bn = jnp.maximum(jnp.sqrt(jnp.sum(b * b, axis=1)), 1e-12)
+    sim = jnp.dot(a / an[:, None], (b / bn[:, None]).T)
+    o_ref[...] = 1.0 - sim
+
+
+def pairwise_cosine(v):
+    """(R, N) f32 -> (R, R) f32 cosine distance matrix."""
+    r, n = v.shape
+    assert r % BLK_R == 0, (r, BLK_R)
+    return pl.pallas_call(
+        _kernel,
+        grid=(r // BLK_R, r // BLK_R),
+        in_specs=[
+            pl.BlockSpec((BLK_R, n), lambda i, j: (i, 0)),
+            pl.BlockSpec((BLK_R, n), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLK_R, BLK_R), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((r, r), jnp.float32),
+        interpret=True,
+    )(v, v)

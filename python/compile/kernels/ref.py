@@ -1,0 +1,125 @@
+"""Pure-jnp oracles for every Pallas kernel and model entry point.
+
+These are the correctness contract: python/tests compares each Pallas
+kernel and each lowered entry point against these, and the Rust native
+fallbacks (rust/src/features, rust/src/clustering) implement the same
+arithmetic so the PJRT path and the native path agree to f32 tolerance.
+"""
+
+import jax.numpy as jnp
+
+from compile import shapes
+
+
+def ema_filter_ref(x):
+    """Paper eq. (alpha=0.5): P_filt(t) = (P(t) + P(t-1)) / 2, P(-1)=P(0).
+
+    x: (B, T) raw instantaneous power (watts).
+    """
+    prev = jnp.concatenate([x[:, :1], x[:, :-1]], axis=1)
+    return 0.5 * (x + prev)
+
+
+def spike_hist_ref(r, bin_width):
+    """Histogram of spike magnitudes.
+
+    r: (B, T) power relative to TDP (already EMA-filtered; padding <= 0).
+    bin_width: scalar c.  Bin j covers [0.5 + j*c, 0.5 + (j+1)*c); indices
+    clip into [0, NBINS-1] so out-of-range spikes land in the edge bins.
+    Returns integer counts as f32, shape (B, NBINS).
+    """
+    spike = r >= shapes.SPIKE_LO
+    idx = jnp.clip(
+        jnp.floor((r - shapes.SPIKE_LO) / bin_width), 0, shapes.NBINS - 1
+    ).astype(jnp.int32)
+    onehot = jnp.arange(shapes.NBINS)[None, None, :] == idx[:, :, None]
+    onehot = jnp.logical_and(onehot, spike[:, :, None])
+    return jnp.sum(onehot.astype(jnp.float32), axis=1)
+
+
+def spike_features_ref(power, tdp, bin_width):
+    """Full power-feature entry: raw watts -> normalized spike vectors.
+
+    power: (B, T) watts (zero-padded tails are benign: r=0 is no spike).
+    tdp: (B,) watts.  bin_width: scalar.
+    Returns (v, total): (B, NBINS) normalized distribution, (B,) spike count.
+    """
+    r = ema_filter_ref(power) / tdp[:, None]
+    counts = spike_hist_ref(r, bin_width)
+    total = jnp.sum(counts, axis=1)
+    v = counts / jnp.maximum(total, 1.0)[:, None]
+    return v, total
+
+
+def pairwise_cosine_ref(v):
+    """Cosine *distance* matrix, 1 - cos_sim.  Zero rows get similarity 0
+    against everything (distance 1), matching the Rust native fallback.
+
+    v: (R, N).  Returns (R, R).
+    """
+    norms = jnp.sqrt(jnp.sum(v * v, axis=1))
+    safe = jnp.maximum(norms, 1e-12)
+    vn = v / safe[:, None]
+    return 1.0 - vn @ vn.T
+
+
+def kmeans_step_ref(x, xmask, c, cmask):
+    """One Lloyd iteration.
+
+    x: (P, D) points, xmask: (P,) 1.0 valid / 0.0 pad.
+    c: (K, D) centroids, cmask: (K,) 1.0 active / 0.0 unused slot.
+    Returns (assign, c_new): (P,) i32 and (K, D).  Empty / inactive
+    centroid slots keep their previous coordinates.
+    """
+    d2 = (
+        jnp.sum(x * x, axis=1)[:, None]
+        + jnp.sum(c * c, axis=1)[None, :]
+        - 2.0 * x @ c.T
+    )
+    d2 = jnp.where(cmask[None, :] > 0.0, d2, 1e30)
+    assign = jnp.argmin(d2, axis=1).astype(jnp.int32)
+    onehot = (assign[:, None] == jnp.arange(c.shape[0])[None, :]).astype(
+        jnp.float32
+    ) * xmask[:, None]
+    counts = jnp.sum(onehot, axis=0)
+    sums = onehot.T @ x
+    c_new = jnp.where(
+        counts[:, None] > 0.0, sums / jnp.maximum(counts, 1.0)[:, None], c
+    )
+    return assign, c_new
+
+
+def percentiles_ref(r, counts):
+    """Linear-interpolation percentiles over the first `counts[b]` samples
+    of each row; the padded tail must sort to the end (pad with +inf or
+    any value >= the row maximum).
+
+    r: (B, T), counts: (B,) i32 with 1 <= counts <= T.
+    Returns (B, len(PCTS)).
+    """
+    s = jnp.sort(r, axis=1)
+    out = []
+    t = jnp.arange(r.shape[1])[None, :]
+    for q in shapes.PCTS:
+        pos = q * (counts.astype(jnp.float32) - 1.0)  # (B,)
+        lo = jnp.floor(pos).astype(jnp.int32)
+        hi = jnp.minimum(lo + 1, counts - 1)
+        frac = pos - lo.astype(jnp.float32)
+        vlo = jnp.sum(jnp.where(t == lo[:, None], s, 0.0), axis=1)
+        vhi = jnp.sum(jnp.where(t == hi[:, None], s, 0.0), axis=1)
+        out.append(vlo * (1.0 - frac) + vhi * frac)
+    return jnp.stack(out, axis=1)
+
+
+def util_aggregate_ref(kernels):
+    """Kernel-duration-weighted application utilization (paper eqs. 1-2).
+
+    kernels: (B, K, 3) with columns [duration, sm_util, dram_util];
+    zero-duration rows are padding and contribute nothing.
+    Returns (B, 2): [app_sm_util, app_dram_util].
+    """
+    dur = kernels[:, :, 0]
+    wsum = jnp.maximum(jnp.sum(dur, axis=1), 1e-12)
+    sm = jnp.sum(dur * kernels[:, :, 1], axis=1) / wsum
+    dram = jnp.sum(dur * kernels[:, :, 2], axis=1) / wsum
+    return jnp.stack([sm, dram], axis=1)

@@ -1,0 +1,85 @@
+"""L2: the JAX compute graph for Minos's classification pipeline.
+
+Each public function here is one AOT entry point (see aot.py).  They
+compose the L1 Pallas kernels (spike_hist, pairwise_cosine, kmeans_step)
+with plain-jnp glue (EMA filtering, sort-based percentiles, weighted
+utilization aggregation) so each lowers into a single fused HLO module
+the Rust runtime executes on the request path.
+
+Shape contract: shapes.py.  Padding semantics per entry:
+  - spike_features: zero-pad trace tails (zero watts is never a spike).
+  - percentiles: pad tails with any value >= row max (Rust uses +1e30)
+    and pass the true sample count.
+  - pairwise_cosine: zero rows are fine (distance 1 to everything).
+  - kmeans_step: xmask/cmask select valid rows/slots.
+  - util_aggregate: zero-duration kernel rows contribute nothing.
+"""
+
+import jax.numpy as jnp
+
+from compile import shapes
+from compile.kernels import ref
+from compile.kernels.kmeans_step import kmeans_step as _kmeans_step
+from compile.kernels.pairwise_cosine import pairwise_cosine as _pairwise_cosine
+from compile.kernels.spike_hist import spike_hist as _spike_hist
+
+
+def spike_features(power, tdp, bin_width):
+    """Raw power traces -> normalized spike-distribution vectors.
+
+    power: (B, T) watts; tdp: (B,) watts; bin_width: () scalar c.
+    Returns (v (B, NBINS), total_spikes (B,)).
+    """
+    r = ref.ema_filter_ref(power) / tdp[:, None]
+    counts = _spike_hist(r, bin_width)
+    total = jnp.sum(counts, axis=1)
+    v = counts / jnp.maximum(total, 1.0)[:, None]
+    return v, total
+
+
+def pairwise_cosine(v):
+    """(R, NBINS) spike vectors -> (R, R) cosine distance matrix."""
+    return (_pairwise_cosine(v),)
+
+
+def kmeans_step(x, xmask, c, cmask):
+    """One Lloyd iteration over the (SM, DRAM) utilization plane."""
+    assign, cnew = _kmeans_step(x, xmask, c, cmask)
+    return assign, cnew
+
+
+def percentiles(r, counts):
+    """(B, T) relative power + (B,) valid counts -> (B, 4) p50/p90/p95/p99."""
+    return (ref.percentiles_ref(r, counts),)
+
+
+def util_aggregate(kernels):
+    """(B, K, 3) [dur, sm, dram] per kernel -> (B, 2) app-level utils."""
+    return (ref.util_aggregate_ref(kernels),)
+
+
+#: entry name -> (fn, example ShapeDtypeStructs builder)
+def entry_points():
+    import jax
+
+    f32 = jnp.float32
+    i32 = jnp.int32
+    s = jax.ShapeDtypeStruct
+    B, T, N, R = shapes.TRACE_B, shapes.TRACE_T, shapes.NBINS, shapes.REF_R
+    P, D, K = shapes.KM_POINTS, shapes.KM_DIM, shapes.KM_K
+    return {
+        "spike_features": (
+            spike_features,
+            (s((B, T), f32), s((B,), f32), s((), f32)),
+        ),
+        "pairwise_cosine": (pairwise_cosine, (s((R, N), f32),)),
+        "kmeans_step": (
+            kmeans_step,
+            (s((P, D), f32), s((P,), f32), s((K, D), f32), s((K,), f32)),
+        ),
+        "percentiles": (percentiles, (s((B, T), f32), s((B,), i32))),
+        "util_aggregate": (
+            util_aggregate,
+            (s((B, shapes.UTIL_KERNELS, 3), f32),),
+        ),
+    }

@@ -1,0 +1,33 @@
+"""Static shapes shared by the AOT entry points, the kernels, and the
+Rust runtime (via artifacts/manifest.json).
+
+Every artifact is compiled for one fixed shape; the Rust side pads its
+inputs up to these maxima and masks the padding.  The padding semantics
+per artifact are chosen so zero rows / zero-duration rows / +inf tails
+are benign (see each kernel's docstring).
+"""
+
+# Power-trace batch: B workloads x T telemetry samples.
+TRACE_B = 32
+TRACE_T = 16384
+
+# Spike-distribution vector width.  The paper's bins cover r = P/TDP in
+# [0.5, 2.0) with a runtime-selected width c; we always emit 64 slots so
+# one compiled artifact serves every candidate bin size (unused upper
+# slots stay exactly zero and do not perturb cosine distances).
+NBINS = 64
+SPIKE_LO = 0.5  # spike detection threshold, in units of TDP
+
+# Reference-set capacity for the pairwise cosine-distance matrix.
+REF_R = 48
+
+# K-Means: max points and max centroid slots.
+KM_POINTS = 48
+KM_DIM = 2
+KM_K = 8
+
+# Utilization aggregation: max kernels per application profile.
+UTIL_KERNELS = 256
+
+# Percentiles emitted by the percentile artifact, in order.
+PCTS = (0.50, 0.90, 0.95, 0.99)

@@ -1,0 +1,87 @@
+"""AOT export contract: every entry point lowers to HLO text the Rust
+runtime can parse, and the manifest matches shapes.py exactly."""
+
+import json
+import os
+
+import pytest
+
+import jax
+
+from compile import aot, model, shapes
+
+
+@pytest.fixture(scope="module")
+def export(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    manifest = aot.export_all(str(out))
+    return out, manifest
+
+
+def test_all_entry_points_exported(export):
+    out, manifest = export
+    for name in model.entry_points():
+        assert name in manifest["artifacts"], name
+        path = out / f"{name}.hlo.txt"
+        assert path.exists() and path.stat().st_size > 100
+
+
+def test_manifest_constants_match_shapes(export):
+    _, manifest = export
+    c = manifest["constants"]
+    assert c["TRACE_B"] == shapes.TRACE_B
+    assert c["TRACE_T"] == shapes.TRACE_T
+    assert c["NBINS"] == shapes.NBINS
+    assert c["REF_R"] == shapes.REF_R
+    assert c["KM_POINTS"] == shapes.KM_POINTS
+    assert c["KM_DIM"] == shapes.KM_DIM
+    assert c["KM_K"] == shapes.KM_K
+    assert c["UTIL_KERNELS"] == shapes.UTIL_KERNELS
+    assert c["PCTS"] == list(shapes.PCTS)
+
+
+def test_manifest_is_valid_json_on_disk(export):
+    out, _ = export
+    with open(out / "manifest.json") as f:
+        m = json.load(f)
+    assert set(m) == {"constants", "artifacts"}
+    for name, entry in m["artifacts"].items():
+        assert entry["file"].endswith(".hlo.txt")
+        for inp in entry["inputs"]:
+            assert all(d > 0 for d in inp["shape"]) or inp["shape"] == []
+            assert inp["dtype"] in ("float32", "int32")
+
+
+def test_hlo_text_is_hlo_module(export):
+    out, _ = export
+    for name in model.entry_points():
+        text = (out / f"{name}.hlo.txt").read_text()
+        # HLO text modules start with `HloModule` and declare ENTRY —
+        # the exact format HloModuleProto::from_text_file parses.
+        assert text.lstrip().startswith("HloModule"), name
+        assert "ENTRY" in text, name
+
+
+def test_stamp_file_written(tmp_path):
+    """--out names the Makefile stamp; it must be a copy of a real artifact."""
+    import subprocess
+    import sys
+
+    out = tmp_path / "artifacts" / "model.hlo.txt"
+    out.parent.mkdir()
+    subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out", str(out)],
+        check=True,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(aot.__file__))),
+    )
+    assert out.exists()
+    assert out.read_text() == (out.parent / "spike_features.hlo.txt").read_text()
+
+
+def test_lowering_is_deterministic():
+    """Two lowerings of the same entry produce identical HLO text —
+    required for Make's artifact caching to be meaningful."""
+    fn, args = model.entry_points()["pairwise_cosine"]
+    a = aot.to_hlo_text(jax.jit(fn).lower(*args))
+    b = aot.to_hlo_text(jax.jit(fn).lower(*args))
+    assert a == b

@@ -1,0 +1,160 @@
+"""Pallas kernels vs pure-jnp oracles — the core correctness signal.
+
+Hypothesis sweeps shapes/values for each kernel; fixed-seed numpy cases
+cover the exact artifact shapes.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import jax.numpy as jnp
+
+from compile import shapes
+from compile.kernels import ref
+from compile.kernels.kmeans_step import kmeans_step
+from compile.kernels.pairwise_cosine import pairwise_cosine, BLK_R
+from compile.kernels.spike_hist import spike_hist, BLK_T
+
+RNG = np.random.default_rng(0)
+
+
+def _trace(b, t, lo=0.0, hi=2.2):
+    return RNG.uniform(lo, hi, size=(b, t)).astype(np.float32)
+
+
+# ---------------------------------------------------------------- spike_hist
+
+
+@pytest.mark.parametrize("bw", [0.05, 0.1, 0.15, 0.2, 0.25, 0.3])
+def test_spike_hist_matches_ref(bw):
+    r = _trace(4, 2 * BLK_T)
+    got = spike_hist(jnp.asarray(r), jnp.float32(bw))
+    want = ref.spike_hist_ref(jnp.asarray(r), jnp.float32(bw))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=0, atol=0)
+
+
+def test_spike_hist_counts_are_integers_and_sum_to_spikes():
+    r = _trace(3, BLK_T)
+    got = np.asarray(spike_hist(jnp.asarray(r), jnp.float32(0.1)))
+    assert np.all(got == np.round(got))
+    spikes = (r >= shapes.SPIKE_LO).sum(axis=1)
+    np.testing.assert_array_equal(got.sum(axis=1), spikes.astype(np.float32))
+
+
+def test_spike_hist_no_spikes_gives_zero_vector():
+    r = np.full((2, BLK_T), 0.3, dtype=np.float32)  # all below threshold
+    got = np.asarray(spike_hist(jnp.asarray(r), jnp.float32(0.1)))
+    assert got.sum() == 0.0
+
+
+def test_spike_hist_clips_into_edge_bins():
+    # beyond even the 64 fixed slots (0.5 + 64*0.1 = 6.9)
+    r = np.full((1, BLK_T), 50.0, dtype=np.float32)
+    got = np.asarray(spike_hist(jnp.asarray(r), jnp.float32(0.1)))
+    assert got[0, shapes.NBINS - 1] == BLK_T
+    assert got[0, : shapes.NBINS - 1].sum() == 0.0
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.integers(1, 4),
+    blocks=st.integers(1, 3),
+    bw=st.floats(0.02, 0.5),
+    scale=st.floats(0.1, 3.0),
+)
+def test_spike_hist_hypothesis(b, blocks, bw, scale):
+    rng = np.random.default_rng(42)
+    r = (rng.uniform(0, scale, size=(b, blocks * BLK_T))).astype(np.float32)
+    got = spike_hist(jnp.asarray(r), jnp.float32(bw))
+    want = ref.spike_hist_ref(jnp.asarray(r), jnp.float32(bw))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=0)
+
+
+# ----------------------------------------------------------- pairwise_cosine
+
+
+def test_pairwise_cosine_matches_ref():
+    v = RNG.uniform(0, 1, size=(shapes.REF_R, shapes.NBINS)).astype(np.float32)
+    got = pairwise_cosine(jnp.asarray(v))
+    want = ref.pairwise_cosine_ref(jnp.asarray(v))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+def test_pairwise_cosine_diag_zero_and_symmetric():
+    v = RNG.uniform(0, 1, size=(BLK_R, shapes.NBINS)).astype(np.float32)
+    d = np.asarray(pairwise_cosine(jnp.asarray(v)))
+    np.testing.assert_allclose(np.diag(d), 0.0, atol=1e-5)
+    np.testing.assert_allclose(d, d.T, atol=1e-6)
+
+
+def test_pairwise_cosine_zero_row_distance_one():
+    v = RNG.uniform(0.1, 1, size=(BLK_R, shapes.NBINS)).astype(np.float32)
+    v[3] = 0.0
+    d = np.asarray(pairwise_cosine(jnp.asarray(v)))
+    np.testing.assert_allclose(d[3, :3], 1.0, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(tiles=st.integers(1, 3), seed=st.integers(0, 2**31 - 1))
+def test_pairwise_cosine_hypothesis(tiles, seed):
+    rng = np.random.default_rng(seed)
+    v = rng.uniform(0, 1, size=(tiles * BLK_R, shapes.NBINS)).astype(np.float32)
+    got = pairwise_cosine(jnp.asarray(v))
+    want = ref.pairwise_cosine_ref(jnp.asarray(v))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5)
+
+
+# ---------------------------------------------------------------- kmeans_step
+
+
+def _km_inputs(p=shapes.KM_POINTS, k=shapes.KM_K, valid_p=None, valid_k=None):
+    valid_p = p if valid_p is None else valid_p
+    valid_k = k if valid_k is None else valid_k
+    x = RNG.uniform(0, 100, size=(p, shapes.KM_DIM)).astype(np.float32)
+    c = RNG.uniform(0, 100, size=(k, shapes.KM_DIM)).astype(np.float32)
+    xm = (np.arange(p) < valid_p).astype(np.float32)
+    cm = (np.arange(k) < valid_k).astype(np.float32)
+    return x, xm, c, cm
+
+
+def test_kmeans_step_matches_ref():
+    x, xm, c, cm = _km_inputs(valid_p=37, valid_k=3)
+    got_a, got_c = kmeans_step(*map(jnp.asarray, (x, xm, c, cm)))
+    want_a, want_c = ref.kmeans_step_ref(*map(jnp.asarray, (x, xm, c, cm)))
+    np.testing.assert_array_equal(np.asarray(got_a), np.asarray(want_a))
+    np.testing.assert_allclose(np.asarray(got_c), np.asarray(want_c), atol=1e-4)
+
+
+def test_kmeans_step_never_assigns_inactive_centroid():
+    x, xm, c, cm = _km_inputs(valid_k=3)
+    a, _ = kmeans_step(*map(jnp.asarray, (x, xm, c, cm)))
+    assert np.all(np.asarray(a) < 3)
+
+
+def test_kmeans_step_empty_cluster_keeps_centroid():
+    x, xm, c, cm = _km_inputs(valid_k=4)
+    c[2] = np.array([1e6, 1e6], dtype=np.float32)  # nothing will pick slot 2
+    _, cnew = kmeans_step(*map(jnp.asarray, (x, xm, c, cm)))
+    np.testing.assert_array_equal(np.asarray(cnew)[2], c[2])
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    valid_p=st.integers(2, shapes.KM_POINTS),
+    valid_k=st.integers(1, shapes.KM_K),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kmeans_step_hypothesis(valid_p, valid_k, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.uniform(0, 60, size=(shapes.KM_POINTS, shapes.KM_DIM)).astype(
+        np.float32
+    )
+    c = rng.uniform(0, 60, size=(shapes.KM_K, shapes.KM_DIM)).astype(np.float32)
+    xm = (np.arange(shapes.KM_POINTS) < valid_p).astype(np.float32)
+    cm = (np.arange(shapes.KM_K) < valid_k).astype(np.float32)
+    got_a, got_c = kmeans_step(*map(jnp.asarray, (x, xm, c, cm)))
+    want_a, want_c = ref.kmeans_step_ref(*map(jnp.asarray, (x, xm, c, cm)))
+    np.testing.assert_array_equal(np.asarray(got_a), np.asarray(want_a))
+    np.testing.assert_allclose(np.asarray(got_c), np.asarray(want_c), atol=1e-3)

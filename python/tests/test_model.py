@@ -1,0 +1,110 @@
+"""L2 entry points: shape contracts + numpy cross-checks for the pure-jnp
+pieces (EMA, percentiles, utilization aggregation) and the fused
+spike_features pipeline."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import jax.numpy as jnp
+
+from compile import model, shapes
+from compile.kernels import ref
+
+RNG = np.random.default_rng(7)
+
+
+def test_ema_filter_matches_numpy():
+    x = RNG.uniform(0, 900, size=(3, 64)).astype(np.float32)
+    want = np.empty_like(x)
+    want[:, 0] = x[:, 0]
+    want[:, 1:] = 0.5 * (x[:, 1:] + x[:, :-1])
+    got = np.asarray(ref.ema_filter_ref(jnp.asarray(x)))
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+def test_spike_features_normalized():
+    power = RNG.uniform(100, 1400, size=(shapes.TRACE_B, shapes.TRACE_T)).astype(
+        np.float32
+    )
+    tdp = np.full((shapes.TRACE_B,), 750.0, dtype=np.float32)
+    v, total = model.spike_features(
+        jnp.asarray(power), jnp.asarray(tdp), jnp.float32(0.1)
+    )
+    v = np.asarray(v)
+    total = np.asarray(total)
+    sums = v.sum(axis=1)
+    np.testing.assert_allclose(sums[total > 0], 1.0, atol=1e-5)
+    assert np.all(v >= 0.0)
+
+
+def test_spike_features_matches_ref():
+    power = RNG.uniform(0, 1500, size=(4, shapes.TRACE_T)).astype(np.float32)
+    tdp = np.full((4,), 750.0, dtype=np.float32)
+    got_v, got_t = model.spike_features(
+        jnp.asarray(power), jnp.asarray(tdp), jnp.float32(0.15)
+    )
+    want_v, want_t = ref.spike_features_ref(
+        jnp.asarray(power), jnp.asarray(tdp), jnp.float32(0.15)
+    )
+    np.testing.assert_allclose(np.asarray(got_v), np.asarray(want_v), atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(got_t), np.asarray(want_t))
+
+
+@pytest.mark.parametrize("n_valid", [1, 2, 100, 1000])
+def test_percentiles_match_numpy(n_valid):
+    t = 1024
+    r = np.full((2, t), 1e30, dtype=np.float32)
+    data = RNG.uniform(0, 2, size=(2, n_valid)).astype(np.float32)
+    r[:, :n_valid] = data
+    counts = np.full((2,), n_valid, dtype=np.int32)
+    got = np.asarray(model.percentiles(jnp.asarray(r), jnp.asarray(counts))[0])
+    for bi in range(2):
+        for qi, q in enumerate(shapes.PCTS):
+            want = np.percentile(data[bi], q * 100.0)
+            np.testing.assert_allclose(got[bi, qi], want, rtol=2e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n_valid=st.integers(1, 512), seed=st.integers(0, 2**31 - 1))
+def test_percentiles_hypothesis(n_valid, seed):
+    rng = np.random.default_rng(seed)
+    t = 512
+    r = np.full((1, t), 1e30, dtype=np.float32)
+    data = rng.uniform(0, 3, size=(1, n_valid)).astype(np.float32)
+    r[:, :n_valid] = data
+    got = np.asarray(
+        model.percentiles(jnp.asarray(r), jnp.asarray(np.array([n_valid], np.int32)))[0]
+    )
+    for qi, q in enumerate(shapes.PCTS):
+        np.testing.assert_allclose(
+            got[0, qi], np.percentile(data[0], q * 100.0), rtol=1e-4, atol=1e-5
+        )
+
+
+def test_util_aggregate_weighted_mean():
+    k = np.zeros((2, shapes.UTIL_KERNELS, 3), dtype=np.float32)
+    # app 0: two kernels, durations 1 and 3
+    k[0, 0] = [1.0, 80.0, 10.0]
+    k[0, 1] = [3.0, 40.0, 50.0]
+    # app 1: single kernel
+    k[1, 0] = [5.0, 33.0, 44.0]
+    got = np.asarray(model.util_aggregate(jnp.asarray(k))[0])
+    np.testing.assert_allclose(got[0], [(80 + 3 * 40) / 4.0, (10 + 3 * 50) / 4.0], rtol=1e-6)
+    np.testing.assert_allclose(got[1], [33.0, 44.0], rtol=1e-6)
+
+
+def test_util_aggregate_ignores_zero_duration_padding():
+    k = np.zeros((1, shapes.UTIL_KERNELS, 3), dtype=np.float32)
+    k[0, 0] = [2.0, 60.0, 20.0]
+    k[0, 5] = [0.0, 99.0, 99.0]  # zero duration: must not contribute
+    got = np.asarray(model.util_aggregate(jnp.asarray(k))[0])
+    np.testing.assert_allclose(got[0], [60.0, 20.0], rtol=1e-6)
+
+
+def test_entry_points_shapes_lowerable():
+    import jax
+
+    for name, (fn, args) in model.entry_points().items():
+        jax.jit(fn).lower(*args)  # must trace/lower without error

@@ -1,0 +1,5 @@
+//! Baseline classifiers the paper compares against.
+
+pub mod guerreiro;
+
+pub use guerreiro::GuerreiroClassifier;

@@ -1,0 +1,107 @@
+//! Minimal benchmark harness (stand-in for criterion, which is not in
+//! the vendored dependency set).  Used by the `benches/` targets
+//! (`harness = false`): warm up, run timed iterations until a time
+//! budget or max-iteration count is hit, report mean / p50 / p95 and
+//! throughput.
+
+use std::time::{Duration, Instant};
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>8} iters   mean {:>12}   p50 {:>12}   p95 {:>12}   min {:>12}",
+            self.name,
+            self.iters,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.p95_ns),
+            fmt_ns(self.min_ns),
+        )
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} us", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Time `f` repeatedly: a few warmup runs, then timed runs until
+/// ~`budget` elapses (min 5, max `max_iters`).  The closure's return
+/// value is black-boxed so work isn't optimized away.
+pub fn bench<T, F: FnMut() -> T>(name: &str, budget: Duration, max_iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..2 {
+        black_box(f());
+    }
+    let mut samples: Vec<f64> = Vec::new();
+    let start = Instant::now();
+    while (samples.len() < 5 || start.elapsed() < budget) && samples.len() < max_iters {
+        let t0 = Instant::now();
+        black_box(f());
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = samples.len();
+    let mean = samples.iter().sum::<f64>() / n as f64;
+    BenchResult {
+        name: name.to_string(),
+        iters: n,
+        mean_ns: mean,
+        p50_ns: samples[n / 2],
+        p95_ns: samples[(n as f64 * 0.95) as usize % n.max(1)],
+        min_ns: samples[0],
+    }
+}
+
+/// Opaque value sink (std::hint::black_box wrapper).
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Group header helper for bench binaries.
+pub fn group(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let r = bench("noop", Duration::from_millis(20), 10_000, || 1 + 1);
+        assert!(r.iters >= 5);
+        assert!(r.mean_ns >= 0.0);
+        assert!(r.p50_ns <= r.p95_ns * 1.0001);
+        assert!(r.report().contains("noop"));
+    }
+
+    #[test]
+    fn fmt_ns_ranges() {
+        assert!(fmt_ns(500.0).contains("ns"));
+        assert!(fmt_ns(5_000.0).contains("us"));
+        assert!(fmt_ns(5_000_000.0).contains("ms"));
+        assert!(fmt_ns(5e9).contains(" s"));
+    }
+
+    #[test]
+    fn max_iters_respected() {
+        let r = bench("capped", Duration::from_secs(5), 7, || 0);
+        assert!(r.iters <= 7);
+    }
+}

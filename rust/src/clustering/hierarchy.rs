@@ -1,0 +1,255 @@
+//! Agglomerative hierarchical clustering (§4.1.2, §5.3.2): start with
+//! every workload as its own cluster, repeatedly merge the closest pair,
+//! record the merge tree (dendrogram), and slice at a distance threshold
+//! to obtain K groups.
+//!
+//! Linkage follows the Lance–Williams recurrences; the paper uses Ward
+//! linkage over cosine distances (scipy-style: Ward's formula applied to
+//! whatever metric is supplied).  Average and complete linkage are also
+//! provided for the ablation benches.
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Linkage {
+    Ward,
+    Average,
+    Complete,
+}
+
+/// One merge step: clusters `a` and `b` (ids) merged at `distance` into a
+/// new cluster with id `n + step` (scipy convention), covering `size`
+/// leaves.
+#[derive(Debug, Clone)]
+pub struct Merge {
+    pub a: usize,
+    pub b: usize,
+    pub distance: f64,
+    pub size: usize,
+}
+
+/// The full merge tree over `n` leaves.
+#[derive(Debug, Clone)]
+pub struct Dendrogram {
+    pub n: usize,
+    pub merges: Vec<Merge>,
+}
+
+impl Dendrogram {
+    /// Build from a precomputed symmetric distance matrix.
+    pub fn build(dist: &[Vec<f64>], linkage: Linkage) -> Dendrogram {
+        let n = dist.len();
+        assert!(n >= 1);
+        // active clusters: id -> (index set size, row of distances keyed by id)
+        let mut d: Vec<Vec<f64>> = dist.to_vec();
+        // For Lance-Williams we track a growing (n + merges) square; use a
+        // map from active-id to matrix row index.
+        let mut active: Vec<usize> = (0..n).collect(); // cluster ids
+        let mut sizes: Vec<usize> = vec![1; n];
+        let mut merges = Vec::with_capacity(n.saturating_sub(1));
+        // row index of cluster id in `d`
+        let mut row_of: Vec<usize> = (0..n).collect();
+
+        let mut next_id = n;
+        while active.len() > 1 {
+            // find closest active pair
+            let (mut bi, mut bj, mut best) = (0usize, 1usize, f64::INFINITY);
+            for (ii, &ci) in active.iter().enumerate() {
+                for &cj in active.iter().skip(ii + 1) {
+                    let v = d[row_of[ci]][row_of[cj]];
+                    if v < best {
+                        best = v;
+                        bi = ci;
+                        bj = cj;
+                    }
+                }
+            }
+            let (si, sj) = (sizes[bi], sizes[bj]);
+            let new_size = si + sj;
+            // compute distances from the merged cluster to all others
+            let mut new_row = vec![0.0; d.len() + 1];
+            for &ck in active.iter() {
+                if ck == bi || ck == bj {
+                    continue;
+                }
+                let dik = d[row_of[bi]][row_of[ck]];
+                let djk = d[row_of[bj]][row_of[ck]];
+                let dij = best;
+                let sk = sizes[ck] as f64;
+                let (si_f, sj_f) = (si as f64, sj as f64);
+                let v = match linkage {
+                    Linkage::Average => (si_f * dik + sj_f * djk) / (si_f + sj_f),
+                    Linkage::Complete => dik.max(djk),
+                    Linkage::Ward => {
+                        let t = si_f + sj_f + sk;
+                        (((si_f + sk) * dik * dik + (sj_f + sk) * djk * djk
+                            - sk * dij * dij)
+                            / t)
+                            .max(0.0)
+                            .sqrt()
+                    }
+                };
+                new_row[row_of[ck]] = v;
+            }
+            // append the merged cluster as a new row/col
+            let new_idx = d.len();
+            for (ri, row) in d.iter_mut().enumerate() {
+                row.push(new_row[ri]);
+            }
+            d.push(new_row);
+            // bookkeeping
+            merges.push(Merge {
+                a: bi,
+                b: bj,
+                distance: best,
+                size: new_size,
+            });
+            active.retain(|&c| c != bi && c != bj);
+            active.push(next_id);
+            sizes.push(new_size);
+            row_of.push(new_idx);
+            debug_assert_eq!(sizes.len(), next_id + 1);
+            next_id += 1;
+        }
+        Dendrogram { n, merges }
+    }
+
+    /// Slice at a distance threshold: merges with distance ≤ `t` are
+    /// applied; returns a cluster label per leaf (labels 0..k-1, ordered
+    /// by first leaf occurrence).
+    pub fn slice(&self, t: f64) -> Vec<usize> {
+        let mut parent: Vec<usize> = (0..self.n + self.merges.len()).collect();
+        fn find(p: &mut Vec<usize>, mut x: usize) -> usize {
+            while p[x] != x {
+                p[x] = p[p[x]];
+                x = p[x];
+            }
+            x
+        }
+        for (step, m) in self.merges.iter().enumerate() {
+            if m.distance <= t {
+                let id = self.n + step;
+                let ra = find(&mut parent, m.a);
+                let rb = find(&mut parent, m.b);
+                parent[ra] = id;
+                parent[rb] = id;
+            }
+        }
+        let mut label_of_root = std::collections::HashMap::new();
+        let mut labels = Vec::with_capacity(self.n);
+        for leaf in 0..self.n {
+            let r = find(&mut parent, leaf);
+            let next = label_of_root.len();
+            let l = *label_of_root.entry(r).or_insert(next);
+            labels.push(l);
+        }
+        labels
+    }
+
+    /// Slice to exactly `k` clusters (apply merges from the bottom until
+    /// k clusters remain).
+    pub fn cut_k(&self, k: usize) -> Vec<usize> {
+        let k = k.clamp(1, self.n);
+        if k == self.n {
+            return (0..self.n).collect();
+        }
+        let keep = self.n - k; // number of merges to apply
+        let mut sorted: Vec<&Merge> = self.merges.iter().collect();
+        sorted.sort_by(|a, b| a.distance.partial_cmp(&b.distance).unwrap());
+        let t = sorted[keep - 1].distance;
+        // merges are monotone for ward/average in practice; slice at t
+        self.slice(t)
+    }
+
+    /// Number of clusters when sliced at `t`.
+    pub fn k_at(&self, t: f64) -> usize {
+        let labels = self.slice(t);
+        labels.iter().cloned().collect::<std::collections::HashSet<_>>().len()
+    }
+
+    /// The nearest other leaf to `leaf` by raw distance — the paper's
+    /// predictions use nearest neighbors, not cluster labels (§5.3.2).
+    pub fn merge_heights(&self) -> Vec<f64> {
+        self.merges.iter().map(|m| m.distance).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clustering::metrics::{pairwise, Metric};
+
+    fn toy() -> Vec<Vec<f64>> {
+        // two tight groups + one outlier
+        vec![
+            vec![1.0, 0.0, 0.0],
+            vec![0.98, 0.02, 0.0],
+            vec![0.0, 1.0, 0.0],
+            vec![0.0, 0.97, 0.03],
+            vec![0.3, 0.3, 0.4],
+        ]
+    }
+
+    #[test]
+    fn builds_n_minus_one_merges() {
+        let d = pairwise(Metric::Cosine, &toy());
+        let dg = Dendrogram::build(&d, Linkage::Ward);
+        assert_eq!(dg.merges.len(), 4);
+        assert_eq!(dg.n, 5);
+    }
+
+    #[test]
+    fn tight_pairs_merge_first() {
+        let d = pairwise(Metric::Cosine, &toy());
+        let dg = Dendrogram::build(&d, Linkage::Ward);
+        let first = &dg.merges[0];
+        let pair = (first.a.min(first.b), first.a.max(first.b));
+        assert!(pair == (0, 1) || pair == (2, 3), "{pair:?}");
+    }
+
+    #[test]
+    fn slice_recovers_groups() {
+        let d = pairwise(Metric::Cosine, &toy());
+        let dg = Dendrogram::build(&d, Linkage::Ward);
+        let labels = dg.cut_k(3);
+        assert_eq!(labels[0], labels[1]);
+        assert_eq!(labels[2], labels[3]);
+        assert_ne!(labels[0], labels[2]);
+        assert_ne!(labels[4], labels[0]);
+        assert_ne!(labels[4], labels[2]);
+    }
+
+    #[test]
+    fn slice_zero_threshold_all_singletons() {
+        let d = pairwise(Metric::Cosine, &toy());
+        let dg = Dendrogram::build(&d, Linkage::Average);
+        let labels = dg.slice(-1.0);
+        let k = labels.iter().collect::<std::collections::HashSet<_>>().len();
+        assert_eq!(k, 5);
+    }
+
+    #[test]
+    fn slice_huge_threshold_single_cluster() {
+        let d = pairwise(Metric::Cosine, &toy());
+        for link in [Linkage::Ward, Linkage::Average, Linkage::Complete] {
+            let dg = Dendrogram::build(&d, link);
+            let labels = dg.slice(1e9);
+            assert!(labels.iter().all(|&l| l == 0), "{link:?}");
+        }
+    }
+
+    #[test]
+    fn merge_heights_monotone_for_average_linkage() {
+        let d = pairwise(Metric::Euclidean, &toy());
+        let dg = Dendrogram::build(&d, Linkage::Average);
+        let h = dg.merge_heights();
+        for w in h.windows(2) {
+            assert!(w[1] >= w[0] - 1e-9, "{h:?}");
+        }
+    }
+
+    #[test]
+    fn single_leaf_degenerate() {
+        let dg = Dendrogram::build(&[vec![0.0]], Linkage::Ward);
+        assert_eq!(dg.merges.len(), 0);
+        assert_eq!(dg.slice(1.0), vec![0]);
+    }
+}

@@ -1,0 +1,201 @@
+//! K-Means (Lloyd's algorithm) with k-means++ seeding, over the 2-D
+//! utilization plane (§4.2, §5.3.5).
+//!
+//! The per-iteration step has identical semantics to the PJRT
+//! `kmeans_step` artifact (assign to nearest active centroid, empty
+//! clusters keep their coordinates), so the driver can run either the
+//! native step or the artifact step and reach the same fixed point.
+
+use crate::sim::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct KMeansResult {
+    pub centroids: Vec<Vec<f64>>,
+    pub assignments: Vec<usize>,
+    pub iterations: usize,
+    pub inertia: f64,
+}
+
+/// One Lloyd iteration — native mirror of `kernels/kmeans_step.py`.
+/// Returns (assignments, new centroids).
+pub fn lloyd_step(points: &[Vec<f64>], centroids: &[Vec<f64>]) -> (Vec<usize>, Vec<Vec<f64>>) {
+    let k = centroids.len();
+    let dim = centroids[0].len();
+    let mut assign = Vec::with_capacity(points.len());
+    for p in points {
+        let mut best = 0;
+        let mut bd = f64::INFINITY;
+        for (ci, c) in centroids.iter().enumerate() {
+            let d: f64 = p.iter().zip(c).map(|(a, b)| (a - b) * (a - b)).sum();
+            if d < bd {
+                bd = d;
+                best = ci;
+            }
+        }
+        assign.push(best);
+    }
+    let mut sums = vec![vec![0.0; dim]; k];
+    let mut counts = vec![0usize; k];
+    for (p, &a) in points.iter().zip(&assign) {
+        counts[a] += 1;
+        for (s, x) in sums[a].iter_mut().zip(p) {
+            *s += x;
+        }
+    }
+    let new_c: Vec<Vec<f64>> = (0..k)
+        .map(|ci| {
+            if counts[ci] == 0 {
+                centroids[ci].clone()
+            } else {
+                sums[ci].iter().map(|s| s / counts[ci] as f64).collect()
+            }
+        })
+        .collect();
+    (assign, new_c)
+}
+
+/// k-means++ seeding (deterministic given the rng seed).
+pub fn seed_pp(points: &[Vec<f64>], k: usize, rng: &mut Rng) -> Vec<Vec<f64>> {
+    assert!(!points.is_empty() && k >= 1);
+    let mut centroids: Vec<Vec<f64>> = Vec::with_capacity(k);
+    let first = (rng.uniform() * points.len() as f64) as usize % points.len();
+    centroids.push(points[first].clone());
+    while centroids.len() < k {
+        let d2: Vec<f64> = points
+            .iter()
+            .map(|p| {
+                centroids
+                    .iter()
+                    .map(|c| p.iter().zip(c).map(|(a, b)| (a - b) * (a - b)).sum::<f64>())
+                    .fold(f64::INFINITY, f64::min)
+            })
+            .collect();
+        let total: f64 = d2.iter().sum();
+        if total <= 0.0 {
+            // all points coincide with centroids: duplicate one
+            centroids.push(points[0].clone());
+            continue;
+        }
+        let mut target = rng.uniform() * total;
+        let mut chosen = points.len() - 1;
+        for (i, &w) in d2.iter().enumerate() {
+            target -= w;
+            if target <= 0.0 {
+                chosen = i;
+                break;
+            }
+        }
+        centroids.push(points[chosen].clone());
+    }
+    centroids
+}
+
+/// Full K-Means with `restarts` k-means++ restarts, keeping the best
+/// inertia.  Deterministic for a given seed.
+pub fn kmeans(points: &[Vec<f64>], k: usize, seed: u64, restarts: usize) -> KMeansResult {
+    assert!(k >= 1 && k <= points.len(), "k={k} n={}", points.len());
+    let mut rng = Rng::new(seed);
+    let mut best: Option<KMeansResult> = None;
+    for _ in 0..restarts.max(1) {
+        let mut centroids = seed_pp(points, k, &mut rng);
+        let mut assign = vec![usize::MAX; points.len()];
+        let mut iterations = 0;
+        for _ in 0..200 {
+            let (a, c) = lloyd_step(points, &centroids);
+            iterations += 1;
+            let stable = a == assign;
+            assign = a;
+            centroids = c;
+            if stable {
+                break;
+            }
+        }
+        let inertia: f64 = points
+            .iter()
+            .zip(&assign)
+            .map(|(p, &a)| {
+                p.iter()
+                    .zip(&centroids[a])
+                    .map(|(x, c)| (x - c) * (x - c))
+                    .sum::<f64>()
+            })
+            .sum();
+        if best.as_ref().map(|b| inertia < b.inertia).unwrap_or(true) {
+            best = Some(KMeansResult {
+                centroids,
+                assignments: assign,
+                iterations,
+                inertia,
+            });
+        }
+    }
+    best.unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn blobs() -> Vec<Vec<f64>> {
+        let mut pts = Vec::new();
+        for i in 0..10 {
+            pts.push(vec![10.0 + (i % 3) as f64 * 0.3, 10.0 + (i % 4) as f64 * 0.3]);
+            pts.push(vec![80.0 + (i % 3) as f64 * 0.3, 10.0 + (i % 4) as f64 * 0.3]);
+            pts.push(vec![45.0 + (i % 3) as f64 * 0.3, 50.0 + (i % 4) as f64 * 0.3]);
+        }
+        pts
+    }
+
+    #[test]
+    fn recovers_three_blobs() {
+        let pts = blobs();
+        let r = kmeans(&pts, 3, 42, 8);
+        // each blob (stride-3 points) must share a label
+        for group in 0..3 {
+            let first = r.assignments[group];
+            for i in (group..pts.len()).step_by(3) {
+                assert_eq!(r.assignments[i], first, "point {i}");
+            }
+        }
+        // labels distinct between blobs
+        assert_ne!(r.assignments[0], r.assignments[1]);
+        assert_ne!(r.assignments[1], r.assignments[2]);
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let pts = blobs();
+        let a = kmeans(&pts, 3, 7, 4);
+        let b = kmeans(&pts, 3, 7, 4);
+        assert_eq!(a.assignments, b.assignments);
+        assert_eq!(a.inertia, b.inertia);
+    }
+
+    #[test]
+    fn k_equals_n_zero_inertia() {
+        let pts = vec![vec![0.0, 0.0], vec![1.0, 1.0], vec![2.0, 2.0]];
+        let r = kmeans(&pts, 3, 1, 4);
+        assert!(r.inertia < 1e-18);
+    }
+
+    #[test]
+    fn lloyd_step_empty_cluster_keeps_centroid() {
+        let pts = vec![vec![0.0, 0.0], vec![1.0, 0.0]];
+        let cents = vec![vec![0.5, 0.0], vec![100.0, 100.0]];
+        let (a, c) = lloyd_step(&pts, &cents);
+        assert_eq!(a, vec![0, 0]);
+        assert_eq!(c[1], vec![100.0, 100.0]);
+        assert_eq!(c[0], vec![0.5, 0.0]);
+    }
+
+    #[test]
+    fn inertia_nonincreasing_with_k() {
+        let pts = blobs();
+        let mut prev = f64::INFINITY;
+        for k in 1..=6 {
+            let r = kmeans(&pts, k, 3, 6);
+            assert!(r.inertia <= prev + 1e-9, "k={k}");
+            prev = r.inertia;
+        }
+    }
+}

@@ -1,0 +1,168 @@
+//! Distance metrics.
+//!
+//! Cosine distance is the paper's choice for spike vectors (§4.1.2):
+//! euclidean distances are biased toward vector magnitude, cosine toward
+//! direction; spike vectors are L1-normalized so direction is the
+//! signal.  The zero-vector convention (similarity 0 → distance 1)
+//! matches `kernels/pairwise_cosine.py` and its ref oracle.
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Metric {
+    Cosine,
+    Euclidean,
+}
+
+/// Diagonal-covariance Mahalanobis distance — the §4.1.2 alternative
+/// ("could potentially capture additional structure in the power spike
+/// vectors").  `inv_var` holds 1/σ² per dimension, estimated from the
+/// reference population by [`diag_inv_variance`].
+pub fn mahalanobis_diag(a: &[f64], b: &[f64], inv_var: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    assert_eq!(a.len(), inv_var.len());
+    a.iter()
+        .zip(b)
+        .zip(inv_var)
+        .map(|((x, y), iv)| (x - y) * (x - y) * iv)
+        .sum::<f64>()
+        .sqrt()
+}
+
+/// Per-dimension inverse variance over a population (ε-guarded so
+/// constant dimensions do not blow up the distance).
+pub fn diag_inv_variance(rows: &[Vec<f64>]) -> Vec<f64> {
+    if rows.is_empty() {
+        return Vec::new();
+    }
+    let d = rows[0].len();
+    let n = rows.len() as f64;
+    let mut mean = vec![0.0; d];
+    for r in rows {
+        for (m, x) in mean.iter_mut().zip(r) {
+            *m += x / n;
+        }
+    }
+    let mut var = vec![0.0; d];
+    for r in rows {
+        for j in 0..d {
+            var[j] += (r[j] - mean[j]).powi(2) / n;
+        }
+    }
+    var.into_iter().map(|v| 1.0 / v.max(1e-9)).collect()
+}
+
+/// Cosine distance `1 − a·b / (|a||b|)` with epsilon-guarded norms.
+pub fn cosine_distance(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let dot: f64 = a.iter().zip(b).map(|(x, y)| x * y).sum();
+    let na: f64 = a.iter().map(|x| x * x).sum::<f64>().sqrt().max(1e-12);
+    let nb: f64 = b.iter().map(|x| x * x).sum::<f64>().sqrt().max(1e-12);
+    1.0 - dot / (na * nb)
+}
+
+pub fn euclidean(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y) * (x - y))
+        .sum::<f64>()
+        .sqrt()
+}
+
+pub fn distance(metric: Metric, a: &[f64], b: &[f64]) -> f64 {
+    match metric {
+        Metric::Cosine => cosine_distance(a, b),
+        Metric::Euclidean => euclidean(a, b),
+    }
+}
+
+/// Full pairwise distance matrix (row-major, n×n).
+pub fn pairwise(metric: Metric, rows: &[Vec<f64>]) -> Vec<Vec<f64>> {
+    let n = rows.len();
+    let mut d = vec![vec![0.0; n]; n];
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let v = distance(metric, &rows[i], &rows[j]);
+            d[i][j] = v;
+            d[j][i] = v;
+        }
+    }
+    d
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cosine_identical_is_zero() {
+        let a = vec![0.2, 0.3, 0.5];
+        assert!(cosine_distance(&a, &a).abs() < 1e-12);
+        // scale invariance
+        let b: Vec<f64> = a.iter().map(|x| x * 7.0).collect();
+        assert!(cosine_distance(&a, &b).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cosine_orthogonal_is_one() {
+        let a = vec![1.0, 0.0];
+        let b = vec![0.0, 1.0];
+        assert!((cosine_distance(&a, &b) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cosine_zero_vector_is_one() {
+        let a = vec![0.0, 0.0];
+        let b = vec![1.0, 2.0];
+        assert!((cosine_distance(&a, &b) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cosine_bounded() {
+        // non-negative vectors => distance in [0, 1]
+        let a = vec![0.9, 0.1, 0.0];
+        let b = vec![0.0, 0.1, 0.9];
+        let d = cosine_distance(&a, &b);
+        assert!((0.0..=1.0).contains(&d));
+    }
+
+    #[test]
+    fn euclidean_pythagoras() {
+        assert!((euclidean(&[0.0, 0.0], &[3.0, 4.0]) - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mahalanobis_reduces_to_scaled_euclidean() {
+        let iv = vec![1.0, 4.0];
+        // distance with iv=1 equals euclidean
+        let a = vec![1.0, 2.0];
+        let b = vec![4.0, 6.0];
+        assert!((mahalanobis_diag(&a, &b, &[1.0, 1.0]) - 5.0).abs() < 1e-12);
+        // higher inverse variance on dim 1 weights it harder
+        let d = mahalanobis_diag(&a, &b, &iv);
+        assert!((d - (9.0f64 + 16.0 * 4.0).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn diag_inv_variance_guards_constant_dims() {
+        let rows = vec![vec![1.0, 5.0], vec![3.0, 5.0], vec![5.0, 5.0]];
+        let iv = diag_inv_variance(&rows);
+        assert!(iv[0] > 0.0 && iv[0].is_finite());
+        assert!(iv[1] >= 1e8, "constant dim must hit the epsilon guard");
+    }
+
+    #[test]
+    fn pairwise_symmetric_zero_diag() {
+        let rows = vec![
+            vec![1.0, 0.0, 0.0],
+            vec![0.5, 0.5, 0.0],
+            vec![0.0, 0.0, 1.0],
+        ];
+        let d = pairwise(Metric::Cosine, &rows);
+        for i in 0..3 {
+            assert_eq!(d[i][i], 0.0);
+            for j in 0..3 {
+                assert_eq!(d[i][j], d[j][i]);
+            }
+        }
+    }
+}

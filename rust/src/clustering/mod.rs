@@ -1,0 +1,18 @@
+//! Clustering toolkit: distance metrics, agglomerative hierarchical
+//! clustering with dendrogram slicing (§4.1.2), K-Means with k-means++
+//! seeding (§4.2), and silhouette-based K selection (§5.3.5).
+//!
+//! The native implementations here are the reference semantics; on the
+//! hot path the pairwise-distance matrix and the Lloyd step can instead
+//! be executed from the AOT PJRT artifacts (see `runtime::artifacts`),
+//! which implement identical arithmetic.
+
+pub mod hierarchy;
+pub mod kmeans;
+pub mod metrics;
+pub mod silhouette;
+
+pub use hierarchy::{Dendrogram, Linkage, Merge};
+pub use kmeans::{kmeans, KMeansResult};
+pub use metrics::{cosine_distance, euclidean, pairwise, Metric};
+pub use silhouette::{silhouette_score, sweep_k};

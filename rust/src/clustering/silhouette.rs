@@ -1,0 +1,129 @@
+//! Silhouette scores for K selection (§4.2: sweep K_util from 3 to 17,
+//! pick the max — the paper finds K=3 with score ≈0.48).
+
+use crate::clustering::kmeans::kmeans;
+
+/// Mean silhouette coefficient over all points (euclidean).
+/// Returns 0.0 for degenerate clusterings (k < 2 effective clusters).
+pub fn silhouette_score(points: &[Vec<f64>], labels: &[usize]) -> f64 {
+    let n = points.len();
+    assert_eq!(labels.len(), n);
+    let k = labels.iter().max().map(|m| m + 1).unwrap_or(0);
+    let mut members: Vec<Vec<usize>> = vec![Vec::new(); k];
+    for (i, &l) in labels.iter().enumerate() {
+        members[l].push(i);
+    }
+    let effective = members.iter().filter(|m| !m.is_empty()).count();
+    if effective < 2 {
+        return 0.0;
+    }
+    let dist = |i: usize, j: usize| -> f64 {
+        points[i]
+            .iter()
+            .zip(&points[j])
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f64>()
+            .sqrt()
+    };
+    let mut total = 0.0;
+    let mut counted = 0usize;
+    for i in 0..n {
+        let own = &members[labels[i]];
+        if own.len() <= 1 {
+            // silhouette of a singleton is 0 by convention
+            counted += 1;
+            continue;
+        }
+        let a = own
+            .iter()
+            .filter(|&&j| j != i)
+            .map(|&j| dist(i, j))
+            .sum::<f64>()
+            / (own.len() - 1) as f64;
+        let b = members
+            .iter()
+            .enumerate()
+            .filter(|(l, m)| *l != labels[i] && !m.is_empty())
+            .map(|(_, m)| m.iter().map(|&j| dist(i, j)).sum::<f64>() / m.len() as f64)
+            .fold(f64::INFINITY, f64::min);
+        total += (b - a) / a.max(b);
+        counted += 1;
+    }
+    total / counted as f64
+}
+
+/// Sweep K over `k_min..=k_max` with K-Means, returning (k, score) pairs
+/// and the best K — the §4.2 selection procedure.
+pub fn sweep_k(
+    points: &[Vec<f64>],
+    k_min: usize,
+    k_max: usize,
+    seed: u64,
+) -> (Vec<(usize, f64)>, usize) {
+    let k_max = k_max.min(points.len().saturating_sub(1)).max(k_min);
+    let mut scores = Vec::new();
+    let mut best = (k_min, f64::NEG_INFINITY);
+    for k in k_min..=k_max {
+        let r = kmeans(points, k, seed, 8);
+        let s = silhouette_score(points, &r.assignments);
+        scores.push((k, s));
+        if s > best.1 {
+            best = (k, s);
+        }
+    }
+    (scores, best.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn blobs() -> Vec<Vec<f64>> {
+        let mut pts = Vec::new();
+        for i in 0..8 {
+            let j = (i % 4) as f64 * 0.5;
+            pts.push(vec![5.0 + j, 5.0]);
+            pts.push(vec![60.0 + j, 8.0]);
+            pts.push(vec![30.0 + j, 45.0]);
+        }
+        pts
+    }
+
+    #[test]
+    fn perfect_clustering_scores_high() {
+        let pts = blobs();
+        let labels: Vec<usize> = (0..pts.len()).map(|i| i % 3).collect();
+        let s = silhouette_score(&pts, &labels);
+        assert!(s > 0.8, "s={s}");
+    }
+
+    #[test]
+    fn bad_clustering_scores_lower() {
+        let pts = blobs();
+        let good: Vec<usize> = (0..pts.len()).map(|i| i % 3).collect();
+        // rotate one blob's labels: mix blob 0 and blob 1
+        let bad: Vec<usize> = (0..pts.len()).map(|i| if i % 3 == 0 { 1 } else { i % 3 }).collect();
+        assert!(silhouette_score(&pts, &bad) < silhouette_score(&pts, &good));
+    }
+
+    #[test]
+    fn sweep_finds_three_blobs() {
+        let pts = blobs();
+        let (scores, best) = sweep_k(&pts, 2, 8, 11);
+        assert_eq!(best, 3, "{scores:?}");
+    }
+
+    #[test]
+    fn singleton_cluster_convention() {
+        let pts = vec![vec![0.0, 0.0], vec![0.1, 0.0], vec![50.0, 0.0]];
+        let labels = vec![0, 0, 1];
+        let s = silhouette_score(&pts, &labels);
+        assert!(s > 0.0 && s <= 1.0);
+    }
+
+    #[test]
+    fn one_cluster_returns_zero() {
+        let pts = vec![vec![0.0, 0.0], vec![1.0, 1.0]];
+        assert_eq!(silhouette_score(&pts, &[0, 0]), 0.0);
+    }
+}

@@ -1,0 +1,448 @@
+//! Typed configuration for the whole stack: GPU device specs, simulation
+//! parameters, Minos classifier parameters, and cluster topology.
+//!
+//! Everything is plain serde-JSON so deployments can ship config files;
+//! every struct also has calibrated defaults (`GpuSpec::mi300x()`,
+//! `MinosParams::default()`, …) matching the paper's evaluation setup
+//! (§5: MI300X nodes for power + frequency capping, A100 for utilization).
+
+
+/// Static description of one GPU device model.
+///
+/// The power-model fields parameterize `sim::power::PowerModel`:
+/// `P(t) = idle_w + u_sm·(f/f_max)·(V(f)/v_max)² · p_sm_max
+///        + u_dram · p_mem_max + spike(t)`, clamped at
+/// `clamp_x · tdp_w` (the OCP excursion ceiling, §2).
+#[derive(Debug, Clone, PartialEq)]
+pub struct GpuSpec {
+    pub name: String,
+    /// Thermal design power (W).
+    pub tdp_w: f64,
+    /// Idle floor (W); the paper reports ≈170 W for MI300X (§4.1).
+    pub idle_w: f64,
+    /// Max dynamic SM/CU power at f_max, V_max, u_sm = 100% (W).
+    pub p_sm_max: f64,
+    /// Max dynamic memory-subsystem power at u_dram = 100% (W).
+    pub p_mem_max: f64,
+    /// Frequency range (MHz); f_max is the boost clock (2100 on MI300X).
+    pub f_min_mhz: f64,
+    pub f_max_mhz: f64,
+    /// DVFS step the PM controller moves in (MHz).
+    pub f_step_mhz: f64,
+    /// Affine V-f curve endpoints (volts at f_min / f_max).
+    pub v_min: f64,
+    pub v_max: f64,
+    /// OCP instantaneous-power ceiling in units of TDP (2.0 per §2).
+    pub clamp_x: f64,
+    /// Sustained-excursion limit (×TDP) the ms-scale PM firmware enforces.
+    /// Real GPUs tolerate windowed power above TDP for ms-scale windows
+    /// (that is exactly the paper's observation — Fig. 5(a) shows 90% of
+    /// High-spike samples above TDP); only excursions beyond this level
+    /// trigger DVFS throttling.
+    pub governor_x: f64,
+    /// Transition-overshoot time constant (ms) and gain (W of overshoot
+    /// per unit intensity jump at f_max); see `sim::power`.
+    pub spike_tau_ms: f64,
+    pub spike_gain_w: f64,
+}
+
+impl GpuSpec {
+    /// AMD MI300X-like device (HPC Fund cluster, §5.1): 750 W TDP,
+    /// ≈170 W idle, 2100 MHz boost.
+    pub fn mi300x() -> Self {
+        GpuSpec {
+            name: "MI300X".into(),
+            tdp_w: 750.0,
+            idle_w: 170.0,
+            // Calibrated so a fully-driven SM array at boost draws well
+            // above TDP (the firmware governor then settles it near
+            // governor_x×TDP — the sustained 1.25–1.45×TDP regime the
+            // paper observes for High-spike workloads, Fig. 5a).
+            p_sm_max: 1100.0,
+            p_mem_max: 260.0,
+            f_min_mhz: 500.0,
+            f_max_mhz: 2100.0,
+            f_step_mhz: 50.0,
+            v_min: 0.85,
+            v_max: 1.10,
+            clamp_x: 2.0,
+            governor_x: 1.45,
+            spike_tau_ms: 0.9,
+            spike_gain_w: 500.0,
+        }
+    }
+
+    /// NVIDIA A100-PCIe-40GB-like device (Lonestar6, §5.1): 250 W TDP.
+    pub fn a100_pcie() -> Self {
+        GpuSpec {
+            name: "A100-PCIe-40GB".into(),
+            tdp_w: 250.0,
+            idle_w: 52.0,
+            p_sm_max: 360.0,
+            p_mem_max: 90.0,
+            f_min_mhz: 210.0,
+            f_max_mhz: 1410.0,
+            f_step_mhz: 15.0,
+            v_min: 0.85,
+            v_max: 1.05,
+            clamp_x: 2.0,
+            governor_x: 1.35,
+            spike_tau_ms: 0.7,
+            spike_gain_w: 310.0,
+        }
+    }
+
+    /// Voltage at frequency `f_mhz` (affine DVFS V-f curve).
+    pub fn voltage(&self, f_mhz: f64) -> f64 {
+        let f = f_mhz.clamp(self.f_min_mhz, self.f_max_mhz);
+        let a = (f - self.f_min_mhz) / (self.f_max_mhz - self.f_min_mhz);
+        self.v_min + a * (self.v_max - self.v_min)
+    }
+
+    /// The frequency sweep used throughout the evaluation (§5.3.3):
+    /// 1300 → 2100 MHz in 100 MHz steps on MI300X, scaled for other parts.
+    pub fn sweep_frequencies(&self) -> Vec<f64> {
+        let lo = 1300.0 / 2100.0 * self.f_max_mhz;
+        let n = 9;
+        (0..n)
+            .map(|i| lo + (self.f_max_mhz - lo) * i as f64 / (n - 1) as f64)
+            .map(|f| (f / self.f_step_mhz).round() * self.f_step_mhz)
+            .collect()
+    }
+}
+
+/// Simulation / telemetry parameters (§5.3.1).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SimParams {
+    /// Integration timestep (ms).
+    pub dt_ms: f64,
+    /// Telemetry sampling period (ms); RSMI gives ≈1–2 ms.
+    pub sample_dt_ms: f64,
+    /// PM-controller (DVFS firmware) loop period (ms).
+    pub pm_dt_ms: f64,
+    /// Std-dev of the energy-counter measurement noise (W) — the paper
+    /// notes the energy-derived power channel is noisy (§5.3.1, [87]).
+    pub energy_noise_w: f64,
+    /// Window of the heavily-averaged `power_ave` channel (ms).
+    pub power_ave_window_ms: f64,
+    /// RNG seed for the whole run.
+    pub seed: u64,
+}
+
+impl Default for SimParams {
+    fn default() -> Self {
+        SimParams {
+            dt_ms: 0.1,
+            sample_dt_ms: 1.5,
+            pm_dt_ms: 1.0,
+            energy_noise_w: 18.0,
+            power_ave_window_ms: 12.0,
+            seed: 0x4D696E6F73, // "Minos"
+        }
+    }
+}
+
+/// Minos classifier parameters (§4, §5.3.2, Algorithm 1).
+#[derive(Debug, Clone, PartialEq)]
+pub struct MinosParams {
+    /// Spike-detection threshold in units of TDP (0.5 per §4.1.1).
+    pub spike_lo: f64,
+    /// Candidate bin sizes for ChooseBinSize (§7.4 evaluates these).
+    pub bin_sizes: Vec<f64>,
+    /// Default bin size c (0.1·TDP per §5.3.2).
+    pub default_bin_size: f64,
+    /// PowerCentric p-quantile bound: spikes at this quantile must stay
+    /// below `power_bound_x`×TDP (p90 < 1.3×TDP in §7.1.1).
+    pub power_quantile: f64,
+    pub power_bound_x: f64,
+    /// PerfCentric max tolerated slowdown (5% per §7.1.2 / POLCA).
+    pub perf_bound_frac: f64,
+    /// Minimum allowable PerfCentric cap (MHz): §7.2.2 notes operators
+    /// impose a frequency floor since extremely low predicted caps would
+    /// severely degrade performance; this removes low-frequency outliers.
+    pub perf_min_cap_mhz: f64,
+    /// Dendrogram slice distance for the explanatory 3-class grouping
+    /// (0.72 per §6.1; predictions use nearest-neighbor, not classes).
+    pub dendrogram_slice: f64,
+    /// Silhouette sweep range for K_util (3..=17 per §4.2).
+    pub kutil_min: usize,
+    pub kutil_max: usize,
+}
+
+impl Default for MinosParams {
+    fn default() -> Self {
+        MinosParams {
+            spike_lo: 0.5,
+            bin_sizes: vec![0.05, 0.1, 0.15, 0.2, 0.25, 0.3],
+            default_bin_size: 0.1,
+            power_quantile: 0.90,
+            power_bound_x: 1.3,
+            perf_bound_frac: 0.05,
+            perf_min_cap_mhz: 1500.0,
+            dendrogram_slice: 0.72,
+            kutil_min: 3,
+            kutil_max: 17,
+        }
+    }
+}
+
+/// A node in the simulated cluster (§5.1: 8×MI300X per HPC Fund node,
+/// 3×A100 per Lonestar6 node).
+#[derive(Debug, Clone)]
+pub struct NodeSpec {
+    pub gpu: GpuSpec,
+    pub gpus_per_node: usize,
+    /// Node-level power budget for the coordinator's governor (W); by
+    /// convention `gpus_per_node × tdp_w` unless over-subscribed.
+    pub power_budget_w: f64,
+}
+
+impl NodeSpec {
+    pub fn hpc_fund() -> Self {
+        let gpu = GpuSpec::mi300x();
+        let budget = gpu.tdp_w * 8.0;
+        NodeSpec {
+            gpu,
+            gpus_per_node: 8,
+            power_budget_w: budget,
+        }
+    }
+
+    pub fn lonestar6() -> Self {
+        let gpu = GpuSpec::a100_pcie();
+        let budget = gpu.tdp_w * 3.0;
+        NodeSpec {
+            gpu,
+            gpus_per_node: 3,
+            power_budget_w: budget,
+        }
+    }
+}
+
+/// Top-level config bundle; `minos --config file.json` deserializes this.
+#[derive(Debug, Clone)]
+pub struct Config {
+    pub node: NodeSpec,
+    pub sim: SimParams,
+    pub minos: MinosParams,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            node: NodeSpec::hpc_fund(),
+            sim: SimParams::default(),
+            minos: MinosParams::default(),
+        }
+    }
+}
+
+impl Config {
+    pub fn from_file(path: &str) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_json_str(&text)
+    }
+
+    pub fn to_file(&self, path: &str) -> anyhow::Result<()> {
+        std::fs::write(path, self.to_json().dump())?;
+        Ok(())
+    }
+
+    pub fn from_json_str(text: &str) -> anyhow::Result<Self> {
+        Self::from_json(&Json::parse(text)?)
+    }
+}
+
+// ---- JSON codec (in-tree; the vendored build has no serde) ----
+
+use crate::util::json::{num, nums, obj, s, Json};
+
+impl GpuSpec {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("name", s(&self.name)),
+            ("tdp_w", num(self.tdp_w)),
+            ("idle_w", num(self.idle_w)),
+            ("p_sm_max", num(self.p_sm_max)),
+            ("p_mem_max", num(self.p_mem_max)),
+            ("f_min_mhz", num(self.f_min_mhz)),
+            ("f_max_mhz", num(self.f_max_mhz)),
+            ("f_step_mhz", num(self.f_step_mhz)),
+            ("v_min", num(self.v_min)),
+            ("v_max", num(self.v_max)),
+            ("clamp_x", num(self.clamp_x)),
+            ("governor_x", num(self.governor_x)),
+            ("spike_tau_ms", num(self.spike_tau_ms)),
+            ("spike_gain_w", num(self.spike_gain_w)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<Self> {
+        Ok(GpuSpec {
+            name: j.s("name")?,
+            tdp_w: j.f("tdp_w")?,
+            idle_w: j.f("idle_w")?,
+            p_sm_max: j.f("p_sm_max")?,
+            p_mem_max: j.f("p_mem_max")?,
+            f_min_mhz: j.f("f_min_mhz")?,
+            f_max_mhz: j.f("f_max_mhz")?,
+            f_step_mhz: j.f("f_step_mhz")?,
+            v_min: j.f("v_min")?,
+            v_max: j.f("v_max")?,
+            clamp_x: j.f("clamp_x")?,
+            governor_x: j.f("governor_x")?,
+            spike_tau_ms: j.f("spike_tau_ms")?,
+            spike_gain_w: j.f("spike_gain_w")?,
+        })
+    }
+}
+
+impl SimParams {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("dt_ms", num(self.dt_ms)),
+            ("sample_dt_ms", num(self.sample_dt_ms)),
+            ("pm_dt_ms", num(self.pm_dt_ms)),
+            ("energy_noise_w", num(self.energy_noise_w)),
+            ("power_ave_window_ms", num(self.power_ave_window_ms)),
+            ("seed", num(self.seed as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<Self> {
+        Ok(SimParams {
+            dt_ms: j.f("dt_ms")?,
+            sample_dt_ms: j.f("sample_dt_ms")?,
+            pm_dt_ms: j.f("pm_dt_ms")?,
+            energy_noise_w: j.f("energy_noise_w")?,
+            power_ave_window_ms: j.f("power_ave_window_ms")?,
+            seed: j.f("seed")? as u64,
+        })
+    }
+}
+
+impl MinosParams {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("spike_lo", num(self.spike_lo)),
+            ("bin_sizes", nums(&self.bin_sizes)),
+            ("default_bin_size", num(self.default_bin_size)),
+            ("power_quantile", num(self.power_quantile)),
+            ("power_bound_x", num(self.power_bound_x)),
+            ("perf_bound_frac", num(self.perf_bound_frac)),
+            ("perf_min_cap_mhz", num(self.perf_min_cap_mhz)),
+            ("dendrogram_slice", num(self.dendrogram_slice)),
+            ("kutil_min", num(self.kutil_min as f64)),
+            ("kutil_max", num(self.kutil_max as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<Self> {
+        Ok(MinosParams {
+            spike_lo: j.f("spike_lo")?,
+            bin_sizes: j.f64s("bin_sizes")?,
+            default_bin_size: j.f("default_bin_size")?,
+            power_quantile: j.f("power_quantile")?,
+            power_bound_x: j.f("power_bound_x")?,
+            perf_bound_frac: j.f("perf_bound_frac")?,
+            perf_min_cap_mhz: j.f("perf_min_cap_mhz")?,
+            dendrogram_slice: j.f("dendrogram_slice")?,
+            kutil_min: j.u("kutil_min")?,
+            kutil_max: j.u("kutil_max")?,
+        })
+    }
+}
+
+impl NodeSpec {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("gpu", self.gpu.to_json()),
+            ("gpus_per_node", num(self.gpus_per_node as f64)),
+            ("power_budget_w", num(self.power_budget_w)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<Self> {
+        Ok(NodeSpec {
+            gpu: GpuSpec::from_json(j.get("gpu").ok_or_else(|| anyhow::anyhow!("missing gpu"))?)?,
+            gpus_per_node: j.u("gpus_per_node")?,
+            power_budget_w: j.f("power_budget_w")?,
+        })
+    }
+}
+
+impl Config {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("node", self.node.to_json()),
+            ("sim", self.sim.to_json()),
+            ("minos", self.minos.to_json()),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<Self> {
+        Ok(Config {
+            node: NodeSpec::from_json(
+                j.get("node").ok_or_else(|| anyhow::anyhow!("missing node"))?,
+            )?,
+            sim: SimParams::from_json(
+                j.get("sim").ok_or_else(|| anyhow::anyhow!("missing sim"))?,
+            )?,
+            minos: MinosParams::from_json(
+                j.get("minos").ok_or_else(|| anyhow::anyhow!("missing minos"))?,
+            )?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn voltage_curve_monotone_and_bounded() {
+        let g = GpuSpec::mi300x();
+        let mut prev = 0.0;
+        for i in 0..=20 {
+            let f = g.f_min_mhz + (g.f_max_mhz - g.f_min_mhz) * i as f64 / 20.0;
+            let v = g.voltage(f);
+            assert!(v >= g.v_min - 1e-12 && v <= g.v_max + 1e-12);
+            assert!(v >= prev);
+            prev = v;
+        }
+        assert_eq!(g.voltage(g.f_max_mhz), g.v_max);
+        assert_eq!(g.voltage(0.0), g.v_min); // clamped below f_min
+    }
+
+    #[test]
+    fn sweep_matches_paper_endpoints() {
+        let g = GpuSpec::mi300x();
+        let s = g.sweep_frequencies();
+        assert_eq!(s.len(), 9);
+        assert_eq!(s[0], 1300.0);
+        assert_eq!(*s.last().unwrap(), 2100.0);
+        for w in s.windows(2) {
+            assert!(w[1] > w[0]);
+        }
+    }
+
+    #[test]
+    fn config_json_roundtrip() {
+        let c = Config::default();
+        let text = c.to_json().dump();
+        let back = Config::from_json_str(&text).unwrap();
+        assert_eq!(back.node.gpu, c.node.gpu);
+        assert_eq!(back.sim, c.sim);
+        assert_eq!(back.minos, c.minos);
+    }
+
+    #[test]
+    fn default_minos_params_match_paper() {
+        let m = MinosParams::default();
+        assert_eq!(m.spike_lo, 0.5);
+        assert_eq!(m.default_bin_size, 0.1);
+        assert_eq!(m.power_bound_x, 1.3);
+        assert_eq!(m.perf_bound_frac, 0.05);
+        assert_eq!(m.power_quantile, 0.90);
+    }
+}

@@ -1,0 +1,45 @@
+//! Job descriptions and lifecycle states for the coordinator.
+
+use crate::minos::algorithm::Objective;
+
+#[derive(Debug, Clone)]
+pub struct Job {
+    pub id: u64,
+    /// Workload registry name (what the user submitted).
+    pub workload: String,
+    /// SLO class → Algorithm 1 objective (§4.3: latency-bound inference
+    /// is PerfCentric; training/batch jobs are PowerCentric).
+    pub objective: Objective,
+    /// Iterations to run.
+    pub iterations: usize,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobState {
+    Queued,
+    Profiling,
+    WaitingForPower,
+    Running,
+    Completed,
+    Failed,
+}
+
+/// Result record for one completed job.
+#[derive(Debug, Clone)]
+pub struct JobOutcome {
+    pub job: Job,
+    pub gpu: usize,
+    pub f_cap_mhz: f64,
+    pub pwr_neighbor: String,
+    pub util_neighbor: String,
+    /// Predicted p90 power at the cap (W) — what admission used.
+    pub predicted_p90_w: f64,
+    /// Observed p90 power over the run (W).
+    pub observed_p90_w: f64,
+    pub observed_peak_w: f64,
+    pub iter_time_ms: f64,
+    pub energy_j: f64,
+    /// True if the workload was already classified (no profiling run).
+    pub classification_cached: bool,
+    pub profiling_cost_s: f64,
+}

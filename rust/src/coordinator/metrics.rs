@@ -1,0 +1,45 @@
+//! Aggregated scheduler metrics — what a cluster operator would scrape.
+
+
+#[derive(Debug, Clone, Default)]
+pub struct SchedulerMetrics {
+    pub submitted: usize,
+    pub completed: usize,
+    pub failed: usize,
+    /// Jobs admitted without a profiling run (classification cache hit).
+    pub cache_hits: usize,
+    /// Profiling runs performed.
+    pub profiles_run: usize,
+    /// Total simulated profiling seconds spent / saved vs full sweeps.
+    pub profiling_spent_s: f64,
+    pub profiling_saved_s: f64,
+    /// Admission-control statistics.
+    pub power_waits: usize,
+    /// Max of (sum of concurrent observed p90 power) seen (W).
+    pub peak_admitted_p90_w: f64,
+    pub node_budget_w: f64,
+    /// p90-bound violations observed post-hoc (power objective only).
+    pub bound_violations: usize,
+    pub total_energy_j: f64,
+}
+
+impl SchedulerMetrics {
+    pub fn summary(&self) -> String {
+        format!(
+            "jobs {}/{} ok ({} failed) | cache hits {} | profiles {} ({:.1}s spent, {:.1}s saved) | \
+             power waits {} | peak admitted p90 {:.0}/{:.0} W | violations {} | energy {:.0} J",
+            self.completed,
+            self.submitted,
+            self.failed,
+            self.cache_hits,
+            self.profiles_run,
+            self.profiling_spent_s,
+            self.profiling_saved_s,
+            self.power_waits,
+            self.peak_admitted_p90_w,
+            self.node_budget_w,
+            self.bound_violations,
+            self.total_energy_j
+        )
+    }
+}

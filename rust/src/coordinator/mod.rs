@@ -1,0 +1,21 @@
+//! The cluster coordinator — Minos deployed as a service (§4.3).
+//!
+//! A power-aware job scheduler for one multi-GPU node: jobs arrive on an
+//! async queue; unseen applications get a *single* default-frequency
+//! profiling run, are classified against the reference set (Algorithm
+//! 1), and receive a frequency cap matching their SLO objective
+//! (PerfCentric for latency-bound jobs, PowerCentric for throughput
+//! jobs).  A node-level governor admits jobs only while the sum of
+//! predicted p90 power draws fits the node budget — the power
+//! over-subscription use case of POLCA/TAPAS/PAL that the paper's
+//! classification enables.
+
+pub mod job;
+pub mod metrics;
+pub mod nodecap;
+pub mod scheduler;
+
+pub use job::{Job, JobOutcome, JobState};
+pub use metrics::SchedulerMetrics;
+pub use nodecap::{plan as plan_node_caps, CapPolicy, NodePlan};
+pub use scheduler::{PowerAwareScheduler, SchedulerConfig};

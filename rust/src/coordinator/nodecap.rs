@@ -1,0 +1,250 @@
+//! Node-level power-cap planning (§4.3): given N jobs co-located on one
+//! node and a node power budget, choose a per-GPU frequency cap vector.
+//!
+//! Two policies:
+//!
+//! * **Uniform** — the conventional sysadmin approach: one cap for every
+//!   GPU, the highest that fits the budget.
+//! * **MinosAware** — greedy marginal-cost descent over the per-workload
+//!   scaling data Minos's classification provides: repeatedly lower the
+//!   cap of the job with the best Δwatts-saved / Δslowdown ratio until
+//!   the predicted p90 sum fits.  Memory-bound jobs give up watts for
+//!   free; compute-bound jobs keep their clocks — the POLCA-style
+//!   reallocation the paper's classification enables.
+
+use crate::minos::reference_set::{ReferenceEntry, ReferenceSet};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CapPolicy {
+    Uniform,
+    MinosAware,
+}
+
+/// One job's planned cap + predicted consequences.
+#[derive(Debug, Clone)]
+pub struct PlannedJob {
+    pub workload: String,
+    pub cap_mhz: f64,
+    pub predicted_p90_w: f64,
+    pub predicted_slowdown: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct NodePlan {
+    pub policy: CapPolicy,
+    pub jobs: Vec<PlannedJob>,
+    pub predicted_total_p90_w: f64,
+    pub budget_w: f64,
+    /// Geometric-mean predicted slowdown across jobs.
+    pub geomean_slowdown: f64,
+}
+
+fn p90_w(e: &ReferenceEntry, f: f64, tdp: f64) -> f64 {
+    e.scaling.at(f).map(|p| p.p90_rel * tdp).unwrap_or(f64::INFINITY)
+}
+
+fn slowdown(e: &ReferenceEntry, f: f64) -> f64 {
+    e.scaling.perf_degr_at(f).unwrap_or(f64::INFINITY)
+}
+
+fn finish(policy: CapPolicy, entries: &[&ReferenceEntry], caps: &[f64], tdp: f64, budget_w: f64) -> NodePlan {
+    let jobs: Vec<PlannedJob> = entries
+        .iter()
+        .zip(caps)
+        .map(|(e, &f)| PlannedJob {
+            workload: e.name.clone(),
+            cap_mhz: f,
+            predicted_p90_w: p90_w(e, f, tdp),
+            predicted_slowdown: slowdown(e, f),
+        })
+        .collect();
+    let total = jobs.iter().map(|j| j.predicted_p90_w).sum();
+    let geo = (jobs
+        .iter()
+        .map(|j| (1.0 + j.predicted_slowdown).ln())
+        .sum::<f64>()
+        / jobs.len().max(1) as f64)
+        .exp()
+        - 1.0;
+    NodePlan {
+        policy,
+        jobs,
+        predicted_total_p90_w: total,
+        budget_w,
+        geomean_slowdown: geo,
+    }
+}
+
+/// Plan caps for `workload_names` (each occupying one GPU of the node)
+/// under `budget_w`, using the given policy and the reference set's
+/// scaling data.  Returns None if a workload is missing from the set.
+pub fn plan(
+    refset: &ReferenceSet,
+    workload_names: &[&str],
+    budget_w: f64,
+    policy: CapPolicy,
+) -> Option<NodePlan> {
+    let tdp = refset.spec.tdp_w;
+    let entries: Vec<&ReferenceEntry> = workload_names
+        .iter()
+        .map(|n| refset.by_name(n))
+        .collect::<Option<Vec<_>>>()?;
+    let sweep: Vec<f64> = entries[0].scaling.frequencies();
+    let f_max = *sweep.last()?;
+    let f_min = sweep[0];
+
+    match policy {
+        CapPolicy::Uniform => {
+            // highest single cap whose predicted p90 sum fits
+            let mut chosen = f_min;
+            for &f in sweep.iter().rev() {
+                let total: f64 = entries.iter().map(|e| p90_w(e, f, tdp)).sum();
+                if total <= budget_w {
+                    chosen = f;
+                    break;
+                }
+            }
+            let caps = vec![chosen; entries.len()];
+            Some(finish(policy, &entries, &caps, tdp, budget_w))
+        }
+        CapPolicy::MinosAware => {
+            let mut caps = vec![f_max; entries.len()];
+            let step_down = |f: f64| -> Option<f64> {
+                sweep.iter().rev().find(|&&x| x < f - 0.5).copied()
+            };
+            loop {
+                let total: f64 = entries
+                    .iter()
+                    .zip(&caps)
+                    .map(|(e, &f)| p90_w(e, f, tdp))
+                    .sum();
+                if total <= budget_w {
+                    break;
+                }
+                // pick the job with the best watts-saved per added
+                // slowdown for its next step down
+                let mut best: Option<(usize, f64, f64)> = None; // (idx, new_f, score)
+                for (i, e) in entries.iter().enumerate() {
+                    if let Some(nf) = step_down(caps[i]) {
+                        let dw = p90_w(e, caps[i], tdp) - p90_w(e, nf, tdp);
+                        let ds = (slowdown(e, nf) - slowdown(e, caps[i])).max(0.0);
+                        let score = dw / (ds + 1e-4); // watts per slowdown
+                        if dw > 0.0 && best.map(|(_, _, s)| score > s).unwrap_or(true) {
+                            best = Some((i, nf, score));
+                        }
+                    }
+                }
+                match best {
+                    Some((i, nf, _)) => caps[i] = nf,
+                    None => {
+                        // nothing saves watts anymore: floor everything
+                        let mut lowered = false;
+                        for (i, _) in entries.iter().enumerate() {
+                            if let Some(nf) = step_down(caps[i]) {
+                                caps[i] = nf;
+                                lowered = true;
+                            }
+                        }
+                        if !lowered {
+                            break; // all at f_min; budget simply infeasible
+                        }
+                    }
+                }
+            }
+            Some(finish(policy, &entries, &caps, tdp, budget_w))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{GpuSpec, MinosParams, SimParams};
+    use crate::workloads;
+    use std::sync::OnceLock;
+
+    fn refset() -> &'static ReferenceSet {
+        static RS: OnceLock<ReferenceSet> = OnceLock::new();
+        RS.get_or_init(|| {
+            let reg = workloads::registry();
+            let picks: Vec<&workloads::Workload> =
+                ["sdxl-b64", "lammps-8x8x16", "bfs-indochina", "milc-6"]
+                    .iter()
+                    .map(|n| reg.by_name(n).unwrap())
+                    .collect();
+            ReferenceSet::build(
+                &GpuSpec::mi300x(),
+                &SimParams::default(),
+                &MinosParams::default(),
+                &picks,
+            )
+        })
+    }
+
+    const JOBS: [&str; 4] = ["sdxl-b64", "lammps-8x8x16", "bfs-indochina", "milc-6"];
+
+    #[test]
+    fn both_policies_fit_the_budget_when_feasible() {
+        let budget = 3200.0;
+        for policy in [CapPolicy::Uniform, CapPolicy::MinosAware] {
+            let p = plan(refset(), &JOBS, budget, policy).unwrap();
+            assert!(
+                p.predicted_total_p90_w <= budget * 1.001,
+                "{policy:?}: {} > {budget}",
+                p.predicted_total_p90_w
+            );
+            assert_eq!(p.jobs.len(), 4);
+        }
+    }
+
+    #[test]
+    fn minos_aware_never_slower_than_uniform() {
+        // At several budgets, the marginal-cost policy's geomean slowdown
+        // must not exceed the uniform policy's (it can always reproduce
+        // the uniform assignment).
+        for budget in [2600.0, 3000.0, 3400.0, 3800.0] {
+            let uni = plan(refset(), &JOBS, budget, CapPolicy::Uniform).unwrap();
+            let minos = plan(refset(), &JOBS, budget, CapPolicy::MinosAware).unwrap();
+            assert!(
+                minos.geomean_slowdown <= uni.geomean_slowdown + 1e-6,
+                "budget {budget}: minos {} vs uniform {}",
+                minos.geomean_slowdown,
+                uni.geomean_slowdown
+            );
+        }
+    }
+
+    #[test]
+    fn memory_bound_jobs_get_cut_first() {
+        let budget = 3000.0;
+        let p = plan(refset(), &JOBS, budget, CapPolicy::MinosAware).unwrap();
+        let cap_of = |n: &str| {
+            p.jobs
+                .iter()
+                .find(|j| j.workload == n)
+                .map(|j| j.cap_mhz)
+                .unwrap()
+        };
+        // bfs (memory-bound, free watts) should be capped at least as low
+        // as the compute-bound sdxl once the budget binds
+        assert!(
+            cap_of("bfs-indochina") <= cap_of("sdxl-b64"),
+            "bfs {} vs sdxl {}",
+            cap_of("bfs-indochina"),
+            cap_of("sdxl-b64")
+        );
+    }
+
+    #[test]
+    fn infeasible_budget_floors_everything() {
+        let p = plan(refset(), &JOBS, 100.0, CapPolicy::MinosAware).unwrap();
+        for j in &p.jobs {
+            assert_eq!(j.cap_mhz, 1300.0, "{}", j.workload);
+        }
+    }
+
+    #[test]
+    fn unknown_workload_is_none() {
+        assert!(plan(refset(), &["nope"], 1000.0, CapPolicy::Uniform).is_none());
+    }
+}

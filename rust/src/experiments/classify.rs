@@ -1,0 +1,314 @@
+//! Classification experiments: Table 1 (classes per workload), Fig. 3
+//! (power dendrogram), Fig. 4 (utilization K-Means + silhouette), Fig. 5
+//! (per-group cumulative power distributions).
+
+use crate::clustering::hierarchy::{Dendrogram, Linkage};
+use crate::clustering::kmeans::kmeans;
+use crate::clustering::silhouette::{silhouette_score, sweep_k};
+use crate::experiments::ExperimentContext;
+use crate::minos::reference_set::ReferenceEntry;
+use crate::report::{line_plot, table};
+use crate::workloads::{PerfClass, PwrClass};
+
+/// Z-score standardization per dimension (used before K-Means; the
+/// nearest-neighbor searches of Algorithm 1 stay in raw units).
+pub fn standardize(pts: &[Vec<f64>]) -> Vec<Vec<f64>> {
+    if pts.is_empty() {
+        return Vec::new();
+    }
+    let d = pts[0].len();
+    let n = pts.len() as f64;
+    let mut mean = vec![0.0; d];
+    for p in pts {
+        for (m, x) in mean.iter_mut().zip(p) {
+            *m += x / n;
+        }
+    }
+    let mut std = vec![0.0; d];
+    for p in pts {
+        for j in 0..d {
+            std[j] += (p[j] - mean[j]).powi(2) / n;
+        }
+    }
+    for sd in std.iter_mut() {
+        *sd = sd.sqrt().max(1e-9);
+    }
+    pts.iter()
+        .map(|p| (0..d).map(|j| (p[j] - mean[j]) / std[j]).collect())
+        .collect()
+}
+
+/// Build the power dendrogram over all power-profiled reference entries
+/// at the default bin size; returns (names, labels at 3-cluster cut,
+/// cluster→PwrClass mapping, dendrogram).
+pub fn power_clustering(
+    ctx: &mut ExperimentContext,
+) -> anyhow::Result<(Vec<String>, Vec<usize>, Vec<PwrClass>, Dendrogram)> {
+    let c = ctx.config.minos.default_bin_size;
+    let rs = ctx.refset().clone();
+    let entries: Vec<&ReferenceEntry> = rs.power_entries(None);
+    let vecs: Vec<_> = entries
+        .iter()
+        .map(|e| e.vector_for(c).expect("bin size in refset"))
+        .collect();
+    let dist = ctx.runtime.pairwise_cosine(&vecs)?;
+    let dg = Dendrogram::build(&dist, Linkage::Ward);
+    let labels = dg.cut_k(3);
+    // Map cluster id -> PwrClass by mean fraction of samples above TDP.
+    let k = labels.iter().max().unwrap() + 1;
+    let mut frac = vec![(0.0, 0usize); k];
+    for (i, e) in entries.iter().enumerate() {
+        frac[labels[i]].0 += e.scaling.uncapped().frac_above_tdp;
+        frac[labels[i]].1 += 1;
+    }
+    let means: Vec<f64> = frac
+        .iter()
+        .map(|(s, n)| if *n > 0 { s / *n as f64 } else { 0.0 })
+        .collect();
+    let mut order: Vec<usize> = (0..k).collect();
+    order.sort_by(|&a, &b| means[a].partial_cmp(&means[b]).unwrap());
+    let mut mapping = vec![PwrClass::Mixed; k];
+    if k >= 1 {
+        mapping[order[0]] = PwrClass::LowSpike;
+    }
+    if k >= 2 {
+        mapping[order[k - 1]] = PwrClass::HighSpike;
+    }
+    Ok((
+        entries.iter().map(|e| e.name.clone()).collect(),
+        labels,
+        mapping,
+        dg,
+    ))
+}
+
+/// Utilization K-Means over all reference entries (K=3) with a
+/// semantic cluster→PerfClass mapping.
+pub fn util_clustering(
+    ctx: &mut ExperimentContext,
+) -> anyhow::Result<(Vec<String>, Vec<usize>, Vec<PerfClass>, Vec<Vec<f64>>)> {
+    let rs = ctx.refset().clone();
+    let entries: Vec<&ReferenceEntry> = rs.util_entries(None);
+    let pts: Vec<Vec<f64>> = entries.iter().map(|e| vec![e.util.sm, e.util.dram]).collect();
+    // Standardize (z-score) before K-Means: SM spans ~0-95 while DRAM
+    // spans ~0-55, and without scaling the SM axis dominates cluster
+    // geometry.  Class mapping below uses raw-unit cluster means.
+    let zpts = standardize(&pts);
+    let km = kmeans(&zpts, 3, ctx.config.sim.seed, 10);
+    let k = 3;
+    let mut mean = vec![(0.0f64, 0.0f64, 0usize); k];
+    for (i, p) in pts.iter().enumerate() {
+        let a = km.assignments[i];
+        mean[a].0 += p[0];
+        mean[a].1 += p[1];
+        mean[a].2 += 1;
+    }
+    let mapping: Vec<PerfClass> = mean
+        .iter()
+        .map(|(sm, dram, n)| {
+            let n = (*n).max(1) as f64;
+            let (sm, dram) = (sm / n, dram / n);
+            if sm < 40.0 {
+                PerfClass::Memory
+            } else if dram < 20.0 {
+                PerfClass::Compute
+            } else {
+                PerfClass::Hybrid
+            }
+        })
+        .collect();
+    Ok((
+        entries.iter().map(|e| e.name.clone()).collect(),
+        km.assignments,
+        mapping,
+        pts,
+    ))
+}
+
+/// Table 1: per-workload power and perf classes, ours vs the paper's.
+pub fn table1(ctx: &mut ExperimentContext) -> anyhow::Result<String> {
+    let (pnames, plabels, pmap, _) = power_clustering(ctx)?;
+    let (unames, ulabels, umap, _) = util_clustering(ctx)?;
+    let pwr_of = |n: &str| -> Option<PwrClass> {
+        pnames.iter().position(|x| x == n).map(|i| pmap[plabels[i]])
+    };
+    let perf_of = |n: &str| -> Option<PerfClass> {
+        unames.iter().position(|x| x == n).map(|i| umap[ulabels[i]])
+    };
+    let mut rows = Vec::new();
+    let mut agree_pwr = (0usize, 0usize);
+    let mut agree_perf = (0usize, 0usize);
+    for w in ctx.registry.all().iter().filter(|w| w.in_reference_set) {
+        let got_p = pwr_of(&w.name);
+        let got_u = perf_of(&w.name);
+        if let (Some(g), Some(e)) = (got_p, w.expected_pwr) {
+            agree_pwr.1 += 1;
+            if g == e {
+                agree_pwr.0 += 1;
+            }
+        }
+        if let (Some(g), Some(e)) = (got_u, w.expected_perf) {
+            agree_perf.1 += 1;
+            if g == e {
+                agree_perf.0 += 1;
+            }
+        }
+        rows.push(vec![
+            w.name.clone(),
+            w.domain.label().to_string(),
+            w.config.clone(),
+            got_p.map(|c| c.label().to_string()).unwrap_or("-".into()),
+            w.expected_pwr.map(|c| c.label().to_string()).unwrap_or("-".into()),
+            got_u.map(|c| c.label().to_string()).unwrap_or("-".into()),
+            w.expected_perf
+                .map(|c| format!("{}({})", c.label(), w.perf_label.clone().unwrap_or_default()))
+                .unwrap_or("-".into()),
+        ]);
+    }
+    let mut out = table(
+        &["workload", "domain", "config", "PwrClass", "paper", "PerfClass", "paper"],
+        &rows,
+    );
+    out.push_str(&format!(
+        "\npower-class agreement with paper: {}/{}   perf-class agreement: {}/{}\n",
+        agree_pwr.0, agree_pwr.1, agree_perf.0, agree_perf.1
+    ));
+    Ok(out)
+}
+
+/// Fig. 3: the dendrogram (merge list) + 3-group slice.
+pub fn fig3(ctx: &mut ExperimentContext) -> anyhow::Result<String> {
+    let (names, labels, mapping, dg) = power_clustering(ctx)?;
+    let mut out = String::from("Agglomerative merges (ward linkage, cosine distance):\n");
+    let mut cluster_names: Vec<String> = names.clone();
+    for m in &dg.merges {
+        let a = cluster_names
+            .get(m.a)
+            .cloned()
+            .unwrap_or_else(|| format!("#{}", m.a));
+        let b = cluster_names
+            .get(m.b)
+            .cloned()
+            .unwrap_or_else(|| format!("#{}", m.b));
+        out.push_str(&format!("  d={:.3}  {} + {}\n", m.distance, a, b));
+        cluster_names.push(format!("({a}|{b})"));
+    }
+    out.push_str("\n3-group slice:\n");
+    let k = labels.iter().max().unwrap() + 1;
+    for cl in 0..k {
+        let members: Vec<&str> = names
+            .iter()
+            .zip(&labels)
+            .filter(|(_, &l)| l == cl)
+            .map(|(n, _)| n.as_str())
+            .collect();
+        out.push_str(&format!(
+            "  {:<10} ({} members): {}\n",
+            mapping[cl].label(),
+            members.len(),
+            members.join(", ")
+        ));
+    }
+    Ok(out)
+}
+
+/// Fig. 4: K-Means on the utilization plane + silhouette sweep.
+pub fn fig4(ctx: &mut ExperimentContext) -> anyhow::Result<String> {
+    let (names, labels, mapping, pts) = util_clustering(ctx)?;
+    let kmin = ctx.config.minos.kutil_min;
+    let kmax = ctx.config.minos.kutil_max;
+    let zpts = standardize(&pts);
+    let (scores, best_k) = sweep_k(&zpts, kmin, kmax, ctx.config.sim.seed);
+    let mut out = String::from("Silhouette sweep (paper: K=3 best, score ~0.48):\n");
+    let rows: Vec<Vec<String>> = scores
+        .iter()
+        .map(|(k, s)| vec![k.to_string(), format!("{s:.3}")])
+        .collect();
+    out.push_str(&table(&["K", "silhouette"], &rows));
+    out.push_str(&format!("best K = {best_k}\n\n"));
+    out.push_str(&format!(
+        "silhouette at K=3: {:.3}\n\n",
+        silhouette_score(&zpts, &labels)
+    ));
+
+    // scatter: SM on x, DRAM on y, glyph per class
+    let mut canvas = vec![vec![' '; 101]; 31];
+    for (i, p) in pts.iter().enumerate() {
+        let x = (p[0].clamp(0.0, 100.0)) as usize;
+        let y = 30 - ((p[1].clamp(0.0, 60.0)) / 2.0) as usize;
+        canvas[y][x] = match mapping[labels[i]] {
+            crate::workloads::PerfClass::Compute => 'C',
+            crate::workloads::PerfClass::Memory => 'M',
+            crate::workloads::PerfClass::Hybrid => 'H',
+        };
+    }
+    out.push_str("DRAM%\n");
+    for (ri, row) in canvas.iter().enumerate() {
+        out.push_str(&format!("{:>4} |{}\n", (30 - ri) * 2, row.iter().collect::<String>()));
+    }
+    out.push_str("      0        20        40        60        80       100  SM%\n\n");
+    for (i, n) in names.iter().enumerate() {
+        out.push_str(&format!(
+            "  {:<26} SM {:>5.1}  DRAM {:>5.1}  -> {}\n",
+            n,
+            pts[i][0],
+            pts[i][1],
+            mapping[labels[i]].label()
+        ));
+    }
+    Ok(out)
+}
+
+/// Fig. 5: cumulative power distributions per power group.
+pub fn fig5(ctx: &mut ExperimentContext) -> anyhow::Result<String> {
+    let (names, labels, mapping, _) = power_clustering(ctx)?;
+    let rs = ctx.refset().clone();
+    let grid: Vec<f64> = (0..=36).map(|i| 0.2 + i as f64 * 0.05).collect();
+    let mut out = String::new();
+    let k = labels.iter().max().unwrap() + 1;
+    for cl in 0..k {
+        let members: Vec<&String> = names
+            .iter()
+            .zip(&labels)
+            .filter(|(_, &l)| l == cl)
+            .map(|(n, _)| n)
+            .collect();
+        out.push_str(&format!(
+            "--- {} group ({} workloads) ---\n",
+            mapping[cl].label(),
+            members.len()
+        ));
+        let mut rows = Vec::new();
+        for n in &members {
+            let e = rs.by_name(n).unwrap();
+            let u = e.scaling.uncapped();
+            rows.push(vec![
+                n.to_string(),
+                format!("{:.2}", u.p50_rel),
+                format!("{:.2}", u.p90_rel),
+                format!("{:.2}", u.p99_rel),
+                format!("{:.2}", u.peak_rel),
+                format!("{:.0}%", u.frac_above_tdp * 100.0),
+            ]);
+        }
+        out.push_str(&table(
+            &["workload", "p50/TDP", "p90/TDP", "p99/TDP", "peak/TDP", ">TDP"],
+            &rows,
+        ));
+        // mean CDF of the group, from fresh uncapped profiles
+        let mut mean_cdf = vec![0.0; grid.len()];
+        for n in &members {
+            let p = ctx.profile(n, crate::sim::dvfs::DvfsMode::Uncapped)?;
+            for (i, v) in p.trace.cdf_rel(&grid).iter().enumerate() {
+                mean_cdf[i] += v / members.len() as f64;
+            }
+        }
+        out.push_str(&line_plot(&grid, &[("mean CDF", mean_cdf)], 80, 10));
+        out.push('\n');
+    }
+    out.push_str(
+        "Expected shape (Fig. 5): High-spike CDFs rise sharply above 1.25xTDP;\n\
+         Low-spike CDFs saturate below TDP; Mixed in between.\n",
+    );
+    Ok(out)
+}

@@ -1,0 +1,105 @@
+//! Shared experiment state: the (expensive) reference set, built once
+//! and cached on disk, plus the PJRT runtime.
+
+use crate::config::Config;
+use crate::minos::reference_set::ReferenceSet;
+use crate::runtime::MinosRuntime;
+use crate::sim::dvfs::DvfsMode;
+use crate::sim::profiler::{profile, Profile, ProfileRequest};
+use crate::workloads::{registry, Registry, Workload};
+use std::collections::HashMap;
+
+pub struct ExperimentContext {
+    pub config: Config,
+    pub registry: Registry,
+    pub runtime: MinosRuntime,
+    pub cache_path: Option<String>,
+    refset: Option<ReferenceSet>,
+    profile_cache: HashMap<String, Profile>,
+}
+
+impl ExperimentContext {
+    pub fn new(config: Config) -> Self {
+        ExperimentContext {
+            config,
+            registry: registry(),
+            runtime: MinosRuntime::auto(),
+            cache_path: Some(default_cache_path()),
+            refset: None,
+            profile_cache: HashMap::new(),
+        }
+    }
+
+    pub fn without_cache(mut self) -> Self {
+        self.cache_path = None;
+        self
+    }
+
+    /// The full reference set (all reference workloads, full cap sweep).
+    /// Built lazily; cached to disk when a cache path is configured.
+    pub fn refset(&mut self) -> &ReferenceSet {
+        if self.refset.is_none() {
+            let loaded = self
+                .cache_path
+                .as_ref()
+                .and_then(|p| ReferenceSet::load(p).ok())
+                .filter(|rs| {
+                    rs.spec == self.config.node.gpu
+                        && rs.bin_sizes == self.config.minos.bin_sizes
+                        && rs.entries.len() == self.registry.util_reference().len()
+                        && rs.registry_fingerprint
+                            == self.registry.fingerprint()
+                                ^ crate::sim::SIM_MODEL_VERSION.wrapping_mul(0x9E3779B97F4A7C15)
+                });
+            let rs = match loaded {
+                Some(rs) => rs,
+                None => {
+                    let wls: Vec<&Workload> = self.registry.util_reference();
+                    let rs = ReferenceSet::build(
+                        &self.config.node.gpu,
+                        &self.config.sim,
+                        &self.config.minos,
+                        &wls,
+                    );
+                    if let Some(p) = &self.cache_path {
+                        let _ = std::fs::create_dir_all(
+                            std::path::Path::new(p).parent().unwrap_or(std::path::Path::new(".")),
+                        );
+                        let _ = rs.save(p);
+                    }
+                    rs
+                }
+            };
+            self.refset = Some(rs);
+        }
+        self.refset.as_ref().unwrap()
+    }
+
+    /// Profile one workload at one mode, memoized.
+    pub fn profile(&mut self, name: &str, mode: DvfsMode) -> anyhow::Result<Profile> {
+        let key = format!("{name}@{}", mode.label());
+        if let Some(p) = self.profile_cache.get(&key) {
+            return Ok(p.clone());
+        }
+        let w = self
+            .registry
+            .by_name(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown workload {name}"))?
+            .clone();
+        let p = profile(
+            &ProfileRequest::new(&self.config.node.gpu, &w, mode).with_params(&self.config.sim),
+        );
+        self.profile_cache.insert(key, p.clone());
+        Ok(p)
+    }
+
+    /// Profile an ad-hoc workload object (phase-restricted variants etc.).
+    pub fn profile_workload(&mut self, w: &Workload, mode: DvfsMode) -> Profile {
+        profile(&ProfileRequest::new(&self.config.node.gpu, w, mode).with_params(&self.config.sim))
+    }
+}
+
+pub fn default_cache_path() -> String {
+    std::env::var("MINOS_CACHE")
+        .unwrap_or_else(|_| "target/minos-cache/refset.json".to_string())
+}

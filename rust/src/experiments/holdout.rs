@@ -1,0 +1,387 @@
+//! §7.2–§7.4: hold-one-out generalization (Figs. 9–11) and bin-size
+//! sensitivity (Fig. 12).
+//!
+//! Every unique app's largest input is treated as unseen: its entries
+//! are removed from the reference set, Algorithm 1 picks a cap from the
+//! remaining workloads, and the prediction is scored against the held-
+//! out workload's own (already measured) scaling data.
+
+use crate::baselines::GuerreiroClassifier;
+use crate::experiments::ExperimentContext;
+use crate::minos::algorithm::{SelectOptimalFreq, TargetProfile};
+use crate::minos::prediction::{error_by_distance, mean};
+use crate::report::table;
+
+/// Power-prediction outcome for one held-out workload.
+#[derive(Debug, Clone)]
+pub struct PowerHoldout {
+    pub name: String,
+    pub pwr_neighbor: String,
+    pub cosine_dist: f64,
+    pub cap_mhz: f64,
+    pub predicted_q_rel: f64,
+    pub observed_q_rel: f64,
+    /// Bound-overshoot error, % of TDP (Fig. 8/9 convention).
+    pub minos_bound_err_pp: f64,
+    /// |pred − obs| relative error (§7.4 Err normalized).
+    pub minos_rel_err: f64,
+    pub guerreiro_neighbor: String,
+    pub guerreiro_cap_mhz: f64,
+    pub guerreiro_observed_q_rel: f64,
+    pub guerreiro_bound_err_pp: f64,
+}
+
+/// Perf-prediction outcome for one held-out workload.
+#[derive(Debug, Clone)]
+pub struct PerfHoldout {
+    pub name: String,
+    pub util_neighbor: String,
+    pub euclid_dist: f64,
+    pub cap_mhz: f64,
+    pub predicted_degr: f64,
+    pub observed_degr: f64,
+    /// max(0, observed − 5%) in percentage points.
+    pub bound_err_pp: f64,
+    pub abs_err_pp: f64,
+}
+
+/// Evaluate the PowerCentric hold-one-out at quantile `q`.
+pub fn evaluate(ctx: &mut ExperimentContext, q: f64) -> anyhow::Result<Vec<PowerHoldout>> {
+    let params = ctx.config.minos.clone();
+    let bound = params.power_bound_x;
+    let rs = ctx.refset().clone();
+    let holdouts: Vec<String> = ctx
+        .registry
+        .holdout_set()
+        .iter()
+        .map(|w| w.name.clone())
+        .collect();
+    let mut out = Vec::new();
+    for name in holdouts {
+        let entry = rs
+            .by_name(&name)
+            .ok_or_else(|| anyhow::anyhow!("{name} missing from refset"))?;
+        let target = TargetProfile::from_entry(entry);
+        let cut = rs.without_app(&entry.app);
+        let sel = SelectOptimalFreq::new(&cut, &params);
+        let c = sel.choose_bin_size(&target);
+        let (nn, dist) = sel
+            .pwr_neighbor(&target, c)
+            .ok_or_else(|| anyhow::anyhow!("no neighbor for {name}"))?;
+        let (cap, pred) = sel.cap_power_centric_q(nn, q);
+        let obs = entry
+            .scaling
+            .at(cap)
+            .map(|p| p.quantile_rel(q))
+            .ok_or_else(|| anyhow::anyhow!("no scaling point at {cap}"))?;
+
+        let g = GuerreiroClassifier::new(&cut, &params);
+        let (gnn, _) = g.neighbor(&target).ok_or_else(|| anyhow::anyhow!("no G neighbor"))?;
+        let mut gsel = SelectOptimalFreq::new(&cut, &params);
+        gsel.params.power_quantile = q;
+        let (gcap, _) = gsel.cap_power_centric_q(gnn, q);
+        let gobs = entry
+            .scaling
+            .at(gcap)
+            .map(|p| p.quantile_rel(q))
+            .unwrap_or(f64::NAN);
+
+        out.push(PowerHoldout {
+            name: name.clone(),
+            pwr_neighbor: nn.name.clone(),
+            cosine_dist: dist,
+            cap_mhz: cap,
+            predicted_q_rel: pred,
+            observed_q_rel: obs,
+            minos_bound_err_pp: (obs - bound).max(0.0) * 100.0,
+            minos_rel_err: (pred - obs).abs() / obs.max(1e-9),
+            guerreiro_neighbor: gnn.name.clone(),
+            guerreiro_cap_mhz: gcap,
+            guerreiro_observed_q_rel: gobs,
+            guerreiro_bound_err_pp: (gobs - bound).max(0.0) * 100.0,
+        });
+    }
+    Ok(out)
+}
+
+/// Evaluate the PerfCentric hold-one-out.
+pub fn evaluate_perf(ctx: &mut ExperimentContext) -> anyhow::Result<Vec<PerfHoldout>> {
+    let params = ctx.config.minos.clone();
+    let bound = params.perf_bound_frac;
+    let rs = ctx.refset().clone();
+    let holdouts: Vec<String> = ctx
+        .registry
+        .holdout_set()
+        .iter()
+        .map(|w| w.name.clone())
+        .collect();
+    let mut out = Vec::new();
+    for name in holdouts {
+        let entry = rs.by_name(&name).unwrap();
+        let target = TargetProfile::from_entry(entry);
+        let cut = rs.without_app(&entry.app);
+        let sel = SelectOptimalFreq::new(&cut, &params);
+        let (nn, dist) = sel
+            .util_neighbor(&target)
+            .ok_or_else(|| anyhow::anyhow!("no util neighbor for {name}"))?;
+        let (cap, pred) = sel.cap_perf_centric(nn);
+        let obs = entry
+            .scaling
+            .perf_degr_at(cap)
+            .ok_or_else(|| anyhow::anyhow!("no scaling at {cap}"))?;
+        out.push(PerfHoldout {
+            name: name.clone(),
+            util_neighbor: nn.name.clone(),
+            euclid_dist: dist,
+            cap_mhz: cap,
+            predicted_degr: pred,
+            observed_degr: obs,
+            bound_err_pp: (obs - bound).max(0.0) * 100.0,
+            abs_err_pp: (pred - obs).abs() * 100.0,
+        });
+    }
+    Ok(out)
+}
+
+/// Fig. 9: similarity matrix + Minos-vs-Guerreiro p90 errors + error-by-
+/// distance histogram.
+pub fn fig9(ctx: &mut ExperimentContext) -> anyhow::Result<String> {
+    let params = ctx.config.minos.clone();
+    let c = params.default_bin_size;
+    let rs = ctx.refset().clone();
+    let holdouts: Vec<&str> = ctx
+        .registry
+        .holdout_set()
+        .iter()
+        .map(|w| w.name.as_str())
+        .collect::<Vec<_>>()
+        .into_iter()
+        .collect();
+
+    // (a) pairwise cosine distance matrix over holdout workloads
+    let names: Vec<String> = holdouts.iter().map(|s| s.to_string()).collect();
+    let vecs: Vec<_> = names
+        .iter()
+        .map(|n| rs.by_name(n).unwrap().vector_for(c).unwrap())
+        .collect();
+    let d = ctx.runtime.pairwise_cosine(&vecs)?;
+    let mut out = String::from("(a) pairwise cosine distance (rows: * marks nearest neighbor):\n");
+    let short: Vec<String> = names.iter().map(|n| n.chars().take(12).collect()).collect();
+    out.push_str(&format!("{:>14}", ""));
+    for s in &short {
+        out.push_str(&format!("{:>13}", s));
+    }
+    out.push('\n');
+    for i in 0..names.len() {
+        out.push_str(&format!("{:>14}", short[i]));
+        let nn = (0..names.len())
+            .filter(|&j| j != i)
+            .min_by(|&a, &b| d[i][a].partial_cmp(&d[i][b]).unwrap())
+            .unwrap();
+        for j in 0..names.len() {
+            let mark = if j == nn { "*" } else { " " };
+            out.push_str(&format!("{:>12.3}{mark}", d[i][j]));
+        }
+        out.push('\n');
+    }
+
+    // (b) errors
+    let results = evaluate(ctx, 0.90)?;
+    let rows: Vec<Vec<String>> = results
+        .iter()
+        .map(|r| {
+            vec![
+                r.name.clone(),
+                r.pwr_neighbor.clone(),
+                format!("{:.3}", r.cosine_dist),
+                format!("{:.0}", r.cap_mhz),
+                format!("{:.1}%", r.minos_bound_err_pp),
+                r.guerreiro_neighbor.clone(),
+                format!("{:.0}", r.guerreiro_cap_mhz),
+                format!("{:.1}%", r.guerreiro_bound_err_pp),
+            ]
+        })
+        .collect();
+    out.push_str("\n(b) p90 power prediction errors (bound overshoot, % of TDP):\n");
+    out.push_str(&table(
+        &["workload", "Minos NN", "cos", "cap", "Minos err", "Guerreiro NN", "cap", "G err"],
+        &rows,
+    ));
+    let m: Vec<f64> = results.iter().map(|r| r.minos_bound_err_pp).collect();
+    let g: Vec<f64> = results.iter().map(|r| r.guerreiro_bound_err_pp).collect();
+    out.push_str(&format!(
+        "mean: Minos {:.1}% vs Guerreiro {:.1}%   (paper: 4% vs 14%)\n",
+        mean(&m),
+        mean(&g)
+    ));
+
+    // (c) error vs cosine distance histogram
+    let pairs: Vec<(f64, f64)> = results
+        .iter()
+        .map(|r| (r.cosine_dist, r.minos_rel_err * 100.0))
+        .collect();
+    let h = error_by_distance(&pairs, &[0.0, 0.02, 0.05, 0.1, 0.2, 0.5, 1.0]);
+    out.push_str("\n(c) |pred − obs| p90 error by cosine distance bin:\n");
+    let rows: Vec<Vec<String>> = (0..h.mean_err.len())
+        .map(|b| {
+            vec![
+                format!("[{:.2}, {:.2})", h.bin_edges[b], h.bin_edges[b + 1]),
+                h.counts[b].to_string(),
+                format!("{:.1}%", h.mean_err[b]),
+            ]
+        })
+        .collect();
+    out.push_str(&table(&["cos distance", "n", "mean err"], &rows));
+    out.push_str("Expected: error grows with distance to the neighbor (Fig. 9(c)).\n");
+    Ok(out)
+}
+
+/// Fig. 10: p90/p95/p99 mean errors, Minos vs Guerreiro.
+pub fn fig10(ctx: &mut ExperimentContext) -> anyhow::Result<String> {
+    let mut rows = Vec::new();
+    for (label, q) in [("p90", 0.90), ("p95", 0.95), ("p99", 0.99)] {
+        let r = evaluate(ctx, q)?;
+        let m: Vec<f64> = r.iter().map(|x| x.minos_bound_err_pp).collect();
+        let g: Vec<f64> = r.iter().map(|x| x.guerreiro_bound_err_pp).collect();
+        rows.push(vec![
+            label.to_string(),
+            format!("{:.1}%", mean(&m)),
+            format!("{:.1}%", mean(&g)),
+        ]);
+    }
+    let mut out = table(&["quantile", "Minos", "Guerreiro"], &rows);
+    out.push_str("\nPaper Fig. 10: Minos 4%/6%/9%, consistently below Guerreiro.\n");
+    Ok(out)
+}
+
+/// Fig. 11: euclidean matrix + perf errors + error-by-distance bins.
+pub fn fig11(ctx: &mut ExperimentContext) -> anyhow::Result<String> {
+    let rs = ctx.refset().clone();
+    let names: Vec<String> = ctx
+        .registry
+        .holdout_set()
+        .iter()
+        .map(|w| w.name.clone())
+        .collect();
+    let mut out = String::from("(a) pairwise euclidean distance (utilization plane):\n");
+    let short: Vec<String> = names.iter().map(|n| n.chars().take(12).collect()).collect();
+    out.push_str(&format!("{:>14}", ""));
+    for s in &short {
+        out.push_str(&format!("{:>13}", s));
+    }
+    out.push('\n');
+    for i in 0..names.len() {
+        let ui = rs.by_name(&names[i]).unwrap().util;
+        out.push_str(&format!("{:>14}", short[i]));
+        let dists: Vec<f64> = names
+            .iter()
+            .map(|n| ui.euclidean(&rs.by_name(n).unwrap().util))
+            .collect();
+        let nn = (0..names.len())
+            .filter(|&j| j != i)
+            .min_by(|&a, &b| dists[a].partial_cmp(&dists[b]).unwrap())
+            .unwrap();
+        for (j, dv) in dists.iter().enumerate() {
+            let mark = if j == nn { "*" } else { " " };
+            out.push_str(&format!("{:>12.1}{mark}", dv));
+        }
+        out.push('\n');
+    }
+
+    let results = evaluate_perf(ctx)?;
+    let rows: Vec<Vec<String>> = results
+        .iter()
+        .map(|r| {
+            vec![
+                r.name.clone(),
+                r.util_neighbor.clone(),
+                format!("{:.1}", r.euclid_dist),
+                format!("{:.0}", r.cap_mhz),
+                format!("{:+.1}%", r.predicted_degr * 100.0),
+                format!("{:+.1}%", r.observed_degr * 100.0),
+                format!("{:.1}%", r.bound_err_pp),
+            ]
+        })
+        .collect();
+    out.push_str("\n(b) perf prediction at the PerfCentric cap:\n");
+    out.push_str(&table(
+        &["workload", "neighbor", "eucl", "cap", "pred", "obs", "bound err"],
+        &rows,
+    ));
+    let errs: Vec<f64> = results.iter().map(|r| r.bound_err_pp).collect();
+    let zero = results.iter().filter(|r| r.bound_err_pp == 0.0).count();
+    out.push_str(&format!(
+        "mean bound error {:.1}%; perfect predictions {}/{}   (paper: 3%, 8/11)\n",
+        mean(&errs),
+        zero,
+        results.len()
+    ));
+
+    let pairs: Vec<(f64, f64)> = results
+        .iter()
+        .map(|r| (r.euclid_dist, r.abs_err_pp))
+        .collect();
+    let h = error_by_distance(&pairs, &[0.0, 3.0, 6.0, 12.0, 25.0, 60.0]);
+    out.push_str("\n(c) |pred − obs| slowdown error by euclidean distance bin:\n");
+    let rows: Vec<Vec<String>> = (0..h.mean_err.len())
+        .map(|b| {
+            vec![
+                format!("[{:.0}, {:.0})", h.bin_edges[b], h.bin_edges[b + 1]),
+                h.counts[b].to_string(),
+                format!("{:.1}pp", h.mean_err[b]),
+            ]
+        })
+        .collect();
+    out.push_str(&table(&["eucl distance", "n", "mean err"], &rows));
+    Ok(out)
+}
+
+/// Fig. 12: bin-size sensitivity of the p90 neighbor-prediction error,
+/// normalized to c = 0.1 (§7.4).
+pub fn fig12(ctx: &mut ExperimentContext) -> anyhow::Result<String> {
+    let params = ctx.config.minos.clone();
+    let rs = ctx.refset().clone();
+    let holdouts: Vec<String> = ctx
+        .registry
+        .holdout_set()
+        .iter()
+        .map(|w| w.name.clone())
+        .collect();
+    let mut per_c: Vec<(f64, f64)> = Vec::new();
+    for &c in &params.bin_sizes {
+        let mut errs = Vec::new();
+        for name in &holdouts {
+            let entry = rs.by_name(name).unwrap();
+            let target = TargetProfile::from_entry(entry);
+            let cut = rs.without_app(&entry.app);
+            let sel = SelectOptimalFreq::new(&cut, &params);
+            if let Some((nn, _)) = sel.pwr_neighbor(&target, c) {
+                // Err_c(T) = |p90(T) − p90(NN_c(T))| at default frequency
+                errs.push((target.quantile(0.90) - nn.scaling.uncapped().p90_rel).abs());
+            }
+        }
+        per_c.push((c, mean(&errs)));
+    }
+    let base = per_c
+        .iter()
+        .find(|(c, _)| (*c - 0.1).abs() < 1e-9)
+        .map(|(_, e)| *e)
+        .unwrap_or(1e-9)
+        .max(1e-9);
+    let rows: Vec<Vec<String>> = per_c
+        .iter()
+        .map(|(c, e)| {
+            vec![
+                format!("{c}"),
+                format!("{:.4}", e),
+                format!("{:.2}x", e / base),
+            ]
+        })
+        .collect();
+    let mut out = table(&["bin size c", "mean |p90 err| (xTDP)", "vs c=0.1"], &rows);
+    out.push_str(
+        "\nPaper Fig. 12: medium bins (0.1–0.2) within ~10% of each other; very\n\
+         coarse bins lose feature richness and err higher.\n",
+    );
+    Ok(out)
+}

@@ -1,0 +1,81 @@
+//! Experiment drivers — one per table/figure of the paper (DESIGN.md §4
+//! maps ids to paper artifacts).  Every driver renders the same rows /
+//! series the paper reports, against the simulated substrate.
+//!
+//! ids: fig1 fig2 fig3 fig4 fig5 fig6 fig7 fig8 fig9 fig10 fig11 fig12
+//!      table1 table2 headline all
+
+pub mod ablation;
+pub mod capping;
+pub mod casestudy;
+pub mod classify;
+pub mod context;
+pub mod holdout;
+pub mod traces;
+
+pub use context::ExperimentContext;
+
+pub const ALL_IDS: [&str; 15] = [
+    "fig1", "fig2", "table1", "fig3", "fig4", "fig5", "fig6", "fig7", "table2", "fig8",
+    "fig9", "fig10", "fig11", "fig12", "headline",
+];
+
+/// Ablations beyond the paper's figures (run individually or via
+/// `experiment ablations`).
+pub const ABLATION_IDS: [&str; 7] = [
+    "ablation-metric",
+    "ablation-linkage",
+    "ablation-pin",
+    "ablation-vendor",
+    "ablation-oversub",
+    "ablation-energy",
+    "ablation-nodecap",
+];
+
+/// Run one experiment by id, returning its rendered report.
+pub fn run(ctx: &mut ExperimentContext, id: &str) -> anyhow::Result<String> {
+    match id {
+        "fig1" => traces::fig1(ctx),
+        "fig2" => traces::fig2(ctx),
+        "table1" => classify::table1(ctx),
+        "fig3" => classify::fig3(ctx),
+        "fig4" => classify::fig4(ctx),
+        "fig5" => classify::fig5(ctx),
+        "fig6" => capping::fig6(ctx),
+        "fig7" => capping::fig7(ctx),
+        "table2" => casestudy::table2(ctx),
+        "fig8" => casestudy::fig8(ctx),
+        "fig9" => holdout::fig9(ctx),
+        "fig10" => holdout::fig10(ctx),
+        "fig11" => holdout::fig11(ctx),
+        "fig12" => holdout::fig12(ctx),
+        "headline" => casestudy::headline(ctx),
+        "ablation-metric" => ablation::metric(ctx),
+        "ablation-linkage" => ablation::linkage(ctx),
+        "ablation-pin" => ablation::pin(ctx),
+        "ablation-vendor" => ablation::vendor(ctx),
+        "ablation-oversub" => ablation::oversub(ctx),
+        "ablation-energy" => ablation::energy(ctx),
+        "ablation-nodecap" => ablation::nodecap(ctx),
+        "ablations" => {
+            let mut out = String::new();
+            for id in ABLATION_IDS {
+                out.push_str(&format!("\n================ {id} ================\n"));
+                out.push_str(&run(ctx, id)?);
+            }
+            Ok(out)
+        }
+        "all" => {
+            let mut out = String::new();
+            for id in ALL_IDS {
+                out.push_str(&format!("\n================ {id} ================\n"));
+                out.push_str(&run(ctx, id)?);
+            }
+            Ok(out)
+        }
+        other => Err(anyhow::anyhow!(
+            "unknown experiment {other}; known: {:?} or 'all'",
+            ALL_IDS
+        )),
+    }
+}

@@ -1,0 +1,85 @@
+//! Fig. 1 (power time series) and Fig. 2 (spike CDF + distribution
+//! vector construction).
+
+use crate::experiments::ExperimentContext;
+use crate::features::spike_vector;
+use crate::report::{bar, line_plot, table};
+use crate::sim::dvfs::DvfsMode;
+
+/// Fig. 1: power behaviour of LLaMA3-8B inference and LSMS over two
+/// iterations — spikes above TDP, phase structure, LSMS idle floors.
+pub fn fig1(ctx: &mut ExperimentContext) -> anyhow::Result<String> {
+    let tdp = ctx.config.node.gpu.tdp_w;
+    let mut out = String::new();
+    for (name, iters) in [("llama3-infer-b32", 2usize), ("lsms", 2)] {
+        let w = ctx
+            .registry
+            .by_name(name)
+            .ok_or_else(|| anyhow::anyhow!("missing {name}"))?
+            .clone();
+        let mut w2 = w.clone();
+        w2.iterations = iters;
+        let p = ctx.profile_workload(&w2, DvfsMode::Uncapped);
+        let t: Vec<f64> = (0..p.trace.len())
+            .map(|i| i as f64 * p.trace.sample_dt_ms)
+            .collect();
+        let watts = p.trace.watts.clone();
+        out.push_str(&format!(
+            "--- {name} ({} iterations, TDP {tdp:.0} W, peak {:.0} W, p50 {:.0} W) ---\n",
+            iters,
+            p.trace.peak(),
+            p.trace.percentile(0.5),
+        ));
+        let tdp_line = vec![tdp; t.len()];
+        out.push_str(&line_plot(
+            &t,
+            &[("power (W)", watts), ("TDP", tdp_line)],
+            100,
+            16,
+        ));
+        out.push_str(&format!(
+            "frac above TDP: {:.1}%   spikes to {:.2}x TDP\n\n",
+            p.trace.frac_above_tdp() * 100.0,
+            p.trace.peak() / tdp
+        ));
+    }
+    out.push_str(
+        "Expected shape (paper Fig. 1): LLaMA3 spikes throughout each iteration\n\
+         (hot prefill, cooler decode); LSMS has infrequent high-magnitude bursts\n\
+         with the GPU near idle (~170 W) in between.\n",
+    );
+    Ok(out)
+}
+
+/// Fig. 2: cumulative spike distribution for LLaMA3 inference and the
+/// resulting bin-0.1 spike vector v.
+pub fn fig2(ctx: &mut ExperimentContext) -> anyhow::Result<String> {
+    let p = ctx.profile("llama3-infer-b32", DvfsMode::Uncapped)?;
+    let c = ctx.config.minos.default_bin_size;
+    let sv = spike_vector(&p.trace, c);
+
+    let grid: Vec<f64> = (0..=30).map(|i| 0.5 + i as f64 * 0.05).collect();
+    let cdf = p.trace.cdf_rel(&grid);
+    let mut out = String::from("Cumulative power distribution (r = P/TDP):\n");
+    out.push_str(&line_plot(&grid, &[("CDF", cdf)], 80, 12));
+
+    out.push_str(&format!(
+        "\nSpike vector v (bin size c = {c}): {} spike samples\n",
+        sv.total
+    ));
+    let active = 15.min(sv.v.len());
+    let rows: Vec<Vec<String>> = (0..active)
+        .map(|j| {
+            let lo = 0.5 + j as f64 * c;
+            vec![
+                format!("[{:.2}, {:.2})", lo, lo + c),
+                format!("{:.3}", sv.v[j]),
+                bar(sv.v[j], 0.5, 40),
+            ]
+        })
+        .collect();
+    out.push_str(&table(&["bin (xTDP)", "v_j", ""], &rows));
+    let tail: f64 = sv.v[active..].iter().sum();
+    out.push_str(&format!("mass above bin {active}: {tail:.4}\n"));
+    Ok(out)
+}

@@ -1,0 +1,164 @@
+//! Feature extraction (§4.1.1 / §4.2) — native Rust implementations.
+//!
+//! These mirror the L1/L2 semantics *exactly* (same clipping, same
+//! normalization, same 64-slot layout) so the PJRT artifacts and the
+//! native fallback are interchangeable; `runtime::artifacts` cross-checks
+//! them at load time and the test-suite asserts allclose agreement.
+
+use crate::trace::PowerTrace;
+
+/// Fixed feature width shared with the AOT artifacts (shapes.py NBINS).
+pub const NBINS: usize = 64;
+/// Spike-detection threshold in units of TDP (§4.1.1 step 1).
+pub const SPIKE_LO: f64 = 0.5;
+
+/// Normalized spike-magnitude distribution vector **v** (§4.1.1).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpikeVector {
+    pub v: Vec<f64>,
+    /// Total number of spike samples (r ≥ 0.5).
+    pub total: f64,
+    /// Bin width c used to build this vector.
+    pub bin_width: f64,
+}
+
+impl SpikeVector {
+    pub fn zeros(bin_width: f64) -> Self {
+        SpikeVector {
+            v: vec![0.0; NBINS],
+            total: 0.0,
+            bin_width,
+        }
+    }
+
+    /// Fraction-weighted bins sum to 1 when any spike exists.
+    pub fn sum(&self) -> f64 {
+        self.v.iter().sum()
+    }
+
+    pub fn is_zero(&self) -> bool {
+        self.total == 0.0
+    }
+}
+
+/// Extract the spike vector from an EMA-filtered trace (§4.1.1 steps 1–4).
+///
+/// Identical arithmetic to `kernels/ref.py::spike_features_ref` modulo
+/// the EMA (already applied by `PowerTrace::from_raw`): detect samples
+/// with r ≥ 0.5, bin index `floor((r−0.5)/c)` clipped to [0, 63],
+/// normalize by the spike count.
+pub fn spike_vector(trace: &PowerTrace, bin_width: f64) -> SpikeVector {
+    assert!(bin_width > 0.0);
+    let mut counts = vec![0.0f64; NBINS];
+    let mut total: f64 = 0.0;
+    for &w in &trace.watts {
+        let r = w / trace.tdp_w;
+        if r >= SPIKE_LO {
+            let idx = ((r - SPIKE_LO) / bin_width).floor();
+            let idx = (idx.max(0.0) as usize).min(NBINS - 1);
+            counts[idx] += 1.0;
+            total += 1.0;
+        }
+    }
+    let denom = total.max(1.0);
+    SpikeVector {
+        v: counts.into_iter().map(|c| c / denom).collect(),
+        total,
+        bin_width,
+    }
+}
+
+/// Spike vector computed from relative samples directly (tests / PJRT
+/// cross-checks where the trace is already r = P/TDP).
+pub fn spike_vector_rel(rel: &[f64], bin_width: f64) -> SpikeVector {
+    let t = PowerTrace::from_watts(rel.to_vec(), 1.0, 1.0);
+    spike_vector(&t, bin_width)
+}
+
+/// 2-D utilization point (§4.2) — App SM% / App DRAM%.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct UtilPoint {
+    pub sm: f64,
+    pub dram: f64,
+}
+
+impl UtilPoint {
+    pub fn new(sm: f64, dram: f64) -> Self {
+        UtilPoint { sm, dram }
+    }
+
+    pub fn as_array(&self) -> [f64; 2] {
+        [self.sm, self.dram]
+    }
+
+    pub fn euclidean(&self, other: &UtilPoint) -> f64 {
+        ((self.sm - other.sm).powi(2) + (self.dram - other.dram).powi(2)).sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn trace(rel: &[f64]) -> PowerTrace {
+        PowerTrace::from_watts(rel.iter().map(|r| r * 750.0).collect(), 1.5, 750.0)
+    }
+
+    #[test]
+    fn bins_and_normalizes() {
+        // r values: 0.55 (bin 0), 0.65 (bin 1), 1.25 (bin 7), 0.3 (none)
+        let t = trace(&[0.55, 0.65, 1.25, 0.3]);
+        let sv = spike_vector(&t, 0.1);
+        assert_eq!(sv.total, 3.0);
+        assert!((sv.v[0] - 1.0 / 3.0).abs() < 1e-12);
+        assert!((sv.v[1] - 1.0 / 3.0).abs() < 1e-12);
+        assert!((sv.v[7] - 1.0 / 3.0).abs() < 1e-12);
+        assert!((sv.sum() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn no_spikes_zero_vector() {
+        let t = trace(&[0.2, 0.3, 0.49]);
+        let sv = spike_vector(&t, 0.1);
+        assert!(sv.is_zero());
+        assert_eq!(sv.sum(), 0.0);
+    }
+
+    #[test]
+    fn clips_into_top_slot() {
+        let t = trace(&[50.0]);
+        let sv = spike_vector(&t, 0.1);
+        assert_eq!(sv.v[NBINS - 1], 1.0);
+    }
+
+    #[test]
+    fn boundary_sample_at_threshold_counts() {
+        let t = trace(&[0.5]);
+        let sv = spike_vector(&t, 0.1);
+        assert_eq!(sv.total, 1.0);
+        assert_eq!(sv.v[0], 1.0);
+    }
+
+    #[test]
+    fn bin_width_changes_granularity_not_mass() {
+        let t = trace(&[0.55, 0.72, 0.95, 1.31, 1.62]);
+        for c in [0.05, 0.1, 0.15, 0.2, 0.3] {
+            let sv = spike_vector(&t, c);
+            assert!((sv.sum() - 1.0).abs() < 1e-12, "c={c}");
+            assert_eq!(sv.total, 5.0);
+        }
+        // finer bins spread the mass over at least as many slots
+        let fine = spike_vector(&t, 0.05);
+        let coarse = spike_vector(&t, 0.3);
+        let nz = |s: &SpikeVector| s.v.iter().filter(|&&x| x > 0.0).count();
+        assert!(nz(&fine) >= nz(&coarse));
+    }
+
+    #[test]
+    fn util_point_euclidean() {
+        let a = UtilPoint::new(3.0, 4.0);
+        let b = UtilPoint::new(0.0, 0.0);
+        assert!((a.euclidean(&b) - 5.0).abs() < 1e-12);
+        assert_eq!(a.euclidean(&a), 0.0);
+    }
+}

@@ -1,0 +1,58 @@
+//! # Minos — classifying performance & power of GPU workloads on HPC clusters
+//!
+//! Reproduction of *Minos: Systematically Classifying Performance and Power
+//! Characteristics of GPU Workloads on HPC Clusters* (SIGMETRICS 2026,
+//! DOI 10.1145/3805644) as a three-layer Rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the coordination layer: a discrete-time GPU
+//!   cluster simulator substrate (the paper's MI300X/A100 testbeds are not
+//!   available; see `DESIGN.md` for the substitution argument), the
+//!   telemetry pipeline, hierarchical / K-Means clustering drivers, the
+//!   paper's Algorithm 1 frequency-cap selector, the Guerreiro et al.
+//!   baseline, a power-aware job scheduler, and the experiment harness
+//!   that regenerates every table and figure of the paper.
+//! * **L2 (python/compile/model.py)** — the JAX analytics graph (feature
+//!   extraction, pairwise distances, Lloyd steps, percentiles), lowered
+//!   once to HLO text in `artifacts/`.
+//! * **L1 (python/compile/kernels/)** — Pallas kernels for the numeric
+//!   hot-spots, lowered inside the L2 modules.
+//!
+//! Python never runs on the request path: the [`runtime`] module loads the
+//! AOT artifacts via PJRT (CPU) and the rest of the crate is pure Rust.
+//!
+//! ## Quick tour
+//!
+//! ```no_run
+//! use minos::config::GpuSpec;
+//! use minos::sim::profiler::{profile, ProfileRequest};
+//! use minos::sim::dvfs::DvfsMode;
+//! use minos::workloads;
+//!
+//! let spec = GpuSpec::mi300x();
+//! let registry = workloads::registry();
+//! let wl = registry.by_name("llama3-infer-b32").unwrap();
+//! let prof = profile(&ProfileRequest::new(&spec, wl, DvfsMode::Uncapped));
+//! println!("p90 power = {:.0} W", prof.trace.percentile(0.90));
+//! ```
+//!
+//! The `minos` binary exposes the same functionality as a CLI:
+//! `minos experiment fig3`, `minos select-freq --workload faiss-b4096`, …
+
+pub mod baselines;
+pub mod benchkit;
+pub mod clustering;
+pub mod config;
+pub mod coordinator;
+pub mod experiments;
+pub mod features;
+pub mod minos;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod trace;
+pub mod util;
+pub mod workloads;
+
+pub use crate::minos::algorithm::{Objective, SelectOptimalFreq};
+pub use config::{GpuSpec, MinosParams, SimParams};
+pub use trace::PowerTrace;

@@ -1,0 +1,311 @@
+//! `minos` — CLI for the Minos reproduction (hand-rolled argument
+//! parsing; the vendored build has no clap).
+//!
+//! USAGE:
+//!   minos [--config FILE] <command> [args]
+//!
+//! COMMANDS:
+//!   list                              list the workload registry
+//!   profile <workload> [--cap MHZ | --pin MHZ]
+//!   classify <workload>               nearest neighbors + features
+//!   select-freq <workload>            Algorithm 1, both objectives
+//!   experiment <id>                   fig1..fig12, table1, table2,
+//!                                     headline, all
+//!   serve [--jobs a,b,c] [--iterations N]
+//!   verify-artifacts                  PJRT vs native cross-check
+
+use minos::config::Config;
+use minos::coordinator::{Job, PowerAwareScheduler, SchedulerConfig};
+use minos::experiments::{self, ExperimentContext};
+use minos::minos::algorithm::{Objective, SelectOptimalFreq, TargetProfile};
+use minos::report::table;
+use minos::runtime::MinosRuntime;
+use minos::sim::dvfs::DvfsMode;
+
+const USAGE: &str = "usage: minos [--config FILE] <list|profile|classify|select-freq|experiment|serve|verify-artifacts> [args]
+  profile <workload> [--cap MHZ | --pin MHZ]
+  classify <workload>
+  select-freq <workload>
+  experiment <fig1..fig12|ablation-*|table1|table2|headline|all|ablations>
+  classify-trace <power.csv> [--tdp W] [--sm PCT --dram PCT]
+  serve [--jobs a,b,c] [--iterations N]";
+
+struct Args {
+    items: Vec<String>,
+}
+
+impl Args {
+    fn flag(&mut self, name: &str) -> Option<String> {
+        if let Some(i) = self.items.iter().position(|a| a == name) {
+            if i + 1 < self.items.len() {
+                let v = self.items.remove(i + 1);
+                self.items.remove(i);
+                return Some(v);
+            }
+        }
+        None
+    }
+
+    fn next(&mut self) -> Option<String> {
+        if self.items.is_empty() {
+            None
+        } else {
+            Some(self.items.remove(0))
+        }
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut args = Args {
+        items: std::env::args().skip(1).collect(),
+    };
+    let config = match args.flag("--config") {
+        Some(p) => Config::from_file(&p)?,
+        None => Config::default(),
+    };
+    let cmd = args.next().unwrap_or_else(|| {
+        eprintln!("{USAGE}");
+        std::process::exit(2);
+    });
+
+    match cmd.as_str() {
+        "list" => {
+            let reg = minos::workloads::registry();
+            let rows: Vec<Vec<String>> = reg
+                .all()
+                .iter()
+                .map(|w| {
+                    vec![
+                        w.name.clone(),
+                        w.domain.label().to_string(),
+                        w.suite.clone(),
+                        w.config.clone(),
+                        w.expected_pwr.map(|c| c.label().to_string()).unwrap_or("-".into()),
+                        w.expected_perf.map(|c| c.label().to_string()).unwrap_or("-".into()),
+                        if w.in_reference_set { "ref" } else { "case-study" }.into(),
+                    ]
+                })
+                .collect();
+            println!(
+                "{}",
+                table(&["name", "domain", "suite", "config", "pwr", "perf", "role"], &rows)
+            );
+        }
+        "profile" => {
+            let cap = args.flag("--cap").and_then(|v| v.parse::<f64>().ok());
+            let pin = args.flag("--pin").and_then(|v| v.parse::<f64>().ok());
+            let workload = args.next().ok_or_else(|| anyhow::anyhow!(USAGE))?;
+            let mode = match (cap, pin) {
+                (Some(f), _) => DvfsMode::Cap(f),
+                (_, Some(f)) => DvfsMode::Pin(f),
+                _ => DvfsMode::Uncapped,
+            };
+            let mut ctx = ExperimentContext::new(config);
+            let p = ctx.profile(&workload, mode)?;
+            println!("workload   : {} [{}]", p.workload, p.mode_label);
+            println!("samples    : {} @ {:.1} ms", p.trace.len(), p.trace.sample_dt_ms);
+            println!("iter time  : {:.1} ms", p.iter_time_ms);
+            println!("mean power : {:.0} W", p.trace.mean());
+            println!(
+                "p50/p90/p99: {:.0}/{:.0}/{:.0} W  (TDP {:.0} W)",
+                p.trace.percentile(0.50),
+                p.trace.percentile(0.90),
+                p.trace.percentile(0.99),
+                p.trace.tdp_w
+            );
+            println!(
+                "peak       : {:.0} W ({:.2}x TDP)",
+                p.trace.peak(),
+                p.trace.peak() / p.trace.tdp_w
+            );
+            println!(">TDP frac  : {:.1}%", p.trace.frac_above_tdp() * 100.0);
+            println!("app util   : SM {:.1}%  DRAM {:.1}%", p.app_sm_util, p.app_dram_util);
+            println!("energy     : {:.0} J", p.energy_j);
+        }
+        "classify" => {
+            let workload = args.next().ok_or_else(|| anyhow::anyhow!(USAGE))?;
+            let mut ctx = ExperimentContext::new(config);
+            let w = ctx
+                .registry
+                .by_name(&workload)
+                .ok_or_else(|| anyhow::anyhow!("unknown workload {workload}"))?
+                .clone();
+            let p = ctx.profile(&workload, DvfsMode::Uncapped)?;
+            let bins = ctx.config.minos.bin_sizes.clone();
+            let t = TargetProfile::from_profile(&w.app, &p, &bins);
+            let params = ctx.config.minos.clone();
+            let rs = ctx.refset().clone();
+            let sel = SelectOptimalFreq::new(&rs, &params);
+            let c = sel.choose_bin_size(&t);
+            println!("bin size (ChooseBinSize): {c}");
+            if let Some((nn, d)) = sel.pwr_neighbor(&t, c) {
+                println!("power neighbor : {} (cosine {d:.3})", nn.name);
+            }
+            if let Some((nn, d)) = sel.util_neighbor(&t) {
+                println!("perf neighbor  : {} (euclid {d:.2})", nn.name);
+            }
+            println!(
+                "utilization    : SM {:.1}% DRAM {:.1}%  | p90 {:.2}xTDP  mean {:.0} W",
+                t.util.sm, t.util.dram, t.p_default[1], t.mean_power_w
+            );
+        }
+        "select-freq" => {
+            let workload = args.next().ok_or_else(|| anyhow::anyhow!(USAGE))?;
+            let mut ctx = ExperimentContext::new(config);
+            let w = ctx
+                .registry
+                .by_name(&workload)
+                .ok_or_else(|| anyhow::anyhow!("unknown workload {workload}"))?
+                .clone();
+            let p = ctx.profile(&workload, DvfsMode::Uncapped)?;
+            let bins = ctx.config.minos.bin_sizes.clone();
+            let t = TargetProfile::from_profile(&w.app, &p, &bins);
+            let params = ctx.config.minos.clone();
+            let rs = ctx.refset().clone();
+            let sel = SelectOptimalFreq::new(&rs, &params);
+            for obj in [Objective::PowerCentric, Objective::PerfCentric] {
+                if let Some(plan) = sel.select(&t, obj) {
+                    println!(
+                        "{:?}: cap {:.0} MHz  (pwr NN {} @{:.3}, perf NN {} @{:.2}; bin {}; pred q {:.2}xTDP, pred slowdown {:+.1}%)",
+                        obj,
+                        plan.f_cap_mhz,
+                        plan.pwr_neighbor,
+                        plan.pwr_distance,
+                        plan.util_neighbor,
+                        plan.util_distance,
+                        plan.chosen_bin_size,
+                        plan.predicted_quantile_rel,
+                        plan.predicted_perf_degr * 100.0
+                    );
+                }
+            }
+        }
+        "classify-trace" => {
+            // Classify REAL telemetry: a CSV power trace (watts per line
+            // or t_ms,watts), optional utilization counters.
+            let tdp = args
+                .flag("--tdp")
+                .and_then(|v| v.parse().ok())
+                .unwrap_or(config.node.gpu.tdp_w);
+            let sm = args.flag("--sm").and_then(|v| v.parse::<f64>().ok());
+            let dram = args.flag("--dram").and_then(|v| v.parse::<f64>().ok());
+            let path = args.next().ok_or_else(|| anyhow::anyhow!(USAGE))?;
+            let trace = minos::trace::import::load_power_csv(&path, config.sim.sample_dt_ms, tdp)?;
+            println!(
+                "trace: {} samples @ {:.2} ms, mean {:.0} W, p90 {:.2}xTDP, peak {:.2}xTDP",
+                trace.len(),
+                trace.sample_dt_ms,
+                trace.mean(),
+                trace.percentile_rel(0.90),
+                trace.peak() / tdp
+            );
+            let mut ctx = ExperimentContext::new(config);
+            let params = ctx.config.minos.clone();
+            let rs = ctx.refset().clone();
+            // build a TargetProfile by hand (no simulator profile)
+            let vectors: Vec<_> = params
+                .bin_sizes
+                .iter()
+                .map(|&c| minos::features::spike_vector(&trace, c))
+                .collect();
+            let q = trace.percentiles_rel(&[0.50, 0.90, 0.95, 0.99]);
+            let t = TargetProfile {
+                name: path.clone(),
+                app: format!("external:{path}"),
+                vectors,
+                util: minos::features::UtilPoint::new(sm.unwrap_or(0.0), dram.unwrap_or(0.0)),
+                mean_power_w: trace.mean(),
+                p_default: [q[0], q[1], q[2], q[3]],
+                profiling_cost_s: trace.duration_ms() / 1000.0,
+            };
+            let sel = SelectOptimalFreq::new(&rs, &params);
+            let c = sel.choose_bin_size(&t);
+            println!("bin size (ChooseBinSize): {c}");
+            if let Some((nn, d)) = sel.pwr_neighbor(&t, c) {
+                let (f, pred) = sel.cap_power_centric(nn);
+                println!(
+                    "power neighbor : {} (cosine {d:.3}) -> PowerCentric cap {f:.0} MHz (pred p90 {pred:.2}xTDP)",
+                    nn.name
+                );
+            }
+            if sm.is_some() && dram.is_some() {
+                if let Some((nn, d)) = sel.util_neighbor(&t) {
+                    let (f, pred) = sel.cap_perf_centric(nn);
+                    println!(
+                        "perf neighbor  : {} (euclid {d:.2}) -> PerfCentric cap {f:.0} MHz (pred slowdown {:+.1}%)",
+                        nn.name,
+                        pred * 100.0
+                    );
+                }
+            } else {
+                println!("perf neighbor  : (pass --sm and --dram to enable the utilization classifier)");
+            }
+        }
+        "experiment" => {
+            let id = args.next().ok_or_else(|| anyhow::anyhow!(USAGE))?;
+            let mut ctx = ExperimentContext::new(config);
+            let report = experiments::run(&mut ctx, &id)?;
+            println!("{report}");
+        }
+        "serve" => {
+            let jobs = args
+                .flag("--jobs")
+                .unwrap_or_else(|| "faiss-b4096,qwen15-moe-b32,sdxl-b64,lsms".to_string());
+            let iterations = args
+                .flag("--iterations")
+                .and_then(|v| v.parse().ok())
+                .unwrap_or(3usize);
+            let mut ctx = ExperimentContext::new(config.clone());
+            let refset = ctx.refset().clone();
+            let cfg = SchedulerConfig {
+                node: config.node.clone(),
+                sim: config.sim.clone(),
+                minos: config.minos.clone(),
+                sim_ms_per_wall_ms: 0.0,
+            };
+            let sched = PowerAwareScheduler::new(cfg, refset);
+            let list: Vec<&str> = jobs.split(',').map(|s| s.trim()).collect();
+            for (i, wl) in list.iter().enumerate() {
+                let objective = if wl.contains("infer") || wl.contains("faiss") {
+                    Objective::PerfCentric
+                } else {
+                    Objective::PowerCentric
+                };
+                sched.submit(Job {
+                    id: i as u64,
+                    workload: wl.to_string(),
+                    objective,
+                    iterations,
+                })?;
+            }
+            let outcomes = sched.collect(list.len());
+            sched.shutdown();
+            for o in &outcomes {
+                println!(
+                    "job {:>2} {:<24} gpu{} cap {:.0} MHz  p90 {:.0} W (pred {:.0})  iter {:.1} ms  [{}]",
+                    o.job.id,
+                    o.job.workload,
+                    o.gpu,
+                    o.f_cap_mhz,
+                    o.observed_p90_w,
+                    o.predicted_p90_w,
+                    o.iter_time_ms,
+                    if o.classification_cached { "cached" } else { "profiled" }
+                );
+            }
+            println!("\n{}", sched.metrics().summary());
+        }
+        "verify-artifacts" => {
+            let rt = MinosRuntime::auto();
+            println!("backend: {}", rt.backend_name());
+            for (name, dev) in rt.verify()? {
+                println!("  {name:<18} max |pjrt - native| = {dev:.3e}");
+            }
+        }
+        other => {
+            eprintln!("unknown command '{other}'\n{USAGE}");
+            std::process::exit(2);
+        }
+    }
+    Ok(())
+}

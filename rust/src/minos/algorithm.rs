@@ -1,0 +1,341 @@
+//! Algorithm 1 — SELECT_OPTIMAL_FREQ.
+//!
+//! Given a *single* profile of a new workload at the default (uncapped)
+//! frequency, find its nearest power neighbor (cosine over spike
+//! vectors) and nearest utilization neighbor (euclidean over the 2-D
+//! utilization plane) in the reference set, then reuse the neighbors'
+//! frequency-scaling data to pick a cap:
+//!
+//! * `CapPowerCentric` — highest cap at which the power neighbor's p90
+//!   (or p95/p99) relative power stays below `power_bound_x`×TDP.
+//! * `CapPerfCentric` — lowest cap at which the utilization neighbor's
+//!   slowdown stays within `perf_bound_frac`.
+//!
+//! `ChooseBinSize` is the §7.4/§4.1.2 offline step: over a small
+//! candidate set of bin sizes, pick the one minimizing the p90
+//! prediction error `|p90(T) − p90(NN_c(T))|` at the default frequency.
+
+use crate::config::MinosParams;
+use crate::features::{spike_vector, SpikeVector, UtilPoint};
+use crate::minos::reference_set::{ReferenceEntry, ReferenceSet};
+use crate::clustering::metrics::cosine_distance;
+use crate::sim::profiler::Profile;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Objective {
+    /// Bound p-quantile power spikes; tolerate slowdown (§7.1.1).
+    PowerCentric,
+    /// Bound slowdown; minimize spikes subject to that (§7.1.2).
+    PerfCentric,
+}
+
+/// What Minos knows about a new workload after ONE default-frequency
+/// profiling run.
+#[derive(Debug, Clone)]
+pub struct TargetProfile {
+    pub name: String,
+    pub app: String,
+    /// Spike vectors at every candidate bin size.
+    pub vectors: Vec<SpikeVector>,
+    pub util: UtilPoint,
+    pub mean_power_w: f64,
+    /// Observed default-frequency percentiles (×TDP): p50/p90/p95/p99.
+    pub p_default: [f64; 4],
+    /// Cost of the single profiling run (s) — savings accounting.
+    pub profiling_cost_s: f64,
+}
+
+impl TargetProfile {
+    pub fn from_profile(app: &str, p: &Profile, bin_sizes: &[f64]) -> Self {
+        TargetProfile {
+            name: p.workload.clone(),
+            app: app.to_string(),
+            vectors: bin_sizes.iter().map(|&c| spike_vector(&p.trace, c)).collect(),
+            util: UtilPoint::new(p.app_sm_util, p.app_dram_util),
+            mean_power_w: p.trace.mean(),
+            p_default: {
+                let q = p.trace.percentiles_rel(&[0.50, 0.90, 0.95, 0.99]);
+                [q[0], q[1], q[2], q[3]]
+            },
+            profiling_cost_s: p.profiling_cost_s,
+        }
+    }
+
+    /// Treat an already-profiled reference entry as a "new" workload —
+    /// the hold-one-out evaluation path (§7.2).
+    pub fn from_entry(e: &crate::minos::reference_set::ReferenceEntry) -> Self {
+        let u = e.scaling.uncapped();
+        TargetProfile {
+            name: e.name.clone(),
+            app: e.app.clone(),
+            vectors: e.vectors.clone(),
+            util: e.util,
+            mean_power_w: e.mean_power_w,
+            p_default: [u.p50_rel, u.p90_rel, u.p95_rel, u.p99_rel],
+            profiling_cost_s: u.profiling_cost_s,
+        }
+    }
+
+    pub fn vector_for(&self, bin_width: f64) -> Option<&SpikeVector> {
+        self.vectors
+            .iter()
+            .find(|v| (v.bin_width - bin_width).abs() < 1e-9)
+    }
+
+    pub fn quantile(&self, q: f64) -> f64 {
+        if q >= 0.99 {
+            self.p_default[3]
+        } else if q >= 0.95 {
+            self.p_default[2]
+        } else if q >= 0.90 {
+            self.p_default[1]
+        } else {
+            self.p_default[0]
+        }
+    }
+}
+
+/// The outcome of Algorithm 1 for one target workload.
+#[derive(Debug, Clone)]
+pub struct FreqPlan {
+    pub target: String,
+    pub objective: Objective,
+    pub chosen_bin_size: f64,
+    pub pwr_neighbor: String,
+    pub pwr_distance: f64,
+    pub util_neighbor: String,
+    pub util_distance: f64,
+    pub f_pwr_mhz: f64,
+    pub f_perf_mhz: f64,
+    /// The cap actually selected for the requested objective.
+    pub f_cap_mhz: f64,
+    /// Predicted quantile power (×TDP) at `f_pwr_mhz` (neighbor's value).
+    pub predicted_quantile_rel: f64,
+    /// Predicted slowdown at `f_perf_mhz` (neighbor's value).
+    pub predicted_perf_degr: f64,
+}
+
+/// Algorithm 1 driver bound to a reference set.
+pub struct SelectOptimalFreq<'a> {
+    pub refset: &'a ReferenceSet,
+    pub params: MinosParams,
+}
+
+impl<'a> SelectOptimalFreq<'a> {
+    pub fn new(refset: &'a ReferenceSet, params: &MinosParams) -> Self {
+        SelectOptimalFreq {
+            refset,
+            params: params.clone(),
+        }
+    }
+
+    /// GetPwrNeighbor: nearest reference entry by cosine distance over
+    /// the spike vectors at bin size `c`.  Excludes the target's own app.
+    pub fn pwr_neighbor(
+        &self,
+        target: &TargetProfile,
+        c: f64,
+    ) -> Option<(&'a ReferenceEntry, f64)> {
+        let tv = target.vector_for(c)?;
+        self.refset
+            .power_entries(Some(&target.app))
+            .into_iter()
+            .filter_map(|e| {
+                e.vector_for(c)
+                    .map(|ev| (e, cosine_distance(&tv.v, &ev.v)))
+            })
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+    }
+
+    /// GetUtilNeighbor: nearest entry in the (SM, DRAM) plane.
+    pub fn util_neighbor(&self, target: &TargetProfile) -> Option<(&'a ReferenceEntry, f64)> {
+        self.refset
+            .util_entries(Some(&target.app))
+            .into_iter()
+            .map(|e| (e, target.util.euclidean(&e.util)))
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+    }
+
+    /// ChooseBinSize: pick the candidate c minimizing the default-
+    /// frequency p90 prediction error against the c-nearest neighbor.
+    pub fn choose_bin_size(&self, target: &TargetProfile) -> f64 {
+        let q = self.params.power_quantile;
+        let mut best = (self.params.default_bin_size, f64::INFINITY);
+        for &c in &self.refset.bin_sizes {
+            if let Some((nn, _)) = self.pwr_neighbor(target, c) {
+                let err = (target.quantile(q)
+                    - nn.scaling.uncapped().quantile_rel(q))
+                .abs();
+                if err < best.1 {
+                    best = (c, err);
+                }
+            }
+        }
+        best.0
+    }
+
+    /// CapPowerCentric: highest frequency (descending scan) at which the
+    /// neighbor's quantile power is below the bound.  Falls back to the
+    /// lowest swept frequency if the bound is never met.
+    pub fn cap_power_centric(&self, neighbor: &ReferenceEntry) -> (f64, f64) {
+        self.cap_power_centric_q(neighbor, self.params.power_quantile)
+    }
+
+    /// Same with an explicit quantile (p90/p95/p99 — Fig. 10).
+    pub fn cap_power_centric_q(&self, neighbor: &ReferenceEntry, q: f64) -> (f64, f64) {
+        let bound = self.params.power_bound_x;
+        let mut pts: Vec<_> = neighbor.scaling.points.iter().collect();
+        pts.sort_by(|a, b| b.f_mhz.partial_cmp(&a.f_mhz).unwrap());
+        for p in &pts {
+            if p.quantile_rel(q) < bound {
+                return (p.f_mhz, p.quantile_rel(q));
+            }
+        }
+        let last = pts.last().unwrap();
+        (last.f_mhz, last.quantile_rel(q))
+    }
+
+    /// CapPerfCentric: lowest frequency (ascending scan) at which the
+    /// neighbor's slowdown is within the bound.
+    pub fn cap_perf_centric(&self, neighbor: &ReferenceEntry) -> (f64, f64) {
+        let bound = self.params.perf_bound_frac;
+        let base = neighbor.scaling.uncapped().iter_time_ms;
+        let mut pts: Vec<_> = neighbor.scaling.points.iter().collect();
+        pts.sort_by(|a, b| a.f_mhz.partial_cmp(&b.f_mhz).unwrap());
+        for p in &pts {
+            // §7.2.2: operators impose a minimum allowable frequency to
+            // eliminate low-frequency outliers.
+            if p.f_mhz < self.params.perf_min_cap_mhz {
+                continue;
+            }
+            let degr = p.iter_time_ms / base - 1.0;
+            if degr <= bound {
+                return (p.f_mhz, degr);
+            }
+        }
+        let last = pts.last().unwrap();
+        (last.f_mhz, last.iter_time_ms / base - 1.0)
+    }
+
+    /// Main: the full Algorithm 1.
+    pub fn select(&self, target: &TargetProfile, objective: Objective) -> Option<FreqPlan> {
+        let c = self.choose_bin_size(target);
+        let (rp, dp) = self.pwr_neighbor(target, c)?;
+        let (ru, du) = self.util_neighbor(target)?;
+        let (f_pwr, pred_q) = self.cap_power_centric(rp);
+        let (f_perf, pred_d) = self.cap_perf_centric(ru);
+        let f_cap = match objective {
+            Objective::PowerCentric => f_pwr,
+            Objective::PerfCentric => f_perf,
+        };
+        Some(FreqPlan {
+            target: target.name.clone(),
+            objective,
+            chosen_bin_size: c,
+            pwr_neighbor: rp.name.clone(),
+            pwr_distance: dp,
+            util_neighbor: ru.name.clone(),
+            util_distance: du,
+            f_pwr_mhz: f_pwr,
+            f_perf_mhz: f_perf,
+            f_cap_mhz: f_cap,
+            predicted_quantile_rel: pred_q,
+            predicted_perf_degr: pred_d,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{GpuSpec, SimParams};
+    use crate::sim::dvfs::DvfsMode;
+    use crate::sim::profiler::{profile, ProfileRequest};
+    use crate::workloads;
+
+    fn setup() -> (ReferenceSet, MinosParams) {
+        let spec = GpuSpec::mi300x();
+        let sim = SimParams::default();
+        let minos = MinosParams::default();
+        let reg = workloads::registry();
+        let picks: Vec<&workloads::Workload> = ["sdxl-b64", "milc-6", "lammps-8x8x16"]
+            .iter()
+            .map(|n| reg.by_name(n).unwrap())
+            .collect();
+        (ReferenceSet::build(&spec, &sim, &minos, &picks), minos)
+    }
+
+    fn target(name: &str) -> TargetProfile {
+        let spec = GpuSpec::mi300x();
+        let reg = workloads::registry();
+        let w = reg.by_name(name).unwrap();
+        let p = profile(&ProfileRequest::new(&spec, w, DvfsMode::Uncapped));
+        TargetProfile::from_profile(&w.app, &p, &MinosParams::default().bin_sizes)
+    }
+
+    #[test]
+    fn faiss_matches_sdxl_not_milc() {
+        let (rs, params) = setup();
+        let sel = SelectOptimalFreq::new(&rs, &params);
+        let t = target("faiss-b4096");
+        // At fine bins FAISS's distribution is engineered to mirror
+        // SD-XL's; coarse bins can tie with LAMMPS's plateau (both are
+        // High-spike) — which is exactly why ChooseBinSize exists.
+        let (nn, d) = sel.pwr_neighbor(&t, 0.05).unwrap();
+        assert_eq!(nn.name, "sdxl-b64", "got {} at {}", nn.name, d);
+        assert!(d < 0.25, "distance {d}");
+        // and it must never match the memory-bound MILC-6
+        let (nn2, _) = sel.pwr_neighbor(&t, 0.1).unwrap();
+        assert_ne!(nn2.name, "milc-6");
+    }
+
+    #[test]
+    fn plan_has_consistent_caps() {
+        let (rs, params) = setup();
+        let sel = SelectOptimalFreq::new(&rs, &params);
+        let t = target("faiss-b4096");
+        let plan = sel.select(&t, Objective::PowerCentric).unwrap();
+        assert_eq!(plan.f_cap_mhz, plan.f_pwr_mhz);
+        let plan2 = sel.select(&t, Objective::PerfCentric).unwrap();
+        assert_eq!(plan2.f_cap_mhz, plan2.f_perf_mhz);
+        // predicted values honour the bounds by construction (unless the
+        // fallback lowest-frequency branch was taken)
+        if plan.predicted_quantile_rel < params.power_bound_x {
+            assert!(plan.f_pwr_mhz >= 1300.0);
+        }
+        assert!(plan2.predicted_perf_degr <= params.perf_bound_frac + 1e-9);
+    }
+
+    #[test]
+    fn power_centric_excludes_own_app() {
+        let (rs, params) = setup();
+        let sel = SelectOptimalFreq::new(&rs, &params);
+        // target sdxl-b64 itself: neighbor must not be sdxl (same app)
+        let t = target("sdxl-b64");
+        let (nn, _) = sel.pwr_neighbor(&t, 0.1).unwrap();
+        assert_ne!(nn.app, "sdxl");
+    }
+
+    #[test]
+    fn memory_bound_neighbor_gives_high_power_cap() {
+        let (rs, params) = setup();
+        let sel = SelectOptimalFreq::new(&rs, &params);
+        let milc6 = rs.by_name("milc-6").unwrap();
+        let (f, q) = sel.cap_power_centric(milc6);
+        // milc-6 never spikes above 1.3 TDP: uncapped is fine
+        assert_eq!(f, 2100.0);
+        assert!(q < params.power_bound_x);
+    }
+
+    #[test]
+    fn compute_bound_neighbor_gives_low_perf_cap_bound() {
+        let (rs, params) = setup();
+        let sel = SelectOptimalFreq::new(&rs, &params);
+        let milc6 = rs.by_name("milc-6").unwrap();
+        let (f, d) = sel.cap_perf_centric(milc6);
+        // memory-bound: the lowest *allowed* cap satisfies the 5% bound
+        // (the §7.2.2 frequency floor keeps us at perf_min_cap_mhz).
+        assert_eq!(f, params.perf_min_cap_mhz);
+        assert!(d <= params.perf_bound_frac);
+    }
+}

@@ -1,0 +1,10 @@
+//! Minos proper: the reference set (profiled workloads + frequency
+//! scaling data), Algorithm 1 (SELECT_OPTIMAL_FREQ), and the prediction
+//! / error-accounting helpers used by the §7 evaluation.
+
+pub mod algorithm;
+pub mod prediction;
+pub mod reference_set;
+
+pub use algorithm::{FreqPlan, Objective, SelectOptimalFreq, TargetProfile};
+pub use reference_set::{FreqPoint, ReferenceEntry, ReferenceSet, ScalingData};

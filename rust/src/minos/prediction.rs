@@ -1,0 +1,154 @@
+//! Prediction + error accounting for the §7 evaluation.
+//!
+//! Two error conventions from the paper:
+//! * **Bound error** (Fig. 8(b,d)): `observed − bound`, clamped at 0 —
+//!   positive values mean the chosen cap failed to keep the target
+//!   within the bound (e.g. +5.4% for Qwen1.5-MoE's p90).
+//! * **Neighbor error** (Figs. 9–12): relative difference between the
+//!   neighbor-predicted quantity and the target's observed quantity,
+//!   `|pred − obs| / obs` (the §7.4 Err formula, normalized).
+
+
+/// Outcome of validating one prediction against ground truth.
+#[derive(Debug, Clone)]
+pub struct Prediction {
+    pub target: String,
+    pub neighbor: String,
+    pub neighbor_distance: f64,
+    pub f_cap_mhz: f64,
+    pub predicted: f64,
+    pub observed: f64,
+}
+
+impl Prediction {
+    /// |pred − obs| / obs (fraction); 0 when both are 0.
+    pub fn rel_error(&self) -> f64 {
+        if self.observed.abs() < 1e-12 {
+            return self.predicted.abs().min(1.0);
+        }
+        (self.predicted - self.observed).abs() / self.observed.abs()
+    }
+
+    /// Observed minus bound, floored at 0 (Fig. 8 convention): how far
+    /// the observed value overshot the bound at the chosen cap.
+    pub fn bound_overshoot(&self, bound: f64) -> f64 {
+        (self.observed - bound).max(0.0)
+    }
+}
+
+/// Mean of a slice (0 for empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Profiling-time savings of one-shot profiling vs a full sweep
+/// (§7.1.3): `1 − T_f0 / Σ_f T_f`.
+pub fn profiling_savings(one_shot_s: f64, sweep_total_s: f64) -> f64 {
+    if sweep_total_s <= 0.0 {
+        return 0.0;
+    }
+    1.0 - one_shot_s / sweep_total_s
+}
+
+/// Histogram of errors binned by neighbor distance (Figs. 9(c)/11(c)).
+#[derive(Debug, Clone)]
+pub struct ErrorByDistance {
+    pub bin_edges: Vec<f64>,
+    /// Mean error per bin; NaN-free (empty bins report 0 with count 0).
+    pub mean_err: Vec<f64>,
+    pub counts: Vec<usize>,
+}
+
+pub fn error_by_distance(pairs: &[(f64, f64)], edges: &[f64]) -> ErrorByDistance {
+    assert!(edges.len() >= 2);
+    let nb = edges.len() - 1;
+    let mut sums = vec![0.0; nb];
+    let mut counts = vec![0usize; nb];
+    for &(d, e) in pairs {
+        for b in 0..nb {
+            let hi_ok = if b == nb - 1 { d <= edges[b + 1] } else { d < edges[b + 1] };
+            if d >= edges[b] && hi_ok {
+                sums[b] += e;
+                counts[b] += 1;
+                break;
+            }
+        }
+    }
+    ErrorByDistance {
+        bin_edges: edges.to_vec(),
+        mean_err: sums
+            .iter()
+            .zip(&counts)
+            .map(|(s, &c)| if c > 0 { s / c as f64 } else { 0.0 })
+            .collect(),
+        counts,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rel_error_basic() {
+        let p = Prediction {
+            target: "t".into(),
+            neighbor: "n".into(),
+            neighbor_distance: 0.1,
+            f_cap_mhz: 1500.0,
+            predicted: 1.2,
+            observed: 1.3,
+        };
+        assert!((p.rel_error() - 0.1 / 1.3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rel_error_zero_observed() {
+        let p = Prediction {
+            target: "t".into(),
+            neighbor: "n".into(),
+            neighbor_distance: 0.1,
+            f_cap_mhz: 1500.0,
+            predicted: 0.0,
+            observed: 0.0,
+        };
+        assert_eq!(p.rel_error(), 0.0);
+    }
+
+    #[test]
+    fn bound_overshoot_clamps() {
+        let mut p = Prediction {
+            target: "t".into(),
+            neighbor: "n".into(),
+            neighbor_distance: 0.0,
+            f_cap_mhz: 1500.0,
+            predicted: 1.25,
+            observed: 1.37,
+        };
+        assert!((p.bound_overshoot(1.3) - 0.07).abs() < 1e-12);
+        p.observed = 1.1;
+        assert_eq!(p.bound_overshoot(1.3), 0.0);
+    }
+
+    #[test]
+    fn savings_formula() {
+        // 9-point sweep of equal cost: one-shot saves 8/9 ≈ 89%.
+        let s = profiling_savings(1.0, 9.0);
+        assert!((s - 8.0 / 9.0).abs() < 1e-12);
+        assert_eq!(profiling_savings(1.0, 0.0), 0.0);
+    }
+
+    #[test]
+    fn error_histogram_bins() {
+        let pairs = vec![(0.05, 0.1), (0.07, 0.3), (0.5, 0.8), (1.0, 0.4)];
+        let h = error_by_distance(&pairs, &[0.0, 0.1, 0.6, 1.0]);
+        assert_eq!(h.counts, vec![2, 1, 1]);
+        assert!((h.mean_err[0] - 0.2).abs() < 1e-12);
+        assert!((h.mean_err[1] - 0.8).abs() < 1e-12);
+        assert!((h.mean_err[2] - 0.4).abs() < 1e-12); // edge-inclusive last bin
+    }
+}

@@ -1,0 +1,439 @@
+//! The Minos reference set: for every reference workload, its spike
+//! vectors (one per candidate bin size), its utilization point, and its
+//! frequency-scaling data from the cap sweep (§5.3.3) — everything
+//! Algorithm 1 needs to serve predictions for new workloads.
+
+use crate::config::{GpuSpec, MinosParams, SimParams};
+use crate::features::{spike_vector, SpikeVector, UtilPoint};
+use crate::sim::dvfs::DvfsMode;
+use crate::sim::profiler::{profile, Profile, ProfileRequest};
+use crate::trace::PowerTrace;
+use crate::workloads::Workload;
+
+/// Scaling observations at one frequency cap.
+#[derive(Debug, Clone)]
+pub struct FreqPoint {
+    pub f_mhz: f64,
+    /// Relative-power percentiles (×TDP) of the filtered trace.
+    pub p50_rel: f64,
+    pub p90_rel: f64,
+    pub p95_rel: f64,
+    pub p99_rel: f64,
+    pub peak_rel: f64,
+    pub mean_w: f64,
+    pub iter_time_ms: f64,
+    pub frac_above_tdp: f64,
+    /// Simulated profiling wall-clock (s) — §7.1.3 accounting.
+    pub profiling_cost_s: f64,
+}
+
+impl FreqPoint {
+    pub fn from_profile(f_mhz: f64, p: &Profile) -> Self {
+        // one sort for all four quantiles (§Perf)
+        let q = p.trace.percentiles_rel(&[0.50, 0.90, 0.95, 0.99]);
+        FreqPoint {
+            f_mhz,
+            p50_rel: q[0],
+            p90_rel: q[1],
+            p95_rel: q[2],
+            p99_rel: q[3],
+            peak_rel: p.trace.peak() / p.trace.tdp_w,
+            mean_w: p.trace.mean(),
+            iter_time_ms: p.iter_time_ms,
+            frac_above_tdp: p.trace.frac_above_tdp(),
+            profiling_cost_s: p.profiling_cost_s,
+        }
+    }
+
+    pub fn quantile_rel(&self, q: f64) -> f64 {
+        if q >= 0.99 {
+            self.p99_rel
+        } else if q >= 0.95 {
+            self.p95_rel
+        } else if q >= 0.90 {
+            self.p90_rel
+        } else {
+            self.p50_rel
+        }
+    }
+}
+
+/// Frequency-scaling record over the sweep (ascending f; last = uncapped).
+#[derive(Debug, Clone)]
+pub struct ScalingData {
+    pub points: Vec<FreqPoint>,
+}
+
+impl ScalingData {
+    pub fn uncapped(&self) -> &FreqPoint {
+        self.points.last().expect("empty scaling data")
+    }
+
+    pub fn at(&self, f_mhz: f64) -> Option<&FreqPoint> {
+        self.points.iter().find(|p| (p.f_mhz - f_mhz).abs() < 0.5)
+    }
+
+    /// Performance degradation at cap `f` relative to uncapped (fraction).
+    pub fn perf_degr_at(&self, f_mhz: f64) -> Option<f64> {
+        let base = self.uncapped().iter_time_ms;
+        self.at(f_mhz).map(|p| p.iter_time_ms / base - 1.0)
+    }
+
+    pub fn frequencies(&self) -> Vec<f64> {
+        self.points.iter().map(|p| p.f_mhz).collect()
+    }
+
+    /// Total profiling cost of the full sweep (s) — the denominator of
+    /// the §7.1.3 savings formula.
+    pub fn total_cost_s(&self) -> f64 {
+        self.points.iter().map(|p| p.profiling_cost_s).sum()
+    }
+}
+
+/// One reference workload, fully profiled.
+#[derive(Debug, Clone)]
+pub struct ReferenceEntry {
+    pub name: String,
+    pub app: String,
+    /// Spike vectors of the *uncapped* trace at each candidate bin size
+    /// (index-aligned with `ReferenceSet::bin_sizes`).
+    pub vectors: Vec<SpikeVector>,
+    pub util: UtilPoint,
+    pub mean_power_w: f64,
+    pub scaling: ScalingData,
+    /// Whether power telemetry exists (Lonestar6-only workloads have
+    /// utilization but no power vectors).
+    pub power_profiled: bool,
+}
+
+impl ReferenceEntry {
+    pub fn vector_for(&self, bin_width: f64) -> Option<&SpikeVector> {
+        self.vectors
+            .iter()
+            .find(|v| (v.bin_width - bin_width).abs() < 1e-9)
+    }
+}
+
+/// The full reference set plus the device/sim context it was built on.
+#[derive(Debug, Clone)]
+pub struct ReferenceSet {
+    pub spec: GpuSpec,
+    pub bin_sizes: Vec<f64>,
+    pub entries: Vec<ReferenceEntry>,
+    /// Fingerprint of the workload registry the set was built from —
+    /// lets on-disk caches invalidate when calibration changes.
+    pub registry_fingerprint: u64,
+}
+
+impl ReferenceSet {
+    /// Build by sweeping every given workload across the cap range.
+    /// This is the expensive offline step Minos amortizes (§4.3).
+    pub fn build(
+        spec: &GpuSpec,
+        sim: &SimParams,
+        minos: &MinosParams,
+        workloads: &[&Workload],
+    ) -> ReferenceSet {
+        let sweep = spec.sweep_frequencies();
+        let entries = workloads
+            .iter()
+            .map(|w| Self::build_entry(spec, sim, minos, w, &sweep))
+            .collect();
+        ReferenceSet {
+            spec: spec.clone(),
+            bin_sizes: minos.bin_sizes.clone(),
+            entries,
+            registry_fingerprint: crate::workloads::registry().fingerprint()
+                ^ crate::sim::SIM_MODEL_VERSION.wrapping_mul(0x9E3779B97F4A7C15),
+        }
+    }
+
+    fn build_entry(
+        spec: &GpuSpec,
+        sim: &SimParams,
+        minos: &MinosParams,
+        w: &Workload,
+        sweep: &[f64],
+    ) -> ReferenceEntry {
+        let mut points = Vec::with_capacity(sweep.len());
+        let mut uncapped_trace: Option<PowerTrace> = None;
+        let mut util = UtilPoint::new(0.0, 0.0);
+        let mut mean_w = 0.0;
+        for (i, &f) in sweep.iter().enumerate() {
+            let mode = if (f - spec.f_max_mhz).abs() < 0.5 {
+                DvfsMode::Uncapped
+            } else {
+                DvfsMode::Cap(f)
+            };
+            let p = profile(&ProfileRequest::new(spec, w, mode).with_params(sim));
+            points.push(FreqPoint::from_profile(f, &p));
+            if i == sweep.len() - 1 {
+                util = UtilPoint::new(p.app_sm_util, p.app_dram_util);
+                mean_w = p.trace.mean();
+                uncapped_trace = Some(p.trace);
+            }
+        }
+        let trace = uncapped_trace.expect("sweep must include uncapped");
+        let vectors = minos
+            .bin_sizes
+            .iter()
+            .map(|&c| spike_vector(&trace, c))
+            .collect();
+        ReferenceEntry {
+            name: w.name.clone(),
+            app: w.app.clone(),
+            vectors,
+            util,
+            mean_power_w: mean_w,
+            scaling: ScalingData { points },
+            power_profiled: w.power_profiled,
+        }
+    }
+
+    pub fn by_name(&self, name: &str) -> Option<&ReferenceEntry> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    /// Entries usable as power neighbors (power telemetry available),
+    /// optionally excluding one app (hold-one-out).
+    pub fn power_entries(&self, exclude_app: Option<&str>) -> Vec<&ReferenceEntry> {
+        self.entries
+            .iter()
+            .filter(|e| e.power_profiled)
+            .filter(|e| exclude_app.map(|a| e.app != a).unwrap_or(true))
+            .collect()
+    }
+
+    pub fn util_entries(&self, exclude_app: Option<&str>) -> Vec<&ReferenceEntry> {
+        self.entries
+            .iter()
+            .filter(|e| exclude_app.map(|a| e.app != a).unwrap_or(true))
+            .collect()
+    }
+
+    /// A copy with one app's entries removed — hold-one-out (§7.2).
+    pub fn without_app(&self, app: &str) -> ReferenceSet {
+        ReferenceSet {
+            spec: self.spec.clone(),
+            bin_sizes: self.bin_sizes.clone(),
+            entries: self
+                .entries
+                .iter()
+                .filter(|e| e.app != app)
+                .cloned()
+                .collect(),
+            registry_fingerprint: self.registry_fingerprint,
+        }
+    }
+
+    pub fn save(&self, path: &str) -> anyhow::Result<()> {
+        std::fs::write(path, self.to_json().dump())?;
+        Ok(())
+    }
+
+    pub fn load(path: &str) -> anyhow::Result<ReferenceSet> {
+        Self::from_json(&Json::parse(&std::fs::read_to_string(path)?)?)
+    }
+}
+
+// ---- JSON codec (in-tree; the vendored build has no serde) ----
+
+use crate::util::json::{arr, num, nums, obj, s, Json};
+
+impl FreqPoint {
+    fn to_json(&self) -> Json {
+        nums(&[
+            self.f_mhz,
+            self.p50_rel,
+            self.p90_rel,
+            self.p95_rel,
+            self.p99_rel,
+            self.peak_rel,
+            self.mean_w,
+            self.iter_time_ms,
+            self.frac_above_tdp,
+            self.profiling_cost_s,
+        ])
+    }
+
+    fn from_json(j: &Json) -> anyhow::Result<Self> {
+        let a = j
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("FreqPoint: expected array"))?;
+        anyhow::ensure!(a.len() == 10, "FreqPoint: expected 10 numbers");
+        let g = |i: usize| a[i].as_f64().unwrap_or(f64::NAN);
+        Ok(FreqPoint {
+            f_mhz: g(0),
+            p50_rel: g(1),
+            p90_rel: g(2),
+            p95_rel: g(3),
+            p99_rel: g(4),
+            peak_rel: g(5),
+            mean_w: g(6),
+            iter_time_ms: g(7),
+            frac_above_tdp: g(8),
+            profiling_cost_s: g(9),
+        })
+    }
+}
+
+impl ReferenceEntry {
+    fn to_json(&self) -> Json {
+        obj(vec![
+            ("name", s(&self.name)),
+            ("app", s(&self.app)),
+            (
+                "vectors",
+                arr(self
+                    .vectors
+                    .iter()
+                    .map(|v| {
+                        obj(vec![
+                            ("v", nums(&v.v)),
+                            ("total", num(v.total)),
+                            ("bin_width", num(v.bin_width)),
+                        ])
+                    })
+                    .collect()),
+            ),
+            ("sm", num(self.util.sm)),
+            ("dram", num(self.util.dram)),
+            ("mean_power_w", num(self.mean_power_w)),
+            (
+                "scaling",
+                arr(self.scaling.points.iter().map(|p| p.to_json()).collect()),
+            ),
+            ("power_profiled", Json::Bool(self.power_profiled)),
+        ])
+    }
+
+    fn from_json(j: &Json) -> anyhow::Result<Self> {
+        let vectors = j
+            .arr("vectors")?
+            .iter()
+            .map(|v| -> anyhow::Result<SpikeVector> {
+                Ok(SpikeVector {
+                    v: v.f64s("v")?,
+                    total: v.f("total")?,
+                    bin_width: v.f("bin_width")?,
+                })
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        let points = j
+            .arr("scaling")?
+            .iter()
+            .map(FreqPoint::from_json)
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        Ok(ReferenceEntry {
+            name: j.s("name")?,
+            app: j.s("app")?,
+            vectors,
+            util: UtilPoint::new(j.f("sm")?, j.f("dram")?),
+            mean_power_w: j.f("mean_power_w")?,
+            scaling: ScalingData { points },
+            power_profiled: j.b("power_profiled")?,
+        })
+    }
+}
+
+impl ReferenceSet {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("spec", self.spec.to_json()),
+            ("bin_sizes", nums(&self.bin_sizes)),
+            ("registry_fingerprint", s(&format!("{:016x}", self.registry_fingerprint))),
+            (
+                "entries",
+                arr(self.entries.iter().map(|e| e.to_json()).collect()),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<Self> {
+        Ok(ReferenceSet {
+            spec: GpuSpec::from_json(
+                j.get("spec").ok_or_else(|| anyhow::anyhow!("missing spec"))?,
+            )?,
+            bin_sizes: j.f64s("bin_sizes")?,
+            entries: j
+                .arr("entries")?
+                .iter()
+                .map(ReferenceEntry::from_json)
+                .collect::<anyhow::Result<Vec<_>>>()?,
+            registry_fingerprint: u64::from_str_radix(&j.s("registry_fingerprint")?, 16)?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads;
+
+    fn small_set() -> ReferenceSet {
+        let spec = GpuSpec::mi300x();
+        let sim = SimParams::default();
+        let minos = MinosParams::default();
+        let reg = workloads::registry();
+        let picks: Vec<&Workload> = ["sgemm", "milc-6"]
+            .iter()
+            .map(|n| reg.by_name(n).unwrap())
+            .collect();
+        ReferenceSet::build(&spec, &sim, &minos, &picks)
+    }
+
+    #[test]
+    fn build_and_query() {
+        let rs = small_set();
+        assert_eq!(rs.entries.len(), 2);
+        let e = rs.by_name("milc-6").unwrap();
+        assert_eq!(e.vectors.len(), MinosParams::default().bin_sizes.len());
+        assert_eq!(e.scaling.points.len(), 9);
+        assert!(e.scaling.uncapped().f_mhz > e.scaling.points[0].f_mhz);
+        assert!(e.util.sm > 0.0);
+    }
+
+    #[test]
+    fn percentiles_monotone_in_quantile() {
+        let rs = small_set();
+        for e in &rs.entries {
+            for p in &e.scaling.points {
+                assert!(p.p50_rel <= p.p90_rel + 1e-9);
+                assert!(p.p90_rel <= p.p95_rel + 1e-9);
+                assert!(p.p95_rel <= p.p99_rel + 1e-9);
+                assert!(p.p99_rel <= p.peak_rel + 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn compute_workload_iter_time_decreases_with_frequency() {
+        let rs = small_set();
+        let e = rs.by_name("sgemm").unwrap();
+        let first = e.scaling.points.first().unwrap();
+        let last = e.scaling.uncapped();
+        assert!(first.iter_time_ms > last.iter_time_ms);
+        assert_eq!(e.scaling.perf_degr_at(last.f_mhz).unwrap(), 0.0);
+        assert!(e.scaling.perf_degr_at(first.f_mhz).unwrap() > 0.05);
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let rs = small_set();
+        let path = std::env::temp_dir().join("minos_refset_test.json");
+        let path = path.to_str().unwrap();
+        rs.save(path).unwrap();
+        let back = ReferenceSet::load(path).unwrap();
+        assert_eq!(back.entries.len(), rs.entries.len());
+        assert_eq!(back.entries[0].name, rs.entries[0].name);
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn without_app_removes_all_variants() {
+        let rs = small_set();
+        let cut = rs.without_app("milc");
+        assert!(cut.by_name("milc-6").is_none());
+        assert!(cut.by_name("sgemm").is_some());
+    }
+}

@@ -1,0 +1,158 @@
+//! Plain-text report rendering: aligned tables, horizontal bars, and
+//! down-sampled ASCII line plots — enough to regenerate every table and
+//! figure of the paper as terminal output (and to diff in tests).
+
+/// Render an aligned table.
+pub fn table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let ncol = headers.len();
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate().take(ncol) {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let sep: String = widths
+        .iter()
+        .map(|w| "-".repeat(w + 2))
+        .collect::<Vec<_>>()
+        .join("+");
+    let fmt_row = |cells: &[String]| -> String {
+        cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!(" {:<w$} ", c, w = widths[i.min(ncol - 1)]))
+            .collect::<Vec<_>>()
+            .join("|")
+    };
+    let mut out = String::new();
+    out.push_str(&fmt_row(
+        &headers.iter().map(|h| h.to_string()).collect::<Vec<_>>(),
+    ));
+    out.push('\n');
+    out.push_str(&sep);
+    out.push('\n');
+    for row in rows {
+        out.push_str(&fmt_row(row));
+        out.push('\n');
+    }
+    out
+}
+
+/// Horizontal bar scaled to `max_width` chars.
+pub fn bar(value: f64, max_value: f64, max_width: usize) -> String {
+    if max_value <= 0.0 {
+        return String::new();
+    }
+    let n = ((value / max_value).clamp(0.0, 1.0) * max_width as f64).round() as usize;
+    "#".repeat(n)
+}
+
+/// Down-sampled ASCII line plot of one or more series sharing an x-grid.
+/// Each series is drawn with its own glyph on a `height`-row canvas.
+pub fn line_plot(
+    x: &[f64],
+    series: &[(&str, Vec<f64>)],
+    width: usize,
+    height: usize,
+) -> String {
+    if x.is_empty() || series.is_empty() {
+        return String::new();
+    }
+    let glyphs = ['*', 'o', '+', 'x', '@', '%', '&', '='];
+    let ymin = series
+        .iter()
+        .flat_map(|(_, ys)| ys.iter().cloned())
+        .fold(f64::INFINITY, f64::min);
+    let ymax = series
+        .iter()
+        .flat_map(|(_, ys)| ys.iter().cloned())
+        .fold(f64::NEG_INFINITY, f64::max);
+    let span = (ymax - ymin).max(1e-12);
+    let xmin = x[0];
+    let xmax = *x.last().unwrap();
+    let xspan = (xmax - xmin).max(1e-12);
+    let mut canvas = vec![vec![' '; width]; height];
+    for (si, (_, ys)) in series.iter().enumerate() {
+        let g = glyphs[si % glyphs.len()];
+        for (xi, &xv) in x.iter().enumerate() {
+            if xi >= ys.len() {
+                break;
+            }
+            let col = (((xv - xmin) / xspan) * (width - 1) as f64).round() as usize;
+            let row = (((ys[xi] - ymin) / span) * (height - 1) as f64).round() as usize;
+            let row = height - 1 - row.min(height - 1);
+            canvas[row][col.min(width - 1)] = g;
+        }
+    }
+    let mut out = String::new();
+    out.push_str(&format!("{ymax:>10.3} ┤"));
+    out.push_str(&canvas[0].iter().collect::<String>());
+    out.push('\n');
+    for row in canvas.iter().take(height - 1).skip(1) {
+        out.push_str("           │");
+        out.push_str(&row.iter().collect::<String>());
+        out.push('\n');
+    }
+    out.push_str(&format!("{ymin:>10.3} ┤"));
+    out.push_str(&canvas[height - 1].iter().collect::<String>());
+    out.push('\n');
+    out.push_str(&format!(
+        "            {:<w$.1}{:>w2$.1}\n",
+        xmin,
+        xmax,
+        w = width / 2,
+        w2 = width - width / 2
+    ));
+    for (si, (name, _)) in series.iter().enumerate() {
+        out.push_str(&format!("   {} {}\n", glyphs[si % glyphs.len()], name));
+    }
+    out
+}
+
+/// Percentage formatting helper.
+pub fn pct(x: f64) -> String {
+    format!("{:.1}%", x * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_aligns() {
+        let t = table(
+            &["name", "value"],
+            &[
+                vec!["a".into(), "1".into()],
+                vec!["longer-name".into(), "2.5".into()],
+            ],
+        );
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].contains("name"));
+        assert!(lines[2].contains('a'));
+        // all rows same width
+        assert_eq!(lines[2].len(), lines[3].len());
+    }
+
+    #[test]
+    fn bar_scales() {
+        assert_eq!(bar(5.0, 10.0, 10).len(), 5);
+        assert_eq!(bar(20.0, 10.0, 10).len(), 10); // clamped
+        assert_eq!(bar(0.0, 10.0, 10).len(), 0);
+    }
+
+    #[test]
+    fn line_plot_renders() {
+        let x: Vec<f64> = (0..20).map(|i| i as f64).collect();
+        let ys: Vec<f64> = x.iter().map(|v| v * v).collect();
+        let p = line_plot(&x, &[("sq", ys)], 40, 10);
+        assert!(p.contains('*'));
+        assert!(p.contains("sq"));
+    }
+
+    #[test]
+    fn pct_formats() {
+        assert_eq!(pct(0.041), "4.1%");
+    }
+}

@@ -1,0 +1,562 @@
+//! Typed wrappers over the five AOT artifacts + native fallbacks.
+//!
+//! | artifact          | PJRT entry                          | native twin                       |
+//! |-------------------|-------------------------------------|-----------------------------------|
+//! | `spike_features`  | raw watts → spike vectors           | `features::spike_vector` (+EMA)   |
+//! | `pairwise_cosine` | vectors → distance matrix           | `clustering::metrics::pairwise`   |
+//! | `kmeans_step`     | one Lloyd iteration                 | `clustering::kmeans::lloyd_step`  |
+//! | `percentiles`     | relative power → p50/p90/p95/p99    | `trace::percentile`               |
+//! | `util_aggregate`  | per-kernel triples → app utilization| `sim::profiler::weighted_utilization` |
+//!
+//! Padding semantics (validated against artifacts/manifest.json):
+//! * traces zero-pad to (32, 16384) — zero watts is never a spike;
+//! * percentile rows pad with `1e30` and carry a true-count vector;
+//! * distance-matrix rows zero-pad to 48 (sliced off afterwards);
+//! * K-Means points/centroids carry explicit masks;
+//! * utilization rows pad with zero-duration kernels.
+
+use crate::clustering::kmeans::lloyd_step;
+use crate::clustering::metrics::{pairwise, Metric};
+use crate::features::{spike_vector_rel, SpikeVector, NBINS};
+use crate::runtime::client::{lit_f32, lit_i32, lit_scalar_f32, to_vec_f32, to_vec_i32, PjrtRuntime};
+use crate::sim::kernel::KernelProfile;
+use crate::trace::PowerTrace;
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
+
+const ARTIFACT_NAMES: [&str; 5] = [
+    "spike_features",
+    "pairwise_cosine",
+    "kmeans_step",
+    "percentiles",
+    "util_aggregate",
+];
+
+/// Shape constants shared with python/compile/shapes.py via the manifest.
+#[derive(Debug, Clone, Copy)]
+pub struct ShapeConsts {
+    pub trace_b: usize,
+    pub trace_t: usize,
+    pub nbins: usize,
+    pub ref_r: usize,
+    pub km_points: usize,
+    pub km_dim: usize,
+    pub km_k: usize,
+    pub util_kernels: usize,
+}
+
+impl Default for ShapeConsts {
+    fn default() -> Self {
+        ShapeConsts {
+            trace_b: 32,
+            trace_t: 16384,
+            nbins: 64,
+            ref_r: 48,
+            km_points: 48,
+            km_dim: 2,
+            km_k: 8,
+            util_kernels: 256,
+        }
+    }
+}
+
+enum Backend {
+    Pjrt(PjrtRuntime),
+    Native,
+}
+
+/// The classification runtime: PJRT-backed when artifacts are present,
+/// native otherwise.  All public methods produce identical results on
+/// either backend (to f32 tolerance); `verify()` checks that claim.
+pub struct MinosRuntime {
+    backend: Backend,
+    pub consts: ShapeConsts,
+    pub artifact_dir: Option<PathBuf>,
+}
+
+impl MinosRuntime {
+    /// Load artifacts from a directory (expects manifest.json + *.hlo.txt).
+    pub fn load(dir: &Path) -> anyhow::Result<Self> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).map_err(|e| {
+            anyhow::anyhow!("missing {manifest_path:?} (run `make artifacts`): {e}")
+        })?;
+        let manifest = Json::parse(&text)?;
+        let c = manifest
+            .get("constants")
+            .ok_or_else(|| anyhow::anyhow!("manifest missing constants"))?;
+        let consts = ShapeConsts {
+            trace_b: c.u("TRACE_B")?,
+            trace_t: c.u("TRACE_T")?,
+            nbins: c.u("NBINS")?,
+            ref_r: c.u("REF_R")?,
+            km_points: c.u("KM_POINTS")?,
+            km_dim: c.u("KM_DIM")?,
+            km_k: c.u("KM_K")?,
+            util_kernels: c.u("UTIL_KERNELS")?,
+        };
+        anyhow::ensure!(
+            consts.nbins == NBINS,
+            "artifact NBINS {} != native NBINS {NBINS}",
+            consts.nbins
+        );
+        let mut rt = PjrtRuntime::cpu()?;
+        for name in ARTIFACT_NAMES {
+            let file = manifest
+                .get("artifacts")
+                .and_then(|a| a.get(name))
+                .and_then(|e| e.get("file"))
+                .and_then(|f| f.as_str())
+                .map(|s| s.to_string())
+                .unwrap_or_else(|| format!("{name}.hlo.txt"));
+            rt.load(name, &dir.join(file))?;
+        }
+        Ok(MinosRuntime {
+            backend: Backend::Pjrt(rt),
+            consts,
+            artifact_dir: Some(dir.to_path_buf()),
+        })
+    }
+
+    /// Try `artifacts/` relative to cwd, falling back to native.
+    pub fn auto() -> Self {
+        let dir = Path::new("artifacts");
+        match Self::load(dir) {
+            Ok(rt) => rt,
+            Err(_) => Self::native(),
+        }
+    }
+
+    /// Pure-Rust backend.
+    pub fn native() -> Self {
+        MinosRuntime {
+            backend: Backend::Native,
+            consts: ShapeConsts::default(),
+            artifact_dir: None,
+        }
+    }
+
+    pub fn is_pjrt(&self) -> bool {
+        matches!(self.backend, Backend::Pjrt(_))
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        match self.backend {
+            Backend::Pjrt(_) => "pjrt-cpu",
+            Backend::Native => "native",
+        }
+    }
+
+    // ------------------------------------------------------------ features
+
+    /// Spike vectors for a batch of traces at one bin width.
+    ///
+    /// PJRT path: traces are chunked to (TRACE_B, TRACE_T) tiles; rows
+    /// longer than TRACE_T are split and the per-chunk histograms merged
+    /// by spike count (the α-filter restarts at chunk boundaries, a
+    /// ≤1-sample-in-16384 discrepancy).
+    pub fn spike_features(
+        &self,
+        traces: &[&PowerTrace],
+        bin_width: f64,
+    ) -> anyhow::Result<Vec<SpikeVector>> {
+        match &self.backend {
+            Backend::Native => Ok(traces
+                .iter()
+                .map(|t| crate::features::spike_vector(t, bin_width))
+                .collect()),
+            Backend::Pjrt(rt) => {
+                // (trace index, chunk) work items
+                let t_len = self.consts.trace_t;
+                let b = self.consts.trace_b;
+                let mut items: Vec<(usize, Vec<f32>, f32)> = Vec::new();
+                for (ti, tr) in traces.iter().enumerate() {
+                    for chunk in tr.raw_watts.chunks(t_len) {
+                        let mut row: Vec<f32> = chunk.iter().map(|&w| w as f32).collect();
+                        row.resize(t_len, 0.0);
+                        items.push((ti, row, tr.tdp_w as f32));
+                    }
+                }
+                let mut acc: Vec<(Vec<f64>, f64)> =
+                    vec![(vec![0.0; self.consts.nbins], 0.0); traces.len()];
+                for batch in items.chunks(b) {
+                    let mut flat = Vec::with_capacity(b * t_len);
+                    let mut tdps = vec![1.0f32; b];
+                    for (i, (_, row, tdp)) in batch.iter().enumerate() {
+                        flat.extend_from_slice(row);
+                        tdps[i] = *tdp;
+                    }
+                    flat.resize(b * t_len, 0.0);
+                    let out = rt.execute(
+                        "spike_features",
+                        &[
+                            lit_f32(&flat, &[b as i64, t_len as i64])?,
+                            lit_f32(&tdps, &[b as i64])?,
+                            lit_scalar_f32(bin_width as f32),
+                        ],
+                    )?;
+                    let v = to_vec_f32(&out[0])?;
+                    let totals = to_vec_f32(&out[1])?;
+                    for (i, (ti, _, _)) in batch.iter().enumerate() {
+                        let total = totals[i] as f64;
+                        let row = &v[i * self.consts.nbins..(i + 1) * self.consts.nbins];
+                        for (a, &x) in acc[*ti].0.iter_mut().zip(row) {
+                            *a += x as f64 * total;
+                        }
+                        acc[*ti].1 += total;
+                    }
+                }
+                Ok(acc
+                    .into_iter()
+                    .map(|(sums, total)| {
+                        let denom = total.max(1.0);
+                        SpikeVector {
+                            v: sums.into_iter().map(|s| s / denom).collect(),
+                            total,
+                            bin_width,
+                        }
+                    })
+                    .collect())
+            }
+        }
+    }
+
+    // ------------------------------------------------------------ distances
+
+    /// Pairwise cosine distance over spike vectors (n ≤ REF_R uses the
+    /// PJRT Gram kernel; larger sets fall back to native).
+    pub fn pairwise_cosine(&self, vecs: &[&SpikeVector]) -> anyhow::Result<Vec<Vec<f64>>> {
+        let rows: Vec<Vec<f64>> = vecs.iter().map(|v| v.v.clone()).collect();
+        match &self.backend {
+            Backend::Pjrt(rt) if rows.len() <= self.consts.ref_r => {
+                let r = self.consts.ref_r;
+                let n = self.consts.nbins;
+                let mut flat = vec![0.0f32; r * n];
+                for (i, row) in rows.iter().enumerate() {
+                    for (j, &x) in row.iter().enumerate() {
+                        flat[i * n + j] = x as f32;
+                    }
+                }
+                let out = rt.execute(
+                    "pairwise_cosine",
+                    &[lit_f32(&flat, &[r as i64, n as i64])?],
+                )?;
+                let d = to_vec_f32(&out[0])?;
+                Ok((0..rows.len())
+                    .map(|i| {
+                        (0..rows.len())
+                            .map(|j| (d[i * r + j] as f64).max(0.0))
+                            .collect()
+                    })
+                    .collect())
+            }
+            _ => Ok(pairwise(Metric::Cosine, &rows)),
+        }
+    }
+
+    // ------------------------------------------------------------- kmeans
+
+    /// One Lloyd iteration (PJRT when sizes fit, else native).
+    pub fn kmeans_step(
+        &self,
+        points: &[Vec<f64>],
+        centroids: &[Vec<f64>],
+    ) -> anyhow::Result<(Vec<usize>, Vec<Vec<f64>>)> {
+        match &self.backend {
+            Backend::Pjrt(rt)
+                if points.len() <= self.consts.km_points
+                    && centroids.len() <= self.consts.km_k
+                    && points[0].len() == self.consts.km_dim =>
+            {
+                let (p, d, k) = (self.consts.km_points, self.consts.km_dim, self.consts.km_k);
+                let mut x = vec![0.0f32; p * d];
+                let mut xm = vec![0.0f32; p];
+                for (i, pt) in points.iter().enumerate() {
+                    xm[i] = 1.0;
+                    for (j, &v) in pt.iter().enumerate() {
+                        x[i * d + j] = v as f32;
+                    }
+                }
+                let mut c = vec![0.0f32; k * d];
+                let mut cm = vec![0.0f32; k];
+                for (i, ct) in centroids.iter().enumerate() {
+                    cm[i] = 1.0;
+                    for (j, &v) in ct.iter().enumerate() {
+                        c[i * d + j] = v as f32;
+                    }
+                }
+                let out = rt.execute(
+                    "kmeans_step",
+                    &[
+                        lit_f32(&x, &[p as i64, d as i64])?,
+                        lit_f32(&xm, &[p as i64])?,
+                        lit_f32(&c, &[k as i64, d as i64])?,
+                        lit_f32(&cm, &[k as i64])?,
+                    ],
+                )?;
+                let assign = to_vec_i32(&out[0])?;
+                let cnew = to_vec_f32(&out[1])?;
+                Ok((
+                    assign[..points.len()].iter().map(|&a| a as usize).collect(),
+                    (0..centroids.len())
+                        .map(|i| (0..d).map(|j| cnew[i * d + j] as f64).collect())
+                        .collect(),
+                ))
+            }
+            _ => Ok(lloyd_step(points, centroids)),
+        }
+    }
+
+    // ---------------------------------------------------------- percentiles
+
+    /// p50/p90/p95/p99 of relative power for a batch of traces.
+    pub fn percentiles(&self, traces: &[&PowerTrace]) -> anyhow::Result<Vec<[f64; 4]>> {
+        match &self.backend {
+            Backend::Native => Ok(traces
+                .iter()
+                .map(|t| {
+                    let q = t.percentiles_rel(&[0.50, 0.90, 0.95, 0.99]);
+                    [q[0], q[1], q[2], q[3]]
+                })
+                .collect()),
+            Backend::Pjrt(rt) => {
+                let (b, t_len) = (self.consts.trace_b, self.consts.trace_t);
+                let mut out_all = Vec::with_capacity(traces.len());
+                for batch in traces.chunks(b) {
+                    let mut flat = vec![1e30f32; b * t_len];
+                    let mut counts = vec![1i32; b];
+                    for (i, tr) in batch.iter().enumerate() {
+                        // PJRT sort path needs rows ≤ TRACE_T; longer
+                        // traces use the native percentile directly.
+                        anyhow::ensure!(
+                            tr.watts.len() <= t_len,
+                            "trace longer than TRACE_T; use native percentiles"
+                        );
+                        counts[i] = tr.watts.len().max(1) as i32;
+                        for (j, &w) in tr.watts.iter().enumerate() {
+                            flat[i * t_len + j] = (w / tr.tdp_w) as f32;
+                        }
+                    }
+                    let out = rt.execute(
+                        "percentiles",
+                        &[
+                            lit_f32(&flat, &[b as i64, t_len as i64])?,
+                            lit_i32(&counts, &[b as i64])?,
+                        ],
+                    )?;
+                    let v = to_vec_f32(&out[0])?;
+                    for i in 0..batch.len() {
+                        out_all.push([
+                            v[i * 4] as f64,
+                            v[i * 4 + 1] as f64,
+                            v[i * 4 + 2] as f64,
+                            v[i * 4 + 3] as f64,
+                        ]);
+                    }
+                }
+                Ok(out_all)
+            }
+        }
+    }
+
+    // ------------------------------------------------------ util aggregate
+
+    /// App-level (SM, DRAM) utilization from per-kernel profiles.
+    pub fn util_aggregate(&self, apps: &[&[KernelProfile]]) -> anyhow::Result<Vec<(f64, f64)>> {
+        match &self.backend {
+            Backend::Native => Ok(apps
+                .iter()
+                .map(|ks| crate::sim::profiler::weighted_utilization(ks))
+                .collect()),
+            Backend::Pjrt(rt) => {
+                let (b, kmax) = (self.consts.trace_b, self.consts.util_kernels);
+                let mut out_all = Vec::with_capacity(apps.len());
+                for batch in apps.chunks(b) {
+                    let mut flat = vec![0.0f32; b * kmax * 3];
+                    for (i, ks) in batch.iter().enumerate() {
+                        anyhow::ensure!(
+                            ks.len() <= kmax,
+                            "app has {} kernels > UTIL_KERNELS {kmax}",
+                            ks.len()
+                        );
+                        for (j, k) in ks.iter().enumerate() {
+                            let o = (i * kmax + j) * 3;
+                            flat[o] = k.duration_ms as f32;
+                            flat[o + 1] = k.sm_util as f32;
+                            flat[o + 2] = k.dram_util as f32;
+                        }
+                    }
+                    let out = rt.execute(
+                        "util_aggregate",
+                        &[lit_f32(&flat, &[b as i64, kmax as i64, 3])?],
+                    )?;
+                    let v = to_vec_f32(&out[0])?;
+                    for i in 0..batch.len() {
+                        out_all.push((v[i * 2] as f64, v[i * 2 + 1] as f64));
+                    }
+                }
+                Ok(out_all)
+            }
+        }
+    }
+
+    // ---------------------------------------------------------- validation
+
+    /// Cross-check PJRT vs native on deterministic pseudo-random inputs;
+    /// returns the max abs deviation per artifact.  No-op (zeros) on the
+    /// native backend.
+    pub fn verify(&self) -> anyhow::Result<Vec<(String, f64)>> {
+        if !self.is_pjrt() {
+            return Ok(ARTIFACT_NAMES.iter().map(|n| (n.to_string(), 0.0)).collect());
+        }
+        let mut rng = crate::sim::rng::Rng::new(0xA11CE);
+        let mut report = Vec::new();
+
+        // spike_features vs native spike_vector
+        let traces: Vec<PowerTrace> = (0..3)
+            .map(|_| {
+                let w: Vec<f64> = (0..4096).map(|_| rng.range(0.0, 1500.0)).collect();
+                let mut t = PowerTrace::from_watts(w, 1.5, 750.0);
+                // make raw/filtered consistent the way from_raw would
+                let raw = t.raw_watts.clone();
+                let mut prev = raw[0];
+                t.watts = raw
+                    .iter()
+                    .map(|&x| {
+                        let f = 0.5 * (x + prev);
+                        prev = x;
+                        f
+                    })
+                    .collect();
+                t
+            })
+            .collect();
+        let refs: Vec<&PowerTrace> = traces.iter().collect();
+        let got = self.spike_features(&refs, 0.1)?;
+        let mut worst = 0.0f64;
+        let mut flips = 0.0f64;
+        for (g, t) in got.iter().zip(&traces) {
+            let want = crate::features::spike_vector(t, 0.1);
+            // Samples exactly at a bin edge may bin differently in f32 vs
+            // f64; allow those single-sample flips and report them
+            // separately from genuine distribution errors.
+            flips = flips.max((g.total - want.total).abs());
+            for (a, b) in g.v.iter().zip(&want.v) {
+                let dv = (a - b).abs();
+                // a one-sample flip moves 1/total of mass between bins
+                let allowance = 1.5 / want.total.max(1.0);
+                worst = worst.max((dv - allowance).max(0.0));
+            }
+        }
+        report.push(("spike_features".to_string(), worst));
+        report.push(("spike_features/boundary-flips".to_string(), flips));
+
+        // pairwise_cosine
+        let svs: Vec<SpikeVector> = (0..6)
+            .map(|_| {
+                let raw: Vec<f64> = (0..2000).map(|_| rng.range(0.0, 2.0)).collect();
+                spike_vector_rel(&raw, 0.1)
+            })
+            .collect();
+        let refs: Vec<&SpikeVector> = svs.iter().collect();
+        let got = self.pairwise_cosine(&refs)?;
+        let rows: Vec<Vec<f64>> = svs.iter().map(|v| v.v.clone()).collect();
+        let want = pairwise(Metric::Cosine, &rows);
+        let mut worst = 0.0f64;
+        for i in 0..rows.len() {
+            for j in 0..rows.len() {
+                worst = worst.max((got[i][j] - want[i][j]).abs());
+            }
+        }
+        report.push(("pairwise_cosine".to_string(), worst));
+
+        // kmeans_step
+        let pts: Vec<Vec<f64>> = (0..20)
+            .map(|_| vec![rng.range(0.0, 100.0), rng.range(0.0, 60.0)])
+            .collect();
+        let cents: Vec<Vec<f64>> = (0..3)
+            .map(|_| vec![rng.range(0.0, 100.0), rng.range(0.0, 60.0)])
+            .collect();
+        let (ga, gc) = self.kmeans_step(&pts, &cents)?;
+        let (wa, wc) = lloyd_step(&pts, &cents);
+        let mut worst = if ga == wa { 0.0f64 } else { 1.0 };
+        for (a, b) in gc.iter().flatten().zip(wc.iter().flatten()) {
+            worst = worst.max((a - b).abs());
+        }
+        report.push(("kmeans_step".to_string(), worst));
+
+        // percentiles
+        let refs: Vec<&PowerTrace> = traces.iter().collect();
+        let got = self.percentiles(&refs)?;
+        let mut worst = 0.0f64;
+        for (g, t) in got.iter().zip(&traces) {
+            let want = [
+                t.percentile_rel(0.50),
+                t.percentile_rel(0.90),
+                t.percentile_rel(0.95),
+                t.percentile_rel(0.99),
+            ];
+            for (a, b) in g.iter().zip(&want) {
+                worst = worst.max((a - b).abs());
+            }
+        }
+        report.push(("percentiles".to_string(), worst));
+
+        // util_aggregate
+        let apps: Vec<Vec<KernelProfile>> = (0..3)
+            .map(|ai| {
+                (0..5)
+                    .map(|ki| KernelProfile {
+                        name: format!("k{ai}_{ki}"),
+                        duration_ms: rng.range(0.1, 10.0),
+                        sm_util: rng.range(0.0, 100.0),
+                        dram_util: rng.range(0.0, 100.0),
+                    })
+                    .collect()
+            })
+            .collect();
+        let slices: Vec<&[KernelProfile]> = apps.iter().map(|a| a.as_slice()).collect();
+        let got = self.util_aggregate(&slices)?;
+        let mut worst = 0.0f64;
+        for (g, a) in got.iter().zip(&apps) {
+            let want = crate::sim::profiler::weighted_utilization(a);
+            worst = worst.max((g.0 - want.0).abs()).max((g.1 - want.1).abs());
+        }
+        report.push(("util_aggregate".to_string(), worst));
+
+        Ok(report)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_backend_always_available() {
+        let rt = MinosRuntime::native();
+        assert!(!rt.is_pjrt());
+        let t = PowerTrace::from_watts(vec![400.0, 800.0, 1000.0, 390.0], 1.5, 750.0);
+        let sv = rt.spike_features(&[&t], 0.1).unwrap();
+        assert_eq!(sv.len(), 1);
+        assert!(sv[0].total > 0.0);
+        let pc = rt.pairwise_cosine(&[&sv[0], &sv[0]]).unwrap();
+        assert!(pc[0][1].abs() < 1e-9);
+    }
+
+    #[test]
+    fn native_percentiles_match_trace() {
+        let rt = MinosRuntime::native();
+        let t = PowerTrace::from_watts((0..100).map(|i| i as f64 * 10.0).collect(), 1.5, 750.0);
+        let p = rt.percentiles(&[&t]).unwrap();
+        assert!((p[0][1] - t.percentile_rel(0.90)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn native_verify_reports_zeros() {
+        let rt = MinosRuntime::native();
+        let rep = rt.verify().unwrap();
+        assert!(rep.len() >= 5);
+        assert!(rep.iter().all(|(_, d)| *d == 0.0));
+    }
+}

@@ -1,0 +1,98 @@
+//! Thin wrapper over the `xla` crate: PJRT CPU client + HLO-text loading
+//! + executable cache.
+//!
+//! Interchange format is HLO **text**, not serialized HloModuleProto —
+//! jax ≥ 0.5 emits 64-bit instruction ids that xla_extension 0.5.1
+//! rejects; the text parser reassigns ids (see aot.py and
+//! /opt/xla-example/README.md).
+
+use std::collections::HashMap;
+use std::path::Path;
+
+/// A compiled artifact cache on one PJRT client.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl PjrtRuntime {
+    pub fn cpu() -> anyhow::Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        Ok(PjrtRuntime {
+            client,
+            executables: HashMap::new(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one HLO-text file under `name`.
+    pub fn load(&mut self, name: &str, path: &Path) -> anyhow::Result<()> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow::anyhow!("bad path"))?,
+        )
+        .map_err(|e| anyhow::anyhow!("parse {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {name}: {e:?}"))?;
+        self.executables.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.executables.contains_key(name)
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.executables.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// Execute `name` with the given literals; returns the elements of
+    /// the result tuple (aot.py lowers with return_tuple=True).
+    pub fn execute(&self, name: &str, inputs: &[xla::Literal]) -> anyhow::Result<Vec<xla::Literal>> {
+        let exe = self
+            .executables
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown artifact {name}"))?;
+        let bufs = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow::anyhow!("execute {name}: {e:?}"))?;
+        let lit = bufs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("readback {name}: {e:?}"))?;
+        lit.to_tuple().map_err(|e| anyhow::anyhow!("untuple {name}: {e:?}"))
+    }
+}
+
+/// Helpers for building literals from Rust slices.
+pub fn lit_f32(data: &[f32], dims: &[i64]) -> anyhow::Result<xla::Literal> {
+    let n: i64 = dims.iter().product();
+    anyhow::ensure!(n as usize == data.len(), "shape/data mismatch");
+    xla::Literal::vec1(data)
+        .reshape(dims)
+        .map_err(|e| anyhow::anyhow!("{e:?}"))
+}
+
+pub fn lit_i32(data: &[i32], dims: &[i64]) -> anyhow::Result<xla::Literal> {
+    let n: i64 = dims.iter().product();
+    anyhow::ensure!(n as usize == data.len(), "shape/data mismatch");
+    xla::Literal::vec1(data)
+        .reshape(dims)
+        .map_err(|e| anyhow::anyhow!("{e:?}"))
+}
+
+pub fn lit_scalar_f32(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+pub fn to_vec_f32(lit: &xla::Literal) -> anyhow::Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))
+}
+
+pub fn to_vec_i32(lit: &xla::Literal) -> anyhow::Result<Vec<i32>> {
+    lit.to_vec::<i32>().map_err(|e| anyhow::anyhow!("{e:?}"))
+}

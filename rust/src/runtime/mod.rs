@@ -1,0 +1,13 @@
+//! The PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the request path.
+//! Python is never invoked here — the artifacts are self-contained.
+//!
+//! Every artifact has a *native twin* in `features`/`clustering`/`trace`
+//! implementing identical arithmetic; [`MinosRuntime`] prefers PJRT when
+//! artifacts are available and falls back to native otherwise, and
+//! `verify()` cross-checks the two paths on random inputs.
+
+pub mod artifacts;
+pub mod client;
+
+pub use artifacts::MinosRuntime;

@@ -1,0 +1,242 @@
+//! The GPU PM firmware's DVFS loop (§2).
+//!
+//! Runs once per `pm_dt_ms` (≈1 ms, the granularity prior work observed).
+//! Three operating modes:
+//!
+//! * **Uncapped** — DVFS free in `[f_min, f_max]`.
+//! * **Cap(f)** — `f` is an *upper bound*; DVFS still moves freely below
+//!   it (the paper's frequency capping, the efficient option).
+//! * **Pin(f)** — the clock is held at `f` regardless of what the
+//!   workload needs; the PM only overrules the pin while the windowed
+//!   power exceeds TDP, returning to the pin as soon as it can (§2's
+//!   "the GPU PM can and does overrule this frequency pinning ... when
+//!   the TDP is exceeded").
+//!
+//! Besides the TDP governor, the controller tracks an *efficiency
+//! target*: for kernels with low compute-boundness it drifts the clock
+//! down toward what the memory system needs ("for a GPU kernel that is
+//! not very compute intensive, the PM controller will scale the SM
+//! frequency and voltage down").  This is precisely why capping beats
+//! pinning on mixed workloads — under a pin the low-intensity kernels
+//! are forced to a clock they cannot use, and each low→high transition
+//! then launches from a high-V/high-f point, spiking harder.
+
+use crate::config::GpuSpec;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum DvfsMode {
+    Uncapped,
+    /// Upper bound on the SM clock (MHz); DVFS free below.
+    Cap(f64),
+    /// Hold the SM clock at this value (MHz); TDP governor may overrule.
+    Pin(f64),
+}
+
+impl DvfsMode {
+    pub fn label(&self) -> String {
+        match self {
+            DvfsMode::Uncapped => "uncapped".into(),
+            DvfsMode::Cap(f) => format!("cap{f:.0}"),
+            DvfsMode::Pin(f) => format!("pin{f:.0}"),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct DvfsController {
+    spec: GpuSpec,
+    mode: DvfsMode,
+    f_mhz: f64,
+    /// Hysteresis band: raise the clock only when power is below this
+    /// fraction of TDP (avoids limit cycling at the boundary).
+    raise_below_frac: f64,
+}
+
+impl DvfsController {
+    pub fn new(spec: &GpuSpec, mode: DvfsMode) -> Self {
+        let f0 = match mode {
+            DvfsMode::Uncapped => spec.f_max_mhz,
+            DvfsMode::Cap(f) => f.min(spec.f_max_mhz).max(spec.f_min_mhz),
+            DvfsMode::Pin(f) => f.min(spec.f_max_mhz).max(spec.f_min_mhz),
+        };
+        DvfsController {
+            spec: spec.clone(),
+            mode,
+            f_mhz: f0,
+            raise_below_frac: 0.97,
+        }
+    }
+
+    pub fn frequency_mhz(&self) -> f64 {
+        self.f_mhz
+    }
+
+    pub fn mode(&self) -> DvfsMode {
+        self.mode
+    }
+
+    /// The highest clock this mode ever allows.
+    pub fn ceiling_mhz(&self) -> f64 {
+        match self.mode {
+            DvfsMode::Uncapped => self.spec.f_max_mhz,
+            DvfsMode::Cap(f) | DvfsMode::Pin(f) => {
+                f.min(self.spec.f_max_mhz).max(self.spec.f_min_mhz)
+            }
+        }
+    }
+
+    /// One firmware tick.  `avg_power_w` is the windowed mean power over
+    /// the last PM period; `neutral_frac` is the running kernel's
+    /// performance-neutral clock as a fraction of f_max (1 = needs the
+    /// full clock, 0 = idle/memory-bound).
+    pub fn step(&mut self, avg_power_w: f64, neutral_frac: f64) {
+        // The ms-scale firmware tolerates windowed power above TDP up to
+        // the sustained-excursion limit (governor_x × TDP); see config.
+        let limit = self.spec.tdp_w * self.spec.governor_x;
+        let step = self.spec.f_step_mhz;
+        let ceil = self.ceiling_mhz();
+
+        if avg_power_w > limit {
+            // Excursion governor: throttle proportionally.
+            let over = (avg_power_w - limit) / limit;
+            let steps = (1.0 + over * 8.0).floor();
+            self.f_mhz = (self.f_mhz - steps * step).max(self.spec.f_min_mhz);
+            return;
+        }
+
+        let target = match self.mode {
+            // Pin: climb straight back to the pin once power allows.
+            DvfsMode::Pin(_) => ceil,
+            // Cap/uncapped: efficiency-aware DVFS below the ceiling.
+            // The target interpolates with compute-boundness (cooler
+            // clocks for memory-leaning kernels) but NEVER drops below
+            // the kernel's roofline-neutral clock (5% margin), so the
+            // efficiency mechanism saves power without slowing anything
+            // down — the §2 behaviour ("scale the SM frequency and
+            // voltage down" for low-intensity kernels) minus the perf
+            // regression a naive target would cause.
+            DvfsMode::Uncapped | DvfsMode::Cap(_) => {
+                let cb = neutral_frac / (1.0 + neutral_frac);
+                let interp = self.spec.f_min_mhz
+                    + (ceil - self.spec.f_min_mhz) * (0.35 + 0.65 * cb);
+                let neutral_floor = neutral_frac * 1.05 * self.spec.f_max_mhz;
+                interp.max(neutral_floor).clamp(self.spec.f_min_mhz, ceil)
+            }
+        };
+
+        // Clock reslews are fast on real parts (µs-scale sequencers;
+        // only voltage ramps are slow) — allow a generous slew per tick
+        // so the clock tracks ms-scale kernel alternation.
+        let slew = step * 8.0;
+        if self.f_mhz < target && avg_power_w < self.raise_below_frac * limit {
+            self.f_mhz = (self.f_mhz + slew).min(target);
+        } else if self.f_mhz > target {
+            self.f_mhz = (self.f_mhz - slew).max(target);
+        }
+        // Snap to the step grid.
+        self.f_mhz = (self.f_mhz / step).round() * step;
+        self.f_mhz = self.f_mhz.clamp(self.spec.f_min_mhz, ceil);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> GpuSpec {
+        GpuSpec::mi300x()
+    }
+
+    #[test]
+    fn cap_is_never_exceeded() {
+        let s = spec();
+        let mut c = DvfsController::new(&s, DvfsMode::Cap(1500.0));
+        for _ in 0..1000 {
+            c.step(300.0, 1.0); // low power, compute-bound: wants to climb
+            assert!(c.frequency_mhz() <= 1500.0 + 1e-9);
+        }
+        assert_eq!(c.frequency_mhz(), 1500.0);
+    }
+
+    #[test]
+    fn governor_tolerates_sub_limit_excursions() {
+        // Windowed power above TDP but below governor_x×TDP must NOT
+        // throttle — this is what lets High-spike workloads sit at
+        // 1.2–1.4×TDP (Fig. 5(a)).
+        let s = spec();
+        let mut c = DvfsController::new(&s, DvfsMode::Uncapped);
+        let f0 = c.frequency_mhz();
+        for _ in 0..50 {
+            c.step(s.tdp_w * 1.3, 1.0);
+        }
+        assert_eq!(c.frequency_mhz(), f0);
+    }
+
+    #[test]
+    fn tdp_governor_throttles() {
+        let s = spec();
+        let mut c = DvfsController::new(&s, DvfsMode::Uncapped);
+        let f0 = c.frequency_mhz();
+        c.step(s.tdp_w * 1.6, 1.0);
+        assert!(c.frequency_mhz() < f0);
+        // Larger excursion throttles harder.
+        let mut c2 = DvfsController::new(&s, DvfsMode::Uncapped);
+        c2.step(s.tdp_w * 1.95, 1.0);
+        assert!(c2.frequency_mhz() < c.frequency_mhz());
+    }
+
+    #[test]
+    fn pin_returns_after_tdp_override() {
+        let s = spec();
+        let mut c = DvfsController::new(&s, DvfsMode::Pin(1900.0));
+        assert_eq!(c.frequency_mhz(), 1900.0);
+        c.step(s.tdp_w * 1.7, 0.2);
+        assert!(c.frequency_mhz() < 1900.0);
+        for _ in 0..100 {
+            c.step(s.tdp_w * 0.5, 0.2);
+        }
+        assert_eq!(c.frequency_mhz(), 1900.0);
+    }
+
+    #[test]
+    fn pin_ignores_efficiency_hint_cap_honors_it() {
+        let s = spec();
+        let mut pin = DvfsController::new(&s, DvfsMode::Pin(2100.0));
+        let mut cap = DvfsController::new(&s, DvfsMode::Cap(2100.0));
+        // Memory-bound kernel (cb = 0), low power.
+        for _ in 0..200 {
+            pin.step(400.0, 0.0);
+            cap.step(400.0, 0.0);
+        }
+        assert_eq!(pin.frequency_mhz(), 2100.0, "pin holds the clock");
+        assert!(
+            cap.frequency_mhz() < 1500.0,
+            "cap drifts down for memory-bound work, got {}",
+            cap.frequency_mhz()
+        );
+    }
+
+    #[test]
+    fn clock_stays_in_spec_range() {
+        let s = spec();
+        let mut c = DvfsController::new(&s, DvfsMode::Uncapped);
+        for i in 0..2000 {
+            let p = if i % 3 == 0 { s.tdp_w * 1.9 } else { 100.0 };
+            c.step(p, (i % 10) as f64 / 10.0);
+            assert!(c.frequency_mhz() >= s.f_min_mhz - 1e-9);
+            assert!(c.frequency_mhz() <= s.f_max_mhz + 1e-9);
+        }
+    }
+
+    #[test]
+    fn frequency_snaps_to_step_grid() {
+        let s = spec();
+        let mut c = DvfsController::new(&s, DvfsMode::Cap(1730.0)); // off-grid cap
+        for _ in 0..100 {
+            c.step(200.0, 1.0);
+            let f = c.frequency_mhz();
+            let snapped = (f / s.f_step_mhz).round() * s.f_step_mhz;
+            assert!((f - snapped).abs() < 1e-6 || (f - c.ceiling_mhz()).abs() < 1e-6);
+        }
+    }
+}

@@ -1,0 +1,309 @@
+//! The per-GPU timestep loop: executes a workload's segment timeline
+//! under a DVFS mode, producing the telemetry trace and the per-kernel
+//! utilization profile.
+
+use crate::config::{GpuSpec, SimParams};
+use crate::sim::dvfs::{DvfsController, DvfsMode};
+use crate::sim::kernel::{KernelProfile, KernelProgress, Segment};
+use crate::sim::power::{Activity, PowerModel};
+use crate::sim::rng::Rng;
+use crate::sim::telemetry::{RawTrace, Sampler};
+use std::collections::HashMap;
+
+/// Everything a profiling run produces.
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    pub trace: RawTrace,
+    /// One aggregated record per distinct kernel (durations summed over
+    /// launches — the weighting eq. (1)/(2) needs total time per kernel).
+    pub kernels: Vec<KernelProfile>,
+    /// Wall-clock per workload iteration (ms), averaged over iterations.
+    pub iter_time_ms: f64,
+    pub iterations: usize,
+    pub total_time_ms: f64,
+    pub busy_time_ms: f64,
+    /// Mean SM clock while busy (MHz) — diagnostic.
+    pub mean_busy_f_mhz: f64,
+    /// Total energy (J).
+    pub energy_j: f64,
+}
+
+pub struct GpuSim {
+    spec: GpuSpec,
+    params: SimParams,
+    dvfs: DvfsController,
+    power: PowerModel,
+    sampler: Sampler,
+    rng: Rng,
+    t_ms: f64,
+    /// Power integral over the current PM window.
+    pm_acc_w: f64,
+    pm_acc_n: usize,
+    next_pm_ms: f64,
+}
+
+impl GpuSim {
+    pub fn new(spec: &GpuSpec, params: &SimParams, mode: DvfsMode, seed: u64) -> Self {
+        let mut root = Rng::new(seed ^ params.seed);
+        let sampler_rng = root.fork(1);
+        GpuSim {
+            spec: spec.clone(),
+            params: params.clone(),
+            dvfs: DvfsController::new(spec, mode),
+            power: PowerModel::new(spec),
+            sampler: Sampler::new(params, sampler_rng),
+            rng: root.fork(2),
+            t_ms: 0.0,
+            pm_acc_w: 0.0,
+            pm_acc_n: 0,
+            next_pm_ms: params.pm_dt_ms,
+        }
+    }
+
+    fn tick(&mut self, act: &Activity, neutral_frac: f64) {
+        let dt = self.params.dt_ms;
+        self.t_ms += dt;
+        let f = self.dvfs.frequency_mhz();
+        let p = self.power.step_w(act, f, dt);
+        self.pm_acc_w += p;
+        self.pm_acc_n += 1;
+        self.sampler.step(self.t_ms, p, act.busy, f);
+        if self.t_ms + 1e-9 >= self.next_pm_ms {
+            let avg = self.pm_acc_w / self.pm_acc_n.max(1) as f64;
+            self.dvfs.step(avg, neutral_frac);
+            self.pm_acc_w = 0.0;
+            self.pm_acc_n = 0;
+            self.next_pm_ms += self.params.pm_dt_ms;
+        }
+    }
+
+    /// Execute a segment timeline to completion.
+    pub fn run(mut self, segments: &[Segment]) -> SimResult {
+        let dt = self.params.dt_ms;
+        let mut agg: HashMap<String, KernelProfile> = HashMap::new();
+        let mut order: Vec<String> = Vec::new();
+        let mut busy_ms = 0.0;
+        let mut busy_f_acc = 0.0;
+        let mut iter_marks: Vec<f64> = vec![0.0];
+
+        for seg in segments {
+            match seg {
+                Segment::IterBoundary => iter_marks.push(self.t_ms),
+                Segment::CpuGap { ms } => {
+                    self.power
+                        .on_transition(&Activity::IDLE, self.dvfs.frequency_mhz(), &mut self.rng);
+                    let steps = (ms / dt).round() as usize;
+                    for _ in 0..steps {
+                        // Idle: PM sees "no efficiency data" and drifts to
+                        // a low clock (cb_hint 0 => efficiency floor).
+                        self.tick(&Activity::IDLE, 0.0);
+                    }
+                }
+                Segment::Kernel(k) => {
+                    let act = Activity::of_kernel(k);
+                    self.power
+                        .on_transition(&act, self.dvfs.frequency_mhz(), &mut self.rng);
+                    let cb = k.neutral_frac();
+                    let mut prog = KernelProgress::start(k);
+                    let start = self.t_ms;
+                    loop {
+                        let f = self.dvfs.frequency_mhz();
+                        self.tick(&act, cb);
+                        busy_f_acc += f * dt;
+                        if prog.advance(dt, f, self.spec.f_max_mhz) {
+                            break;
+                        }
+                    }
+                    let dur = self.t_ms - start;
+                    busy_ms += dur;
+                    let e = agg.entry(k.name.clone()).or_insert_with(|| {
+                        order.push(k.name.clone());
+                        KernelProfile {
+                            name: k.name.clone(),
+                            duration_ms: 0.0,
+                            sm_util: k.sm_util,
+                            dram_util: k.dram_util,
+                        }
+                    });
+                    e.duration_ms += dur;
+                }
+            }
+        }
+        // Flush the tail so trailing samples exist (a few idle samples).
+        let flush = (3.0 * self.params.sample_dt_ms / dt).ceil() as usize;
+        self.power
+            .on_transition(&Activity::IDLE, self.dvfs.frequency_mhz(), &mut self.rng);
+        for _ in 0..flush {
+            self.tick(&Activity::IDLE, 0.0);
+        }
+        if *iter_marks.last().unwrap() < self.t_ms {
+            // no trailing boundary: treat end of timeline as the last mark
+        }
+
+        let iters = (iter_marks.len() - 1).max(1);
+        let iter_time_ms = if iter_marks.len() >= 2 {
+            (iter_marks.last().unwrap() - iter_marks[0]) / iters as f64
+        } else {
+            self.t_ms
+        };
+
+        let kernels = order.into_iter().map(|n| agg.remove(&n).unwrap()).collect();
+        let energy_j = self.sampler.energy_j();
+        SimResult {
+            trace: self.sampler.into_trace(),
+            kernels,
+            iter_time_ms,
+            iterations: iters,
+            total_time_ms: self.t_ms,
+            busy_time_ms: busy_ms,
+            mean_busy_f_mhz: if busy_ms > 0.0 { busy_f_acc / busy_ms } else { 0.0 },
+            energy_j,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::kernel::KernelDesc;
+
+    fn spec() -> GpuSpec {
+        GpuSpec::mi300x()
+    }
+
+    fn quiet_params() -> SimParams {
+        SimParams {
+            energy_noise_w: 0.0,
+            ..SimParams::default()
+        }
+    }
+
+    fn timeline(n: usize) -> Vec<Segment> {
+        let hot = KernelDesc::new("gemm", 8.0, 1.0, 92.0, 12.0, 1.0);
+        let cold = KernelDesc::new("reduce", 0.5, 4.0, 18.0, 45.0, 0.25);
+        let mut segs = Vec::new();
+        for _ in 0..n {
+            segs.push(Segment::Kernel(hot.clone()));
+            segs.push(Segment::Kernel(cold.clone()));
+            segs.push(Segment::CpuGap { ms: 3.0 });
+            segs.push(Segment::IterBoundary);
+        }
+        segs
+    }
+
+    #[test]
+    fn produces_trace_and_profiles() {
+        let sim = GpuSim::new(&spec(), &quiet_params(), DvfsMode::Uncapped, 1);
+        let r = sim.run(&timeline(20));
+        assert!(r.trace.samples.len() > 50);
+        assert_eq!(r.kernels.len(), 2);
+        assert_eq!(r.iterations, 20);
+        assert!(r.iter_time_ms > 10.0);
+        assert!(r.busy_time_ms > 0.0 && r.busy_time_ms < r.total_time_ms);
+        assert!(r.energy_j > 0.0);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = GpuSim::new(&spec(), &quiet_params(), DvfsMode::Uncapped, 7).run(&timeline(5));
+        let b = GpuSim::new(&spec(), &quiet_params(), DvfsMode::Uncapped, 7).run(&timeline(5));
+        assert_eq!(a.trace.samples.len(), b.trace.samples.len());
+        for (x, y) in a.trace.samples.iter().zip(&b.trace.samples) {
+            assert_eq!(x.power_inst_w, y.power_inst_w);
+        }
+    }
+
+    #[test]
+    fn capping_reduces_energy_and_slows_compute() {
+        let un = GpuSim::new(&spec(), &quiet_params(), DvfsMode::Uncapped, 3).run(&timeline(30));
+        let cap = GpuSim::new(&spec(), &quiet_params(), DvfsMode::Cap(1300.0), 3)
+            .run(&timeline(30));
+        assert!(
+            cap.iter_time_ms > un.iter_time_ms * 1.1,
+            "cap {} vs un {}",
+            cap.iter_time_ms,
+            un.iter_time_ms
+        );
+        let p_peak_un = un
+            .trace
+            .samples
+            .iter()
+            .map(|s| s.power_inst_w)
+            .fold(0.0, f64::max);
+        let p_peak_cap = cap
+            .trace
+            .samples
+            .iter()
+            .map(|s| s.power_inst_w)
+            .fold(0.0, f64::max);
+        assert!(p_peak_cap < p_peak_un, "{p_peak_cap} vs {p_peak_un}");
+    }
+
+    #[test]
+    fn memory_bound_timeline_insensitive_to_cap() {
+        let mem = KernelDesc::new("spmv", 0.4, 6.0, 15.0, 50.0, 0.22);
+        let segs: Vec<Segment> = (0..40)
+            .flat_map(|_| {
+                vec![
+                    Segment::Kernel(mem.clone()),
+                    Segment::IterBoundary,
+                ]
+            })
+            .collect();
+        let un = GpuSim::new(&spec(), &quiet_params(), DvfsMode::Uncapped, 4).run(&segs);
+        let cap = GpuSim::new(&spec(), &quiet_params(), DvfsMode::Cap(1300.0), 4).run(&segs);
+        let slowdown = cap.iter_time_ms / un.iter_time_ms - 1.0;
+        assert!(slowdown < 0.03, "memory-bound slowdown {slowdown}");
+    }
+
+    #[test]
+    fn hot_kernels_spike_above_tdp_uncapped() {
+        let s = spec();
+        let r = GpuSim::new(&s, &quiet_params(), DvfsMode::Uncapped, 5).run(&timeline(30));
+        let peak = r
+            .trace
+            .samples
+            .iter()
+            .map(|x| x.power_inst_w)
+            .fold(0.0, f64::max);
+        assert!(peak > s.tdp_w, "peak={peak} should exceed TDP");
+        assert!(peak <= s.clamp_x * s.tdp_w + 60.0, "peak={peak} within OCP+noise");
+    }
+
+    #[test]
+    fn pin_spikes_at_least_as_much_as_cap() {
+        let s = spec();
+        let count_spikes = |r: &SimResult| {
+            r.trace
+                .samples
+                .iter()
+                .filter(|x| x.power_inst_w > s.tdp_w)
+                .count() as f64
+                / r.trace.samples.len() as f64
+        };
+        let pin = GpuSim::new(&s, &quiet_params(), DvfsMode::Pin(1700.0), 6).run(&timeline(40));
+        let cap = GpuSim::new(&s, &quiet_params(), DvfsMode::Cap(1700.0), 6).run(&timeline(40));
+        assert!(
+            count_spikes(&pin) >= count_spikes(&cap) * 0.9,
+            "pin {} vs cap {}",
+            count_spikes(&pin),
+            count_spikes(&cap)
+        );
+    }
+
+    #[test]
+    fn iter_time_counts_gaps() {
+        let k = KernelDesc::new("k", 2.0, 0.5, 50.0, 10.0, 0.5);
+        let segs = vec![
+            Segment::Kernel(k.clone()),
+            Segment::CpuGap { ms: 20.0 },
+            Segment::IterBoundary,
+            Segment::Kernel(k),
+            Segment::CpuGap { ms: 20.0 },
+            Segment::IterBoundary,
+        ];
+        let r = GpuSim::new(&spec(), &quiet_params(), DvfsMode::Uncapped, 8).run(&segs);
+        assert!(r.iter_time_ms > 20.0, "{}", r.iter_time_ms);
+        assert_eq!(r.iterations, 2);
+    }
+}

@@ -1,0 +1,199 @@
+//! GPU kernel execution model.
+//!
+//! Each kernel is a roofline pair: `t_compute_ms` of compute work
+//! (measured at f_max — it stretches as `f_max/f` when the clock drops)
+//! overlapped with `t_mem_ms` of memory traffic (frequency-invariant,
+//! HBM clock is not swept).  Under a constant clock the duration is
+//! `max(t_compute·f_max/f, t_mem)`; the simulator integrates both work
+//! quantities per timestep so mid-kernel DVFS transitions are handled
+//! exactly.
+//!
+//! `sm_util` / `dram_util` are the *profiled counters* the paper collects
+//! (percent of peak sustained throughput, §5.3.4); `intensity` is the
+//! normalized electrical load the kernel puts on the SM array, which
+//! drives the power model and the transition-spike amplitude.
+
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct KernelDesc {
+    pub name: String,
+    /// Compute-side time at f_max (ms).
+    pub t_compute_ms: f64,
+    /// Memory-side time (ms), invariant under SM-frequency scaling.
+    pub t_mem_ms: f64,
+    /// SM throughput counter, % of peak sustained (0–100).
+    pub sm_util: f64,
+    /// DRAM throughput counter, % of peak sustained (0–100).
+    pub dram_util: f64,
+    /// Electrical load on the SM array in [0, ~1.1]; drives dynamic power.
+    pub intensity: f64,
+}
+
+impl KernelDesc {
+    pub fn new(
+        name: &str,
+        t_compute_ms: f64,
+        t_mem_ms: f64,
+        sm_util: f64,
+        dram_util: f64,
+        intensity: f64,
+    ) -> Self {
+        assert!(t_compute_ms >= 0.0 && t_mem_ms >= 0.0);
+        assert!(t_compute_ms + t_mem_ms > 0.0, "kernel with no work");
+        KernelDesc {
+            name: name.to_string(),
+            t_compute_ms,
+            t_mem_ms,
+            sm_util,
+            dram_util,
+            intensity,
+        }
+    }
+
+    /// Closed-form duration at a constant clock (ms).
+    pub fn duration_at(&self, f_mhz: f64, f_max_mhz: f64) -> f64 {
+        (self.t_compute_ms * f_max_mhz / f_mhz).max(self.t_mem_ms)
+    }
+
+    /// Compute-boundness hint in [0,1] the PM firmware uses to pick an
+    /// efficient clock (1 = pure compute, 0 = pure memory).
+    pub fn compute_boundness(&self) -> f64 {
+        self.t_compute_ms / (self.t_compute_ms + self.t_mem_ms)
+    }
+
+    /// Performance-neutral clock as a fraction of f_max: the roofline
+    /// crossover `f*/f_max = t_compute/t_mem` — below this the kernel
+    /// slows down, above it only burns power.  Pure-compute kernels
+    /// return 1.0.  The PM firmware's efficiency DVFS targets slightly
+    /// above this point (§2: "for a kernel that is not very compute
+    /// intensive, the PM controller will scale the SM frequency down").
+    pub fn neutral_frac(&self) -> f64 {
+        if self.t_mem_ms <= 0.0 {
+            return 1.0;
+        }
+        (self.t_compute_ms / self.t_mem_ms).min(1.0)
+    }
+}
+
+/// One element of a workload's execution timeline.
+#[derive(Debug, Clone)]
+pub enum Segment {
+    /// Launch a GPU kernel.
+    Kernel(KernelDesc),
+    /// Host-side work: GPU idle (the LSMS pattern — only the matrix
+    /// inversion is GPU-accelerated, §4.1).
+    CpuGap { ms: f64 },
+    /// Marks the boundary between workload iterations, used to measure
+    /// per-iteration time (zero duration).
+    IterBoundary,
+}
+
+impl Segment {
+    pub fn kernel(&self) -> Option<&KernelDesc> {
+        match self {
+            Segment::Kernel(k) => Some(k),
+            _ => None,
+        }
+    }
+}
+
+/// In-flight kernel progress: compute and memory work drain at different
+/// rates; the kernel retires when both are exhausted.
+#[derive(Debug, Clone)]
+pub struct KernelProgress {
+    pub desc: KernelDesc,
+    pub compute_left_ms: f64,
+    pub mem_left_ms: f64,
+    pub elapsed_ms: f64,
+}
+
+impl KernelProgress {
+    pub fn start(desc: &KernelDesc) -> Self {
+        KernelProgress {
+            desc: desc.clone(),
+            compute_left_ms: desc.t_compute_ms,
+            mem_left_ms: desc.t_mem_ms,
+            elapsed_ms: 0.0,
+        }
+    }
+
+    /// Advance by `dt_ms` at clock `f_mhz`; returns true when retired.
+    pub fn advance(&mut self, dt_ms: f64, f_mhz: f64, f_max_mhz: f64) -> bool {
+        self.compute_left_ms -= dt_ms * f_mhz / f_max_mhz;
+        self.mem_left_ms -= dt_ms;
+        self.elapsed_ms += dt_ms;
+        self.done()
+    }
+
+    pub fn done(&self) -> bool {
+        self.compute_left_ms <= 0.0 && self.mem_left_ms <= 0.0
+    }
+}
+
+/// Aggregated per-kernel record emitted by a profiling run — the Nsight
+/// triple the utilization classifier consumes (§5.3.4).
+#[derive(Debug, Clone)]
+pub struct KernelProfile {
+    pub name: String,
+    pub duration_ms: f64,
+    pub sm_util: f64,
+    pub dram_util: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn k(tc: f64, tm: f64) -> KernelDesc {
+        KernelDesc::new("k", tc, tm, 50.0, 20.0, 0.6)
+    }
+
+    #[test]
+    fn duration_roofline() {
+        // compute-bound: stretches with 1/f
+        let kc = k(10.0, 2.0);
+        assert_eq!(kc.duration_at(2100.0, 2100.0), 10.0);
+        assert!((kc.duration_at(1050.0, 2100.0) - 20.0).abs() < 1e-9);
+        // memory-bound: flat
+        let km = k(2.0, 10.0);
+        assert_eq!(km.duration_at(2100.0, 2100.0), 10.0);
+        assert_eq!(km.duration_at(1050.0, 2100.0), 10.0);
+        // crossover
+        let kx = k(5.0, 10.0);
+        assert_eq!(kx.duration_at(2100.0, 2100.0), 10.0);
+        assert!((kx.duration_at(700.0, 2100.0) - 15.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn progress_matches_closed_form_constant_clock() {
+        for (tc, tm, f) in [(10.0, 2.0, 1300.0), (2.0, 10.0, 1300.0), (5.0, 5.0, 1700.0)] {
+            let desc = k(tc, tm);
+            let mut p = KernelProgress::start(&desc);
+            let dt = 0.01;
+            let mut t = 0.0;
+            while !p.advance(dt, f, 2100.0) {
+                t += dt;
+                assert!(t < 1e5, "did not finish");
+            }
+            t += dt;
+            let want = desc.duration_at(f, 2100.0);
+            assert!(
+                (t - want).abs() <= dt * 1.5,
+                "tc={tc} tm={tm} f={f}: got {t}, want {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn compute_boundness_extremes() {
+        assert!(k(10.0, 0.0).compute_boundness() > 0.999);
+        assert!(k(0.0, 10.0).compute_boundness() < 1e-9);
+        assert!((k(5.0, 5.0).compute_boundness() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_work_kernel_rejected() {
+        KernelDesc::new("bad", 0.0, 0.0, 0.0, 0.0, 0.0);
+    }
+}

@@ -1,0 +1,35 @@
+//! Discrete-time GPU node simulator — the substrate standing in for the
+//! paper's MI300X / A100 testbeds (see DESIGN.md §1 for the substitution
+//! argument).
+//!
+//! The simulator produces exactly the two observables Minos consumes:
+//!
+//! 1. a **power time series** sampled RSMI-style at 1–2 ms, with an
+//!    averaged `power_ave` channel and a noisy energy-counter channel
+//!    (`P_inst ≈ Δe/Δt`), and
+//! 2. **per-kernel utilization counters** (SM%, DRAM%, duration), the
+//!    same triple Nsight Compute reports.
+//!
+//! Structure: [`kernel`] describes GPU kernels with a roofline timing
+//! model; [`power`] maps activity + frequency to instantaneous watts and
+//! injects transition-overshoot power spikes; [`dvfs`] is the 1 ms PM
+//! firmware loop implementing capping and pinning; [`telemetry`] is the
+//! sampler; [`gpu`] drives the timestep loop; [`profiler`] wraps a whole
+//! profiling run into the `Profile` the classifier consumes.
+
+/// Version of the simulator's physical model.  Bump when the power /
+/// DVFS / timing equations change so cached reference sets invalidate
+/// (the workload-registry fingerprint alone cannot see model changes).
+pub const SIM_MODEL_VERSION: u64 = 5;
+
+pub mod dvfs;
+pub mod gpu;
+pub mod kernel;
+pub mod power;
+pub mod profiler;
+pub mod rng;
+pub mod telemetry;
+
+pub use gpu::{GpuSim, SimResult};
+pub use kernel::{KernelDesc, Segment};
+pub use profiler::{profile, Profile, ProfileRequest};

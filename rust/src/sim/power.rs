@@ -1,0 +1,221 @@
+//! Instantaneous-power model with transition-overshoot spikes.
+//!
+//! Steady-state draw while a kernel runs at clock `f` (voltage `V(f)`
+//! from the spec's affine DVFS curve):
+//!
+//! ```text
+//! P = idle + intensity · (f/f_max) · (V/V_max)² · p_sm_max
+//!          + (dram_util/100) · p_mem_max
+//! ```
+//!
+//! — the classic `C·V²·f` dynamic-power form for the SM array plus a
+//! frequency-invariant memory-subsystem term (HBM clocks are not swept).
+//!
+//! **Power spikes** (§2, §4.1): when the GPU transitions from low to high
+//! arithmetic intensity, current ramps faster than the voltage regulator
+//! and firmware can react, so instantaneous power overshoots.  We model a
+//! transition from intensity `a` to `b > a` as an exponentially decaying
+//! envelope `A·exp(-t/τ)` with `A = spike_gain_w · (b-a) · (f/f_max) ·
+//! (V/V_max)² · (1 + jitter)` added to the steady draw.  A hardware fast
+//! loop clamps the total at `clamp_x × TDP` — the OCP excursion ceiling
+//! that explains why the paper's bins stop at 2×TDP.
+
+use crate::config::GpuSpec;
+use crate::sim::rng::Rng;
+
+/// Current electrical activity on the device.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Activity {
+    /// SM electrical load, 0 when idle.
+    pub intensity: f64,
+    /// DRAM utilization counter (0–100).
+    pub dram_util: f64,
+    /// Whether a kernel is resident (drives the SQ_BUSY counter).
+    pub busy: bool,
+}
+
+impl Activity {
+    pub const IDLE: Activity = Activity {
+        intensity: 0.0,
+        dram_util: 0.0,
+        busy: false,
+    };
+
+    pub fn of_kernel(k: &crate::sim::kernel::KernelDesc) -> Self {
+        Activity {
+            intensity: k.intensity,
+            dram_util: k.dram_util,
+            busy: true,
+        }
+    }
+}
+
+/// Stateful power model: steady term + decaying spike envelope.
+#[derive(Debug, Clone)]
+pub struct PowerModel {
+    spec: GpuSpec,
+    /// Decaying overshoot envelope (W).
+    spike_env_w: f64,
+    prev_intensity: f64,
+}
+
+impl PowerModel {
+    pub fn new(spec: &GpuSpec) -> Self {
+        PowerModel {
+            spec: spec.clone(),
+            spike_env_w: 0.0,
+            prev_intensity: 0.0,
+        }
+    }
+
+    /// Frequency/voltage scaling factor `(f/f_max)·(V/V_max)²` in (0, 1].
+    pub fn fv_factor(&self, f_mhz: f64) -> f64 {
+        let v = self.spec.voltage(f_mhz) / self.spec.v_max;
+        (f_mhz / self.spec.f_max_mhz) * v * v
+    }
+
+    /// Steady-state power (W) for an activity level at clock `f` — no
+    /// spike envelope, no clamp.
+    pub fn steady_w(&self, act: &Activity, f_mhz: f64) -> f64 {
+        self.spec.idle_w
+            + act.intensity * self.fv_factor(f_mhz) * self.spec.p_sm_max
+            + (act.dram_util / 100.0) * self.spec.p_mem_max
+    }
+
+    /// Notify the model that activity switched (kernel boundary).  A
+    /// low→high intensity transition charges the spike envelope; high→low
+    /// transitions do not (di/dt droop is absorbed by the regulator).
+    pub fn on_transition(&mut self, new: &Activity, f_mhz: f64, rng: &mut Rng) {
+        let delta = new.intensity - self.prev_intensity;
+        if delta > 0.0 {
+            let jitter = 1.0 + 0.15 * rng.gauss();
+            let a = self.spec.spike_gain_w
+                * delta
+                * self.fv_factor(f_mhz)
+                * jitter.max(0.0);
+            self.spike_env_w += a;
+        }
+        self.prev_intensity = new.intensity;
+    }
+
+    /// Advance the envelope by `dt_ms` and return the instantaneous power
+    /// for the current activity, clamped at the OCP ceiling.
+    pub fn step_w(&mut self, act: &Activity, f_mhz: f64, dt_ms: f64) -> f64 {
+        self.spike_env_w *= (-dt_ms / self.spec.spike_tau_ms).exp();
+        if self.spike_env_w < 1e-3 {
+            self.spike_env_w = 0.0;
+        }
+        let p = self.steady_w(act, f_mhz) + self.spike_env_w;
+        p.min(self.spec.clamp_x * self.spec.tdp_w)
+    }
+
+    pub fn spike_envelope_w(&self) -> f64 {
+        self.spike_env_w
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::kernel::KernelDesc;
+
+    fn model() -> PowerModel {
+        PowerModel::new(&GpuSpec::mi300x())
+    }
+
+    fn hot() -> Activity {
+        Activity {
+            intensity: 1.0,
+            dram_util: 15.0,
+            busy: true,
+        }
+    }
+
+    #[test]
+    fn idle_power_is_floor() {
+        let m = model();
+        let p = m.steady_w(&Activity::IDLE, 2100.0);
+        assert_eq!(p, GpuSpec::mi300x().idle_w);
+    }
+
+    #[test]
+    fn steady_power_monotone_in_frequency() {
+        let m = model();
+        let mut prev = 0.0;
+        for f in [1300.0, 1500.0, 1700.0, 1900.0, 2100.0] {
+            let p = m.steady_w(&hot(), f);
+            assert!(p > prev);
+            prev = p;
+        }
+    }
+
+    #[test]
+    fn compute_heavy_kernel_exceeds_tdp_at_boost() {
+        let m = model();
+        let spec = GpuSpec::mi300x();
+        let p = m.steady_w(&hot(), spec.f_max_mhz);
+        assert!(p > spec.tdp_w, "p={p}");
+        // ...but drops to ≈TDP at the bottom of the sweep (left shift).
+        let p_low = m.steady_w(&hot(), 1300.0);
+        assert!(p_low < spec.tdp_w * 1.02, "p_low={p_low}");
+    }
+
+    #[test]
+    fn transition_spike_charges_and_decays() {
+        let mut m = model();
+        let mut rng = Rng::new(1);
+        let k = KernelDesc::new("k", 5.0, 1.0, 90.0, 10.0, 1.0);
+        m.on_transition(&Activity::of_kernel(&k), 2100.0, &mut rng);
+        assert!(m.spike_envelope_w() > 0.0);
+        let p0 = m.step_w(&Activity::of_kernel(&k), 2100.0, 0.1);
+        let mut p_prev = p0;
+        for _ in 0..100 {
+            let p = m.step_w(&Activity::of_kernel(&k), 2100.0, 0.1);
+            assert!(p <= p_prev + 1e-9);
+            p_prev = p;
+        }
+        assert!(m.spike_envelope_w() < 1.0, "envelope should decay away");
+    }
+
+    #[test]
+    fn no_spike_on_falling_transition() {
+        let mut m = model();
+        let mut rng = Rng::new(2);
+        m.on_transition(&hot(), 2100.0, &mut rng);
+        let e1 = m.spike_envelope_w();
+        m.step_w(&hot(), 2100.0, 5.0); // decay a while
+        m.on_transition(&Activity::IDLE, 2100.0, &mut rng);
+        assert!(m.spike_envelope_w() <= e1);
+    }
+
+    #[test]
+    fn clamped_at_ocp_ceiling() {
+        let spec = GpuSpec::mi300x();
+        let mut m = PowerModel::new(&spec);
+        let mut rng = Rng::new(3);
+        // Enormous transition: envelope alone would exceed 2×TDP.
+        let act = Activity {
+            intensity: 1.1,
+            dram_util: 90.0,
+            busy: true,
+        };
+        for _ in 0..10 {
+            m.on_transition(&Activity::IDLE, spec.f_max_mhz, &mut rng);
+            m.on_transition(&act, spec.f_max_mhz, &mut rng);
+        }
+        let p = m.step_w(&act, spec.f_max_mhz, 0.001);
+        assert!(p <= spec.clamp_x * spec.tdp_w + 1e-9);
+    }
+
+    #[test]
+    fn spike_amplitude_smaller_at_lower_clock() {
+        let spec = GpuSpec::mi300x();
+        let mut hi = PowerModel::new(&spec);
+        let mut lo = PowerModel::new(&spec);
+        let mut r1 = Rng::new(7);
+        let mut r2 = Rng::new(7);
+        hi.on_transition(&hot(), 2100.0, &mut r1);
+        lo.on_transition(&hot(), 1300.0, &mut r2);
+        assert!(lo.spike_envelope_w() < hi.spike_envelope_w());
+    }
+}

@@ -1,0 +1,174 @@
+//! One-stop profiling runs: workload × device × DVFS mode → [`Profile`].
+//!
+//! A `Profile` bundles the two observables Minos consumes (§4): the
+//! filtered power trace and the kernel-duration-weighted utilization
+//! point, plus the performance metric (iteration time) used for the
+//! frequency-scaling data.
+
+use crate::config::{GpuSpec, SimParams};
+use crate::sim::dvfs::DvfsMode;
+use crate::sim::gpu::GpuSim;
+use crate::sim::kernel::KernelProfile;
+use crate::trace::PowerTrace;
+use crate::workloads::Workload;
+
+/// Request for one profiling run.
+#[derive(Debug, Clone)]
+pub struct ProfileRequest {
+    pub spec: GpuSpec,
+    pub workload: Workload,
+    pub mode: DvfsMode,
+    pub params: SimParams,
+    /// Override the workload's default profiling iteration count.
+    pub iterations: Option<usize>,
+}
+
+impl ProfileRequest {
+    pub fn new(spec: &GpuSpec, workload: &Workload, mode: DvfsMode) -> Self {
+        ProfileRequest {
+            spec: spec.clone(),
+            workload: workload.clone(),
+            mode,
+            params: SimParams::default(),
+            iterations: None,
+        }
+    }
+
+    pub fn with_params(mut self, params: &SimParams) -> Self {
+        self.params = params.clone();
+        self
+    }
+
+    pub fn with_iterations(mut self, iters: usize) -> Self {
+        self.iterations = Some(iters);
+        self
+    }
+}
+
+/// The result of profiling one workload once (at one DVFS setting).
+#[derive(Debug, Clone)]
+pub struct Profile {
+    pub workload: String,
+    pub mode_label: String,
+    pub trace: PowerTrace,
+    pub kernels: Vec<KernelProfile>,
+    pub iter_time_ms: f64,
+    pub energy_j: f64,
+    /// App-level utilization (paper eqs. 1–2), computed natively; the
+    /// PJRT `util_aggregate` artifact reproduces the same numbers.
+    pub app_sm_util: f64,
+    pub app_dram_util: f64,
+    /// Wall-clock cost of collecting this profile (simulated seconds) —
+    /// used for the §7.1.3 profiling-savings accounting.
+    pub profiling_cost_s: f64,
+}
+
+/// Kernel-duration-weighted application utilization (paper eqs. 1 & 2).
+pub fn weighted_utilization(kernels: &[KernelProfile]) -> (f64, f64) {
+    let wsum: f64 = kernels.iter().map(|k| k.duration_ms).sum();
+    if wsum <= 0.0 {
+        return (0.0, 0.0);
+    }
+    let sm = kernels
+        .iter()
+        .map(|k| k.duration_ms * k.sm_util)
+        .sum::<f64>()
+        / wsum;
+    let dram = kernels
+        .iter()
+        .map(|k| k.duration_ms * k.dram_util)
+        .sum::<f64>()
+        / wsum;
+    (sm, dram)
+}
+
+/// Run the simulator once and post-process into a `Profile`.
+pub fn profile(req: &ProfileRequest) -> Profile {
+    let iters = req.iterations.unwrap_or(req.workload.iterations);
+    let segments = req.workload.segments(iters);
+    // Seed folds in workload identity + mode so every (workload, mode)
+    // pair is a distinct but reproducible stream.
+    let seed = fold_seed(&req.workload.name) ^ fold_seed(&req.mode.label());
+    let sim = GpuSim::new(&req.spec, &req.params, req.mode, seed);
+    let result = sim.run(&segments);
+    let trace = PowerTrace::from_raw(&result.trace, req.spec.tdp_w);
+    let (sm, dram) = weighted_utilization(&result.kernels);
+    Profile {
+        workload: req.workload.name.clone(),
+        mode_label: req.mode.label(),
+        trace,
+        kernels: result.kernels,
+        iter_time_ms: result.iter_time_ms,
+        energy_j: result.energy_j,
+        app_sm_util: sm,
+        app_dram_util: dram,
+        profiling_cost_s: result.total_time_ms / 1000.0,
+    }
+}
+
+fn fold_seed(s: &str) -> u64 {
+    // FNV-1a
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads;
+
+    #[test]
+    fn profile_smoke_and_determinism() {
+        let spec = GpuSpec::mi300x();
+        let reg = workloads::registry();
+        let wl = reg.by_name("sgemm").expect("sgemm");
+        let req = ProfileRequest::new(&spec, wl, DvfsMode::Uncapped).with_iterations(4);
+        let a = profile(&req);
+        let b = profile(&req);
+        assert!(a.trace.len() > 100);
+        assert_eq!(a.trace.watts, b.trace.watts);
+        assert!(a.app_sm_util > 0.0);
+        assert!(a.iter_time_ms > 0.0);
+        assert!(a.profiling_cost_s > 0.0);
+    }
+
+    #[test]
+    fn weighted_utilization_example() {
+        let ks = vec![
+            KernelProfile {
+                name: "a".into(),
+                duration_ms: 1.0,
+                sm_util: 80.0,
+                dram_util: 10.0,
+            },
+            KernelProfile {
+                name: "b".into(),
+                duration_ms: 3.0,
+                sm_util: 40.0,
+                dram_util: 50.0,
+            },
+        ];
+        let (sm, dram) = weighted_utilization(&ks);
+        assert!((sm - 50.0).abs() < 1e-9);
+        assert!((dram - 40.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn weighted_utilization_empty() {
+        assert_eq!(weighted_utilization(&[]), (0.0, 0.0));
+    }
+
+    #[test]
+    fn different_modes_different_traces() {
+        let spec = GpuSpec::mi300x();
+        let reg = workloads::registry();
+        let wl = reg.by_name("sgemm").unwrap();
+        let a = profile(&ProfileRequest::new(&spec, wl, DvfsMode::Uncapped).with_iterations(3));
+        let b = profile(&ProfileRequest::new(&spec, wl, DvfsMode::Cap(1300.0)).with_iterations(3));
+        assert!(b.iter_time_ms > a.iter_time_ms);
+    }
+}

@@ -1,0 +1,226 @@
+//! RSMI-style telemetry sampler (§5.3.1).
+//!
+//! Mirrors the paper's measurement pipeline on AMD GPUs:
+//!
+//! * an **energy accumulator** (`rsmi_dev_energy_count_get`) integrated
+//!   at the simulation timestep; the instantaneous power channel is the
+//!   finite difference `P_inst ≈ Δe/Δt` between successive samples, which
+//!   is *noisy* — we add Gaussian measurement noise per sample, the
+//!   behaviour [87] documents on real counters;
+//! * a **`power_ave` channel** (`rsmi_dev_power_ave_get`) that is heavily
+//!   filtered — a trailing moving average over `power_ave_window_ms`;
+//! * an **SQ_BUSY flag** per sample (were the CUs active in the window?),
+//!   which the post-processing uses to trim leading/trailing idle.
+
+use crate::config::SimParams;
+use crate::sim::rng::Rng;
+use std::collections::VecDeque;
+
+/// One telemetry record.
+#[derive(Debug, Clone, Copy)]
+pub struct Sample {
+    pub t_ms: f64,
+    /// Energy-counter-derived instantaneous power (W), noisy.
+    pub power_inst_w: f64,
+    /// Heavily averaged power (W) — what `power_ave_get` returns.
+    pub power_ave_w: f64,
+    /// SQ_BUSY: any kernel resident during the sample window.
+    pub busy: bool,
+    /// SM clock at sample time (MHz) — for diagnostics.
+    pub f_mhz: f64,
+}
+
+/// Raw (untrimmed, unfiltered) trace straight off the sampler.
+#[derive(Debug, Clone, Default)]
+pub struct RawTrace {
+    pub samples: Vec<Sample>,
+    pub sample_dt_ms: f64,
+}
+
+#[derive(Debug)]
+pub struct Sampler {
+    params: SimParams,
+    rng: Rng,
+    /// Accumulated energy (mJ) since t=0 — the hardware counter.
+    energy_mj: f64,
+    energy_at_last_sample_mj: f64,
+    next_sample_ms: f64,
+    busy_in_window: bool,
+    /// Trailing window for the power_ave channel.
+    ave_window: VecDeque<f64>,
+    ave_capacity: usize,
+    pub trace: RawTrace,
+}
+
+impl Sampler {
+    pub fn new(params: &SimParams, rng: Rng) -> Self {
+        let cap = (params.power_ave_window_ms / params.sample_dt_ms).ceil() as usize;
+        Sampler {
+            params: params.clone(),
+            rng,
+            energy_mj: 0.0,
+            energy_at_last_sample_mj: 0.0,
+            next_sample_ms: params.sample_dt_ms,
+            busy_in_window: false,
+            ave_window: VecDeque::with_capacity(cap.max(1)),
+            ave_capacity: cap.max(1),
+            trace: RawTrace {
+                samples: Vec::new(),
+                sample_dt_ms: params.sample_dt_ms,
+            },
+        }
+    }
+
+    /// Advance one simulation step: integrate energy, emit a sample if the
+    /// sampling period elapsed.
+    pub fn step(&mut self, t_ms: f64, power_w: f64, busy: bool, f_mhz: f64) {
+        self.energy_mj += power_w * self.params.dt_ms;
+        self.busy_in_window |= busy;
+        if t_ms + 1e-9 >= self.next_sample_ms {
+            let de = self.energy_mj - self.energy_at_last_sample_mj;
+            let p_inst =
+                de / self.params.sample_dt_ms + self.rng.noise(self.params.energy_noise_w);
+            let p_inst = p_inst.max(0.0);
+
+            if self.ave_window.len() == self.ave_capacity {
+                self.ave_window.pop_front();
+            }
+            self.ave_window.push_back(p_inst);
+            let p_ave =
+                self.ave_window.iter().sum::<f64>() / self.ave_window.len() as f64;
+
+            self.trace.samples.push(Sample {
+                t_ms,
+                power_inst_w: p_inst,
+                power_ave_w: p_ave,
+                busy: self.busy_in_window,
+                f_mhz,
+            });
+            self.energy_at_last_sample_mj = self.energy_mj;
+            self.busy_in_window = false;
+            self.next_sample_ms += self.params.sample_dt_ms;
+        }
+    }
+
+    /// Total accumulated energy (J).
+    pub fn energy_j(&self) -> f64 {
+        self.energy_mj / 1000.0
+    }
+
+    pub fn into_trace(self) -> RawTrace {
+        self.trace
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params() -> SimParams {
+        SimParams {
+            energy_noise_w: 0.0,
+            ..SimParams::default()
+        }
+    }
+
+    fn run_constant(p: &SimParams, power_w: f64, total_ms: f64) -> RawTrace {
+        let mut s = Sampler::new(p, Rng::new(1));
+        let steps = (total_ms / p.dt_ms) as usize;
+        for i in 1..=steps {
+            let t = i as f64 * p.dt_ms;
+            s.step(t, power_w, true, 2100.0);
+        }
+        s.into_trace()
+    }
+
+    #[test]
+    fn constant_power_recovered_exactly_without_noise() {
+        let p = params();
+        let tr = run_constant(&p, 500.0, 300.0);
+        assert!(tr.samples.len() > 150);
+        for s in &tr.samples {
+            assert!(
+                (s.power_inst_w - 500.0).abs() < 1.0,
+                "sample {} at t={}",
+                s.power_inst_w,
+                s.t_ms
+            );
+        }
+    }
+
+    #[test]
+    fn noise_has_zero_mean() {
+        let mut p = params();
+        p.energy_noise_w = 30.0;
+        let tr = run_constant(&p, 500.0, 3000.0);
+        let mean: f64 = tr.samples.iter().map(|s| s.power_inst_w).sum::<f64>()
+            / tr.samples.len() as f64;
+        assert!((mean - 500.0).abs() < 5.0, "mean={mean}");
+        // and the instantaneous channel really is noisy
+        let var: f64 = tr
+            .samples
+            .iter()
+            .map(|s| (s.power_inst_w - mean).powi(2))
+            .sum::<f64>()
+            / tr.samples.len() as f64;
+        assert!(var.sqrt() > 15.0, "std={}", var.sqrt());
+    }
+
+    #[test]
+    fn power_ave_is_smoother_than_inst() {
+        let mut p = params();
+        p.energy_noise_w = 40.0;
+        let tr = run_constant(&p, 600.0, 2000.0);
+        let dev = |f: &dyn Fn(&Sample) -> f64| {
+            let m: f64 =
+                tr.samples.iter().map(|s| f(s)).sum::<f64>() / tr.samples.len() as f64;
+            (tr.samples.iter().map(|s| (f(s) - m).powi(2)).sum::<f64>()
+                / tr.samples.len() as f64)
+                .sqrt()
+        };
+        let d_inst = dev(&|s: &Sample| s.power_inst_w);
+        let d_ave = dev(&|s: &Sample| s.power_ave_w);
+        assert!(
+            d_ave < d_inst * 0.55,
+            "ave std {d_ave} vs inst std {d_inst}"
+        );
+    }
+
+    #[test]
+    fn energy_integral_matches_power() {
+        let p = params();
+        let mut s = Sampler::new(&p, Rng::new(2));
+        let steps = (1000.0 / p.dt_ms) as usize;
+        for i in 1..=steps {
+            s.step(i as f64 * p.dt_ms, 750.0, true, 2100.0);
+        }
+        // 750 W for 1 s = 750 J
+        assert!((s.energy_j() - 750.0).abs() < 1.0, "{}", s.energy_j());
+    }
+
+    #[test]
+    fn busy_flag_tracks_activity_window() {
+        let p = params();
+        let mut s = Sampler::new(&p, Rng::new(3));
+        let steps = (30.0 / p.dt_ms) as usize;
+        for i in 1..=steps {
+            let t = i as f64 * p.dt_ms;
+            let busy = t > 10.0 && t < 20.0;
+            s.step(t, 200.0, busy, 2100.0);
+        }
+        let tr = s.into_trace();
+        assert!(tr.samples.iter().any(|x| x.busy));
+        assert!(!tr.samples.first().unwrap().busy);
+        assert!(!tr.samples.last().unwrap().busy);
+    }
+
+    #[test]
+    fn sample_cadence_matches_params() {
+        let p = params();
+        let tr = run_constant(&p, 100.0, 150.0);
+        for w in tr.samples.windows(2) {
+            let dt = w[1].t_ms - w[0].t_ms;
+            assert!((dt - p.sample_dt_ms).abs() < p.dt_ms + 1e-9);
+        }
+    }
+}

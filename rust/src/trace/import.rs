@@ -1,0 +1,121 @@
+//! External-trace import: classify real telemetry without the simulator.
+//!
+//! Format: one power sample per line (watts), `#`-prefixed comments and
+//! blank lines ignored; optionally two comma-separated columns
+//! `t_ms,watts` (the timestamps are used only to infer the sampling
+//! period).  This matches what a trivial wrapper over `rocm-smi`/NVML
+//! emits, so a cluster operator can feed Minos real RSMI dumps:
+//!
+//! ```text
+//! # rsmi power trace, 1.5 ms
+//! 412.0
+//! 845.2
+//! ...
+//! ```
+
+use crate::trace::PowerTrace;
+
+/// Parse a power-trace file into a [`PowerTrace`].
+///
+/// The imported samples are treated as the *raw* instantaneous channel;
+/// the paper's α=0.5 EMA filter is applied here, mirroring
+/// `PowerTrace::from_raw` (§5.3.1).
+pub fn parse_power_csv(text: &str, sample_dt_ms: f64, tdp_w: f64) -> anyhow::Result<PowerTrace> {
+    anyhow::ensure!(tdp_w > 0.0, "tdp must be positive");
+    let mut raw = Vec::new();
+    let mut times: Vec<f64> = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut cols = line.split(',').map(str::trim);
+        let first = cols
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("line {}: empty", lineno + 1))?;
+        match cols.next() {
+            Some(second) => {
+                times.push(first.parse::<f64>().map_err(|e| {
+                    anyhow::anyhow!("line {}: bad timestamp '{first}': {e}", lineno + 1)
+                })?);
+                raw.push(second.parse::<f64>().map_err(|e| {
+                    anyhow::anyhow!("line {}: bad watts '{second}': {e}", lineno + 1)
+                })?);
+            }
+            None => raw.push(first.parse::<f64>().map_err(|e| {
+                anyhow::anyhow!("line {}: bad watts '{first}': {e}", lineno + 1)
+            })?),
+        }
+    }
+    anyhow::ensure!(!raw.is_empty(), "no samples in trace");
+    anyhow::ensure!(
+        raw.iter().all(|w| w.is_finite() && *w >= 0.0),
+        "trace contains negative or non-finite samples"
+    );
+    let dt = if times.len() >= 2 {
+        let span = times.last().unwrap() - times[0];
+        anyhow::ensure!(span > 0.0, "timestamps not increasing");
+        span / (times.len() - 1) as f64
+    } else {
+        sample_dt_ms
+    };
+    // Apply the α=0.5 filter, same as PowerTrace::from_raw.
+    let mut watts = Vec::with_capacity(raw.len());
+    let mut prev = raw[0];
+    for &w in &raw {
+        watts.push(0.5 * (w + prev));
+        prev = w;
+    }
+    Ok(PowerTrace {
+        watts,
+        raw_watts: raw,
+        sample_dt_ms: dt,
+        tdp_w,
+    })
+}
+
+/// Load from a file path.
+pub fn load_power_csv(path: &str, sample_dt_ms: f64, tdp_w: f64) -> anyhow::Result<PowerTrace> {
+    parse_power_csv(&std::fs::read_to_string(path)?, sample_dt_ms, tdp_w)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_single_column_with_comments() {
+        let t = parse_power_csv("# header\n400\n\n800\n600\n", 1.5, 750.0).unwrap();
+        assert_eq!(t.raw_watts, vec![400.0, 800.0, 600.0]);
+        assert_eq!(t.watts, vec![400.0, 600.0, 700.0]); // EMA applied
+        assert_eq!(t.sample_dt_ms, 1.5);
+    }
+
+    #[test]
+    fn parses_two_columns_and_infers_dt() {
+        let t = parse_power_csv("0.0, 100\n2.0, 200\n4.0, 300\n", 1.5, 750.0).unwrap();
+        assert_eq!(t.raw_watts, vec![100.0, 200.0, 300.0]);
+        assert!((t.sample_dt_ms - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse_power_csv("abc\n", 1.5, 750.0).is_err());
+        assert!(parse_power_csv("", 1.5, 750.0).is_err());
+        assert!(parse_power_csv("-5\n", 1.5, 750.0).is_err());
+        assert!(parse_power_csv("1.0,nan\n", 1.5, 750.0).is_err());
+        assert!(parse_power_csv("100\n", 1.5, 0.0).is_err());
+    }
+
+    #[test]
+    fn classification_ready() {
+        // an imported trace feeds straight into the feature extractor
+        let text: String = (0..200)
+            .map(|i| if i % 2 == 0 { "900.0\n" } else { "400.0\n" })
+            .collect();
+        let t = parse_power_csv(&text, 1.5, 750.0).unwrap();
+        let sv = crate::features::spike_vector(&t, 0.1);
+        assert!(sv.total > 0.0);
+        assert!((sv.sum() - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,252 @@
+//! Power-trace post-processing (§5.3.1–5.3.2).
+//!
+//! A [`PowerTrace`] is the cleaned time series the classifier consumes:
+//! the raw energy-counter channel EMA-filtered with α = 0.5
+//! (`P_filt(t) = (P_inst(t) + P_inst(t-1)) / 2`) and trimmed to the span
+//! where SQ_BUSY indicated CU activity — exactly the paper's pipeline.
+
+pub mod import;
+
+use crate::sim::telemetry::RawTrace;
+
+/// Filtered + trimmed power trace for one profiling run.
+#[derive(Debug, Clone)]
+pub struct PowerTrace {
+    /// EMA-filtered instantaneous power (W) — the classifier's input.
+    pub watts: Vec<f64>,
+    /// Unfiltered (but trimmed) instantaneous power (W).  The PJRT
+    /// `spike_features` artifact consumes this and applies the identical
+    /// α=0.5 filter inside the compiled graph.
+    pub raw_watts: Vec<f64>,
+    /// Sampling period (ms).
+    pub sample_dt_ms: f64,
+    /// Device TDP (W) — spike magnitudes are relative to this.
+    pub tdp_w: f64,
+}
+
+impl PowerTrace {
+    /// Build from a raw sampler trace: trim to [first busy, last busy],
+    /// then apply the α=0.5 filter.
+    pub fn from_raw(raw: &RawTrace, tdp_w: f64) -> Self {
+        if raw.samples.is_empty() {
+            return PowerTrace {
+                watts: Vec::new(),
+                raw_watts: Vec::new(),
+                sample_dt_ms: raw.sample_dt_ms,
+                tdp_w,
+            };
+        }
+        let first = raw.samples.iter().position(|s| s.busy).unwrap_or(0);
+        let last = raw
+            .samples
+            .iter()
+            .rposition(|s| s.busy)
+            .unwrap_or(raw.samples.len().saturating_sub(1));
+        let window = &raw.samples[first..=last.max(first)];
+        let mut watts = Vec::with_capacity(window.len());
+        let mut raw_watts = Vec::with_capacity(window.len());
+        let mut prev = window.first().map(|s| s.power_inst_w).unwrap_or(0.0);
+        for s in window {
+            watts.push(0.5 * (s.power_inst_w + prev));
+            raw_watts.push(s.power_inst_w);
+            prev = s.power_inst_w;
+        }
+        PowerTrace {
+            watts,
+            raw_watts,
+            sample_dt_ms: raw.sample_dt_ms,
+            tdp_w,
+        }
+    }
+
+    /// Construct directly (tests, synthetic traces); the input is taken
+    /// as already filtered, with `raw_watts` set equal to it.
+    pub fn from_watts(watts: Vec<f64>, sample_dt_ms: f64, tdp_w: f64) -> Self {
+        PowerTrace {
+            raw_watts: watts.clone(),
+            watts,
+            sample_dt_ms,
+            tdp_w,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.watts.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.watts.is_empty()
+    }
+
+    pub fn duration_ms(&self) -> f64 {
+        self.watts.len() as f64 * self.sample_dt_ms
+    }
+
+    /// Power relative to TDP: r(t) = P(t)/TDP.
+    pub fn relative(&self) -> Vec<f64> {
+        self.watts.iter().map(|w| w / self.tdp_w).collect()
+    }
+
+    /// Mean power (W) — the single statistic the Guerreiro baseline uses.
+    pub fn mean(&self) -> f64 {
+        if self.watts.is_empty() {
+            return 0.0;
+        }
+        self.watts.iter().sum::<f64>() / self.watts.len() as f64
+    }
+
+    pub fn peak(&self) -> f64 {
+        self.watts.iter().cloned().fold(0.0, f64::max)
+    }
+
+    /// Linear-interpolation percentile of *absolute* power (W), matching
+    /// numpy / the percentiles artifact (q in [0,1]).
+    pub fn percentile(&self, q: f64) -> f64 {
+        percentile(&self.watts, q)
+    }
+
+    /// Percentile of relative power r = P/TDP.
+    pub fn percentile_rel(&self, q: f64) -> f64 {
+        self.percentile(q) / self.tdp_w
+    }
+
+    /// Batch percentiles of relative power from a single sort.
+    pub fn percentiles_rel(&self, qs: &[f64]) -> Vec<f64> {
+        percentiles_of(&self.watts, qs)
+            .into_iter()
+            .map(|w| w / self.tdp_w)
+            .collect()
+    }
+
+    /// Fraction of samples strictly above TDP (the spike fraction of §6).
+    pub fn frac_above_tdp(&self) -> f64 {
+        if self.watts.is_empty() {
+            return 0.0;
+        }
+        self.watts.iter().filter(|&&w| w > self.tdp_w).count() as f64
+            / self.watts.len() as f64
+    }
+
+    /// Empirical CDF of relative power evaluated at the given grid —
+    /// the curves in Figs. 2, 5, 6.
+    pub fn cdf_rel(&self, grid: &[f64]) -> Vec<f64> {
+        let r = self.relative();
+        let n = r.len().max(1) as f64;
+        grid.iter()
+            .map(|&g| r.iter().filter(|&&x| x <= g).count() as f64 / n)
+            .collect()
+    }
+}
+
+/// numpy-style linear-interpolation percentile (q in [0,1]).
+pub fn percentile(data: &[f64], q: f64) -> f64 {
+    percentiles_of(data, &[q])[0]
+}
+
+/// Several percentiles from ONE sort — the §Perf optimization for the
+/// scaling-data hot path (FreqPoint needs p50/p90/p95/p99 per profile;
+/// sorting once instead of four times cut the batch-percentile path ~4x,
+/// see EXPERIMENTS.md §Perf).
+pub fn percentiles_of(data: &[f64], qs: &[f64]) -> Vec<f64> {
+    if data.is_empty() {
+        return vec![0.0; qs.len()];
+    }
+    let mut s: Vec<f64> = data.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    qs.iter()
+        .map(|q| {
+            let pos = q.clamp(0.0, 1.0) * (s.len() - 1) as f64;
+            let lo = pos.floor() as usize;
+            let hi = (lo + 1).min(s.len() - 1);
+            let frac = pos - lo as f64;
+            s[lo] * (1.0 - frac) + s[hi] * frac
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::telemetry::Sample;
+
+    fn raw(vals: &[(f64, bool)]) -> RawTrace {
+        RawTrace {
+            samples: vals
+                .iter()
+                .enumerate()
+                .map(|(i, &(p, b))| Sample {
+                    t_ms: i as f64 * 1.5,
+                    power_inst_w: p,
+                    power_ave_w: p,
+                    busy: b,
+                    f_mhz: 2100.0,
+                })
+                .collect(),
+            sample_dt_ms: 1.5,
+        }
+    }
+
+    #[test]
+    fn trims_idle_head_and_tail() {
+        let r = raw(&[
+            (100.0, false),
+            (100.0, false),
+            (500.0, true),
+            (600.0, true),
+            (550.0, true),
+            (100.0, false),
+        ]);
+        let t = PowerTrace::from_raw(&r, 750.0);
+        assert_eq!(t.len(), 3);
+        // first filtered value: prev = first in-window value
+        assert_eq!(t.watts[0], 500.0);
+        assert_eq!(t.watts[1], 550.0); // (500+600)/2
+    }
+
+    #[test]
+    fn ema_filter_is_pairwise_average() {
+        let r = raw(&[(400.0, true), (800.0, true), (600.0, true)]);
+        let t = PowerTrace::from_raw(&r, 750.0);
+        assert_eq!(t.watts, vec![400.0, 600.0, 700.0]);
+    }
+
+    #[test]
+    fn percentile_matches_numpy_convention() {
+        let d = vec![1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&d, 0.0), 1.0);
+        assert_eq!(percentile(&d, 1.0), 4.0);
+        assert!((percentile(&d, 0.5) - 2.5).abs() < 1e-12);
+        assert!((percentile(&d, 0.9) - 3.7).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_single_element() {
+        assert_eq!(percentile(&[5.0], 0.9), 5.0);
+        assert_eq!(percentile(&[], 0.9), 0.0);
+    }
+
+    #[test]
+    fn cdf_monotone_bounded() {
+        let t = PowerTrace::from_watts(vec![100.0, 500.0, 900.0, 1200.0], 1.5, 750.0);
+        let grid: Vec<f64> = (0..=40).map(|i| i as f64 * 0.05).collect();
+        let cdf = t.cdf_rel(&grid);
+        assert_eq!(cdf[0], 0.0);
+        assert_eq!(*cdf.last().unwrap(), 1.0);
+        for w in cdf.windows(2) {
+            assert!(w[1] >= w[0]);
+        }
+    }
+
+    #[test]
+    fn frac_above_tdp_counts() {
+        let t = PowerTrace::from_watts(vec![700.0, 800.0, 900.0, 600.0], 1.5, 750.0);
+        assert_eq!(t.frac_above_tdp(), 0.5);
+    }
+
+    #[test]
+    fn all_idle_trace_does_not_panic() {
+        let r = raw(&[(100.0, false), (100.0, false)]);
+        let t = PowerTrace::from_raw(&r, 750.0);
+        assert!(t.len() >= 1);
+    }
+}

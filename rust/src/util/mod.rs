@@ -1,0 +1,6 @@
+//! Small in-tree utilities that replace unavailable third-party crates
+//! in this fully-vendored build: a JSON parser/emitter (`json`) and a
+//! property-testing helper (`propcheck`).
+
+pub mod json;
+pub mod propcheck;

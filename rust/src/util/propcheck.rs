@@ -1,0 +1,70 @@
+//! Tiny property-testing helper (stand-in for `proptest`, which is not
+//! in the vendored dependency set).  Generates `n` random cases from the
+//! deterministic simulator RNG and reports the failing seed so a case
+//! can be replayed exactly.
+
+use crate::sim::rng::Rng;
+
+/// Run `n` random cases.  The closure gets a per-case RNG; panic (or
+/// assert) inside it to fail.  On failure the case index + derived seed
+/// are printed before the panic propagates.
+pub fn check<F: Fn(&mut Rng)>(name: &str, n: usize, base_seed: u64, f: F) {
+    for case in 0..n {
+        let seed = base_seed
+            .wrapping_mul(0x9E3779B97F4A7C15)
+            .wrapping_add(case as u64);
+        let mut rng = Rng::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut rng)));
+        if let Err(e) = result {
+            eprintln!("propcheck '{name}' failed at case {case} (seed {seed:#x})");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// Random vector of length in [1, max_len] with entries in [lo, hi).
+pub fn vec_f64(rng: &mut Rng, max_len: usize, lo: f64, hi: f64) -> Vec<f64> {
+    let n = 1 + (rng.next_u64() as usize) % max_len;
+    (0..n).map(|_| rng.range(lo, hi)).collect()
+}
+
+/// Random usize in [lo, hi].
+pub fn usize_in(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+    lo + (rng.next_u64() as usize) % (hi - lo + 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_all_cases() {
+        let mut count = 0usize;
+        let counter = std::cell::Cell::new(0usize);
+        check("counting", 25, 1, |_| {
+            counter.set(counter.get() + 1);
+        });
+        count += counter.get();
+        assert_eq!(count, 25);
+    }
+
+    #[test]
+    fn generators_in_bounds() {
+        check("bounds", 50, 2, |rng| {
+            let v = vec_f64(rng, 64, -1.0, 3.0);
+            assert!(!v.is_empty() && v.len() <= 64);
+            assert!(v.iter().all(|&x| (-1.0..3.0).contains(&x)));
+            let u = usize_in(rng, 3, 9);
+            assert!((3..=9).contains(&u));
+        });
+    }
+
+    #[test]
+    #[should_panic]
+    fn failures_propagate() {
+        check("fails", 10, 3, |rng| {
+            assert!(rng.uniform() < 2.0); // always true
+            assert!(rng.uniform() < 0.0); // always false
+        });
+    }
+}

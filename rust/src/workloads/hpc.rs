@@ -1,0 +1,155 @@
+//! HPC simulations (CORAL-2 / OLCF-6, Table 1): LULESH, LSMS, LAMMPS,
+//! MILC, M-PSDNS.
+//!
+//! Calibration anchors from the paper:
+//! * LULESH n300 is Mixed, n500 High-spike (input-dependent class shift,
+//!   §6.1.2); both land at H5 in utilization.
+//! * LSMS runs the GPU only for its matrix-inversion bursts, idling near
+//!   170 W between them (§4.1, Fig. 1) — Mixed power, M1 utilization,
+//!   and nearly flat frequency scaling (Fig. 7(b)).
+//! * LAMMPS (both inputs) is High-spike / C3 — sustained compute draw
+//!   with the sharp 1.25–1.45×TDP CDF rise of Fig. 5(a).
+//! * MILC-24 is hybrid/Mixed while the small MILC-6 lattice is
+//!   Low-spike / M2 (§6.1.2); MILC-24 degrades ≈14% at 1300 MHz.
+//! * M-PSDNS is Lonestar6-only (C8, no power profile).
+
+use super::{burst, Burst, Domain, PerfClass, PwrClass, Workload, WorkloadBuilder};
+use crate::sim::kernel::KernelDesc;
+
+fn pairs(a: &KernelDesc, b: &KernelDesc, n: usize, gap: f64) -> Vec<Burst> {
+    let mut out = Vec::new();
+    for _ in 0..n {
+        out.push(burst(a.clone(), 1, gap));
+        out.push(burst(b.clone(), 1, gap));
+    }
+    out
+}
+
+pub fn all() -> Vec<Workload> {
+    let mut v = Vec::new();
+
+    // ---- LULESH n300 (Mixed, H5).
+    let stress = KernelDesc::new("CalcHourglassForce", 1.8, 1.2, 62.0, 30.0, 0.72);
+    let gather = KernelDesc::new("IntegrateStress", 0.6, 2.4, 34.0, 52.0, 0.30);
+    v.push(
+        WorkloadBuilder::new("lulesh-n300", "lulesh", Domain::Hpc, "CORAL-2", "n 300 i 10")
+            .phase("timestep", 8.0, pairs(&stress, &gather, 8, 0.15))
+            .iterations(100)
+            .pwr(PwrClass::Mixed)
+            .perf(PerfClass::Hybrid, "H5")
+            .build(),
+    );
+
+    // ---- LULESH n500 (High-spike, H5; holdout input).
+    let stress = KernelDesc::new("CalcHourglassForce", 4.5, 2.2, 64.0, 34.0, 0.95);
+    let gather = KernelDesc::new("IntegrateStress", 1.0, 2.0, 38.0, 50.0, 0.40);
+    v.push(
+        WorkloadBuilder::new("lulesh-n500", "lulesh", Domain::Hpc, "CORAL-2", "n 500 i 10")
+            .phase("timestep", 6.0, pairs(&stress, &gather, 6, 0.15))
+            .iterations(100)
+            .pwr(PwrClass::HighSpike)
+            .perf(PerfClass::Hybrid, "H5")
+            .holdout()
+            .build(),
+    );
+
+    // ---- LSMS (M1): CPU-dominated with GPU inversion bursts.  The
+    // inversion is electrically hot (big spikes on entry) but its
+    // runtime is HBM-bound, so capping barely moves end-to-end time.
+    // Table 1 lists LSMS as Mixed, but §6.1.1 notes the dendrogram
+    // groups it with the High-spike workloads (its >0.5×TDP mass is all
+    // plateau; the sub-TDP mass is idle, which the spike vector ignores)
+    // — we encode the dendrogram expectation.
+    let inv = KernelDesc::new("zblock_lu_inverse", 16.0, 26.0, 26.0, 22.0, 1.30);
+    v.push(
+        WorkloadBuilder::new("lsms", "lsms", Domain::Hpc, "OLCF", "FePt lmax=5 rLIZ=18")
+            .phase("scf_gpu", 290.0, vec![burst(inv, 6, 1.0)])
+            .iterations(13)
+            .pwr(PwrClass::HighSpike)
+            .perf(PerfClass::Memory, "M1")
+            .holdout()
+            .build(),
+    );
+
+    // ---- LAMMPS in.eam (High-spike, C3), two problem sizes.
+    let pair8 = KernelDesc::new("pair_eam_kernel", 3.2, 0.45, 74.0, 11.0, 0.92);
+    let neigh8 = KernelDesc::new("neigh_build", 0.8, 0.7, 52.0, 22.0, 0.50);
+    v.push(
+        WorkloadBuilder::new("lammps-8x8x16", "lammps", Domain::Hpc, "CORAL-2", "(8,8,16)")
+            .phase(
+                "md_block",
+                2.0,
+                vec![burst(pair8, 10, 0.1), burst(neigh8, 4, 0.1)],
+            )
+            .iterations(110)
+            .pwr(PwrClass::HighSpike)
+            .perf(PerfClass::Compute, "C3")
+            .build(),
+    );
+    let pair16 = KernelDesc::new("pair_eam_kernel", 6.5, 0.9, 76.0, 13.0, 0.97);
+    let neigh16 = KernelDesc::new("neigh_build", 1.5, 1.3, 50.0, 24.0, 0.55);
+    v.push(
+        WorkloadBuilder::new("lammps-16x16x16", "lammps", Domain::Hpc, "CORAL-2", "(16,16,16)")
+            .phase(
+                "md_block",
+                2.0,
+                vec![burst(pair16, 8, 0.1), burst(neigh16, 1, 0.1)],
+            )
+            .iterations(85)
+            .pwr(PwrClass::HighSpike)
+            .perf(PerfClass::Compute, "C3")
+            .holdout()
+            .build(),
+    );
+
+    // ---- MILC su3_rhmd_hisq, 24^3×6 lattice (Mixed-ish hybrid, H4).
+    let cg = KernelDesc::new("cg_dslash", 1.0, 1.55, 38.0, 42.0, 0.40);
+    let link = KernelDesc::new("link_fattening", 1.5, 0.6, 58.0, 24.0, 0.90);
+    v.push(
+        WorkloadBuilder::new("milc-24", "milc", Domain::Hpc, "OLCF-6", "24x24x24x6")
+            .phase(
+                "trajectory",
+                6.0,
+                vec![
+                    burst(cg.clone(), 4, 0.15),
+                    burst(link.clone(), 1, 0.15),
+                    burst(cg.clone(), 4, 0.15),
+                    burst(link.clone(), 1, 0.15),
+                    burst(cg.clone(), 4, 0.15),
+                    burst(link.clone(), 1, 0.15),
+                    burst(cg, 4, 0.15),
+                    burst(link, 1, 0.15),
+                ],
+            )
+            .iterations(110)
+            .pwr(PwrClass::Mixed)
+            .perf(PerfClass::Hybrid, "H4")
+            .holdout()
+            .build(),
+    );
+
+    // ---- MILC 6^4 lattice (Low-spike, M2): tiny, latency/memory-bound.
+    let staple = KernelDesc::new("cg_dslash_small", 0.25, 1.1, 15.0, 25.0, 0.24);
+    v.push(
+        WorkloadBuilder::new("milc-6", "milc", Domain::Hpc, "OLCF-6", "6x6x6x6")
+            .phase("trajectory", 4.0, vec![burst(staple, 40, 0.2)])
+            .iterations(85)
+            .pwr(PwrClass::LowSpike)
+            .perf(PerfClass::Memory, "M2")
+            .build(),
+    );
+
+    // ---- M-PSDNS 990^3 FP32 (C8, no power profile).
+    let fft = KernelDesc::new("fft_batch", 2.4, 0.7, 58.0, 5.0, 0.62);
+    let tp = KernelDesc::new("transpose", 0.3, 0.5, 40.0, 4.0, 0.40);
+    v.push(
+        WorkloadBuilder::new("mpsdns", "mpsdns", Domain::Hpc, "OLCF-6", "990^3 FP32")
+            .phase("spectral_step", 3.0, pairs(&fft, &tp, 10, 0.1))
+            .iterations(130)
+            .perf(PerfClass::Compute, "C8")
+            .no_power_profile()
+            .build(),
+    );
+
+    v
+}

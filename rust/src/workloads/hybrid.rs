@@ -1,0 +1,86 @@
+//! HPC+ML hybrids (Table 1): DeePMD (Water + DPA2) and OpenFold.
+//!
+//! Calibration anchors:
+//! * DeePMD-Water is the most frequency-sensitive workload in Fig. 7(a)
+//!   (≈34% degradation at 1300 MHz) — embedding-net GEMMs dominate.
+//!   Utilization C9; power Mixed.  It is Qwen1.5-MoE's nearest
+//!   utilization neighbor in the Table 2 case study.
+//! * DeePMD-DPA2 (H3, Mixed) carries an *unusual* trimodal spike
+//!   signature (attention + message passing + a rare very-hot fused
+//!   kernel) — in the paper it is the hold-one-out workload whose large
+//!   cosine distance to its neighbor degrades predictions (Fig. 9(c)).
+//! * OpenFold (C2, Mixed): evoformer attention is compute-hot; overall
+//!   ≈20% degradation at 1300 MHz (Fig. 7(a)).
+
+use super::{burst, Domain, PerfClass, PwrClass, Workload, WorkloadBuilder};
+use crate::sim::kernel::KernelDesc;
+
+pub fn all() -> Vec<Workload> {
+    let mut v = Vec::new();
+
+    // ---- DeePMD Water (C9, Mixed).
+    let embed = KernelDesc::new("embedding_net_gemm", 2.8, 0.4, 95.0, 8.0, 0.95);
+    let force = KernelDesc::new("prod_force", 1.2, 0.3, 88.0, 12.0, 0.88);
+    let env = KernelDesc::new("env_matrix_build", 0.8, 2.6, 60.0, 30.0, 0.30);
+    v.push(
+        WorkloadBuilder::new("deepmd-water-b64", "deepmd", Domain::HpcMl, "DeePMD-kit", "Water bsz 64")
+            .phase(
+                "md_step",
+                7.0,
+                vec![
+                    burst(embed.clone(), 2, 0.1),
+                    burst(force.clone(), 1, 0.1),
+                    burst(env.clone(), 2, 0.1),
+                    burst(embed, 1, 0.1),
+                    burst(force, 1, 0.1),
+                ],
+            )
+            .iterations(130)
+            .pwr(PwrClass::Mixed)
+            .perf(PerfClass::Compute, "C9")
+            .build(),
+    );
+
+    // ---- DeePMD DPA2 (H3, Mixed; holdout "DPA2 Large").
+    let attn = KernelDesc::new("dpa2_attention", 1.6, 1.2, 55.0, 26.0, 0.70);
+    let msg = KernelDesc::new("message_passing", 0.5, 1.8, 30.0, 38.0, 0.32);
+    let fuse = KernelDesc::new("fused_descriptor", 1.0, 0.2, 80.0, 12.0, 1.10);
+    let block = vec![
+        burst(attn.clone(), 2, 0.1),
+        burst(msg.clone(), 2, 0.1),
+        burst(fuse.clone(), 1, 0.1),
+    ];
+    v.push(
+        WorkloadBuilder::new("deepmd-dpa2", "deepmd", Domain::HpcMl, "DeePMD-kit", "DPA2 bsz auto")
+            .phase("md_step", 5.0, [block.clone(), block.clone(), block].concat())
+            .iterations(130)
+            .pwr(PwrClass::Mixed)
+            .perf(PerfClass::Hybrid, "H3")
+            .holdout()
+            .build(),
+    );
+
+    // ---- OpenFold (C2, Mixed; holdout bsz 4).
+    let attnk = KernelDesc::new("evoformer_attention", 3.0, 0.7, 60.0, 8.0, 0.72);
+    let tri = KernelDesc::new("triangle_multiply", 0.8, 1.6, 46.0, 10.0, 0.45);
+    let msa = KernelDesc::new("msa_gather", 0.3, 1.0, 26.0, 12.0, 0.25);
+    v.push(
+        WorkloadBuilder::new("openfold-b4", "openfold", Domain::HpcMl, "MLCommons", "OpenProteinSet bsz 4")
+            .phase(
+                "evoformer_block",
+                6.0,
+                vec![
+                    burst(attnk, 2, 0.15),
+                    burst(tri, 2, 0.15),
+                    burst(msa, 1, 0.15),
+                ],
+            )
+            .iterations(140)
+            .pwr(PwrClass::Mixed)
+            .perf(PerfClass::Compute, "C2")
+            .holdout()
+            .build(),
+    );
+
+    v
+}

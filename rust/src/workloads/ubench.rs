@@ -1,0 +1,24 @@
+//! Microbenchmarks (Table 1 row 1): cublasSgemm 25536×25536.
+//!
+//! SGEMM anchors the compute-intensive corner of the Fig. 4 utilization
+//! space (C5: SM ≈95%, DRAM ≈13%).  It was profiled on Lonestar6 only,
+//! so it carries no power profile (PwrClass “-” in Table 1).
+
+use super::{burst, Domain, PerfClass, Workload, WorkloadBuilder};
+use crate::sim::kernel::KernelDesc;
+
+pub fn all() -> Vec<Workload> {
+    let gemm = KernelDesc::new("cublasSgemm_25536", 38.0, 5.0, 95.0, 13.0, 1.0);
+    vec![WorkloadBuilder::new(
+        "sgemm",
+        "sgemm",
+        Domain::Ubench,
+        "cuBLAS",
+        "25536x25536",
+    )
+    .phase("gemm", 0.5, vec![burst(gemm, 2, 0.4)])
+    .iterations(60)
+    .perf(PerfClass::Compute, "C5")
+    .no_power_profile()
+    .build()]
+}

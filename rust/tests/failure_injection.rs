@@ -1,0 +1,181 @@
+//! Failure-injection and degenerate-input tests: the pipeline must
+//! stay well-defined on pathological telemetry, corrupted caches,
+//! missing artifacts, and degenerate clustering inputs.
+
+use minos::clustering::hierarchy::{Dendrogram, Linkage};
+use minos::clustering::kmeans::kmeans;
+use minos::clustering::metrics::{pairwise, Metric};
+use minos::config::{Config, GpuSpec, MinosParams};
+use minos::features::spike_vector;
+use minos::minos::reference_set::ReferenceSet;
+use minos::runtime::MinosRuntime;
+use minos::sim::telemetry::{RawTrace, Sample};
+use minos::trace::PowerTrace;
+
+fn sample(t: f64, p: f64, busy: bool) -> Sample {
+    Sample {
+        t_ms: t,
+        power_inst_w: p,
+        power_ave_w: p,
+        busy,
+        f_mhz: 2100.0,
+    }
+}
+
+#[test]
+fn all_idle_telemetry_yields_usable_trace() {
+    let raw = RawTrace {
+        samples: (0..50).map(|i| sample(i as f64 * 1.5, 170.0, false)).collect(),
+        sample_dt_ms: 1.5,
+    };
+    let t = PowerTrace::from_raw(&raw, 750.0);
+    assert!(!t.is_empty());
+    let sv = spike_vector(&t, 0.1);
+    assert!(sv.is_zero(), "idle power below 0.5xTDP must yield a zero vector");
+    assert_eq!(t.frac_above_tdp(), 0.0);
+    assert!(t.percentile(0.9) > 0.0);
+}
+
+#[test]
+fn single_busy_sample_trace() {
+    let mut samples: Vec<Sample> =
+        (0..10).map(|i| sample(i as f64 * 1.5, 100.0, false)).collect();
+    samples[5] = sample(7.5, 900.0, true);
+    let raw = RawTrace {
+        samples,
+        sample_dt_ms: 1.5,
+    };
+    let t = PowerTrace::from_raw(&raw, 750.0);
+    assert_eq!(t.len(), 1);
+    let sv = spike_vector(&t, 0.1);
+    assert_eq!(sv.total, 1.0);
+    assert_eq!(t.percentile(0.5), t.percentile(0.99));
+}
+
+#[test]
+fn empty_raw_trace_does_not_panic() {
+    let raw = RawTrace {
+        samples: Vec::new(),
+        sample_dt_ms: 1.5,
+    };
+    let t = PowerTrace::from_raw(&raw, 750.0);
+    assert!(t.is_empty());
+    assert_eq!(t.mean(), 0.0);
+    assert_eq!(t.percentile(0.9), 0.0);
+    let sv = spike_vector(&t, 0.1);
+    assert!(sv.is_zero());
+}
+
+#[test]
+fn telemetry_dropout_gap_still_classifies() {
+    // A gap in the middle (sampler stall): busy flags bracket it, the
+    // trimmed trace simply contains the gap's idle samples.
+    let mut samples = Vec::new();
+    for i in 0..40 {
+        let busy = i < 15 || i >= 25;
+        let p = if busy { 950.0 } else { 0.0 }; // dropout reads zero power
+        samples.push(sample(i as f64 * 1.5, p, busy));
+    }
+    let raw = RawTrace {
+        samples,
+        sample_dt_ms: 1.5,
+    };
+    let t = PowerTrace::from_raw(&raw, 750.0);
+    let sv = spike_vector(&t, 0.1);
+    assert!(sv.total >= 28.0, "busy samples must still be counted");
+    assert!((sv.sum() - 1.0).abs() < 1e-9);
+}
+
+#[test]
+fn runtime_load_missing_dir_falls_back_gracefully() {
+    let err = MinosRuntime::load(std::path::Path::new("/nonexistent/minos-artifacts"));
+    assert!(err.is_err());
+    let msg = format!("{:#}", err.err().unwrap());
+    assert!(msg.contains("make artifacts"), "error must tell the user the fix: {msg}");
+}
+
+#[test]
+fn corrupt_refset_cache_is_rejected_not_panicking() {
+    let path = std::env::temp_dir().join("minos_corrupt_refset.json");
+    std::fs::write(&path, b"{ not json ]").unwrap();
+    let r = ReferenceSet::load(path.to_str().unwrap());
+    assert!(r.is_err());
+    // truncated-but-valid JSON missing fields is also an error, not a panic
+    std::fs::write(&path, b"{\"bin_sizes\": [0.1]}").unwrap();
+    assert!(ReferenceSet::load(path.to_str().unwrap()).is_err());
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn corrupt_config_file_is_rejected() {
+    let path = std::env::temp_dir().join("minos_corrupt_config.json");
+    std::fs::write(&path, b"[1,2,3]").unwrap();
+    assert!(Config::from_file(path.to_str().unwrap()).is_err());
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn clustering_with_identical_points() {
+    // All workloads identical: dendrogram must still build, kmeans must
+    // still terminate, silhouette must not divide by zero.
+    let rows = vec![vec![0.5, 0.5, 0.0]; 6];
+    let d = pairwise(Metric::Cosine, &rows);
+    let dg = Dendrogram::build(&d, Linkage::Ward);
+    assert_eq!(dg.merges.len(), 5);
+    let labels = dg.cut_k(3);
+    assert_eq!(labels.len(), 6);
+    let km = kmeans(&rows, 2, 1, 3);
+    assert!(km.inertia < 1e-12);
+    let s = minos::clustering::silhouette::silhouette_score(&rows, &km.assignments);
+    assert!(s.is_finite());
+}
+
+#[test]
+fn spike_vector_with_absurd_tdp_and_extreme_bins() {
+    // TDP smaller than every sample: everything clips into the top slot.
+    let t = PowerTrace::from_watts(vec![500.0; 64], 1.5, 1.0);
+    let sv = spike_vector(&t, 0.001);
+    assert_eq!(sv.total, 64.0);
+    assert_eq!(sv.v[minos::features::NBINS - 1], 1.0);
+    // Gigantic bin width: everything lands in slot 0.
+    let sv = spike_vector(&t, 1e9);
+    assert_eq!(sv.v[0], 1.0);
+}
+
+#[test]
+fn nan_free_under_zero_noise_and_zero_gaps() {
+    // Degenerate sim parameters must not produce NaNs in the pipeline.
+    let spec = GpuSpec::mi300x();
+    let mut sim = minos::config::SimParams::default();
+    sim.energy_noise_w = 0.0;
+    let reg = minos::workloads::registry();
+    let w = reg.by_name("sgemm").unwrap();
+    let p = minos::sim::profiler::profile(
+        &minos::sim::profiler::ProfileRequest::new(&spec, w, minos::sim::dvfs::DvfsMode::Uncapped)
+            .with_params(&sim)
+            .with_iterations(2),
+    );
+    assert!(p.trace.watts.iter().all(|w| w.is_finite()));
+    assert!(p.iter_time_ms.is_finite() && p.iter_time_ms > 0.0);
+    let sv = spike_vector(&p.trace, 0.1);
+    assert!(sv.v.iter().all(|x| x.is_finite()));
+}
+
+#[test]
+fn minos_params_with_single_bin_size_still_work() {
+    let mut params = MinosParams::default();
+    params.bin_sizes = vec![0.1];
+    params.default_bin_size = 0.1;
+    let spec = GpuSpec::mi300x();
+    let sim = minos::config::SimParams::default();
+    let reg = minos::workloads::registry();
+    let picks: Vec<&minos::workloads::Workload> =
+        vec![reg.by_name("milc-6").unwrap(), reg.by_name("sdxl-b64").unwrap()];
+    let rs = ReferenceSet::build(&spec, &sim, &params, &picks);
+    let target = minos::minos::algorithm::TargetProfile::from_entry(rs.by_name("milc-6").unwrap());
+    let sel = minos::minos::algorithm::SelectOptimalFreq::new(&rs, &params);
+    assert_eq!(sel.choose_bin_size(&target), 0.1);
+    assert!(sel
+        .select(&target, minos::minos::algorithm::Objective::PowerCentric)
+        .is_some());
+}

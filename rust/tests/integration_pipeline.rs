@@ -1,0 +1,221 @@
+//! Integration tests: the full stack composed end-to-end — simulator →
+//! telemetry → features → clustering → Algorithm 1 → scheduler, plus
+//! PJRT-vs-native cross-checks on real (simulated) profiles.
+
+use minos::baselines::GuerreiroClassifier;
+use minos::config::{Config, GpuSpec, MinosParams, SimParams};
+use minos::coordinator::{Job, PowerAwareScheduler, SchedulerConfig};
+use minos::features::spike_vector;
+use minos::minos::algorithm::{Objective, SelectOptimalFreq, TargetProfile};
+use minos::minos::reference_set::ReferenceSet;
+use minos::runtime::MinosRuntime;
+use minos::sim::dvfs::DvfsMode;
+use minos::sim::profiler::{profile, ProfileRequest};
+use minos::workloads;
+use std::sync::OnceLock;
+
+/// One shared small reference set for the whole test binary (sweeps are
+/// the expensive part, especially in debug builds).
+fn refset() -> &'static ReferenceSet {
+    static RS: OnceLock<ReferenceSet> = OnceLock::new();
+    RS.get_or_init(|| {
+        let spec = GpuSpec::mi300x();
+        let sim = SimParams::default();
+        let minos = MinosParams::default();
+        let reg = workloads::registry();
+        let picks: Vec<&workloads::Workload> =
+            ["sdxl-b64", "sdxl-b32", "milc-24", "milc-6", "lammps-8x8x16", "deepmd-water-b64"]
+                .iter()
+                .map(|n| reg.by_name(n).unwrap())
+                .collect();
+        ReferenceSet::build(&spec, &sim, &minos, &picks)
+    })
+}
+
+fn target(name: &str) -> TargetProfile {
+    let spec = GpuSpec::mi300x();
+    let reg = workloads::registry();
+    let w = reg.by_name(name).unwrap();
+    let p = profile(&ProfileRequest::new(&spec, w, DvfsMode::Uncapped));
+    TargetProfile::from_profile(&w.app, &p, &MinosParams::default().bin_sizes)
+}
+
+#[test]
+fn case_study_end_to_end_both_objectives() {
+    let params = MinosParams::default();
+    let sel = SelectOptimalFreq::new(refset(), &params);
+    for name in ["faiss-b4096", "qwen15-moe-b32"] {
+        let t = target(name);
+        let pwr = sel.select(&t, Objective::PowerCentric).expect(name);
+        let perf = sel.select(&t, Objective::PerfCentric).expect(name);
+        // caps are inside the sweep range
+        for f in [pwr.f_cap_mhz, perf.f_cap_mhz] {
+            assert!((1300.0..=2100.0).contains(&f), "{name}: cap {f}");
+        }
+        // perf floor honoured (§7.2.2)
+        assert!(perf.f_cap_mhz >= params.perf_min_cap_mhz);
+        // the predicted values honour the bounds when not a fallback
+        if pwr.predicted_quantile_rel < params.power_bound_x {
+            assert!(pwr.f_pwr_mhz >= 1300.0);
+        }
+        assert!(perf.predicted_perf_degr <= params.perf_bound_frac + 1e-9);
+    }
+}
+
+#[test]
+fn selected_power_cap_actually_bounds_the_target() {
+    // Run the target at the selected PowerCentric cap and verify the
+    // bound held within a small tolerance — the Fig. 8(b) validation.
+    let params = MinosParams::default();
+    let sel = SelectOptimalFreq::new(refset(), &params);
+    let t = target("faiss-b4096");
+    let plan = sel.select(&t, Objective::PowerCentric).unwrap();
+    let spec = GpuSpec::mi300x();
+    let reg = workloads::registry();
+    let w = reg.by_name("faiss-b4096").unwrap();
+    let capped = profile(&ProfileRequest::new(&spec, w, DvfsMode::Cap(plan.f_cap_mhz)));
+    let obs = capped.trace.percentile_rel(0.90);
+    assert!(
+        obs < params.power_bound_x + 0.10,
+        "p90 {obs} way over bound at cap {}",
+        plan.f_cap_mhz
+    );
+}
+
+#[test]
+fn guerreiro_baseline_runs_and_uses_mean_power() {
+    let params = MinosParams::default();
+    let g = GuerreiroClassifier::new(refset(), &params);
+    let t = target("faiss-b4096");
+    let (nn, d) = g.neighbor(&t).unwrap();
+    assert!(d < 400.0, "mean-power gap {d} W to {}", nn.name);
+    let (cap, pred, _) = g.cap_power_centric(&t).unwrap();
+    assert!((1300.0..=2100.0).contains(&cap));
+    assert!(pred > 0.0);
+}
+
+#[test]
+fn pjrt_pipeline_matches_native_on_real_profiles() {
+    let rt = MinosRuntime::auto();
+    if !rt.is_pjrt() {
+        eprintln!("artifacts not built; skipping PJRT cross-check");
+        return;
+    }
+    let spec = GpuSpec::mi300x();
+    let reg = workloads::registry();
+    let mut traces = Vec::new();
+    for name in ["sdxl-b64", "milc-6", "lsms"] {
+        let w = reg.by_name(name).unwrap();
+        let p = profile(&ProfileRequest::new(&spec, w, DvfsMode::Uncapped).with_iterations(4));
+        traces.push(p.trace);
+    }
+    let refs: Vec<_> = traces.iter().collect();
+
+    // spike features agree (up to single boundary-sample flips)
+    let got = rt.spike_features(&refs, 0.1).unwrap();
+    for (g, t) in got.iter().zip(&traces) {
+        let want = spike_vector(t, 0.1);
+        assert!((g.total - want.total).abs() <= 2.0, "totals {} vs {}", g.total, want.total);
+        for (a, b) in g.v.iter().zip(&want.v) {
+            assert!((a - b).abs() < 2.5 / want.total.max(1.0) + 1e-6);
+        }
+    }
+
+    // percentiles agree
+    let got = rt.percentiles(&refs).unwrap();
+    for (g, t) in got.iter().zip(&traces) {
+        for (qi, q) in [0.5, 0.9, 0.95, 0.99].iter().enumerate() {
+            let want = t.percentile_rel(*q);
+            assert!((g[qi] - want).abs() < 1e-4, "q={q}: {} vs {want}", g[qi]);
+        }
+    }
+
+    // pairwise distances agree
+    let vecs: Vec<_> = traces.iter().map(|t| spike_vector(t, 0.1)).collect();
+    let vrefs: Vec<_> = vecs.iter().collect();
+    let d_pjrt = rt.pairwise_cosine(&vrefs).unwrap();
+    let rows: Vec<Vec<f64>> = vecs.iter().map(|v| v.v.clone()).collect();
+    let d_native = minos::clustering::metrics::pairwise(
+        minos::clustering::metrics::Metric::Cosine,
+        &rows,
+    );
+    for i in 0..rows.len() {
+        for j in 0..rows.len() {
+            assert!((d_pjrt[i][j] - d_native[i][j]).abs() < 1e-5);
+        }
+    }
+}
+
+#[test]
+fn scheduler_respects_budget_and_caches() {
+    let mut cfg = SchedulerConfig::default();
+    cfg.node.power_budget_w = cfg.node.gpu.tdp_w * 2.0; // tight budget
+    let sched = PowerAwareScheduler::new(cfg, refset().clone());
+    for i in 0..4u64 {
+        sched
+            .submit(Job {
+                id: i,
+                workload: "faiss-b4096".into(),
+                objective: Objective::PowerCentric,
+                iterations: 2,
+            })
+            .unwrap();
+    }
+    let outcomes = sched.collect(4);
+    sched.shutdown();
+    assert_eq!(outcomes.len(), 4);
+    let m = sched.metrics();
+    assert_eq!(m.completed, 4);
+    assert_eq!(m.profiles_run, 1, "classification must be cached per app");
+    assert_eq!(m.cache_hits, 3);
+    assert!(m.peak_admitted_p90_w <= m.node_budget_w * 1.01 || m.power_waits > 0);
+}
+
+#[test]
+fn config_file_roundtrip_on_disk() {
+    let cfg = Config::default();
+    let path = std::env::temp_dir().join("minos_itest_config.json");
+    let path = path.to_str().unwrap();
+    cfg.to_file(path).unwrap();
+    let back = Config::from_file(path).unwrap();
+    assert_eq!(back.node.gpu, cfg.node.gpu);
+    assert_eq!(back.minos, cfg.minos);
+    let _ = std::fs::remove_file(path);
+}
+
+#[test]
+fn refset_disk_roundtrip_preserves_predictions() {
+    let rs = refset();
+    let path = std::env::temp_dir().join("minos_itest_refset.json");
+    let path_s = path.to_str().unwrap();
+    rs.save(path_s).unwrap();
+    let back = ReferenceSet::load(path_s).unwrap();
+    let params = MinosParams::default();
+    let t = target("faiss-b4096");
+    let a = SelectOptimalFreq::new(rs, &params)
+        .select(&t, Objective::PowerCentric)
+        .unwrap();
+    let b = SelectOptimalFreq::new(&back, &params)
+        .select(&t, Objective::PowerCentric)
+        .unwrap();
+    assert_eq!(a.pwr_neighbor, b.pwr_neighbor);
+    assert_eq!(a.f_cap_mhz, b.f_cap_mhz);
+    let _ = std::fs::remove_file(path);
+}
+
+#[test]
+fn capping_vs_pinning_spike_ordering() {
+    // §6.2: at the same frequency, pinning produces at least as many
+    // spikes as capping (it forces high clocks on low-intensity phases).
+    let spec = GpuSpec::mi300x();
+    let reg = workloads::registry();
+    let w = reg.by_name("resnet50-cifar-b256").unwrap();
+    let cap = profile(&ProfileRequest::new(&spec, w, DvfsMode::Cap(1700.0)).with_iterations(30));
+    let pin = profile(&ProfileRequest::new(&spec, w, DvfsMode::Pin(1700.0)).with_iterations(30));
+    assert!(
+        pin.trace.frac_above_tdp() >= cap.trace.frac_above_tdp() * 0.85,
+        "pin {} vs cap {}",
+        pin.trace.frac_above_tdp(),
+        cap.trace.frac_above_tdp()
+    );
+}

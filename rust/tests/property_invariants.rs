@@ -1,0 +1,245 @@
+//! Property-based tests over the classifier's core invariants, using
+//! the in-tree `propcheck` helper (the vendored build has no proptest).
+
+use minos::clustering::hierarchy::{Dendrogram, Linkage};
+use minos::clustering::kmeans::{kmeans, lloyd_step};
+use minos::clustering::metrics::{cosine_distance, euclidean, pairwise, Metric};
+use minos::config::GpuSpec;
+use minos::features::{spike_vector, NBINS, SPIKE_LO};
+use minos::sim::dvfs::{DvfsController, DvfsMode};
+use minos::sim::kernel::{KernelDesc, KernelProgress};
+use minos::trace::{percentile, PowerTrace};
+use minos::util::propcheck::{check, usize_in, vec_f64};
+
+const N: usize = 60;
+
+#[test]
+fn spike_vector_is_a_distribution() {
+    check("spike vector sums to one", N, 11, |rng| {
+        let watts = vec_f64(rng, 4096, 0.0, 1600.0);
+        let t = PowerTrace::from_watts(watts, 1.5, 750.0);
+        let c = rng.range(0.02, 0.5);
+        let sv = spike_vector(&t, c);
+        let expect_spikes = t
+            .watts
+            .iter()
+            .filter(|&&w| w / 750.0 >= SPIKE_LO)
+            .count() as f64;
+        assert_eq!(sv.total, expect_spikes);
+        if sv.total > 0.0 {
+            assert!((sv.sum() - 1.0).abs() < 1e-9);
+        } else {
+            assert_eq!(sv.sum(), 0.0);
+        }
+        assert!(sv.v.iter().all(|&x| (0.0..=1.0).contains(&x)));
+        assert_eq!(sv.v.len(), NBINS);
+    });
+}
+
+#[test]
+fn spike_vector_mass_is_monotone_under_scaling() {
+    // Scaling every sample up can never reduce the spike count.
+    check("spike count monotone", N, 12, |rng| {
+        let watts = vec_f64(rng, 2048, 0.0, 1200.0);
+        let t1 = PowerTrace::from_watts(watts.clone(), 1.5, 750.0);
+        let t2 =
+            PowerTrace::from_watts(watts.iter().map(|w| w * 1.3).collect(), 1.5, 750.0);
+        assert!(spike_vector(&t2, 0.1).total >= spike_vector(&t1, 0.1).total);
+    });
+}
+
+#[test]
+fn percentile_properties() {
+    check("percentile bounds + monotonicity", N, 13, |rng| {
+        let data = vec_f64(rng, 512, -10.0, 10.0);
+        let mut sorted = data.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut prev = f64::NEG_INFINITY;
+        for i in 0..=10 {
+            let q = i as f64 / 10.0;
+            let p = percentile(&data, q);
+            assert!(p >= sorted[0] - 1e-12 && p <= sorted[sorted.len() - 1] + 1e-12);
+            assert!(p >= prev - 1e-12, "non-monotone at q={q}");
+            prev = p;
+        }
+        assert_eq!(percentile(&data, 0.0), sorted[0]);
+        assert_eq!(percentile(&data, 1.0), sorted[sorted.len() - 1]);
+    });
+}
+
+#[test]
+fn cosine_distance_properties() {
+    check("cosine symmetric, bounded, zero on self", N, 14, |rng| {
+        let n = usize_in(rng, 2, 64);
+        let a: Vec<f64> = (0..n).map(|_| rng.range(0.0, 1.0)).collect();
+        let b: Vec<f64> = (0..n).map(|_| rng.range(0.0, 1.0)).collect();
+        let d_ab = cosine_distance(&a, &b);
+        let d_ba = cosine_distance(&b, &a);
+        assert!((d_ab - d_ba).abs() < 1e-12);
+        assert!((-1e-12..=2.0).contains(&d_ab));
+        assert!(cosine_distance(&a, &a).abs() < 1e-9);
+        // scale invariance (one scalar for the whole vector)
+        let scale = rng.range(0.1, 9.0);
+        let a2: Vec<f64> = a.iter().map(|x| x * scale).collect();
+        assert!((cosine_distance(&a2, &b) - d_ab).abs() < 1e-9);
+    });
+}
+
+#[test]
+fn euclidean_triangle_inequality() {
+    check("triangle inequality", N, 15, |rng| {
+        let n = usize_in(rng, 2, 8);
+        let p: Vec<Vec<f64>> = (0..3)
+            .map(|_| (0..n).map(|_| rng.range(-5.0, 5.0)).collect())
+            .collect();
+        let ab = euclidean(&p[0], &p[1]);
+        let bc = euclidean(&p[1], &p[2]);
+        let ac = euclidean(&p[0], &p[2]);
+        assert!(ac <= ab + bc + 1e-9);
+    });
+}
+
+#[test]
+fn dendrogram_cluster_counts() {
+    check("slice granularity", 30, 16, |rng| {
+        let n = usize_in(rng, 2, 12);
+        let rows: Vec<Vec<f64>> = (0..n)
+            .map(|_| (0..6).map(|_| rng.range(0.0, 1.0)).collect())
+            .collect();
+        let d = pairwise(Metric::Cosine, &rows);
+        let dg = Dendrogram::build(&d, Linkage::Ward);
+        assert_eq!(dg.merges.len(), n - 1);
+        // extremes
+        let k_lo = dg.slice(f64::INFINITY).iter().max().unwrap() + 1;
+        assert_eq!(k_lo, 1);
+        let singles = dg.slice(-1.0);
+        assert_eq!(
+            singles.iter().collect::<std::collections::HashSet<_>>().len(),
+            n
+        );
+        // every k in 1..=n reachable via cut_k
+        for k in 1..=n {
+            let labels = dg.cut_k(k);
+            let got = labels.iter().collect::<std::collections::HashSet<_>>().len();
+            assert!(got <= n && got >= 1);
+        }
+    });
+}
+
+#[test]
+fn lloyd_step_never_increases_inertia() {
+    check("kmeans monotone", 40, 17, |rng| {
+        let n = usize_in(rng, 4, 40);
+        let k = usize_in(rng, 1, 4.min(n));
+        let pts: Vec<Vec<f64>> = (0..n)
+            .map(|_| vec![rng.range(0.0, 100.0), rng.range(0.0, 60.0)])
+            .collect();
+        let mut cents: Vec<Vec<f64>> = (0..k)
+            .map(|_| vec![rng.range(0.0, 100.0), rng.range(0.0, 60.0)])
+            .collect();
+        let inertia = |cents: &Vec<Vec<f64>>| -> f64 {
+            pts.iter()
+                .map(|p| {
+                    cents
+                        .iter()
+                        .map(|c| euclidean(p, c).powi(2))
+                        .fold(f64::INFINITY, f64::min)
+                })
+                .sum()
+        };
+        let mut prev = inertia(&cents);
+        for _ in 0..12 {
+            let (_, c2) = lloyd_step(&pts, &cents);
+            cents = c2;
+            let cur = inertia(&cents);
+            assert!(cur <= prev + 1e-6, "inertia rose {prev} -> {cur}");
+            prev = cur;
+        }
+    });
+}
+
+#[test]
+fn kmeans_labels_well_formed() {
+    check("kmeans output", 30, 18, |rng| {
+        let n = usize_in(rng, 3, 30);
+        let k = usize_in(rng, 1, 3.min(n));
+        let pts: Vec<Vec<f64>> = (0..n)
+            .map(|_| vec![rng.range(0.0, 100.0), rng.range(0.0, 60.0)])
+            .collect();
+        let r = kmeans(&pts, k, 99, 4);
+        assert_eq!(r.assignments.len(), n);
+        assert!(r.assignments.iter().all(|&a| a < k));
+        assert!(r.inertia.is_finite() && r.inertia >= 0.0);
+    });
+}
+
+#[test]
+fn dvfs_cap_never_exceeded_under_random_power() {
+    check("cap invariant", N, 19, |rng| {
+        let spec = GpuSpec::mi300x();
+        let cap = rng.range(spec.f_min_mhz, spec.f_max_mhz);
+        let mut c = DvfsController::new(&spec, DvfsMode::Cap(cap));
+        for _ in 0..200 {
+            c.step(rng.range(0.0, 2.0 * spec.tdp_w), rng.uniform());
+            assert!(c.frequency_mhz() <= c.ceiling_mhz() + 1e-9);
+            assert!(c.frequency_mhz() >= spec.f_min_mhz - 1e-9);
+        }
+    });
+}
+
+#[test]
+fn kernel_progress_matches_closed_form() {
+    check("roofline closed form", N, 20, |rng| {
+        let tc = rng.range(0.05, 10.0);
+        let tm = rng.range(0.05, 10.0);
+        let f = rng.range(600.0, 2100.0);
+        let k = KernelDesc::new("k", tc, tm, 50.0, 20.0, 0.5);
+        let want = k.duration_at(f, 2100.0);
+        let mut p = KernelProgress::start(&k);
+        let dt = 0.01;
+        let mut t = 0.0;
+        while !p.advance(dt, f, 2100.0) {
+            t += dt;
+            assert!(t < 1e5);
+        }
+        t += dt;
+        assert!((t - want).abs() <= dt * 2.0, "got {t} want {want}");
+    });
+}
+
+#[test]
+fn trace_cdf_is_a_cdf() {
+    check("cdf monotone in [0,1]", N, 21, |rng| {
+        let watts = vec_f64(rng, 1024, 0.0, 1500.0);
+        let t = PowerTrace::from_watts(watts, 1.5, 750.0);
+        let grid: Vec<f64> = (0..=40).map(|i| i as f64 * 0.05).collect();
+        let cdf = t.cdf_rel(&grid);
+        for w in cdf.windows(2) {
+            assert!(w[1] >= w[0]);
+        }
+        assert!(cdf.iter().all(|&x| (0.0..=1.0).contains(&x)));
+        assert_eq!(*cdf.last().unwrap(), 1.0); // grid reaches 2.0 > max/clamp
+    });
+}
+
+#[test]
+fn json_roundtrip_random_structures() {
+    use minos::util::json::{arr, num, obj, s, Json};
+    check("json roundtrip", N, 22, |rng| {
+        let v = obj(vec![
+            ("x", num(rng.range(-1e6, 1e6))),
+            ("s", s(&format!("str-{}", rng.next_u64()))),
+            (
+                "a",
+                arr((0..usize_in(rng, 0, 8))
+                    .map(|_| num(rng.range(-10.0, 10.0)))
+                    .collect()),
+            ),
+            ("b", Json::Bool(rng.uniform() < 0.5)),
+            ("n", Json::Null),
+        ]);
+        let text = v.dump();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back, v);
+    });
+}
