@@ -19,9 +19,14 @@ fn main() {
     let minos = MinosParams::default();
     let reg = workloads::registry();
 
-    // Reference set over all reference workloads (built once; this is
-    // the offline step the paper amortizes).
-    let wls: Vec<&workloads::Workload> = reg.util_reference();
+    // Reference set over all reference workloads (built once, on the
+    // exec pool; this is the offline step the paper amortizes).  Smoke
+    // mode keeps a subset so the CI bench job stays fast.
+    let wls: Vec<&workloads::Workload> = if minos::benchkit::smoke() {
+        reg.util_reference().into_iter().take(8).collect()
+    } else {
+        reg.util_reference()
+    };
     let t0 = std::time::Instant::now();
     let refset = ReferenceSet::build(&spec, &sim, &minos, &wls);
     println!(
@@ -31,7 +36,9 @@ fn main() {
         t0.elapsed()
     );
 
-    let target = TargetProfile::from_entry(refset.by_name("sdxl-b64").unwrap());
+    // sdxl-b64 may be outside the smoke subset; fall back to any entry.
+    let target =
+        TargetProfile::from_entry(refset.by_name("sdxl-b64").unwrap_or(&refset.entries[0]));
     let sel = SelectOptimalFreq::new(&refset, &minos);
 
     group("Algorithm 1 components");
@@ -53,7 +60,12 @@ fn main() {
     println!("{}", r.report());
 
     group("hold-one-out evaluation (refset rebuild per holdout app)");
-    let holdouts: Vec<String> = reg.holdout_set().iter().map(|w| w.name.clone()).collect();
+    let holdouts: Vec<String> = reg
+        .holdout_set()
+        .iter()
+        .map(|w| w.name.clone())
+        .filter(|n| refset.by_name(n).is_some()) // smoke subset safety
+        .collect();
     let r = bench(
         &format!("holdout loop ({} workloads)", holdouts.len()),
         Duration::from_secs(1),

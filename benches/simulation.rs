@@ -5,11 +5,13 @@
 //! Run with: `cargo bench --bench simulation`
 
 use minos::benchkit::{bench, black_box, group};
-use minos::config::{GpuSpec, SimParams};
+use minos::config::{GpuSpec, MinosParams, SimParams};
+use minos::exec;
+use minos::minos::reference_set::ReferenceSet;
 use minos::sim::dvfs::DvfsMode;
-use minos::sim::profiler::{profile, ProfileRequest};
+use minos::sim::profiler::{profile, profile_batch, ProfileRequest};
 use minos::workloads;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 const BUDGET: Duration = Duration::from_millis(600);
 
@@ -53,11 +55,7 @@ fn main() {
     let r = bench("sweep milc-6 x9", Duration::from_secs(2), 1_000, || {
         let mut out = Vec::new();
         for &f in &sweep {
-            let mode = if (f - spec.f_max_mhz).abs() < 0.5 {
-                DvfsMode::Uncapped
-            } else {
-                DvfsMode::Cap(f)
-            };
+            let mode = DvfsMode::sweep_point(f, spec.f_max_mhz);
             out.push(profile(
                 &ProfileRequest::new(&spec, w, mode).with_params(&params),
             ));
@@ -65,4 +63,50 @@ fn main() {
         black_box(out)
     });
     println!("{}", r.report());
+
+    group("exec engine: same sweep via profile_batch (work-stealing pool)");
+    let reqs: Vec<ProfileRequest> = sweep
+        .iter()
+        .map(|&f| {
+            ProfileRequest::new(&spec, w, DvfsMode::sweep_point(f, spec.f_max_mhz))
+                .with_params(&params)
+        })
+        .collect();
+    for jobs in [1usize, 2, 4] {
+        exec::set_jobs(jobs);
+        let r = bench(&format!("profile_batch milc-6 x9, jobs={jobs}"), BUDGET, 1_000, || {
+            black_box(profile_batch(&reqs))
+        });
+        println!("{}", r.report());
+    }
+    exec::set_jobs(0); // clear the override
+
+    group("exec engine: reference-set build, --jobs 1 vs 4 (acceptance evidence)");
+    let minos_params = MinosParams::default();
+    let picks: Vec<&workloads::Workload> = ["sgemm", "milc-6", "sdxl-b64", "lammps-8x8x16"]
+        .iter()
+        .map(|n| reg.by_name(n).unwrap())
+        .collect();
+    let mut serial_secs = 0.0f64;
+    for jobs in [1usize, 2, 4] {
+        let t0 = Instant::now();
+        let rs = ReferenceSet::build_with_jobs(&spec, &params, &minos_params, &picks, jobs);
+        let dt = t0.elapsed().as_secs_f64();
+        if jobs == 1 {
+            serial_secs = dt;
+            println!(
+                "build_with_jobs(1): {:.3}s  ({} entries x {} freqs)",
+                dt,
+                rs.entries.len(),
+                rs.entries[0].scaling.points.len()
+            );
+        } else {
+            println!(
+                "build_with_jobs({jobs}): {:.3}s  speedup vs jobs=1: {:.2}x",
+                dt,
+                serial_secs / dt.max(1e-9)
+            );
+        }
+        black_box(rs);
+    }
 }

@@ -92,11 +92,7 @@ fn main() -> anyhow::Result<()> {
         // profiling savings vs sweeping the target
         let mut sweep = 0.0;
         for f in ctx.config.node.gpu.sweep_frequencies() {
-            let mode = if (f - ctx.config.node.gpu.f_max_mhz).abs() < 0.5 {
-                DvfsMode::Uncapped
-            } else {
-                DvfsMode::Cap(f)
-            };
+            let mode = DvfsMode::sweep_point(f, ctx.config.node.gpu.f_max_mhz);
             sweep += ctx.profile(name, mode)?.profiling_cost_s;
         }
         let savings = profiling_savings(prof.profiling_cost_s, sweep);

@@ -76,11 +76,7 @@ fn main() -> anyhow::Result<()> {
     // What a full sweep would have cost (the thing Minos avoids).
     let mut sweep_cost = 0.0;
     for f in ctx.config.node.gpu.sweep_frequencies() {
-        let mode = if (f - ctx.config.node.gpu.f_max_mhz).abs() < 0.5 {
-            DvfsMode::Uncapped
-        } else {
-            DvfsMode::Cap(f)
-        };
+        let mode = DvfsMode::sweep_point(f, ctx.config.node.gpu.f_max_mhz);
         sweep_cost += ctx.profile(&name, mode)?.profiling_cost_s;
     }
     println!(

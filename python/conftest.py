@@ -1,0 +1,8 @@
+"""Pytest path shim: make `compile` importable when the suite runs from
+the repo root (`python -m pytest python/tests`), matching the layout the
+AOT tooling assumes when invoked from `python/`."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))

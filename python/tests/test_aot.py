@@ -6,6 +6,8 @@ import os
 
 import pytest
 
+pytest.importorskip("jax", reason="jax is required for AOT export tests")
+
 import jax
 
 from compile import aot, model, shapes

@@ -6,6 +6,10 @@ cover the exact artifact shapes.
 
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis is required for the kernel sweeps")
+pytest.importorskip("jax", reason="jax is required for the kernel tests")
+
 from hypothesis import given, settings
 from hypothesis import strategies as st
 

@@ -4,6 +4,10 @@ spike_features pipeline."""
 
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis is required for the model sweeps")
+pytest.importorskip("jax", reason="jax is required for the model tests")
+
 from hypothesis import given, settings
 from hypothesis import strategies as st
 

@@ -3,7 +3,17 @@
 //! (`harness = false`): warm up, run timed iterations until a time
 //! budget or max-iteration count is hit, report mean / p50 / p95 and
 //! throughput.
+//!
+//! Two environment knobs, both wired into CI:
+//!
+//! * `MINOS_BENCH_SMOKE=1` clamps every bench to a few iterations and a
+//!   tiny budget so all bench targets can run on every PR — bench rot is
+//!   caught at run time, not just compile time.
+//! * `MINOS_BENCH_JSON=path` appends one JSON object per result (the
+//!   `BENCH_BASELINE.json` schema), giving PRs a machine-readable perf
+//!   trajectory.
 
+use std::io::Write as _;
 use std::time::{Duration, Instant};
 
 pub struct BenchResult {
@@ -41,10 +51,24 @@ pub fn fmt_ns(ns: f64) -> String {
     }
 }
 
+/// True when `MINOS_BENCH_SMOKE=1`: benches clamp their budget and
+/// iteration counts so CI can smoke-run every bench target per PR.
+pub fn smoke() -> bool {
+    std::env::var("MINOS_BENCH_SMOKE").map(|v| v == "1").unwrap_or(false)
+}
+
 /// Time `f` repeatedly: a few warmup runs, then timed runs until
 /// ~`budget` elapses (min 5, max `max_iters`).  The closure's return
-/// value is black-boxed so work isn't optimized away.
+/// value is black-boxed so work isn't optimized away.  In smoke mode
+/// ([`smoke`]) the budget/iteration caps collapse so the bench merely
+/// proves it still runs.  When `MINOS_BENCH_JSON` names a file, the
+/// result is also appended there as one JSON line.
 pub fn bench<T, F: FnMut() -> T>(name: &str, budget: Duration, max_iters: usize, mut f: F) -> BenchResult {
+    let (budget, max_iters) = if smoke() {
+        (budget.min(Duration::from_millis(25)), max_iters.min(5))
+    } else {
+        (budget, max_iters)
+    };
     for _ in 0..2 {
         black_box(f());
     }
@@ -58,14 +82,42 @@ pub fn bench<T, F: FnMut() -> T>(name: &str, budget: Duration, max_iters: usize,
     samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let n = samples.len();
     let mean = samples.iter().sum::<f64>() / n as f64;
-    BenchResult {
+    let result = BenchResult {
         name: name.to_string(),
         iters: n,
         mean_ns: mean,
         p50_ns: samples[n / 2],
         p95_ns: samples[(n as f64 * 0.95) as usize % n.max(1)],
         min_ns: samples[0],
+    };
+    if let Ok(path) = std::env::var("MINOS_BENCH_JSON") {
+        let _ = append_json_line(&path, &result);
     }
+    result
+}
+
+/// One JSON object describing a bench result (the `BENCH_BASELINE.json`
+/// record schema).
+pub fn result_json(r: &BenchResult) -> String {
+    use crate::util::json::{num, obj, s};
+    obj(vec![
+        ("name", s(&r.name)),
+        ("iters", num(r.iters as f64)),
+        ("mean_ns", num(r.mean_ns)),
+        ("p50_ns", num(r.p50_ns)),
+        ("p95_ns", num(r.p95_ns)),
+        ("min_ns", num(r.min_ns)),
+        ("smoke", crate::util::json::Json::Bool(smoke())),
+    ])
+    .dump()
+}
+
+fn append_json_line(path: &str, r: &BenchResult) -> std::io::Result<()> {
+    let mut file = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(path)?;
+    writeln!(file, "{}", result_json(r))
 }
 
 /// Opaque value sink (std::hint::black_box wrapper).
@@ -103,5 +155,16 @@ mod tests {
     fn max_iters_respected() {
         let r = bench("capped", Duration::from_secs(5), 7, || 0);
         assert!(r.iters <= 7);
+    }
+
+    #[test]
+    fn result_json_is_parseable() {
+        let r = bench("json", Duration::from_millis(5), 6, || 2 + 2);
+        let line = result_json(&r);
+        let j = crate::util::json::Json::parse(&line).unwrap();
+        assert_eq!(j.s("name").unwrap(), "json");
+        assert!(j.f("mean_ns").unwrap() >= 0.0);
+        assert!(j.u("iters").unwrap() >= 1);
+        assert!(j.get("smoke").is_some());
     }
 }

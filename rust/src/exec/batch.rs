@@ -1,0 +1,79 @@
+//! Batched parallel-map entry points over the shared [`WorkerPool`].
+//!
+//! These are the functions the fan-out call sites use:
+//! `sim::profiler::profile_batch`, reference-set construction, and the
+//! per-workload experiment loops.  All of them preserve input order, so
+//! swapping `iter().map(..).collect()` for `par_map` is a pure
+//! performance change.
+
+use crate::exec::pool::{current_jobs, WorkerPool};
+
+/// Parallel map with the process-wide worker count ([`current_jobs`]).
+/// Output order equals input order, bit-for-bit.
+pub fn par_map<T, R, F>(items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    par_map_jobs(current_jobs(), items, f)
+}
+
+/// Parallel map with an explicit worker count — `jobs == 1` is exactly
+/// the serial loop (no threads spawned), which is what the determinism
+/// tests compare against.
+pub fn par_map_jobs<T, R, F>(jobs: usize, items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    WorkerPool::new(jobs).map(items, f)
+}
+
+/// Parallel indexed map with the process-wide worker count.
+pub fn par_map_indexed<T, R, F>(items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    WorkerPool::with_current_jobs().map_indexed(items, f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn par_map_matches_serial_map() {
+        let items: Vec<i64> = (0..512).collect();
+        let serial: Vec<i64> = items.iter().map(|&x| x * x - 7).collect();
+        for jobs in [1, 2, 3, 8, 33] {
+            assert_eq!(par_map_jobs(jobs, &items, |&x| x * x - 7), serial, "jobs={jobs}");
+        }
+    }
+
+    #[test]
+    fn par_map_indexed_order() {
+        let items = vec![10usize, 20, 30];
+        let got = par_map_indexed(&items, |i, &x| x + i);
+        assert_eq!(got, vec![10, 21, 32]);
+    }
+
+    #[test]
+    fn results_may_be_fallible() {
+        // The experiment loops collect Result items and bubble the first
+        // error after the parallel phase; make sure the pattern works.
+        let items: Vec<u32> = (0..64).collect();
+        let results = par_map_jobs(4, &items, |&x| -> Result<u32, String> {
+            if x == 13 {
+                Err(format!("bad item {x}"))
+            } else {
+                Ok(x)
+            }
+        });
+        let collected: Result<Vec<u32>, String> = results.into_iter().collect();
+        assert_eq!(collected.unwrap_err(), "bad item 13");
+    }
+}

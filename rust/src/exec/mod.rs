@@ -1,0 +1,40 @@
+//! Std-only parallel execution engine for batched profiling.
+//!
+//! The Minos pipeline's dominant cost is profiling: building the
+//! reference set runs one simulated `profile()` per (workload ×
+//! candidate frequency) pair, and every experiment fans out per-workload
+//! loops on top of that.  This module provides the scoped-thread worker
+//! pool those fan-out sites share — no rayon, no crossbeam; the crate's
+//! vendored-dependency-free discipline is a feature (mirroring
+//! `benchkit`'s criterion stand-in).
+//!
+//! Design rules:
+//!
+//! * **Deterministic reduction order.**  Results are collected by input
+//!   index, so [`par_map`] is observably identical to
+//!   `items.iter().map(f).collect()` — parallel output is bit-identical
+//!   to serial.  That invariant is what makes threading the engine
+//!   through ~10 files safe and keeps every experiment table
+//!   reproducible (`rust/tests/exec_parallel.rs` proves it on a full
+//!   reference-set build).
+//! * **Work stealing over chunked batches.**  Workers claim contiguous
+//!   index chunks from a shared atomic cursor, so a straggler item (LSMS
+//!   simulates ~20× longer than SGEMM) cannot serialize the pool the way
+//!   a static 1/N split would.
+//! * **Panic transparency.**  A panic in a worker propagates out of the
+//!   pool on join, exactly like the serial loop it replaces.
+//!
+//! The pool size comes from, in priority order: the CLI's global
+//! `--jobs N` flag ([`set_jobs`]), the `MINOS_JOBS` environment
+//! variable, then [`available_parallelism`].
+//!
+//! ```
+//! let doubled = minos::exec::par_map_jobs(4, &[1, 2, 3], |x| x * 2);
+//! assert_eq!(doubled, vec![2, 4, 6]);
+//! ```
+
+pub mod batch;
+pub mod pool;
+
+pub use batch::{par_map, par_map_indexed, par_map_jobs};
+pub use pool::{available_parallelism, current_jobs, set_jobs, WorkerPool};

@@ -1,0 +1,221 @@
+//! The scoped-thread worker pool: work-stealing chunk dispatch with
+//! index-ordered (deterministic) result collection.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Process-wide `--jobs` override; 0 means "not set".
+static JOBS_OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+
+/// Number of hardware threads (1 if the query fails).
+pub fn available_parallelism() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Set the process-wide worker count (the CLI's global `--jobs N` flag).
+/// Passing 0 clears the override.
+pub fn set_jobs(n: usize) {
+    JOBS_OVERRIDE.store(n, Ordering::Relaxed);
+}
+
+/// Effective worker count: `set_jobs` override, else `MINOS_JOBS`, else
+/// [`available_parallelism`].
+pub fn current_jobs() -> usize {
+    let n = JOBS_OVERRIDE.load(Ordering::Relaxed);
+    if n > 0 {
+        return n;
+    }
+    if let Ok(v) = std::env::var("MINOS_JOBS") {
+        if let Ok(n) = v.parse::<usize>() {
+            if n > 0 {
+                return n;
+            }
+        }
+    }
+    available_parallelism()
+}
+
+/// Chunk granularity: a few chunks per worker for load balance, capped
+/// so tiny-item workloads don't thrash the shared cursor.
+fn chunk_size(n: usize, jobs: usize) -> usize {
+    (n / (jobs * 4)).clamp(1, 64)
+}
+
+/// A fixed-width worker pool.  `map`/`map_indexed` spawn scoped threads
+/// per call — workers borrow the inputs directly, so there is no channel
+/// serialization and no 'static bound on the work items.
+///
+/// For the profiling fan-outs this pool serves (each item simulates
+/// milliseconds-to-seconds of telemetry), per-call thread spawn cost is
+/// noise; the win is that `profile()` batches scale with cores.
+pub struct WorkerPool {
+    jobs: usize,
+}
+
+impl WorkerPool {
+    /// A pool with exactly `jobs` workers (clamped to at least 1).
+    pub fn new(jobs: usize) -> Self {
+        WorkerPool { jobs: jobs.max(1) }
+    }
+
+    /// A pool sized by [`current_jobs`].
+    pub fn with_current_jobs() -> Self {
+        Self::new(current_jobs())
+    }
+
+    pub fn jobs(&self) -> usize {
+        self.jobs
+    }
+
+    /// Parallel map preserving input order: equivalent to
+    /// `items.iter().map(f).collect()`, bit-for-bit.
+    pub fn map<T, R, F>(&self, items: &[T], f: F) -> Vec<R>
+    where
+        T: Sync,
+        R: Send,
+        F: Fn(&T) -> R + Sync,
+    {
+        self.map_indexed(items, |_, t| f(t))
+    }
+
+    /// Parallel map that also hands the closure the item index.
+    pub fn map_indexed<T, R, F>(&self, items: &[T], f: F) -> Vec<R>
+    where
+        T: Sync,
+        R: Send,
+        F: Fn(usize, &T) -> R + Sync,
+    {
+        let n = items.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let jobs = self.jobs.min(n);
+        if jobs == 1 {
+            // Serial fast path: no threads, no locks — and the reference
+            // semantics the parallel path must match exactly.
+            return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+        }
+
+        let chunk = chunk_size(n, jobs);
+        let cursor = AtomicUsize::new(0);
+        // One slot per input index; workers write disjoint slots, and the
+        // final collect reads them back in input order.  The per-item
+        // Mutex is uncontended (each slot is locked exactly once).
+        let slots: Vec<Mutex<Option<R>>> =
+            std::iter::repeat_with(|| Mutex::new(None)).take(n).collect();
+
+        std::thread::scope(|s| {
+            for _ in 0..jobs {
+                s.spawn(|| loop {
+                    let start = cursor.fetch_add(chunk, Ordering::Relaxed);
+                    if start >= n {
+                        break;
+                    }
+                    let end = (start + chunk).min(n);
+                    for i in start..end {
+                        let r = f(i, &items[i]);
+                        *slots[i].lock().expect("result slot poisoned") = Some(r);
+                    }
+                });
+            }
+            // scope joins every worker here; a worker panic re-raises.
+        });
+
+        slots
+            .into_iter()
+            .map(|slot| {
+                slot.into_inner()
+                    .expect("result slot poisoned")
+                    .expect("worker pool left a slot unfilled")
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_preserves_input_order() {
+        let items: Vec<usize> = (0..997).collect();
+        let got = WorkerPool::new(8).map(&items, |&x| x * 3);
+        let want: Vec<usize> = items.iter().map(|&x| x * 3).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn map_indexed_sees_true_indices() {
+        let items = vec!["a", "b", "c", "d", "e"];
+        let got = WorkerPool::new(3).map_indexed(&items, |i, s| format!("{i}:{s}"));
+        assert_eq!(got, vec!["0:a", "1:b", "2:c", "3:d", "4:e"]);
+    }
+
+    #[test]
+    fn empty_input_yields_empty_output() {
+        let items: Vec<u64> = Vec::new();
+        let got: Vec<u64> = WorkerPool::new(4).map(&items, |&x| x);
+        assert!(got.is_empty());
+    }
+
+    #[test]
+    fn single_item_runs_serially() {
+        let got = WorkerPool::new(16).map(&[41], |&x| x + 1);
+        assert_eq!(got, vec![42]);
+    }
+
+    #[test]
+    fn more_jobs_than_items_is_fine() {
+        let items = vec![1, 2, 3];
+        let got = WorkerPool::new(64).map(&items, |&x| x * x);
+        assert_eq!(got, vec![1, 4, 9]);
+    }
+
+    #[test]
+    fn worker_panic_propagates_to_caller() {
+        let items: Vec<usize> = (0..100).collect();
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            WorkerPool::new(4).map(&items, |&x| {
+                if x == 37 {
+                    panic!("injected worker failure");
+                }
+                x
+            })
+        }));
+        assert!(result.is_err(), "worker panic must propagate");
+    }
+
+    #[test]
+    fn pool_clamps_to_one_worker() {
+        assert_eq!(WorkerPool::new(0).jobs(), 1);
+        let got = WorkerPool::new(0).map(&[1, 2], |&x| x);
+        assert_eq!(got, vec![1, 2]);
+    }
+
+    #[test]
+    fn chunk_size_bounds() {
+        assert_eq!(chunk_size(1, 8), 1);
+        assert_eq!(chunk_size(10, 4), 1);
+        assert!(chunk_size(100_000, 2) <= 64);
+        assert!(chunk_size(64, 2) >= 1);
+    }
+
+    #[test]
+    fn current_jobs_is_positive() {
+        assert!(current_jobs() >= 1);
+        assert!(available_parallelism() >= 1);
+    }
+
+    #[test]
+    fn borrows_non_static_inputs() {
+        // The scoped pool must work on stack data with results borrowing
+        // nothing — the profiling call sites pass &[ProfileRequest].
+        let local: Vec<String> = (0..50).map(|i| format!("wl-{i}")).collect();
+        let lens = WorkerPool::new(4).map(&local, |s| s.len());
+        assert_eq!(lens.len(), 50);
+        assert_eq!(lens[0], 4);
+        assert_eq!(lens[10], 5);
+    }
+}

@@ -1,5 +1,5 @@
-//! Ablation experiments beyond the paper's figures — the design choices
-//! DESIGN.md calls out plus §4.1.2/§8 alternatives the paper mentions
+//! Ablation experiments beyond the paper's figures — the reproduction's
+//! own design choices plus §4.1.2/§8 alternatives the paper mentions
 //! but does not evaluate:
 //!
 //! * `ablation-metric`  — cosine vs euclidean vs diagonal-Mahalanobis
@@ -33,7 +33,10 @@ use crate::sim::profiler::{profile, ProfileRequest};
 use crate::workloads::Workload;
 
 /// Hold-one-out p90 bound error using a pluggable vector distance.
-fn holdout_with_distance<F: Fn(&[f64], &[f64]) -> f64>(
+/// Fans out per holdout workload on the [`crate::exec`] pool (the
+/// distance function must therefore be `Sync`); errors are reduced in
+/// holdout order so the summary is identical to the serial loop.
+fn holdout_with_distance<F: Fn(&[f64], &[f64]) -> f64 + Sync>(
     ctx: &mut ExperimentContext,
     dist: F,
     c: f64,
@@ -41,36 +44,31 @@ fn holdout_with_distance<F: Fn(&[f64], &[f64]) -> f64>(
     let params = ctx.config.minos.clone();
     let bound = params.power_bound_x;
     let rs = ctx.refset().clone();
-    let mut errs = Vec::new();
-    let mut hits = 0usize;
-    for w in ctx.registry.holdout_set() {
-        let entry = match rs.by_name(&w.name) {
-            Some(e) => e,
-            None => continue,
-        };
+    let names: Vec<String> = ctx
+        .registry
+        .holdout_set()
+        .iter()
+        .map(|w| w.name.clone())
+        .collect();
+    let per: Vec<Option<f64>> = crate::exec::par_map(&names, |name| {
+        let entry = rs.by_name(name)?;
         let target = TargetProfile::from_entry(entry);
         let cut = rs.without_app(&entry.app);
-        let tv = match target.vector_for(c) {
-            Some(v) => v,
-            None => continue,
-        };
-        let nn = cut
+        let tv = target.vector_for(c)?;
+        let (nn, _) = cut
             .power_entries(None)
             .into_iter()
             .filter_map(|e| e.vector_for(c).map(|ev| (e, dist(&tv.v, &ev.v))))
-            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
-        if let Some((nn, _)) = nn {
-            let sel = SelectOptimalFreq::new(&cut, &params);
-            let (cap, _) = sel.cap_power_centric(nn);
-            if let Some(p) = entry.scaling.at(cap) {
-                let err = (p.p90_rel - bound).max(0.0) * 100.0;
-                errs.push(err);
-                if err == 0.0 {
-                    hits += 1;
-                }
-            }
-        }
-    }
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())?;
+        let sel = SelectOptimalFreq::new(&cut, &params);
+        let (cap, _) = sel.cap_power_centric(nn);
+        entry
+            .scaling
+            .at(cap)
+            .map(|p| (p.p90_rel - bound).max(0.0) * 100.0)
+    });
+    let errs: Vec<f64> = per.into_iter().flatten().collect();
+    let hits = errs.iter().filter(|&&e| e == 0.0).count();
     Ok((mean(&errs), hits))
 }
 
@@ -177,11 +175,12 @@ pub fn pin(ctx: &mut ExperimentContext) -> anyhow::Result<String> {
     let bound = params.power_bound_x;
     let rs = ctx.refset().clone();
 
-    let mut rows = Vec::new();
-    let mut cap_errs = Vec::new();
-    let mut pin_errs = Vec::new();
-    for name in ["sdxl-b64", "lammps-8x8x16", "resnet50-imagenet-b256", "milc-24"] {
-        let w: Workload = ctx.registry.by_name(name).unwrap().clone();
+    // Per-workload cap/pin validation runs fan out on the exec pool; the
+    // reduction below walks results in workload order.
+    let names = ["sdxl-b64", "lammps-8x8x16", "resnet50-imagenet-b256", "milc-24"];
+    let registry = &ctx.registry;
+    let measured: Vec<(f64, f64, f64)> = crate::exec::par_map(&names, |&name| {
+        let w: Workload = registry.by_name(name).unwrap().clone();
         let entry = rs.by_name(name).unwrap();
         // cap-based selection (the paper's mechanism)
         let sel = SelectOptimalFreq::new(&rs, &params);
@@ -197,10 +196,16 @@ pub fn pin(ctx: &mut ExperimentContext) -> anyhow::Result<String> {
         )
         .trace
         .percentile_rel(0.90);
+        (f_cap, obs_cap, obs_pin)
+    });
+    let mut rows = Vec::new();
+    let mut cap_errs = Vec::new();
+    let mut pin_errs = Vec::new();
+    for (name, (f_cap, obs_cap, obs_pin)) in names.iter().zip(&measured) {
         cap_errs.push((obs_cap - bound).max(0.0) * 100.0);
         pin_errs.push((obs_pin - bound).max(0.0) * 100.0);
         rows.push(vec![
-            name.into(),
+            (*name).into(),
             format!("{f_cap:.0}"),
             format!("{obs_cap:.3}"),
             format!("{obs_pin:.3}"),
@@ -299,15 +304,15 @@ pub fn energy(ctx: &mut ExperimentContext) -> anyhow::Result<String> {
     let mut out = String::new();
     for name in ["deepmd-water-b64", "bfs-indochina", "milc-24"] {
         let w = ctx.registry.by_name(name).unwrap().clone();
+        // Fan the cap sweep out on the exec pool; rows reduce in sweep
+        // order so the table is identical to the serial loop's.
+        let profs = crate::exec::par_map(&sweep, |&f| {
+            let mode = DvfsMode::sweep_point(f, spec.f_max_mhz);
+            profile(&ProfileRequest::new(&spec, &w, mode).with_params(&sim))
+        });
         let mut rows = Vec::new();
         let mut best_edp = (0.0f64, f64::INFINITY);
-        for &f in &sweep {
-            let mode = if (f - spec.f_max_mhz).abs() < 0.5 {
-                DvfsMode::Uncapped
-            } else {
-                DvfsMode::Cap(f)
-            };
-            let p = profile(&ProfileRequest::new(&spec, &w, mode).with_params(&sim));
+        for (&f, p) in sweep.iter().zip(&profs) {
             let e_iter = p.energy_j / p.trace.duration_ms() * p.iter_time_ms;
             let edp = e_iter * p.iter_time_ms / 1000.0;
             if edp < best_edp.1 {
@@ -351,18 +356,19 @@ pub fn nodecap(ctx: &mut ExperimentContext) -> anyhow::Result<String> {
         for policy in [CapPolicy::Uniform, CapPolicy::MinosAware] {
             let p = plan(&rs, &jobs, budget, policy)
                 .ok_or_else(|| anyhow::anyhow!("plan failed"))?;
-            // validate by simulation at the planned caps
-            let mut obs_total = 0.0;
-            let mut slow = Vec::new();
-            for j in &p.jobs {
-                let w = ctx.registry.by_name(&j.workload).unwrap().clone();
+            // validate by simulation at the planned caps — one exec-pool
+            // item per job, reduced in plan order
+            let registry = &ctx.registry;
+            let vals: Vec<(f64, f64)> = crate::exec::par_map(&p.jobs, |j| {
+                let w = registry.by_name(&j.workload).unwrap().clone();
                 let prof = profile(
                     &ProfileRequest::new(&spec, &w, DvfsMode::Cap(j.cap_mhz)).with_params(&sim),
                 );
-                obs_total += prof.trace.percentile(0.90);
                 let base = rs.by_name(&j.workload).unwrap().scaling.uncapped().iter_time_ms;
-                slow.push(prof.iter_time_ms / base - 1.0);
-            }
+                (prof.trace.percentile(0.90), prof.iter_time_ms / base - 1.0)
+            });
+            let obs_total: f64 = vals.iter().map(|v| v.0).sum();
+            let slow: Vec<f64> = vals.iter().map(|v| v.1).collect();
             let geo = (slow.iter().map(|s| (1.0 + s).ln()).sum::<f64>()
                 / slow.len() as f64)
                 .exp()

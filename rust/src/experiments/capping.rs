@@ -15,44 +15,74 @@ pub fn fig6(ctx: &mut ExperimentContext) -> anyhow::Result<String> {
         ("High-spike", ["resnet50-imagenet-b256", "lammps-8x8x16"]),
         ("Mixed", ["deepmd-water-b64", "resnet50-cifar-b256"]),
     ];
+    const MODE_KINDS: [&str; 2] = ["cap", "pin"];
     let freqs = [1300.0, 1700.0, 2100.0];
     let grid: Vec<f64> = (0..=30).map(|i| 0.2 + i as f64 * 0.05).collect();
     let mut out = String::new();
-    for (group, workloads) in pairs {
-        for name in workloads {
-            out.push_str(&format!("--- {name} ({group}) ---\n"));
-            for mode_kind in ["cap", "pin"] {
-                let mut series = Vec::new();
-                let mut summary = Vec::new();
-                for &f in &freqs {
-                    let mode = match (mode_kind, f as i64) {
-                        ("cap", 2100) => DvfsMode::Uncapped,
-                        ("cap", _) => DvfsMode::Cap(f),
-                        (_, _) => DvfsMode::Pin(f),
-                    };
-                    let p = ctx.profile(name, mode)?;
-                    series.push((f, p.trace.cdf_rel(&grid)));
-                    summary.push(vec![
-                        format!("{mode_kind}{f:.0}"),
-                        format!("{:.2}", p.trace.percentile_rel(0.90)),
-                        format!("{:.0}%", p.trace.frac_above_tdp() * 100.0),
-                        format!("{:.2}", p.trace.peak() / p.trace.tdp_w),
-                    ]);
-                }
-                let named: Vec<(String, Vec<f64>)> = series
-                    .iter()
-                    .map(|(f, cdf)| (format!("{f:.0}MHz"), cdf.clone()))
-                    .collect();
-                let refs: Vec<(&str, Vec<f64>)> = named
-                    .iter()
-                    .map(|(n, v)| (n.as_str(), v.clone()))
-                    .collect();
-                out.push_str(&format!("{mode_kind} CDFs (x = r = P/TDP):\n"));
-                out.push_str(&line_plot(&grid, &refs, 70, 9));
-                out.push_str(&table(&["mode", "p90/TDP", ">TDP", "peak/TDP"], &summary));
+    let cx: &ExperimentContext = ctx;
+
+    // Flatten to one (workload, mode-kind, frequency) grid so the whole
+    // figure's 36 profiling runs share the exec pool instead of fanning
+    // out only three at a time; the reduction below walks the grid in
+    // the same nested order the serial loops used.
+    let names: Vec<(&str, &str)> = pairs
+        .iter()
+        .flat_map(|(g, ws)| ws.iter().map(move |&n| (*g, n)))
+        .collect();
+    let mut wls = Vec::with_capacity(names.len());
+    for (_, name) in &names {
+        wls.push(
+            cx.registry
+                .by_name(name)
+                .ok_or_else(|| anyhow::anyhow!("missing {name}"))?
+                .clone(),
+        );
+    }
+    let nf = freqs.len();
+    let tasks: Vec<(usize, usize, usize)> = (0..names.len())
+        .flat_map(|wi| {
+            (0..MODE_KINDS.len()).flat_map(move |mi| (0..nf).map(move |fi| (wi, mi, fi)))
+        })
+        .collect();
+    let profs = crate::exec::par_map(&tasks, |&(wi, mi, fi)| {
+        let f = freqs[fi];
+        let mode = match (MODE_KINDS[mi], f as i64) {
+            ("cap", 2100) => DvfsMode::Uncapped,
+            ("cap", _) => DvfsMode::Cap(f),
+            (_, _) => DvfsMode::Pin(f),
+        };
+        cx.profile_workload(&wls[wi], mode)
+    });
+
+    let mut profs = profs.into_iter();
+    for (group, name) in &names {
+        out.push_str(&format!("--- {name} ({group}) ---\n"));
+        for mode_kind in MODE_KINDS {
+            let mode_profs: Vec<_> = profs.by_ref().take(freqs.len()).collect();
+            let mut series = Vec::new();
+            let mut summary = Vec::new();
+            for (&f, p) in freqs.iter().zip(&mode_profs) {
+                series.push((f, p.trace.cdf_rel(&grid)));
+                summary.push(vec![
+                    format!("{mode_kind}{f:.0}"),
+                    format!("{:.2}", p.trace.percentile_rel(0.90)),
+                    format!("{:.0}%", p.trace.frac_above_tdp() * 100.0),
+                    format!("{:.2}", p.trace.peak() / p.trace.tdp_w),
+                ]);
             }
-            out.push('\n');
+            let named: Vec<(String, Vec<f64>)> = series
+                .iter()
+                .map(|(f, cdf)| (format!("{f:.0}MHz"), cdf.clone()))
+                .collect();
+            let refs: Vec<(&str, Vec<f64>)> = named
+                .iter()
+                .map(|(n, v)| (n.as_str(), v.clone()))
+                .collect();
+            out.push_str(&format!("{mode_kind} CDFs (x = r = P/TDP):\n"));
+            out.push_str(&line_plot(&grid, &refs, 70, 9));
+            out.push_str(&table(&["mode", "p90/TDP", ">TDP", "peak/TDP"], &summary));
         }
+        out.push('\n');
     }
     out.push_str(
         "Expected shape (Fig. 6): compute-sensitive workloads shift left as the\n\
@@ -95,15 +125,37 @@ pub fn fig7(ctx: &mut ExperimentContext) -> anyhow::Result<String> {
     }
 
     // LLaMA3 TTFT vs TBT (§6.2): profile phase-restricted variants.
+    // All ten (phase × mode) runs share one exec-pool grid — index 0 of
+    // each phase's slice is the uncapped baseline — and rows reduce in
+    // (phase, cap) order.
     out.push_str("--- LLaMA3-8B inference: TTFT (prefill) vs TBT (decode) ---\n");
-    let l3 = ctx.registry.by_name("llama3-infer-b32").unwrap().clone();
+    let cx: &ExperimentContext = ctx;
+    let l3 = cx.registry.by_name("llama3-infer-b32").unwrap().clone();
+    let caps = [1300.0, 1500.0, 1700.0, 1900.0];
+    let phases = ["prefill", "decode"];
+    let variants: Vec<_> = phases
+        .iter()
+        .map(|p| l3.restricted_to_phase(p).expect("llama3 phase"))
+        .collect();
+    let tasks: Vec<(usize, Option<f64>)> = (0..phases.len())
+        .flat_map(|pi| {
+            std::iter::once((pi, None)).chain(caps.iter().map(move |&f| (pi, Some(f))))
+        })
+        .collect();
+    let times = crate::exec::par_map(&tasks, |&(pi, cap)| {
+        let mode = match cap {
+            Some(f) => DvfsMode::Cap(f),
+            None => DvfsMode::Uncapped,
+        };
+        cx.profile_workload(&variants[pi], mode).iter_time_ms
+    });
     let mut rows = Vec::new();
-    for phase in ["prefill", "decode"] {
-        let wp = l3.restricted_to_phase(phase).unwrap();
-        let base = ctx.profile_workload(&wp, DvfsMode::Uncapped).iter_time_ms;
+    let mut times = times.into_iter();
+    for phase in phases {
+        let base = times.next().expect("baseline time");
         let mut cells = vec![phase.to_string()];
-        for f in [1300.0, 1500.0, 1700.0, 1900.0] {
-            let t = ctx.profile_workload(&wp, DvfsMode::Cap(f)).iter_time_ms;
+        for _ in &caps {
+            let t = times.next().expect("capped time");
             cells.push(format!("{:+.0}%", (t / base - 1.0) * 100.0));
         }
         rows.push(cells);

@@ -138,11 +138,7 @@ pub fn headline(ctx: &mut ExperimentContext) -> anyhow::Result<String> {
         let one = ctx.profile(name, DvfsMode::Uncapped)?.profiling_cost_s;
         let mut sweep_total = 0.0;
         for f in ctx.config.node.gpu.sweep_frequencies() {
-            let mode = if (f - ctx.config.node.gpu.f_max_mhz).abs() < 0.5 {
-                DvfsMode::Uncapped
-            } else {
-                DvfsMode::Cap(f)
-            };
+            let mode = DvfsMode::sweep_point(f, ctx.config.node.gpu.f_max_mhz);
             sweep_total += ctx.profile(name, mode)?.profiling_cost_s;
         }
         let savings = profiling_savings(one, sweep_total);

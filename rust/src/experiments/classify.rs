@@ -295,11 +295,18 @@ pub fn fig5(ctx: &mut ExperimentContext) -> anyhow::Result<String> {
             &["workload", "p50/TDP", "p90/TDP", "p99/TDP", "peak/TDP", ">TDP"],
             &rows,
         ));
-        // mean CDF of the group, from fresh uncapped profiles
+        // mean CDF of the group, from fresh uncapped profiles — one
+        // exec-pool item per member, averaged in member order
+        let cx: &ExperimentContext = ctx;
+        let cdfs: Vec<Vec<f64>> = crate::exec::par_map(&members, |n| {
+            let w = cx.registry.by_name(n).expect("refset member in registry").clone();
+            cx.profile_workload(&w, crate::sim::dvfs::DvfsMode::Uncapped)
+                .trace
+                .cdf_rel(&grid)
+        });
         let mut mean_cdf = vec![0.0; grid.len()];
-        for n in &members {
-            let p = ctx.profile(n, crate::sim::dvfs::DvfsMode::Uncapped)?;
-            for (i, v) in p.trace.cdf_rel(&grid).iter().enumerate() {
+        for cdf in &cdfs {
+            for (i, v) in cdf.iter().enumerate() {
                 mean_cdf[i] += v / members.len() as f64;
             }
         }

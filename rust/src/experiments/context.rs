@@ -94,7 +94,10 @@ impl ExperimentContext {
     }
 
     /// Profile an ad-hoc workload object (phase-restricted variants etc.).
-    pub fn profile_workload(&mut self, w: &Workload, mode: DvfsMode) -> Profile {
+    /// Takes `&self` (no memoization) so experiment drivers can fan
+    /// profiling out on the [`crate::exec`] pool through a shared
+    /// reference.
+    pub fn profile_workload(&self, w: &Workload, mode: DvfsMode) -> Profile {
         profile(&ProfileRequest::new(&self.config.node.gpu, w, mode).with_params(&self.config.sim))
     }
 }

@@ -46,6 +46,11 @@ pub struct PerfHoldout {
 }
 
 /// Evaluate the PowerCentric hold-one-out at quantile `q`.
+///
+/// The per-workload evaluations are independent (each one works on its
+/// own hold-one-out copy of the reference set), so they fan out on the
+/// [`crate::exec`] pool; results are reduced in holdout order, keeping
+/// the report rows identical to the serial loop.
 pub fn evaluate(ctx: &mut ExperimentContext, q: f64) -> anyhow::Result<Vec<PowerHoldout>> {
     let params = ctx.config.minos.clone();
     let bound = params.power_bound_x;
@@ -56,10 +61,9 @@ pub fn evaluate(ctx: &mut ExperimentContext, q: f64) -> anyhow::Result<Vec<Power
         .iter()
         .map(|w| w.name.clone())
         .collect();
-    let mut out = Vec::new();
-    for name in holdouts {
+    let results = crate::exec::par_map(&holdouts, |name| -> anyhow::Result<PowerHoldout> {
         let entry = rs
-            .by_name(&name)
+            .by_name(name)
             .ok_or_else(|| anyhow::anyhow!("{name} missing from refset"))?;
         let target = TargetProfile::from_entry(entry);
         let cut = rs.without_app(&entry.app);
@@ -86,7 +90,7 @@ pub fn evaluate(ctx: &mut ExperimentContext, q: f64) -> anyhow::Result<Vec<Power
             .map(|p| p.quantile_rel(q))
             .unwrap_or(f64::NAN);
 
-        out.push(PowerHoldout {
+        Ok(PowerHoldout {
             name: name.clone(),
             pwr_neighbor: nn.name.clone(),
             cosine_dist: dist,
@@ -99,12 +103,13 @@ pub fn evaluate(ctx: &mut ExperimentContext, q: f64) -> anyhow::Result<Vec<Power
             guerreiro_cap_mhz: gcap,
             guerreiro_observed_q_rel: gobs,
             guerreiro_bound_err_pp: (gobs - bound).max(0.0) * 100.0,
-        });
-    }
-    Ok(out)
+        })
+    });
+    results.into_iter().collect()
 }
 
-/// Evaluate the PerfCentric hold-one-out.
+/// Evaluate the PerfCentric hold-one-out (parallel per workload, reduced
+/// in holdout order).
 pub fn evaluate_perf(ctx: &mut ExperimentContext) -> anyhow::Result<Vec<PerfHoldout>> {
     let params = ctx.config.minos.clone();
     let bound = params.perf_bound_frac;
@@ -115,9 +120,10 @@ pub fn evaluate_perf(ctx: &mut ExperimentContext) -> anyhow::Result<Vec<PerfHold
         .iter()
         .map(|w| w.name.clone())
         .collect();
-    let mut out = Vec::new();
-    for name in holdouts {
-        let entry = rs.by_name(&name).unwrap();
+    let results = crate::exec::par_map(&holdouts, |name| -> anyhow::Result<PerfHoldout> {
+        let entry = rs
+            .by_name(name)
+            .ok_or_else(|| anyhow::anyhow!("{name} missing from refset"))?;
         let target = TargetProfile::from_entry(entry);
         let cut = rs.without_app(&entry.app);
         let sel = SelectOptimalFreq::new(&cut, &params);
@@ -129,7 +135,7 @@ pub fn evaluate_perf(ctx: &mut ExperimentContext) -> anyhow::Result<Vec<PerfHold
             .scaling
             .perf_degr_at(cap)
             .ok_or_else(|| anyhow::anyhow!("no scaling at {cap}"))?;
-        out.push(PerfHoldout {
+        Ok(PerfHoldout {
             name: name.clone(),
             util_neighbor: nn.name.clone(),
             euclid_dist: dist,
@@ -138,9 +144,9 @@ pub fn evaluate_perf(ctx: &mut ExperimentContext) -> anyhow::Result<Vec<PerfHold
             observed_degr: obs,
             bound_err_pp: (obs - bound).max(0.0) * 100.0,
             abs_err_pp: (pred - obs).abs() * 100.0,
-        });
-    }
-    Ok(out)
+        })
+    });
+    results.into_iter().collect()
 }
 
 /// Fig. 9: similarity matrix + Minos-vs-Guerreiro p90 errors + error-by-
@@ -347,8 +353,9 @@ pub fn fig12(ctx: &mut ExperimentContext) -> anyhow::Result<String> {
         .iter()
         .map(|w| w.name.clone())
         .collect();
-    let mut per_c: Vec<(f64, f64)> = Vec::new();
-    for &c in &params.bin_sizes {
+    // One bin size per pool item; the per-holdout inner loop stays
+    // serial (it is cheap relative to the neighbor scans).
+    let per_c: Vec<(f64, f64)> = crate::exec::par_map(&params.bin_sizes, |&c| {
         let mut errs = Vec::new();
         for name in &holdouts {
             let entry = rs.by_name(name).unwrap();
@@ -360,8 +367,8 @@ pub fn fig12(ctx: &mut ExperimentContext) -> anyhow::Result<String> {
                 errs.push((target.quantile(0.90) - nn.scaling.uncapped().p90_rel).abs());
             }
         }
-        per_c.push((c, mean(&errs)));
-    }
+        (c, mean(&errs))
+    });
     let base = per_c
         .iter()
         .find(|(c, _)| (*c - 0.1).abs() < 1e-9)

@@ -1,6 +1,7 @@
-//! Experiment drivers — one per table/figure of the paper (DESIGN.md §4
-//! maps ids to paper artifacts).  Every driver renders the same rows /
-//! series the paper reports, against the simulated substrate.
+//! Experiment drivers — one per table/figure of the paper (README.md
+//! § "Experiments" maps ids to paper artifacts).  Every driver renders
+//! the same rows / series the paper reports, against the simulated
+//! substrate.
 //!
 //! ids: fig1 fig2 fig3 fig4 fig5 fig6 fig7 fig8 fig9 fig10 fig11 fig12
 //!      table1 table2 headline all

@@ -2,7 +2,12 @@
 //! parsing; the vendored build has no clap).
 //!
 //! USAGE:
-//!   minos [--config FILE] <command> [args]
+//!   minos [--config FILE] [--jobs N] <command> [args]
+//!
+//! The global `--jobs N` flag sizes the exec worker pool every profiling
+//! fan-out runs on (reference-set sweeps, experiment drivers); the
+//! default is the machine's available parallelism.  Parallel runs are
+//! bit-identical to `--jobs 1`.
 //!
 //! COMMANDS:
 //!   list                              list the workload registry
@@ -11,7 +16,7 @@
 //!   select-freq <workload>            Algorithm 1, both objectives
 //!   experiment <id>                   fig1..fig12, table1, table2,
 //!                                     headline, all
-//!   serve [--jobs a,b,c] [--iterations N]
+//!   serve [--queue a,b,c] [--iterations N]
 //!   verify-artifacts                  PJRT vs native cross-check
 
 use minos::config::Config;
@@ -22,13 +27,14 @@ use minos::report::table;
 use minos::runtime::MinosRuntime;
 use minos::sim::dvfs::DvfsMode;
 
-const USAGE: &str = "usage: minos [--config FILE] <list|profile|classify|select-freq|experiment|serve|verify-artifacts> [args]
+const USAGE: &str = "usage: minos [--config FILE] [--jobs N] <list|profile|classify|select-freq|experiment|serve|verify-artifacts> [args]
+  --jobs N: worker threads for profiling fan-outs (default: available parallelism)
   profile <workload> [--cap MHZ | --pin MHZ]
   classify <workload>
   select-freq <workload>
   experiment <fig1..fig12|ablation-*|table1|table2|headline|all|ablations>
   classify-trace <power.csv> [--tdp W] [--sm PCT --dram PCT]
-  serve [--jobs a,b,c] [--iterations N]";
+  serve [--queue a,b,c] [--iterations N]";
 
 struct Args {
     items: Vec<String>,
@@ -46,6 +52,7 @@ impl Args {
         None
     }
 
+    #[allow(clippy::should_implement_trait)]
     fn next(&mut self) -> Option<String> {
         if self.items.is_empty() {
             None
@@ -63,6 +70,13 @@ fn main() -> anyhow::Result<()> {
         Some(p) => Config::from_file(&p)?,
         None => Config::default(),
     };
+    if let Some(v) = args.flag("--jobs") {
+        let n: usize = v
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--jobs expects a positive integer, got '{v}'"))?;
+        anyhow::ensure!(n > 0, "--jobs must be >= 1");
+        minos::exec::set_jobs(n);
+    }
     let cmd = args.next().unwrap_or_else(|| {
         eprintln!("{USAGE}");
         std::process::exit(2);
@@ -249,7 +263,7 @@ fn main() -> anyhow::Result<()> {
         }
         "serve" => {
             let jobs = args
-                .flag("--jobs")
+                .flag("--queue")
                 .unwrap_or_else(|| "faiss-b4096,qwen15-moe-b32,sdxl-b64,lsms".to_string());
             let iterations = args
                 .flag("--iterations")

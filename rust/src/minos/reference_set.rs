@@ -6,8 +6,7 @@
 use crate::config::{GpuSpec, MinosParams, SimParams};
 use crate::features::{spike_vector, SpikeVector, UtilPoint};
 use crate::sim::dvfs::DvfsMode;
-use crate::sim::profiler::{profile, Profile, ProfileRequest};
-use crate::trace::PowerTrace;
+use crate::sim::profiler::{Profile, ProfileRequest};
 use crate::workloads::Workload;
 
 /// Scaling observations at one frequency cap.
@@ -127,66 +126,80 @@ pub struct ReferenceSet {
 
 impl ReferenceSet {
     /// Build by sweeping every given workload across the cap range.
-    /// This is the expensive offline step Minos amortizes (§4.3).
+    /// This is the expensive offline step Minos amortizes (§4.3); the
+    /// (workload × frequency) profiling grid fans out on the
+    /// [`crate::exec`] worker pool sized by `exec::current_jobs()`.
     pub fn build(
         spec: &GpuSpec,
         sim: &SimParams,
         minos: &MinosParams,
         workloads: &[&Workload],
     ) -> ReferenceSet {
+        Self::build_with_jobs(spec, sim, minos, workloads, crate::exec::current_jobs())
+    }
+
+    /// [`ReferenceSet::build`] with an explicit worker count.
+    ///
+    /// Every `profile()` run seeds its RNG from (workload, mode) alone
+    /// and results are reduced in grid order, so the output is
+    /// bit-identical for every `jobs` value — `jobs = 1` is the serial
+    /// reference the determinism tests compare against.
+    pub fn build_with_jobs(
+        spec: &GpuSpec,
+        sim: &SimParams,
+        minos: &MinosParams,
+        workloads: &[&Workload],
+        jobs: usize,
+    ) -> ReferenceSet {
         let sweep = spec.sweep_frequencies();
-        let entries = workloads
-            .iter()
-            .map(|w| Self::build_entry(spec, sim, minos, w, &sweep))
+        let nf = sweep.len();
+        // Flat (workload, frequency) grid: the unit of parallelism is one
+        // profiling run, so a few long workloads cannot serialize the
+        // sweep the way per-workload fan-out would.
+        let grid: Vec<(usize, usize)> = (0..workloads.len())
+            .flat_map(|wi| (0..nf).map(move |fi| (wi, fi)))
             .collect();
+        let profiles = crate::exec::par_map_jobs(jobs, &grid, |&(wi, fi)| {
+            let mode = DvfsMode::sweep_point(sweep[fi], spec.f_max_mhz);
+            crate::sim::profiler::profile(
+                &ProfileRequest::new(spec, workloads[wi], mode).with_params(sim),
+            )
+        });
+
+        // Deterministic reduction: profiles arrive in grid order
+        // (wi * nf + fi), so chunking by workload reassembles each sweep
+        // exactly as the serial loop did.
+        let mut profiles = profiles.into_iter();
+        let mut entries = Vec::with_capacity(workloads.len());
+        for w in workloads {
+            let sweep_profiles: Vec<Profile> = profiles.by_ref().take(nf).collect();
+            let points: Vec<FreqPoint> = sweep
+                .iter()
+                .zip(&sweep_profiles)
+                .map(|(&f, p)| FreqPoint::from_profile(f, p))
+                .collect();
+            let uncapped = sweep_profiles.last().expect("sweep must be non-empty");
+            let vectors = minos
+                .bin_sizes
+                .iter()
+                .map(|&c| spike_vector(&uncapped.trace, c))
+                .collect();
+            entries.push(ReferenceEntry {
+                name: w.name.clone(),
+                app: w.app.clone(),
+                vectors,
+                util: UtilPoint::new(uncapped.app_sm_util, uncapped.app_dram_util),
+                mean_power_w: uncapped.trace.mean(),
+                scaling: ScalingData { points },
+                power_profiled: w.power_profiled,
+            });
+        }
         ReferenceSet {
             spec: spec.clone(),
             bin_sizes: minos.bin_sizes.clone(),
             entries,
             registry_fingerprint: crate::workloads::registry().fingerprint()
                 ^ crate::sim::SIM_MODEL_VERSION.wrapping_mul(0x9E3779B97F4A7C15),
-        }
-    }
-
-    fn build_entry(
-        spec: &GpuSpec,
-        sim: &SimParams,
-        minos: &MinosParams,
-        w: &Workload,
-        sweep: &[f64],
-    ) -> ReferenceEntry {
-        let mut points = Vec::with_capacity(sweep.len());
-        let mut uncapped_trace: Option<PowerTrace> = None;
-        let mut util = UtilPoint::new(0.0, 0.0);
-        let mut mean_w = 0.0;
-        for (i, &f) in sweep.iter().enumerate() {
-            let mode = if (f - spec.f_max_mhz).abs() < 0.5 {
-                DvfsMode::Uncapped
-            } else {
-                DvfsMode::Cap(f)
-            };
-            let p = profile(&ProfileRequest::new(spec, w, mode).with_params(sim));
-            points.push(FreqPoint::from_profile(f, &p));
-            if i == sweep.len() - 1 {
-                util = UtilPoint::new(p.app_sm_util, p.app_dram_util);
-                mean_w = p.trace.mean();
-                uncapped_trace = Some(p.trace);
-            }
-        }
-        let trace = uncapped_trace.expect("sweep must include uncapped");
-        let vectors = minos
-            .bin_sizes
-            .iter()
-            .map(|&c| spike_vector(&trace, c))
-            .collect();
-        ReferenceEntry {
-            name: w.name.clone(),
-            app: w.app.clone(),
-            vectors,
-            util,
-            mean_power_w: mean_w,
-            scaling: ScalingData { points },
-            power_profiled: w.power_profiled,
         }
     }
 

@@ -40,6 +40,18 @@ impl DvfsMode {
             DvfsMode::Pin(f) => format!("pin{f:.0}"),
         }
     }
+
+    /// Mode for one point of a frequency sweep: the top of the range runs
+    /// uncapped (that is how the sweep data is collected, §5.3.3),
+    /// everything below it is a cap.  Shared by every sweep site so the
+    /// 0.5 MHz tolerance can never drift between them.
+    pub fn sweep_point(f_mhz: f64, f_max_mhz: f64) -> DvfsMode {
+        if (f_mhz - f_max_mhz).abs() < 0.5 {
+            DvfsMode::Uncapped
+        } else {
+            DvfsMode::Cap(f_mhz)
+        }
+    }
 }
 
 #[derive(Debug, Clone)]
@@ -145,6 +157,24 @@ mod tests {
 
     fn spec() -> GpuSpec {
         GpuSpec::mi300x()
+    }
+
+    #[test]
+    fn sweep_point_top_is_uncapped_rest_are_caps() {
+        let s = spec();
+        assert_eq!(
+            DvfsMode::sweep_point(s.f_max_mhz, s.f_max_mhz),
+            DvfsMode::Uncapped
+        );
+        assert_eq!(
+            DvfsMode::sweep_point(s.f_max_mhz - 0.4, s.f_max_mhz),
+            DvfsMode::Uncapped,
+            "within the 0.5 MHz snap tolerance"
+        );
+        assert_eq!(
+            DvfsMode::sweep_point(1300.0, s.f_max_mhz),
+            DvfsMode::Cap(1300.0)
+        );
     }
 
     #[test]

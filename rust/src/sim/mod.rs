@@ -1,6 +1,6 @@
 //! Discrete-time GPU node simulator — the substrate standing in for the
-//! paper's MI300X / A100 testbeds (see DESIGN.md §1 for the substitution
-//! argument).
+//! paper's MI300X / A100 testbeds (see README.md § "Simulator substrate"
+//! for the substitution argument).
 //!
 //! The simulator produces exactly the two observables Minos consumes:
 //!

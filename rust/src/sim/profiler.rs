@@ -106,6 +106,19 @@ pub fn profile(req: &ProfileRequest) -> Profile {
     }
 }
 
+/// Run many profiling requests on the [`crate::exec`] worker pool.
+///
+/// Results come back in request order and each `Profile` is bit-identical
+/// to what `profile()` returns for the same request (every run derives
+/// its RNG stream from the workload name and DVFS mode, never from
+/// thread identity), so batching is a pure wall-clock optimization.
+/// This is the hot fan-out primitive behind reference-set construction
+/// (one request per workload × candidate frequency) and the experiment
+/// drivers.
+pub fn profile_batch(reqs: &[ProfileRequest]) -> Vec<Profile> {
+    crate::exec::par_map(reqs, profile)
+}
+
 fn fold_seed(s: &str) -> u64 {
     // FNV-1a
     let mut h: u64 = 0xcbf29ce484222325;
@@ -160,6 +173,27 @@ mod tests {
     #[test]
     fn weighted_utilization_empty() {
         assert_eq!(weighted_utilization(&[]), (0.0, 0.0));
+    }
+
+    #[test]
+    fn profile_batch_matches_serial_profiles() {
+        let spec = GpuSpec::mi300x();
+        let reg = workloads::registry();
+        let reqs: Vec<ProfileRequest> = ["sgemm", "milc-6"]
+            .iter()
+            .map(|n| {
+                ProfileRequest::new(&spec, reg.by_name(n).unwrap(), DvfsMode::Uncapped)
+                    .with_iterations(3)
+            })
+            .collect();
+        let batch = profile_batch(&reqs);
+        assert_eq!(batch.len(), 2);
+        for (got, req) in batch.iter().zip(&reqs) {
+            let want = profile(req);
+            assert_eq!(got.workload, want.workload);
+            assert_eq!(got.trace.watts, want.trace.watts);
+            assert_eq!(got.iter_time_ms, want.iter_time_ms);
+        }
     }
 
     #[test]

@@ -1,0 +1,149 @@
+//! Minimal in-tree stand-in for the `anyhow` crate, covering exactly the
+//! surface this workspace uses: [`Error`], [`Result`], the [`anyhow!`],
+//! [`bail!`] and [`ensure!`] macros, and `?`-conversion from any
+//! `std::error::Error` type.
+//!
+//! The build is fully vendored (no registry, no network); this shim keeps
+//! the familiar `anyhow::Result` idiom without pulling the real crate in.
+//! Like the real `anyhow::Error`, this type deliberately does NOT
+//! implement `std::error::Error` — that is what makes the blanket
+//! `From<E: std::error::Error>` impl coherent.
+
+use std::fmt;
+
+/// A message-carrying error type, convertible from any std error.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable (what `anyhow!` expands to).
+    pub fn msg<M: fmt::Display>(msg: M) -> Error {
+        Error {
+            msg: msg.to_string(),
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error { msg: e.to_string() }
+    }
+}
+
+/// `anyhow::Result<T>` — `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string or any displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an error.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error if a condition is not satisfied.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::anyhow!(concat!(
+                "condition failed: `",
+                stringify!($cond),
+                "`"
+            )));
+        }
+    };
+    ($cond:expr, $msg:literal $(,)?) => {
+        if !($cond) {
+            return Err($crate::anyhow!($msg));
+        }
+    };
+    ($cond:expr, $err:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::anyhow!($err));
+        }
+    };
+    ($cond:expr, $fmt:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($fmt, $($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        std::fs::read_to_string("/definitely/not/a/real/path/7d1f")?;
+        Ok(())
+    }
+
+    fn parse_fail() -> Result<u64> {
+        let n = u64::from_str_radix("zz", 16)?;
+        Ok(n)
+    }
+
+    fn ensured(ok: bool) -> Result<u32> {
+        ensure!(ok, "wanted {} but got {}", true, ok);
+        Ok(7)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        assert!(io_fail().is_err());
+        assert!(parse_fail().is_err());
+    }
+
+    #[test]
+    fn macros_produce_messages() {
+        let e = anyhow!("bad thing at byte {}", 12);
+        assert_eq!(format!("{e}"), "bad thing at byte 12");
+        assert_eq!(format!("{e:?}"), "bad thing at byte 12");
+        assert_eq!(format!("{e:#}"), "bad thing at byte 12");
+        let s: &str = "plain";
+        let e = anyhow!(s);
+        assert_eq!(e.to_string(), "plain");
+    }
+
+    #[test]
+    fn ensure_returns_early() {
+        assert_eq!(ensured(true).unwrap(), 7);
+        let e = ensured(false).unwrap_err();
+        assert!(e.to_string().contains("wanted true"));
+    }
+
+    #[test]
+    fn inline_captures_work() {
+        let name = "faiss";
+        let e = anyhow!("unknown workload {name}");
+        assert_eq!(e.to_string(), "unknown workload faiss");
+    }
+}
