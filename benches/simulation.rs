@@ -5,8 +5,10 @@
 //! Run with: `cargo bench --bench simulation`
 
 use minos::benchkit::{bench, black_box, group};
-use minos::config::{GpuSpec, MinosParams, SimParams};
+use minos::config::{GpuSpec, MinosParams, NodeSpec, SimParams};
+use minos::coordinator::{CapPolicy, Job, PowerAwareScheduler, SchedulerConfig};
 use minos::exec;
+use minos::minos::algorithm::Objective;
 use minos::minos::reference_set::ReferenceSet;
 use minos::sim::dvfs::DvfsMode;
 use minos::sim::profiler::{profile, profile_batch, ProfileRequest};
@@ -108,5 +110,52 @@ fn main() {
             );
         }
         black_box(rs);
+    }
+
+    group("coordinator: scheduler throughput (non-blocking submit -> collect)");
+    // End-to-end coordinator cost per job: classification (cached after
+    // the first job per app), per-node ledger admission, slot free-list,
+    // virtual-time release, co-location re-plans.
+    let refset = ReferenceSet::build(&spec, &params, &minos_params, &picks);
+    let queue: [&str; 4] = ["sgemm", "milc-6", "sdxl-b64", "lammps-8x8x16"];
+    let njobs = if minos::benchkit::smoke() { 8 } else { 64 };
+    for nodes in [1usize, 4] {
+        let r = bench(
+            &format!("serve {njobs} jobs, {nodes} node(s)"),
+            Duration::from_secs(3),
+            200,
+            || {
+                let sched = PowerAwareScheduler::new(
+                    SchedulerConfig {
+                        node: NodeSpec::hpc_fund(),
+                        nodes,
+                        policy: CapPolicy::MinosAware,
+                        sim: params.clone(),
+                        minos: minos_params.clone(),
+                        sim_ms_per_wall_ms: 0.0,
+                    },
+                    refset.clone(),
+                );
+                for i in 0..njobs {
+                    sched
+                        .submit(Job {
+                            id: i as u64,
+                            workload: queue[i % queue.len()].to_string(),
+                            objective: if i % 2 == 0 {
+                                Objective::PowerCentric
+                            } else {
+                                Objective::PerfCentric
+                            },
+                            iterations: 2,
+                        })
+                        .expect("submit");
+                }
+                let out = sched.collect(njobs);
+                sched.shutdown();
+                assert_eq!(out.len(), njobs);
+                black_box(out.len())
+            },
+        );
+        println!("{}   [{:.0} jobs/s]", r.report(), r.per_sec(njobs));
     }
 }

@@ -28,6 +28,8 @@ fn main() -> anyhow::Result<()> {
     let sched = PowerAwareScheduler::new(
         SchedulerConfig {
             node,
+            nodes: 1,
+            policy: minos::coordinator::CapPolicy::MinosAware,
             sim: config.sim.clone(),
             minos: config.minos.clone(),
             // pace execution so the 8 jobs overlap on the node
@@ -58,13 +60,15 @@ fn main() -> anyhow::Result<()> {
         })?;
     }
 
-    let outcomes = sched.collect(queue.len());
+    let mut outcomes = sched.collect(queue.len());
     sched.shutdown();
-    println!("id  workload                 objective     cap MHz  p90 W (pred)  peak W  iter ms   class");
+    outcomes.sort_by_key(|o| o.job.id);
+    println!("id  gpu  workload                 objective     cap MHz  p90 W (pred)  peak W  iter ms   class");
     for o in &outcomes {
         println!(
-            "{:>2}  {:<24} {:<12} {:>7.0}  {:>5.0} ({:>4.0})  {:>6.0}  {:>7.1}   {}",
+            "{:>2}  {:>3}  {:<24} {:<12} {:>7.0}  {:>5.0} ({:>4.0})  {:>6.0}  {:>7.1}   {}",
             o.job.id,
+            o.gpu,
             o.job.workload,
             format!("{:?}", o.job.objective),
             o.f_cap_mhz,

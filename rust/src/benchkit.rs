@@ -26,6 +26,16 @@ pub struct BenchResult {
 }
 
 impl BenchResult {
+    /// Mean throughput in items per second, for benches whose closure
+    /// processes `items` units per iteration (e.g. jobs per scheduler
+    /// run).
+    pub fn per_sec(&self, items: usize) -> f64 {
+        if self.mean_ns <= 0.0 {
+            return 0.0;
+        }
+        items as f64 / (self.mean_ns / 1e9)
+    }
+
     pub fn report(&self) -> String {
         format!(
             "{:<44} {:>8} iters   mean {:>12}   p50 {:>12}   p95 {:>12}   min {:>12}",
@@ -149,6 +159,21 @@ mod tests {
         assert!(fmt_ns(5_000.0).contains("us"));
         assert!(fmt_ns(5_000_000.0).contains("ms"));
         assert!(fmt_ns(5e9).contains(" s"));
+    }
+
+    #[test]
+    fn per_sec_inverts_mean() {
+        let r = BenchResult {
+            name: "x".into(),
+            iters: 5,
+            mean_ns: 1e9, // 1 s per iteration
+            p50_ns: 1e9,
+            p95_ns: 1e9,
+            min_ns: 1e9,
+        };
+        assert!((r.per_sec(10) - 10.0).abs() < 1e-9);
+        let degenerate = BenchResult { mean_ns: 0.0, ..r };
+        assert_eq!(degenerate.per_sec(10), 0.0);
     }
 
     #[test]

@@ -223,6 +223,10 @@ impl NodeSpec {
 #[derive(Debug, Clone)]
 pub struct Config {
     pub node: NodeSpec,
+    /// Number of identical nodes the coordinator shards jobs across
+    /// (`serve --nodes N` overrides; omitted in JSON ⇒ 1 for backwards
+    /// compatibility with single-node config files).
+    pub nodes: usize,
     pub sim: SimParams,
     pub minos: MinosParams,
 }
@@ -231,6 +235,7 @@ impl Default for Config {
     fn default() -> Self {
         Config {
             node: NodeSpec::hpc_fund(),
+            nodes: 1,
             sim: SimParams::default(),
             minos: MinosParams::default(),
         }
@@ -375,6 +380,7 @@ impl Config {
     pub fn to_json(&self) -> Json {
         obj(vec![
             ("node", self.node.to_json()),
+            ("nodes", num(self.nodes as f64)),
             ("sim", self.sim.to_json()),
             ("minos", self.minos.to_json()),
         ])
@@ -385,6 +391,7 @@ impl Config {
             node: NodeSpec::from_json(
                 j.get("node").ok_or_else(|| anyhow::anyhow!("missing node"))?,
             )?,
+            nodes: if j.get("nodes").is_some() { j.u("nodes")?.max(1) } else { 1 },
             sim: SimParams::from_json(
                 j.get("sim").ok_or_else(|| anyhow::anyhow!("missing sim"))?,
             )?,
@@ -432,8 +439,27 @@ mod tests {
         let text = c.to_json().dump();
         let back = Config::from_json_str(&text).unwrap();
         assert_eq!(back.node.gpu, c.node.gpu);
+        assert_eq!(back.nodes, c.nodes);
         assert_eq!(back.sim, c.sim);
         assert_eq!(back.minos, c.minos);
+    }
+
+    #[test]
+    fn config_without_nodes_key_defaults_to_one() {
+        // Backwards compatibility: single-node config files predate the
+        // `nodes` dimension.
+        let c = Config {
+            nodes: 4,
+            ..Config::default()
+        };
+        let text = c.to_json().dump();
+        assert!(text.contains("\"nodes\":4"));
+        let stripped = text.replace("\"nodes\":4,", "");
+        assert!(!stripped.contains("\"nodes\""));
+        let back = Config::from_json_str(&stripped).unwrap();
+        assert_eq!(back.nodes, 1);
+        // and the full roundtrip preserves the explicit value
+        assert_eq!(Config::from_json_str(&text).unwrap().nodes, 4);
     }
 
     #[test]

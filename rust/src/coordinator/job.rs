@@ -1,4 +1,6 @@
-//! Job descriptions and lifecycle states for the coordinator.
+//! Job descriptions, lifecycle states, and outcome records for the
+//! coordinator, plus the canonical deterministic outcome table used by
+//! the reproducibility checks.
 
 use crate::minos::algorithm::Objective;
 
@@ -28,6 +30,10 @@ pub enum JobState {
 #[derive(Debug, Clone)]
 pub struct JobOutcome {
     pub job: Job,
+    /// Node the job ran on.
+    pub node: usize,
+    /// Device id on that node — a real slot popped from the node's
+    /// free-list under the dispatcher, not a derived count.
     pub gpu: usize,
     pub f_cap_mhz: f64,
     pub pwr_neighbor: String,
@@ -41,5 +47,143 @@ pub struct JobOutcome {
     pub energy_j: f64,
     /// True if the workload was already classified (no profiling run).
     pub classification_cached: bool,
+    /// Simulated seconds spent profiling for this job's classification
+    /// (0 when the classification was served from the cache).
     pub profiling_cost_s: f64,
+    /// Virtual-time interval the job occupied its GPU slot (ms on the
+    /// scheduler's deterministic clock).
+    pub v_start_ms: f64,
+    pub v_end_ms: f64,
+}
+
+/// The canonical deterministic outcome table: one CSV row per job,
+/// sorted by job id.  It contains every field that is a pure function of
+/// (submission sequence, seed, scheduler config) — including placement
+/// and the virtual schedule — and is byte-identical across runs with the
+/// same inputs regardless of worker-thread interleaving.  (True
+/// *interactive* arrival timing relative to completions is inherently
+/// nondeterministic; the guarantee covers the batch submit-then-collect
+/// pattern `serve` and the tests use.)
+pub fn outcome_table(outcomes: &[JobOutcome]) -> String {
+    let mut rows: Vec<&JobOutcome> = outcomes.iter().collect();
+    rows.sort_by_key(|o| o.job.id);
+    let mut s = String::from(
+        "id,workload,objective,node,gpu,cap_mhz,pred_p90_w,obs_p90_w,obs_peak_w,\
+         iter_ms,energy_j,v_start_ms,v_end_ms,cached,profiling_s\n",
+    );
+    for o in rows {
+        s.push_str(&format!(
+            "{},{},{:?},{},{},{:.1},{:.6},{:.6},{:.6},{:.6},{:.6},{:.6},{:.6},{},{:.6}\n",
+            o.job.id,
+            o.job.workload,
+            o.job.objective,
+            o.node,
+            o.gpu,
+            o.f_cap_mhz,
+            o.predicted_p90_w,
+            o.observed_p90_w,
+            o.observed_peak_w,
+            o.iter_time_ms,
+            o.energy_j,
+            o.v_start_ms,
+            o.v_end_ms,
+            o.classification_cached,
+            o.profiling_cost_s,
+        ));
+    }
+    s
+}
+
+/// FNV-1a digest of [`outcome_table`] — a one-line reproducibility
+/// fingerprint (`serve` prints it so two runs can be compared at a
+/// glance).
+pub fn outcome_digest(outcomes: &[JobOutcome]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in outcome_table(outcomes).bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Count pairs of outcomes that claim the same (node, gpu) slot for
+/// overlapping virtual-time intervals — must be zero for any correct
+/// schedule (slot reuse after release is legal; concurrent double
+/// assignment is not).
+pub fn slot_overlaps(outcomes: &[JobOutcome]) -> usize {
+    let mut overlaps = 0;
+    for (i, a) in outcomes.iter().enumerate() {
+        for b in outcomes.iter().skip(i + 1) {
+            if a.node == b.node
+                && a.gpu == b.gpu
+                && a.v_start_ms < b.v_end_ms - 1e-9
+                && b.v_start_ms < a.v_end_ms - 1e-9
+            {
+                overlaps += 1;
+            }
+        }
+    }
+    overlaps
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn outcome(id: u64, node: usize, gpu: usize, start: f64, end: f64) -> JobOutcome {
+        JobOutcome {
+            job: Job {
+                id,
+                workload: "sgemm".into(),
+                objective: Objective::PowerCentric,
+                iterations: 1,
+            },
+            node,
+            gpu,
+            f_cap_mhz: 1700.0,
+            pwr_neighbor: "sgemm".into(),
+            util_neighbor: "sgemm".into(),
+            predicted_p90_w: 900.0,
+            observed_p90_w: 880.0,
+            observed_peak_w: 1100.0,
+            iter_time_ms: 2.5,
+            energy_j: 10.0,
+            classification_cached: false,
+            profiling_cost_s: 0.1,
+            v_start_ms: start,
+            v_end_ms: end,
+        }
+    }
+
+    #[test]
+    fn table_is_sorted_by_id_and_stable() {
+        let a = vec![outcome(2, 0, 0, 0.0, 1.0), outcome(1, 0, 1, 0.0, 1.0)];
+        let b = vec![outcome(1, 0, 1, 0.0, 1.0), outcome(2, 0, 0, 0.0, 1.0)];
+        assert_eq!(outcome_table(&a), outcome_table(&b));
+        assert_eq!(outcome_digest(&a), outcome_digest(&b));
+        let t = outcome_table(&a);
+        let first_data_line = t.lines().nth(1).unwrap();
+        assert!(first_data_line.starts_with("1,"));
+    }
+
+    #[test]
+    fn digest_changes_with_contents() {
+        let a = vec![outcome(1, 0, 0, 0.0, 1.0)];
+        let mut changed = a.clone();
+        changed[0].f_cap_mhz = 1800.0;
+        assert_ne!(outcome_digest(&a), outcome_digest(&changed));
+    }
+
+    #[test]
+    fn slot_overlap_detection() {
+        // same slot, overlapping intervals
+        let bad = vec![outcome(1, 0, 3, 0.0, 10.0), outcome(2, 0, 3, 5.0, 15.0)];
+        assert_eq!(slot_overlaps(&bad), 1);
+        // same slot, back-to-back reuse is legal
+        let reuse = vec![outcome(1, 0, 3, 0.0, 10.0), outcome(2, 0, 3, 10.0, 15.0)];
+        assert_eq!(slot_overlaps(&reuse), 0);
+        // same gpu id on different nodes is fine
+        let nodes = vec![outcome(1, 0, 3, 0.0, 10.0), outcome(2, 1, 3, 5.0, 15.0)];
+        assert_eq!(slot_overlaps(&nodes), 0);
+    }
 }

@@ -1,5 +1,6 @@
 //! Aggregated scheduler metrics — what a cluster operator would scrape.
 
+use crate::coordinator::nodecap::NodePlan;
 
 #[derive(Debug, Clone, Default)]
 pub struct SchedulerMetrics {
@@ -13,11 +14,26 @@ pub struct SchedulerMetrics {
     /// Total simulated profiling seconds spent / saved vs full sweeps.
     pub profiling_spent_s: f64,
     pub profiling_saved_s: f64,
-    /// Admission-control statistics.
+    /// Jobs that had to wait at the head of the admission queue before a
+    /// node had both a free GPU and power headroom.
     pub power_waits: usize,
-    /// Max of (sum of concurrent observed p90 power) seen (W).
+    /// Max of (sum of concurrent predicted p90 power) seen on any single
+    /// node (W).
     pub peak_admitted_p90_w: f64,
+    /// Per-node power budget (W) — all nodes are identical.
     pub node_budget_w: f64,
+    /// Cluster shape.
+    pub nodes: usize,
+    pub gpus_per_node: usize,
+    /// Per-node peak admitted p90 sums (W), indexed by node id.
+    pub node_peak_admitted_p90_w: Vec<f64>,
+    /// Deepest the admission queue ever got.
+    pub peak_pending: usize,
+    /// Co-located cap re-plans performed (`nodecap::plan` runs whenever a
+    /// node's resident mix changes).
+    pub replans: usize,
+    /// Latest cap plan per node (None when the node is idle).
+    pub node_plans: Vec<Option<NodePlan>>,
     /// p90-bound violations observed post-hoc (power objective only).
     pub bound_violations: usize,
     pub total_energy_j: f64,
@@ -26,8 +42,10 @@ pub struct SchedulerMetrics {
 impl SchedulerMetrics {
     pub fn summary(&self) -> String {
         format!(
-            "jobs {}/{} ok ({} failed) | cache hits {} | profiles {} ({:.1}s spent, {:.1}s saved) | \
-             power waits {} | peak admitted p90 {:.0}/{:.0} W | violations {} | energy {:.0} J",
+            "nodes {}x{}gpu | jobs {}/{} ok ({} failed) | cache hits {} | profiles {} ({:.1}s spent, {:.1}s saved) | \
+             power waits {} | peak pending {} | peak admitted p90 {:.0}/{:.0} W per node | replans {} | violations {} | energy {:.0} J",
+            self.nodes.max(1),
+            self.gpus_per_node,
             self.completed,
             self.submitted,
             self.failed,
@@ -36,10 +54,35 @@ impl SchedulerMetrics {
             self.profiling_spent_s,
             self.profiling_saved_s,
             self.power_waits,
+            self.peak_pending,
             self.peak_admitted_p90_w,
             self.node_budget_w,
+            self.replans,
             self.bound_violations,
             self.total_energy_j
         )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_mentions_the_load_bearing_numbers() {
+        let m = SchedulerMetrics {
+            submitted: 4,
+            completed: 4,
+            nodes: 2,
+            gpus_per_node: 8,
+            node_budget_w: 6000.0,
+            peak_admitted_p90_w: 5400.0,
+            replans: 7,
+            ..Default::default()
+        };
+        let s = m.summary();
+        assert!(s.contains("jobs 4/4 ok"), "{s}");
+        assert!(s.contains("nodes 2x8gpu"), "{s}");
+        assert!(s.contains("replans 7"), "{s}");
     }
 }

@@ -1,21 +1,30 @@
 //! The cluster coordinator — Minos deployed as a service (§4.3).
 //!
-//! A power-aware job scheduler for one multi-GPU node: jobs arrive on an
-//! async queue; unseen applications get a *single* default-frequency
-//! profiling run, are classified against the reference set (Algorithm
-//! 1), and receive a frequency cap matching their SLO objective
-//! (PerfCentric for latency-bound jobs, PowerCentric for throughput
-//! jobs).  A node-level governor admits jobs only while the sum of
-//! predicted p90 power draws fits the node budget — the power
+//! A power-aware job scheduler for a cluster of multi-GPU nodes: jobs
+//! arrive on a non-blocking admission queue (`submit` enqueues and
+//! returns immediately); a dispatcher thread gives unseen applications a
+//! *single* default-frequency profiling run, classifies them against the
+//! reference set (Algorithm 1), and assigns a frequency cap matching
+//! their SLO objective (PerfCentric for latency-bound jobs, PowerCentric
+//! for throughput jobs).  Per node, a governor admits jobs only while
+//! the sum of predicted p90 power draws fits the node budget — the power
 //! over-subscription use case of POLCA/TAPAS/PAL that the paper's
-//! classification enables.
+//! classification enables — and placement picks the node with the most
+//! power headroom.  GPU slots are owned objects handed out from a
+//! per-node free-list, and whenever a node's resident mix changes the
+//! coordinator re-plans its co-located cap vector via [`nodecap::plan`].
+//!
+//! Everything is deterministic given the seed and the submission
+//! sequence: completions are applied in virtual-time order, so the
+//! canonical [`outcome_table`] is byte-identical across runs regardless
+//! of worker-thread interleaving.
 
 pub mod job;
 pub mod metrics;
 pub mod nodecap;
 pub mod scheduler;
 
-pub use job::{Job, JobOutcome, JobState};
+pub use job::{outcome_digest, outcome_table, slot_overlaps, Job, JobOutcome, JobState};
 pub use metrics::SchedulerMetrics;
 pub use nodecap::{plan as plan_node_caps, CapPolicy, NodePlan};
-pub use scheduler::{PowerAwareScheduler, SchedulerConfig};
+pub use scheduler::{pace_sleep_us, PowerAwareScheduler, SchedulerConfig, MAX_PACE_SLEEP_US};

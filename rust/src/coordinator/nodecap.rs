@@ -20,6 +20,24 @@ pub enum CapPolicy {
     MinosAware,
 }
 
+impl CapPolicy {
+    /// Parse a CLI spelling (`--policy uniform|minos`).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "uniform" => Some(CapPolicy::Uniform),
+            "minos" | "minos-aware" | "minosaware" => Some(CapPolicy::MinosAware),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            CapPolicy::Uniform => "uniform",
+            CapPolicy::MinosAware => "minos",
+        }
+    }
+}
+
 /// One job's planned cap + predicted consequences.
 #[derive(Debug, Clone)]
 pub struct PlannedJob {
@@ -246,5 +264,16 @@ mod tests {
     #[test]
     fn unknown_workload_is_none() {
         assert!(plan(refset(), &["nope"], 1000.0, CapPolicy::Uniform).is_none());
+    }
+
+    #[test]
+    fn policy_parse_round_trips() {
+        assert_eq!(CapPolicy::parse("uniform"), Some(CapPolicy::Uniform));
+        assert_eq!(CapPolicy::parse("MINOS"), Some(CapPolicy::MinosAware));
+        assert_eq!(CapPolicy::parse("minos-aware"), Some(CapPolicy::MinosAware));
+        assert_eq!(CapPolicy::parse("bogus"), None);
+        for p in [CapPolicy::Uniform, CapPolicy::MinosAware] {
+            assert_eq!(CapPolicy::parse(p.label()), Some(p));
+        }
     }
 }

@@ -243,6 +243,8 @@ pub fn oversub(ctx: &mut ExperimentContext) -> anyhow::Result<String> {
     for budget_x in [8.0, 6.0, 5.0, 4.0] {
         let mut cfg = SchedulerConfig {
             node: ctx.config.node.clone(),
+            nodes: 1,
+            policy: crate::coordinator::CapPolicy::MinosAware,
             sim: ctx.config.sim.clone(),
             minos: ctx.config.minos.clone(),
             // pace execution so jobs genuinely overlap on the node

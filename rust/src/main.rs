@@ -16,11 +16,14 @@
 //!   select-freq <workload>            Algorithm 1, both objectives
 //!   experiment <id>                   fig1..fig12, table1, table2,
 //!                                     headline, all
-//!   serve [--queue a,b,c] [--iterations N]
+//!   serve [--queue a,b,c | --load N] [--iterations N]
+//!         [--nodes N] [--policy uniform|minos] [--budget W]
 //!   verify-artifacts                  PJRT vs native cross-check
 
 use minos::config::Config;
-use minos::coordinator::{Job, PowerAwareScheduler, SchedulerConfig};
+use minos::coordinator::{
+    outcome_digest, slot_overlaps, CapPolicy, Job, PowerAwareScheduler, SchedulerConfig,
+};
 use minos::experiments::{self, ExperimentContext};
 use minos::minos::algorithm::{Objective, SelectOptimalFreq, TargetProfile};
 use minos::report::table;
@@ -29,12 +32,13 @@ use minos::sim::dvfs::DvfsMode;
 
 const USAGE: &str = "usage: minos [--config FILE] [--jobs N] <list|profile|classify|select-freq|experiment|serve|verify-artifacts> [args]
   --jobs N: worker threads for profiling fan-outs (default: available parallelism)
-  profile <workload> [--cap MHZ | --pin MHZ]
+  profile <workload> [--cap MHZ | --pin MHZ]     (--cap and --pin are mutually exclusive)
   classify <workload>
   select-freq <workload>
   experiment <fig1..fig12|ablation-*|table1|table2|headline|all|ablations>
   classify-trace <power.csv> [--tdp W] [--sm PCT --dram PCT]
-  serve [--queue a,b,c] [--iterations N]";
+  serve [--queue a,b,c | --load N] [--iterations N] [--nodes N]
+        [--policy uniform|minos] [--budget W]";
 
 struct Args {
     items: Vec<String>,
@@ -48,6 +52,11 @@ impl Args {
                 self.items.remove(i);
                 return Some(v);
             }
+            // Flag present but its value is missing (last token):
+            // surface an empty value so every caller hard-errors
+            // instead of silently ignoring the flag.
+            self.items.remove(i);
+            return Some(String::new());
         }
         None
     }
@@ -60,6 +69,46 @@ impl Args {
             Some(self.items.remove(0))
         }
     }
+}
+
+/// Parse an optional `--flag value` pair, turning a malformed value into
+/// a hard error instead of silently falling back to the default (the old
+/// `.and_then(|v| v.parse().ok())` pattern made `--cap abc` run
+/// Uncapped).
+fn parse_flag<T: std::str::FromStr>(args: &mut Args, name: &str) -> anyhow::Result<Option<T>> {
+    match args.flag(name) {
+        None => Ok(None),
+        Some(v) => match v.parse::<T>() {
+            Ok(t) => Ok(Some(t)),
+            Err(_) => Err(anyhow::anyhow!("{name} expects a numeric value, got '{v}'")),
+        },
+    }
+}
+
+/// SLO objective heuristic for queue entries: latency-bound retrieval /
+/// inference jobs are PerfCentric, everything else PowerCentric (§4.3).
+fn default_objective(workload: &str) -> Objective {
+    if workload.contains("infer") || workload.contains("faiss") {
+        Objective::PerfCentric
+    } else {
+        Objective::PowerCentric
+    }
+}
+
+/// `serve --load N`: a deterministic generated high-load queue cycling
+/// over a fixed mixed pool (inference, training, HPC).
+fn generated_queue(n: usize) -> Vec<String> {
+    const POOL: [&str; 8] = [
+        "faiss-b4096",
+        "qwen15-moe-b32",
+        "sdxl-b64",
+        "lsms",
+        "llama3-infer-b32",
+        "lammps-8x8x16",
+        "milc-6",
+        "sgemm",
+    ];
+    (0..n).map(|i| POOL[i % POOL.len()].to_string()).collect()
 }
 
 fn main() -> anyhow::Result<()> {
@@ -106,12 +155,16 @@ fn main() -> anyhow::Result<()> {
             );
         }
         "profile" => {
-            let cap = args.flag("--cap").and_then(|v| v.parse::<f64>().ok());
-            let pin = args.flag("--pin").and_then(|v| v.parse::<f64>().ok());
+            let cap = parse_flag::<f64>(&mut args, "--cap")?;
+            let pin = parse_flag::<f64>(&mut args, "--pin")?;
+            anyhow::ensure!(
+                cap.is_none() || pin.is_none(),
+                "--cap and --pin are mutually exclusive; pass exactly one"
+            );
             let workload = args.next().ok_or_else(|| anyhow::anyhow!(USAGE))?;
             let mode = match (cap, pin) {
-                (Some(f), _) => DvfsMode::Cap(f),
-                (_, Some(f)) => DvfsMode::Pin(f),
+                (Some(f), None) => DvfsMode::Cap(f),
+                (None, Some(f)) => DvfsMode::Pin(f),
                 _ => DvfsMode::Uncapped,
             };
             let mut ctx = ExperimentContext::new(config);
@@ -197,12 +250,9 @@ fn main() -> anyhow::Result<()> {
         "classify-trace" => {
             // Classify REAL telemetry: a CSV power trace (watts per line
             // or t_ms,watts), optional utilization counters.
-            let tdp = args
-                .flag("--tdp")
-                .and_then(|v| v.parse().ok())
-                .unwrap_or(config.node.gpu.tdp_w);
-            let sm = args.flag("--sm").and_then(|v| v.parse::<f64>().ok());
-            let dram = args.flag("--dram").and_then(|v| v.parse::<f64>().ok());
+            let tdp = parse_flag::<f64>(&mut args, "--tdp")?.unwrap_or(config.node.gpu.tdp_w);
+            let sm = parse_flag::<f64>(&mut args, "--sm")?;
+            let dram = parse_flag::<f64>(&mut args, "--dram")?;
             let path = args.next().ok_or_else(|| anyhow::anyhow!(USAGE))?;
             let trace = minos::trace::import::load_power_csv(&path, config.sim.sample_dt_ms, tdp)?;
             println!(
@@ -262,52 +312,105 @@ fn main() -> anyhow::Result<()> {
             println!("{report}");
         }
         "serve" => {
-            let jobs = args
-                .flag("--queue")
-                .unwrap_or_else(|| "faiss-b4096,qwen15-moe-b32,sdxl-b64,lsms".to_string());
-            let iterations = args
-                .flag("--iterations")
-                .and_then(|v| v.parse().ok())
-                .unwrap_or(3usize);
+            let queue_flag = args.flag("--queue");
+            let load = parse_flag::<usize>(&mut args, "--load")?;
+            anyhow::ensure!(
+                queue_flag.is_none() || load.is_none(),
+                "--queue and --load are mutually exclusive"
+            );
+            let iterations = parse_flag::<usize>(&mut args, "--iterations")?.unwrap_or(3);
+            anyhow::ensure!(iterations > 0, "--iterations must be >= 1");
+            let nodes = parse_flag::<usize>(&mut args, "--nodes")?.unwrap_or(config.nodes);
+            anyhow::ensure!(nodes >= 1, "--nodes must be >= 1");
+            let budget = parse_flag::<f64>(&mut args, "--budget")?;
+            let policy = match args.flag("--policy") {
+                None => CapPolicy::MinosAware,
+                Some(p) => CapPolicy::parse(&p).ok_or_else(|| {
+                    anyhow::anyhow!("--policy expects 'uniform' or 'minos', got '{p}'")
+                })?,
+            };
+            let list: Vec<String> = match (queue_flag, load) {
+                (Some(q), _) => q
+                    .split(',')
+                    .map(|s| s.trim().to_string())
+                    .filter(|s| !s.is_empty())
+                    .collect(),
+                (None, Some(n)) => generated_queue(n),
+                (None, None) => generated_queue(4),
+            };
+            anyhow::ensure!(!list.is_empty(), "serve: empty job queue");
             let mut ctx = ExperimentContext::new(config.clone());
             let refset = ctx.refset().clone();
+            let mut node = config.node.clone();
+            if let Some(b) = budget {
+                anyhow::ensure!(b > 0.0, "--budget must be positive watts");
+                node.power_budget_w = b;
+            }
+            println!(
+                "serve: {} jobs on {} node(s) x {} {} | budget {:.0} W/node | policy {}",
+                list.len(),
+                nodes,
+                node.gpus_per_node,
+                node.gpu.name,
+                node.power_budget_w,
+                policy.label()
+            );
             let cfg = SchedulerConfig {
-                node: config.node.clone(),
+                node,
+                nodes,
+                policy,
                 sim: config.sim.clone(),
                 minos: config.minos.clone(),
                 sim_ms_per_wall_ms: 0.0,
             };
             let sched = PowerAwareScheduler::new(cfg, refset);
-            let list: Vec<&str> = jobs.split(',').map(|s| s.trim()).collect();
             for (i, wl) in list.iter().enumerate() {
-                let objective = if wl.contains("infer") || wl.contains("faiss") {
-                    Objective::PerfCentric
-                } else {
-                    Objective::PowerCentric
-                };
                 sched.submit(Job {
                     id: i as u64,
                     workload: wl.to_string(),
-                    objective,
+                    objective: default_objective(wl),
                     iterations,
                 })?;
             }
-            let outcomes = sched.collect(list.len());
+            let mut outcomes = sched.collect(list.len());
             sched.shutdown();
+            outcomes.sort_by_key(|o| o.job.id);
             for o in &outcomes {
                 println!(
-                    "job {:>2} {:<24} gpu{} cap {:.0} MHz  p90 {:.0} W (pred {:.0})  iter {:.1} ms  [{}]",
+                    "job {:>3} {:<24} n{}/gpu{} cap {:.0} MHz  p90 {:.0} W (pred {:.0})  iter {:.1} ms  v[{:.0}..{:.0}] ms  [{}]",
                     o.job.id,
                     o.job.workload,
+                    o.node,
                     o.gpu,
                     o.f_cap_mhz,
                     o.observed_p90_w,
                     o.predicted_p90_w,
                     o.iter_time_ms,
+                    o.v_start_ms,
+                    o.v_end_ms,
                     if o.classification_cached { "cached" } else { "profiled" }
                 );
             }
-            println!("\n{}", sched.metrics().summary());
+            let overlaps = slot_overlaps(&outcomes);
+            println!(
+                "slot overlap: {}",
+                if overlaps == 0 {
+                    "none".to_string()
+                } else {
+                    format!("{overlaps} OVERLAPPING PAIRS — scheduler bug")
+                }
+            );
+            println!("outcome digest: {:#018x}", outcome_digest(&outcomes));
+            let m = sched.metrics();
+            println!("\n{}", m.summary());
+            anyhow::ensure!(overlaps == 0, "duplicate concurrent GPU assignment detected");
+            anyhow::ensure!(
+                m.failed == 0 && outcomes.len() == list.len(),
+                "only {}/{} jobs completed ({} failed)",
+                outcomes.len(),
+                list.len(),
+                m.failed
+            );
         }
         "verify-artifacts" => {
             let rt = MinosRuntime::auto();

@@ -1,0 +1,283 @@
+//! Integration tests for the non-blocking multi-node coordinator:
+//! soak under a tight budget, GPU slot ownership, collect() liveness,
+//! and bit-identical determinism across runs.
+
+use minos::config::{GpuSpec, MinosParams, NodeSpec, SimParams};
+use minos::coordinator::{
+    outcome_table, slot_overlaps, CapPolicy, Job, JobOutcome, PowerAwareScheduler, SchedulerConfig,
+};
+use minos::minos::algorithm::Objective;
+use minos::minos::reference_set::ReferenceSet;
+use minos::workloads;
+use std::sync::OnceLock;
+
+fn refset() -> &'static ReferenceSet {
+    static RS: OnceLock<ReferenceSet> = OnceLock::new();
+    RS.get_or_init(|| {
+        let reg = workloads::registry();
+        let picks: Vec<&workloads::Workload> =
+            ["sdxl-b64", "lammps-8x8x16", "bfs-indochina", "milc-6"]
+                .iter()
+                .map(|n| reg.by_name(n).unwrap())
+                .collect();
+        ReferenceSet::build(
+            &GpuSpec::mi300x(),
+            &SimParams::default(),
+            &MinosParams::default(),
+            &picks,
+        )
+    })
+}
+
+/// A deterministic 32-job mixed queue cycling over six applications.
+fn soak_queue() -> Vec<Job> {
+    const POOL: [&str; 6] = [
+        "faiss-b4096",
+        "qwen15-moe-b32",
+        "sdxl-b64",
+        "lsms",
+        "milc-6",
+        "lammps-8x8x16",
+    ];
+    (0..32u64)
+        .map(|i| Job {
+            id: i,
+            workload: POOL[i as usize % POOL.len()].to_string(),
+            objective: if i % 3 == 0 {
+                Objective::PerfCentric
+            } else {
+                Objective::PowerCentric
+            },
+            iterations: 2,
+        })
+        .collect()
+}
+
+fn run_soak(
+    nodes: usize,
+    budget_w: f64,
+) -> (
+    Vec<JobOutcome>,
+    minos::coordinator::SchedulerMetrics,
+    minos::coordinator::SchedulerMetrics,
+) {
+    let mut node = NodeSpec::hpc_fund();
+    node.gpus_per_node = 4;
+    node.power_budget_w = budget_w;
+    let cfg = SchedulerConfig {
+        node,
+        nodes,
+        policy: CapPolicy::MinosAware,
+        sim: SimParams::default(),
+        minos: MinosParams::default(),
+        sim_ms_per_wall_ms: 0.0,
+    };
+    let sched = PowerAwareScheduler::new(cfg, refset().clone());
+    let queue = soak_queue();
+    for j in &queue {
+        sched.submit(j.clone()).unwrap();
+    }
+    // mid-run snapshot: half the queue collected, nodes still busy
+    let mut outcomes = sched.collect(queue.len() / 2);
+    let mid = sched.metrics();
+    outcomes.extend(sched.collect(queue.len() - outcomes.len()));
+    sched.shutdown();
+    (outcomes, mid, sched.metrics())
+}
+
+#[test]
+fn soak_two_nodes_tight_budget() {
+    // 32 jobs, 2 nodes x 4 GPUs, 2000 W per node — roughly two hot jobs'
+    // worth of p90, so admission must serialize and shard.
+    let budget = 2000.0;
+    let (outcomes, mid, m) = run_soak(2, budget);
+
+    // every job's outcome arrives
+    assert_eq!(outcomes.len(), 32, "all outcomes must arrive");
+    assert_eq!(m.completed, 32);
+    assert_eq!(m.failed, 0);
+    let mut ids: Vec<u64> = outcomes.iter().map(|o| o.job.id).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, (0..32).collect::<Vec<u64>>());
+
+    // the ledger held on *every* node (non-tautological: the idle-node
+    // bypass could have exceeded the budget if any single job's p90 were
+    // larger, and a buggy ledger could have stacked two hot jobs)
+    assert_eq!(m.node_peak_admitted_p90_w.len(), 2);
+    for (i, &peak) in m.node_peak_admitted_p90_w.iter().enumerate() {
+        assert!(
+            peak <= budget + 1e-6,
+            "node {i} peak admitted p90 {peak} W exceeds budget {budget} W"
+        );
+        assert!(peak > 0.0, "node {i} never admitted anything");
+    }
+    assert!(m.peak_admitted_p90_w <= budget + 1e-6);
+    assert!(m.power_waits >= 1, "a tight budget must force waits");
+
+    // both nodes actually ran jobs, and no slot was double-assigned
+    let nodes_used: std::collections::HashSet<usize> =
+        outcomes.iter().map(|o| o.node).collect();
+    assert_eq!(nodes_used.len(), 2, "placement must shard across nodes");
+    assert_eq!(slot_overlaps(&outcomes), 0);
+
+    // co-location re-planning ran; any plan captured while nodes were
+    // busy (mid-run snapshot) fits the budget
+    assert!(m.replans >= 2, "node mix changes must trigger re-plans");
+    for p in mid.node_plans.iter().flatten() {
+        assert!(
+            p.predicted_total_p90_w <= budget * 1.01,
+            "planned total {} exceeds budget {budget}",
+            p.predicted_total_p90_w
+        );
+    }
+}
+
+#[test]
+fn soak_is_bit_identical_across_runs() {
+    let (a, _, ma) = run_soak(2, 2000.0);
+    let (b, _, mb) = run_soak(2, 2000.0);
+    // per-job caps bit-identical
+    let caps = |o: &[JobOutcome]| {
+        let mut v: Vec<(u64, u64)> = o.iter().map(|o| (o.job.id, o.f_cap_mhz.to_bits())).collect();
+        v.sort_unstable();
+        v
+    };
+    assert_eq!(caps(&a), caps(&b), "caps must be bit-identical across runs");
+    // the whole canonical table (placement, virtual schedule, observed
+    // telemetry) is byte-identical
+    assert_eq!(outcome_table(&a), outcome_table(&b));
+    assert_eq!(ma.peak_admitted_p90_w.to_bits(), mb.peak_admitted_p90_w.to_bits());
+    assert_eq!(ma.replans, mb.replans);
+}
+
+#[test]
+fn concurrent_jobs_get_distinct_gpu_ids() {
+    // 8 distinct-app jobs, one 8-GPU node, effectively unlimited budget:
+    // all eight overlap in virtual time and must hold distinct slots.
+    let mut node = NodeSpec::hpc_fund();
+    node.power_budget_w = 1e9;
+    let cfg = SchedulerConfig {
+        node,
+        ..Default::default()
+    };
+    let sched = PowerAwareScheduler::new(cfg, refset().clone());
+    let pool = [
+        "faiss-b4096",
+        "qwen15-moe-b32",
+        "sdxl-b64",
+        "lsms",
+        "milc-6",
+        "lammps-8x8x16",
+        "sgemm",
+        "llama3-infer-b32",
+    ];
+    for (i, wl) in pool.iter().enumerate() {
+        sched
+            .submit(Job {
+                id: i as u64,
+                workload: wl.to_string(),
+                objective: Objective::PowerCentric,
+                iterations: 10,
+            })
+            .unwrap();
+    }
+    let outcomes = sched.collect(pool.len());
+    sched.shutdown();
+    assert_eq!(outcomes.len(), 8);
+    let slots: std::collections::HashSet<(usize, usize)> =
+        outcomes.iter().map(|o| (o.node, o.gpu)).collect();
+    assert_eq!(
+        slots.len(),
+        8,
+        "8 concurrent jobs must hold 8 distinct GPU slots, got {slots:?}"
+    );
+    for o in &outcomes {
+        assert!(o.gpu < 8, "gpu id {} out of range", o.gpu);
+        assert_eq!(o.node, 0);
+    }
+    assert_eq!(slot_overlaps(&outcomes), 0);
+}
+
+#[test]
+fn four_nodes_sixty_four_jobs_acceptance() {
+    // The PR acceptance scenario: serve --nodes 4 with a 64-job queue.
+    let run = || {
+        let cfg = SchedulerConfig {
+            node: NodeSpec::hpc_fund(),
+            nodes: 4,
+            policy: CapPolicy::MinosAware,
+            sim: SimParams::default(),
+            minos: MinosParams::default(),
+            sim_ms_per_wall_ms: 0.0,
+        };
+        let sched = PowerAwareScheduler::new(cfg, refset().clone());
+        const POOL: [&str; 8] = [
+            "faiss-b4096",
+            "qwen15-moe-b32",
+            "sdxl-b64",
+            "lsms",
+            "llama3-infer-b32",
+            "lammps-8x8x16",
+            "milc-6",
+            "sgemm",
+        ];
+        for i in 0..64u64 {
+            sched
+                .submit(Job {
+                    id: i,
+                    workload: POOL[i as usize % POOL.len()].to_string(),
+                    objective: if i % 2 == 0 {
+                        Objective::PowerCentric
+                    } else {
+                        Objective::PerfCentric
+                    },
+                    iterations: 2,
+                })
+                .unwrap();
+        }
+        let outcomes = sched.collect(64);
+        sched.shutdown();
+        (outcomes, sched.metrics())
+    };
+    let (a, m) = run();
+    assert_eq!(a.len(), 64);
+    assert_eq!(m.completed, 64);
+    assert_eq!(slot_overlaps(&a), 0, "zero duplicate GPU assignments");
+    for (i, &peak) in m.node_peak_admitted_p90_w.iter().enumerate() {
+        assert!(peak <= m.node_budget_w + 1e-6, "node {i} ledger over budget");
+    }
+    let (b, _) = run();
+    assert_eq!(outcome_table(&a), outcome_table(&b), "byte-identical outcome tables");
+}
+
+#[test]
+fn collect_cannot_hang_on_short_queue() {
+    let sched = PowerAwareScheduler::new(SchedulerConfig::default(), refset().clone());
+    for i in 0..3u64 {
+        sched
+            .submit(Job {
+                id: i,
+                workload: "sdxl-b64".into(),
+                objective: Objective::PowerCentric,
+                iterations: 2,
+            })
+            .unwrap();
+    }
+    // Ask for far more than was submitted: the old scheduler held its own
+    // outcomes sender, so recv() never disconnected and this hung forever.
+    let outcomes = sched.collect(100);
+    assert_eq!(outcomes.len(), 3);
+    // asking again on a drained scheduler also terminates
+    assert!(sched.collect(1).is_empty());
+    assert!(sched.next_outcome().is_none());
+    sched.shutdown();
+    // and submits after shutdown are rejected, not lost
+    assert!(sched
+        .submit(Job {
+            id: 99,
+            workload: "sdxl-b64".into(),
+            objective: Objective::PowerCentric,
+            iterations: 1,
+        })
+        .is_err());
+}
