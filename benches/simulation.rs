@@ -133,6 +133,7 @@ fn main() {
                         sim: params.clone(),
                         minos: minos_params.clone(),
                         sim_ms_per_wall_ms: 0.0,
+                        ..Default::default()
                     },
                     refset.clone(),
                 );

@@ -34,6 +34,7 @@ fn main() -> anyhow::Result<()> {
             minos: config.minos.clone(),
             // pace execution so the 8 jobs overlap on the node
             sim_ms_per_wall_ms: 20.0,
+            ..Default::default()
         },
         refset,
     );

@@ -48,8 +48,15 @@ pub struct JobOutcome {
     /// True if the workload was already classified (no profiling run).
     pub classification_cached: bool,
     /// Simulated seconds spent profiling for this job's classification
-    /// (0 when the classification was served from the cache).
+    /// (0 when the classification was served from the cache).  Under
+    /// streaming admission this is the *reduced* cost: full profile cost
+    /// × the trace fraction the online classifier consumed before its
+    /// early exit.
     pub profiling_cost_s: f64,
+    /// Fraction of the profiling trace the classifier consumed (1.0 for
+    /// batch admission or a cache hit; < 1.0 when the online classifier
+    /// early-exited).
+    pub profile_fraction: f64,
     /// Virtual-time interval the job occupied its GPU slot (ms on the
     /// scheduler's deterministic clock).
     pub v_start_ms: f64,
@@ -69,11 +76,11 @@ pub fn outcome_table(outcomes: &[JobOutcome]) -> String {
     rows.sort_by_key(|o| o.job.id);
     let mut s = String::from(
         "id,workload,objective,node,gpu,cap_mhz,pred_p90_w,obs_p90_w,obs_peak_w,\
-         iter_ms,energy_j,v_start_ms,v_end_ms,cached,profiling_s\n",
+         iter_ms,energy_j,v_start_ms,v_end_ms,cached,profiling_s,profile_frac\n",
     );
     for o in rows {
         s.push_str(&format!(
-            "{},{},{:?},{},{},{:.1},{:.6},{:.6},{:.6},{:.6},{:.6},{:.6},{:.6},{},{:.6}\n",
+            "{},{},{:?},{},{},{:.1},{:.6},{:.6},{:.6},{:.6},{:.6},{:.6},{:.6},{},{:.6},{:.4}\n",
             o.job.id,
             o.job.workload,
             o.job.objective,
@@ -89,6 +96,7 @@ pub fn outcome_table(outcomes: &[JobOutcome]) -> String {
             o.v_end_ms,
             o.classification_cached,
             o.profiling_cost_s,
+            o.profile_fraction,
         ));
     }
     s
@@ -150,6 +158,7 @@ mod tests {
             energy_j: 10.0,
             classification_cached: false,
             profiling_cost_s: 0.1,
+            profile_fraction: 1.0,
             v_start_ms: start,
             v_end_ms: end,
         }

@@ -12,8 +12,16 @@ pub struct SchedulerMetrics {
     /// Profiling runs performed.
     pub profiles_run: usize,
     /// Total simulated profiling seconds spent / saved vs full sweeps.
+    /// Under streaming admission, `spent` counts only the trace prefix
+    /// the online classifier consumed before its early exit.
     pub profiling_spent_s: f64,
     pub profiling_saved_s: f64,
+    /// Profiling runs where the online classifier early-exited before
+    /// the end of the trace.
+    pub stream_early_exits: usize,
+    /// Sum of per-profile trace fractions consumed (divide by
+    /// `profiles_run` for the mean; 1.0 per run under batch admission).
+    pub profile_fraction_sum: f64,
     /// Jobs that had to wait at the head of the admission queue before a
     /// node had both a free GPU and power headroom.
     pub power_waits: usize,
@@ -40,9 +48,19 @@ pub struct SchedulerMetrics {
 }
 
 impl SchedulerMetrics {
+    /// Mean fraction of the profiling trace consumed per profiling run
+    /// (1.0 when every classification read the whole trace).
+    pub fn mean_profile_fraction(&self) -> f64 {
+        if self.profiles_run == 0 {
+            return 1.0;
+        }
+        self.profile_fraction_sum / self.profiles_run as f64
+    }
+
     pub fn summary(&self) -> String {
         format!(
-            "nodes {}x{}gpu | jobs {}/{} ok ({} failed) | cache hits {} | profiles {} ({:.1}s spent, {:.1}s saved) | \
+            "nodes {}x{}gpu | jobs {}/{} ok ({} failed) | cache hits {} | profiles {} ({:.1}s spent, {:.1}s saved; \
+             {} early exits, mean trace fraction {:.2}) | \
              power waits {} | peak pending {} | peak admitted p90 {:.0}/{:.0} W per node | replans {} | violations {} | energy {:.0} J",
             self.nodes.max(1),
             self.gpus_per_node,
@@ -53,6 +71,8 @@ impl SchedulerMetrics {
             self.profiles_run,
             self.profiling_spent_s,
             self.profiling_saved_s,
+            self.stream_early_exits,
+            self.mean_profile_fraction(),
             self.power_waits,
             self.peak_pending,
             self.peak_admitted_p90_w,

@@ -27,4 +27,7 @@ pub mod scheduler;
 pub use job::{outcome_digest, outcome_table, slot_overlaps, Job, JobOutcome, JobState};
 pub use metrics::SchedulerMetrics;
 pub use nodecap::{plan as plan_node_caps, CapPolicy, NodePlan};
-pub use scheduler::{pace_sleep_us, PowerAwareScheduler, SchedulerConfig, MAX_PACE_SLEEP_US};
+pub use scheduler::{
+    pace_sleep_us, AdmissionMode, PowerAwareScheduler, SchedulerConfig, DEFAULT_STREAM_STABLE_K,
+    DEFAULT_STREAM_WINDOW, MAX_PACE_SLEEP_US,
+};

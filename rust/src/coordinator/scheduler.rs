@@ -44,16 +44,62 @@ use crate::config::{MinosParams, NodeSpec, SimParams};
 use crate::coordinator::job::{Job, JobOutcome};
 use crate::coordinator::metrics::SchedulerMetrics;
 use crate::coordinator::nodecap::{self, CapPolicy};
+use crate::features::UtilPoint;
 use crate::minos::algorithm::{Objective, SelectOptimalFreq, TargetProfile};
 use crate::minos::reference_set::ReferenceSet;
 use crate::sim::dvfs::DvfsMode;
 use crate::sim::profiler::{profile, ProfileRequest};
+use crate::stream::{OnlineClassifier, OnlineConfig};
 use crate::workloads::{Registry, Workload};
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
+
+/// How the dispatcher classifies an unseen app for admission.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmissionMode {
+    /// Classify from the complete profiling trace (the pre-streaming
+    /// behavior).
+    Batch,
+    /// Early-exit online classification: feed the profiling telemetry
+    /// through [`crate::stream::OnlineClassifier`] and stop as soon as
+    /// the top-1 neighbor is stable for `stable_k` windows.  The job is
+    /// admitted on that partial profile, and the *reduced* profiling
+    /// cost (full cost × trace fraction consumed) is what lands in
+    /// `JobOutcome::profiling_cost_s` — the §7.1.3 savings, online.
+    Streaming { window_samples: usize, stable_k: usize },
+}
+
+pub const DEFAULT_STREAM_WINDOW: usize = 256;
+pub const DEFAULT_STREAM_STABLE_K: usize = 3;
+
+impl AdmissionMode {
+    pub fn streaming_default() -> Self {
+        AdmissionMode::Streaming {
+            window_samples: DEFAULT_STREAM_WINDOW,
+            stable_k: DEFAULT_STREAM_STABLE_K,
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "batch" => Some(AdmissionMode::Batch),
+            "stream" | "streaming" => Some(Self::streaming_default()),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            AdmissionMode::Batch => "batch".to_string(),
+            AdmissionMode::Streaming { window_samples, stable_k } => {
+                format!("stream(w={window_samples},k={stable_k})")
+            }
+        }
+    }
+}
 
 #[derive(Debug, Clone)]
 pub struct SchedulerConfig {
@@ -64,6 +110,9 @@ pub struct SchedulerConfig {
     /// Policy for the co-located cap re-plan run when a node's mix
     /// changes (`nodecap::plan`).
     pub policy: CapPolicy,
+    /// How unseen apps are classified for admission (streaming
+    /// early-exit by default; both modes are deterministic).
+    pub admission: AdmissionMode,
     pub sim: SimParams,
     pub minos: MinosParams,
     /// Wall-clock pacing: simulated milliseconds per wall millisecond of
@@ -81,6 +130,7 @@ impl Default for SchedulerConfig {
             node: NodeSpec::hpc_fund(),
             nodes: 1,
             policy: CapPolicy::MinosAware,
+            admission: AdmissionMode::streaming_default(),
             sim: SimParams::default(),
             minos: MinosParams::default(),
             sim_ms_per_wall_ms: 0.0,
@@ -158,6 +208,9 @@ struct Admitted {
     predicted_p90_w: f64,
     cached: bool,
     profiling_cost_s: f64,
+    /// Fraction of the profiling trace the classifier consumed (< 1.0
+    /// when streaming admission early-exited).
+    profile_fraction: f64,
     waited: bool,
 }
 
@@ -501,7 +554,7 @@ impl Dispatcher {
 
     fn classify(&self, job: Job, workload: Workload) -> Option<Admitted> {
         let shared = &self.shared;
-        let (plan, cached, cost_s) = {
+        let (plan, cached, cost_s, fraction) = {
             let mut plans = shared.plans.lock().unwrap();
             if let Some((p, _)) = plans.get(&workload.app) {
                 let mut base = p.clone();
@@ -510,25 +563,76 @@ impl Dispatcher {
                     Objective::PowerCentric => base.f_pwr_mhz,
                     Objective::PerfCentric => base.f_perf_mhz,
                 };
-                (base, true, 0.0)
+                (base, true, 0.0, 1.0)
             } else {
                 let prof = profile(
                     &ProfileRequest::new(&shared.cfg.node.gpu, &workload, DvfsMode::Uncapped)
                         .with_params(&shared.cfg.sim),
                 );
-                let target =
-                    TargetProfile::from_profile(&workload.app, &prof, &shared.refset.bin_sizes);
-                let sel = SelectOptimalFreq::new(&shared.refset, &shared.cfg.minos);
-                let plan = sel.select(&target, job.objective)?;
+                // Streaming admission: replay the profiling telemetry
+                // through the online classifier and stop at the early
+                // exit — the tail of the trace is profiling time a live
+                // deployment would never have spent.  Both paths run the
+                // shared `SelectOptimalFreq::classify`, so the *plan* can
+                // only differ through the prefix's features, never the
+                // algorithm.
+                let online = match shared.cfg.admission {
+                    AdmissionMode::Streaming { window_samples, stable_k } => {
+                        let cfg = OnlineConfig::new(window_samples, stable_k, job.objective);
+                        let util = UtilPoint::new(prof.app_sm_util, prof.app_dram_util);
+                        let mut oc = OnlineClassifier::new(
+                            &shared.refset,
+                            &shared.cfg.minos,
+                            cfg,
+                            &workload.name,
+                            &workload.app,
+                            util,
+                        )
+                        // normalize by the profiled trace's own TDP (the
+                        // node GPU's), exactly like the batch fallback's
+                        // TargetProfile::from_profile — the refset may
+                        // have been built for a different device
+                        .with_tdp(prof.trace.tdp_w)
+                        .with_sample_dt(prof.trace.sample_dt_ms);
+                        oc.run_trace(&prof.trace)
+                    }
+                    AdmissionMode::Batch => None,
+                };
+                let (plan, fraction, early) = match online {
+                    Some(d) => {
+                        let f = d.trace_fraction.unwrap_or(1.0);
+                        (d.plan, f, d.early_exit)
+                    }
+                    None => {
+                        // batch mode, or an online path that could not
+                        // classify (degenerate trace): full-trace fallback
+                        let target = TargetProfile::from_profile(
+                            &workload.app,
+                            &prof,
+                            &shared.refset.bin_sizes,
+                        );
+                        let sel = SelectOptimalFreq::new(&shared.refset, &shared.cfg.minos);
+                        (sel.select(&target, job.objective)?, 1.0, false)
+                    }
+                };
+                let used_s = prof.profiling_cost_s * fraction;
                 {
                     let mut m = shared.metrics.lock().unwrap();
                     m.profiles_run += 1;
-                    m.profiling_spent_s += prof.profiling_cost_s;
+                    if early {
+                        m.stream_early_exits += 1;
+                    }
+                    m.profile_fraction_sum += fraction;
+                    m.profiling_spent_s += used_s;
+                    // saved vs the full per-frequency sweep Minos replaces
+                    // (§7.1.3), plus the streamed-away tail of the one
+                    // profile that did run.
                     m.profiling_saved_s += prof.profiling_cost_s
-                        * (shared.cfg.node.gpu.sweep_frequencies().len() as f64 - 1.0);
+                        * shared.cfg.node.gpu.sweep_frequencies().len() as f64
+                        - used_s;
                 }
-                plans.insert(workload.app.clone(), (plan.clone(), prof.profiling_cost_s));
-                (plan, false, prof.profiling_cost_s)
+                plans.insert(workload.app.clone(), (plan.clone(), used_s));
+                (plan, false, used_s, fraction)
             }
         };
         if cached {
@@ -550,6 +654,7 @@ impl Dispatcher {
             predicted_p90_w,
             cached,
             profiling_cost_s: cost_s,
+            profile_fraction: fraction,
             waited: false,
         })
     }
@@ -741,6 +846,7 @@ impl Dispatcher {
                     energy_j: e.energy_j,
                     classification_cached: r.adm.cached,
                     profiling_cost_s: r.adm.profiling_cost_s,
+                    profile_fraction: r.adm.profile_fraction,
                     v_start_ms: r.v_start_ms,
                     v_end_ms: end,
                 };
@@ -849,6 +955,57 @@ mod tests {
         for o in outcomes.iter().filter(|o| o.classification_cached) {
             assert_eq!(o.profiling_cost_s, 0.0);
         }
+    }
+
+    #[test]
+    fn streaming_admission_matches_batch_plan_and_reduces_cost() {
+        let run = |admission: AdmissionMode| {
+            let cfg = SchedulerConfig {
+                admission,
+                ..Default::default()
+            };
+            let sched = PowerAwareScheduler::new(cfg, small_refset());
+            sched
+                .submit(Job {
+                    id: 0,
+                    workload: "faiss-b4096".into(),
+                    objective: Objective::PowerCentric,
+                    iterations: 2,
+                })
+                .unwrap();
+            let o = sched.collect(1).remove(0);
+            sched.shutdown();
+            let m = sched.metrics();
+            (o, m)
+        };
+        let (s, sm) = run(AdmissionMode::streaming_default());
+        let (b, bm) = run(AdmissionMode::Batch);
+        // same decision either way (shared classify entry point)
+        assert_eq!(s.pwr_neighbor, b.pwr_neighbor);
+        assert_eq!(s.f_cap_mhz, b.f_cap_mhz);
+        // batch reads the whole trace; streaming reports its fraction
+        assert_eq!(b.profile_fraction, 1.0);
+        assert!(s.profile_fraction > 0.0 && s.profile_fraction <= 1.0);
+        // reduced cost = full cost × fraction consumed
+        assert!(
+            (s.profiling_cost_s - b.profiling_cost_s * s.profile_fraction).abs() < 1e-9,
+            "streamed cost {} vs full {} × fraction {}",
+            s.profiling_cost_s,
+            b.profiling_cost_s,
+            s.profile_fraction
+        );
+        assert_eq!(bm.stream_early_exits, 0);
+        if s.profile_fraction < 1.0 {
+            assert_eq!(sm.stream_early_exits, 1);
+            assert!(sm.profiling_spent_s < bm.profiling_spent_s);
+            assert!(sm.profiling_saved_s > bm.profiling_saved_s);
+        }
+        assert!(sm.mean_profile_fraction() <= 1.0);
+        // determinism: a second streaming run reproduces the outcome
+        let (s2, _) = run(AdmissionMode::streaming_default());
+        assert_eq!(s.profiling_cost_s, s2.profiling_cost_s);
+        assert_eq!(s.f_cap_mhz, s2.f_cap_mhz);
+        assert_eq!(s.profile_fraction, s2.profile_fraction);
     }
 
     #[test]

@@ -249,6 +249,7 @@ pub fn oversub(ctx: &mut ExperimentContext) -> anyhow::Result<String> {
             minos: ctx.config.minos.clone(),
             // pace execution so jobs genuinely overlap on the node
             sim_ms_per_wall_ms: 10.0,
+            ..Default::default()
         };
         cfg.node.power_budget_w = cfg.node.gpu.tdp_w * budget_x;
         let sched = PowerAwareScheduler::new(cfg, refset.clone());

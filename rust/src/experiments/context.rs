@@ -14,6 +14,10 @@ pub struct ExperimentContext {
     pub registry: Registry,
     pub runtime: MinosRuntime,
     pub cache_path: Option<String>,
+    /// `--allow-stale`: accept an on-disk reference-set cache whose
+    /// registry/sim-model fingerprint no longer matches (the checked
+    /// loader rejects it and a rebuild runs otherwise).
+    pub allow_stale: bool,
     refset: Option<ReferenceSet>,
     profile_cache: HashMap<String, Profile>,
 }
@@ -25,6 +29,7 @@ impl ExperimentContext {
             registry: registry(),
             runtime: MinosRuntime::auto(),
             cache_path: Some(default_cache_path()),
+            allow_stale: false,
             refset: None,
             profile_cache: HashMap::new(),
         }
@@ -35,21 +40,38 @@ impl ExperimentContext {
         self
     }
 
+    pub fn with_allow_stale(mut self, allow: bool) -> Self {
+        self.allow_stale = allow;
+        self
+    }
+
     /// The full reference set (all reference workloads, full cap sweep).
     /// Built lazily; cached to disk when a cache path is configured.
+    /// A cache with a stale registry/sim-model fingerprint is discarded
+    /// and rebuilt unless [`allow_stale`](Self::allow_stale) is set.
     pub fn refset(&mut self) -> &ReferenceSet {
         if self.refset.is_none() {
+            let allow_stale = self.allow_stale;
             let loaded = self
                 .cache_path
                 .as_ref()
-                .and_then(|p| ReferenceSet::load(p).ok())
+                .and_then(|p| {
+                    if allow_stale {
+                        ReferenceSet::load_unchecked(p).ok()
+                    } else {
+                        // checked load: fingerprint mismatch ⇒ Err ⇒ rebuild
+                        ReferenceSet::load(p).ok()
+                    }
+                })
                 .filter(|rs| {
+                    // spec/bin-size compatibility is non-negotiable (the
+                    // arithmetic depends on them); the entry-count check
+                    // is registry drift, which is exactly what
+                    // --allow-stale opts into replaying.
                     rs.spec == self.config.node.gpu
                         && rs.bin_sizes == self.config.minos.bin_sizes
-                        && rs.entries.len() == self.registry.util_reference().len()
-                        && rs.registry_fingerprint
-                            == self.registry.fingerprint()
-                                ^ crate::sim::SIM_MODEL_VERSION.wrapping_mul(0x9E3779B97F4A7C15)
+                        && (allow_stale
+                            || rs.entries.len() == self.registry.util_reference().len())
                 });
             let rs = match loaded {
                 Some(rs) => rs,

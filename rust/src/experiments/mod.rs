@@ -4,7 +4,7 @@
 //! substrate.
 //!
 //! ids: fig1 fig2 fig3 fig4 fig5 fig6 fig7 fig8 fig9 fig10 fig11 fig12
-//!      table1 table2 headline all
+//!      table1 table2 headline streaming all
 
 pub mod ablation;
 pub mod capping;
@@ -12,6 +12,7 @@ pub mod casestudy;
 pub mod classify;
 pub mod context;
 pub mod holdout;
+pub mod streaming;
 pub mod traces;
 
 pub use context::ExperimentContext;
@@ -51,6 +52,7 @@ pub fn run(ctx: &mut ExperimentContext, id: &str) -> anyhow::Result<String> {
         "fig11" => holdout::fig11(ctx),
         "fig12" => holdout::fig12(ctx),
         "headline" => casestudy::headline(ctx),
+        "streaming" => streaming::streaming(ctx),
         "ablation-metric" => ablation::metric(ctx),
         "ablation-linkage" => ablation::linkage(ctx),
         "ablation-pin" => ablation::pin(ctx),

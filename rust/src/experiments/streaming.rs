@@ -1,0 +1,136 @@
+//! Streaming early-exit evaluation — the online analogue of the paper's
+//! §7.1.3 profiling-savings accounting.
+//!
+//! For every power-profiled reference workload: classify once from the
+//! complete default-frequency trace (batch, the paper's path) and once
+//! through [`crate::stream::OnlineClassifier`], which replays the same
+//! trace sample-by-sample and stops as soon as the top-1 power neighbor
+//! is stable for K consecutive windows.  Both paths run the shared
+//! [`SelectOptimalFreq::classify`] entry point, so any disagreement can
+//! only come from how much of the trace the online prefix covered (plus
+//! P² sketch error on the quantile features).
+//!
+//! The report is accuracy-vs-trace-fraction: per workload, whether the
+//! online neighbor/cap matched batch, how many windows it took, the
+//! fraction of the trace consumed, and the decision confidence; the
+//! summary line aggregates agreement, early-exit rate, and telemetry
+//! seconds saved.
+
+use crate::coordinator::DEFAULT_STREAM_STABLE_K;
+use crate::experiments::ExperimentContext;
+use crate::features::UtilPoint;
+use crate::minos::algorithm::{Objective, SelectOptimalFreq, TargetProfile};
+use crate::report::table;
+use crate::sim::dvfs::DvfsMode;
+use crate::stream::{OnlineClassifier, OnlineConfig};
+
+/// One workload's batch-vs-online comparison.
+#[derive(Debug, Clone)]
+pub struct StreamingEval {
+    pub name: String,
+    pub batch_neighbor: String,
+    pub online_neighbor: String,
+    pub batch_cap_mhz: f64,
+    pub online_cap_mhz: f64,
+    pub agree: bool,
+    pub early_exit: bool,
+    pub windows: usize,
+    pub trace_fraction: f64,
+    pub confidence: f64,
+    /// Telemetry seconds the online path consumed / the full profile.
+    pub online_cost_s: f64,
+    pub full_cost_s: f64,
+}
+
+/// Evaluate every power-profiled reference workload.  Windows scale with
+/// the trace (len/32, min 32 samples) so short and long profiles get the
+/// same number of decision points; K is the serve default.
+pub fn evaluate(ctx: &mut ExperimentContext) -> anyhow::Result<Vec<StreamingEval>> {
+    let params = ctx.config.minos.clone();
+    let rs = ctx.refset().clone();
+    let names: Vec<String> = ctx
+        .registry
+        .power_reference()
+        .iter()
+        .map(|w| w.name.clone())
+        .collect();
+    let mut out = Vec::with_capacity(names.len());
+    for name in &names {
+        let app = ctx.registry.by_name(name).unwrap().app.clone();
+        let p = ctx.profile(name, DvfsMode::Uncapped)?;
+        let sel = SelectOptimalFreq::new(&rs, &params);
+        let target = TargetProfile::from_profile(&app, &p, &params.bin_sizes);
+        let batch = sel
+            .classify(&target, Objective::PowerCentric)
+            .ok_or_else(|| anyhow::anyhow!("{name}: batch classification failed"))?;
+        let window = (p.trace.len() / 32).max(32);
+        let cfg = OnlineConfig::new(window, DEFAULT_STREAM_STABLE_K, Objective::PowerCentric);
+        let util = UtilPoint::new(p.app_sm_util, p.app_dram_util);
+        let mut oc = OnlineClassifier::new(&rs, &params, cfg, name, &app, util)
+            .with_sample_dt(p.trace.sample_dt_ms);
+        let d = oc
+            .run_trace(&p.trace)
+            .ok_or_else(|| anyhow::anyhow!("{name}: online classification failed"))?;
+        let fraction = d.trace_fraction.unwrap_or(1.0);
+        out.push(StreamingEval {
+            name: name.clone(),
+            agree: d.plan.pwr_neighbor == batch.plan.pwr_neighbor
+                && d.plan.f_cap_mhz == batch.plan.f_cap_mhz,
+            batch_neighbor: batch.plan.pwr_neighbor,
+            online_neighbor: d.plan.pwr_neighbor.clone(),
+            batch_cap_mhz: batch.plan.f_cap_mhz,
+            online_cap_mhz: d.plan.f_cap_mhz,
+            early_exit: d.early_exit,
+            windows: d.windows,
+            trace_fraction: fraction,
+            confidence: d.confidence,
+            online_cost_s: p.profiling_cost_s * fraction,
+            full_cost_s: p.profiling_cost_s,
+        });
+    }
+    Ok(out)
+}
+
+/// `experiment streaming`: accuracy vs trace fraction, rendered.
+pub fn streaming(ctx: &mut ExperimentContext) -> anyhow::Result<String> {
+    let results = evaluate(ctx)?;
+    let rows: Vec<Vec<String>> = results
+        .iter()
+        .map(|r| {
+            vec![
+                r.name.clone(),
+                r.batch_neighbor.clone(),
+                r.online_neighbor.clone(),
+                if r.agree { "yes" } else { "NO" }.to_string(),
+                format!("{:.0}", r.online_cap_mhz),
+                r.windows.to_string(),
+                format!("{:.1}%", r.trace_fraction * 100.0),
+                format!("{:.3}", r.confidence),
+            ]
+        })
+        .collect();
+    let mut out = String::from(
+        "online early-exit vs batch classification (PowerCentric, window = len/32, K = 3):\n",
+    );
+    out.push_str(&table(
+        &["workload", "batch NN", "online NN", "agree", "cap", "windows", "trace used", "conf"],
+        &rows,
+    ));
+    let n = results.len();
+    let agree = results.iter().filter(|r| r.agree).count();
+    let early = results.iter().filter(|r| r.early_exit).count();
+    let under_half = results.iter().filter(|r| r.trace_fraction < 0.5).count();
+    let mean_frac: f64 =
+        results.iter().map(|r| r.trace_fraction).sum::<f64>() / n.max(1) as f64;
+    let spent: f64 = results.iter().map(|r| r.online_cost_s).sum();
+    let full: f64 = results.iter().map(|r| r.full_cost_s).sum();
+    out.push_str(&format!(
+        "\nagreement {agree}/{n} | early exits {early}/{n} | <50% of trace on {under_half}/{n} \
+         | mean trace fraction {:.1}%\n\
+         telemetry consumed {spent:.1} s vs {full:.1} s full profiles ({:.0}% saved on top of \
+         the paper's 89% sweep savings)\n",
+        mean_frac * 100.0,
+        (1.0 - spent / full.max(1e-9)) * 100.0
+    ));
+    Ok(out)
+}

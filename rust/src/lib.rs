@@ -71,6 +71,7 @@ pub mod minos;
 pub mod report;
 pub mod runtime;
 pub mod sim;
+pub mod stream;
 pub mod trace;
 pub mod util;
 pub mod workloads;

@@ -22,23 +22,30 @@
 
 use minos::config::Config;
 use minos::coordinator::{
-    outcome_digest, slot_overlaps, CapPolicy, Job, PowerAwareScheduler, SchedulerConfig,
+    outcome_digest, slot_overlaps, AdmissionMode, CapPolicy, Job, PowerAwareScheduler,
+    SchedulerConfig, DEFAULT_STREAM_STABLE_K, DEFAULT_STREAM_WINDOW,
 };
 use minos::experiments::{self, ExperimentContext};
+use minos::features::UtilPoint;
 use minos::minos::algorithm::{Objective, SelectOptimalFreq, TargetProfile};
 use minos::report::table;
 use minos::runtime::MinosRuntime;
 use minos::sim::dvfs::DvfsMode;
+use minos::stream::{OnlineClassifier, OnlineConfig};
+use minos::trace::import::StreamParser;
 
-const USAGE: &str = "usage: minos [--config FILE] [--jobs N] <list|profile|classify|select-freq|experiment|serve|verify-artifacts> [args]
+const USAGE: &str = "usage: minos [--config FILE] [--jobs N] [--allow-stale] <list|profile|classify|select-freq|experiment|stream|serve|verify-artifacts> [args]
   --jobs N: worker threads for profiling fan-outs (default: available parallelism)
+  --allow-stale: accept a reference-set cache whose registry/sim-model fingerprint mismatches
   profile <workload> [--cap MHZ | --pin MHZ]     (--cap and --pin are mutually exclusive)
-  classify <workload>
+  classify <workload> [--early-exit] [--window N] [--stable-k K]
   select-freq <workload>
-  experiment <fig1..fig12|ablation-*|table1|table2|headline|all|ablations>
+  experiment <fig1..fig12|ablation-*|table1|table2|headline|streaming|all|ablations>
   classify-trace <power.csv> [--tdp W] [--sm PCT --dram PCT]
+  stream [power.csv|-] [--follow FILE] [--tdp W] [--dt MS] [--window N | --window-ms MS]
+         [--stable-k K] [--sm PCT --dram PCT] [--objective power|perf] [--exact]
   serve [--queue a,b,c | --load N] [--iterations N] [--nodes N]
-        [--policy uniform|minos] [--budget W]";
+        [--policy uniform|minos] [--admission stream|batch] [--budget W]";
 
 struct Args {
     items: Vec<String>,
@@ -59,6 +66,17 @@ impl Args {
             return Some(String::new());
         }
         None
+    }
+
+    /// Presence-only flag (no value): consume it, report whether it was
+    /// there.
+    fn has(&mut self, name: &str) -> bool {
+        if let Some(i) = self.items.iter().position(|a| a == name) {
+            self.items.remove(i);
+            true
+        } else {
+            false
+        }
     }
 
     #[allow(clippy::should_implement_trait)]
@@ -95,6 +113,37 @@ fn default_objective(workload: &str) -> Objective {
     }
 }
 
+/// Feed parsed watt samples into the online classifier, printing one
+/// progress line per completed evaluation window (useful when tailing
+/// live telemetry).  Returns true once the early-exit decision fires.
+fn feed_and_report(
+    oc: &mut OnlineClassifier,
+    watts: &[f64],
+    stable_k: usize,
+    last_windows: &mut usize,
+) -> bool {
+    for &w in watts {
+        let decided = oc.push_watt(w).is_some();
+        if oc.windows_evaluated() > *last_windows {
+            *last_windows = oc.windows_evaluated();
+            if let Some(c) = oc.last_evaluation() {
+                println!(
+                    "window {:>3}: NN {:<24} margin {:.3}  streak {}/{}",
+                    oc.windows_evaluated(),
+                    c.plan.pwr_neighbor,
+                    c.margin,
+                    oc.current_streak(),
+                    stable_k
+                );
+            }
+        }
+        if decided {
+            return true;
+        }
+    }
+    false
+}
+
 /// `serve --load N`: a deterministic generated high-load queue cycling
 /// over a fixed mixed pool (inference, training, HPC).
 fn generated_queue(n: usize) -> Vec<String> {
@@ -126,6 +175,10 @@ fn main() -> anyhow::Result<()> {
         anyhow::ensure!(n > 0, "--jobs must be >= 1");
         minos::exec::set_jobs(n);
     }
+    // Stale reference-set caches are a hard error by default (the
+    // fingerprint contract, README § "Reference-set cache"); this is the
+    // deliberate escape hatch.
+    let allow_stale = args.has("--allow-stale");
     let cmd = args.next().unwrap_or_else(|| {
         eprintln!("{USAGE}");
         std::process::exit(2);
@@ -167,7 +220,7 @@ fn main() -> anyhow::Result<()> {
                 (None, Some(f)) => DvfsMode::Pin(f),
                 _ => DvfsMode::Uncapped,
             };
-            let mut ctx = ExperimentContext::new(config);
+            let mut ctx = ExperimentContext::new(config).with_allow_stale(allow_stale);
             let p = ctx.profile(&workload, mode)?;
             println!("workload   : {} [{}]", p.workload, p.mode_label);
             println!("samples    : {} @ {:.1} ms", p.trace.len(), p.trace.sample_dt_ms);
@@ -190,8 +243,11 @@ fn main() -> anyhow::Result<()> {
             println!("energy     : {:.0} J", p.energy_j);
         }
         "classify" => {
+            let early_exit = args.has("--early-exit");
+            let window = parse_flag::<usize>(&mut args, "--window")?;
+            let stable_k = parse_flag::<usize>(&mut args, "--stable-k")?;
             let workload = args.next().ok_or_else(|| anyhow::anyhow!(USAGE))?;
-            let mut ctx = ExperimentContext::new(config);
+            let mut ctx = ExperimentContext::new(config).with_allow_stale(allow_stale);
             let w = ctx
                 .registry
                 .by_name(&workload)
@@ -215,10 +271,43 @@ fn main() -> anyhow::Result<()> {
                 "utilization    : SM {:.1}% DRAM {:.1}%  | p90 {:.2}xTDP  mean {:.0} W",
                 t.util.sm, t.util.dram, t.p_default[1], t.mean_power_w
             );
+            if early_exit {
+                // Replay the same trace through the online classifier and
+                // report how little of it the decision actually needed.
+                let cfg = OnlineConfig::new(
+                    window.unwrap_or(DEFAULT_STREAM_WINDOW),
+                    stable_k.unwrap_or(DEFAULT_STREAM_STABLE_K),
+                    default_objective(&workload),
+                );
+                let util = UtilPoint::new(p.app_sm_util, p.app_dram_util);
+                let mut oc =
+                    OnlineClassifier::new(&rs, &params, cfg, &workload, &w.app, util)
+                        .with_sample_dt(p.trace.sample_dt_ms);
+                match oc.run_trace(&p.trace) {
+                    Some(d) => {
+                        let frac = d.trace_fraction.unwrap_or(1.0);
+                        println!(
+                            "early exit     : NN {} after {} windows ({} samples, {:.1}% of trace){} | confidence {:.2}",
+                            d.plan.pwr_neighbor,
+                            d.windows,
+                            d.samples_used,
+                            frac * 100.0,
+                            if d.early_exit { "" } else { " [no early exit: full trace]" },
+                            d.confidence,
+                        );
+                        println!(
+                            "profiling cost : {:.2} s online vs {:.2} s full profile",
+                            p.profiling_cost_s * frac,
+                            p.profiling_cost_s
+                        );
+                    }
+                    None => println!("early exit     : trace not classifiable online"),
+                }
+            }
         }
         "select-freq" => {
             let workload = args.next().ok_or_else(|| anyhow::anyhow!(USAGE))?;
-            let mut ctx = ExperimentContext::new(config);
+            let mut ctx = ExperimentContext::new(config).with_allow_stale(allow_stale);
             let w = ctx
                 .registry
                 .by_name(&workload)
@@ -263,7 +352,7 @@ fn main() -> anyhow::Result<()> {
                 trace.percentile_rel(0.90),
                 trace.peak() / tdp
             );
-            let mut ctx = ExperimentContext::new(config);
+            let mut ctx = ExperimentContext::new(config).with_allow_stale(allow_stale);
             let params = ctx.config.minos.clone();
             let rs = ctx.refset().clone();
             // build a TargetProfile by hand (no simulator profile)
@@ -305,9 +394,251 @@ fn main() -> anyhow::Result<()> {
                 println!("perf neighbor  : (pass --sm and --dram to enable the utilization classifier)");
             }
         }
+        "stream" => {
+            // Online early-exit classification of live telemetry: stdin
+            // (`-` or no input), a file, or `--follow FILE` tailing a
+            // growing trace.  Stops as soon as the top-1 power neighbor
+            // is stable for K consecutive windows (README § "Streaming
+            // classification").
+            use std::io::Read;
+            let follow = args.flag("--follow");
+            let tdp = parse_flag::<f64>(&mut args, "--tdp")?.unwrap_or(config.node.gpu.tdp_w);
+            anyhow::ensure!(tdp > 0.0, "--tdp must be positive watts");
+            let dt_flag = parse_flag::<f64>(&mut args, "--dt")?;
+            if let Some(v) = dt_flag {
+                anyhow::ensure!(v > 0.0, "--dt must be positive milliseconds");
+            }
+            let mut dt = dt_flag.unwrap_or(config.sim.sample_dt_ms);
+            let window = parse_flag::<usize>(&mut args, "--window")?;
+            let window_ms = parse_flag::<f64>(&mut args, "--window-ms")?;
+            anyhow::ensure!(
+                window.is_none() || window_ms.is_none(),
+                "--window and --window-ms are mutually exclusive"
+            );
+            let stable_k =
+                parse_flag::<usize>(&mut args, "--stable-k")?.unwrap_or(DEFAULT_STREAM_STABLE_K);
+            let sm = parse_flag::<f64>(&mut args, "--sm")?;
+            let dram = parse_flag::<f64>(&mut args, "--dram")?;
+            let exact = args.has("--exact");
+            let objective = match args.flag("--objective") {
+                None => Objective::PowerCentric,
+                Some(o) => match o.as_str() {
+                    "power" => Objective::PowerCentric,
+                    "perf" => Objective::PerfCentric,
+                    other => anyhow::bail!("--objective expects 'power' or 'perf', got '{other}'"),
+                },
+            };
+            anyhow::ensure!(
+                objective == Objective::PowerCentric || (sm.is_some() && dram.is_some()),
+                "--objective perf classifies in the utilization plane; pass --sm and --dram"
+            );
+            let source = args.next();
+            anyhow::ensure!(
+                follow.is_none() || source.is_none(),
+                "--follow and a positional input are mutually exclusive"
+            );
+            let mut parser = StreamParser::new();
+            // Whole-file input is parsed (and validated) up front: the
+            // parsed count is the exact denominator for the fraction
+            // report, and a two-column timestamp column pins the real
+            // sampling period *before* the window size is fixed (an
+            // explicit --dt always wins).
+            let file_samples: Option<Vec<f64>> =
+                if follow.is_none() && source.as_deref().unwrap_or("-") != "-" {
+                    let path = source.clone().unwrap();
+                    let text = std::fs::read_to_string(&path)?;
+                    let mut out = Vec::new();
+                    parser.push_chunk(&text, &mut out)?;
+                    if let Some(w) = parser.finish()? {
+                        out.push(w);
+                    }
+                    if dt_flag.is_none() {
+                        if let Some(inferred) = parser.inferred_dt_ms() {
+                            dt = inferred;
+                        }
+                    }
+                    Some(out)
+                } else {
+                    None
+                };
+            // A time-based window needs a known sampling period before
+            // the window size is fixed: an explicit --dt, or a
+            // two-column file whose timestamps pinned it above (a live
+            // stream or a one-column file can't infer one in time).
+            anyhow::ensure!(
+                window_ms.is_none() || dt_flag.is_some() || parser.inferred_dt_ms().is_some(),
+                "--window-ms needs an explicit --dt (or a two-column t_ms,watts file \
+                 to infer the sampling period from)"
+            );
+            let mut ocfg = match (window, window_ms) {
+                (Some(n), None) => OnlineConfig::new(n, stable_k, objective),
+                (None, Some(ms)) => OnlineConfig::from_ms(ms, dt, stable_k, objective),
+                _ => OnlineConfig::new(DEFAULT_STREAM_WINDOW, stable_k, objective),
+            };
+            if exact {
+                ocfg = ocfg.exact();
+            }
+            let mut ctx = ExperimentContext::new(config).with_allow_stale(allow_stale);
+            let params = ctx.config.minos.clone();
+            let rs = ctx.refset().clone();
+            let label = follow
+                .clone()
+                .or_else(|| source.clone())
+                .filter(|s| s != "-")
+                .unwrap_or_else(|| "stdin".to_string());
+            println!(
+                "stream: {label} | window {} samples, stable K={} | {:?} | {} quantiles | tdp {:.0} W, dt {:.2} ms",
+                ocfg.window_samples,
+                ocfg.stable_k,
+                objective,
+                if exact { "exact" } else { "P2-sketch" },
+                tdp,
+                dt
+            );
+            let util = UtilPoint::new(sm.unwrap_or(0.0), dram.unwrap_or(0.0));
+            let app = format!("external:{label}");
+            let mut oc = OnlineClassifier::new(&rs, &params, ocfg, &label, &app, util)
+                .with_tdp(tdp)
+                .with_sample_dt(dt);
+            let mut last_windows = 0usize;
+            // Input samples when the whole stream was parsed (file mode,
+            // or a pipe that ended) — the denominator of the savings
+            // fraction.  None when the decision fired on a live stream.
+            let mut total_samples: Option<usize> = None;
+            let mut decided = false;
+            // Raw bytes whose trailing UTF-8 sequence a read boundary
+            // split; carried so a multi-byte char inside a comment can't
+            // hard-error a valid live stream.
+            let mut carry: Vec<u8> = Vec::new();
+            let take_utf8 = |carry: &mut Vec<u8>, fresh: &[u8]| -> anyhow::Result<String> {
+                carry.extend_from_slice(fresh);
+                let k = match std::str::from_utf8(carry) {
+                    Ok(_) => carry.len(),
+                    Err(e) if e.error_len().is_none() => e.valid_up_to(),
+                    Err(e) => anyhow::bail!("invalid UTF-8 in input near byte {}", e.valid_up_to()),
+                };
+                let chunk = String::from_utf8(carry.drain(..k).collect()).expect("checked prefix");
+                Ok(chunk)
+            };
+            if let Some(out) = file_samples {
+                total_samples = Some(out.len());
+                decided = feed_and_report(&mut oc, &out, stable_k, &mut last_windows);
+            } else if let Some(path) = follow {
+                // Tail a growing file: new bytes past EOF appear on the
+                // next read.  Stop on the decision, or once the file has
+                // been idle for FOLLOW_IDLE_MS (then classify what came).
+                const FOLLOW_IDLE_MS: u64 = 2_000;
+                const POLL_MS: u64 = 50;
+                let mut f = std::fs::File::open(&path)?;
+                let mut buf = vec![0u8; 64 * 1024];
+                let mut out = Vec::new();
+                let mut idle_ms = 0u64;
+                loop {
+                    let n = f.read(&mut buf)?;
+                    if n == 0 {
+                        if idle_ms >= FOLLOW_IDLE_MS {
+                            break;
+                        }
+                        std::thread::sleep(std::time::Duration::from_millis(POLL_MS));
+                        idle_ms += POLL_MS;
+                        continue;
+                    }
+                    idle_ms = 0;
+                    let chunk = take_utf8(&mut carry, &buf[..n])?;
+                    out.clear();
+                    parser.push_chunk(&chunk, &mut out)?;
+                    if feed_and_report(&mut oc, &out, stable_k, &mut last_windows) {
+                        decided = true;
+                        break;
+                    }
+                }
+                if !decided {
+                    if let Some(w) = parser.finish()? {
+                        feed_and_report(&mut oc, &[w], stable_k, &mut last_windows);
+                    }
+                    total_samples = Some(parser.samples());
+                }
+            } else {
+                // stdin: feed chunk by chunk; on the decision stop
+                // reading (the producer may be a live telemetry pipe).
+                let stdin = std::io::stdin();
+                let mut lock = stdin.lock();
+                let mut buf = vec![0u8; 64 * 1024];
+                let mut out = Vec::new();
+                loop {
+                    let n = lock.read(&mut buf)?;
+                    if n == 0 {
+                        if let Some(w) = parser.finish()? {
+                            feed_and_report(&mut oc, &[w], stable_k, &mut last_windows);
+                        }
+                        total_samples = Some(parser.samples());
+                        break;
+                    }
+                    let chunk = take_utf8(&mut carry, &buf[..n])?;
+                    out.clear();
+                    parser.push_chunk(&chunk, &mut out)?;
+                    if feed_and_report(&mut oc, &out, stable_k, &mut last_windows) {
+                        decided = true;
+                        break;
+                    }
+                }
+            }
+            // Live two-column streams: improve the *reporting* period
+            // from the inferred inter-sample gap (file mode already did
+            // this before the window size was fixed).
+            if dt_flag.is_none() {
+                if let Some(inferred) = parser.inferred_dt_ms() {
+                    dt = inferred;
+                }
+            }
+            let d = oc.finalize().ok_or_else(|| {
+                anyhow::anyhow!("stream '{label}': no classifiable samples (empty or idle input)")
+            })?;
+            let frac = match (decided, total_samples) {
+                (true, Some(total)) if total > 0 => {
+                    Some((d.samples_used as f64 / total as f64).min(1.0))
+                }
+                (false, _) => Some(1.0),
+                _ => d.trace_fraction,
+            };
+            println!(
+                "decision   : NN {} -> cap {:.0} MHz ({:?}; bin {})",
+                d.plan.pwr_neighbor, d.plan.f_cap_mhz, objective, d.plan.chosen_bin_size
+            );
+            println!("predicted  : q {:.2}xTDP", d.plan.predicted_quantile_rel);
+            if sm.is_some() && dram.is_some() {
+                println!(
+                    "util       : NN {} | pred slowdown {:+.1}%",
+                    d.plan.util_neighbor,
+                    d.plan.predicted_perf_degr * 100.0
+                );
+            } else {
+                // the util neighbor was computed from a fabricated (0,0)
+                // point — don't present it as a model output
+                println!(
+                    "util       : (pass --sm and --dram to enable the utilization classifier)"
+                );
+            }
+            println!(
+                "early exit : {} after {} window(s), {} samples ({:.2} s of telemetry){}",
+                if d.early_exit { "yes" } else { "no (stream ended first)" },
+                d.windows,
+                d.samples_used,
+                d.samples_used as f64 * dt / 1000.0,
+                match frac {
+                    Some(f) => format!(", {:.1}% of input", f * 100.0),
+                    None => ", fraction n/a (live stream)".to_string(),
+                }
+            );
+            println!(
+                "confidence : {:.3} (min neighbor margin over the stability streak)",
+                d.confidence
+            );
+            println!("decision digest: {:#018x}", d.digest());
+        }
         "experiment" => {
             let id = args.next().ok_or_else(|| anyhow::anyhow!(USAGE))?;
-            let mut ctx = ExperimentContext::new(config);
+            let mut ctx = ExperimentContext::new(config).with_allow_stale(allow_stale);
             let report = experiments::run(&mut ctx, &id)?;
             println!("{report}");
         }
@@ -329,6 +660,12 @@ fn main() -> anyhow::Result<()> {
                     anyhow::anyhow!("--policy expects 'uniform' or 'minos', got '{p}'")
                 })?,
             };
+            let admission = match args.flag("--admission") {
+                None => AdmissionMode::streaming_default(),
+                Some(a) => AdmissionMode::parse(&a).ok_or_else(|| {
+                    anyhow::anyhow!("--admission expects 'stream' or 'batch', got '{a}'")
+                })?,
+            };
             let list: Vec<String> = match (queue_flag, load) {
                 (Some(q), _) => q
                     .split(',')
@@ -339,7 +676,7 @@ fn main() -> anyhow::Result<()> {
                 (None, None) => generated_queue(4),
             };
             anyhow::ensure!(!list.is_empty(), "serve: empty job queue");
-            let mut ctx = ExperimentContext::new(config.clone());
+            let mut ctx = ExperimentContext::new(config.clone()).with_allow_stale(allow_stale);
             let refset = ctx.refset().clone();
             let mut node = config.node.clone();
             if let Some(b) = budget {
@@ -347,18 +684,20 @@ fn main() -> anyhow::Result<()> {
                 node.power_budget_w = b;
             }
             println!(
-                "serve: {} jobs on {} node(s) x {} {} | budget {:.0} W/node | policy {}",
+                "serve: {} jobs on {} node(s) x {} {} | budget {:.0} W/node | policy {} | admission {}",
                 list.len(),
                 nodes,
                 node.gpus_per_node,
                 node.gpu.name,
                 node.power_budget_w,
-                policy.label()
+                policy.label(),
+                admission.label()
             );
             let cfg = SchedulerConfig {
                 node,
                 nodes,
                 policy,
+                admission,
                 sim: config.sim.clone(),
                 minos: config.minos.clone(),
                 sim_ms_per_wall_ms: 0.0,
@@ -388,7 +727,13 @@ fn main() -> anyhow::Result<()> {
                     o.iter_time_ms,
                     o.v_start_ms,
                     o.v_end_ms,
-                    if o.classification_cached { "cached" } else { "profiled" }
+                    if o.classification_cached {
+                        "cached".to_string()
+                    } else if o.profile_fraction < 1.0 {
+                        format!("profiled {:.0}% of trace", o.profile_fraction * 100.0)
+                    } else {
+                        "profiled".to_string()
+                    }
                 );
             }
             let overlaps = slot_overlaps(&outcomes);

@@ -136,15 +136,45 @@ impl<'a> SelectOptimalFreq<'a> {
         target: &TargetProfile,
         c: f64,
     ) -> Option<(&'a ReferenceEntry, f64)> {
+        // Allocation-free min-scan (this runs per candidate bin size per
+        // streaming window); first-wins on ties, agreeing with
+        // `rank_pwr_neighbors`' stable sort — ties are real for
+        // zero-spike targets, where every cosine distance is 1.0.
         let tv = target.vector_for(c)?;
-        self.refset
+        let mut best: Option<(&ReferenceEntry, f64)> = None;
+        for e in self.refset.power_entries(Some(&target.app)) {
+            let Some(ev) = e.vector_for(c) else { continue };
+            let d = cosine_distance(&tv.v, &ev.v);
+            if best.is_none_or(|(_, bd)| d < bd) {
+                best = Some((e, d));
+            }
+        }
+        best
+    }
+
+    /// All candidate power neighbors at bin size `c`, sorted by ascending
+    /// cosine distance (ties broken by registry order, which is stable).
+    /// `pwr_neighbor` is element 0; the runner-up (element 1) feeds the
+    /// margin-based confidence of the streaming classifier.
+    pub fn rank_pwr_neighbors(
+        &self,
+        target: &TargetProfile,
+        c: f64,
+    ) -> Vec<(&'a ReferenceEntry, f64)> {
+        let Some(tv) = target.vector_for(c) else {
+            return Vec::new();
+        };
+        let mut ranked: Vec<(&ReferenceEntry, f64)> = self
+            .refset
             .power_entries(Some(&target.app))
             .into_iter()
             .filter_map(|e| {
                 e.vector_for(c)
                     .map(|ev| (e, cosine_distance(&tv.v, &ev.v)))
             })
-            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .collect();
+        ranked.sort_by(|a, b| a.1.total_cmp(&b.1));
+        ranked
     }
 
     /// GetUtilNeighbor: nearest entry in the (SM, DRAM) plane.
@@ -219,8 +249,26 @@ impl<'a> SelectOptimalFreq<'a> {
 
     /// Main: the full Algorithm 1.
     pub fn select(&self, target: &TargetProfile, objective: Objective) -> Option<FreqPlan> {
+        self.classify(target, objective).map(|c| c.plan)
+    }
+
+    /// The reusable classify-from-features entry point: everything
+    /// Algorithm 1 derives from a [`TargetProfile`] alone, plus the
+    /// neighbor-margin diagnostics the streaming path needs.  Both the
+    /// batch CLI/scheduler path ([`SelectOptimalFreq::select`]) and
+    /// [`crate::stream::OnlineClassifier`] run through here, so online
+    /// and offline decisions can never drift apart algorithmically.
+    pub fn classify(
+        &self,
+        target: &TargetProfile,
+        objective: Objective,
+    ) -> Option<Classification> {
         let c = self.choose_bin_size(target);
-        let (rp, dp) = self.pwr_neighbor(target, c)?;
+        let ranked = self.rank_pwr_neighbors(target, c);
+        let (rp, dp) = *ranked.first()?;
+        let runner_up = ranked
+            .get(1)
+            .map(|(e, d)| (e.name.clone(), *d));
         let (ru, du) = self.util_neighbor(target)?;
         let (f_pwr, pred_q) = self.cap_power_centric(rp);
         let (f_perf, pred_d) = self.cap_perf_centric(ru);
@@ -228,21 +276,48 @@ impl<'a> SelectOptimalFreq<'a> {
             Objective::PowerCentric => f_pwr,
             Objective::PerfCentric => f_perf,
         };
-        Some(FreqPlan {
-            target: target.name.clone(),
-            objective,
-            chosen_bin_size: c,
-            pwr_neighbor: rp.name.clone(),
-            pwr_distance: dp,
-            util_neighbor: ru.name.clone(),
-            util_distance: du,
-            f_pwr_mhz: f_pwr,
-            f_perf_mhz: f_perf,
-            f_cap_mhz: f_cap,
-            predicted_quantile_rel: pred_q,
-            predicted_perf_degr: pred_d,
+        let margin = match &runner_up {
+            // Lone candidate app: the decision cannot flip, so it is
+            // maximally stable by construction.
+            None => 1.0,
+            Some((_, d2)) if *d2 <= 0.0 => 0.0, // both neighbors exact: ambiguous
+            Some((_, d2)) => ((d2 - dp) / d2).clamp(0.0, 1.0),
+        };
+        Some(Classification {
+            plan: FreqPlan {
+                target: target.name.clone(),
+                objective,
+                chosen_bin_size: c,
+                pwr_neighbor: rp.name.clone(),
+                pwr_distance: dp,
+                util_neighbor: ru.name.clone(),
+                util_distance: du,
+                f_pwr_mhz: f_pwr,
+                f_perf_mhz: f_perf,
+                f_cap_mhz: f_cap,
+                predicted_quantile_rel: pred_q,
+                predicted_perf_degr: pred_d,
+            },
+            runner_up,
+            margin,
         })
     }
+}
+
+/// [`SelectOptimalFreq::classify`]'s result: the Algorithm 1 plan plus
+/// the neighbor-margin diagnostics consumed by the online classifier's
+/// confidence score.
+#[derive(Debug, Clone)]
+pub struct Classification {
+    pub plan: FreqPlan,
+    /// Second-nearest power neighbor and its cosine distance (None when
+    /// only one candidate app exists in the reference set).
+    pub runner_up: Option<(String, f64)>,
+    /// Normalized top-1 separation `(d₂ − d₁)/d₂ ∈ [0, 1]`: 0 when the
+    /// two nearest neighbors are indistinguishable, → 1 as the winner
+    /// pulls away.  The online classifier reports the minimum margin
+    /// over its stability streak as the decision confidence.
+    pub margin: f64,
 }
 
 #[cfg(test)]
@@ -304,6 +379,27 @@ mod tests {
             assert!(plan.f_pwr_mhz >= 1300.0);
         }
         assert!(plan2.predicted_perf_degr <= params.perf_bound_frac + 1e-9);
+    }
+
+    #[test]
+    fn classify_matches_select_and_ranks_neighbors() {
+        let (rs, params) = setup();
+        let sel = SelectOptimalFreq::new(&rs, &params);
+        let t = target("faiss-b4096");
+        let cls = sel.classify(&t, Objective::PowerCentric).unwrap();
+        let plan = sel.select(&t, Objective::PowerCentric).unwrap();
+        assert_eq!(cls.plan.pwr_neighbor, plan.pwr_neighbor);
+        assert_eq!(cls.plan.f_cap_mhz, plan.f_cap_mhz);
+        assert!((0.0..=1.0).contains(&cls.margin), "margin {}", cls.margin);
+        // ranked list: element 0 is the neighbor, distances ascending
+        let ranked = sel.rank_pwr_neighbors(&t, cls.plan.chosen_bin_size);
+        assert_eq!(ranked[0].0.name, cls.plan.pwr_neighbor);
+        for w in ranked.windows(2) {
+            assert!(w[0].1 <= w[1].1);
+        }
+        let (ru_name, ru_d) = cls.runner_up.expect("3-entry refset has a runner-up");
+        assert_eq!(ranked[1].0.name, ru_name);
+        assert!(ru_d >= cls.plan.pwr_distance);
     }
 
     #[test]

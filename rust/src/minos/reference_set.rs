@@ -198,9 +198,24 @@ impl ReferenceSet {
             spec: spec.clone(),
             bin_sizes: minos.bin_sizes.clone(),
             entries,
-            registry_fingerprint: crate::workloads::registry().fingerprint()
-                ^ crate::sim::SIM_MODEL_VERSION.wrapping_mul(0x9E3779B97F4A7C15),
+            registry_fingerprint: Self::current_fingerprint(),
         }
+    }
+
+    /// The fingerprint a reference set built *right now* would carry:
+    /// workload-registry fingerprint mixed with the simulator model
+    /// version.  [`ReferenceSet::load`] hard-errors when an on-disk
+    /// cache disagrees — the cache invalidation contract (README
+    /// § "Reference-set cache").
+    pub fn current_fingerprint() -> u64 {
+        crate::workloads::registry().fingerprint()
+            ^ crate::sim::SIM_MODEL_VERSION.wrapping_mul(0x9E3779B97F4A7C15)
+    }
+
+    /// True when this set's fingerprint matches the current registry +
+    /// simulator model.
+    pub fn is_current(&self) -> bool {
+        self.registry_fingerprint == Self::current_fingerprint()
     }
 
     pub fn by_name(&self, name: &str) -> Option<&ReferenceEntry> {
@@ -244,7 +259,28 @@ impl ReferenceSet {
         Ok(())
     }
 
+    /// Load a cached reference set, **rejecting stale caches**: the
+    /// deserialized `registry_fingerprint` must match
+    /// [`ReferenceSet::current_fingerprint`].  The old loader
+    /// deserialized the fingerprint and never compared it, so a cache
+    /// built against an older workload registry or simulator model was
+    /// silently served.  Use [`ReferenceSet::load_unchecked`] (CLI:
+    /// `--allow-stale`) to bypass deliberately.
     pub fn load(path: &str) -> anyhow::Result<ReferenceSet> {
+        let rs = Self::load_unchecked(path)?;
+        anyhow::ensure!(
+            rs.is_current(),
+            "stale reference-set cache '{path}': fingerprint {:016x} but current \
+             registry/sim-model is {:016x} — rebuild it, or pass --allow-stale to use anyway",
+            rs.registry_fingerprint,
+            Self::current_fingerprint()
+        );
+        Ok(rs)
+    }
+
+    /// Load without the fingerprint check — the `--allow-stale` escape
+    /// hatch for deliberately replaying an old cache.
+    pub fn load_unchecked(path: &str) -> anyhow::Result<ReferenceSet> {
         Self::from_json(&Json::parse(&std::fs::read_to_string(path)?)?)
     }
 }
@@ -274,18 +310,25 @@ impl FreqPoint {
             .as_arr()
             .ok_or_else(|| anyhow::anyhow!("FreqPoint: expected array"))?;
         anyhow::ensure!(a.len() == 10, "FreqPoint: expected 10 numbers");
-        let g = |i: usize| a[i].as_f64().unwrap_or(f64::NAN);
+        // Malformed entries are hard errors; the old `unwrap_or(NAN)`
+        // let a corrupt cache smuggle NaN into every downstream
+        // comparison (cap scans, percentile sorts, admission ledgers).
+        let g = |i: usize| -> anyhow::Result<f64> {
+            a[i].as_f64()
+                .filter(|v| v.is_finite())
+                .ok_or_else(|| anyhow::anyhow!("FreqPoint[{i}]: not a finite number"))
+        };
         Ok(FreqPoint {
-            f_mhz: g(0),
-            p50_rel: g(1),
-            p90_rel: g(2),
-            p95_rel: g(3),
-            p99_rel: g(4),
-            peak_rel: g(5),
-            mean_w: g(6),
-            iter_time_ms: g(7),
-            frac_above_tdp: g(8),
-            profiling_cost_s: g(9),
+            f_mhz: g(0)?,
+            p50_rel: g(1)?,
+            p90_rel: g(2)?,
+            p95_rel: g(3)?,
+            p99_rel: g(4)?,
+            peak_rel: g(5)?,
+            mean_w: g(6)?,
+            iter_time_ms: g(7)?,
+            frac_above_tdp: g(8)?,
+            profiling_cost_s: g(9)?,
         })
     }
 }
@@ -440,6 +483,46 @@ mod tests {
         assert_eq!(back.entries.len(), rs.entries.len());
         assert_eq!(back.entries[0].name, rs.entries[0].name);
         let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn stale_cache_is_rejected_but_unchecked_load_accepts() {
+        let mut rs = small_set();
+        assert!(rs.is_current());
+        rs.registry_fingerprint ^= 0xdead_beef; // simulate an old registry
+        let path = std::env::temp_dir().join("minos_refset_stale_test.json");
+        let path = path.to_str().unwrap();
+        rs.save(path).unwrap();
+        let err = ReferenceSet::load(path).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("stale reference-set cache"), "{msg}");
+        assert!(msg.contains("--allow-stale"), "{msg}");
+        // the escape hatch still loads it verbatim
+        let back = ReferenceSet::load_unchecked(path).unwrap();
+        assert!(!back.is_current());
+        assert_eq!(back.entries.len(), rs.entries.len());
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn malformed_freq_point_is_a_hard_error() {
+        let rs = small_set();
+        // Corrupt one scaling number into a string in the serialized
+        // tree: from_json must error, not smuggle a NaN through the old
+        // `unwrap_or(f64::NAN)`.
+        let mut j = Json::parse(&rs.to_json().dump()).unwrap();
+        let corrupt = |j: &mut Json| -> bool {
+            let Json::Obj(top) = j else { return false };
+            let Some(Json::Arr(entries)) = top.get_mut("entries") else { return false };
+            let Some(Json::Obj(e0)) = entries.first_mut() else { return false };
+            let Some(Json::Arr(points)) = e0.get_mut("scaling") else { return false };
+            let Some(Json::Arr(nums)) = points.first_mut() else { return false };
+            nums[0] = Json::Str("oops".to_string());
+            true
+        };
+        assert!(corrupt(&mut j), "serialized layout changed");
+        let err = ReferenceSet::from_json(&j).unwrap_err();
+        assert!(err.to_string().contains("FreqPoint"), "{err}");
     }
 
     #[test]

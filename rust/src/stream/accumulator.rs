@@ -1,0 +1,394 @@
+//! Incremental trace post-processing: the streaming twin of
+//! [`crate::trace::PowerTrace`] + [`crate::features::spike_vector`].
+//!
+//! A [`TraceAccumulator`] consumes raw power samples one at a time and
+//! maintains every statistic a [`TargetProfile`] needs — the α=0.5 EMA
+//! filter, busy-window trimming, per-bin-size spike histograms, running
+//! mean/peak/>TDP counts, and p50/p90/p95/p99 via the P² sketches of
+//! [`crate::stream::sketch`] — in **O(1) amortized time and memory per
+//! sample** (the batch path re-sorts the whole trace per quantile
+//! query).
+//!
+//! Equivalence contract (enforced by `rust/tests/stream_online.rs`):
+//! feeding a batch trace's `raw_watts` through an accumulator in
+//! [`QuantileMode::Exact`] reproduces the batch `TargetProfile`
+//! features **bit-identically** — same filtered sequence, same spike
+//! bins in the same accumulation order, same single-sort percentiles.
+//! [`QuantileMode::Sketch`] trades that exactness for O(1) memory; the
+//! sketch error bound is property-tested in `property_invariants`.
+
+use crate::features::{SpikeVector, UtilPoint, NBINS, SPIKE_LO};
+use crate::minos::algorithm::TargetProfile;
+use crate::stream::sketch::{QuantileMode, QuantileTracker};
+
+/// Streaming feature accumulator for one power trace.
+#[derive(Debug, Clone)]
+pub struct TraceAccumulator {
+    tdp_w: f64,
+    sample_dt_ms: f64,
+    bin_sizes: Vec<f64>,
+    /// One 64-slot histogram per candidate bin size (raw counts; the
+    /// normalization to a distribution happens at query time, exactly
+    /// like the batch `spike_vector`).
+    counts: Vec<Vec<f64>>,
+    /// Number of spike samples (r ≥ 0.5) — shared across bin sizes.
+    spike_total: f64,
+    quant: QuantileTracker,
+    /// Samples in the trimmed window (= batch `PowerTrace::len()`).
+    n: usize,
+    sum_w: f64,
+    peak_w: f64,
+    above_tdp: usize,
+    /// EMA state: previous *raw* sample inside the trimmed window.
+    prev_raw: f64,
+    /// True once the first busy sample arrived (head-trim finished).
+    started: bool,
+    /// Raw samples after the most recent busy sample.  Batch trimming
+    /// keeps idle samples *between* busy ones but drops the idle tail;
+    /// streaming can't know which until the next busy sample arrives,
+    /// so the provisional tail is parked here and flushed (in order,
+    /// through the EMA) when activity resumes.
+    pending_tail: Vec<f64>,
+    /// Every sample ever offered, including trimmed idle ones — the
+    /// denominator for trace-fraction accounting.
+    offered: usize,
+}
+
+/// Upper bound on the provisional idle tail.  Batch trimming keeps idle
+/// samples *between* busy ones, so streaming must park an idle stretch
+/// until it knows whether activity resumes — but a live source that goes
+/// idle for hours would otherwise grow that buffer without bound.  An
+/// idle run this long (~25 min at 1.5 ms sampling) is treated as a trace
+/// boundary instead: the parked samples are dropped, exactly as batch
+/// tail-trimming would have dropped them had the trace ended there.
+pub const MAX_PENDING_IDLE: usize = 1 << 20;
+
+impl TraceAccumulator {
+    pub fn new(tdp_w: f64, sample_dt_ms: f64, bin_sizes: &[f64], mode: QuantileMode) -> Self {
+        assert!(tdp_w > 0.0, "tdp must be positive");
+        assert!(!bin_sizes.is_empty(), "need at least one bin size");
+        assert!(bin_sizes.iter().all(|&c| c > 0.0), "bin sizes must be positive");
+        TraceAccumulator {
+            tdp_w,
+            sample_dt_ms,
+            bin_sizes: bin_sizes.to_vec(),
+            counts: vec![vec![0.0; NBINS]; bin_sizes.len()],
+            spike_total: 0.0,
+            quant: QuantileTracker::new(mode),
+            n: 0,
+            sum_w: 0.0,
+            peak_w: 0.0,
+            above_tdp: 0,
+            prev_raw: 0.0,
+            started: false,
+            pending_tail: Vec::new(),
+            offered: 0,
+        }
+    }
+
+    /// Feed one raw (unfiltered) power sample with its SQ_BUSY flag.
+    /// Mirrors `PowerTrace::from_raw`: idle head is skipped, idle
+    /// interior is kept, idle tail is held back until activity resumes.
+    /// Non-finite samples are sanitized to 0 W — the same boundary
+    /// filter the batch constructor applies — so one bad telemetry
+    /// reading can't poison the sketches or kill a serve dispatcher.
+    pub fn push(&mut self, raw_w: f64, busy: bool) {
+        let raw_w = if raw_w.is_finite() { raw_w } else { 0.0 };
+        self.offered += 1;
+        if !self.started {
+            if !busy {
+                return; // head trim
+            }
+            self.started = true;
+            self.prev_raw = raw_w; // batch seeds prev with the first in-window value
+            self.ingest_raw(raw_w);
+            return;
+        }
+        if busy && self.pending_tail.is_empty() {
+            // hot path: no parked idle run to resolve — ingest directly,
+            // keeping the all-busy stream allocation-free per sample
+            self.ingest_raw(raw_w);
+            return;
+        }
+        self.pending_tail.push(raw_w);
+        if busy {
+            // flush the provisional tail: it turned out to be interior
+            // (the buffer is swapped back afterwards to keep its
+            // capacity for the next idle stretch)
+            let mut tail = std::mem::take(&mut self.pending_tail);
+            for &w in &tail {
+                self.ingest_raw(w);
+            }
+            tail.clear();
+            self.pending_tail = tail;
+        } else if self.pending_tail.len() >= MAX_PENDING_IDLE {
+            // idle run too long to be interior — treat it as a trace
+            // boundary and drop it (see MAX_PENDING_IDLE)
+            self.pending_tail.clear();
+        }
+    }
+
+    /// Feed one sample from a source with no busy channel (imported CSV
+    /// streams): every sample is treated as busy, matching what
+    /// `trace::import::parse_power_csv` does for whole files.
+    pub fn push_watt(&mut self, raw_w: f64) {
+        self.push(raw_w, true);
+    }
+
+    /// EMA-filter one raw in-window sample and fold it into every stat.
+    fn ingest_raw(&mut self, raw_w: f64) {
+        let w = 0.5 * (raw_w + self.prev_raw);
+        self.prev_raw = raw_w;
+        self.n += 1;
+        self.sum_w += w;
+        self.peak_w = self.peak_w.max(w);
+        if w > self.tdp_w {
+            self.above_tdp += 1;
+        }
+        let r = w / self.tdp_w;
+        if r >= SPIKE_LO {
+            self.spike_total += 1.0;
+            for (k, &c) in self.bin_sizes.iter().enumerate() {
+                let idx = ((r - SPIKE_LO) / c).floor();
+                let idx = (idx.max(0.0) as usize).min(NBINS - 1);
+                self.counts[k][idx] += 1.0;
+            }
+        }
+        self.quant.observe(w);
+    }
+
+    /// Samples in the trimmed window so far.
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Every sample offered to `push`, including trimmed idle ones.
+    pub fn samples_offered(&self) -> usize {
+        self.offered
+    }
+
+    pub fn tdp_w(&self) -> f64 {
+        self.tdp_w
+    }
+
+    pub fn sample_dt_ms(&self) -> f64 {
+        self.sample_dt_ms
+    }
+
+    pub fn mode(&self) -> QuantileMode {
+        self.quant.mode()
+    }
+
+    /// Mean filtered power (W); 0 for an empty window (batch convention).
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        self.sum_w / self.n as f64
+    }
+
+    pub fn peak(&self) -> f64 {
+        self.peak_w
+    }
+
+    pub fn frac_above_tdp(&self) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        self.above_tdp as f64 / self.n as f64
+    }
+
+    /// [p50, p90, p95, p99] of filtered power relative to TDP — the
+    /// `TargetProfile::p_default` layout.
+    pub fn percentiles_rel(&self) -> [f64; 4] {
+        let q = self.quant.quantiles();
+        [
+            q[0] / self.tdp_w,
+            q[1] / self.tdp_w,
+            q[2] / self.tdp_w,
+            q[3] / self.tdp_w,
+        ]
+    }
+
+    /// Spike vectors at every candidate bin size, index-aligned with the
+    /// `bin_sizes` this accumulator was built with.  Same arithmetic as
+    /// the batch `spike_vector` (raw counts ÷ max(total, 1)).
+    pub fn spike_vectors(&self) -> Vec<SpikeVector> {
+        let denom = self.spike_total.max(1.0);
+        self.bin_sizes
+            .iter()
+            .zip(&self.counts)
+            .map(|(&c, counts)| SpikeVector {
+                v: counts.iter().map(|x| x / denom).collect(),
+                total: self.spike_total,
+                bin_width: c,
+            })
+            .collect()
+    }
+
+    /// Snapshot the accumulated features as a [`TargetProfile`] so the
+    /// shared `SelectOptimalFreq::classify` entry point can run on a
+    /// partial stream.  `profiling_cost_s` is the telemetry time
+    /// actually consumed so far (offered samples × dt) — the quantity
+    /// the §7.1.3 savings accounting compares against a full profile.
+    pub fn target_profile(&self, name: &str, app: &str, util: UtilPoint) -> TargetProfile {
+        TargetProfile {
+            name: name.to_string(),
+            app: app.to_string(),
+            vectors: self.spike_vectors(),
+            util,
+            mean_power_w: self.mean(),
+            p_default: self.percentiles_rel(),
+            profiling_cost_s: self.offered as f64 * self.sample_dt_ms / 1000.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::features::spike_vector;
+    use crate::sim::rng::Rng;
+    use crate::trace::PowerTrace;
+
+    fn feed(acc: &mut TraceAccumulator, watts: &[f64]) {
+        for &w in watts {
+            acc.push_watt(w);
+        }
+    }
+
+    #[test]
+    fn exact_mode_matches_batch_bit_for_bit() {
+        let mut rng = Rng::new(99);
+        let raw: Vec<f64> = (0..4_000).map(|_| rng.range(150.0, 1_450.0)).collect();
+        // batch pipeline: EMA happens in parse/from_raw; emulate with the
+        // same seed-prev convention
+        let mut watts = Vec::with_capacity(raw.len());
+        let mut prev = raw[0];
+        for &w in &raw {
+            watts.push(0.5 * (w + prev));
+            prev = w;
+        }
+        let trace = PowerTrace {
+            watts: watts.clone(),
+            raw_watts: raw.clone(),
+            sample_dt_ms: 1.5,
+            tdp_w: 750.0,
+        };
+        let bins = [0.05, 0.1, 0.2];
+        let mut acc = TraceAccumulator::new(750.0, 1.5, &bins, QuantileMode::Exact);
+        feed(&mut acc, &raw);
+        assert_eq!(acc.len(), trace.len());
+        assert_eq!(acc.mean(), trace.mean());
+        assert_eq!(acc.peak(), trace.peak());
+        assert_eq!(acc.frac_above_tdp(), trace.frac_above_tdp());
+        let q = trace.percentiles_rel(&[0.50, 0.90, 0.95, 0.99]);
+        assert_eq!(acc.percentiles_rel().to_vec(), q);
+        for (got, &c) in acc.spike_vectors().iter().zip(bins.iter()) {
+            let want = spike_vector(&trace, c);
+            assert_eq!(got.v, want.v, "bin size {c}");
+            assert_eq!(got.total, want.total);
+        }
+    }
+
+    #[test]
+    fn busy_trimming_matches_from_raw() {
+        use crate::sim::telemetry::{RawTrace, Sample};
+        let pattern: Vec<(f64, bool)> = vec![
+            (100.0, false),
+            (120.0, false),
+            (600.0, true),
+            (900.0, true),
+            (140.0, false), // interior idle: kept by batch trimming
+            (880.0, true),
+            (130.0, false), // tail idle: dropped
+            (110.0, false),
+        ];
+        let raw = RawTrace {
+            samples: pattern
+                .iter()
+                .enumerate()
+                .map(|(i, &(p, b))| Sample {
+                    t_ms: i as f64 * 1.5,
+                    power_inst_w: p,
+                    power_ave_w: p,
+                    busy: b,
+                    f_mhz: 2100.0,
+                })
+                .collect(),
+            sample_dt_ms: 1.5,
+        };
+        let batch = PowerTrace::from_raw(&raw, 750.0);
+        let mut acc = TraceAccumulator::new(750.0, 1.5, &[0.1], QuantileMode::Exact);
+        for &(p, b) in &pattern {
+            acc.push(p, b);
+        }
+        assert_eq!(acc.len(), batch.len());
+        assert_eq!(acc.mean(), batch.mean());
+        assert_eq!(acc.peak(), batch.peak());
+        assert_eq!(acc.samples_offered(), pattern.len());
+    }
+
+    #[test]
+    fn sketch_mode_is_close_on_long_streams() {
+        let mut rng = Rng::new(7);
+        let raw: Vec<f64> = (0..20_000).map(|_| rng.range(200.0, 1_400.0)).collect();
+        let mut exact = TraceAccumulator::new(750.0, 1.5, &[0.1], QuantileMode::Exact);
+        let mut sketch = TraceAccumulator::new(750.0, 1.5, &[0.1], QuantileMode::Sketch);
+        feed(&mut exact, &raw);
+        feed(&mut sketch, &raw);
+        // spike bins and moments are exact in both modes
+        assert_eq!(exact.spike_vectors()[0].v, sketch.spike_vectors()[0].v);
+        assert_eq!(exact.mean(), sketch.mean());
+        let qe = exact.percentiles_rel();
+        let qs = sketch.percentiles_rel();
+        for i in 0..4 {
+            assert!(
+                (qe[i] - qs[i]).abs() < 0.02,
+                "quantile {i}: exact {} vs sketch {}",
+                qe[i],
+                qs[i]
+            );
+        }
+    }
+
+    #[test]
+    fn non_finite_samples_are_sanitized() {
+        let mut acc = TraceAccumulator::new(750.0, 1.5, &[0.1], QuantileMode::Sketch);
+        for w in [500.0, f64::NAN, 700.0, f64::INFINITY, 600.0] {
+            acc.push_watt(w);
+        }
+        assert_eq!(acc.len(), 5);
+        assert!(acc.mean().is_finite());
+        assert!(acc.percentiles_rel().iter().all(|q| q.is_finite()));
+    }
+
+    #[test]
+    fn empty_and_all_idle_streams_are_safe() {
+        let acc = TraceAccumulator::new(750.0, 1.5, &[0.1], QuantileMode::Exact);
+        assert!(acc.is_empty());
+        assert_eq!(acc.mean(), 0.0);
+        assert_eq!(acc.frac_above_tdp(), 0.0);
+        let mut idle = TraceAccumulator::new(750.0, 1.5, &[0.1], QuantileMode::Exact);
+        for _ in 0..50 {
+            idle.push(100.0, false);
+        }
+        assert!(idle.is_empty(), "all-idle stream never starts");
+        assert_eq!(idle.samples_offered(), 50);
+    }
+
+    #[test]
+    fn target_profile_snapshot_carries_consumed_cost() {
+        let mut acc = TraceAccumulator::new(750.0, 2.0, &[0.1], QuantileMode::Exact);
+        feed(&mut acc, &[600.0; 500]);
+        let t = acc.target_profile("s", "app", UtilPoint::new(40.0, 20.0));
+        assert_eq!(t.vectors.len(), 1);
+        assert!((t.profiling_cost_s - 1.0).abs() < 1e-12); // 500 × 2 ms
+        assert_eq!(t.mean_power_w, acc.mean());
+        assert_eq!(t.util.sm, 40.0);
+    }
+}

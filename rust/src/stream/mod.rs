@@ -1,0 +1,32 @@
+//! Streaming telemetry ingestion + online early-exit classification.
+//!
+//! Production telemetry arrives as a stream, not a file.  This module
+//! is the online half of the Minos pipeline:
+//!
+//! * [`sketch`] — P² quantile sketches ([`sketch::P2Quantile`],
+//!   [`sketch::QuantileTracker`]): O(1) memory/time per observation,
+//!   with an exact buffered mode for tests.
+//! * [`accumulator::TraceAccumulator`] — the incremental twin of the
+//!   batch `PowerTrace` + `spike_vector` pipeline: online α=0.5 EMA,
+//!   busy-window trimming, per-bin-size spike histograms, and running
+//!   quantiles, all O(1) amortized per sample.
+//! * [`online::OnlineClassifier`] — re-evaluates Algorithm 1 (via the
+//!   shared [`crate::minos::algorithm::SelectOptimalFreq::classify`]
+//!   entry point) every `window_samples` samples and **early-exits**
+//!   once the top-1 power neighbor is stable for `stable_k`
+//!   consecutive windows, reporting a margin-based confidence and the
+//!   fraction of the trace it consumed — the online analogue of the
+//!   paper's §7.1.3 profiling-savings accounting.
+//!
+//! Consumers: the `minos stream` CLI subcommand (stdin / `--follow`
+//! tailing), `classify --early-exit`, the coordinator's dispatcher
+//! (admission from a partial profile), the `streaming` experiment, and
+//! the `streaming` bench target.
+
+pub mod accumulator;
+pub mod online;
+pub mod sketch;
+
+pub use accumulator::TraceAccumulator;
+pub use online::{OnlineClassifier, OnlineConfig, OnlineDecision};
+pub use sketch::{P2Quantile, QuantileMode, QuantileTracker};

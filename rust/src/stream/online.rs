@@ -1,0 +1,431 @@
+//! Online early-exit classification (the §7.1.3 savings story, online):
+//! re-evaluate Algorithm 1 every `window_samples` telemetry samples and
+//! stop as soon as the top-1 power neighbor has been stable for
+//! `stable_k` consecutive windows, reporting the fraction of the trace
+//! that was actually needed.
+//!
+//! The evaluation itself is the *shared*
+//! [`SelectOptimalFreq::classify`] entry point, so a decision reached
+//! from a prefix is exactly the decision batch classification would
+//! reach from the same prefix — the only approximation is how much of
+//! the stream the prefix covers (plus sketch error when the
+//! accumulator runs in [`QuantileMode::Sketch`]).
+
+use crate::config::MinosParams;
+use crate::features::UtilPoint;
+use crate::minos::algorithm::{Classification, FreqPlan, Objective, SelectOptimalFreq};
+use crate::minos::reference_set::ReferenceSet;
+use crate::stream::accumulator::TraceAccumulator;
+use crate::stream::sketch::QuantileMode;
+use crate::trace::PowerTrace;
+
+/// Tuning knobs for the online classifier.
+#[derive(Debug, Clone, Copy)]
+pub struct OnlineConfig {
+    /// Re-evaluate Algorithm 1 every this many *offered* samples.
+    pub window_samples: usize,
+    /// Early-exit once the top-1 power neighbor is unchanged for this
+    /// many consecutive evaluations.
+    pub stable_k: usize,
+    pub objective: Objective,
+    /// Quantile estimation mode of the underlying accumulator.
+    pub mode: QuantileMode,
+}
+
+impl OnlineConfig {
+    pub fn new(window_samples: usize, stable_k: usize, objective: Objective) -> Self {
+        OnlineConfig {
+            window_samples: window_samples.max(1),
+            stable_k: stable_k.max(1),
+            objective,
+            mode: QuantileMode::Sketch,
+        }
+    }
+
+    /// Windows expressed in milliseconds of telemetry time.
+    pub fn from_ms(window_ms: f64, sample_dt_ms: f64, stable_k: usize, objective: Objective) -> Self {
+        let dt = if sample_dt_ms > 0.0 { sample_dt_ms } else { 1.0 };
+        let n = (window_ms / dt).round();
+        let n = if n.is_finite() && n >= 1.0 { n as usize } else { 1 };
+        Self::new(n, stable_k, objective)
+    }
+
+    pub fn exact(mut self) -> Self {
+        self.mode = QuantileMode::Exact;
+        self
+    }
+}
+
+/// The verdict of an online classification run.
+#[derive(Debug, Clone)]
+pub struct OnlineDecision {
+    pub plan: FreqPlan,
+    /// Minimum neighbor margin (`Classification::margin`) observed over
+    /// the stability streak — a conservative confidence in [0, 1].
+    pub confidence: f64,
+    /// Algorithm 1 evaluations performed before deciding.
+    pub windows: usize,
+    /// Samples offered to the accumulator when the decision fired.
+    pub samples_used: usize,
+    /// True when the stability rule fired before the stream ended;
+    /// false when the decision comes from [`OnlineClassifier::finalize`]
+    /// on the full stream.
+    pub early_exit: bool,
+    /// `samples_used / total` when the caller knows the full trace
+    /// length (set by [`OnlineClassifier::run_trace`]); None for
+    /// open-ended live streams.
+    pub trace_fraction: Option<f64>,
+}
+
+impl OnlineDecision {
+    /// FNV-1a fingerprint of the decision — printed by `minos stream`
+    /// so two runs over the same input can be compared at a glance
+    /// (and grepped by the CI smoke step).
+    pub fn digest(&self) -> u64 {
+        let text = format!(
+            "{}|{}|{:.1}|{}|{}|{}|{}",
+            self.plan.pwr_neighbor,
+            self.plan.util_neighbor,
+            self.plan.f_cap_mhz,
+            // full precision: {:.1} would collapse bin sizes 0.05/0.1
+            self.plan.chosen_bin_size,
+            self.windows,
+            self.samples_used,
+            self.early_exit,
+        );
+        let mut h: u64 = 0xcbf29ce484222325;
+        for b in text.bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        h
+    }
+}
+
+/// Incremental Algorithm 1 over a live telemetry stream.
+pub struct OnlineClassifier<'a> {
+    sel: SelectOptimalFreq<'a>,
+    cfg: OnlineConfig,
+    acc: TraceAccumulator,
+    name: String,
+    app: String,
+    util: UtilPoint,
+    windows: usize,
+    streak: usize,
+    streak_neighbor: Option<String>,
+    streak_min_margin: f64,
+    last: Option<Classification>,
+    decision: Option<OnlineDecision>,
+}
+
+impl<'a> OnlineClassifier<'a> {
+    pub fn new(
+        refset: &'a ReferenceSet,
+        params: &MinosParams,
+        cfg: OnlineConfig,
+        name: &str,
+        app: &str,
+        util: UtilPoint,
+    ) -> Self {
+        let acc = TraceAccumulator::new(
+            refset.spec.tdp_w,
+            1.0, // dt only affects cost accounting; set via with_sample_dt
+            &refset.bin_sizes,
+            cfg.mode,
+        );
+        OnlineClassifier {
+            sel: SelectOptimalFreq::new(refset, params),
+            cfg,
+            acc,
+            name: name.to_string(),
+            app: app.to_string(),
+            util,
+            windows: 0,
+            streak: 0,
+            streak_neighbor: None,
+            streak_min_margin: 1.0,
+            last: None,
+            decision: None,
+        }
+    }
+
+    /// Set the telemetry sampling period (ms) used for cost accounting.
+    pub fn with_sample_dt(mut self, dt_ms: f64) -> Self {
+        let mode = self.cfg.mode;
+        let bins = self.sel.refset.bin_sizes.clone();
+        let tdp = self.acc.tdp_w(); // preserve a with_tdp override
+        debug_assert!(self.acc.is_empty(), "set dt before feeding samples");
+        self.acc = TraceAccumulator::new(tdp, if dt_ms > 0.0 { dt_ms } else { 1.0 }, &bins, mode);
+        self
+    }
+
+    /// Override the TDP the stream's features are normalized by
+    /// (defaults to the reference set's GPU; external telemetry from a
+    /// different device passes its own).  Set before feeding samples.
+    pub fn with_tdp(mut self, tdp_w: f64) -> Self {
+        let mode = self.cfg.mode;
+        let bins = self.sel.refset.bin_sizes.clone();
+        let dt = self.acc.sample_dt_ms();
+        debug_assert!(self.acc.is_empty(), "set tdp before feeding samples");
+        let tdp = if tdp_w > 0.0 { tdp_w } else { self.sel.refset.spec.tdp_w };
+        self.acc = TraceAccumulator::new(tdp, dt, &bins, mode);
+        self
+    }
+
+    pub fn decision(&self) -> Option<&OnlineDecision> {
+        self.decision.as_ref()
+    }
+
+    /// The most recent window evaluation (whether or not it decided).
+    pub fn last_evaluation(&self) -> Option<&Classification> {
+        self.last.as_ref()
+    }
+
+    pub fn windows_evaluated(&self) -> usize {
+        self.windows
+    }
+
+    pub fn samples_offered(&self) -> usize {
+        self.acc.samples_offered()
+    }
+
+    pub fn current_streak(&self) -> usize {
+        self.streak
+    }
+
+    /// Feed one raw sample (with busy flag); returns the decision once
+    /// the stability rule fires.  Further pushes after a decision are
+    /// no-ops — callers normally stop feeding, but a tailing CLI may
+    /// race a few extra lines in.
+    pub fn push(&mut self, raw_w: f64, busy: bool) -> Option<&OnlineDecision> {
+        if self.decision.is_some() {
+            return self.decision.as_ref();
+        }
+        self.acc.push(raw_w, busy);
+        if self.acc.samples_offered() % self.cfg.window_samples == 0 {
+            self.evaluate_window();
+        }
+        self.decision.as_ref()
+    }
+
+    /// [`OnlineClassifier::push`] for sources without a busy channel.
+    pub fn push_watt(&mut self, raw_w: f64) -> Option<&OnlineDecision> {
+        self.push(raw_w, true)
+    }
+
+    /// One Algorithm 1 evaluation on the current accumulator state.
+    fn evaluate_window(&mut self) {
+        if self.acc.is_empty() {
+            return; // still inside the idle head
+        }
+        let target = self.acc.target_profile(&self.name, &self.app, self.util);
+        let Some(cls) = self.sel.classify(&target, self.cfg.objective) else {
+            return;
+        };
+        self.windows += 1;
+        let neighbor = cls.plan.pwr_neighbor.clone();
+        if self.streak_neighbor.as_deref() == Some(neighbor.as_str()) {
+            self.streak += 1;
+            self.streak_min_margin = self.streak_min_margin.min(cls.margin);
+        } else {
+            self.streak_neighbor = Some(neighbor);
+            self.streak = 1;
+            self.streak_min_margin = cls.margin;
+        }
+        self.last = Some(cls);
+        if self.streak >= self.cfg.stable_k {
+            let cls = self.last.as_ref().unwrap();
+            self.decision = Some(OnlineDecision {
+                plan: cls.plan.clone(),
+                confidence: self.streak_min_margin,
+                windows: self.windows,
+                samples_used: self.acc.samples_offered(),
+                early_exit: true,
+                trace_fraction: None,
+            });
+        }
+    }
+
+    /// End of stream: classify whatever arrived, even if the stability
+    /// rule never fired.  Returns None only when no classification was
+    /// ever possible (empty/idle stream or an empty reference set).
+    pub fn finalize(&mut self) -> Option<OnlineDecision> {
+        if let Some(d) = &self.decision {
+            return Some(d.clone());
+        }
+        if self.acc.is_empty() {
+            return None;
+        }
+        // Evaluate the final partial window — unless the stream ended
+        // exactly on a window boundary, where this state was already
+        // evaluated by the last push (re-running would inflate the
+        // window count and burn a redundant classify pass).
+        let on_boundary = self.windows > 0
+            && self.acc.samples_offered() % self.cfg.window_samples == 0;
+        if !on_boundary {
+            let target = self.acc.target_profile(&self.name, &self.app, self.util);
+            if let Some(cls) = self.sel.classify(&target, self.cfg.objective) {
+                self.windows += 1;
+                self.last = Some(cls);
+            }
+        }
+        let cls = self.last.as_ref()?;
+        let margin = cls.margin;
+        // The streak's min margin only qualifies this decision if the
+        // final evaluation confirms the streak's neighbor — a last-
+        // window flip must not inherit a margin that was measured for a
+        // different candidate.
+        let confidence =
+            if self.streak_neighbor.as_deref() == Some(cls.plan.pwr_neighbor.as_str()) {
+                margin.min(self.streak_min_margin)
+            } else {
+                margin
+            };
+        self.decision = Some(OnlineDecision {
+            plan: cls.plan.clone(),
+            confidence,
+            windows: self.windows,
+            samples_used: self.acc.samples_offered(),
+            early_exit: false,
+            trace_fraction: Some(1.0),
+        });
+        self.decision.clone()
+    }
+
+    /// Drive a whole (already-trimmed) batch trace through the online
+    /// path: feed `raw_watts` sample by sample until the stability rule
+    /// fires, then stop — the remainder of the trace is the profiling
+    /// time saved.  Returns the decision with `trace_fraction` filled
+    /// in, or None for an unclassifiable trace.
+    pub fn run_trace(&mut self, trace: &PowerTrace) -> Option<OnlineDecision> {
+        let total = trace.raw_watts.len();
+        for &w in &trace.raw_watts {
+            if self.push_watt(w).is_some() {
+                break;
+            }
+        }
+        let mut d = self.finalize()?;
+        if total > 0 {
+            d.trace_fraction = Some((d.samples_used as f64 / total as f64).min(1.0));
+        }
+        self.decision = Some(d.clone());
+        Some(d)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{GpuSpec, MinosParams, SimParams};
+    use crate::sim::dvfs::DvfsMode;
+    use crate::sim::profiler::{profile, ProfileRequest};
+    use crate::workloads;
+
+    fn small_refset() -> ReferenceSet {
+        let spec = GpuSpec::mi300x();
+        let sim = SimParams::default();
+        let minos = MinosParams::default();
+        let reg = workloads::registry();
+        let picks: Vec<&workloads::Workload> = ["sdxl-b64", "milc-6", "lammps-8x8x16"]
+            .iter()
+            .map(|n| reg.by_name(n).unwrap())
+            .collect();
+        ReferenceSet::build(&spec, &sim, &minos, &picks)
+    }
+
+    fn faiss_profile() -> crate::sim::profiler::Profile {
+        let spec = GpuSpec::mi300x();
+        let reg = workloads::registry();
+        let w = reg.by_name("faiss-b4096").unwrap();
+        profile(&ProfileRequest::new(&spec, w, DvfsMode::Uncapped))
+    }
+
+    #[test]
+    fn online_agrees_with_batch_on_a_full_trace() {
+        let rs = small_refset();
+        let params = MinosParams::default();
+        let p = faiss_profile();
+        let target = crate::minos::algorithm::TargetProfile::from_profile(
+            "faiss", &p, &params.bin_sizes,
+        );
+        let sel = SelectOptimalFreq::new(&rs, &params);
+        let batch = sel.select(&target, Objective::PowerCentric).unwrap();
+
+        let cfg = OnlineConfig::new(p.trace.len() / 16, 3, Objective::PowerCentric);
+        let util = UtilPoint::new(p.app_sm_util, p.app_dram_util);
+        let mut oc = OnlineClassifier::new(&rs, &params, cfg, "faiss-b4096", "faiss", util)
+            .with_sample_dt(p.trace.sample_dt_ms);
+        let d = oc.run_trace(&p.trace).expect("classifiable");
+        assert_eq!(d.plan.pwr_neighbor, batch.pwr_neighbor);
+        assert_eq!(d.plan.f_cap_mhz, batch.f_cap_mhz);
+        assert!((0.0..=1.0).contains(&d.confidence));
+        let f = d.trace_fraction.unwrap();
+        assert!(f > 0.0 && f <= 1.0, "fraction {f}");
+        if d.early_exit {
+            assert!(f < 1.0, "early exit must save some trace (got {f})");
+        }
+    }
+
+    #[test]
+    fn early_exit_fires_on_a_stable_periodic_stream() {
+        let rs = small_refset();
+        let params = MinosParams::default();
+        let p = faiss_profile();
+        // fine windows + small K: a periodic trace stabilizes quickly
+        let cfg = OnlineConfig::new((p.trace.len() / 32).max(16), 3, Objective::PowerCentric);
+        let util = UtilPoint::new(p.app_sm_util, p.app_dram_util);
+        let mut oc = OnlineClassifier::new(&rs, &params, cfg, "t", "faiss", util);
+        let d = oc.run_trace(&p.trace).unwrap();
+        assert!(d.early_exit, "expected early exit, used {:?}", d.trace_fraction);
+        assert!(d.trace_fraction.unwrap() < 1.0);
+        assert!(d.windows >= 3);
+        assert_eq!(d.samples_used, oc.samples_offered());
+    }
+
+    #[test]
+    fn finalize_without_stability_still_classifies() {
+        let rs = small_refset();
+        let params = MinosParams::default();
+        let p = faiss_profile();
+        // K larger than the total window count: stability can never fire
+        let cfg = OnlineConfig::new(p.trace.len(), 50, Objective::PowerCentric);
+        let util = UtilPoint::new(p.app_sm_util, p.app_dram_util);
+        let mut oc = OnlineClassifier::new(&rs, &params, cfg, "t", "faiss", util);
+        let d = oc.run_trace(&p.trace).unwrap();
+        assert!(!d.early_exit);
+        assert_eq!(d.trace_fraction, Some(1.0));
+    }
+
+    #[test]
+    fn idle_only_stream_finalizes_to_none() {
+        let rs = small_refset();
+        let params = MinosParams::default();
+        let cfg = OnlineConfig::new(8, 2, Objective::PowerCentric);
+        let mut oc =
+            OnlineClassifier::new(&rs, &params, cfg, "t", "x", UtilPoint::new(0.0, 0.0));
+        for _ in 0..64 {
+            oc.push(90.0, false);
+        }
+        assert!(oc.finalize().is_none());
+        assert!(oc.decision().is_none());
+    }
+
+    #[test]
+    fn decision_digest_is_stable_and_content_sensitive() {
+        let rs = small_refset();
+        let params = MinosParams::default();
+        let p = faiss_profile();
+        let cfg = OnlineConfig::new(p.trace.len() / 16, 3, Objective::PowerCentric);
+        let util = UtilPoint::new(p.app_sm_util, p.app_dram_util);
+        let a = OnlineClassifier::new(&rs, &params, cfg, "t", "faiss", util)
+            .run_trace(&p.trace)
+            .unwrap();
+        let b = OnlineClassifier::new(&rs, &params, cfg, "t", "faiss", util)
+            .run_trace(&p.trace)
+            .unwrap();
+        assert_eq!(a.digest(), b.digest());
+        let mut c = a.clone();
+        c.samples_used += 1;
+        assert_ne!(a.digest(), c.digest());
+    }
+}

@@ -1,0 +1,281 @@
+//! Streaming quantile estimation for the online classifier.
+//!
+//! [`P2Quantile`] is the P² algorithm (Jain & Chlamtac, CACM 1985): five
+//! markers track a single quantile of an unbounded stream in O(1) memory
+//! and O(1) time per observation — the piece that makes the
+//! [`crate::stream::TraceAccumulator`]'s per-sample cost constant where
+//! the batch path re-sorts the whole trace per query.
+//!
+//! [`QuantileTracker`] bundles the four quantiles Minos consumes
+//! (p50/p90/p95/p99, the `TargetProfile::p_default` layout) and offers an
+//! **exact mode** that buffers every sample and defers to
+//! [`crate::trace::percentiles_of`] — the test fallback that lets the
+//! streaming-vs-batch equivalence suite assert bit-identical features.
+
+/// How a [`QuantileTracker`] estimates quantiles.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QuantileMode {
+    /// P² sketches: O(1) memory, approximate (production default).
+    Sketch,
+    /// Buffer everything, sort on query: exact, O(n) memory (tests,
+    /// `--exact` on the CLI).
+    Exact,
+}
+
+/// The quantiles tracked for `TargetProfile::p_default` (§4.1 layout).
+pub const TRACKED_QS: [f64; 4] = [0.50, 0.90, 0.95, 0.99];
+
+/// One P² marker set tracking a single quantile `q` of a stream.
+#[derive(Debug, Clone)]
+pub struct P2Quantile {
+    q: f64,
+    /// Marker heights q₀..q₄ (valid once ≥ 5 observations arrived).
+    heights: [f64; 5],
+    /// Actual marker positions n₀..n₄ (1-based sample ranks).
+    pos: [f64; 5],
+    /// Desired marker positions n′₀..n′₄.
+    desired: [f64; 5],
+    /// Per-observation increments of the desired positions.
+    inc: [f64; 5],
+    /// The first five observations, kept verbatim until initialization
+    /// (and used for an exact answer while the stream is that short).
+    init: Vec<f64>,
+    count: usize,
+}
+
+impl P2Quantile {
+    pub fn new(q: f64) -> Self {
+        assert!((0.0..=1.0).contains(&q), "quantile must be in [0,1]");
+        P2Quantile {
+            q,
+            heights: [0.0; 5],
+            pos: [1.0, 2.0, 3.0, 4.0, 5.0],
+            desired: [1.0, 1.0 + 2.0 * q, 1.0 + 4.0 * q, 3.0 + 2.0 * q, 5.0],
+            inc: [0.0, q / 2.0, q, (1.0 + q) / 2.0, 1.0],
+            init: Vec::with_capacity(5),
+            count: 0,
+        }
+    }
+
+    pub fn count(&self) -> usize {
+        self.count
+    }
+
+    pub fn quantile(&self) -> f64 {
+        self.q
+    }
+
+    /// Feed one observation. Non-finite inputs are the caller's bug —
+    /// the trace boundary filters them (see `PowerTrace::from_raw`).
+    pub fn observe(&mut self, x: f64) {
+        debug_assert!(x.is_finite(), "P2Quantile::observe: non-finite sample");
+        self.count += 1;
+        if self.init.len() < 5 {
+            self.init.push(x);
+            if self.init.len() == 5 {
+                let mut s = self.init.clone();
+                s.sort_by(f64::total_cmp);
+                self.heights.copy_from_slice(&s);
+            }
+            return;
+        }
+        // Locate the cell k the observation falls into, extending the
+        // extreme markers when it lands outside [q₀, q₄].
+        let k = if x < self.heights[0] {
+            self.heights[0] = x;
+            0
+        } else if x < self.heights[1] {
+            0
+        } else if x < self.heights[2] {
+            1
+        } else if x < self.heights[3] {
+            2
+        } else if x <= self.heights[4] {
+            3
+        } else {
+            self.heights[4] = x;
+            3
+        };
+        for i in (k + 1)..5 {
+            self.pos[i] += 1.0;
+        }
+        for i in 0..5 {
+            self.desired[i] += self.inc[i];
+        }
+        // Nudge interior markers toward their desired positions.
+        for i in 1..4 {
+            let d = self.desired[i] - self.pos[i];
+            if (d >= 1.0 && self.pos[i + 1] - self.pos[i] > 1.0)
+                || (d <= -1.0 && self.pos[i - 1] - self.pos[i] < -1.0)
+            {
+                let d = d.signum();
+                let parabolic = self.parabolic(i, d);
+                self.heights[i] =
+                    if self.heights[i - 1] < parabolic && parabolic < self.heights[i + 1] {
+                        parabolic
+                    } else {
+                        self.linear(i, d)
+                    };
+                self.pos[i] += d;
+            }
+        }
+    }
+
+    /// P² piecewise-parabolic height update for marker `i` moved by `d`.
+    fn parabolic(&self, i: usize, d: f64) -> f64 {
+        let q = &self.heights;
+        let n = &self.pos;
+        q[i] + d / (n[i + 1] - n[i - 1])
+            * ((n[i] - n[i - 1] + d) * (q[i + 1] - q[i]) / (n[i + 1] - n[i])
+                + (n[i + 1] - n[i] - d) * (q[i] - q[i - 1]) / (n[i] - n[i - 1]))
+    }
+
+    /// Linear fallback when the parabola would leave (q_{i-1}, q_{i+1}).
+    fn linear(&self, i: usize, d: f64) -> f64 {
+        let j = if d > 0.0 { i + 1 } else { i - 1 };
+        self.heights[i] + d * (self.heights[j] - self.heights[i]) / (self.pos[j] - self.pos[i])
+    }
+
+    /// Current estimate: the middle marker once initialized; exact on the
+    /// buffered prefix before that (0 for an empty stream, matching
+    /// [`crate::trace::percentile`]'s empty convention).
+    pub fn estimate(&self) -> f64 {
+        if self.init.len() < 5 {
+            return crate::trace::percentile(&self.init, self.q);
+        }
+        self.heights[2]
+    }
+}
+
+/// Tracks the four Minos quantiles either with P² sketches or exactly.
+#[derive(Debug, Clone)]
+pub enum QuantileTracker {
+    Sketch(Box<[P2Quantile; 4]>),
+    Exact(Vec<f64>),
+}
+
+impl QuantileTracker {
+    pub fn new(mode: QuantileMode) -> Self {
+        match mode {
+            QuantileMode::Sketch => QuantileTracker::Sketch(Box::new([
+                P2Quantile::new(TRACKED_QS[0]),
+                P2Quantile::new(TRACKED_QS[1]),
+                P2Quantile::new(TRACKED_QS[2]),
+                P2Quantile::new(TRACKED_QS[3]),
+            ])),
+            QuantileMode::Exact => QuantileTracker::Exact(Vec::new()),
+        }
+    }
+
+    pub fn mode(&self) -> QuantileMode {
+        match self {
+            QuantileTracker::Sketch(_) => QuantileMode::Sketch,
+            QuantileTracker::Exact(_) => QuantileMode::Exact,
+        }
+    }
+
+    pub fn observe(&mut self, x: f64) {
+        match self {
+            QuantileTracker::Sketch(s) => {
+                for p in s.iter_mut() {
+                    p.observe(x);
+                }
+            }
+            QuantileTracker::Exact(buf) => buf.push(x),
+        }
+    }
+
+    /// Current [p50, p90, p95, p99] estimates.
+    pub fn quantiles(&self) -> [f64; 4] {
+        match self {
+            QuantileTracker::Sketch(s) => {
+                [s[0].estimate(), s[1].estimate(), s[2].estimate(), s[3].estimate()]
+            }
+            QuantileTracker::Exact(buf) => {
+                let v = crate::trace::percentiles_of(buf, &TRACKED_QS);
+                [v[0], v[1], v[2], v[3]]
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::rng::Rng;
+
+    #[test]
+    fn tiny_streams_are_exact() {
+        let mut p = P2Quantile::new(0.5);
+        for x in [3.0, 1.0, 2.0] {
+            p.observe(x);
+        }
+        assert_eq!(p.estimate(), 2.0);
+        assert_eq!(p.count(), 3);
+        let empty = P2Quantile::new(0.9);
+        assert_eq!(empty.estimate(), 0.0);
+    }
+
+    #[test]
+    fn uniform_stream_converges_near_true_quantile() {
+        for &q in &[0.5, 0.9, 0.99] {
+            let mut p = P2Quantile::new(q);
+            let mut rng = Rng::new(17);
+            for _ in 0..20_000 {
+                p.observe(rng.range(0.0, 1.0));
+            }
+            assert!(
+                (p.estimate() - q).abs() < 0.03,
+                "q={q}: estimate {}",
+                p.estimate()
+            );
+        }
+    }
+
+    #[test]
+    fn estimate_stays_within_observed_range() {
+        let mut p = P2Quantile::new(0.9);
+        let mut rng = Rng::new(5);
+        let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
+        for _ in 0..5_000 {
+            let x = rng.range(100.0, 1400.0);
+            lo = lo.min(x);
+            hi = hi.max(x);
+            p.observe(x);
+        }
+        let e = p.estimate();
+        assert!(e >= lo && e <= hi, "estimate {e} outside [{lo}, {hi}]");
+    }
+
+    #[test]
+    fn constant_stream_is_exact() {
+        let mut p = P2Quantile::new(0.95);
+        for _ in 0..1_000 {
+            p.observe(7.5);
+        }
+        assert_eq!(p.estimate(), 7.5);
+    }
+
+    #[test]
+    fn exact_tracker_matches_percentiles_of() {
+        let mut t = QuantileTracker::new(QuantileMode::Exact);
+        let data: Vec<f64> = (0..101).map(|i| i as f64).collect();
+        for &x in &data {
+            t.observe(x);
+        }
+        let want = crate::trace::percentiles_of(&data, &TRACKED_QS);
+        assert_eq!(t.quantiles().to_vec(), want);
+        assert_eq!(t.mode(), QuantileMode::Exact);
+    }
+
+    #[test]
+    fn sketch_tracker_orders_quantiles() {
+        let mut t = QuantileTracker::new(QuantileMode::Sketch);
+        let mut rng = Rng::new(23);
+        for _ in 0..10_000 {
+            t.observe(rng.range(150.0, 1_450.0));
+        }
+        let q = t.quantiles();
+        assert!(q[0] <= q[1] + 1e-9 && q[1] <= q[2] + 1e-9 && q[2] <= q[3] + 1e-9, "{q:?}");
+    }
+}

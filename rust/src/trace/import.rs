@@ -12,8 +12,178 @@
 //! 845.2
 //! ...
 //! ```
+//!
+//! Two entry points share one line parser ([`StreamParser`]), so the
+//! hardening below applies to both:
+//!
+//! * [`parse_power_csv`] / [`load_power_csv`] — whole-file batch import
+//!   into a [`PowerTrace`].
+//! * [`StreamParser::push_chunk`] — incremental import for `minos
+//!   stream`: chunks may split lines anywhere (pipes and `--follow`
+//!   tails deliver arbitrary boundaries); the partial tail line is
+//!   carried to the next chunk and flushed by [`StreamParser::finish`].
+//!
+//! Format hardening (all hard errors, with line numbers):
+//!
+//! * **Mixed formats are rejected.**  The first data line locks the
+//!   format (one column or two).  The old importer accepted a mix,
+//!   leaving `times.len() != raw.len()` and silently skewing the
+//!   `span/(times.len()-1)` dt inference.
+//! * **Timestamps must be strictly increasing at every line**, not just
+//!   `span > 0` end-to-end — a trace whose clock jumps backwards in the
+//!   middle produced a plausible-looking dt before.
+//! * Watts must be finite and non-negative per line (so `nan` or a
+//!   negative counter reading is caught at its line, before the EMA).
 
 use crate::trace::PowerTrace;
+
+/// The two accepted line formats, locked on the first data line.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LineFormat {
+    /// `watts`
+    Watts,
+    /// `t_ms,watts`
+    TimeWatts,
+}
+
+impl LineFormat {
+    fn label(&self) -> &'static str {
+        match self {
+            LineFormat::Watts => "one-column (watts)",
+            LineFormat::TimeWatts => "two-column (t_ms,watts)",
+        }
+    }
+}
+
+/// Incremental line/chunk parser for power-trace text.
+///
+/// Feed complete lines with [`parse_line`](Self::parse_line) or raw
+/// chunks with [`push_chunk`](Self::push_chunk); call
+/// [`finish`](Self::finish) at end of stream to flush an unterminated
+/// final line.  The parser tracks everything needed to infer the
+/// sampling period from two-column input.
+#[derive(Debug, Default)]
+pub struct StreamParser {
+    /// Partial line carried across chunk boundaries.
+    carry: String,
+    lineno: usize,
+    format: Option<LineFormat>,
+    first_t_ms: Option<f64>,
+    last_t_ms: Option<f64>,
+    /// Data lines parsed (denominator of the dt inference is n-1).
+    samples: usize,
+}
+
+impl StreamParser {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Data samples parsed so far.
+    pub fn samples(&self) -> usize {
+        self.samples
+    }
+
+    /// The format locked by the first data line (None before any data).
+    pub fn format(&self) -> Option<LineFormat> {
+        self.format
+    }
+
+    /// Sampling period inferred from the timestamp column: the mean
+    /// inter-sample gap `span/(n-1)`.  None for one-column input or
+    /// fewer than two timestamped samples.
+    pub fn inferred_dt_ms(&self) -> Option<f64> {
+        match (self.first_t_ms, self.last_t_ms) {
+            (Some(a), Some(b)) if self.samples >= 2 => {
+                Some((b - a) / (self.samples - 1) as f64)
+            }
+            _ => None,
+        }
+    }
+
+    /// Parse one complete line.  `Ok(None)` for blank/comment lines,
+    /// `Ok(Some(watts))` for a data line.
+    pub fn parse_line(&mut self, line: &str) -> anyhow::Result<Option<f64>> {
+        self.lineno += 1;
+        let lineno = self.lineno;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            return Ok(None);
+        }
+        let cols: Vec<&str> = line.split(',').map(str::trim).collect();
+        let fmt = match cols.len() {
+            1 => LineFormat::Watts,
+            2 => LineFormat::TimeWatts,
+            n => anyhow::bail!("line {lineno}: expected 1 or 2 columns, got {n}"),
+        };
+        match self.format {
+            None => self.format = Some(fmt),
+            Some(locked) if locked != fmt => anyhow::bail!(
+                "line {lineno}: mixed formats — file started {} but this line is {}",
+                locked.label(),
+                fmt.label()
+            ),
+            Some(_) => {}
+        }
+        let watts_col = match fmt {
+            LineFormat::Watts => cols[0],
+            LineFormat::TimeWatts => {
+                let t = cols[0].parse::<f64>().map_err(|e| {
+                    anyhow::anyhow!("line {lineno}: bad timestamp '{}': {e}", cols[0])
+                })?;
+                anyhow::ensure!(t.is_finite(), "line {lineno}: non-finite timestamp");
+                if let Some(prev) = self.last_t_ms {
+                    anyhow::ensure!(
+                        t > prev,
+                        "line {lineno}: non-monotonic timestamp {t} after {prev}"
+                    );
+                }
+                if self.first_t_ms.is_none() {
+                    self.first_t_ms = Some(t);
+                }
+                self.last_t_ms = Some(t);
+                cols[1]
+            }
+        };
+        let w = watts_col
+            .parse::<f64>()
+            .map_err(|e| anyhow::anyhow!("line {lineno}: bad watts '{watts_col}': {e}"))?;
+        anyhow::ensure!(
+            w.is_finite() && w >= 0.0,
+            "line {lineno}: negative or non-finite watts '{watts_col}'"
+        );
+        self.samples += 1;
+        Ok(Some(w))
+    }
+
+    /// Feed an arbitrary text chunk (lines may be split anywhere);
+    /// parsed samples are appended to `out`.  The trailing partial line
+    /// is held until the next chunk completes it (or [`finish`] flushes
+    /// it).
+    pub fn push_chunk(&mut self, chunk: &str, out: &mut Vec<f64>) -> anyhow::Result<()> {
+        let mut text = std::mem::take(&mut self.carry);
+        text.push_str(chunk);
+        let mut start = 0usize;
+        while let Some(nl) = text[start..].find('\n') {
+            let line = &text[start..start + nl];
+            if let Some(w) = self.parse_line(line)? {
+                out.push(w);
+            }
+            start += nl + 1;
+        }
+        self.carry = text[start..].to_string();
+        Ok(())
+    }
+
+    /// End of stream: parse the trailing unterminated line, if any.
+    pub fn finish(&mut self) -> anyhow::Result<Option<f64>> {
+        let tail = std::mem::take(&mut self.carry);
+        if tail.trim().is_empty() {
+            return Ok(None);
+        }
+        self.parse_line(&tail)
+    }
+}
 
 /// Parse a power-trace file into a [`PowerTrace`].
 ///
@@ -22,43 +192,15 @@ use crate::trace::PowerTrace;
 /// `PowerTrace::from_raw` (§5.3.1).
 pub fn parse_power_csv(text: &str, sample_dt_ms: f64, tdp_w: f64) -> anyhow::Result<PowerTrace> {
     anyhow::ensure!(tdp_w > 0.0, "tdp must be positive");
+    let mut parser = StreamParser::new();
     let mut raw = Vec::new();
-    let mut times: Vec<f64> = Vec::new();
-    for (lineno, line) in text.lines().enumerate() {
-        let line = line.trim();
-        if line.is_empty() || line.starts_with('#') {
-            continue;
-        }
-        let mut cols = line.split(',').map(str::trim);
-        let first = cols
-            .next()
-            .ok_or_else(|| anyhow::anyhow!("line {}: empty", lineno + 1))?;
-        match cols.next() {
-            Some(second) => {
-                times.push(first.parse::<f64>().map_err(|e| {
-                    anyhow::anyhow!("line {}: bad timestamp '{first}': {e}", lineno + 1)
-                })?);
-                raw.push(second.parse::<f64>().map_err(|e| {
-                    anyhow::anyhow!("line {}: bad watts '{second}': {e}", lineno + 1)
-                })?);
-            }
-            None => raw.push(first.parse::<f64>().map_err(|e| {
-                anyhow::anyhow!("line {}: bad watts '{first}': {e}", lineno + 1)
-            })?),
+    for line in text.lines() {
+        if let Some(w) = parser.parse_line(line)? {
+            raw.push(w);
         }
     }
     anyhow::ensure!(!raw.is_empty(), "no samples in trace");
-    anyhow::ensure!(
-        raw.iter().all(|w| w.is_finite() && *w >= 0.0),
-        "trace contains negative or non-finite samples"
-    );
-    let dt = if times.len() >= 2 {
-        let span = times.last().unwrap() - times[0];
-        anyhow::ensure!(span > 0.0, "timestamps not increasing");
-        span / (times.len() - 1) as f64
-    } else {
-        sample_dt_ms
-    };
+    let dt = parser.inferred_dt_ms().unwrap_or(sample_dt_ms);
     // Apply the α=0.5 filter, same as PowerTrace::from_raw.
     let mut watts = Vec::with_capacity(raw.len());
     let mut prev = raw[0];
@@ -105,6 +247,60 @@ mod tests {
         assert!(parse_power_csv("-5\n", 1.5, 750.0).is_err());
         assert!(parse_power_csv("1.0,nan\n", 1.5, 750.0).is_err());
         assert!(parse_power_csv("100\n", 1.5, 0.0).is_err());
+        assert!(parse_power_csv("1.0,2.0,3.0\n", 1.5, 750.0).is_err()); // 3 columns
+    }
+
+    #[test]
+    fn rejects_mixed_formats() {
+        // one-column then two-column: the old importer silently skewed dt
+        let err = parse_power_csv("400\n0.0,500\n", 1.5, 750.0).unwrap_err();
+        assert!(err.to_string().contains("mixed formats"), "{err}");
+        // two-column then one-column
+        let err = parse_power_csv("0.0,400\n1.5,500\n600\n", 1.5, 750.0).unwrap_err();
+        assert!(err.to_string().contains("mixed formats"), "{err}");
+    }
+
+    #[test]
+    fn rejects_non_monotonic_timestamps_anywhere() {
+        // end-to-end span is positive, but the clock jumps backwards in
+        // the middle — the old `span > 0` check accepted this.
+        let err = parse_power_csv("0.0,100\n3.0,200\n2.0,300\n4.0,400\n", 1.5, 750.0)
+            .unwrap_err();
+        assert!(err.to_string().contains("non-monotonic"), "{err}");
+        // duplicate timestamps are also rejected (strictly increasing)
+        assert!(parse_power_csv("1.0,100\n1.0,200\n", 1.5, 750.0).is_err());
+    }
+
+    #[test]
+    fn chunked_parse_matches_batch_on_awkward_boundaries() {
+        let text = "# hdr\n0.0, 100\n1.5, 200\n3.0, 300\n4.5, 400";
+        let batch = parse_power_csv(text, 9.9, 750.0).unwrap();
+        // split mid-line, mid-number, and leave the final line unterminated
+        for cuts in [vec![3usize, 9, 10, 21], vec![1, 2, 30], vec![17]] {
+            let mut p = StreamParser::new();
+            let mut out = Vec::new();
+            let mut prev = 0usize;
+            for &c in &cuts {
+                p.push_chunk(&text[prev..c.min(text.len())], &mut out).unwrap();
+                prev = c.min(text.len());
+            }
+            p.push_chunk(&text[prev..], &mut out).unwrap();
+            if let Some(w) = p.finish().unwrap() {
+                out.push(w);
+            }
+            assert_eq!(out, batch.raw_watts, "cuts {cuts:?}");
+            let dt = p.inferred_dt_ms().unwrap();
+            assert!((dt - batch.sample_dt_ms).abs() < 1e-12, "cuts {cuts:?}");
+        }
+    }
+
+    #[test]
+    fn stream_parser_errors_carry_line_numbers() {
+        let mut p = StreamParser::new();
+        let mut out = Vec::new();
+        p.push_chunk("100\n200\n", &mut out).unwrap();
+        let err = p.push_chunk("oops\n", &mut out).unwrap_err();
+        assert!(err.to_string().contains("line 3"), "{err}");
     }
 
     #[test]

@@ -45,11 +45,17 @@ impl PowerTrace {
         let window = &raw.samples[first..=last.max(first)];
         let mut watts = Vec::with_capacity(window.len());
         let mut raw_watts = Vec::with_capacity(window.len());
-        let mut prev = window.first().map(|s| s.power_inst_w).unwrap_or(0.0);
+        // Boundary filter: one non-finite telemetry reading is sanitized
+        // to 0 W here so it can never reach the sort in `percentiles_of`
+        // (or poison a streaming sketch) — same rule as
+        // `stream::TraceAccumulator::push`.
+        let sane = |w: f64| if w.is_finite() { w } else { 0.0 };
+        let mut prev = window.first().map(|s| sane(s.power_inst_w)).unwrap_or(0.0);
         for s in window {
-            watts.push(0.5 * (s.power_inst_w + prev));
-            raw_watts.push(s.power_inst_w);
-            prev = s.power_inst_w;
+            let w = sane(s.power_inst_w);
+            watts.push(0.5 * (w + prev));
+            raw_watts.push(w);
+            prev = w;
         }
         PowerTrace {
             watts,
@@ -147,12 +153,19 @@ pub fn percentile(data: &[f64], q: f64) -> f64 {
 /// scaling-data hot path (FreqPoint needs p50/p90/p95/p99 per profile;
 /// sorting once instead of four times cut the batch-percentile path ~4x,
 /// see EXPERIMENTS.md §Perf).
+///
+/// NaN-safe: `total_cmp` orders NaN last instead of panicking, so one
+/// bad sample that slipped past the trace boundary cannot abort a serve
+/// dispatcher mid-flight (the old `partial_cmp().unwrap()` did).
+/// Non-finite samples are filtered at the boundary — see
+/// [`PowerTrace::from_raw`] and `trace::import` — so in a correct
+/// pipeline none reach this sort; this is the second line of defense.
 pub fn percentiles_of(data: &[f64], qs: &[f64]) -> Vec<f64> {
     if data.is_empty() {
         return vec![0.0; qs.len()];
     }
     let mut s: Vec<f64> = data.to_vec();
-    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    s.sort_by(f64::total_cmp);
     qs.iter()
         .map(|q| {
             let pos = q.clamp(0.0, 1.0) * (s.len() - 1) as f64;
@@ -248,5 +261,27 @@ mod tests {
         let r = raw(&[(100.0, false), (100.0, false)]);
         let t = PowerTrace::from_raw(&r, 750.0);
         assert!(t.len() >= 1);
+    }
+
+    #[test]
+    fn percentiles_survive_nan_samples() {
+        // Regression: sort_by(partial_cmp().unwrap()) aborted here.
+        let d = vec![1.0, f64::NAN, 3.0, 2.0];
+        let v = percentiles_of(&d, &[0.0, 0.5]);
+        assert_eq!(v.len(), 2);
+        assert_eq!(v[0], 1.0); // NaN sorts last under total_cmp
+        let _ = percentile(&[f64::NAN], 0.9); // lone NaN: no panic
+    }
+
+    #[test]
+    fn from_raw_sanitizes_non_finite_telemetry() {
+        let r = raw(&[(500.0, true), (f64::NAN, true), (700.0, true), (f64::INFINITY, true)]);
+        let t = PowerTrace::from_raw(&r, 750.0);
+        assert_eq!(t.len(), 4);
+        assert!(t.watts.iter().all(|w| w.is_finite()));
+        assert!(t.raw_watts.iter().all(|w| w.is_finite()));
+        assert_eq!(t.raw_watts[1], 0.0);
+        // and the quantile path stays finite end-to-end
+        assert!(t.percentile(0.99).is_finite());
     }
 }

@@ -71,6 +71,7 @@ fn run_soak(
         sim: SimParams::default(),
         minos: MinosParams::default(),
         sim_ms_per_wall_ms: 0.0,
+        ..Default::default()
     };
     let sched = PowerAwareScheduler::new(cfg, refset().clone());
     let queue = soak_queue();
@@ -209,6 +210,7 @@ fn four_nodes_sixty_four_jobs_acceptance() {
             sim: SimParams::default(),
             minos: MinosParams::default(),
             sim_ms_per_wall_ms: 0.0,
+            ..Default::default()
         };
         let sched = PowerAwareScheduler::new(cfg, refset().clone());
         const POOL: [&str; 8] = [

@@ -243,3 +243,60 @@ fn json_roundtrip_random_structures() {
         assert_eq!(back, v);
     });
 }
+
+#[test]
+fn p2_sketch_rank_error_is_bounded() {
+    use minos::stream::{QuantileMode, QuantileTracker};
+    // The P² sketch backs the streaming accumulator's p50/p90/p95/p99;
+    // its useful guarantee is on *rank* error: the empirical CDF at the
+    // estimate must sit near the target quantile (absolute-value error
+    // is meaningless across a bimodal density gap).
+    check("P2 sketch rank-error bound", N, 23, |rng| {
+        let n = usize_in(rng, 2_000, 8_000);
+        let bimodal = rng.uniform() < 0.5;
+        let data: Vec<f64> = (0..n)
+            .map(|_| {
+                if bimodal {
+                    if rng.uniform() < 0.5 {
+                        rng.range(100.0, 400.0)
+                    } else {
+                        rng.range(900.0, 1_500.0)
+                    }
+                } else {
+                    rng.range(100.0, 1_500.0)
+                }
+            })
+            .collect();
+        let mut sketch = QuantileTracker::new(QuantileMode::Sketch);
+        let mut exact = QuantileTracker::new(QuantileMode::Exact);
+        for &x in &data {
+            sketch.observe(x);
+            exact.observe(x);
+        }
+        let est = sketch.quantiles();
+        // (a) estimates stay inside the observed range
+        let (lo, hi) = data
+            .iter()
+            .fold((f64::INFINITY, f64::NEG_INFINITY), |(a, b), &x| (a.min(x), b.max(x)));
+        for &e in &est {
+            assert!(e >= lo - 1e-9 && e <= hi + 1e-9, "estimate {e} outside [{lo}, {hi}]");
+        }
+        // (b) monotone across p50 <= p90 <= p95 <= p99
+        for w in est.windows(2) {
+            assert!(w[1] >= w[0] - 1e-9, "{est:?}");
+        }
+        // (c) rank error: |CDF(estimate) - q| bounded
+        for (e, q) in est.iter().zip([0.50, 0.90, 0.95, 0.99]) {
+            let cdf = data.iter().filter(|&&x| x <= *e).count() as f64 / n as f64;
+            assert!(
+                (cdf - q).abs() <= 0.12,
+                "q={q}: estimate {e} has empirical CDF {cdf} (n={n}, bimodal={bimodal})"
+            );
+        }
+        // (d) the exact tracker is the ground truth the equivalence
+        // tests rely on: its p50 is the true median rank
+        let m = exact.quantiles()[0];
+        let below = data.iter().filter(|&&x| x < m).count() as f64 / n as f64;
+        assert!((below - 0.5).abs() <= 2e-2, "exact median rank off: {below}");
+    });
+}

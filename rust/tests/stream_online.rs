@@ -1,0 +1,197 @@
+//! Streaming ↔ batch equivalence and the early-exit acceptance suite:
+//!
+//! * a full trace fed through [`TraceAccumulator`] in exact mode must
+//!   reproduce the batch [`TargetProfile`] features bit-identically on
+//!   real simulated profiles (not just the synthetic unit fixtures);
+//! * the online classifier must reach the same class as batch
+//!   classification on **every** power-profiled registry workload,
+//!   consuming < 50% of the trace on at least half of them (the PR's
+//!   acceptance criterion — the §7.1.3 savings story, online);
+//! * an imported CSV stream, parsed in awkward chunks, must classify
+//!   end-to-end against the reference set.
+
+use minos::config::{GpuSpec, MinosParams, SimParams};
+use minos::features::UtilPoint;
+use minos::minos::algorithm::{Objective, SelectOptimalFreq, TargetProfile};
+use minos::minos::reference_set::ReferenceSet;
+use minos::sim::dvfs::DvfsMode;
+use minos::sim::profiler::{profile, Profile, ProfileRequest};
+use minos::stream::{OnlineClassifier, OnlineConfig, QuantileMode, TraceAccumulator};
+use minos::trace::import::StreamParser;
+use minos::workloads;
+use std::sync::OnceLock;
+
+/// One shared cross-domain reference set for the whole binary (the
+/// frequency sweeps dominate debug-build test time).
+fn refset() -> &'static ReferenceSet {
+    static RS: OnceLock<ReferenceSet> = OnceLock::new();
+    RS.get_or_init(|| {
+        let spec = GpuSpec::mi300x();
+        let sim = SimParams::default();
+        let minos = MinosParams::default();
+        let reg = workloads::registry();
+        let picks: Vec<&workloads::Workload> =
+            ["sdxl-b64", "sdxl-b32", "milc-24", "milc-6", "lammps-8x8x16", "deepmd-water-b64"]
+                .iter()
+                .map(|n| reg.by_name(n).unwrap())
+                .collect();
+        ReferenceSet::build(&spec, &sim, &minos, &picks)
+    })
+}
+
+fn prof(name: &str) -> Profile {
+    let spec = GpuSpec::mi300x();
+    let reg = workloads::registry();
+    let w = reg.by_name(name).unwrap();
+    profile(&ProfileRequest::new(&spec, w, DvfsMode::Uncapped).with_params(&SimParams::default()))
+}
+
+#[test]
+fn accumulator_reproduces_batch_features_on_real_profiles() {
+    let params = MinosParams::default();
+    let reg = workloads::registry();
+    for name in ["faiss-b4096", "sdxl-b64", "milc-6"] {
+        let app = reg.by_name(name).unwrap().app.clone();
+        let p = prof(name);
+        let batch = TargetProfile::from_profile(&app, &p, &params.bin_sizes);
+        let mut acc = TraceAccumulator::new(
+            p.trace.tdp_w,
+            p.trace.sample_dt_ms,
+            &params.bin_sizes,
+            QuantileMode::Exact,
+        );
+        for &w in &p.trace.raw_watts {
+            acc.push_watt(w);
+        }
+        let util = UtilPoint::new(p.app_sm_util, p.app_dram_util);
+        let online = acc.target_profile(name, &app, util);
+        // bit-identical: same EMA sequence, same single-sort quantiles,
+        // same spike-bin arithmetic
+        assert_eq!(online.mean_power_w, batch.mean_power_w, "{name}: mean");
+        assert_eq!(online.p_default, batch.p_default, "{name}: quantiles");
+        assert_eq!(online.vectors.len(), batch.vectors.len());
+        for (a, b) in online.vectors.iter().zip(batch.vectors.iter()) {
+            assert_eq!(a.bin_width, b.bin_width);
+            assert_eq!(a.total, b.total, "{name}: spike count @ c={}", a.bin_width);
+            assert_eq!(a.v, b.v, "{name}: spike vector @ c={}", a.bin_width);
+        }
+        assert_eq!(acc.len(), p.trace.len());
+    }
+}
+
+/// The acceptance criterion: online == batch class on every
+/// power-profiled registry workload, < 50% of the trace on >= half.
+#[test]
+fn early_exit_matches_batch_class_across_the_registry() {
+    let rs = refset();
+    let params = MinosParams::default();
+    let reg = workloads::registry();
+    let sel = SelectOptimalFreq::new(rs, &params);
+    let mut total = 0usize;
+    let mut under_half = 0usize;
+    let mut fractions = Vec::new();
+    for w in reg.power_reference() {
+        let p = prof(&w.name);
+        let target = TargetProfile::from_profile(&w.app, &p, &params.bin_sizes);
+        let batch = sel
+            .classify(&target, Objective::PowerCentric)
+            .unwrap_or_else(|| panic!("{}: batch classification failed", w.name));
+        // Exact mode is the test fallback: a run that never early-exits
+        // then classifies from features bit-identical to batch, so any
+        // divergence can only come from a genuinely unstable prefix.
+        let cfg = OnlineConfig::new((p.trace.len() / 16).max(32), 4, Objective::PowerCentric)
+            .exact();
+        let util = UtilPoint::new(p.app_sm_util, p.app_dram_util);
+        let mut oc = OnlineClassifier::new(rs, &params, cfg, &w.name, &w.app, util)
+            .with_sample_dt(p.trace.sample_dt_ms);
+        let d = oc
+            .run_trace(&p.trace)
+            .unwrap_or_else(|| panic!("{}: online classification failed", w.name));
+        let f = d.trace_fraction.unwrap_or(1.0);
+        assert_eq!(
+            d.plan.pwr_neighbor, batch.plan.pwr_neighbor,
+            "{}: online NN diverged from batch (trace fraction {f:.2})",
+            w.name
+        );
+        assert_eq!(
+            d.plan.f_cap_mhz, batch.plan.f_cap_mhz,
+            "{}: online cap diverged from batch",
+            w.name
+        );
+        assert!((0.0..=1.0).contains(&d.confidence), "{}: confidence", w.name);
+        total += 1;
+        if f < 0.5 {
+            under_half += 1;
+        }
+        fractions.push((w.name.clone(), f));
+    }
+    assert!(total >= 12, "power-profiled registry unexpectedly small: {total}");
+    assert!(
+        under_half * 2 >= total,
+        "early exit consumed <50% of the trace on only {under_half}/{total}: {fractions:?}"
+    );
+}
+
+#[test]
+fn imported_chunked_stream_classifies_end_to_end() {
+    let rs = refset();
+    let params = MinosParams::default();
+    // periodic two-level external telemetry, one watts column per line
+    let text: String = (0..4_000)
+        .map(|i| if i % 8 < 4 { "980.0\n" } else { "420.0\n" })
+        .collect();
+    let cfg = OnlineConfig::new(128, 3, Objective::PowerCentric);
+    let mut oc = OnlineClassifier::new(
+        rs,
+        &params,
+        cfg,
+        "csv",
+        "external:csv",
+        UtilPoint::new(0.0, 0.0),
+    )
+    .with_tdp(rs.spec.tdp_w)
+    .with_sample_dt(1.5);
+    let mut parser = StreamParser::new();
+    let mut decided = false;
+    // chunk boundaries deliberately mid-line (777 is coprime with the
+    // 6-byte line stride)
+    'outer: for chunk in text.as_bytes().chunks(777) {
+        let mut out = Vec::new();
+        parser
+            .push_chunk(std::str::from_utf8(chunk).unwrap(), &mut out)
+            .unwrap();
+        for w in out {
+            if oc.push_watt(w).is_some() {
+                decided = true;
+                break 'outer;
+            }
+        }
+    }
+    let d = oc.finalize().expect("periodic stream must classify");
+    assert!(decided, "a stable periodic stream must early-exit");
+    assert!(d.early_exit);
+    assert!(d.samples_used < 4_000, "used {}", d.samples_used);
+    assert!(rs.by_name(&d.plan.pwr_neighbor).is_some());
+    assert!(d.plan.f_cap_mhz > 0.0);
+    // the decision digest is deterministic for the same input
+    let mut oc2 = OnlineClassifier::new(
+        rs,
+        &params,
+        cfg,
+        "csv",
+        "external:csv",
+        UtilPoint::new(0.0, 0.0),
+    )
+    .with_tdp(rs.spec.tdp_w)
+    .with_sample_dt(1.5);
+    let mut parser2 = StreamParser::new();
+    let mut out = Vec::new();
+    parser2.push_chunk(&text, &mut out).unwrap();
+    for w in out {
+        if oc2.push_watt(w).is_some() {
+            break;
+        }
+    }
+    let d2 = oc2.finalize().unwrap();
+    assert_eq!(d.digest(), d2.digest(), "chunking must not change the decision");
+}
