@@ -1,0 +1,131 @@
+//! Neighbor-lookup bench: the flat O(N·D) reference scan vs the
+//! class-first registry (centroid-first O(K·D) + pruned intra-class
+//! refine) at synthetic 1×/10×/100× registry sizes — the tentpole
+//! speedup claim of the class-first refactor.  Both paths are asserted
+//! to return the identical neighbor before anything is timed.
+//!
+//! Run with: `cargo bench --bench lookup`
+
+use minos::benchkit::{bench, black_box, group};
+use minos::config::{GpuSpec, MinosParams};
+use minos::features::{SpikeVector, UtilPoint, NBINS};
+use minos::minos::algorithm::{Objective, SelectOptimalFreq, TargetProfile};
+use minos::minos::reference_set::{FreqPoint, ReferenceEntry, ReferenceSet, ScalingData};
+use minos::registry::ClassRegistry;
+use minos::sim::rng::Rng;
+use std::time::Duration;
+
+const BUDGET: Duration = Duration::from_millis(300);
+const PROTOS: usize = 8;
+
+fn freq_points() -> Vec<FreqPoint> {
+    (0..9)
+        .map(|i| FreqPoint {
+            f_mhz: 1300.0 + 100.0 * i as f64,
+            p50_rel: 0.7,
+            p90_rel: 0.9 + 0.02 * i as f64,
+            p95_rel: 1.0 + 0.02 * i as f64,
+            p99_rel: 1.1 + 0.02 * i as f64,
+            peak_rel: 1.2 + 0.02 * i as f64,
+            mean_w: 600.0,
+            iter_time_ms: 4.0 - 0.3 * i as f64,
+            frac_above_tdp: 0.1,
+            profiling_cost_s: 1.0,
+        })
+        .collect()
+}
+
+/// `n` entries spread over PROTOS tight direction clusters, every entry
+/// its own app (so nothing collapses via the own-app exclusion).
+fn synth_refset(n: usize, bin_sizes: &[f64]) -> ReferenceSet {
+    let mut rng = Rng::new(7);
+    let entries = (0..n)
+        .map(|i| {
+            let p = i % PROTOS;
+            let mut v = vec![0.0; NBINS];
+            v[6 * p] = 0.5 + rng.range(-0.03, 0.03);
+            v[6 * p + 1] = 0.3 + rng.range(-0.03, 0.03);
+            v[6 * p + 2] = 0.2 + rng.range(-0.03, 0.03);
+            ReferenceEntry {
+                name: format!("w{i}"),
+                app: format!("app{i}"),
+                vectors: bin_sizes
+                    .iter()
+                    .map(|&c| SpikeVector::new(v.clone(), 100.0, c))
+                    .collect(),
+                util: UtilPoint::new(rng.range(10.0, 90.0), rng.range(5.0, 50.0)),
+                mean_power_w: 600.0,
+                scaling: ScalingData::new(freq_points()),
+                power_profiled: true,
+            }
+        })
+        .collect();
+    ReferenceSet {
+        spec: GpuSpec::mi300x(),
+        bin_sizes: bin_sizes.to_vec(),
+        entries,
+        registry_fingerprint: ReferenceSet::current_fingerprint(),
+    }
+}
+
+fn main() {
+    let params = MinosParams {
+        bin_sizes: vec![0.05, 0.1],
+        default_bin_size: 0.1,
+        ..MinosParams::default()
+    };
+
+    group("neighbor lookup: flat scan vs class-first registry");
+    for (label, n) in [("1x", 33usize), ("10x", 330), ("100x", 3300)] {
+        let rs = synth_refset(n, &params.bin_sizes);
+        let reg = ClassRegistry::build(&rs, &params).expect("registry build");
+        let flat = SelectOptimalFreq::new(&rs, &params);
+        let fast = SelectOptimalFreq::new(&rs, &params).with_registry(&reg);
+        let target = TargetProfile::from_entry(&rs.entries[1]);
+        // correctness gate: identical winner before timing anything
+        let a = flat.pwr_neighbor(&target, 0.1).expect("flat neighbor");
+        let b = fast.pwr_neighbor(&target, 0.1).expect("class-first neighbor");
+        assert_eq!(a.0.name, b.0.name, "class-first diverged from flat at n={n}");
+        assert_eq!(a.1.to_bits(), b.1.to_bits(), "distance drifted at n={n}");
+
+        let rf = bench(&format!("flat scan        n={n:>5}"), BUDGET, 200_000, || {
+            black_box(flat.pwr_neighbor(&target, 0.1))
+        });
+        println!("{}", rf.report());
+        let rc = bench(
+            &format!("class-first      n={n:>5} (K={})", reg.len()),
+            BUDGET,
+            200_000,
+            || black_box(fast.pwr_neighbor(&target, 0.1)),
+        );
+        println!("{}", rc.report());
+        println!(
+            "  {label} registry ({n} entries, {} classes): lookup speedup {:.1}x",
+            reg.len(),
+            rf.mean_ns / rc.mean_ns.max(1.0)
+        );
+    }
+
+    group("full classify (ChooseBinSize + caps) at the 100x registry");
+    let rs = synth_refset(3300, &params.bin_sizes);
+    let reg = ClassRegistry::build(&rs, &params).expect("registry build");
+    let flat = SelectOptimalFreq::new(&rs, &params);
+    let fast = SelectOptimalFreq::new(&rs, &params).with_registry(&reg);
+    let target = TargetProfile::from_entry(&rs.entries[2]);
+    let a = flat.classify(&target, Objective::PowerCentric).unwrap();
+    let b = fast.classify(&target, Objective::PowerCentric).unwrap();
+    assert_eq!(a.plan.pwr_neighbor, b.plan.pwr_neighbor);
+    assert_eq!(a.plan.f_cap_mhz, b.plan.f_cap_mhz);
+    let rf = bench("flat classify    n= 3300", BUDGET, 50_000, || {
+        black_box(flat.classify(&target, Objective::PowerCentric))
+    });
+    println!("{}", rf.report());
+    let rc = bench("class classify   n= 3300", BUDGET, 50_000, || {
+        black_box(fast.classify(&target, Objective::PowerCentric))
+    });
+    println!("{}", rc.report());
+    println!(
+        "  end-to-end classify speedup {:.1}x",
+        rf.mean_ns / rc.mean_ns.max(1.0)
+    );
+}

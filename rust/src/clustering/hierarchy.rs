@@ -247,6 +247,30 @@ mod tests {
     }
 
     #[test]
+    fn cut_k_and_slice_agree_on_the_implied_k() {
+        let d = pairwise(Metric::Cosine, &toy());
+        let dg = Dendrogram::build(&d, Linkage::Ward);
+        let mut heights = dg.merge_heights();
+        heights.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for k in 1..=dg.n {
+            let labels = dg.cut_k(k);
+            let distinct = labels
+                .iter()
+                .collect::<std::collections::HashSet<_>>()
+                .len();
+            assert_eq!(distinct, k, "cut_k({k}) produced {distinct} clusters");
+            if k == dg.n {
+                continue; // no merges applied, no threshold to cross-check
+            }
+            // the threshold cut_k implies: the (n-k)-th smallest merge
+            // height; slice at it must agree on both labels and K
+            let t = heights[dg.n - k - 1];
+            assert_eq!(dg.k_at(t), k, "slice at {t} implies a different K");
+            assert_eq!(dg.slice(t), labels, "k={k}");
+        }
+    }
+
+    #[test]
     fn single_leaf_degenerate() {
         let dg = Dendrogram::build(&[vec![0.0]], Linkage::Ward);
         assert_eq!(dg.merges.len(), 0);

@@ -53,20 +53,37 @@ pub fn silhouette_score(points: &[Vec<f64>], labels: &[usize]) -> f64 {
 }
 
 /// Sweep K over `k_min..=k_max` with K-Means, returning (k, score) pairs
-/// and the best K — the §4.2 selection procedure.
+/// and the best K — the §4.2 selection procedure.  Candidate Ks fan out
+/// on the [`crate::exec`] worker pool.
 pub fn sweep_k(
     points: &[Vec<f64>],
     k_min: usize,
     k_max: usize,
     seed: u64,
 ) -> (Vec<(usize, f64)>, usize) {
+    sweep_k_jobs(points, k_min, k_max, seed, crate::exec::current_jobs())
+}
+
+/// [`sweep_k`] with an explicit worker count: one pool item per
+/// candidate K (each `kmeans` run seeds its RNG from `seed` alone),
+/// results reduced in K order — scores and the chosen K are
+/// bit-identical for every `jobs` value; `jobs = 1` is the serial
+/// reference the determinism tests compare against.
+pub fn sweep_k_jobs(
+    points: &[Vec<f64>],
+    k_min: usize,
+    k_max: usize,
+    seed: u64,
+    jobs: usize,
+) -> (Vec<(usize, f64)>, usize) {
     let k_max = k_max.min(points.len().saturating_sub(1)).max(k_min);
-    let mut scores = Vec::new();
-    let mut best = (k_min, f64::NEG_INFINITY);
-    for k in k_min..=k_max {
+    let ks: Vec<usize> = (k_min..=k_max).collect();
+    let scores: Vec<(usize, f64)> = crate::exec::par_map_jobs(jobs, &ks, |&k| {
         let r = kmeans(points, k, seed, 8);
-        let s = silhouette_score(points, &r.assignments);
-        scores.push((k, s));
+        (k, silhouette_score(points, &r.assignments))
+    });
+    let mut best = (k_min, f64::NEG_INFINITY);
+    for &(k, s) in &scores {
         if s > best.1 {
             best = (k, s);
         }
@@ -111,6 +128,25 @@ mod tests {
         let pts = blobs();
         let (scores, best) = sweep_k(&pts, 2, 8, 11);
         assert_eq!(best, 3, "{scores:?}");
+    }
+
+    #[test]
+    fn sweep_and_kmeans_are_identical_across_job_counts() {
+        let pts = blobs();
+        let (s1, k1) = sweep_k_jobs(&pts, 2, 8, 11, 1);
+        let (s8, k8) = sweep_k_jobs(&pts, 2, 8, 11, 8);
+        assert_eq!(k1, k8, "chosen K must not depend on the worker count");
+        assert_eq!(s1.len(), s8.len());
+        for (a, b) in s1.iter().zip(&s8) {
+            assert_eq!(a.0, b.0);
+            assert_eq!(a.1.to_bits(), b.1.to_bits(), "score drifted at K={}", a.0);
+        }
+        // kmeans labels themselves are seed-deterministic regardless of
+        // how the sweep around them is parallelized
+        let a = kmeans(&pts, 3, 7, 8);
+        let b = kmeans(&pts, 3, 7, 8);
+        assert_eq!(a.assignments, b.assignments);
+        assert_eq!(a.inertia.to_bits(), b.inertia.to_bits());
     }
 
     #[test]

@@ -38,6 +38,11 @@ pub struct JobOutcome {
     pub f_cap_mhz: f64,
     pub pwr_neighbor: String,
     pub util_neighbor: String,
+    /// Minos class the power neighbor belongs to — Some when admission
+    /// classified class-first through the scheduler's
+    /// [`crate::registry::ClassRegistry`]; co-scheduled jobs with the
+    /// same class id shared one cap plan.
+    pub class_id: Option<usize>,
     /// Predicted p90 power at the cap (W) — what admission used.
     pub predicted_p90_w: f64,
     /// Observed p90 power over the run (W).
@@ -75,18 +80,19 @@ pub fn outcome_table(outcomes: &[JobOutcome]) -> String {
     let mut rows: Vec<&JobOutcome> = outcomes.iter().collect();
     rows.sort_by_key(|o| o.job.id);
     let mut s = String::from(
-        "id,workload,objective,node,gpu,cap_mhz,pred_p90_w,obs_p90_w,obs_peak_w,\
+        "id,workload,objective,node,gpu,cap_mhz,class,pred_p90_w,obs_p90_w,obs_peak_w,\
          iter_ms,energy_j,v_start_ms,v_end_ms,cached,profiling_s,profile_frac\n",
     );
     for o in rows {
         s.push_str(&format!(
-            "{},{},{:?},{},{},{:.1},{:.6},{:.6},{:.6},{:.6},{:.6},{:.6},{:.6},{},{:.6},{:.4}\n",
+            "{},{},{:?},{},{},{:.1},{},{:.6},{:.6},{:.6},{:.6},{:.6},{:.6},{:.6},{},{:.6},{:.4}\n",
             o.job.id,
             o.job.workload,
             o.job.objective,
             o.node,
             o.gpu,
             o.f_cap_mhz,
+            o.class_id.map(|c| c.to_string()).unwrap_or_else(|| "-".into()),
             o.predicted_p90_w,
             o.observed_p90_w,
             o.observed_peak_w,
@@ -151,6 +157,7 @@ mod tests {
             f_cap_mhz: 1700.0,
             pwr_neighbor: "sgemm".into(),
             util_neighbor: "sgemm".into(),
+            class_id: Some(0),
             predicted_p90_w: 900.0,
             observed_p90_w: 880.0,
             observed_peak_w: 1100.0,

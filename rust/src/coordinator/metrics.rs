@@ -45,6 +45,13 @@ pub struct SchedulerMetrics {
     /// p90-bound violations observed post-hoc (power objective only).
     pub bound_violations: usize,
     pub total_energy_j: f64,
+    /// Minos classes in the scheduler's class registry (0 under flat
+    /// search or when the reference set is too small to cluster).
+    pub classes_active: usize,
+    /// Newly profiled apps that reused an existing class plan instead of
+    /// installing their own — the class-keyed plan cache paying off
+    /// across *different* applications of the same class.
+    pub class_plan_shares: usize,
 }
 
 impl SchedulerMetrics {
@@ -59,7 +66,8 @@ impl SchedulerMetrics {
 
     pub fn summary(&self) -> String {
         format!(
-            "nodes {}x{}gpu | jobs {}/{} ok ({} failed) | cache hits {} | profiles {} ({:.1}s spent, {:.1}s saved; \
+            "nodes {}x{}gpu | jobs {}/{} ok ({} failed) | cache hits {} | classes {} (plan shares {}) | \
+             profiles {} ({:.1}s spent, {:.1}s saved; \
              {} early exits, mean trace fraction {:.2}) | \
              power waits {} | peak pending {} | peak admitted p90 {:.0}/{:.0} W per node | replans {} | violations {} | energy {:.0} J",
             self.nodes.max(1),
@@ -68,6 +76,8 @@ impl SchedulerMetrics {
             self.submitted,
             self.failed,
             self.cache_hits,
+            self.classes_active,
+            self.class_plan_shares,
             self.profiles_run,
             self.profiling_spent_s,
             self.profiling_saved_s,

@@ -18,6 +18,14 @@
 //! sequence: completions are applied in virtual-time order, so the
 //! canonical [`outcome_table`] is byte-identical across runs regardless
 //! of worker-thread interleaving.
+//!
+//! Classification is served **class-first** by default: the scheduler
+//! builds a [`crate::registry::ClassRegistry`] over its reference set at
+//! startup, admission queries go centroid-first (exact, so single-app
+//! decisions match the flat scan), the plan cache is keyed by Minos
+//! class — co-scheduled jobs of the same class share one cap plan even
+//! across different applications — and outcomes/metrics carry class ids
+//! (`SchedulerConfig::search` selects flat vs class-first).
 
 pub mod job;
 pub mod metrics;

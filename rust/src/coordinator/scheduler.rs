@@ -47,6 +47,7 @@ use crate::coordinator::nodecap::{self, CapPolicy};
 use crate::features::UtilPoint;
 use crate::minos::algorithm::{Objective, SelectOptimalFreq, TargetProfile};
 use crate::minos::reference_set::ReferenceSet;
+use crate::registry::{ClassRegistry, SearchMode};
 use crate::sim::dvfs::DvfsMode;
 use crate::sim::profiler::{profile, ProfileRequest};
 use crate::stream::{OnlineClassifier, OnlineConfig};
@@ -113,6 +114,13 @@ pub struct SchedulerConfig {
     /// How unseen apps are classified for admission (streaming
     /// early-exit by default; both modes are deterministic).
     pub admission: AdmissionMode,
+    /// Neighbor search: class-first through a [`ClassRegistry`] built
+    /// over the reference set at startup (the default — co-scheduled
+    /// jobs of the same class then share one cap plan), or the flat
+    /// per-entry scan with an app-keyed plan cache.  Class-first
+    /// neighbor lookups are exact, so single-app decisions match flat;
+    /// only cross-app plan sharing differs.
+    pub search: SearchMode,
     pub sim: SimParams,
     pub minos: MinosParams,
     /// Wall-clock pacing: simulated milliseconds per wall millisecond of
@@ -131,6 +139,7 @@ impl Default for SchedulerConfig {
             nodes: 1,
             policy: CapPolicy::MinosAware,
             admission: AdmissionMode::streaming_default(),
+            search: SearchMode::ClassFirst,
             sim: SimParams::default(),
             minos: MinosParams::default(),
             sim_ms_per_wall_ms: 0.0,
@@ -179,15 +188,29 @@ enum Msg {
     Shutdown,
 }
 
+/// The admission-plan cache.  Keys are class-scoped under class-first
+/// search (`class:<id>` — co-scheduled jobs of the same Minos class
+/// share one plan even across different applications) and app-scoped
+/// under flat search (`app:<name>`, the pre-registry behavior).
+#[derive(Default)]
+struct PlanCache {
+    /// plan-key → (plan, profiling cost of the producing run, class id).
+    by_key: HashMap<String, (crate::minos::algorithm::FreqPlan, f64, Option<usize>)>,
+    /// app → plan-key: an app seen once never profiles again.
+    app_key: HashMap<String, String>,
+}
+
 /// State shared between the user-facing handle, the dispatcher, and the
 /// execution workers.
 struct Shared {
     refset: ReferenceSet,
     cfg: SchedulerConfig,
     registry: Registry,
-    /// Per-app classification cache: (plan, profiling cost of the one
-    /// default-frequency run that produced it).
-    plans: Mutex<HashMap<String, (crate::minos::algorithm::FreqPlan, f64)>>,
+    /// Class-first index over `refset`; None under [`SearchMode::Flat`]
+    /// or when the reference set is too small to cluster.
+    class_registry: Option<ClassRegistry>,
+    /// Classification cache (see [`PlanCache`]).
+    plans: Mutex<PlanCache>,
     /// Memo of simulated executions (deterministic, so safe to reuse).
     exec_cache: Mutex<HashMap<ExecKey, ExecResult>>,
     metrics: Mutex<SchedulerMetrics>,
@@ -205,6 +228,7 @@ struct Admitted {
     cap_mhz: f64,
     pwr_neighbor: String,
     util_neighbor: String,
+    class_id: Option<usize>,
     predicted_p90_w: f64,
     cached: bool,
     profiling_cost_s: f64,
@@ -263,11 +287,20 @@ impl PowerAwareScheduler {
         let nodes = cfg.nodes.max(1);
         let budget = cfg.node.power_budget_w;
         let gpus = cfg.node.gpus_per_node;
+        // Build the class index once at startup; a reference set too
+        // small to cluster (< 2 power entries) degrades to flat search
+        // rather than refusing to serve.
+        let class_registry = match cfg.search {
+            SearchMode::ClassFirst => ClassRegistry::build(&refset, &cfg.minos).ok(),
+            SearchMode::Flat => None,
+        };
+        let classes_active = class_registry.as_ref().map(|r| r.len()).unwrap_or(0);
         let shared = Arc::new(Shared {
             refset,
             cfg,
             registry: crate::workloads::registry(),
-            plans: Mutex::new(HashMap::new()),
+            class_registry,
+            plans: Mutex::new(PlanCache::default()),
             exec_cache: Mutex::new(HashMap::new()),
             metrics: Mutex::new(SchedulerMetrics {
                 node_budget_w: budget,
@@ -275,6 +308,7 @@ impl PowerAwareScheduler {
                 gpus_per_node: gpus,
                 node_peak_admitted_p90_w: vec![0.0; nodes],
                 node_plans: vec![None; nodes],
+                classes_active,
                 ..Default::default()
             }),
             in_flight: AtomicUsize::new(0),
@@ -554,16 +588,26 @@ impl Dispatcher {
 
     fn classify(&self, job: Job, workload: Workload) -> Option<Admitted> {
         let shared = &self.shared;
-        let (plan, cached, cost_s, fraction) = {
-            let mut plans = shared.plans.lock().unwrap();
-            if let Some((p, _)) = plans.get(&workload.app) {
-                let mut base = p.clone();
-                base.objective = job.objective;
-                base.f_cap_mhz = match job.objective {
-                    Objective::PowerCentric => base.f_pwr_mhz,
-                    Objective::PerfCentric => base.f_perf_mhz,
-                };
-                (base, true, 0.0, 1.0)
+        // Re-bind a cached plan to this job's objective (both caps are
+        // stored, only the selected one changes).
+        let rebind = |p: &crate::minos::algorithm::FreqPlan, objective: Objective| {
+            let mut base = p.clone();
+            base.objective = objective;
+            base.f_cap_mhz = match objective {
+                Objective::PowerCentric => base.f_pwr_mhz,
+                Objective::PerfCentric => base.f_perf_mhz,
+            };
+            base
+        };
+        let (plan, cached, cost_s, fraction, class_id) = {
+            let mut cache = shared.plans.lock().unwrap();
+            let hit = cache
+                .app_key
+                .get(&workload.app)
+                .and_then(|k| cache.by_key.get(k))
+                .cloned();
+            if let Some((p, _, cid)) = hit {
+                (rebind(&p, job.objective), true, 0.0, 1.0, cid)
             } else {
                 let prof = profile(
                     &ProfileRequest::new(&shared.cfg.node.gpu, &workload, DvfsMode::Uncapped)
@@ -573,9 +617,9 @@ impl Dispatcher {
                 // through the online classifier and stop at the early
                 // exit — the tail of the trace is profiling time a live
                 // deployment would never have spent.  Both paths run the
-                // shared `SelectOptimalFreq::classify`, so the *plan* can
-                // only differ through the prefix's features, never the
-                // algorithm.
+                // shared `SelectOptimalFreq::classify` (class-first when
+                // the registry exists), so the *plan* can only differ
+                // through the prefix's features, never the algorithm.
                 let online = match shared.cfg.admission {
                     AdmissionMode::Streaming { window_samples, stable_k } => {
                         let cfg = OnlineConfig::new(window_samples, stable_k, job.objective);
@@ -594,14 +638,17 @@ impl Dispatcher {
                         // have been built for a different device
                         .with_tdp(prof.trace.tdp_w)
                         .with_sample_dt(prof.trace.sample_dt_ms);
+                        if let Some(reg) = shared.class_registry.as_ref() {
+                            oc = oc.with_registry(reg);
+                        }
                         oc.run_trace(&prof.trace)
                     }
                     AdmissionMode::Batch => None,
                 };
-                let (plan, fraction, early) = match online {
+                let (fresh_plan, fresh_class, fraction, early) = match online {
                     Some(d) => {
                         let f = d.trace_fraction.unwrap_or(1.0);
-                        (d.plan, f, d.early_exit)
+                        (d.plan, d.class_id, f, d.early_exit)
                     }
                     None => {
                         // batch mode, or an online path that could not
@@ -611,8 +658,12 @@ impl Dispatcher {
                             &prof,
                             &shared.refset.bin_sizes,
                         );
-                        let sel = SelectOptimalFreq::new(&shared.refset, &shared.cfg.minos);
-                        (sel.select(&target, job.objective)?, 1.0, false)
+                        let mut sel = SelectOptimalFreq::new(&shared.refset, &shared.cfg.minos);
+                        if let Some(reg) = shared.class_registry.as_ref() {
+                            sel = sel.with_registry(reg);
+                        }
+                        let cls = sel.classify(&target, job.objective)?;
+                        (cls.plan, cls.class_id, 1.0, false)
                     }
                 };
                 let used_s = prof.profiling_cost_s * fraction;
@@ -631,8 +682,27 @@ impl Dispatcher {
                         * shared.cfg.node.gpu.sweep_frequencies().len() as f64
                         - used_s;
                 }
-                plans.insert(workload.app.clone(), (plan.clone(), used_s));
-                (plan, false, used_s, fraction)
+                // Class-keyed plan cache: a profiled app whose class
+                // already has a plan (installed by a *different* app)
+                // shares it instead of installing its own.
+                let key = match fresh_class {
+                    Some(cid) => format!("class:{cid}"),
+                    None => format!("app:{}", workload.app),
+                };
+                let plan = match cache.by_key.get(&key) {
+                    Some((p, _, _)) => {
+                        shared.metrics.lock().unwrap().class_plan_shares += 1;
+                        rebind(p, job.objective)
+                    }
+                    None => {
+                        cache
+                            .by_key
+                            .insert(key.clone(), (fresh_plan.clone(), used_s, fresh_class));
+                        fresh_plan
+                    }
+                };
+                cache.app_key.insert(workload.app.clone(), key);
+                (plan, false, used_s, fraction, fresh_class)
             }
         };
         if cached {
@@ -651,6 +721,7 @@ impl Dispatcher {
             cap_mhz: plan.f_cap_mhz,
             pwr_neighbor: plan.pwr_neighbor,
             util_neighbor: plan.util_neighbor,
+            class_id,
             predicted_p90_w,
             cached,
             profiling_cost_s: cost_s,
@@ -839,6 +910,7 @@ impl Dispatcher {
                     f_cap_mhz: r.adm.cap_mhz,
                     pwr_neighbor: r.adm.pwr_neighbor,
                     util_neighbor: r.adm.util_neighbor,
+                    class_id: r.adm.class_id,
                     predicted_p90_w: r.adm.predicted_p90_w,
                     observed_p90_w: e.observed_p90_w,
                     observed_peak_w: e.observed_peak_w,
@@ -900,6 +972,7 @@ impl Dispatcher {
 mod tests {
     use super::*;
     use crate::config::GpuSpec;
+    use crate::coordinator::job::outcome_table;
     use crate::workloads;
 
     fn small_refset() -> ReferenceSet {
@@ -1006,6 +1079,69 @@ mod tests {
         assert_eq!(s.profiling_cost_s, s2.profiling_cost_s);
         assert_eq!(s.f_cap_mhz, s2.f_cap_mhz);
         assert_eq!(s.profile_fraction, s2.profile_fraction);
+    }
+
+    #[test]
+    fn class_first_is_default_and_reports_class_ids() {
+        let sched = PowerAwareScheduler::new(SchedulerConfig::default(), small_refset());
+        for (i, wl) in ["faiss-b4096", "qwen15-moe-b32", "faiss-b4096"].iter().enumerate() {
+            sched
+                .submit(Job {
+                    id: i as u64,
+                    workload: wl.to_string(),
+                    objective: Objective::PowerCentric,
+                    iterations: 2,
+                })
+                .unwrap();
+        }
+        let outcomes = sched.collect(3);
+        sched.shutdown();
+        let m = sched.metrics();
+        assert!(m.classes_active >= 2, "default search must build the class registry");
+        for o in &outcomes {
+            let cid = o.class_id.expect("class-first outcomes carry class ids");
+            assert!(cid < m.classes_active, "class id {cid} out of range");
+        }
+        // the repeat faiss still hits the plan cache without re-profiling
+        assert_eq!(m.profiles_run, 2);
+        assert_eq!(m.cache_hits, 1);
+        // the outcome table renders the class column deterministically
+        let t = outcome_table(&outcomes);
+        assert!(t.starts_with("id,workload,objective,node,gpu,cap_mhz,class,"), "{t}");
+    }
+
+    #[test]
+    fn flat_and_class_first_agree_on_single_job_caps() {
+        let run = |search: SearchMode| {
+            let cfg = SchedulerConfig {
+                search,
+                ..Default::default()
+            };
+            let sched = PowerAwareScheduler::new(cfg, small_refset());
+            sched
+                .submit(Job {
+                    id: 0,
+                    workload: "faiss-b4096".into(),
+                    objective: Objective::PowerCentric,
+                    iterations: 2,
+                })
+                .unwrap();
+            let o = sched.collect(1).remove(0);
+            sched.shutdown();
+            let m = sched.metrics();
+            (o, m)
+        };
+        let (f, fm) = run(SearchMode::Flat);
+        let (c, cm) = run(SearchMode::ClassFirst);
+        // exact class-first search ⇒ identical single-app decision
+        assert_eq!(f.f_cap_mhz, c.f_cap_mhz);
+        assert_eq!(f.pwr_neighbor, c.pwr_neighbor);
+        assert_eq!(f.predicted_p90_w, c.predicted_p90_w);
+        assert!(f.class_id.is_none());
+        assert!(c.class_id.is_some());
+        assert_eq!(fm.classes_active, 0);
+        assert!(cm.classes_active >= 2);
+        assert_eq!(fm.class_plan_shares, 0);
     }
 
     #[test]

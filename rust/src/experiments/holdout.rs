@@ -69,8 +69,11 @@ pub fn evaluate(ctx: &mut ExperimentContext, q: f64) -> anyhow::Result<Vec<Power
         let cut = rs.without_app(&entry.app);
         let sel = SelectOptimalFreq::new(&cut, &params);
         let c = sel.choose_bin_size(&target);
-        let (nn, dist) = sel
-            .pwr_neighbor(&target, c)
+        // Shared ranking entry point (no hand-rolled scan loop): element
+        // 0 is exactly `pwr_neighbor`'s winner.
+        let ranked = sel.rank_pwr_neighbors(&target, c);
+        let &(nn, dist) = ranked
+            .first()
             .ok_or_else(|| anyhow::anyhow!("no neighbor for {name}"))?;
         let (cap, pred) = sel.cap_power_centric_q(nn, q);
         let obs = entry

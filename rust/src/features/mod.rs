@@ -20,15 +20,33 @@ pub struct SpikeVector {
     pub total: f64,
     /// Bin width c used to build this vector.
     pub bin_width: f64,
+    /// Cached L2 norm of `v`, computed once at construction so cosine
+    /// callers (nearest-neighbor scans run once per reference entry per
+    /// candidate bin size per query) stop recomputing it per pair.
+    pub norm: f64,
+}
+
+/// L2 norm — the arithmetic `clustering::metrics::cosine_distance` uses,
+/// factored out so the cached [`SpikeVector::norm`] is bit-identical to
+/// what an uncached caller would compute.
+pub fn l2_norm(v: &[f64]) -> f64 {
+    v.iter().map(|x| x * x).sum::<f64>().sqrt()
 }
 
 impl SpikeVector {
-    pub fn zeros(bin_width: f64) -> Self {
+    /// The only constructor: caches the L2 norm up front.
+    pub fn new(v: Vec<f64>, total: f64, bin_width: f64) -> Self {
+        let norm = l2_norm(&v);
         SpikeVector {
-            v: vec![0.0; NBINS],
-            total: 0.0,
+            v,
+            total,
             bin_width,
+            norm,
         }
+    }
+
+    pub fn zeros(bin_width: f64) -> Self {
+        Self::new(vec![0.0; NBINS], 0.0, bin_width)
     }
 
     /// Fraction-weighted bins sum to 1 when any spike exists.
@@ -37,7 +55,19 @@ impl SpikeVector {
     }
 
     pub fn is_zero(&self) -> bool {
-        self.total == 0.0
+        // `total` counts samples in whole steps, but guard against any
+        // float drift instead of the old exact `== 0.0` compare.
+        self.total <= 0.0
+    }
+
+    /// Cosine distance to another spike vector using the cached norms —
+    /// identical arithmetic (term order and ε floors included) to
+    /// [`crate::clustering::metrics::cosine_distance`], minus the two
+    /// per-call norm recomputations.
+    pub fn cosine_to(&self, other: &SpikeVector) -> f64 {
+        debug_assert_eq!(self.v.len(), other.v.len());
+        let dot: f64 = self.v.iter().zip(&other.v).map(|(x, y)| x * y).sum();
+        1.0 - dot / (self.norm.max(1e-12) * other.norm.max(1e-12))
     }
 }
 
@@ -61,11 +91,7 @@ pub fn spike_vector(trace: &PowerTrace, bin_width: f64) -> SpikeVector {
         }
     }
     let denom = total.max(1.0);
-    SpikeVector {
-        v: counts.into_iter().map(|c| c / denom).collect(),
-        total,
-        bin_width,
-    }
+    SpikeVector::new(counts.into_iter().map(|c| c / denom).collect(), total, bin_width)
 }
 
 /// Spike vector computed from relative samples directly (tests / PJRT
@@ -152,6 +178,27 @@ mod tests {
         let coarse = spike_vector(&t, 0.3);
         let nz = |s: &SpikeVector| s.v.iter().filter(|&&x| x > 0.0).count();
         assert!(nz(&fine) >= nz(&coarse));
+    }
+
+    #[test]
+    fn cached_norm_matches_recomputation_and_cosine_agrees() {
+        let t = trace(&[0.55, 0.72, 0.95, 1.31, 1.62]);
+        let a = spike_vector(&t, 0.1);
+        let b = spike_vector(&t, 0.05);
+        assert_eq!(a.norm, l2_norm(&a.v));
+        assert_eq!(b.norm, l2_norm(&b.v));
+        // cached-norm cosine is bit-identical to the metrics-module path
+        let d = a.cosine_to(&b);
+        let reference = crate::clustering::metrics::cosine_distance(&a.v, &b.v);
+        assert_eq!(d, reference);
+        assert_eq!(a.cosine_to(&a), crate::clustering::metrics::cosine_distance(&a.v, &a.v));
+        // zero vectors: distance pins to 1.0 through the ε guard
+        let z = SpikeVector::zeros(0.1);
+        assert!(z.is_zero());
+        assert!((z.cosine_to(&a) - 1.0).abs() < 1e-9);
+        // a vanishing (but nonzero-constructed) total still reads as zero
+        let tiny = SpikeVector::new(vec![0.0; NBINS], 0.0, 0.1);
+        assert!(tiny.is_zero());
     }
 
     #[test]

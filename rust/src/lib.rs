@@ -68,6 +68,7 @@ pub mod exec;
 pub mod experiments;
 pub mod features;
 pub mod minos;
+pub mod registry;
 pub mod report;
 pub mod runtime;
 pub mod sim;
@@ -78,4 +79,5 @@ pub mod workloads;
 
 pub use crate::minos::algorithm::{Objective, SelectOptimalFreq};
 pub use config::{GpuSpec, MinosParams, SimParams};
+pub use registry::{ClassRegistry, SearchMode};
 pub use trace::PowerTrace;

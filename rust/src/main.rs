@@ -28,24 +28,28 @@ use minos::coordinator::{
 use minos::experiments::{self, ExperimentContext};
 use minos::features::UtilPoint;
 use minos::minos::algorithm::{Objective, SelectOptimalFreq, TargetProfile};
+use minos::registry::{ClassRegistry, SearchMode, CLASS_K_MAX, CLASS_K_MIN};
 use minos::report::table;
 use minos::runtime::MinosRuntime;
 use minos::sim::dvfs::DvfsMode;
 use minos::stream::{OnlineClassifier, OnlineConfig};
 use minos::trace::import::StreamParser;
 
-const USAGE: &str = "usage: minos [--config FILE] [--jobs N] [--allow-stale] <list|profile|classify|select-freq|experiment|stream|serve|verify-artifacts> [args]
+const USAGE: &str = "usage: minos [--config FILE] [--jobs N] [--allow-stale] <list|profile|classify|select-freq|experiment|stream|serve|registry|verify-artifacts> [args]
   --jobs N: worker threads for profiling fan-outs (default: available parallelism)
   --allow-stale: accept a reference-set cache whose registry/sim-model fingerprint mismatches
   profile <workload> [--cap MHZ | --pin MHZ]     (--cap and --pin are mutually exclusive)
-  classify <workload> [--early-exit] [--window N] [--stable-k K]
+  classify <workload> [--early-exit] [--window N] [--stable-k K] [--search flat|class]
   select-freq <workload>
   experiment <fig1..fig12|ablation-*|table1|table2|headline|streaming|all|ablations>
   classify-trace <power.csv> [--tdp W] [--sm PCT --dram PCT]
   stream [power.csv|-] [--follow FILE] [--tdp W] [--dt MS] [--window N | --window-ms MS]
          [--stable-k K] [--sm PCT --dram PCT] [--objective power|perf] [--exact]
+         [--search flat|class]
   serve [--queue a,b,c | --load N] [--iterations N] [--nodes N]
-        [--policy uniform|minos] [--admission stream|batch] [--budget W]";
+        [--policy uniform|minos] [--admission stream|batch] [--budget W]
+        [--search flat|class]
+  registry <build|inspect|stats|absorb <workload>> [--file SNAPSHOT.json] [--out FILE]";
 
 struct Args {
     items: Vec<String>,
@@ -100,6 +104,16 @@ fn parse_flag<T: std::str::FromStr>(args: &mut Args, name: &str) -> anyhow::Resu
             Ok(t) => Ok(Some(t)),
             Err(_) => Err(anyhow::anyhow!("{name} expects a numeric value, got '{v}'")),
         },
+    }
+}
+
+/// Parse the shared `--search flat|class` flag (class-first is the
+/// default serving path; `flat` selects the brute-force oracle).
+fn parse_search(args: &mut Args) -> anyhow::Result<SearchMode> {
+    match args.flag("--search") {
+        None => Ok(SearchMode::ClassFirst),
+        Some(v) => SearchMode::parse(&v)
+            .ok_or_else(|| anyhow::anyhow!("--search expects 'flat' or 'class', got '{v}'")),
     }
 }
 
@@ -246,6 +260,7 @@ fn main() -> anyhow::Result<()> {
             let early_exit = args.has("--early-exit");
             let window = parse_flag::<usize>(&mut args, "--window")?;
             let stable_k = parse_flag::<usize>(&mut args, "--stable-k")?;
+            let search = parse_search(&mut args)?;
             let workload = args.next().ok_or_else(|| anyhow::anyhow!(USAGE))?;
             let mut ctx = ExperimentContext::new(config).with_allow_stale(allow_stale);
             let w = ctx
@@ -258,11 +273,48 @@ fn main() -> anyhow::Result<()> {
             let t = TargetProfile::from_profile(&w.app, &p, &bins);
             let params = ctx.config.minos.clone();
             let rs = ctx.refset().clone();
-            let sel = SelectOptimalFreq::new(&rs, &params);
+            // Degrade to the flat oracle when the registry can't be
+            // built (e.g. < 2 power entries) — same policy as the
+            // scheduler: keep serving rather than refuse.
+            let class_reg = match search {
+                SearchMode::ClassFirst => match ClassRegistry::build(&rs, &params) {
+                    Ok(reg) => Some(reg),
+                    Err(e) => {
+                        eprintln!("class-first search unavailable ({e}); falling back to the flat scan");
+                        None
+                    }
+                },
+                SearchMode::Flat => None,
+            };
+            let mut sel = SelectOptimalFreq::new(&rs, &params);
+            if let Some(reg) = class_reg.as_ref() {
+                sel = sel.with_registry(reg);
+            }
+            println!("search         : {}", search.label());
             let c = sel.choose_bin_size(&t);
             println!("bin size (ChooseBinSize): {c}");
-            if let Some((nn, d)) = sel.pwr_neighbor(&t, c) {
-                println!("power neighbor : {} (cosine {d:.3})", nn.name);
+            match class_reg.as_ref() {
+                // one centroid-first top-2 answers both the neighbor and
+                // the class diagnostics — no second classification pass
+                Some(reg) => {
+                    if let Some(hit) = reg.top2(&rs, &t, c) {
+                        println!(
+                            "power neighbor : {} (cosine {:.3})",
+                            hit.best.0.name, hit.best.1
+                        );
+                        println!(
+                            "class          : {} of {} (membership margin {:.3})",
+                            hit.class_id,
+                            reg.len(),
+                            hit.class_margin
+                        );
+                    }
+                }
+                None => {
+                    if let Some((nn, d)) = sel.pwr_neighbor(&t, c) {
+                        println!("power neighbor : {} (cosine {d:.3})", nn.name);
+                    }
+                }
             }
             if let Some((nn, d)) = sel.util_neighbor(&t) {
                 println!("perf neighbor  : {} (euclid {d:.2})", nn.name);
@@ -283,6 +335,9 @@ fn main() -> anyhow::Result<()> {
                 let mut oc =
                     OnlineClassifier::new(&rs, &params, cfg, &workload, &w.app, util)
                         .with_sample_dt(p.trace.sample_dt_ms);
+                if let Some(reg) = class_reg.as_ref() {
+                    oc = oc.with_registry(reg);
+                }
                 match oc.run_trace(&p.trace) {
                     Some(d) => {
                         let frac = d.trace_fraction.unwrap_or(1.0);
@@ -420,6 +475,7 @@ fn main() -> anyhow::Result<()> {
             let sm = parse_flag::<f64>(&mut args, "--sm")?;
             let dram = parse_flag::<f64>(&mut args, "--dram")?;
             let exact = args.has("--exact");
+            let search = parse_search(&mut args)?;
             let objective = match args.flag("--objective") {
                 None => Objective::PowerCentric,
                 Some(o) => match o.as_str() {
@@ -487,19 +543,33 @@ fn main() -> anyhow::Result<()> {
                 .filter(|s| s != "-")
                 .unwrap_or_else(|| "stdin".to_string());
             println!(
-                "stream: {label} | window {} samples, stable K={} | {:?} | {} quantiles | tdp {:.0} W, dt {:.2} ms",
+                "stream: {label} | window {} samples, stable K={} | {:?} | {} quantiles | {} search | tdp {:.0} W, dt {:.2} ms",
                 ocfg.window_samples,
                 ocfg.stable_k,
                 objective,
                 if exact { "exact" } else { "P2-sketch" },
+                search.label(),
                 tdp,
                 dt
             );
+            let class_reg = match search {
+                SearchMode::ClassFirst => match ClassRegistry::build(&rs, &params) {
+                    Ok(reg) => Some(reg),
+                    Err(e) => {
+                        eprintln!("class-first search unavailable ({e}); falling back to the flat scan");
+                        None
+                    }
+                },
+                SearchMode::Flat => None,
+            };
             let util = UtilPoint::new(sm.unwrap_or(0.0), dram.unwrap_or(0.0));
             let app = format!("external:{label}");
             let mut oc = OnlineClassifier::new(&rs, &params, ocfg, &label, &app, util)
                 .with_tdp(tdp)
                 .with_sample_dt(dt);
+            if let Some(reg) = class_reg.as_ref() {
+                oc = oc.with_registry(reg);
+            }
             let mut last_windows = 0usize;
             // Input samples when the whole stream was parsed (file mode,
             // or a pipe that ended) — the denominator of the savings
@@ -605,6 +675,9 @@ fn main() -> anyhow::Result<()> {
                 "decision   : NN {} -> cap {:.0} MHz ({:?}; bin {})",
                 d.plan.pwr_neighbor, d.plan.f_cap_mhz, objective, d.plan.chosen_bin_size
             );
+            if let Some(cid) = d.class_id {
+                println!("class      : {cid}");
+            }
             println!("predicted  : q {:.2}xTDP", d.plan.predicted_quantile_rel);
             if sm.is_some() && dram.is_some() {
                 println!(
@@ -666,6 +739,7 @@ fn main() -> anyhow::Result<()> {
                     anyhow::anyhow!("--admission expects 'stream' or 'batch', got '{a}'")
                 })?,
             };
+            let search = parse_search(&mut args)?;
             let list: Vec<String> = match (queue_flag, load) {
                 (Some(q), _) => q
                     .split(',')
@@ -684,20 +758,22 @@ fn main() -> anyhow::Result<()> {
                 node.power_budget_w = b;
             }
             println!(
-                "serve: {} jobs on {} node(s) x {} {} | budget {:.0} W/node | policy {} | admission {}",
+                "serve: {} jobs on {} node(s) x {} {} | budget {:.0} W/node | policy {} | admission {} | {} search",
                 list.len(),
                 nodes,
                 node.gpus_per_node,
                 node.gpu.name,
                 node.power_budget_w,
                 policy.label(),
-                admission.label()
+                admission.label(),
+                search.label()
             );
             let cfg = SchedulerConfig {
                 node,
                 nodes,
                 policy,
                 admission,
+                search,
                 sim: config.sim.clone(),
                 minos: config.minos.clone(),
                 sim_ms_per_wall_ms: 0.0,
@@ -716,12 +792,13 @@ fn main() -> anyhow::Result<()> {
             outcomes.sort_by_key(|o| o.job.id);
             for o in &outcomes {
                 println!(
-                    "job {:>3} {:<24} n{}/gpu{} cap {:.0} MHz  p90 {:.0} W (pred {:.0})  iter {:.1} ms  v[{:.0}..{:.0}] ms  [{}]",
+                    "job {:>3} {:<24} n{}/gpu{} cap {:.0} MHz cls {}  p90 {:.0} W (pred {:.0})  iter {:.1} ms  v[{:.0}..{:.0}] ms  [{}]",
                     o.job.id,
                     o.job.workload,
                     o.node,
                     o.gpu,
                     o.f_cap_mhz,
+                    o.class_id.map(|c| c.to_string()).unwrap_or_else(|| "-".into()),
                     o.observed_p90_w,
                     o.predicted_p90_w,
                     o.iter_time_ms,
@@ -756,6 +833,116 @@ fn main() -> anyhow::Result<()> {
                 list.len(),
                 m.failed
             );
+        }
+        "registry" => {
+            // The class-first workload registry: build it from the seed
+            // reference set, inspect/persist snapshots, and absorb newly
+            // classified targets (README § "Class registry").
+            let sub = args.next().ok_or_else(|| anyhow::anyhow!(USAGE))?;
+            let out_path = args.flag("--out");
+            let file = args.flag("--file");
+            anyhow::ensure!(
+                sub != "build" || file.is_none(),
+                "registry build always re-clusters from the reference set; \
+                 use 'registry inspect --file SNAPSHOT.json' to view a snapshot"
+            );
+            let mut ctx = ExperimentContext::new(config).with_allow_stale(allow_stale);
+            let params = ctx.config.minos.clone();
+            let rs = ctx.refset().clone();
+            let mut reg = match &file {
+                Some(p) => ClassRegistry::load(p, &rs)?,
+                None => ClassRegistry::build(&rs, &params)?,
+            };
+            match sub.as_str() {
+                "build" | "inspect" | "stats" => {
+                    if sub == "stats" {
+                        let rows: Vec<Vec<String>> = reg
+                            .sweep
+                            .iter()
+                            .map(|(k, score)| vec![k.to_string(), format!("{score:.3}")])
+                            .collect();
+                        println!("silhouette sweep (dendrogram cuts):");
+                        println!("{}", table(&["K", "silhouette"], &rows));
+                    }
+                    let rows: Vec<Vec<String>> = reg
+                        .classes
+                        .iter()
+                        .map(|c| {
+                            vec![
+                                c.id.to_string(),
+                                (c.members.len()
+                                    + reg.absorbed.iter().filter(|a| a.class_id == c.id).count())
+                                .to_string(),
+                                c.representative.clone().unwrap_or_else(|| "-".into()),
+                                format!("{:.3}", reg.class_radius(c.id)),
+                                c.scaling
+                                    .as_ref()
+                                    .map(|sd| format!("{:.2}", sd.uncapped().p90_rel))
+                                    .unwrap_or_else(|| "-".into()),
+                                c.member_names.join(", "),
+                            ]
+                        })
+                        .collect();
+                    println!(
+                        "{}",
+                        table(
+                            &["class", "n", "representative", "radius", "p90@uncap", "members"],
+                            &rows
+                        )
+                    );
+                }
+                "absorb" => {
+                    let workload = args.next().ok_or_else(|| anyhow::anyhow!(USAGE))?;
+                    let w = ctx
+                        .registry
+                        .by_name(&workload)
+                        .ok_or_else(|| anyhow::anyhow!("unknown workload {workload}"))?
+                        .clone();
+                    let p = ctx.profile(&workload, DvfsMode::Uncapped)?;
+                    let t = TargetProfile::from_profile(&w.app, &p, &rs.bin_sizes);
+                    let o = reg.absorb(&rs, &t)?;
+                    println!(
+                        "absorbed '{}' into class {} ({}; centroid distance {:.3}, margin {:.3})",
+                        workload,
+                        o.class_id,
+                        if o.spawned { "NEW class spawned" } else { "existing class" },
+                        o.distance,
+                        o.margin,
+                    );
+                }
+                other => anyhow::bail!(
+                    "unknown registry subcommand '{other}'; known: build|inspect|stats|absorb"
+                ),
+            }
+            println!(
+                "classes: {} (sweep {}..={}, best silhouette {})",
+                reg.len(),
+                CLASS_K_MIN,
+                CLASS_K_MAX,
+                reg.best_silhouette()
+                    .map(|v| format!("{v:.3}"))
+                    .unwrap_or_else(|| "n/a".into()),
+            );
+            println!(
+                "version: {} | registry fingerprint {:016x} | refset digest {:016x}",
+                reg.version, reg.registry_fingerprint, reg.refset_digest
+            );
+            println!("registry digest: {:#018x}", reg.digest());
+            // Absorb mutates the snapshot: persist to --out, or back to
+            // the --file it was loaded from — and say so when neither
+            // was given, instead of silently dropping the new version.
+            let persist = out_path.or_else(|| if sub == "absorb" { file.clone() } else { None });
+            match persist {
+                Some(p) => {
+                    reg.save(&p)?;
+                    println!("saved: {p}");
+                }
+                None if sub == "absorb" => println!(
+                    "note: absorb result NOT persisted — pass --out FILE \
+                     (or --file FILE to update a snapshot in place)"
+                ),
+                None => {}
+            }
         }
         "verify-artifacts" => {
             let rt = MinosRuntime::auto();

@@ -18,7 +18,7 @@
 use crate::config::MinosParams;
 use crate::features::{spike_vector, SpikeVector, UtilPoint};
 use crate::minos::reference_set::{ReferenceEntry, ReferenceSet};
-use crate::clustering::metrics::cosine_distance;
+use crate::registry::ClassRegistry;
 use crate::sim::profiler::Profile;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -119,6 +119,10 @@ pub struct FreqPlan {
 pub struct SelectOptimalFreq<'a> {
     pub refset: &'a ReferenceSet,
     pub params: MinosParams,
+    /// Optional class-first index over the same reference set
+    /// ([`SelectOptimalFreq::with_registry`]).  None ⇒ flat O(N·D) scan,
+    /// the oracle the class-first path must agree with.
+    pub registry: Option<&'a ClassRegistry>,
 }
 
 impl<'a> SelectOptimalFreq<'a> {
@@ -126,25 +130,57 @@ impl<'a> SelectOptimalFreq<'a> {
         SelectOptimalFreq {
             refset,
             params: params.clone(),
+            registry: None,
         }
+    }
+
+    /// Serve neighbor queries centroid-first through a [`ClassRegistry`]
+    /// built over this reference set.  The registry must match the
+    /// reference set (same entries, same fingerprints).
+    pub fn with_registry(mut self, registry: &'a ClassRegistry) -> Self {
+        assert!(
+            registry.matches(self.refset),
+            "class registry was built for a different reference set"
+        );
+        self.registry = Some(registry);
+        self
     }
 
     /// GetPwrNeighbor: nearest reference entry by cosine distance over
     /// the spike vectors at bin size `c`.  Excludes the target's own app.
+    /// With a class registry attached this is centroid-first O(K·D) plus
+    /// an intra-class refine; both paths return the identical neighbor.
     pub fn pwr_neighbor(
         &self,
         target: &TargetProfile,
         c: f64,
     ) -> Option<(&'a ReferenceEntry, f64)> {
-        // Allocation-free min-scan (this runs per candidate bin size per
-        // streaming window); first-wins on ties, agreeing with
-        // `rank_pwr_neighbors`' stable sort — ties are real for
-        // zero-spike targets, where every cosine distance is 1.0.
+        if let Some(reg) = self.registry {
+            // the index covers every refset bin size, so a miss here can
+            // only mean "no eligible candidate" — which the flat scan
+            // below would re-derive identically; fall through anyway so
+            // an unindexed bin size degrades instead of failing
+            if let Some(hit) = reg.nearest(self.refset, target, c) {
+                return Some(hit);
+            }
+        }
+        self.pwr_neighbor_flat(target, c)
+    }
+
+    /// The flat-scan oracle: allocation-free min-scan (this runs per
+    /// candidate bin size per streaming window); first-wins on ties,
+    /// agreeing with `rank_pwr_neighbors`' stable sort — ties are real
+    /// for zero-spike targets, where every cosine distance is 1.0.
+    pub fn pwr_neighbor_flat(
+        &self,
+        target: &TargetProfile,
+        c: f64,
+    ) -> Option<(&'a ReferenceEntry, f64)> {
         let tv = target.vector_for(c)?;
         let mut best: Option<(&ReferenceEntry, f64)> = None;
         for e in self.refset.power_entries(Some(&target.app)) {
             let Some(ev) = e.vector_for(c) else { continue };
-            let d = cosine_distance(&tv.v, &ev.v);
+            let d = tv.cosine_to(ev);
             if best.is_none_or(|(_, bd)| d < bd) {
                 best = Some((e, d));
             }
@@ -155,7 +191,9 @@ impl<'a> SelectOptimalFreq<'a> {
     /// All candidate power neighbors at bin size `c`, sorted by ascending
     /// cosine distance (ties broken by registry order, which is stable).
     /// `pwr_neighbor` is element 0; the runner-up (element 1) feeds the
-    /// margin-based confidence of the streaming classifier.
+    /// margin-based confidence of the streaming classifier.  This is the
+    /// shared ranking entry point — the holdout/ablation experiment
+    /// drivers call it instead of re-implementing the scan loop.
     pub fn rank_pwr_neighbors(
         &self,
         target: &TargetProfile,
@@ -168,10 +206,7 @@ impl<'a> SelectOptimalFreq<'a> {
             .refset
             .power_entries(Some(&target.app))
             .into_iter()
-            .filter_map(|e| {
-                e.vector_for(c)
-                    .map(|ev| (e, cosine_distance(&tv.v, &ev.v)))
-            })
+            .filter_map(|e| e.vector_for(c).map(|ev| (e, tv.cosine_to(ev))))
             .collect();
         ranked.sort_by(|a, b| a.1.total_cmp(&b.1));
         ranked
@@ -264,11 +299,28 @@ impl<'a> SelectOptimalFreq<'a> {
         objective: Objective,
     ) -> Option<Classification> {
         let c = self.choose_bin_size(target);
-        let ranked = self.rank_pwr_neighbors(target, c);
-        let (rp, dp) = *ranked.first()?;
-        let runner_up = ranked
-            .get(1)
-            .map(|(e, d)| (e.name.clone(), *d));
+        // Class-first fast path: exact top-2 through the centroid index,
+        // with the winning class id + membership margin as diagnostics.
+        // The flat ranking is the oracle fallback (and the only path
+        // when no registry is attached).
+        let (rp, dp, runner_up, class_id, class_margin) = match self
+            .registry
+            .and_then(|reg| reg.top2(self.refset, target, c))
+        {
+            Some(hit) => (
+                hit.best.0,
+                hit.best.1,
+                hit.runner_up.map(|(e, d)| (e.name.clone(), d)),
+                Some(hit.class_id),
+                Some(hit.class_margin),
+            ),
+            None => {
+                let ranked = self.rank_pwr_neighbors(target, c);
+                let (rp, dp) = *ranked.first()?;
+                let runner_up = ranked.get(1).map(|(e, d)| (e.name.clone(), *d));
+                (rp, dp, runner_up, None, None)
+            }
+        };
         let (ru, du) = self.util_neighbor(target)?;
         let (f_pwr, pred_q) = self.cap_power_centric(rp);
         let (f_perf, pred_d) = self.cap_perf_centric(ru);
@@ -300,6 +352,8 @@ impl<'a> SelectOptimalFreq<'a> {
             },
             runner_up,
             margin,
+            class_id,
+            class_margin,
         })
     }
 }
@@ -318,6 +372,12 @@ pub struct Classification {
     /// pulls away.  The online classifier reports the minimum margin
     /// over its stability streak as the decision confidence.
     pub margin: f64,
+    /// Minos class of the winning power neighbor — Some only when the
+    /// query was served class-first through a [`ClassRegistry`].
+    pub class_id: Option<usize>,
+    /// Normalized separation between the two nearest class centroids
+    /// (the target's class-membership margin); Some iff `class_id` is.
+    pub class_margin: Option<f64>,
 }
 
 #[cfg(test)]
@@ -400,6 +460,44 @@ mod tests {
         let (ru_name, ru_d) = cls.runner_up.expect("3-entry refset has a runner-up");
         assert_eq!(ranked[1].0.name, ru_name);
         assert!(ru_d >= cls.plan.pwr_distance);
+    }
+
+    #[test]
+    fn class_first_classification_agrees_with_flat_oracle() {
+        let (rs, params) = setup();
+        let reg = crate::registry::ClassRegistry::build(&rs, &params).unwrap();
+        let flat = SelectOptimalFreq::new(&rs, &params);
+        let fast = SelectOptimalFreq::new(&rs, &params).with_registry(&reg);
+        for name in ["faiss-b4096", "sdxl-b64", "milc-6", "lammps-8x8x16"] {
+            let t = target(name);
+            for obj in [Objective::PowerCentric, Objective::PerfCentric] {
+                let a = flat.classify(&t, obj).unwrap();
+                let b = fast.classify(&t, obj).unwrap();
+                assert_eq!(a.plan.pwr_neighbor, b.plan.pwr_neighbor, "{name}");
+                assert_eq!(a.plan.f_cap_mhz, b.plan.f_cap_mhz, "{name}");
+                assert_eq!(a.plan.chosen_bin_size, b.plan.chosen_bin_size, "{name}");
+                assert_eq!(a.margin.to_bits(), b.margin.to_bits(), "{name}: margin");
+                // class diagnostics only exist on the class-first path,
+                // and the reported class is the winning neighbor's class
+                assert!(a.class_id.is_none() && a.class_margin.is_none());
+                let cid = b.class_id.expect("class-first reports a class id");
+                assert_eq!(reg.class_of(&b.plan.pwr_neighbor), Some(cid), "{name}");
+                assert!((0.0..=1.0).contains(&b.class_margin.unwrap()), "{name}");
+            }
+        }
+        // pwr_neighbor fast path agrees bit-for-bit too
+        let t = target("faiss-b4096");
+        for &c in &rs.bin_sizes {
+            let a = flat.pwr_neighbor(&t, c);
+            let b = fast.pwr_neighbor(&t, c);
+            match (a, b) {
+                (Some((ea, da)), Some((eb, db))) => {
+                    assert_eq!(ea.name, eb.name, "bin {c}");
+                    assert_eq!(da.to_bits(), db.to_bits(), "bin {c}");
+                }
+                (a, b) => panic!("bin {c}: {:?} vs {:?}", a.map(|x| x.1), b.map(|x| x.1)),
+            }
+        }
     }
 
     #[test]

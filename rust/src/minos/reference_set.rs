@@ -64,12 +64,38 @@ pub struct ScalingData {
 }
 
 impl ScalingData {
+    /// The only constructor: asserts the frequency grid is strictly
+    /// ascending — the invariant [`ScalingData::at`]'s binary search
+    /// relies on (and what every sweep naturally produces).
+    pub fn new(points: Vec<FreqPoint>) -> Self {
+        assert!(
+            points.windows(2).all(|w| w[0].f_mhz < w[1].f_mhz),
+            "ScalingData: frequency grid must be strictly ascending"
+        );
+        ScalingData { points }
+    }
+
     pub fn uncapped(&self) -> &FreqPoint {
         self.points.last().expect("empty scaling data")
     }
 
+    /// Point at cap `f_mhz`, within the 0.5 MHz tolerance of the old
+    /// linear scan.  Binary search narrows to a conservative start, then
+    /// the *original* first-wins predicate runs forward — so even on a
+    /// dense grid where several points fall inside the tolerance, the
+    /// result is exactly what the old ascending scan returned.
     pub fn at(&self, f_mhz: f64) -> Option<&FreqPoint> {
-        self.points.iter().find(|p| (p.f_mhz - f_mhz).abs() < 0.5)
+        // any point with f < f_mhz - 1.0 can never satisfy |Δ| < 0.5
+        let start = self.points.partition_point(|p| p.f_mhz < f_mhz - 1.0);
+        for p in &self.points[start..] {
+            if (p.f_mhz - f_mhz).abs() < 0.5 {
+                return Some(p);
+            }
+            if p.f_mhz >= f_mhz {
+                break; // ascending: no later point can fall inside ±0.5
+            }
+        }
+        None
     }
 
     /// Performance degradation at cap `f` relative to uncapped (fraction).
@@ -190,7 +216,7 @@ impl ReferenceSet {
                 vectors,
                 util: UtilPoint::new(uncapped.app_sm_util, uncapped.app_dram_util),
                 mean_power_w: uncapped.trace.mean(),
-                scaling: ScalingData { points },
+                scaling: ScalingData::new(points),
                 power_profiled: w.power_profiled,
             });
         }
@@ -368,11 +394,7 @@ impl ReferenceEntry {
             .arr("vectors")?
             .iter()
             .map(|v| -> anyhow::Result<SpikeVector> {
-                Ok(SpikeVector {
-                    v: v.f64s("v")?,
-                    total: v.f("total")?,
-                    bin_width: v.f("bin_width")?,
-                })
+                Ok(SpikeVector::new(v.f64s("v")?, v.f("total")?, v.f("bin_width")?))
             })
             .collect::<anyhow::Result<Vec<_>>>()?;
         let points = j
@@ -380,13 +402,20 @@ impl ReferenceEntry {
             .iter()
             .map(FreqPoint::from_json)
             .collect::<anyhow::Result<Vec<_>>>()?;
+        // A corrupt cache must be a hard error here, not an assert panic
+        // inside `ScalingData::new`.
+        anyhow::ensure!(
+            points.windows(2).all(|w| w[0].f_mhz < w[1].f_mhz),
+            "ReferenceEntry '{}': scaling frequency grid is not strictly ascending",
+            j.s("name").unwrap_or_default()
+        );
         Ok(ReferenceEntry {
             name: j.s("name")?,
             app: j.s("app")?,
             vectors,
             util: UtilPoint::new(j.f("sm")?, j.f("dram")?),
             mean_power_w: j.f("mean_power_w")?,
-            scaling: ScalingData { points },
+            scaling: ScalingData::new(points),
             power_profiled: j.b("power_profiled")?,
         })
     }
@@ -523,6 +552,90 @@ mod tests {
         assert!(corrupt(&mut j), "serialized layout changed");
         let err = ReferenceSet::from_json(&j).unwrap_err();
         assert!(err.to_string().contains("FreqPoint"), "{err}");
+    }
+
+    fn point(f_mhz: f64) -> FreqPoint {
+        FreqPoint {
+            f_mhz,
+            p50_rel: 0.8,
+            p90_rel: 1.0,
+            p95_rel: 1.1,
+            p99_rel: 1.2,
+            peak_rel: 1.3,
+            mean_w: 600.0,
+            iter_time_ms: 2.0,
+            frac_above_tdp: 0.1,
+            profiling_cost_s: 1.0,
+        }
+    }
+
+    #[test]
+    fn at_binary_search_hit_miss_and_boundaries() {
+        let sd = ScalingData::new(vec![point(1300.0), point(1400.0), point(1500.0)]);
+        // exact hits, including both ends of the grid
+        assert_eq!(sd.at(1300.0).unwrap().f_mhz, 1300.0);
+        assert_eq!(sd.at(1400.0).unwrap().f_mhz, 1400.0);
+        assert_eq!(sd.at(1500.0).unwrap().f_mhz, 1500.0);
+        // within the 0.5 MHz tolerance on either side
+        assert_eq!(sd.at(1399.6).unwrap().f_mhz, 1400.0);
+        assert_eq!(sd.at(1400.4).unwrap().f_mhz, 1400.0);
+        // boundary: exactly 0.5 away is a miss (strict < 0.5, as before)
+        assert!(sd.at(1399.5).is_none());
+        assert!(sd.at(1400.5).is_none());
+        // misses between and outside grid points
+        assert!(sd.at(1350.0).is_none());
+        assert!(sd.at(1250.0).is_none());
+        assert!(sd.at(1600.0).is_none());
+        // agreement with the old linear scan on a dense probe sweep
+        let linear = |f: f64| sd.points.iter().find(|p| (p.f_mhz - f).abs() < 0.5);
+        let mut f = 1290.0;
+        while f <= 1510.0 {
+            assert_eq!(
+                sd.at(f).map(|p| p.f_mhz),
+                linear(f).map(|p| p.f_mhz),
+                "probe {f}"
+            );
+            f += 0.1;
+        }
+        // sub-MHz grid where several points fall inside one tolerance
+        // window: first-wins, exactly like the old ascending scan
+        let dense = ScalingData::new(vec![point(1000.0), point(1000.3)]);
+        assert_eq!(dense.at(1000.4).unwrap().f_mhz, 1000.0);
+        assert_eq!(dense.at(1000.2).unwrap().f_mhz, 1000.0);
+        assert_eq!(dense.at(1000.7).unwrap().f_mhz, 1000.3);
+        let dl = |f: f64| dense.points.iter().find(|p| (p.f_mhz - f).abs() < 0.5);
+        let mut f = 999.0;
+        while f <= 1002.0 {
+            assert_eq!(dense.at(f).map(|p| p.f_mhz), dl(f).map(|p| p.f_mhz), "probe {f}");
+            f += 0.05;
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "strictly ascending")]
+    fn unsorted_grid_is_rejected_at_construction() {
+        let _ = ScalingData::new(vec![point(1400.0), point(1300.0)]);
+    }
+
+    #[test]
+    fn unsorted_grid_in_cache_is_a_hard_error_not_a_panic() {
+        let rs = small_set();
+        let mut j = Json::parse(&rs.to_json().dump()).unwrap();
+        // swap the first two scaling rows of entry 0 so the grid descends
+        let corrupt = |j: &mut Json| -> bool {
+            let Json::Obj(top) = j else { return false };
+            let Some(Json::Arr(entries)) = top.get_mut("entries") else { return false };
+            let Some(Json::Obj(e0)) = entries.first_mut() else { return false };
+            let Some(Json::Arr(points)) = e0.get_mut("scaling") else { return false };
+            if points.len() < 2 {
+                return false;
+            }
+            points.swap(0, 1);
+            true
+        };
+        assert!(corrupt(&mut j), "serialized layout changed");
+        let err = ReferenceSet::from_json(&j).unwrap_err();
+        assert!(err.to_string().contains("not strictly ascending"), "{err}");
     }
 
     #[test]

@@ -1,0 +1,484 @@
+//! The class registry's SoA vector index: precomputed spike vectors in
+//! a flat slot-major layout (entries grouped by class), cached norms,
+//! per-class cosine centroids, and per-class angular radii.
+//!
+//! A query is **centroid-first**: rank the K class centroids by cosine
+//! distance, then refine inside classes in that order, pruning any class
+//! whose angular lower bound `θ(target, centroid) − radius(class)`
+//! proves it cannot beat the current second-best candidate.  The member
+//! arithmetic is bit-identical to the flat scan's
+//! [`SpikeVector::cosine_to`] (same dot order, same ε floors), and ties
+//! break on the reference-set entry index exactly like the flat scan's
+//! first-wins rule — so the pruned search returns the *same* top-1/top-2
+//! as the O(N·D) brute force, just without visiting most of N.
+
+use crate::features::{l2_norm, SpikeVector, NBINS};
+use crate::minos::reference_set::{ReferenceEntry, ReferenceSet};
+use crate::registry::AbsorbedEntry;
+
+/// Result of a class-first top-2 neighbor query.
+#[derive(Debug, Clone)]
+pub struct IndexHit<'a> {
+    /// Nearest eligible reference entry and its cosine distance —
+    /// identical to the flat scan's winner.
+    pub best: (&'a ReferenceEntry, f64),
+    /// Second-nearest eligible entry (None when only one candidate app
+    /// exists), feeding the classifier's neighbor margin.
+    pub runner_up: Option<(&'a ReferenceEntry, f64)>,
+    /// Class of the winning entry.
+    pub class_id: usize,
+    /// Normalized separation between the two nearest class centroids —
+    /// the target's class-membership margin in [0, 1].
+    pub class_margin: f64,
+    /// Classes whose members were actually visited (diagnostics: the
+    /// speedup story is this staying near 1 while K grows).
+    pub classes_scanned: usize,
+}
+
+/// Cosine distance with the exact arithmetic of
+/// [`SpikeVector::cosine_to`]: `a` must be the query side so the dot
+/// accumulates in the same order as the flat scan.
+fn cos_dist(a: &[f64], an: f64, b: &[f64], bn: f64) -> f64 {
+    let dot: f64 = a.iter().zip(b).map(|(x, y)| x * y).sum();
+    1.0 - dot / (an.max(1e-12) * bn.max(1e-12))
+}
+
+/// Angle (radians) corresponding to a cosine distance, clamped into the
+/// valid acos domain.
+fn angle(cos_dist: f64) -> f64 {
+    (1.0 - cos_dist).clamp(-1.0, 1.0).acos()
+}
+
+#[derive(Debug, Clone)]
+pub struct VectorIndex {
+    bin_sizes: Vec<f64>,
+    /// slot → reference-set entry index, grouped by class.
+    order: Vec<usize>,
+    /// class → `[start, end)` slot range in `order`.
+    ranges: Vec<(usize, usize)>,
+    /// Per bin size: raw spike vectors, slot-major (`slot*NBINS..`).
+    vecs: Vec<Vec<f64>>,
+    /// Per bin size: cached L2 norm per slot.
+    norms: Vec<Vec<f64>>,
+    /// Per bin size: unit centroids, class-major (`class*NBINS..`).
+    centroids: Vec<Vec<f64>>,
+    centroid_norms: Vec<Vec<f64>>,
+    /// Per bin size, per class: max angular distance centroid → member
+    /// (members include absorbed entries, which only widen the bound).
+    radii: Vec<Vec<f64>>,
+}
+
+impl VectorIndex {
+    /// Build the index for `classes` (reference-set entry indices per
+    /// class).  Absorbed entries contribute to centroids and radii only;
+    /// they are never refine candidates (they carry no scaling data).
+    pub fn build(
+        refset: &ReferenceSet,
+        classes: &[Vec<usize>],
+        absorbed: &[AbsorbedEntry],
+    ) -> anyhow::Result<VectorIndex> {
+        let bin_sizes = refset.bin_sizes.clone();
+        let nb = bin_sizes.len();
+        anyhow::ensure!(nb > 0, "reference set has no bin sizes");
+        let mut order = Vec::new();
+        let mut ranges = Vec::with_capacity(classes.len());
+        for members in classes {
+            let start = order.len();
+            order.extend(members.iter().copied());
+            ranges.push((start, order.len()));
+        }
+        let nslots = order.len();
+        let mut vecs = vec![vec![0.0; nslots * NBINS]; nb];
+        let mut norms = vec![vec![0.0; nslots]; nb];
+        for (slot, &ei) in order.iter().enumerate() {
+            let e = refset
+                .entries
+                .get(ei)
+                .ok_or_else(|| anyhow::anyhow!("class member index {ei} out of range"))?;
+            for (b, &c) in bin_sizes.iter().enumerate() {
+                let sv = e.vector_for(c).ok_or_else(|| {
+                    anyhow::anyhow!("entry '{}' has no spike vector at bin size {c}", e.name)
+                })?;
+                anyhow::ensure!(
+                    sv.v.len() == NBINS,
+                    "entry '{}' has a {}-slot vector (expected {NBINS})",
+                    e.name,
+                    sv.v.len()
+                );
+                vecs[b][slot * NBINS..(slot + 1) * NBINS].copy_from_slice(&sv.v);
+                norms[b][slot] = sv.norm;
+            }
+        }
+        let k = classes.len();
+        let mut centroids = vec![vec![0.0; k * NBINS]; nb];
+        let mut centroid_norms = vec![vec![0.0; k]; nb];
+        let mut radii = vec![vec![0.0; k]; nb];
+        for ci in 0..k {
+            for (b, &c) in bin_sizes.iter().enumerate() {
+                // cosine centroid: normalized mean of unit member vectors
+                let mut acc = vec![0.0; NBINS];
+                let (s0, s1) = ranges[ci];
+                for slot in s0..s1 {
+                    let mv = &vecs[b][slot * NBINS..(slot + 1) * NBINS];
+                    let mn = norms[b][slot];
+                    if mn > 1e-12 {
+                        for (a, &x) in acc.iter_mut().zip(mv) {
+                            *a += x / mn;
+                        }
+                    }
+                }
+                for ae in absorbed.iter().filter(|a| a.class_id == ci) {
+                    let sv = ae.vector_for(c).ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "absorbed entry '{}' has no spike vector at bin size {c}",
+                            ae.name
+                        )
+                    })?;
+                    if sv.norm > 1e-12 {
+                        for (a, &x) in acc.iter_mut().zip(&sv.v) {
+                            *a += x / sv.norm;
+                        }
+                    }
+                }
+                let cn = l2_norm(&acc);
+                if cn > 1e-12 {
+                    for a in acc.iter_mut() {
+                        *a /= cn;
+                    }
+                }
+                let cn = l2_norm(&acc); // 1 up to rounding, or 0 for a spike-free class
+                let mut r: f64 = 0.0;
+                for slot in s0..s1 {
+                    let d = cos_dist(
+                        &acc,
+                        cn,
+                        &vecs[b][slot * NBINS..(slot + 1) * NBINS],
+                        norms[b][slot],
+                    );
+                    r = r.max(angle(d));
+                }
+                for ae in absorbed.iter().filter(|a| a.class_id == ci) {
+                    let sv = ae.vector_for(c).expect("checked above");
+                    r = r.max(angle(cos_dist(&acc, cn, &sv.v, sv.norm)));
+                }
+                centroids[b][ci * NBINS..(ci + 1) * NBINS].copy_from_slice(&acc);
+                centroid_norms[b][ci] = cn;
+                radii[b][ci] = r;
+            }
+        }
+        Ok(VectorIndex {
+            bin_sizes,
+            order,
+            ranges,
+            vecs,
+            norms,
+            centroids,
+            centroid_norms,
+            radii,
+        })
+    }
+
+    pub fn classes(&self) -> usize {
+        self.ranges.len()
+    }
+
+    pub fn slots(&self) -> usize {
+        self.order.len()
+    }
+
+    fn bin_index(&self, c: f64) -> Option<usize> {
+        self.bin_sizes.iter().position(|&b| (b - c).abs() < 1e-9)
+    }
+
+    fn centroid_dist(&self, b: usize, ci: usize, tv: &SpikeVector) -> f64 {
+        let cv = &self.centroids[b][ci * NBINS..(ci + 1) * NBINS];
+        cos_dist(&tv.v, tv.norm, cv, self.centroid_norms[b][ci])
+    }
+
+    /// All class centroids ranked by ascending cosine distance to the
+    /// target (ties broken by class id).  Empty when `bin` is unindexed.
+    pub fn centroid_rank(&self, tv: &SpikeVector, bin: f64) -> Vec<(usize, f64)> {
+        let Some(b) = self.bin_index(bin) else {
+            return Vec::new();
+        };
+        let mut cd: Vec<(usize, f64)> = (0..self.ranges.len())
+            .map(|ci| (ci, self.centroid_dist(b, ci, tv)))
+            .collect();
+        cd.sort_by(|x, y| x.1.total_cmp(&y.1).then(x.0.cmp(&y.0)));
+        cd
+    }
+
+    /// A class's angular radius expressed as a cosine distance.
+    pub fn radius_dist(&self, bin: f64, class: usize) -> f64 {
+        self.bin_index(bin)
+            .and_then(|b| self.radii[b].get(class).copied())
+            .map(|r| 1.0 - r.cos())
+            .unwrap_or(0.0)
+    }
+
+    /// Exact top-2 nearest power entries under the class-first search.
+    /// Returns None when `bin` is unindexed or no eligible candidate
+    /// exists (all excluded) — callers fall back to the flat scan.
+    pub fn top2<'a>(
+        &self,
+        refset: &'a ReferenceSet,
+        tv: &SpikeVector,
+        exclude_app: Option<&str>,
+        bin: f64,
+    ) -> Option<IndexHit<'a>> {
+        let b = self.bin_index(bin)?;
+        let cd = self.centroid_rank(tv, bin);
+        if cd.is_empty() {
+            return None;
+        }
+        let class_margin = match (cd.first(), cd.get(1)) {
+            (Some(&(_, d1)), Some(&(_, d2))) if d2 > 0.0 => ((d2 - d1) / d2).clamp(0.0, 1.0),
+            (Some(_), Some(_)) => 0.0,
+            _ => 1.0,
+        };
+        // Lexicographic (distance, refset index) ordering reproduces the
+        // flat scan's strict-< first-wins tie-breaking exactly.
+        let better = |a: (usize, f64), bst: (usize, f64), order: &[usize]| -> bool {
+            a.1 < bst.1 || (a.1 == bst.1 && order[a.0] < order[bst.0])
+        };
+        let mut best: Option<(usize, f64)> = None;
+        let mut second: Option<(usize, f64)> = None;
+        let mut scanned = 0usize;
+        for &(ci, dc) in &cd {
+            if let Some((_, d2)) = second {
+                // θ(t, m) ≥ θ(t, c) − radius(class): if even the bound
+                // cannot beat the current runner-up, skip the class.  The
+                // ε slack only ever makes us scan *more*, so the result
+                // stays exact under float error.
+                let lb = 1.0 - (angle(dc) - self.radii[b][ci]).max(0.0).cos();
+                if lb > d2 + 1e-9 {
+                    continue;
+                }
+            }
+            scanned += 1;
+            let (s0, s1) = self.ranges[ci];
+            for slot in s0..s1 {
+                let e = &refset.entries[self.order[slot]];
+                if !e.power_profiled {
+                    continue;
+                }
+                if exclude_app.map(|a| e.app == a).unwrap_or(false) {
+                    continue;
+                }
+                let mv = &self.vecs[b][slot * NBINS..(slot + 1) * NBINS];
+                let d = cos_dist(&tv.v, tv.norm, mv, self.norms[b][slot]);
+                let cand = (slot, d);
+                match best {
+                    None => best = Some(cand),
+                    Some(bst) if better(cand, bst, &self.order) => {
+                        second = Some(bst);
+                        best = Some(cand);
+                    }
+                    Some(_) => match second {
+                        None => second = Some(cand),
+                        Some(sec) if better(cand, sec, &self.order) => second = Some(cand),
+                        Some(_) => {}
+                    },
+                }
+            }
+        }
+        let (bslot, bd) = best?;
+        let class_id = self
+            .ranges
+            .iter()
+            .position(|&(s0, s1)| (s0..s1).contains(&bslot))
+            .expect("slot outside every class range");
+        Some(IndexHit {
+            best: (&refset.entries[self.order[bslot]], bd),
+            runner_up: second.map(|(slot, d)| (&refset.entries[self.order[slot]], d)),
+            class_id,
+            class_margin,
+            classes_scanned: scanned,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GpuSpec;
+    use crate::features::UtilPoint;
+    use crate::minos::reference_set::{FreqPoint, ScalingData};
+    use crate::sim::rng::Rng;
+
+    fn freq_points() -> Vec<FreqPoint> {
+        (0..9)
+            .map(|i| FreqPoint {
+                f_mhz: 1300.0 + 100.0 * i as f64,
+                p50_rel: 0.7,
+                p90_rel: 0.9 + 0.02 * i as f64,
+                p95_rel: 1.0 + 0.02 * i as f64,
+                p99_rel: 1.1 + 0.02 * i as f64,
+                peak_rel: 1.2 + 0.02 * i as f64,
+                mean_w: 600.0,
+                iter_time_ms: 4.0 - 0.3 * i as f64,
+                frac_above_tdp: 0.1,
+                profiling_cost_s: 1.0,
+            })
+            .collect()
+    }
+
+    fn entry(name: &str, app: &str, v: Vec<f64>, bin_sizes: &[f64]) -> ReferenceEntry {
+        let total = 100.0;
+        ReferenceEntry {
+            name: name.into(),
+            app: app.into(),
+            vectors: bin_sizes
+                .iter()
+                .map(|&c| SpikeVector::new(v.clone(), total, c))
+                .collect(),
+            util: UtilPoint::new(50.0, 20.0),
+            mean_power_w: 600.0,
+            scaling: ScalingData::new(freq_points()),
+            power_profiled: true,
+        }
+    }
+
+    /// n entries spread over `protos` well-separated direction clusters.
+    fn synth_refset(n: usize, protos: usize, seed: u64) -> (ReferenceSet, Vec<Vec<usize>>) {
+        let bin_sizes = vec![0.1];
+        let mut rng = Rng::new(seed);
+        let mut entries = Vec::with_capacity(n);
+        let mut classes = vec![Vec::new(); protos];
+        for i in 0..n {
+            let p = i % protos;
+            let mut v = vec![0.0; NBINS];
+            // two hot bins per prototype + tiny deterministic jitter
+            v[4 * p] = 0.6 + rng.range(-0.05, 0.05);
+            v[4 * p + 1] = 0.4 + rng.range(-0.05, 0.05);
+            entries.push(entry(&format!("w{i}"), &format!("app{i}"), v, &bin_sizes));
+            classes[p].push(i);
+        }
+        let rs = ReferenceSet {
+            spec: GpuSpec::mi300x(),
+            bin_sizes,
+            entries,
+            registry_fingerprint: ReferenceSet::current_fingerprint(),
+        };
+        (rs, classes)
+    }
+
+    /// Brute-force flat oracle replicating `SelectOptimalFreq`'s scan:
+    /// first-wins strict-< over refset order.
+    fn flat_top2<'a>(
+        rs: &'a ReferenceSet,
+        tv: &SpikeVector,
+        exclude_app: Option<&str>,
+    ) -> (Option<(&'a ReferenceEntry, f64)>, Option<(&'a ReferenceEntry, f64)>) {
+        let mut ranked: Vec<(&ReferenceEntry, f64)> = rs
+            .entries
+            .iter()
+            .filter(|e| e.power_profiled)
+            .filter(|e| exclude_app.map(|a| e.app != a).unwrap_or(true))
+            .map(|e| (e, tv.cosine_to(e.vector_for(0.1).unwrap())))
+            .collect();
+        ranked.sort_by(|a, b| a.1.total_cmp(&b.1));
+        let mut it = ranked.into_iter();
+        (it.next(), it.next())
+    }
+
+    #[test]
+    fn pruned_search_is_exact_against_brute_force() {
+        let (rs, classes) = synth_refset(60, 5, 7);
+        let idx = VectorIndex::build(&rs, &classes, &[]).unwrap();
+        assert_eq!(idx.classes(), 5);
+        assert_eq!(idx.slots(), 60);
+        let mut rng = Rng::new(99);
+        for t in 0..50 {
+            let p = t % 5;
+            let mut v = vec![0.0; NBINS];
+            v[4 * p] = 0.5 + rng.range(-0.2, 0.2);
+            v[4 * p + 1] = 0.5 + rng.range(-0.2, 0.2);
+            v[(4 * p + 7) % NBINS] = rng.range(0.0, 0.1);
+            let tv = SpikeVector::new(v, 50.0, 0.1);
+            let exclude = if t % 3 == 0 { Some("app0") } else { None };
+            let hit = idx.top2(&rs, &tv, exclude, 0.1).expect("candidates exist");
+            let (fb, fr) = flat_top2(&rs, &tv, exclude);
+            let (fb, fbd) = fb.unwrap();
+            assert_eq!(hit.best.0.name, fb.name, "target {t}");
+            assert_eq!(hit.best.1.to_bits(), fbd.to_bits(), "target {t}: distance drifted");
+            let (fr, frd) = fr.unwrap();
+            assert_eq!(hit.runner_up.as_ref().unwrap().0.name, fr.name, "target {t}");
+            assert_eq!(hit.runner_up.as_ref().unwrap().1.to_bits(), frd.to_bits());
+            // the whole point: the pruned search skips most classes
+            assert!(hit.classes_scanned <= idx.classes());
+            assert!((0.0..=1.0).contains(&hit.class_margin));
+        }
+    }
+
+    #[test]
+    fn pruning_actually_skips_classes_on_tight_clusters() {
+        let (rs, classes) = synth_refset(100, 5, 3);
+        let idx = VectorIndex::build(&rs, &classes, &[]).unwrap();
+        // a target dead-center on prototype 2
+        let mut v = vec![0.0; NBINS];
+        v[8] = 0.6;
+        v[9] = 0.4;
+        let tv = SpikeVector::new(v, 50.0, 0.1);
+        let hit = idx.top2(&rs, &tv, None, 0.1).unwrap();
+        assert!(
+            hit.classes_scanned < idx.classes(),
+            "expected pruning, scanned {}/{}",
+            hit.classes_scanned,
+            idx.classes()
+        );
+        assert_eq!(hit.class_id, 2);
+    }
+
+    #[test]
+    fn exclusion_can_empty_a_class_and_search_still_succeeds() {
+        // one class is a single app; excluding it must fall through to
+        // the next class, never return the excluded entry
+        let bin_sizes = vec![0.1];
+        let mut v0 = vec![0.0; NBINS];
+        v0[0] = 1.0;
+        let mut v1 = vec![0.0; NBINS];
+        v1[20] = 1.0;
+        let rs = ReferenceSet {
+            spec: GpuSpec::mi300x(),
+            bin_sizes: bin_sizes.clone(),
+            entries: vec![
+                entry("a", "appA", v0.clone(), &bin_sizes),
+                entry("b", "appB", v1, &bin_sizes),
+            ],
+            registry_fingerprint: ReferenceSet::current_fingerprint(),
+        };
+        let idx = VectorIndex::build(&rs, &[vec![0], vec![1]], &[]).unwrap();
+        let tv = SpikeVector::new(v0, 10.0, 0.1);
+        let hit = idx.top2(&rs, &tv, Some("appA"), 0.1).unwrap();
+        assert_eq!(hit.best.0.name, "b");
+        assert!(hit.runner_up.is_none());
+        // excluding everything yields None
+        let lonely = ReferenceSet {
+            entries: rs.entries[..1].to_vec(),
+            ..rs.clone()
+        };
+        let idx1 = VectorIndex::build(&lonely, &[vec![0]], &[]).unwrap();
+        assert!(idx1.top2(&lonely, &tv, Some("appA"), 0.1).is_none());
+    }
+
+    #[test]
+    fn zero_vector_targets_tie_break_like_the_flat_scan() {
+        let (rs, classes) = synth_refset(12, 3, 5);
+        let idx = VectorIndex::build(&rs, &classes, &[]).unwrap();
+        let tv = SpikeVector::zeros(0.1);
+        let hit = idx.top2(&rs, &tv, None, 0.1).unwrap();
+        let (fb, _) = flat_top2(&rs, &tv, None);
+        assert_eq!(hit.best.0.name, fb.unwrap().0.name);
+        assert_eq!(hit.best.1, 1.0);
+    }
+
+    #[test]
+    fn unindexed_bin_returns_none() {
+        let (rs, classes) = synth_refset(6, 2, 1);
+        let idx = VectorIndex::build(&rs, &classes, &[]).unwrap();
+        let tv = SpikeVector::zeros(0.2);
+        assert!(idx.top2(&rs, &tv, None, 0.2).is_none());
+        assert!(idx.centroid_rank(&tv, 0.2).is_empty());
+    }
+}

@@ -1,0 +1,971 @@
+//! Class-first workload registry — the paper's central claim ("GPU
+//! workloads collapse into a finite number of distinct classes")
+//! materialized on the serving path.
+//!
+//! [`ClassRegistry::build`] clusters the reference set's power-profiled
+//! entries with the existing [`crate::clustering`] primitives
+//! (agglomerative Ward over spike-vector cosine distance at the chosen
+//! bin size, K selected by a silhouette sweep over dendrogram cuts) and
+//! derives per-class artifacts: a cosine centroid per candidate bin
+//! size, a merged (per-frequency mean) [`ScalingData`] proxy, a medoid
+//! representative, and an angular radius.  Entries live in an indexed
+//! SoA layout ([`index::VectorIndex`]) sorted by class, so a neighbor
+//! query is **centroid-first O(K·D)** with an exact pruned refine inside
+//! the winning classes instead of the flat O(N·D) scan — while
+//! returning bit-identical neighbors to the flat oracle.
+//!
+//! [`ClassRegistry::absorb`] adds newly classified targets online with
+//! margin/radius-gated new-class spawning; every absorb bumps the
+//! snapshot [`ClassRegistry::version`] and the registry persists to JSON
+//! (membership + absorbed entries; the index is derived state), carrying
+//! the reference set's registry/sim fingerprints so a stale snapshot is
+//! rejected at load exactly like the reference-set cache.
+//!
+//! Consumers: [`crate::minos::algorithm::SelectOptimalFreq`] (class-first
+//! fast path behind [`SearchMode`]), [`crate::stream::OnlineClassifier`]
+//! (per-window centroid pre-filter), the coordinator's class-keyed plan
+//! cache, and the `minos registry` CLI subcommand.
+
+pub mod index;
+
+use crate::clustering::hierarchy::{Dendrogram, Linkage};
+use crate::clustering::metrics::{pairwise, Metric};
+use crate::clustering::silhouette::silhouette_score;
+use crate::config::MinosParams;
+use crate::features::{l2_norm, SpikeVector, UtilPoint};
+use crate::minos::algorithm::TargetProfile;
+use crate::minos::reference_set::{ReferenceEntry, ReferenceSet, ScalingData};
+use crate::util::fnv::Fnv1a;
+use crate::util::json::{arr, num, nums, obj, s, Json};
+pub use index::{IndexHit, VectorIndex};
+
+/// Silhouette-sweep bounds for the class count (the CI smoke step
+/// asserts the built registry lands inside them).
+pub const CLASS_K_MIN: usize = 2;
+pub const CLASS_K_MAX: usize = 12;
+
+/// Agglomerative clustering is O(n³): beyond this many power entries,
+/// [`ClassRegistry::build`] clusters a prefix sample and assigns the
+/// remainder to the nearest provisional centroid (deterministic, and the
+/// class-first search stays exact regardless of how membership formed).
+pub const BUILD_CLUSTER_CAP: usize = 64;
+
+/// Absorb gating: spawn a new class when the target sits further from
+/// the nearest centroid than `radius × ABSORB_RADIUS_SLACK` (floored at
+/// `ABSORB_MIN_SPAWN_DIST` so tight classes don't spawn on noise), or
+/// when it is outside the radius *and* ambiguous between two centroids
+/// (margin below `ABSORB_MARGIN_FLOOR`).
+pub const ABSORB_RADIUS_SLACK: f64 = 1.25;
+pub const ABSORB_MIN_SPAWN_DIST: f64 = 0.10;
+pub const ABSORB_MARGIN_FLOOR: f64 = 0.05;
+
+/// How a classification query searches the reference layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SearchMode {
+    /// Brute-force O(N·D) scan over every reference entry (the oracle).
+    Flat,
+    /// Centroid-first class lookup through a [`ClassRegistry`].
+    ClassFirst,
+}
+
+impl SearchMode {
+    pub fn parse(v: &str) -> Option<SearchMode> {
+        match v {
+            "flat" => Some(SearchMode::Flat),
+            "class" | "class-first" => Some(SearchMode::ClassFirst),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            SearchMode::Flat => "flat",
+            SearchMode::ClassFirst => "class-first",
+        }
+    }
+}
+
+/// One Minos class: reference-set members plus derived artifacts.
+#[derive(Debug, Clone)]
+pub struct MinosClass {
+    pub id: usize,
+    /// Reference-set entry indices (ascending).
+    pub members: Vec<usize>,
+    pub member_names: Vec<String>,
+    /// Medoid member (min total cosine distance at the chosen bin);
+    /// None for a class spawned by absorb with no reference members.
+    pub representative: Option<String>,
+    /// Per-frequency mean of the members' scaling sweeps — the class's
+    /// scaling proxy; None for absorbed-only classes.
+    pub scaling: Option<ScalingData>,
+}
+
+/// A target absorbed online: features only (no cap-sweep scaling), so it
+/// shapes centroids/radii but is never served as a scaling neighbor.
+#[derive(Debug, Clone)]
+pub struct AbsorbedEntry {
+    pub name: String,
+    pub app: String,
+    pub class_id: usize,
+    pub vectors: Vec<SpikeVector>,
+    pub util: UtilPoint,
+}
+
+impl AbsorbedEntry {
+    pub fn vector_for(&self, bin_width: f64) -> Option<&SpikeVector> {
+        self.vectors
+            .iter()
+            .find(|v| (v.bin_width - bin_width).abs() < 1e-9)
+    }
+}
+
+/// Result of one [`ClassRegistry::absorb`].
+#[derive(Debug, Clone)]
+pub struct AbsorbOutcome {
+    pub class_id: usize,
+    pub spawned: bool,
+    /// Cosine distance to the nearest centroid at the chosen bin.
+    pub distance: f64,
+    /// Normalized separation between the two nearest centroids.
+    pub margin: f64,
+    /// Registry version after the absorb.
+    pub version: u64,
+}
+
+/// Digest binding a registry snapshot to the exact reference set it was
+/// built over (entry names + power flags + bin sizes + the refset's own
+/// registry/sim fingerprint).
+pub fn refset_digest(rs: &ReferenceSet) -> u64 {
+    let mut h = Fnv1a::new();
+    h.eat(&rs.registry_fingerprint.to_le_bytes());
+    for e in &rs.entries {
+        h.eat(e.name.as_bytes());
+        h.eat(&[0, e.power_profiled as u8]);
+    }
+    for &b in &rs.bin_sizes {
+        h.eat(&b.to_le_bytes());
+    }
+    h.finish()
+}
+
+#[derive(Debug, Clone)]
+pub struct ClassRegistry {
+    /// Bin size the classes were clustered at (`default_bin_size`).
+    pub chosen_bin: f64,
+    pub bin_sizes: Vec<f64>,
+    pub classes: Vec<MinosClass>,
+    /// Silhouette sweep (requested k, score) behind the K selection.
+    pub sweep: Vec<(usize, f64)>,
+    /// Snapshot version: 0 at build, +1 per absorb.
+    pub version: u64,
+    /// Carried from the reference set (workload registry ⊕ sim model).
+    pub registry_fingerprint: u64,
+    /// Binds the snapshot to the exact reference set (see
+    /// [`refset_digest`]); load rejects a mismatch.
+    pub refset_digest: u64,
+    pub absorbed: Vec<AbsorbedEntry>,
+    index: VectorIndex,
+}
+
+impl ClassRegistry {
+    /// Cluster the reference set into Minos classes and index it.
+    pub fn build(refset: &ReferenceSet, params: &MinosParams) -> anyhow::Result<ClassRegistry> {
+        let chosen_bin = params.default_bin_size;
+        anyhow::ensure!(
+            refset.bin_sizes.iter().any(|&b| (b - chosen_bin).abs() < 1e-9),
+            "reference set has no spike vectors at the default bin size {chosen_bin}"
+        );
+        let pidx: Vec<usize> = refset
+            .entries
+            .iter()
+            .enumerate()
+            .filter(|(_, e)| e.power_profiled)
+            .map(|(i, _)| i)
+            .collect();
+        anyhow::ensure!(
+            pidx.len() >= 2,
+            "class registry needs at least 2 power-profiled entries, got {}",
+            pidx.len()
+        );
+        let sample: Vec<usize> = pidx.iter().copied().take(BUILD_CLUSTER_CAP).collect();
+        let (sweep, labels) = silhouette_sweep(refset, &sample, chosen_bin)?;
+        let k = labels.iter().max().map(|m| m + 1).unwrap_or(1);
+        let mut members: Vec<Vec<usize>> = vec![Vec::new(); k];
+        for (li, &l) in labels.iter().enumerate() {
+            members[l].push(sample[li]);
+        }
+        if pidx.len() > sample.len() {
+            // out-of-sample entries join the nearest provisional centroid
+            // (centroid norms computed once, outside the assignment loop)
+            let centroids: Vec<(Vec<f64>, f64)> = members
+                .iter()
+                .map(|m| {
+                    let cv = unit_centroid(refset, m, chosen_bin);
+                    let cn = l2_norm(&cv);
+                    (cv, cn)
+                })
+                .collect();
+            for &ei in &pidx[sample.len()..] {
+                let v = refset.entries[ei]
+                    .vector_for(chosen_bin)
+                    .expect("bin checked above");
+                let best = centroids
+                    .iter()
+                    .enumerate()
+                    .map(|(ci, (cv, cn))| (ci, cos_to_unit(v, cv, *cn)))
+                    .min_by(|a, b| a.1.total_cmp(&b.1).then(a.0.cmp(&b.0)))
+                    .map(|(ci, _)| ci)
+                    .expect("k >= 1");
+                members[best].push(ei);
+            }
+            for m in members.iter_mut() {
+                m.sort_unstable();
+            }
+        }
+        let classes = derive_classes(refset, &members, chosen_bin)?;
+        let index = VectorIndex::build(refset, &members, &[])?;
+        Ok(ClassRegistry {
+            chosen_bin,
+            bin_sizes: refset.bin_sizes.clone(),
+            classes,
+            sweep,
+            version: 0,
+            registry_fingerprint: refset.registry_fingerprint,
+            refset_digest: refset_digest(refset),
+            absorbed: Vec::new(),
+            index,
+        })
+    }
+
+    /// True when this registry was built over exactly this reference set.
+    pub fn matches(&self, refset: &ReferenceSet) -> bool {
+        self.refset_digest == refset_digest(refset)
+    }
+
+    pub fn len(&self) -> usize {
+        self.classes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.classes.is_empty()
+    }
+
+    /// Class of a reference entry or absorbed target, by name.
+    pub fn class_of(&self, name: &str) -> Option<usize> {
+        self.classes
+            .iter()
+            .find(|c| c.member_names.iter().any(|n| n == name))
+            .map(|c| c.id)
+            .or_else(|| self.absorbed.iter().find(|a| a.name == name).map(|a| a.class_id))
+    }
+
+    /// Class radius (cosine distance) at the chosen bin.
+    pub fn class_radius(&self, class: usize) -> f64 {
+        self.index.radius_dist(self.chosen_bin, class)
+    }
+
+    /// Best silhouette score of the sweep (None when the sweep was not
+    /// recorded, e.g. a legacy snapshot).
+    pub fn best_silhouette(&self) -> Option<f64> {
+        self.sweep
+            .iter()
+            .map(|&(_, score)| score)
+            .fold(None, |acc: Option<f64>, x| Some(acc.map_or(x, |a| a.max(x))))
+    }
+
+    /// Class-first nearest power neighbor — exact, centroid-pruned.
+    pub fn nearest<'a>(
+        &self,
+        refset: &'a ReferenceSet,
+        target: &TargetProfile,
+        c: f64,
+    ) -> Option<(&'a ReferenceEntry, f64)> {
+        self.top2(refset, target, c).map(|h| h.best)
+    }
+
+    /// Class-first top-2 (neighbor + runner-up + class diagnostics).
+    pub fn top2<'a>(
+        &self,
+        refset: &'a ReferenceSet,
+        target: &TargetProfile,
+        c: f64,
+    ) -> Option<IndexHit<'a>> {
+        let tv = target.vector_for(c)?;
+        self.index.top2(refset, tv, Some(&target.app), c)
+    }
+
+    /// Absorb a newly classified target: join the nearest class, or
+    /// spawn a new one when the margin/radius gate says it belongs to no
+    /// existing class.  Bumps the snapshot version and reindexes.
+    pub fn absorb(
+        &mut self,
+        refset: &ReferenceSet,
+        target: &TargetProfile,
+    ) -> anyhow::Result<AbsorbOutcome> {
+        anyhow::ensure!(
+            self.matches(refset),
+            "class registry does not match this reference set (digest {:016x})",
+            self.refset_digest
+        );
+        for &c in &self.bin_sizes {
+            anyhow::ensure!(
+                target.vector_for(c).is_some(),
+                "target '{}' lacks a spike vector at bin size {c}",
+                target.name
+            );
+        }
+        let tv = target
+            .vector_for(self.chosen_bin)
+            .expect("checked just above");
+        let ranked = self.index.centroid_rank(tv, self.chosen_bin);
+        anyhow::ensure!(!ranked.is_empty(), "class registry has no classes");
+        let (c1, d1) = ranked[0];
+        let margin = match ranked.get(1) {
+            Some(&(_, d2)) if d2 > 0.0 => ((d2 - d1) / d2).clamp(0.0, 1.0),
+            Some(_) => 0.0,
+            None => 1.0,
+        };
+        let radius = self.index.radius_dist(self.chosen_bin, c1);
+        let spawned = d1 > (radius * ABSORB_RADIUS_SLACK).max(ABSORB_MIN_SPAWN_DIST)
+            || (margin < ABSORB_MARGIN_FLOOR && d1 > radius + 1e-9);
+        let class_id = if spawned {
+            let id = self.classes.len();
+            self.classes.push(MinosClass {
+                id,
+                members: Vec::new(),
+                member_names: Vec::new(),
+                representative: None,
+                scaling: None,
+            });
+            id
+        } else {
+            c1
+        };
+        self.absorbed.push(AbsorbedEntry {
+            name: target.name.clone(),
+            app: target.app.clone(),
+            class_id,
+            vectors: target.vectors.clone(),
+            util: target.util,
+        });
+        self.version += 1;
+        self.reindex(refset)?;
+        Ok(AbsorbOutcome {
+            class_id,
+            spawned,
+            distance: d1,
+            margin,
+            version: self.version,
+        })
+    }
+
+    fn reindex(&mut self, refset: &ReferenceSet) -> anyhow::Result<()> {
+        let members: Vec<Vec<usize>> = self.classes.iter().map(|c| c.members.clone()).collect();
+        self.index = VectorIndex::build(refset, &members, &self.absorbed)?;
+        Ok(())
+    }
+
+    /// FNV-1a snapshot digest over version + class membership + absorbed
+    /// assignments — stable across identical builds, sensitive to any
+    /// membership change (the CI smoke invariant).
+    pub fn digest(&self) -> u64 {
+        let mut h = Fnv1a::new();
+        h.eat(&self.version.to_le_bytes());
+        h.eat(&(self.classes.len() as u64).to_le_bytes());
+        for c in &self.classes {
+            h.eat(&(c.id as u64).to_le_bytes());
+            for n in &c.member_names {
+                h.eat(n.as_bytes());
+                h.eat(&[b'|']);
+            }
+            if let Some(r) = &c.representative {
+                h.eat(r.as_bytes());
+            }
+            h.eat(&[b'\n']);
+        }
+        for a in &self.absorbed {
+            h.eat(a.name.as_bytes());
+            h.eat(&[b'@']);
+            h.eat(&(a.class_id as u64).to_le_bytes());
+        }
+        h.finish()
+    }
+
+    // ---- persistence (membership + absorbed; index is derived) ----
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("chosen_bin", num(self.chosen_bin)),
+            ("bin_sizes", nums(&self.bin_sizes)),
+            ("version", num(self.version as f64)),
+            (
+                "registry_fingerprint",
+                s(&format!("{:016x}", self.registry_fingerprint)),
+            ),
+            ("refset_digest", s(&format!("{:016x}", self.refset_digest))),
+            (
+                "classes",
+                arr(self
+                    .classes
+                    .iter()
+                    .map(|c| {
+                        obj(vec![(
+                            "members",
+                            arr(c.member_names.iter().map(|n| s(n)).collect()),
+                        )])
+                    })
+                    .collect()),
+            ),
+            (
+                "absorbed",
+                arr(self
+                    .absorbed
+                    .iter()
+                    .map(|a| {
+                        obj(vec![
+                            ("name", s(&a.name)),
+                            ("app", s(&a.app)),
+                            ("class", num(a.class_id as f64)),
+                            ("sm", num(a.util.sm)),
+                            ("dram", num(a.util.dram)),
+                            (
+                                "vectors",
+                                arr(a
+                                    .vectors
+                                    .iter()
+                                    .map(|v| {
+                                        obj(vec![
+                                            ("v", nums(&v.v)),
+                                            ("total", num(v.total)),
+                                            ("bin_width", num(v.bin_width)),
+                                        ])
+                                    })
+                                    .collect()),
+                            ),
+                        ])
+                    })
+                    .collect()),
+            ),
+        ])
+    }
+
+    pub fn save(&self, path: &str) -> anyhow::Result<()> {
+        std::fs::write(path, self.to_json().dump())?;
+        Ok(())
+    }
+
+    /// Load a snapshot and rebuild the derived state against `refset`.
+    /// Hard-errors when the snapshot was built over a different
+    /// reference set — the same stale-cache contract as
+    /// [`ReferenceSet::load`].
+    pub fn load(path: &str, refset: &ReferenceSet) -> anyhow::Result<ClassRegistry> {
+        let j = Json::parse(&std::fs::read_to_string(path)?)?;
+        let snapshot_digest = u64::from_str_radix(&j.s("refset_digest")?, 16)?;
+        anyhow::ensure!(
+            snapshot_digest == refset_digest(refset),
+            "class-registry snapshot '{path}' was built for a different reference set \
+             ({snapshot_digest:016x} vs {:016x}) — rebuild it with `minos registry build`",
+            refset_digest(refset)
+        );
+        let chosen_bin = j.f("chosen_bin")?;
+        let bin_sizes = j.f64s("bin_sizes")?;
+        anyhow::ensure!(
+            bin_sizes == refset.bin_sizes,
+            "class-registry snapshot bin sizes disagree with the reference set"
+        );
+        let mut members_by_class: Vec<Vec<usize>> = Vec::new();
+        for cj in j.arr("classes")? {
+            let names: Vec<String> = cj
+                .arr("members")?
+                .iter()
+                .map(|n| {
+                    n.as_str()
+                        .map(|x| x.to_string())
+                        .ok_or_else(|| anyhow::anyhow!("class member must be a string"))
+                })
+                .collect::<anyhow::Result<_>>()?;
+            let idxs = names
+                .iter()
+                .map(|n| {
+                    refset
+                        .entries
+                        .iter()
+                        .position(|e| e.name == *n)
+                        .ok_or_else(|| {
+                            anyhow::anyhow!("class member '{n}' missing from the reference set")
+                        })
+                })
+                .collect::<anyhow::Result<Vec<_>>>()?;
+            members_by_class.push(idxs);
+        }
+        let absorbed = j
+            .arr("absorbed")?
+            .iter()
+            .map(|aj| -> anyhow::Result<AbsorbedEntry> {
+                Ok(AbsorbedEntry {
+                    name: aj.s("name")?,
+                    app: aj.s("app")?,
+                    class_id: aj.u("class")?,
+                    util: UtilPoint::new(aj.f("sm")?, aj.f("dram")?),
+                    vectors: aj
+                        .arr("vectors")?
+                        .iter()
+                        .map(|v| {
+                            Ok(SpikeVector::new(
+                                v.f64s("v")?,
+                                v.f("total")?,
+                                v.f("bin_width")?,
+                            ))
+                        })
+                        .collect::<anyhow::Result<_>>()?,
+                })
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        for a in &absorbed {
+            anyhow::ensure!(
+                a.class_id < members_by_class.len(),
+                "absorbed entry '{}' names unknown class {}",
+                a.name,
+                a.class_id
+            );
+        }
+        let classes = derive_classes(refset, &members_by_class, chosen_bin)?;
+        let index = VectorIndex::build(refset, &members_by_class, &absorbed)?;
+        // The silhouette sweep is derived state — recompute it for
+        // stats over the same capped prefix sample `build` clustered
+        // (the dendrogram is O(n³); membership itself is taken as-is).
+        let pidx = sorted(members_by_class.iter().flatten().copied().collect());
+        let sample: Vec<usize> = pidx.iter().copied().take(BUILD_CLUSTER_CAP).collect();
+        let sweep = if sample.len() >= 2 {
+            silhouette_sweep(refset, &sample, chosen_bin)?.0
+        } else {
+            Vec::new()
+        };
+        Ok(ClassRegistry {
+            chosen_bin,
+            bin_sizes,
+            classes,
+            sweep,
+            version: j.f("version")? as u64,
+            registry_fingerprint: u64::from_str_radix(&j.s("registry_fingerprint")?, 16)?,
+            refset_digest: snapshot_digest,
+            absorbed,
+            index,
+        })
+    }
+}
+
+fn sorted(mut v: Vec<usize>) -> Vec<usize> {
+    v.sort_unstable();
+    v
+}
+
+/// Unit cosine centroid of a member set at one bin size (zeros when the
+/// class has no spiking members).
+fn unit_centroid(refset: &ReferenceSet, members: &[usize], chosen_bin: f64) -> Vec<f64> {
+    let mut acc = vec![0.0; crate::features::NBINS];
+    for &mi in members {
+        if let Some(sv) = refset.entries[mi].vector_for(chosen_bin) {
+            if sv.norm > 1e-12 {
+                for (a, &x) in acc.iter_mut().zip(&sv.v) {
+                    *a += x / sv.norm;
+                }
+            }
+        }
+    }
+    let n = l2_norm(&acc);
+    if n > 1e-12 {
+        for a in acc.iter_mut() {
+            *a /= n;
+        }
+    }
+    acc
+}
+
+/// Cosine distance to an already-normalized centroid whose norm was
+/// computed once by the caller (1.0, or 0.0 for a spike-free class).
+fn cos_to_unit(v: &SpikeVector, unit: &[f64], unit_norm: f64) -> f64 {
+    let dot: f64 = v.v.iter().zip(unit).map(|(x, y)| x * y).sum();
+    1.0 - dot / (v.norm.max(1e-12) * unit_norm.max(1e-12))
+}
+
+/// The K-selection sweep: Ward dendrogram over cosine distances, cut at
+/// every k in the bounds, scored by silhouette over the unit-normalized
+/// vectors (chord space).  Returns the (k, score) table and the winning
+/// cut's labels.
+fn silhouette_sweep(
+    refset: &ReferenceSet,
+    pidx: &[usize],
+    chosen_bin: f64,
+) -> anyhow::Result<(Vec<(usize, f64)>, Vec<usize>)> {
+    let rows: Vec<Vec<f64>> = pidx
+        .iter()
+        .map(|&i| {
+            refset.entries[i]
+                .vector_for(chosen_bin)
+                .map(|v| v.v.clone())
+                .ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "entry '{}' has no spike vector at bin size {chosen_bin}",
+                        refset.entries[i].name
+                    )
+                })
+        })
+        .collect::<anyhow::Result<_>>()?;
+    let dist = pairwise(Metric::Cosine, &rows);
+    let dg = Dendrogram::build(&dist, Linkage::Ward);
+    let unit: Vec<Vec<f64>> = rows
+        .iter()
+        .map(|v| {
+            let n = l2_norm(v);
+            if n > 1e-12 {
+                v.iter().map(|x| x / n).collect()
+            } else {
+                v.clone()
+            }
+        })
+        .collect();
+    let k_max = CLASS_K_MAX.min(pidx.len().saturating_sub(1)).max(CLASS_K_MIN);
+    let mut sweep = Vec::new();
+    let mut best: Option<(f64, Vec<usize>)> = None;
+    for k in CLASS_K_MIN..=k_max {
+        let labels = dg.cut_k(k);
+        let score = silhouette_score(&unit, &labels);
+        sweep.push((k, score));
+        if best.as_ref().map(|(b, _)| score > *b).unwrap_or(true) {
+            best = Some((score, labels));
+        }
+    }
+    let (_, labels) = best.expect("silhouette sweep cannot be empty");
+    Ok((sweep, labels))
+}
+
+fn derive_classes(
+    refset: &ReferenceSet,
+    members: &[Vec<usize>],
+    chosen_bin: f64,
+) -> anyhow::Result<Vec<MinosClass>> {
+    let mut out = Vec::with_capacity(members.len());
+    for (id, m) in members.iter().enumerate() {
+        out.push(MinosClass {
+            id,
+            members: m.clone(),
+            member_names: m.iter().map(|&i| refset.entries[i].name.clone()).collect(),
+            representative: medoid(refset, m, chosen_bin),
+            scaling: merged_scaling(refset, m)?,
+        });
+    }
+    Ok(out)
+}
+
+/// Medoid: member minimizing total cosine distance to the rest of the
+/// class at the chosen bin (ties: first member).
+fn medoid(refset: &ReferenceSet, members: &[usize], chosen_bin: f64) -> Option<String> {
+    if members.is_empty() {
+        return None;
+    }
+    let vecs: Vec<&SpikeVector> = members
+        .iter()
+        .filter_map(|&i| refset.entries[i].vector_for(chosen_bin))
+        .collect();
+    if vecs.len() != members.len() {
+        return None; // missing bin — build/load already errored elsewhere
+    }
+    let mut best = (0usize, f64::INFINITY);
+    for (a, va) in vecs.iter().enumerate() {
+        let total: f64 = vecs.iter().map(|vb| va.cosine_to(vb)).sum();
+        if total < best.1 {
+            best = (a, total);
+        }
+    }
+    Some(refset.entries[members[best.0]].name.clone())
+}
+
+/// Per-frequency mean of the members' scaling sweeps.  All members of a
+/// reference set share one sweep grid by construction; disagreement is a
+/// hard error, not silent skew.
+fn merged_scaling(refset: &ReferenceSet, members: &[usize]) -> anyhow::Result<Option<ScalingData>> {
+    let Some(&first) = members.first() else {
+        return Ok(None);
+    };
+    let base = &refset.entries[first].scaling;
+    let nf = base.points.len();
+    let mut acc = base.points.clone();
+    for p in acc.iter_mut() {
+        p.p50_rel = 0.0;
+        p.p90_rel = 0.0;
+        p.p95_rel = 0.0;
+        p.p99_rel = 0.0;
+        p.peak_rel = 0.0;
+        p.mean_w = 0.0;
+        p.iter_time_ms = 0.0;
+        p.frac_above_tdp = 0.0;
+        p.profiling_cost_s = 0.0;
+    }
+    let n = members.len() as f64;
+    for &mi in members {
+        let sd = &refset.entries[mi].scaling;
+        anyhow::ensure!(
+            sd.points.len() == nf,
+            "class members disagree on sweep length ({} vs {nf})",
+            sd.points.len()
+        );
+        for (a, p) in acc.iter_mut().zip(&sd.points) {
+            anyhow::ensure!(
+                (a.f_mhz - p.f_mhz).abs() < 0.5,
+                "class members disagree on the frequency grid at {} vs {} MHz",
+                a.f_mhz,
+                p.f_mhz
+            );
+            a.p50_rel += p.p50_rel / n;
+            a.p90_rel += p.p90_rel / n;
+            a.p95_rel += p.p95_rel / n;
+            a.p99_rel += p.p99_rel / n;
+            a.peak_rel += p.peak_rel / n;
+            a.mean_w += p.mean_w / n;
+            a.iter_time_ms += p.iter_time_ms / n;
+            a.frac_above_tdp += p.frac_above_tdp / n;
+            a.profiling_cost_s += p.profiling_cost_s / n;
+        }
+    }
+    Ok(Some(ScalingData::new(acc)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GpuSpec;
+    use crate::features::NBINS;
+    use crate::minos::reference_set::FreqPoint;
+
+    fn freq_points() -> Vec<FreqPoint> {
+        (0..9)
+            .map(|i| FreqPoint {
+                f_mhz: 1300.0 + 100.0 * i as f64,
+                p50_rel: 0.7,
+                p90_rel: 0.9 + 0.02 * i as f64,
+                p95_rel: 1.0 + 0.02 * i as f64,
+                p99_rel: 1.1 + 0.02 * i as f64,
+                peak_rel: 1.2 + 0.02 * i as f64,
+                mean_w: 600.0,
+                iter_time_ms: 4.0 - 0.3 * i as f64,
+                frac_above_tdp: 0.1,
+                profiling_cost_s: 1.0,
+            })
+            .collect()
+    }
+
+    fn synth_entry(name: &str, app: &str, proto: usize, jitter: f64, bins: &[f64]) -> ReferenceEntry {
+        let mut v = vec![0.0; NBINS];
+        v[4 * proto] = 0.6 - jitter;
+        v[4 * proto + 1] = 0.4 + jitter;
+        ReferenceEntry {
+            name: name.into(),
+            app: app.into(),
+            vectors: bins.iter().map(|&c| SpikeVector::new(v.clone(), 100.0, c)).collect(),
+            util: UtilPoint::new(50.0, 20.0),
+            mean_power_w: 600.0,
+            scaling: ScalingData::new(freq_points()),
+            power_profiled: true,
+        }
+    }
+
+    fn synth_refset(n: usize, protos: usize) -> ReferenceSet {
+        let bins = vec![0.1];
+        let entries = (0..n)
+            .map(|i| {
+                synth_entry(
+                    &format!("w{i}"),
+                    &format!("app{i}"),
+                    i % protos,
+                    (i / protos) as f64 * 0.002,
+                    &bins,
+                )
+            })
+            .collect();
+        ReferenceSet {
+            spec: GpuSpec::mi300x(),
+            bin_sizes: bins,
+            entries,
+            registry_fingerprint: ReferenceSet::current_fingerprint(),
+        }
+    }
+
+    fn params() -> MinosParams {
+        MinosParams {
+            bin_sizes: vec![0.1],
+            default_bin_size: 0.1,
+            ..MinosParams::default()
+        }
+    }
+
+    #[test]
+    fn build_recovers_the_prototype_partition() {
+        let rs = synth_refset(24, 3);
+        let reg = ClassRegistry::build(&rs, &params()).unwrap();
+        assert_eq!(reg.len(), 3, "sweep: {:?}", reg.sweep);
+        assert!(reg.len() >= CLASS_K_MIN && reg.len() <= CLASS_K_MAX);
+        // every stride-3 cohort lands in one class
+        for proto in 0..3 {
+            let class = reg.class_of(&format!("w{proto}")).unwrap();
+            for i in (proto..24).step_by(3) {
+                assert_eq!(reg.class_of(&format!("w{i}")), Some(class), "w{i}");
+            }
+        }
+        // derived artifacts exist per class
+        for c in &reg.classes {
+            assert!(!c.members.is_empty());
+            assert!(c.representative.is_some());
+            let sc = c.scaling.as_ref().unwrap();
+            assert_eq!(sc.points.len(), 9);
+            // merged p90 equals the member mean at the uncapped point
+            let expect: f64 = c
+                .members
+                .iter()
+                .map(|&i| rs.entries[i].scaling.uncapped().p90_rel)
+                .sum::<f64>()
+                / c.members.len() as f64;
+            assert!((sc.uncapped().p90_rel - expect).abs() < 1e-12);
+        }
+        assert!(reg.matches(&rs));
+        assert_eq!(reg.version, 0);
+    }
+
+    #[test]
+    fn build_is_deterministic() {
+        let rs = synth_refset(18, 3);
+        let a = ClassRegistry::build(&rs, &params()).unwrap();
+        let b = ClassRegistry::build(&rs, &params()).unwrap();
+        assert_eq!(a.digest(), b.digest());
+        assert_eq!(a.sweep, b.sweep);
+        assert_eq!(a.len(), b.len());
+    }
+
+    #[test]
+    fn class_first_nearest_matches_flat_scan_on_every_member() {
+        let rs = synth_refset(24, 3);
+        let reg = ClassRegistry::build(&rs, &params()).unwrap();
+        for e in &rs.entries {
+            let target = TargetProfile::from_entry(e);
+            let (nn, d) = reg.nearest(&rs, &target, 0.1).unwrap();
+            // flat oracle: first-wins strict < over refset order
+            let tv = target.vector_for(0.1).unwrap();
+            let mut flat: Option<(&ReferenceEntry, f64)> = None;
+            for cand in rs.power_entries(Some(&target.app)) {
+                let dd = tv.cosine_to(cand.vector_for(0.1).unwrap());
+                if flat.map(|(_, bd)| dd < bd).unwrap_or(true) {
+                    flat = Some((cand, dd));
+                }
+            }
+            let (fe, fd) = flat.unwrap();
+            assert_eq!(nn.name, fe.name, "target {}", e.name);
+            assert_eq!(d.to_bits(), fd.to_bits(), "target {}", e.name);
+        }
+    }
+
+    #[test]
+    fn absorb_near_joins_and_far_spawns() {
+        let rs = synth_refset(12, 3);
+        let mut reg = ClassRegistry::build(&rs, &params()).unwrap();
+        let k0 = reg.len();
+        let d0 = reg.digest();
+
+        // near prototype 1 → joins its class without spawning
+        let near = TargetProfile::from_entry(&synth_entry("near", "napp", 1, 0.005, &[0.1]));
+        let o = reg.absorb(&rs, &near).unwrap();
+        assert!(!o.spawned, "distance {} margin {}", o.distance, o.margin);
+        assert_eq!(o.class_id, reg.class_of("w1").unwrap());
+        assert_eq!(o.version, 1);
+        assert_eq!(reg.len(), k0);
+        assert_eq!(reg.class_of("near"), Some(o.class_id));
+        assert_ne!(reg.digest(), d0, "absorb must change the snapshot digest");
+
+        // mass in a far-away bin → new class
+        let mut v = vec![0.0; NBINS];
+        v[40] = 0.7;
+        v[41] = 0.3;
+        let mut far_entry = synth_entry("far", "fapp", 0, 0.0, &[0.1]);
+        far_entry.vectors = vec![SpikeVector::new(v, 100.0, 0.1)];
+        let far = TargetProfile::from_entry(&far_entry);
+        let o2 = reg.absorb(&rs, &far).unwrap();
+        assert!(o2.spawned, "distance {} margin {}", o2.distance, o2.margin);
+        assert_eq!(o2.class_id, k0);
+        assert_eq!(reg.len(), k0 + 1);
+        assert_eq!(o2.version, 2);
+        // the spawned class has no reference members, so it can never be
+        // served as a neighbor — nearest still returns a refset entry
+        let (nn, _) = reg.nearest(&rs, &far, 0.1).unwrap();
+        assert!(rs.by_name(&nn.name).is_some());
+    }
+
+    #[test]
+    fn snapshot_roundtrip_and_stale_rejection() {
+        let rs = synth_refset(12, 3);
+        let mut reg = ClassRegistry::build(&rs, &params()).unwrap();
+        let near = TargetProfile::from_entry(&synth_entry("abs0", "aapp", 2, 0.003, &[0.1]));
+        reg.absorb(&rs, &near).unwrap();
+        let path = std::env::temp_dir().join("minos_class_registry_test.json");
+        let path = path.to_str().unwrap();
+        reg.save(path).unwrap();
+        let back = ClassRegistry::load(path, &rs).unwrap();
+        assert_eq!(back.digest(), reg.digest());
+        assert_eq!(back.version, reg.version);
+        assert_eq!(back.len(), reg.len());
+        assert_eq!(back.class_of("abs0"), reg.class_of("abs0"));
+        // and the reloaded index still answers exactly
+        let t = TargetProfile::from_entry(&rs.entries[4]);
+        let a = reg.nearest(&rs, &t, 0.1).unwrap();
+        let b = back.nearest(&rs, &t, 0.1).unwrap();
+        assert_eq!(a.0.name, b.0.name);
+        assert_eq!(a.1.to_bits(), b.1.to_bits());
+        // a different reference set must be rejected
+        let cut = rs.without_app("app0");
+        let err = ClassRegistry::load(path, &cut).unwrap_err();
+        assert!(err.to_string().contains("different reference set"), "{err}");
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn oversized_refsets_build_via_sample_plus_assignment() {
+        let rs = synth_refset(BUILD_CLUSTER_CAP * 2 + 10, 3);
+        let reg = ClassRegistry::build(&rs, &params()).unwrap();
+        assert_eq!(reg.len(), 3, "sweep: {:?}", reg.sweep);
+        // out-of-sample entries land with their prototype cohort
+        for proto in 0..3 {
+            let class = reg.class_of(&format!("w{proto}")).unwrap();
+            for i in (proto..rs.entries.len()).step_by(3) {
+                assert_eq!(reg.class_of(&format!("w{i}")), Some(class), "w{i}");
+            }
+        }
+        // membership covers every power entry exactly once
+        let total: usize = reg.classes.iter().map(|c| c.members.len()).sum();
+        assert_eq!(total, rs.entries.len());
+        // and the oversized index still answers exactly
+        let t = TargetProfile::from_entry(&rs.entries[7]);
+        let (nn, d) = reg.nearest(&rs, &t, 0.1).unwrap();
+        let tv = t.vector_for(0.1).unwrap();
+        let mut flat: Option<(&str, f64)> = None;
+        for cand in rs.power_entries(Some(&t.app)) {
+            let dd = tv.cosine_to(cand.vector_for(0.1).unwrap());
+            if flat.map(|(_, bd)| dd < bd).unwrap_or(true) {
+                flat = Some((&cand.name, dd));
+            }
+        }
+        let (fname, fd) = flat.unwrap();
+        assert_eq!(nn.name, fname);
+        assert_eq!(d.to_bits(), fd.to_bits());
+    }
+
+    #[test]
+    fn build_rejects_degenerate_refsets() {
+        let rs = synth_refset(1, 1);
+        let err = ClassRegistry::build(&rs, &params()).unwrap_err();
+        assert!(err.to_string().contains("at least 2"), "{err}");
+        // bin mismatch is also a hard error
+        let rs2 = synth_refset(6, 2);
+        let mut p = params();
+        p.default_bin_size = 0.25;
+        let err2 = ClassRegistry::build(&rs2, &p).unwrap_err();
+        assert!(err2.to_string().contains("no spike vectors"), "{err2}");
+    }
+}

@@ -210,11 +210,11 @@ impl MinosRuntime {
                     .into_iter()
                     .map(|(sums, total)| {
                         let denom = total.max(1.0);
-                        SpikeVector {
-                            v: sums.into_iter().map(|s| s / denom).collect(),
+                        SpikeVector::new(
+                            sums.into_iter().map(|s| s / denom).collect(),
                             total,
                             bin_width,
-                        }
+                        )
                     })
                     .collect())
             }

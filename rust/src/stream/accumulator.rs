@@ -222,10 +222,8 @@ impl TraceAccumulator {
         self.bin_sizes
             .iter()
             .zip(&self.counts)
-            .map(|(&c, counts)| SpikeVector {
-                v: counts.iter().map(|x| x / denom).collect(),
-                total: self.spike_total,
-                bin_width: c,
+            .map(|(&c, counts)| {
+                SpikeVector::new(counts.iter().map(|x| x / denom).collect(), self.spike_total, c)
             })
             .collect()
     }

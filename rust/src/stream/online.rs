@@ -60,6 +60,11 @@ impl OnlineConfig {
 #[derive(Debug, Clone)]
 pub struct OnlineDecision {
     pub plan: FreqPlan,
+    /// Minos class of the winning power neighbor — Some when the
+    /// classifier searched class-first through a
+    /// [`crate::registry::ClassRegistry`]
+    /// ([`OnlineClassifier::with_registry`]).
+    pub class_id: Option<usize>,
     /// Minimum neighbor margin (`Classification::margin`) observed over
     /// the stability streak — a conservative confidence in [0, 1].
     pub confidence: f64,
@@ -159,6 +164,16 @@ impl<'a> OnlineClassifier<'a> {
         self
     }
 
+    /// Search class-first: every window evaluation pre-filters against
+    /// the registry's class centroids and only refines inside the
+    /// winning classes, instead of flat-scanning the whole reference
+    /// set per window.  Decisions are identical (the class-first search
+    /// is exact); only the per-window cost changes.
+    pub fn with_registry(mut self, registry: &'a crate::registry::ClassRegistry) -> Self {
+        self.sel = self.sel.with_registry(registry);
+        self
+    }
+
     /// Override the TDP the stream's features are normalized by
     /// (defaults to the reference set's GPU; external telemetry from a
     /// different device passes its own).  Set before feeding samples.
@@ -237,6 +252,7 @@ impl<'a> OnlineClassifier<'a> {
             let cls = self.last.as_ref().unwrap();
             self.decision = Some(OnlineDecision {
                 plan: cls.plan.clone(),
+                class_id: cls.class_id,
                 confidence: self.streak_min_margin,
                 windows: self.windows,
                 samples_used: self.acc.samples_offered(),
@@ -283,6 +299,7 @@ impl<'a> OnlineClassifier<'a> {
             };
         self.decision = Some(OnlineDecision {
             plan: cls.plan.clone(),
+            class_id: cls.class_id,
             confidence,
             windows: self.windows,
             samples_used: self.acc.samples_offered(),
@@ -408,6 +425,35 @@ mod tests {
         }
         assert!(oc.finalize().is_none());
         assert!(oc.decision().is_none());
+    }
+
+    #[test]
+    fn class_first_stream_decision_matches_flat() {
+        let rs = small_refset();
+        let params = MinosParams::default();
+        let reg = crate::registry::ClassRegistry::build(&rs, &params).unwrap();
+        let p = faiss_profile();
+        let cfg = OnlineConfig::new(p.trace.len() / 16, 3, Objective::PowerCentric);
+        let util = UtilPoint::new(p.app_sm_util, p.app_dram_util);
+        let flat = OnlineClassifier::new(&rs, &params, cfg, "t", "faiss", util)
+            .with_sample_dt(p.trace.sample_dt_ms)
+            .run_trace(&p.trace)
+            .unwrap();
+        let fast = OnlineClassifier::new(&rs, &params, cfg, "t", "faiss", util)
+            .with_sample_dt(p.trace.sample_dt_ms)
+            .with_registry(&reg)
+            .run_trace(&p.trace)
+            .unwrap();
+        // identical decision, identical digest — the class-first search
+        // is exact, it only changes how the neighbor is found
+        assert_eq!(flat.plan.pwr_neighbor, fast.plan.pwr_neighbor);
+        assert_eq!(flat.plan.f_cap_mhz, fast.plan.f_cap_mhz);
+        assert_eq!(flat.windows, fast.windows);
+        assert_eq!(flat.samples_used, fast.samples_used);
+        assert_eq!(flat.digest(), fast.digest());
+        assert!(flat.class_id.is_none());
+        assert_eq!(fast.class_id, reg.class_of(&fast.plan.pwr_neighbor));
+        assert!(fast.class_id.is_some());
     }
 
     #[test]

@@ -1,0 +1,67 @@
+//! FNV-1a 64-bit hashing — the one digest algorithm every fingerprint in
+//! the crate uses (outcome tables, stream decisions, workload registry,
+//! class-registry snapshots).  Centralized so a constant typo in one
+//! hand-rolled copy can't silently produce incompatible digests.
+
+pub const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+pub const FNV_PRIME: u64 = 0x100000001b3;
+
+/// Incremental FNV-1a state.
+#[derive(Debug, Clone, Copy)]
+pub struct Fnv1a(pub u64);
+
+impl Default for Fnv1a {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Fnv1a {
+    pub fn new() -> Self {
+        Fnv1a(FNV_OFFSET)
+    }
+
+    pub fn eat(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(FNV_PRIME);
+        }
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+/// One-shot convenience.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = Fnv1a::new();
+    h.eat(bytes);
+    h.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_the_hand_rolled_fold() {
+        // the exact fold previously copy-pasted at every digest site
+        let reference = |text: &str| -> u64 {
+            let mut h: u64 = 0xcbf29ce484222325;
+            for b in text.bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x100000001b3);
+            }
+            h
+        };
+        for text in ["", "a", "minos", "class:3|w0|w1\n"] {
+            assert_eq!(fnv1a(text.as_bytes()), reference(text), "{text:?}");
+        }
+        // incremental chunks hash identically to one shot
+        let mut h = Fnv1a::new();
+        h.eat(b"min");
+        h.eat(b"os");
+        assert_eq!(h.finish(), fnv1a(b"minos"));
+    }
+}

@@ -1,6 +1,8 @@
 //! Small in-tree utilities that replace unavailable third-party crates
-//! in this fully-vendored build: a JSON parser/emitter (`json`) and a
-//! property-testing helper (`propcheck`).
+//! in this fully-vendored build: a JSON parser/emitter (`json`), a
+//! property-testing helper (`propcheck`), and the shared FNV-1a digest
+//! (`fnv`).
 
+pub mod fnv;
 pub mod json;
 pub mod propcheck;

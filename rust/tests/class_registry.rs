@@ -1,0 +1,185 @@
+//! Class-registry acceptance suite (the PR's acceptance criterion):
+//!
+//! * class-first classification agrees with the flat-scan oracle for
+//!   **every** power-profiled workload in the seed registry — same
+//!   selected cap, same top-1 power neighbor, same neighbor class;
+//! * the registry build is deterministic (stable inspect digest) and
+//!   lands inside the silhouette-sweep bounds;
+//! * absorbing case-study targets is version-gated and never perturbs
+//!   the exactness of the neighbor search;
+//! * snapshots round-trip through JSON against the same reference set
+//!   and are rejected against a different one.
+
+use minos::config::{GpuSpec, MinosParams, SimParams};
+use minos::minos::algorithm::{Objective, SelectOptimalFreq, TargetProfile};
+use minos::minos::reference_set::ReferenceSet;
+use minos::registry::{ClassRegistry, CLASS_K_MAX, CLASS_K_MIN};
+use minos::workloads;
+use std::sync::OnceLock;
+
+/// One shared reference set over every power-profiled seed workload —
+/// the "seed registry" of the acceptance criterion.  Built once per test
+/// binary (the cap sweeps dominate debug-build test time).
+fn refset() -> &'static ReferenceSet {
+    static RS: OnceLock<ReferenceSet> = OnceLock::new();
+    RS.get_or_init(|| {
+        let reg = workloads::registry();
+        let picks: Vec<&workloads::Workload> = reg.power_reference();
+        ReferenceSet::build(
+            &GpuSpec::mi300x(),
+            &SimParams::default(),
+            &MinosParams::default(),
+            &picks,
+        )
+    })
+}
+
+fn registry() -> &'static ClassRegistry {
+    static REG: OnceLock<ClassRegistry> = OnceLock::new();
+    REG.get_or_init(|| ClassRegistry::build(refset(), &MinosParams::default()).unwrap())
+}
+
+#[test]
+fn class_first_agrees_with_flat_oracle_on_every_seed_workload() {
+    let rs = refset();
+    let reg = registry();
+    let params = MinosParams::default();
+    let flat = SelectOptimalFreq::new(rs, &params);
+    let fast = SelectOptimalFreq::new(rs, &params).with_registry(reg);
+    assert!(rs.entries.len() >= 12, "seed registry unexpectedly small");
+    for e in &rs.entries {
+        let target = TargetProfile::from_entry(e);
+        for objective in [Objective::PowerCentric, Objective::PerfCentric] {
+            let a = flat
+                .classify(&target, objective)
+                .unwrap_or_else(|| panic!("{}: flat classification failed", e.name));
+            let b = fast
+                .classify(&target, objective)
+                .unwrap_or_else(|| panic!("{}: class-first classification failed", e.name));
+            // same selected cap and same top-1 power neighbor (hence
+            // trivially the same neighbor class)
+            assert_eq!(
+                a.plan.f_cap_mhz, b.plan.f_cap_mhz,
+                "{}: cap diverged under {objective:?}",
+                e.name
+            );
+            assert_eq!(
+                a.plan.pwr_neighbor, b.plan.pwr_neighbor,
+                "{}: neighbor diverged under {objective:?}",
+                e.name
+            );
+            assert_eq!(a.plan.chosen_bin_size, b.plan.chosen_bin_size, "{}", e.name);
+            assert_eq!(
+                a.margin.to_bits(),
+                b.margin.to_bits(),
+                "{}: neighbor margin drifted",
+                e.name
+            );
+            // class diagnostics: the reported class is the neighbor's
+            let cid = b.class_id.expect("class-first must report a class");
+            assert_eq!(reg.class_of(&b.plan.pwr_neighbor), Some(cid), "{}", e.name);
+            assert!((0.0..=1.0).contains(&b.class_margin.unwrap()), "{}", e.name);
+        }
+        // and the raw neighbor scan agrees bit-for-bit at every bin size
+        for &c in &rs.bin_sizes {
+            let a = flat.pwr_neighbor(&target, c);
+            let b = fast.pwr_neighbor(&target, c);
+            assert_eq!(
+                a.map(|(e, d)| (e.name.clone(), d.to_bits())),
+                b.map(|(e, d)| (e.name.clone(), d.to_bits())),
+                "{} bin {c}",
+                e.name
+            );
+        }
+    }
+}
+
+#[test]
+fn build_is_deterministic_and_within_sweep_bounds() {
+    let rs = refset();
+    let reg = registry();
+    assert!(
+        reg.len() >= CLASS_K_MIN && reg.len() <= CLASS_K_MAX,
+        "class count {} outside sweep bounds {CLASS_K_MIN}..={CLASS_K_MAX}",
+        reg.len()
+    );
+    let again = ClassRegistry::build(rs, &MinosParams::default()).unwrap();
+    assert_eq!(reg.digest(), again.digest(), "inspect digest must be stable");
+    assert_eq!(reg.sweep, again.sweep);
+    assert_eq!(reg.version, 0);
+    // every power entry belongs to exactly one class
+    let total: usize = reg.classes.iter().map(|c| c.members.len()).sum();
+    assert_eq!(total, rs.entries.len());
+    for c in &reg.classes {
+        assert!(!c.members.is_empty());
+        assert!(c.representative.is_some());
+        assert!(c.scaling.is_some(), "reference classes carry merged scaling");
+    }
+}
+
+#[test]
+fn absorb_is_versioned_and_preserves_search_exactness() {
+    let rs = refset();
+    let params = MinosParams::default();
+    let mut reg = ClassRegistry::build(rs, &params).unwrap();
+    let d0 = reg.digest();
+    // absorb two case-study targets (their apps are not in the refset)
+    let spec = GpuSpec::mi300x();
+    let wl_reg = workloads::registry();
+    let mut absorbed = Vec::new();
+    for name in ["faiss-b4096", "qwen15-moe-b32"] {
+        let w = wl_reg.by_name(name).unwrap();
+        let p = minos::sim::profiler::profile(
+            &minos::sim::profiler::ProfileRequest::new(
+                &spec,
+                w,
+                minos::sim::dvfs::DvfsMode::Uncapped,
+            )
+            .with_params(&SimParams::default()),
+        );
+        let t = TargetProfile::from_profile(&w.app, &p, &rs.bin_sizes);
+        let o = reg.absorb(rs, &t).unwrap();
+        assert!(o.class_id < reg.len());
+        assert!((0.0..=1.0).contains(&o.margin));
+        assert_eq!(reg.class_of(name), Some(o.class_id));
+        absorbed.push((t, o));
+    }
+    assert_eq!(reg.version, 2);
+    assert_ne!(reg.digest(), d0);
+    // absorbed entries shape centroids but are never served as
+    // neighbors, so class-first search stays exact vs the flat oracle
+    let flat = SelectOptimalFreq::new(rs, &params);
+    let fast = SelectOptimalFreq::new(rs, &params).with_registry(&reg);
+    for (t, _) in &absorbed {
+        let a = flat.classify(t, Objective::PowerCentric).unwrap();
+        let b = fast.classify(t, Objective::PowerCentric).unwrap();
+        assert_eq!(a.plan.pwr_neighbor, b.plan.pwr_neighbor);
+        assert_eq!(a.plan.f_cap_mhz, b.plan.f_cap_mhz);
+    }
+}
+
+#[test]
+fn snapshot_roundtrip_against_the_seed_refset() {
+    let rs = refset();
+    let reg = registry();
+    let path = std::env::temp_dir().join("minos_seed_class_registry.json");
+    let path = path.to_str().unwrap();
+    reg.save(path).unwrap();
+    let back = ClassRegistry::load(path, rs).unwrap();
+    assert_eq!(back.digest(), reg.digest());
+    assert_eq!(back.len(), reg.len());
+    // the reloaded registry serves identical neighbors
+    let params = MinosParams::default();
+    let a = SelectOptimalFreq::new(rs, &params).with_registry(reg);
+    let b = SelectOptimalFreq::new(rs, &params).with_registry(&back);
+    let t = TargetProfile::from_entry(&rs.entries[0]);
+    let (na, da) = a.pwr_neighbor(&t, 0.1).unwrap();
+    let (nb, db) = b.pwr_neighbor(&t, 0.1).unwrap();
+    assert_eq!(na.name, nb.name);
+    assert_eq!(da.to_bits(), db.to_bits());
+    // a different reference set rejects the snapshot
+    let cut = rs.without_app(&rs.entries[0].app);
+    let err = ClassRegistry::load(path, &cut).unwrap_err();
+    assert!(err.to_string().contains("different reference set"), "{err}");
+    let _ = std::fs::remove_file(path);
+}
