@@ -1,0 +1,155 @@
+//! Device-routed lookup bench: a two-device [`FleetStore`] (MI300X +
+//! A100 synthetic reference sets) serving alternating per-device
+//! queries — the fleet layer's routing + class-first lookup cost vs a
+//! single-device flat scan.  Correctness-gated: the routed class-first
+//! neighbor is asserted identical to the per-device flat oracle before
+//! anything is timed.
+//!
+//! Run with: `cargo bench --bench fleet`
+
+use minos::benchkit::{bench, black_box, group};
+use minos::config::{GpuSpec, MinosParams};
+use minos::features::{SpikeVector, UtilPoint, NBINS};
+use minos::fleet::FleetStore;
+use minos::minos::algorithm::{SelectOptimalFreq, TargetProfile};
+use minos::minos::reference_set::{FreqPoint, ReferenceEntry, ReferenceSet, ScalingData};
+use minos::sim::rng::Rng;
+use std::time::Duration;
+
+const BUDGET: Duration = Duration::from_millis(300);
+const PROTOS: usize = 8;
+
+fn freq_points(spec: &GpuSpec) -> Vec<FreqPoint> {
+    spec.sweep_frequencies()
+        .into_iter()
+        .enumerate()
+        .map(|(i, f)| FreqPoint {
+            f_mhz: f,
+            p50_rel: 0.7,
+            p90_rel: 0.9 + 0.02 * i as f64,
+            p95_rel: 1.0 + 0.02 * i as f64,
+            p99_rel: 1.1 + 0.02 * i as f64,
+            peak_rel: 1.2 + 0.02 * i as f64,
+            mean_w: 0.8 * spec.tdp_w,
+            iter_time_ms: 4.0 - 0.3 * i as f64,
+            frac_above_tdp: 0.1,
+            profiling_cost_s: 1.0,
+        })
+        .collect()
+}
+
+/// `n` entries spread over PROTOS tight direction clusters, every entry
+/// its own app (so nothing collapses via the own-app exclusion).
+fn synth_refset(spec: &GpuSpec, n: usize, bin_sizes: &[f64], seed: u64) -> ReferenceSet {
+    let mut rng = Rng::new(seed);
+    let entries = (0..n)
+        .map(|i| {
+            let p = i % PROTOS;
+            let mut v = vec![0.0; NBINS];
+            v[6 * p] = 0.5 + rng.range(-0.03, 0.03);
+            v[6 * p + 1] = 0.3 + rng.range(-0.03, 0.03);
+            v[6 * p + 2] = 0.2 + rng.range(-0.03, 0.03);
+            ReferenceEntry {
+                name: format!("w{i}"),
+                app: format!("app{i}"),
+                vectors: bin_sizes
+                    .iter()
+                    .map(|&c| SpikeVector::new(v.clone(), 100.0, c))
+                    .collect(),
+                util: UtilPoint::new(rng.range(10.0, 90.0), rng.range(5.0, 50.0)),
+                mean_power_w: 0.8 * spec.tdp_w,
+                scaling: ScalingData::new(freq_points(spec)),
+                power_profiled: true,
+            }
+        })
+        .collect();
+    ReferenceSet {
+        spec: spec.clone(),
+        bin_sizes: bin_sizes.to_vec(),
+        entries,
+        registry_fingerprint: ReferenceSet::current_fingerprint(),
+    }
+}
+
+fn main() {
+    let params = MinosParams {
+        bin_sizes: vec![0.1],
+        default_bin_size: 0.1,
+        ..MinosParams::default()
+    };
+
+    group("fleet: device-routed class-first lookup (2-device store)");
+    for (label, n) in [("1x", 33usize), ("10x", 330)] {
+        let mut store = FleetStore::new();
+        store
+            .add(synth_refset(&GpuSpec::mi300x(), n, &params.bin_sizes, 7), &params)
+            .expect("mi300x");
+        store
+            .add(synth_refset(&GpuSpec::a100_pcie(), n, &params.bin_sizes, 11), &params)
+            .expect("a100");
+
+        // alternating per-device query stream
+        let selectors = ["mi300x", "a100"];
+        let targets: Vec<(usize, TargetProfile)> = (0..16)
+            .map(|i| {
+                let e = store.entries();
+                let d = i % e.len();
+                (d, TargetProfile::from_entry(&e[d].refset.entries[(i * 3) % n]))
+            })
+            .collect();
+
+        // correctness gate: routed class-first == per-device flat oracle
+        for (d, t) in &targets {
+            let entry = store.get_key(selectors[*d]).expect("routed");
+            let reg = entry.registry.as_ref().expect("clustered");
+            let (nn, dist) = reg.nearest(&entry.refset, t, 0.1).expect("hit");
+            let flat = SelectOptimalFreq::new(&entry.refset, &params);
+            let (fn_, fd) = flat.pwr_neighbor_flat(t, 0.1).expect("flat hit");
+            assert_eq!(nn.name, fn_.name, "routing diverged from the flat oracle");
+            assert_eq!(dist.to_bits(), fd.to_bits());
+        }
+
+        let r = bench(
+            &format!("routed class-first lookup  n={n:>4}/device"),
+            BUDGET,
+            200_000,
+            || {
+                let mut acc = 0usize;
+                for (d, t) in &targets {
+                    let entry = store.get_key(selectors[*d]).expect("routed");
+                    let reg = entry.registry.as_ref().expect("clustered");
+                    acc += reg.nearest(&entry.refset, t, 0.1).is_some() as usize;
+                }
+                black_box(acc)
+            },
+        );
+        println!(
+            "{}   [{:.0} lookups/s]",
+            r.report(),
+            r.per_sec(targets.len())
+        );
+        let rf = bench(
+            &format!("routed flat lookup         n={n:>4}/device"),
+            BUDGET,
+            200_000,
+            || {
+                let mut acc = 0usize;
+                for (d, t) in &targets {
+                    let entry = store.get_key(selectors[*d]).expect("routed");
+                    let flat = SelectOptimalFreq::new(&entry.refset, &params);
+                    acc += flat.pwr_neighbor_flat(t, 0.1).is_some() as usize;
+                }
+                black_box(acc)
+            },
+        );
+        println!(
+            "{}   [{:.0} lookups/s]",
+            rf.report(),
+            rf.per_sec(targets.len())
+        );
+        println!(
+            "  {label}: class-first routing speedup {:.1}x over the flat scan",
+            rf.mean_ns / r.mean_ns.max(1.0)
+        );
+    }
+}

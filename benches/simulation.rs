@@ -148,6 +148,7 @@ fn main() {
                                 Objective::PerfCentric
                             },
                             iterations: 2,
+                            device: None,
                         })
                         .expect("submit");
                 }

@@ -58,6 +58,7 @@ fn main() -> anyhow::Result<()> {
             workload: wl.to_string(),
             objective: *obj,
             iterations: 4,
+            device: None,
         })?;
     }
 

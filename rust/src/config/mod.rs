@@ -101,13 +101,121 @@ impl GpuSpec {
 
     /// The frequency sweep used throughout the evaluation (§5.3.3):
     /// 1300 → 2100 MHz in 100 MHz steps on MI300X, scaled for other parts.
+    ///
+    /// Rounding to `f_step_mhz` can push the top point past `f_max_mhz`
+    /// (steps that round up at the top) and can collapse neighbors on a
+    /// coarse grid, so every point is clamped to `[f_min, f_max]` and
+    /// duplicates are dropped — the result is always strictly ascending
+    /// and in-range, which `ScalingData::new` asserts downstream.
     pub fn sweep_frequencies(&self) -> Vec<f64> {
         let lo = 1300.0 / 2100.0 * self.f_max_mhz;
         let n = 9;
-        (0..n)
-            .map(|i| lo + (self.f_max_mhz - lo) * i as f64 / (n - 1) as f64)
-            .map(|f| (f / self.f_step_mhz).round() * self.f_step_mhz)
-            .collect()
+        let mut out: Vec<f64> = Vec::with_capacity(n);
+        for i in 0..n {
+            let raw = lo + (self.f_max_mhz - lo) * i as f64 / (n - 1) as f64;
+            let snapped = (raw / self.f_step_mhz).round() * self.f_step_mhz;
+            let f = snapped.clamp(self.f_min_mhz, self.f_max_mhz);
+            if out.last().is_none_or(|&prev| f > prev + 1e-9) {
+                out.push(f);
+            }
+        }
+        out
+    }
+}
+
+/// Canonical device routing key: lowercased name, runs of
+/// non-alphanumerics collapsed to a single '-' ("A100-PCIe-40GB" →
+/// "a100-pcie-40gb").  CLI `--device` selectors and `Job::device` pins
+/// match by prefix on this key.
+pub fn device_key(name: &str) -> String {
+    let mut out = String::with_capacity(name.len());
+    for ch in name.chars() {
+        if ch.is_ascii_alphanumeric() {
+            out.push(ch.to_ascii_lowercase());
+        } else if !out.is_empty() && !out.ends_with('-') {
+            out.push('-');
+        }
+    }
+    while out.ends_with('-') {
+        out.pop();
+    }
+    out
+}
+
+/// Stable identity of one GPU device model — the fingerprint every
+/// device-tagged artifact (reference sets, class-registry snapshots,
+/// fleet stores, the scheduler's plan cache) is keyed by.
+///
+/// Derived from the `GpuSpec` fields that change what profiling data
+/// *means*: the name, the TDP (spike vectors are TDP-relative), the
+/// frequency grid, and the spike-shape parameters.  Sim-only knobs
+/// (voltage curve, power split, idle floor) deliberately do not
+/// contribute — they alter simulated magnitudes, not which device a
+/// trace belongs to.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeviceProfile {
+    /// Human name, verbatim from the spec ("MI300X").
+    pub name: String,
+    /// Canonical routing key ([`device_key`] of the name).
+    pub key: String,
+    /// FNV-1a over (name, TDP, f-grid, spike params).
+    pub fingerprint: u64,
+}
+
+impl DeviceProfile {
+    pub fn of(spec: &GpuSpec) -> DeviceProfile {
+        let mut h = crate::util::fnv::Fnv1a::new();
+        h.eat(spec.name.as_bytes());
+        for v in [
+            spec.tdp_w,
+            spec.f_min_mhz,
+            spec.f_max_mhz,
+            spec.f_step_mhz,
+            spec.spike_tau_ms,
+            spec.spike_gain_w,
+        ] {
+            h.eat(&v.to_le_bytes());
+        }
+        DeviceProfile {
+            name: spec.name.clone(),
+            key: device_key(&spec.name),
+            fingerprint: h.finish(),
+        }
+    }
+
+    /// True when `selector` names this device: an exact key match or a
+    /// family prefix ("a100" matches "a100-pcie-40gb").
+    pub fn matches(&self, selector: &str) -> bool {
+        let sel = device_key(selector);
+        !sel.is_empty() && (self.key == sel || self.key.starts_with(&sel))
+    }
+}
+
+impl GpuSpec {
+    /// This device's stable identity.
+    pub fn device(&self) -> DeviceProfile {
+        DeviceProfile::of(self)
+    }
+
+    /// Parse a CLI `--device` selector: a built-in alias ("mi300x",
+    /// "a100"), inline JSON (`{...}`), or a path to a JSON spec file.
+    pub fn parse_selector(sel: &str) -> anyhow::Result<GpuSpec> {
+        match device_key(sel).as_str() {
+            "mi300x" => return Ok(GpuSpec::mi300x()),
+            "a100" | "a100-pcie" | "a100-pcie-40gb" => return Ok(GpuSpec::a100_pcie()),
+            _ => {}
+        }
+        let text = if sel.trim_start().starts_with('{') {
+            sel.to_string()
+        } else {
+            std::fs::read_to_string(sel).map_err(|e| {
+                anyhow::anyhow!(
+                    "--device '{sel}': not a known alias (mi300x|a100), inline JSON, \
+                     or a readable GpuSpec file ({e})"
+                )
+            })?
+        };
+        GpuSpec::from_json(&Json::parse(&text)?)
     }
 }
 
@@ -157,16 +265,36 @@ pub struct MinosParams {
     pub power_bound_x: f64,
     /// PerfCentric max tolerated slowdown (5% per §7.1.2 / POLCA).
     pub perf_bound_frac: f64,
-    /// Minimum allowable PerfCentric cap (MHz): §7.2.2 notes operators
-    /// impose a frequency floor since extremely low predicted caps would
-    /// severely degrade performance; this removes low-frequency outliers.
-    pub perf_min_cap_mhz: f64,
+    /// Minimum allowable PerfCentric cap as a **fraction of the
+    /// device's `f_max_mhz`** (§7.2.2: operators impose a frequency
+    /// floor to remove low-frequency outliers).  The paper's absolute
+    /// 1500 MHz floor was MI300X-specific — above A100's entire sweep
+    /// range — so the floor is device-relative; the default 1500/2100
+    /// reproduces the paper's MI300X behavior exactly.
+    pub perf_min_cap_frac: f64,
+    /// Back-compat absolute override (MHz).  `Some` wins over the
+    /// fraction on every device, so old config files that set
+    /// `perf_min_cap_mhz` keep their exact behavior.
+    pub perf_min_cap_mhz: Option<f64>,
     /// Dendrogram slice distance for the explanatory 3-class grouping
     /// (0.72 per §6.1; predictions use nearest-neighbor, not classes).
     pub dendrogram_slice: f64,
     /// Silhouette sweep range for K_util (3..=17 per §4.2).
     pub kutil_min: usize,
     pub kutil_max: usize,
+}
+
+impl MinosParams {
+    /// The PerfCentric frequency floor for a device with boost clock
+    /// `f_max_mhz`: the absolute override when set, otherwise
+    /// `perf_min_cap_frac × f_max`.  Callers compare sweep points with
+    /// a 0.5 MHz tolerance (see `cap_perf_centric_scaling`) so the
+    /// fraction round-trip can never float-drift a grid point across
+    /// the floor.
+    pub fn perf_floor_mhz(&self, f_max_mhz: f64) -> f64 {
+        self.perf_min_cap_mhz
+            .unwrap_or(self.perf_min_cap_frac * f_max_mhz)
+    }
 }
 
 impl Default for MinosParams {
@@ -178,7 +306,8 @@ impl Default for MinosParams {
             power_quantile: 0.90,
             power_bound_x: 1.3,
             perf_bound_frac: 0.05,
-            perf_min_cap_mhz: 1500.0,
+            perf_min_cap_frac: 1500.0 / 2100.0,
+            perf_min_cap_mhz: None,
             dendrogram_slice: 0.72,
             kutil_min: 3,
             kutil_max: 17,
@@ -198,6 +327,65 @@ pub struct NodeSpec {
 }
 
 impl NodeSpec {
+    /// The canonical node shape for a device family (§5.1): 8×MI300X
+    /// (HPC Fund), 3×A100 (Lonestar6); unknown devices get 4 GPUs at an
+    /// exact gpus×TDP budget.
+    pub fn for_gpu(gpu: GpuSpec) -> Self {
+        let key = device_key(&gpu.name);
+        let gpus = if key.starts_with("mi300x") {
+            8
+        } else if key.starts_with("a100") {
+            3
+        } else {
+            4
+        };
+        NodeSpec {
+            power_budget_w: gpu.tdp_w * gpus as f64,
+            gpus_per_node: gpus,
+            gpu,
+        }
+    }
+
+    /// Internal-consistency check: a node whose GPU count or power
+    /// budget contradicts its spec must be a hard error at config-load
+    /// time, not a silently absurd admission ledger.  `label` names the
+    /// node in error messages ("cluster node 2").
+    pub fn validate(&self, label: &str) -> anyhow::Result<()> {
+        let g = &self.gpu;
+        anyhow::ensure!(
+            g.tdp_w > 0.0 && g.f_max_mhz > g.f_min_mhz && g.f_step_mhz > 0.0,
+            "{label} ({}): malformed GpuSpec (tdp_w/f-range/f_step must be positive)",
+            g.name
+        );
+        anyhow::ensure!(self.gpus_per_node >= 1, "{label} ({}): gpus_per_node must be >= 1", g.name);
+        anyhow::ensure!(
+            self.power_budget_w.is_finite() && self.power_budget_w > 0.0,
+            "{label} ({}): power_budget_w must be positive watts, got {}",
+            g.name,
+            self.power_budget_w
+        );
+        let ceiling = g.tdp_w * g.clamp_x * self.gpus_per_node as f64;
+        anyhow::ensure!(
+            self.power_budget_w <= ceiling + 1e-6,
+            "{label} ({}): power_budget_w {:.0} W exceeds the physical ceiling {:.0} W \
+             ({} GPUs x {:.0} W TDP x {:.1} OCP clamp)",
+            g.name,
+            self.power_budget_w,
+            ceiling,
+            self.gpus_per_node,
+            g.tdp_w,
+            g.clamp_x
+        );
+        anyhow::ensure!(
+            self.power_budget_w + 1e-6 >= g.idle_w,
+            "{label} ({}): power_budget_w {:.0} W is below one GPU's idle floor {:.0} W",
+            g.name,
+            self.power_budget_w,
+            g.idle_w
+        );
+        Ok(())
+    }
+
     pub fn hpc_fund() -> Self {
         let gpu = GpuSpec::mi300x();
         let budget = gpu.tdp_w * 8.0;
@@ -227,6 +415,13 @@ pub struct Config {
     /// (`serve --nodes N` overrides; omitted in JSON ⇒ 1 for backwards
     /// compatibility with single-node config files).
     pub nodes: usize,
+    /// Explicit per-node device list for heterogeneous clusters (e.g.
+    /// mixed HPC Fund + Lonestar6).  `Some` overrides `node`/`nodes`;
+    /// omitted in JSON ⇒ the homogeneous layout above.  Every listed
+    /// node is validated at load ([`NodeSpec::validate`]) — a node
+    /// whose GPU count/budget contradict its spec is a hard error
+    /// naming the offending index.
+    pub cluster: Option<Vec<NodeSpec>>,
     pub sim: SimParams,
     pub minos: MinosParams,
 }
@@ -236,6 +431,7 @@ impl Default for Config {
         Config {
             node: NodeSpec::hpc_fund(),
             nodes: 1,
+            cluster: None,
             sim: SimParams::default(),
             minos: MinosParams::default(),
         }
@@ -260,7 +456,7 @@ impl Config {
 
 // ---- JSON codec (in-tree; the vendored build has no serde) ----
 
-use crate::util::json::{num, nums, obj, s, Json};
+use crate::util::json::{arr, num, nums, obj, s, Json};
 
 impl GpuSpec {
     pub fn to_json(&self) -> Json {
@@ -328,18 +524,22 @@ impl SimParams {
 
 impl MinosParams {
     pub fn to_json(&self) -> Json {
-        obj(vec![
+        let mut pairs = vec![
             ("spike_lo", num(self.spike_lo)),
             ("bin_sizes", nums(&self.bin_sizes)),
             ("default_bin_size", num(self.default_bin_size)),
             ("power_quantile", num(self.power_quantile)),
             ("power_bound_x", num(self.power_bound_x)),
             ("perf_bound_frac", num(self.perf_bound_frac)),
-            ("perf_min_cap_mhz", num(self.perf_min_cap_mhz)),
+            ("perf_min_cap_frac", num(self.perf_min_cap_frac)),
             ("dendrogram_slice", num(self.dendrogram_slice)),
             ("kutil_min", num(self.kutil_min as f64)),
             ("kutil_max", num(self.kutil_max as f64)),
-        ])
+        ];
+        if let Some(mhz) = self.perf_min_cap_mhz {
+            pairs.push(("perf_min_cap_mhz", num(mhz)));
+        }
+        obj(pairs)
     }
 
     pub fn from_json(j: &Json) -> anyhow::Result<Self> {
@@ -350,7 +550,18 @@ impl MinosParams {
             power_quantile: j.f("power_quantile")?,
             power_bound_x: j.f("power_bound_x")?,
             perf_bound_frac: j.f("perf_bound_frac")?,
-            perf_min_cap_mhz: j.f("perf_min_cap_mhz")?,
+            // back-compat: an old file carries the absolute floor only
+            // (it becomes the override); a new file carries the fraction
+            perf_min_cap_frac: if j.get("perf_min_cap_frac").is_some() {
+                j.f("perf_min_cap_frac")?
+            } else {
+                1500.0 / 2100.0
+            },
+            perf_min_cap_mhz: if j.get("perf_min_cap_mhz").is_some() {
+                Some(j.f("perf_min_cap_mhz")?)
+            } else {
+                None
+            },
             dendrogram_slice: j.f("dendrogram_slice")?,
             kutil_min: j.u("kutil_min")?,
             kutil_max: j.u("kutil_max")?,
@@ -378,20 +589,42 @@ impl NodeSpec {
 
 impl Config {
     pub fn to_json(&self) -> Json {
-        obj(vec![
+        let mut pairs = vec![
             ("node", self.node.to_json()),
             ("nodes", num(self.nodes as f64)),
-            ("sim", self.sim.to_json()),
-            ("minos", self.minos.to_json()),
-        ])
+        ];
+        if let Some(cluster) = &self.cluster {
+            pairs.push(("cluster", arr(cluster.iter().map(|n| n.to_json()).collect())));
+        }
+        pairs.push(("sim", self.sim.to_json()));
+        pairs.push(("minos", self.minos.to_json()));
+        obj(pairs)
     }
 
     pub fn from_json(j: &Json) -> anyhow::Result<Self> {
+        let node = NodeSpec::from_json(
+            j.get("node").ok_or_else(|| anyhow::anyhow!("missing node"))?,
+        )?;
+        node.validate("node")?;
+        let cluster = match j.get("cluster") {
+            None => None,
+            Some(_) => {
+                let nodes = j
+                    .arr("cluster")?
+                    .iter()
+                    .map(NodeSpec::from_json)
+                    .collect::<anyhow::Result<Vec<_>>>()?;
+                anyhow::ensure!(!nodes.is_empty(), "cluster: node list must not be empty");
+                for (i, n) in nodes.iter().enumerate() {
+                    n.validate(&format!("cluster node {i}"))?;
+                }
+                Some(nodes)
+            }
+        };
         Ok(Config {
-            node: NodeSpec::from_json(
-                j.get("node").ok_or_else(|| anyhow::anyhow!("missing node"))?,
-            )?,
+            node,
             nodes: if j.get("nodes").is_some() { j.u("nodes")?.max(1) } else { 1 },
+            cluster,
             sim: SimParams::from_json(
                 j.get("sim").ok_or_else(|| anyhow::anyhow!("missing sim"))?,
             )?,
@@ -470,5 +703,180 @@ mod tests {
         assert_eq!(m.power_bound_x, 1.3);
         assert_eq!(m.perf_bound_frac, 0.05);
         assert_eq!(m.power_quantile, 0.90);
+    }
+
+    #[test]
+    fn a100_sweep_respects_its_own_grid() {
+        // 15 MHz step: 9 distinct points, all multiples of 15 within
+        // [f_min, f_max], top point exactly the boost clock.
+        let g = GpuSpec::a100_pcie();
+        let s = g.sweep_frequencies();
+        assert_eq!(s.len(), 9, "{s:?}");
+        assert_eq!(*s.last().unwrap(), g.f_max_mhz);
+        for w in s.windows(2) {
+            assert!(w[1] > w[0], "{s:?}");
+        }
+        for &f in &s {
+            assert!(f >= g.f_min_mhz && f <= g.f_max_mhz, "{f} out of range");
+            assert!(
+                (f / g.f_step_mhz - (f / g.f_step_mhz).round()).abs() < 1e-9,
+                "{f} not on the {} MHz grid",
+                g.f_step_mhz
+            );
+        }
+    }
+
+    #[test]
+    fn mi300x_sweep_unchanged_by_clamp_and_dedup() {
+        let s = GpuSpec::mi300x().sweep_frequencies();
+        let expect: Vec<f64> = (0..9).map(|i| 1300.0 + 100.0 * i as f64).collect();
+        assert_eq!(s, expect);
+    }
+
+    #[test]
+    fn sweep_clamps_rounding_overshoot_and_dedups_coarse_grids() {
+        // f_max not a step multiple: the old rounding pushed the top
+        // point to 1050 MHz, 20 MHz above the boost clock.
+        let mut g = GpuSpec::mi300x();
+        g.f_max_mhz = 1030.0;
+        g.f_step_mhz = 50.0;
+        let s = g.sweep_frequencies();
+        assert!(*s.last().unwrap() <= g.f_max_mhz, "{s:?}");
+        for w in s.windows(2) {
+            assert!(w[1] > w[0], "duplicates survived: {s:?}");
+        }
+        // a very coarse grid used to emit duplicate points
+        let mut c = GpuSpec::mi300x();
+        c.f_step_mhz = 400.0;
+        let s = c.sweep_frequencies();
+        assert!(s.len() >= 2 && s.len() < 9, "coarse grid must dedup: {s:?}");
+        for w in s.windows(2) {
+            assert!(w[1] > w[0], "{s:?}");
+        }
+        for &f in &s {
+            assert!(f >= c.f_min_mhz && f <= c.f_max_mhz);
+        }
+    }
+
+    #[test]
+    fn device_profile_fingerprint_is_stable_and_field_sensitive() {
+        let a = DeviceProfile::of(&GpuSpec::mi300x());
+        let b = DeviceProfile::of(&GpuSpec::mi300x());
+        assert_eq!(a, b);
+        assert_eq!(a.key, "mi300x");
+        let c = DeviceProfile::of(&GpuSpec::a100_pcie());
+        assert_eq!(c.key, "a100-pcie-40gb");
+        assert_ne!(a.fingerprint, c.fingerprint);
+        // identity fields move the fingerprint…
+        let mut t = GpuSpec::mi300x();
+        t.tdp_w += 1.0;
+        assert_ne!(DeviceProfile::of(&t).fingerprint, a.fingerprint);
+        // …sim-only knobs do not
+        let mut v = GpuSpec::mi300x();
+        v.v_max += 0.01;
+        assert_eq!(DeviceProfile::of(&v).fingerprint, a.fingerprint);
+    }
+
+    #[test]
+    fn device_selectors_match_by_family_prefix() {
+        let a100 = DeviceProfile::of(&GpuSpec::a100_pcie());
+        assert!(a100.matches("a100"));
+        assert!(a100.matches("A100-PCIe-40GB"));
+        assert!(!a100.matches("mi300x"));
+        assert!(!a100.matches(""));
+        let mi = DeviceProfile::of(&GpuSpec::mi300x());
+        assert!(mi.matches("MI300X"));
+        assert!(GpuSpec::parse_selector("a100").unwrap().name.contains("A100"));
+        assert_eq!(GpuSpec::parse_selector("mi300x").unwrap(), GpuSpec::mi300x());
+        // inline JSON round-trips through the selector too
+        let js = GpuSpec::a100_pcie().to_json().dump();
+        assert_eq!(GpuSpec::parse_selector(&js).unwrap(), GpuSpec::a100_pcie());
+        assert!(GpuSpec::parse_selector("no-such-device").is_err());
+    }
+
+    #[test]
+    fn perf_floor_is_device_relative_with_absolute_override() {
+        let m = MinosParams::default();
+        // MI300X: reproduces the paper's 1500 MHz floor (within float eps)
+        assert!((m.perf_floor_mhz(2100.0) - 1500.0).abs() < 1e-6);
+        // A100: the floor lands inside the sweep range, not above it
+        let floor = m.perf_floor_mhz(GpuSpec::a100_pcie().f_max_mhz);
+        assert!(floor < GpuSpec::a100_pcie().f_max_mhz, "floor {floor}");
+        assert!(floor > 900.0 && floor < 1100.0, "floor {floor}");
+        // absolute override wins on every device
+        let o = MinosParams {
+            perf_min_cap_mhz: Some(1500.0),
+            ..MinosParams::default()
+        };
+        assert_eq!(o.perf_floor_mhz(1410.0), 1500.0);
+        // a legacy config file carrying only the absolute floor keeps it
+        let legacy = o.to_json().dump();
+        assert!(legacy.contains("perf_min_cap_mhz"));
+        let back = MinosParams::from_json(&Json::parse(&legacy).unwrap()).unwrap();
+        assert_eq!(back.perf_min_cap_mhz, Some(1500.0));
+        // and the default serialization omits the override entirely
+        assert!(!m.to_json().dump().contains("perf_min_cap_mhz"));
+        let back2 = MinosParams::from_json(&Json::parse(&m.to_json().dump()).unwrap()).unwrap();
+        assert_eq!(back2.perf_min_cap_mhz, None);
+        assert_eq!(back2.perf_min_cap_frac, m.perf_min_cap_frac);
+    }
+
+    #[test]
+    fn cluster_roundtrip_and_back_compat() {
+        let c = Config {
+            cluster: Some(vec![NodeSpec::hpc_fund(), NodeSpec::lonestar6()]),
+            ..Config::default()
+        };
+        let text = c.to_json().dump();
+        let back = Config::from_json_str(&text).unwrap();
+        let cl = back.cluster.as_ref().unwrap();
+        assert_eq!(cl.len(), 2);
+        assert_eq!(cl[0].gpu, GpuSpec::mi300x());
+        assert_eq!(cl[1].gpu, GpuSpec::a100_pcie());
+        assert_eq!(cl[1].gpus_per_node, 3);
+        // configs without a cluster key stay single-device
+        let plain = Config::default().to_json().dump();
+        assert!(!plain.contains("cluster"));
+        assert!(Config::from_json_str(&plain).unwrap().cluster.is_none());
+    }
+
+    #[test]
+    fn inconsistent_cluster_nodes_are_rejected_with_their_index() {
+        // node 1's budget exceeds the OCP ceiling of 3×250 W×2.0
+        let mut bad = NodeSpec::lonestar6();
+        bad.power_budget_w = 3000.0;
+        let c = Config {
+            cluster: Some(vec![NodeSpec::hpc_fund(), bad]),
+            ..Config::default()
+        };
+        let err = Config::from_json_str(&c.to_json().dump()).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("cluster node 1"), "{msg}");
+        assert!(msg.contains("ceiling"), "{msg}");
+        // zero GPUs is named too
+        let mut zero = NodeSpec::hpc_fund();
+        zero.gpus_per_node = 0;
+        let c2 = Config {
+            cluster: Some(vec![zero]),
+            ..Config::default()
+        };
+        let err2 = Config::from_json_str(&c2.to_json().dump()).unwrap_err();
+        assert!(err2.to_string().contains("cluster node 0"), "{err2}");
+        // an empty list is not a cluster
+        let c3 = Config::default().to_json().dump().replace(
+            "\"sim\":",
+            "\"cluster\":[],\"sim\":",
+        );
+        assert!(Config::from_json_str(&c3).is_err());
+    }
+
+    #[test]
+    fn node_spec_for_gpu_matches_paper_topology() {
+        let mi = NodeSpec::for_gpu(GpuSpec::mi300x());
+        assert_eq!(mi.gpus_per_node, 8);
+        assert_eq!(mi.power_budget_w, 750.0 * 8.0);
+        let a = NodeSpec::for_gpu(GpuSpec::a100_pcie());
+        assert_eq!(a.gpus_per_node, 3);
+        assert_eq!(a.power_budget_w, 250.0 * 3.0);
     }
 }

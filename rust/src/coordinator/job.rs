@@ -14,6 +14,11 @@ pub struct Job {
     pub objective: Objective,
     /// Iterations to run.
     pub iterations: usize,
+    /// Optional device pin: a selector matched against each cluster
+    /// device's key ("mi300x", "a100" — family prefixes allowed).  None
+    /// = run on any compatible device.  A pin no cluster node satisfies
+    /// is rejected at submit.
+    pub device: Option<String>,
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -35,6 +40,8 @@ pub struct JobOutcome {
     /// Device id on that node — a real slot popped from the node's
     /// free-list under the dispatcher, not a derived count.
     pub gpu: usize,
+    /// Device key of the node's GPU family ("mi300x", "a100-pcie-40gb").
+    pub device: String,
     pub f_cap_mhz: f64,
     pub pwr_neighbor: String,
     pub util_neighbor: String,
@@ -43,6 +50,11 @@ pub struct JobOutcome {
     /// [`crate::registry::ClassRegistry`]; co-scheduled jobs with the
     /// same class id shared one cap plan.
     pub class_id: Option<usize>,
+    /// True when the cap came through cross-device transfer (the job
+    /// landed on a device with no native reference set, so the class
+    /// was borrowed from the fleet primary and the cap mapped by
+    /// frequency fraction).
+    pub transferred: bool,
     /// Predicted p90 power at the cap (W) — what admission used.
     pub predicted_p90_w: f64,
     /// Observed p90 power over the run (W).
@@ -80,12 +92,13 @@ pub fn outcome_table(outcomes: &[JobOutcome]) -> String {
     let mut rows: Vec<&JobOutcome> = outcomes.iter().collect();
     rows.sort_by_key(|o| o.job.id);
     let mut s = String::from(
-        "id,workload,objective,node,gpu,cap_mhz,class,pred_p90_w,obs_p90_w,obs_peak_w,\
-         iter_ms,energy_j,v_start_ms,v_end_ms,cached,profiling_s,profile_frac\n",
+        "id,workload,objective,node,gpu,cap_mhz,class,device,transferred,pred_p90_w,\
+         obs_p90_w,obs_peak_w,iter_ms,energy_j,v_start_ms,v_end_ms,cached,profiling_s,\
+         profile_frac\n",
     );
     for o in rows {
         s.push_str(&format!(
-            "{},{},{:?},{},{},{:.1},{},{:.6},{:.6},{:.6},{:.6},{:.6},{:.6},{:.6},{},{:.6},{:.4}\n",
+            "{},{},{:?},{},{},{:.1},{},{},{},{:.6},{:.6},{:.6},{:.6},{:.6},{:.6},{:.6},{},{:.6},{:.4}\n",
             o.job.id,
             o.job.workload,
             o.job.objective,
@@ -93,6 +106,8 @@ pub fn outcome_table(outcomes: &[JobOutcome]) -> String {
             o.gpu,
             o.f_cap_mhz,
             o.class_id.map(|c| c.to_string()).unwrap_or_else(|| "-".into()),
+            o.device,
+            o.transferred,
             o.predicted_p90_w,
             o.observed_p90_w,
             o.observed_peak_w,
@@ -151,9 +166,12 @@ mod tests {
                 workload: "sgemm".into(),
                 objective: Objective::PowerCentric,
                 iterations: 1,
+                device: None,
             },
             node,
             gpu,
+            device: "mi300x".into(),
+            transferred: false,
             f_cap_mhz: 1700.0,
             pwr_neighbor: "sgemm".into(),
             util_neighbor: "sgemm".into(),

@@ -1,6 +1,7 @@
 //! Aggregated scheduler metrics — what a cluster operator would scrape.
 
 use crate::coordinator::nodecap::NodePlan;
+use std::collections::BTreeMap;
 
 #[derive(Debug, Clone, Default)]
 pub struct SchedulerMetrics {
@@ -9,7 +10,10 @@ pub struct SchedulerMetrics {
     pub failed: usize,
     /// Jobs admitted without a profiling run (classification cache hit).
     pub cache_hits: usize,
-    /// Profiling runs performed.
+    /// Profiling runs performed.  On a mixed fleet this counts per
+    /// (device, app): an unpinned app profiles once per compatible
+    /// device (placement needs per-device p90 predictions), and the
+    /// savings below are measured against that device's full sweep.
     pub profiles_run: usize,
     /// Total simulated profiling seconds spent / saved vs full sweeps.
     /// Under streaming admission, `spent` counts only the trace prefix
@@ -28,11 +32,28 @@ pub struct SchedulerMetrics {
     /// Max of (sum of concurrent predicted p90 power) seen on any single
     /// node (W).
     pub peak_admitted_p90_w: f64,
-    /// Per-node power budget (W) — all nodes are identical.
+    /// The first node's power budget (W) — the whole cluster's on the
+    /// homogeneous layout; see `node_budget_w_by_node` for mixed ones.
     pub node_budget_w: f64,
-    /// Cluster shape.
+    /// Cluster shape (first node's GPU count on mixed clusters).
     pub nodes: usize,
     pub gpus_per_node: usize,
+    /// Per-node power budgets (W), indexed by node id — differs across
+    /// nodes on a heterogeneous cluster.
+    pub node_budget_w_by_node: Vec<f64>,
+    /// Distinct device keys serving this cluster, in first-appearance
+    /// order (index 0 = the fleet primary).
+    pub devices: Vec<String>,
+    /// Admission-plan cache hits per plan key (`dev:<device>|class:<id>`
+    /// or `dev:<device>|app:<name>`) — the per-(device, class) view of
+    /// plan reuse on a mixed fleet.
+    pub plan_cache_hits: BTreeMap<String, usize>,
+    /// Jobs placed with a cross-device-transferred cap (the node's
+    /// device had no native reference set).
+    pub transfers: usize,
+    /// Targets absorbed into a borrowed registry by transfer-serving
+    /// (transfer-then-absorb).
+    pub transfer_absorbs: usize,
     /// Per-node peak admitted p90 sums (W), indexed by node id.
     pub node_peak_admitted_p90_w: Vec<f64>,
     /// Deepest the admission queue ever got.
@@ -65,17 +86,28 @@ impl SchedulerMetrics {
     }
 
     pub fn summary(&self) -> String {
+        let devices = if self.devices.len() > 1 {
+            format!(
+                " | devices [{}] (transfers {}, absorbs {})",
+                self.devices.join(","),
+                self.transfers,
+                self.transfer_absorbs
+            )
+        } else {
+            String::new()
+        };
         format!(
-            "nodes {}x{}gpu | jobs {}/{} ok ({} failed) | cache hits {} | classes {} (plan shares {}) | \
+            "nodes {}x{}gpu | jobs {}/{} ok ({} failed) | cache hits {} ({} plan keys) | classes {} (plan shares {}) | \
              profiles {} ({:.1}s spent, {:.1}s saved; \
              {} early exits, mean trace fraction {:.2}) | \
-             power waits {} | peak pending {} | peak admitted p90 {:.0}/{:.0} W per node | replans {} | violations {} | energy {:.0} J",
+             power waits {} | peak pending {} | peak admitted p90 {:.0}/{:.0} W per node | replans {} | violations {} | energy {:.0} J{}",
             self.nodes.max(1),
             self.gpus_per_node,
             self.completed,
             self.submitted,
             self.failed,
             self.cache_hits,
+            self.plan_cache_hits.len(),
             self.classes_active,
             self.class_plan_shares,
             self.profiles_run,
@@ -89,8 +121,19 @@ impl SchedulerMetrics {
             self.node_budget_w,
             self.replans,
             self.bound_violations,
-            self.total_energy_j
+            self.total_energy_j,
+            devices
         )
+    }
+
+    /// One line per plan-cache key, sorted — the per-(device, class)
+    /// hit counters `serve` prints on mixed clusters.
+    pub fn plan_hits_table(&self) -> String {
+        let mut s = String::new();
+        for (k, n) in &self.plan_cache_hits {
+            s.push_str(&format!("  {k}: {n} hit(s)\n"));
+        }
+        s
     }
 }
 

@@ -26,6 +26,16 @@
 //! class — co-scheduled jobs of the same class share one cap plan even
 //! across different applications — and outcomes/metrics carry class ids
 //! (`SchedulerConfig::search` selects flat vs class-first).
+//!
+//! The cluster may be **heterogeneous** (`SchedulerConfig::cluster`,
+//! e.g. mixed 8×MI300X + 3×A100 nodes): each distinct device serves
+//! from its own reference set + registry out of a
+//! [`crate::fleet::FleetStore`], jobs route only onto compatible
+//! devices (optional `Job::device` pins), the plan cache is keyed per
+//! (device, class), and a device with no native reference set falls
+//! back to transfer-then-absorb — classify against the fleet primary,
+//! map the cap by frequency fraction ([`crate::fleet::transfer`]), and
+//! absorb the target into the borrowed registry.
 
 pub mod job;
 pub mod metrics;

@@ -39,13 +39,20 @@
 //! (using each resident's power neighbor as its scaling proxy); the
 //! latest [`crate::coordinator::nodecap::NodePlan`] per node is exported
 //! through [`SchedulerMetrics::node_plans`].
+//!
+//! Device identity is a first-class axis: every node carries its own
+//! [`NodeSpec`] (heterogeneous clusters via `SchedulerConfig::cluster`),
+//! classification/placement/execution are all device-keyed, and devices
+//! without a native reference set are served by cross-device transfer
+//! from the fleet primary (see the [`crate::coordinator`] module docs).
 
-use crate::config::{MinosParams, NodeSpec, SimParams};
+use crate::config::{DeviceProfile, GpuSpec, MinosParams, NodeSpec, SimParams};
 use crate::coordinator::job::{Job, JobOutcome};
 use crate::coordinator::metrics::SchedulerMetrics;
 use crate::coordinator::nodecap::{self, CapPolicy};
 use crate::features::UtilPoint;
-use crate::minos::algorithm::{Objective, SelectOptimalFreq, TargetProfile};
+use crate::fleet::{transfer, FleetStore};
+use crate::minos::algorithm::{FreqPlan, Objective, SelectOptimalFreq, TargetProfile};
 use crate::minos::reference_set::ReferenceSet;
 use crate::registry::{ClassRegistry, SearchMode};
 use crate::sim::dvfs::DvfsMode;
@@ -104,10 +111,18 @@ impl AdmissionMode {
 
 #[derive(Debug, Clone)]
 pub struct SchedulerConfig {
-    /// Per-node hardware + power budget (all nodes are identical).
+    /// Per-node hardware + power budget for the homogeneous layout
+    /// (`nodes` copies of this node).  Ignored when `cluster` is set.
     pub node: NodeSpec,
-    /// Number of nodes the coordinator shards jobs across.
+    /// Number of `node` copies the coordinator shards jobs across.
     pub nodes: usize,
+    /// Heterogeneous cluster: an explicit per-node device list (e.g.
+    /// mixed `NodeSpec::hpc_fund()` + `NodeSpec::lonestar6()`).  `Some`
+    /// overrides `node`/`nodes`; each distinct device gets its own
+    /// serving artifacts (reference set + class registry) from the
+    /// [`FleetStore`], jobs route only onto compatible devices, and the
+    /// plan cache is keyed per (device, class).
+    pub cluster: Option<Vec<NodeSpec>>,
     /// Policy for the co-located cap re-plan run when a node's mix
     /// changes (`nodecap::plan`).
     pub policy: CapPolicy,
@@ -132,11 +147,23 @@ pub struct SchedulerConfig {
     pub sim_ms_per_wall_ms: f64,
 }
 
+impl SchedulerConfig {
+    /// The per-node spec list this config describes: the explicit
+    /// heterogeneous `cluster` when set, else `nodes` copies of `node`.
+    pub fn resolved_nodes(&self) -> Vec<NodeSpec> {
+        match &self.cluster {
+            Some(c) if !c.is_empty() => c.clone(),
+            _ => vec![self.node.clone(); self.nodes.max(1)],
+        }
+    }
+}
+
 impl Default for SchedulerConfig {
     fn default() -> Self {
         SchedulerConfig {
             node: NodeSpec::hpc_fund(),
             nodes: 1,
+            cluster: None,
             policy: CapPolicy::MinosAware,
             admission: AdmissionMode::streaming_default(),
             search: SearchMode::ClassFirst,
@@ -178,7 +205,10 @@ struct ExecResult {
     duration_ms: f64,
 }
 
-type ExecKey = (String, u64, usize); // (workload, cap bits, iterations)
+/// (workload, device fingerprint, cap bits, iterations) — execution is
+/// a pure function of all four, so the memo must be device-keyed on a
+/// mixed cluster.
+type ExecKey = (String, u64, u64, usize);
 
 /// Dispatcher inbox messages.  `Submit` boxes the workload so the enum
 /// stays small (one allocation per submit, off the hot recv path).
@@ -188,27 +218,54 @@ enum Msg {
     Shutdown,
 }
 
-/// The admission-plan cache.  Keys are class-scoped under class-first
-/// search (`class:<id>` — co-scheduled jobs of the same Minos class
-/// share one plan even across different applications) and app-scoped
-/// under flat search (`app:<name>`, the pre-registry behavior).
+/// The admission-plan cache.  Keys are device-scoped, then class-scoped
+/// under class-first search (`dev:<key>|class:<id>` — co-scheduled jobs
+/// of the same Minos class on the same device share one plan even
+/// across different applications) and app-scoped under flat search
+/// (`dev:<key>|app:<name>`, the pre-registry behavior).
 #[derive(Default)]
 struct PlanCache {
     /// plan-key → (plan, profiling cost of the producing run, class id).
-    by_key: HashMap<String, (crate::minos::algorithm::FreqPlan, f64, Option<usize>)>,
-    /// app → plan-key: an app seen once never profiles again.
-    app_key: HashMap<String, String>,
+    by_key: HashMap<String, (FreqPlan, f64, Option<usize>)>,
+    /// (device idx, app) → plan-key: an app seen once on a device never
+    /// profiles there again.
+    app_key: HashMap<(usize, String), String>,
+}
+
+/// One device's serving state inside the scheduler.
+struct DeviceServing {
+    profile: DeviceProfile,
+    /// The spec jobs execute on (the node's GPU).
+    spec: GpuSpec,
+    /// The reference set queries are answered from: the device's own
+    /// under native serving, the fleet primary's under transfer
+    /// serving.
+    refset: ReferenceSet,
+    /// Class-first index over `refset`; behind a mutex because
+    /// transfer-serving absorbs newly classified targets online (only
+    /// the dispatcher thread ever takes it).  None under
+    /// [`SearchMode::Flat`] or when the refset is too small to cluster.
+    registry: Mutex<Option<ClassRegistry>>,
+    /// False when this device has no native reference set in the fleet:
+    /// classification runs against the primary's refset (spike vectors
+    /// are TDP-relative, so they compare across devices) and the
+    /// resulting cap is mapped onto this device's frequency range via
+    /// [`transfer::map_cap`] — the transfer-then-absorb fallback.
+    native: bool,
 }
 
 /// State shared between the user-facing handle, the dispatcher, and the
 /// execution workers.
 struct Shared {
-    refset: ReferenceSet,
     cfg: SchedulerConfig,
     registry: Registry,
-    /// Class-first index over `refset`; None under [`SearchMode::Flat`]
-    /// or when the reference set is too small to cluster.
-    class_registry: Option<ClassRegistry>,
+    /// Resolved per-node hardware (len = cluster size).
+    node_specs: Vec<NodeSpec>,
+    /// node → index into `devices`.
+    node_device: Vec<usize>,
+    /// Distinct devices in first-appearance order; index 0 serves as
+    /// the job-level default.
+    devices: Vec<DeviceServing>,
     /// Classification cache (see [`PlanCache`]).
     plans: Mutex<PlanCache>,
     /// Memo of simulated executions (deterministic, so safe to reuse).
@@ -221,10 +278,9 @@ struct Shared {
     closed: AtomicBool,
 }
 
-/// A classified job waiting for admission.
-struct Admitted {
-    job: Job,
-    workload: Workload,
+/// The admission decision for one (job, device) pair.
+#[derive(Debug, Clone)]
+struct DevicePlan {
     cap_mhz: f64,
     pwr_neighbor: String,
     util_neighbor: String,
@@ -235,13 +291,27 @@ struct Admitted {
     /// Fraction of the profiling trace the classifier consumed (< 1.0
     /// when streaming admission early-exited).
     profile_fraction: f64,
+    /// True when the cap came through cross-device transfer rather than
+    /// a native reference set for this device.
+    transferred: bool,
+}
+
+/// A classified job waiting for admission: one plan per compatible
+/// device (indexed like `Shared::devices`; None = incompatible or
+/// unclassifiable there).
+struct Admitted {
+    job: Job,
+    workload: Workload,
+    plans: Vec<Option<DevicePlan>>,
     waited: bool,
 }
 
 /// A job occupying a GPU slot; `exec` is filled in by its worker (or
 /// shared from another running job computing the same `key`).
 struct Running {
-    adm: Admitted,
+    job: Job,
+    workload: Workload,
+    plan: DevicePlan,
     ticket: u64,
     node: usize,
     gpu: usize,
@@ -283,34 +353,82 @@ pub struct PowerAwareScheduler {
 }
 
 impl PowerAwareScheduler {
+    /// Single-refset constructor (the homogeneous path, and the
+    /// transfer-fallback path when the cluster mixes in devices the
+    /// refset was not built for): wraps the refset into a one-device
+    /// [`FleetStore`] whose entry becomes the primary.
     pub fn new(cfg: SchedulerConfig, refset: ReferenceSet) -> Self {
-        let nodes = cfg.nodes.max(1);
-        let budget = cfg.node.power_budget_w;
-        let gpus = cfg.node.gpus_per_node;
-        // Build the class index once at startup; a reference set too
-        // small to cluster (< 2 power entries) degrades to flat search
-        // rather than refusing to serve.
-        let class_registry = match cfg.search {
-            SearchMode::ClassFirst => ClassRegistry::build(&refset, &cfg.minos).ok(),
-            SearchMode::Flat => None,
-        };
-        let classes_active = class_registry.as_ref().map(|r| r.len()).unwrap_or(0);
+        let mut fleet = FleetStore::new();
+        fleet
+            .add(refset, &cfg.minos)
+            .expect("a fresh fleet store cannot hold duplicates");
+        Self::with_fleet(cfg, fleet)
+    }
+
+    /// Fleet constructor: every cluster device with a native entry in
+    /// `fleet` serves from its own reference set + class registry;
+    /// devices without one fall back to transfer-then-absorb against
+    /// the fleet's primary entry.
+    pub fn with_fleet(cfg: SchedulerConfig, fleet: FleetStore) -> Self {
+        assert!(!fleet.is_empty(), "fleet store must hold at least one device");
+        let node_specs = cfg.resolved_nodes();
+        let primary = fleet.primary().expect("non-empty fleet");
+        let mut devices: Vec<DeviceServing> = Vec::new();
+        let mut node_device = Vec::with_capacity(node_specs.len());
+        for ns in &node_specs {
+            let prof = DeviceProfile::of(&ns.gpu);
+            let di = match devices
+                .iter()
+                .position(|d| d.profile.fingerprint == prof.fingerprint)
+            {
+                Some(i) => i,
+                None => {
+                    let (refset, registry, native) = match fleet.get(prof.fingerprint) {
+                        Some(e) => (e.refset.clone(), e.registry.clone(), true),
+                        None => (primary.refset.clone(), primary.registry.clone(), false),
+                    };
+                    // Flat search never consults a registry (and must
+                    // report classes_active = 0, the oracle contract).
+                    let registry = match cfg.search {
+                        SearchMode::ClassFirst => registry,
+                        SearchMode::Flat => None,
+                    };
+                    devices.push(DeviceServing {
+                        profile: prof,
+                        spec: ns.gpu.clone(),
+                        refset,
+                        registry: Mutex::new(registry),
+                        native,
+                    });
+                    devices.len() - 1
+                }
+            };
+            node_device.push(di);
+        }
+        let nodes = node_specs.len();
+        let classes_active = devices
+            .first()
+            .and_then(|d| d.registry.lock().unwrap().as_ref().map(|r| r.len()))
+            .unwrap_or(0);
         let shared = Arc::new(Shared {
-            refset,
-            cfg,
             registry: crate::workloads::registry(),
-            class_registry,
             plans: Mutex::new(PlanCache::default()),
             exec_cache: Mutex::new(HashMap::new()),
             metrics: Mutex::new(SchedulerMetrics {
-                node_budget_w: budget,
+                node_budget_w: node_specs[0].power_budget_w,
                 nodes,
-                gpus_per_node: gpus,
+                gpus_per_node: node_specs[0].gpus_per_node,
+                node_budget_w_by_node: node_specs.iter().map(|n| n.power_budget_w).collect(),
                 node_peak_admitted_p90_w: vec![0.0; nodes],
                 node_plans: vec![None; nodes],
+                devices: devices.iter().map(|d| d.profile.key.clone()).collect(),
                 classes_active,
                 ..Default::default()
             }),
+            node_specs,
+            node_device,
+            devices,
+            cfg,
             in_flight: AtomicUsize::new(0),
             closed: AtomicBool::new(false),
         });
@@ -336,10 +454,11 @@ impl PowerAwareScheduler {
     }
 
     /// Enqueue one job and return immediately.  The only synchronous
-    /// failure is an unknown workload name (or a scheduler that has been
-    /// shut down); classification, admission, placement, and execution
-    /// all happen on the dispatcher/worker threads.  Job ids should be
-    /// unique per scheduler instance.
+    /// failures are an unknown workload name, a device pin no cluster
+    /// node satisfies, or a scheduler that has been shut down;
+    /// classification, admission, placement, and execution all happen
+    /// on the dispatcher/worker threads.  Job ids should be unique per
+    /// scheduler instance.
     pub fn submit(&self, job: Job) -> anyhow::Result<()> {
         let workload = self
             .shared
@@ -347,6 +466,19 @@ impl PowerAwareScheduler {
             .by_name(&job.workload)
             .ok_or_else(|| anyhow::anyhow!("unknown workload {}", job.workload))?
             .clone();
+        if let Some(sel) = &job.device {
+            anyhow::ensure!(
+                self.shared.devices.iter().any(|d| d.profile.matches(sel)),
+                "job {}: no cluster device matches pin '{sel}' (cluster has: {})",
+                job.id,
+                self.shared
+                    .devices
+                    .iter()
+                    .map(|d| d.profile.key.as_str())
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            );
+        }
         // The metrics lock doubles as the submit/shutdown gate: a Submit
         // is sent either strictly before the Shutdown message (and is
         // then drained gracefully) or is rejected here — it can never
@@ -461,12 +593,12 @@ impl Dispatcher {
         inbox: Sender<Msg>,
         outcomes: Sender<JobOutcome>,
     ) -> Self {
-        let n = shared.cfg.nodes.max(1);
-        let gpus = shared.cfg.node.gpus_per_node;
-        let nodes = (0..n)
-            .map(|_| NodeState {
+        let nodes = shared
+            .node_specs
+            .iter()
+            .map(|ns| NodeState {
                 ledger_w: 0.0,
-                free: (0..gpus).collect(),
+                free: (0..ns.gpus_per_node).collect(),
                 resident: Vec::new(),
             })
             .collect();
@@ -571,26 +703,66 @@ impl Dispatcher {
         }
     }
 
-    /// Classify (cached per app) and queue one job.
+    /// Classify (cached per app per device) and queue one job.  The job
+    /// gets one plan per compatible device; it fails only when no
+    /// compatible device can classify it.
+    ///
+    /// Classification is **eager per compatible device**: placement
+    /// compares per-device p90 predictions across candidate nodes, so
+    /// an unpinned job on an N-device fleet runs up to N profiling runs
+    /// the first time its app is seen (then the (device, app) plan
+    /// cache amortizes every repeat).  `profiles_run` and the §7.1.3
+    /// savings metrics therefore count per **(device, app)** — the
+    /// native alternative really is one full sweep per device — not per
+    /// job.  Pin jobs (`Job::device`) to confine profiling to one
+    /// device family.
     fn admit(&mut self, job: Job, workload: Workload) {
-        match self.classify(job, workload) {
-            Some(adm) => {
-                self.pending.push_back(adm);
-                let mut m = self.shared.metrics.lock().unwrap();
-                m.peak_pending = m.peak_pending.max(self.pending.len());
-            }
-            None => {
-                self.shared.metrics.lock().unwrap().failed += 1;
-                self.shared.in_flight.fetch_sub(1, Ordering::SeqCst);
+        let ndev = self.shared.devices.len();
+        let compat: Vec<usize> = match &job.device {
+            None => (0..ndev).collect(),
+            Some(sel) => (0..ndev)
+                .filter(|&i| self.shared.devices[i].profile.matches(sel))
+                .collect(),
+        };
+        let mut plans: Vec<Option<DevicePlan>> = vec![None; ndev];
+        let mut all_cached = true;
+        for &di in &compat {
+            if let Some(p) = self.plan_for_device(di, &job, &workload) {
+                all_cached &= p.cached;
+                plans[di] = Some(p);
             }
         }
+        if plans.iter().all(|p| p.is_none()) {
+            self.shared.metrics.lock().unwrap().failed += 1;
+            self.shared.in_flight.fetch_sub(1, Ordering::SeqCst);
+            return;
+        }
+        if all_cached {
+            self.shared.metrics.lock().unwrap().cache_hits += 1;
+        }
+        self.pending.push_back(Admitted {
+            job,
+            workload,
+            plans,
+            waited: false,
+        });
+        let mut m = self.shared.metrics.lock().unwrap();
+        m.peak_pending = m.peak_pending.max(self.pending.len());
     }
 
-    fn classify(&self, job: Job, workload: Workload) -> Option<Admitted> {
+    /// One device's admission plan for one job: serve the (device, app)
+    /// plan cache, or profile on that device and classify against its
+    /// serving reference set — class-first when a registry exists,
+    /// streaming early-exit when admission is streaming.  On a
+    /// transfer-served device the cap is mapped onto the device's
+    /// frequency range and the target is absorbed into the serving
+    /// registry (transfer-then-absorb).
+    fn plan_for_device(&self, di: usize, job: &Job, workload: &Workload) -> Option<DevicePlan> {
         let shared = &self.shared;
+        let dev = &shared.devices[di];
         // Re-bind a cached plan to this job's objective (both caps are
         // stored, only the selected one changes).
-        let rebind = |p: &crate::minos::algorithm::FreqPlan, objective: Objective| {
+        let rebind = |p: &FreqPlan, objective: Objective| {
             let mut base = p.clone();
             base.objective = objective;
             base.f_cap_mhz = match objective {
@@ -601,18 +773,22 @@ impl Dispatcher {
         };
         let (plan, cached, cost_s, fraction, class_id) = {
             let mut cache = shared.plans.lock().unwrap();
+            let app_slot = (di, workload.app.clone());
             let hit = cache
                 .app_key
-                .get(&workload.app)
-                .and_then(|k| cache.by_key.get(k))
-                .cloned();
-            if let Some((p, _, cid)) = hit {
+                .get(&app_slot)
+                .and_then(|k| cache.by_key.get(k).map(|v| (k.clone(), v.clone())));
+            if let Some((key, (p, _, cid))) = hit {
+                let mut m = shared.metrics.lock().unwrap();
+                *m.plan_cache_hits.entry(key).or_insert(0) += 1;
+                drop(m);
                 (rebind(&p, job.objective), true, 0.0, 1.0, cid)
             } else {
                 let prof = profile(
-                    &ProfileRequest::new(&shared.cfg.node.gpu, &workload, DvfsMode::Uncapped)
+                    &ProfileRequest::new(&dev.spec, workload, DvfsMode::Uncapped)
                         .with_params(&shared.cfg.sim),
                 );
+                let mut reg_guard = dev.registry.lock().unwrap();
                 // Streaming admission: replay the profiling telemetry
                 // through the online classifier and stop at the early
                 // exit — the tail of the trace is profiling time a live
@@ -625,7 +801,7 @@ impl Dispatcher {
                         let cfg = OnlineConfig::new(window_samples, stable_k, job.objective);
                         let util = UtilPoint::new(prof.app_sm_util, prof.app_dram_util);
                         let mut oc = OnlineClassifier::new(
-                            &shared.refset,
+                            &dev.refset,
                             &shared.cfg.minos,
                             cfg,
                             &workload.name,
@@ -633,12 +809,12 @@ impl Dispatcher {
                             util,
                         )
                         // normalize by the profiled trace's own TDP (the
-                        // node GPU's), exactly like the batch fallback's
-                        // TargetProfile::from_profile — the refset may
-                        // have been built for a different device
+                        // node GPU's) — under transfer serving the refset
+                        // was built for a different device, and the
+                        // TDP-relative features are what carry across
                         .with_tdp(prof.trace.tdp_w)
                         .with_sample_dt(prof.trace.sample_dt_ms);
-                        if let Some(reg) = shared.class_registry.as_ref() {
+                        if let Some(reg) = reg_guard.as_ref() {
                             oc = oc.with_registry(reg);
                         }
                         oc.run_trace(&prof.trace)
@@ -656,16 +832,35 @@ impl Dispatcher {
                         let target = TargetProfile::from_profile(
                             &workload.app,
                             &prof,
-                            &shared.refset.bin_sizes,
+                            &dev.refset.bin_sizes,
                         );
-                        let mut sel = SelectOptimalFreq::new(&shared.refset, &shared.cfg.minos);
-                        if let Some(reg) = shared.class_registry.as_ref() {
+                        let mut sel = SelectOptimalFreq::new(&dev.refset, &shared.cfg.minos);
+                        if let Some(reg) = reg_guard.as_ref() {
                             sel = sel.with_registry(reg);
                         }
                         let cls = sel.classify(&target, job.objective)?;
                         (cls.plan, cls.class_id, 1.0, false)
                     }
                 };
+                // Transfer-then-absorb: a target classified against a
+                // borrowed (primary-device) reference set joins that
+                // registry's class structure so future same-class apps
+                // on this device share its plan.
+                if !dev.native {
+                    if let Some(reg) = reg_guard.as_mut() {
+                        if reg.class_of(&workload.name).is_none() {
+                            let target = TargetProfile::from_profile(
+                                &workload.app,
+                                &prof,
+                                &dev.refset.bin_sizes,
+                            );
+                            if reg.absorb(&dev.refset, &target).is_ok() {
+                                shared.metrics.lock().unwrap().transfer_absorbs += 1;
+                            }
+                        }
+                    }
+                }
+                drop(reg_guard);
                 let used_s = prof.profiling_cost_s * fraction;
                 {
                     let mut m = shared.metrics.lock().unwrap();
@@ -679,19 +874,23 @@ impl Dispatcher {
                     // (§7.1.3), plus the streamed-away tail of the one
                     // profile that did run.
                     m.profiling_saved_s += prof.profiling_cost_s
-                        * shared.cfg.node.gpu.sweep_frequencies().len() as f64
+                        * dev.spec.sweep_frequencies().len() as f64
                         - used_s;
                 }
-                // Class-keyed plan cache: a profiled app whose class
-                // already has a plan (installed by a *different* app)
-                // shares it instead of installing its own.
+                // (device, class)-keyed plan cache: a profiled app whose
+                // class already has a plan on this device (installed by
+                // a *different* app) shares it instead of installing its
+                // own.
                 let key = match fresh_class {
-                    Some(cid) => format!("class:{cid}"),
-                    None => format!("app:{}", workload.app),
+                    Some(cid) => format!("dev:{}|class:{cid}", dev.profile.key),
+                    None => format!("dev:{}|app:{}", dev.profile.key, workload.app),
                 };
                 let plan = match cache.by_key.get(&key) {
                     Some((p, _, _)) => {
-                        shared.metrics.lock().unwrap().class_plan_shares += 1;
+                        let mut m = shared.metrics.lock().unwrap();
+                        m.class_plan_shares += 1;
+                        *m.plan_cache_hits.entry(key.clone()).or_insert(0) += 1;
+                        drop(m);
                         rebind(p, job.objective)
                     }
                     None => {
@@ -701,24 +900,31 @@ impl Dispatcher {
                         fresh_plan
                     }
                 };
-                cache.app_key.insert(workload.app.clone(), key);
+                cache.app_key.insert(app_slot, key);
                 (plan, false, used_s, fraction, fresh_class)
             }
         };
-        if cached {
-            shared.metrics.lock().unwrap().cache_hits += 1;
-        }
-        // Predicted p90 watts at the chosen cap (power neighbor's value).
-        let predicted_p90_w = shared
+        // The plan's caps live in the serving refset's frequency domain;
+        // on a transfer-served device they map onto this device's sweep
+        // grid by frequency fraction.  Predicted p90 watts re-anchor on
+        // this device's TDP either way (the neighbor's curve is
+        // TDP-relative).
+        let (cap_mhz, transferred) = if dev.native {
+            (plan.f_cap_mhz, false)
+        } else {
+            (
+                transfer::map_cap(plan.f_cap_mhz, &dev.refset.spec, &dev.spec),
+                true,
+            )
+        };
+        let predicted_p90_w = dev
             .refset
             .by_name(&plan.pwr_neighbor)
             .and_then(|e| e.scaling.at(plan.f_cap_mhz))
-            .map(|p| p.p90_rel * shared.cfg.node.gpu.tdp_w)
-            .unwrap_or(shared.cfg.node.gpu.tdp_w);
-        Some(Admitted {
-            job,
-            workload,
-            cap_mhz: plan.f_cap_mhz,
+            .map(|p| p.p90_rel * dev.spec.tdp_w)
+            .unwrap_or(dev.spec.tdp_w);
+        Some(DevicePlan {
+            cap_mhz,
             pwr_neighbor: plan.pwr_neighbor,
             util_neighbor: plan.util_neighbor,
             class_id,
@@ -726,26 +932,28 @@ impl Dispatcher {
             cached,
             profiling_cost_s: cost_s,
             profile_fraction: fraction,
-            waited: false,
+            transferred,
         })
     }
 
     /// Place pending jobs (FIFO, no overtaking) while the head fits on
-    /// some node.
+    /// some node whose device the head has a plan for.
     fn try_place(&mut self) {
         loop {
             let Some(head) = self.pending.front() else {
                 break;
             };
-            let p90 = head.predicted_p90_w;
-            let budget = self.shared.cfg.node.power_budget_w;
             let mut best: Option<(usize, f64)> = None; // (node, headroom)
             for (i, n) in self.nodes.iter().enumerate() {
                 if n.free.is_empty() {
                     continue;
                 }
-                let admissible =
-                    n.resident.is_empty() || n.ledger_w + p90 <= budget + 1e-9;
+                let Some(plan) = &head.plans[self.shared.node_device[i]] else {
+                    continue; // incompatible device for this job
+                };
+                let budget = self.shared.node_specs[i].power_budget_w;
+                let admissible = n.resident.is_empty()
+                    || n.ledger_w + plan.predicted_p90_w <= budget + 1e-9;
                 if !admissible {
                     continue;
                 }
@@ -778,30 +986,41 @@ impl Dispatcher {
 
     /// Debit the ledger, hand out a GPU slot, and start execution.
     fn place(&mut self, adm: Admitted, ni: usize) {
+        let di = self.shared.node_device[ni];
+        let plan = adm.plans[di]
+            .clone()
+            .expect("try_place only selects nodes the job has a plan for");
         let gpu = self.nodes[ni].free.remove(0); // lowest free device id
         {
             let node = &mut self.nodes[ni];
-            node.ledger_w += adm.predicted_p90_w;
+            node.ledger_w += plan.predicted_p90_w;
             node.resident.push(adm.job.id);
             let mut m = self.shared.metrics.lock().unwrap();
             m.node_peak_admitted_p90_w[ni] =
                 m.node_peak_admitted_p90_w[ni].max(node.ledger_w);
             m.peak_admitted_p90_w = m.peak_admitted_p90_w.max(node.ledger_w);
+            if plan.transferred {
+                m.transfers += 1;
+            }
         }
         let ticket = self.next_ticket;
         self.next_ticket += 1;
         let key: ExecKey = (
             adm.workload.name.clone(),
-            adm.cap_mhz.to_bits(),
+            self.shared.devices[di].profile.fingerprint,
+            plan.cap_mhz.to_bits(),
             adm.job.iterations,
         );
         // Deterministic replay: the simulated run is a pure function of
-        // (workload, cap, iterations), so a memoized repeat completes
-        // without a worker, and a duplicate of a key already computing
-        // just waits for that key's report instead of re-running it.
+        // (workload, device, cap, iterations), so a memoized repeat
+        // completes without a worker, and a duplicate of a key already
+        // computing just waits for that key's report instead of
+        // re-running it.
         let memo = self.shared.exec_cache.lock().unwrap().get(&key).cloned();
         let run = Running {
-            adm,
+            job: adm.job,
+            workload: adm.workload,
+            plan,
             ticket,
             node: ni,
             gpu,
@@ -822,19 +1041,22 @@ impl Dispatcher {
         self.replan(ni);
     }
 
-    /// Spawn the execution worker for `running[idx]`.
+    /// Spawn the execution worker for `running[idx]` on its node's
+    /// device.
     fn spawn_worker(&mut self, idx: usize) {
         self.running[idx].has_worker = true;
         let ticket = self.running[idx].ticket;
-        let w = self.running[idx].adm.workload.clone();
-        let cap = self.running[idx].adm.cap_mhz;
-        let iters = self.running[idx].adm.job.iterations;
+        let w = self.running[idx].workload.clone();
+        let cap = self.running[idx].plan.cap_mhz;
+        let iters = self.running[idx].job.iterations;
+        let key = self.running[idx].key.clone();
+        let spec = self.shared.node_specs[self.running[idx].node].gpu.clone();
         let shared = Arc::clone(&self.shared);
         let inbox = self.inbox.clone();
         let h = std::thread::spawn(move || {
             let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
                 let prof = profile(
-                    &ProfileRequest::new(&shared.cfg.node.gpu, &w, DvfsMode::Cap(cap))
+                    &ProfileRequest::new(&spec, &w, DvfsMode::Cap(cap))
                         .with_params(&shared.cfg.sim)
                         .with_iterations(iters),
                 );
@@ -848,11 +1070,7 @@ impl Dispatcher {
             }));
             let result = match res {
                 Ok(e) => {
-                    shared
-                        .exec_cache
-                        .lock()
-                        .unwrap()
-                        .insert((w.name.clone(), cap.to_bits(), iters), e.clone());
+                    shared.exec_cache.lock().unwrap().insert(key, e.clone());
                     Ok(e)
                 }
                 Err(_) => Err("execution worker panicked".to_string()),
@@ -870,8 +1088,8 @@ impl Dispatcher {
             let better = match best {
                 None => true,
                 Some(b) => {
-                    let (be, bid) = (self.running[b].v_end_ms(), self.running[b].adm.job.id);
-                    let (e, id) = (r.v_end_ms(), r.adm.job.id);
+                    let (be, bid) = (self.running[b].v_end_ms(), self.running[b].job.id);
+                    let (e, id) = (r.v_end_ms(), r.job.id);
                     e < be - 1e-12 || ((e - be).abs() <= 1e-12 && id < bid)
                 }
             };
@@ -892,33 +1110,36 @@ impl Dispatcher {
         }
         {
             let node = &mut self.nodes[r.node];
-            node.ledger_w = (node.ledger_w - r.adm.predicted_p90_w).max(0.0);
+            node.ledger_w = (node.ledger_w - r.plan.predicted_p90_w).max(0.0);
             let pos = node
                 .free
                 .binary_search(&r.gpu)
                 .expect_err("GPU slot double-free: id already in free-list");
             node.free.insert(pos, r.gpu);
-            node.resident.retain(|&id| id != r.adm.job.id);
+            node.resident.retain(|&id| id != r.job.id);
         }
         self.replan(r.node);
+        let dev = &self.shared.devices[self.shared.node_device[r.node]];
         match r.exec.expect("release_min before execution reported") {
             Ok(e) => {
                 let outcome = JobOutcome {
-                    job: r.adm.job,
+                    job: r.job,
                     node: r.node,
                     gpu: r.gpu,
-                    f_cap_mhz: r.adm.cap_mhz,
-                    pwr_neighbor: r.adm.pwr_neighbor,
-                    util_neighbor: r.adm.util_neighbor,
-                    class_id: r.adm.class_id,
-                    predicted_p90_w: r.adm.predicted_p90_w,
+                    device: dev.profile.key.clone(),
+                    f_cap_mhz: r.plan.cap_mhz,
+                    pwr_neighbor: r.plan.pwr_neighbor,
+                    util_neighbor: r.plan.util_neighbor,
+                    class_id: r.plan.class_id,
+                    transferred: r.plan.transferred,
+                    predicted_p90_w: r.plan.predicted_p90_w,
                     observed_p90_w: e.observed_p90_w,
                     observed_peak_w: e.observed_peak_w,
                     iter_time_ms: e.iter_time_ms,
                     energy_j: e.energy_j,
-                    classification_cached: r.adm.cached,
-                    profiling_cost_s: r.adm.profiling_cost_s,
-                    profile_fraction: r.adm.profile_fraction,
+                    classification_cached: r.plan.cached,
+                    profiling_cost_s: r.plan.profiling_cost_s,
+                    profile_fraction: r.plan.profile_fraction,
                     v_start_ms: r.v_start_ms,
                     v_end_ms: end,
                 };
@@ -928,7 +1149,7 @@ impl Dispatcher {
                     m.total_energy_j += outcome.energy_j;
                     if outcome.job.objective == Objective::PowerCentric
                         && outcome.observed_p90_w
-                            > self.shared.cfg.minos.power_bound_x * self.shared.cfg.node.gpu.tdp_w
+                            > self.shared.cfg.minos.power_bound_x * dev.spec.tdp_w
                     {
                         m.bound_violations += 1;
                     }
@@ -943,23 +1164,28 @@ impl Dispatcher {
     }
 
     /// Recompute the co-located cap vector for node `ni` from each
-    /// resident's power-neighbor scaling data.
+    /// resident's power-neighbor scaling data.  Transfer-served nodes
+    /// skip the re-plan: their neighbors' curves live in the source
+    /// device's frequency domain, so a co-location plan would quote
+    /// out-of-range caps.
     fn replan(&self, ni: usize) {
+        let di = self.shared.node_device[ni];
+        let dev = &self.shared.devices[di];
         let names: Vec<&str> = self
             .running
             .iter()
             .filter(|r| r.node == ni)
-            .map(|r| r.adm.pwr_neighbor.as_str())
+            .map(|r| r.plan.pwr_neighbor.as_str())
             .collect();
         let mut m = self.shared.metrics.lock().unwrap();
-        if names.is_empty() {
+        if names.is_empty() || !dev.native {
             m.node_plans[ni] = None;
             return;
         }
         if let Some(p) = nodecap::plan(
-            &self.shared.refset,
+            &dev.refset,
             &names,
-            self.shared.cfg.node.power_budget_w,
+            self.shared.node_specs[ni].power_budget_w,
             self.shared.cfg.policy,
         ) {
             m.replans += 1;
@@ -1002,6 +1228,7 @@ mod tests {
                         Objective::PerfCentric
                     },
                     iterations: 3,
+                    device: None,
                 })
                 .unwrap();
         }
@@ -1044,6 +1271,7 @@ mod tests {
                     workload: "faiss-b4096".into(),
                     objective: Objective::PowerCentric,
                     iterations: 2,
+                    device: None,
                 })
                 .unwrap();
             let o = sched.collect(1).remove(0);
@@ -1091,6 +1319,7 @@ mod tests {
                     workload: wl.to_string(),
                     objective: Objective::PowerCentric,
                     iterations: 2,
+                    device: None,
                 })
                 .unwrap();
         }
@@ -1124,6 +1353,7 @@ mod tests {
                     workload: "faiss-b4096".into(),
                     objective: Objective::PowerCentric,
                     iterations: 2,
+                    device: None,
                 })
                 .unwrap();
             let o = sched.collect(1).remove(0);
@@ -1152,6 +1382,7 @@ mod tests {
             workload: "nope".into(),
             objective: Objective::PowerCentric,
             iterations: 1,
+            device: None,
         });
         assert!(err.is_err());
         assert_eq!(sched.metrics().completed, 0);
@@ -1171,6 +1402,7 @@ mod tests {
                     workload: "faiss-b4096".into(),
                     objective: Objective::PerfCentric,
                     iterations: 2,
+                    device: None,
                 })
                 .unwrap();
         }
@@ -1225,6 +1457,7 @@ mod tests {
                     workload: "sdxl-b64".into(),
                     objective: Objective::PowerCentric,
                     iterations: 2,
+                    device: None,
                 })
                 .unwrap();
         }
@@ -1259,6 +1492,7 @@ mod tests {
                     workload: "sdxl-b64".into(),
                     objective: Objective::PowerCentric,
                     iterations: 2,
+                    device: None,
                 })
                 .unwrap();
         }

@@ -264,6 +264,7 @@ pub fn oversub(ctx: &mut ExperimentContext) -> anyhow::Result<String> {
                     Objective::PerfCentric
                 },
                 iterations: 20,
+                device: None,
             })?;
         }
         let outcomes = sched.collect(queue.len());

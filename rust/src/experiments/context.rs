@@ -1,7 +1,7 @@
-//! Shared experiment state: the (expensive) reference set, built once
-//! and cached on disk, plus the PJRT runtime.
+//! Shared experiment state: the (expensive) per-device reference sets,
+//! built once and cached on disk, plus the PJRT runtime.
 
-use crate::config::Config;
+use crate::config::{Config, DeviceProfile, GpuSpec};
 use crate::minos::reference_set::ReferenceSet;
 use crate::runtime::MinosRuntime;
 use crate::sim::dvfs::DvfsMode;
@@ -18,7 +18,10 @@ pub struct ExperimentContext {
     /// registry/sim-model fingerprint no longer matches (the checked
     /// loader rejects it and a rebuild runs otherwise).
     pub allow_stale: bool,
-    refset: Option<ReferenceSet>,
+    /// Per-device reference sets keyed by device fingerprint (the
+    /// config device plus any others requested via
+    /// [`ExperimentContext::refset_for`]).
+    refsets: HashMap<u64, ReferenceSet>,
     profile_cache: HashMap<String, Profile>,
 }
 
@@ -30,7 +33,7 @@ impl ExperimentContext {
             runtime: MinosRuntime::auto(),
             cache_path: Some(default_cache_path()),
             allow_stale: false,
-            refset: None,
+            refsets: HashMap::new(),
             profile_cache: HashMap::new(),
         }
     }
@@ -45,15 +48,40 @@ impl ExperimentContext {
         self
     }
 
-    /// The full reference set (all reference workloads, full cap sweep).
-    /// Built lazily; cached to disk when a cache path is configured.
-    /// A cache with a stale registry/sim-model fingerprint is discarded
-    /// and rebuilt unless [`allow_stale`](Self::allow_stale) is set.
+    /// The full reference set for the config device (all reference
+    /// workloads, full cap sweep).
     pub fn refset(&mut self) -> &ReferenceSet {
-        if self.refset.is_none() {
+        let spec = self.config.node.gpu.clone();
+        self.refset_for(&spec)
+    }
+
+    /// On-disk cache path for one device: the configured base path
+    /// (default, or `MINOS_CACHE`) suffixed with the device key —
+    /// **unconditionally**, so per-device caches never clobber each
+    /// other when sessions alternate `--device` (a session-relative
+    /// name would overwrite the shared base file on every switch and
+    /// force a full-sweep rebuild each time).
+    fn cache_path_for(&self, spec: &GpuSpec) -> Option<String> {
+        let base = self.cache_path.as_ref()?;
+        let key = DeviceProfile::of(spec).key;
+        Some(match base.strip_suffix(".json") {
+            Some(stem) => format!("{stem}-{key}.json"),
+            None => format!("{base}-{key}"),
+        })
+    }
+
+    /// The full reference set for an arbitrary device (the fleet /
+    /// cross-device-transfer entry point).  Built lazily per device;
+    /// cached to disk when a cache path is configured.  A cache with a
+    /// stale registry/sim-model fingerprint — or one profiled on a
+    /// different device — is discarded and rebuilt unless
+    /// [`allow_stale`](Self::allow_stale) is set.
+    pub fn refset_for(&mut self, spec: &GpuSpec) -> &ReferenceSet {
+        let fp = DeviceProfile::of(spec).fingerprint;
+        if !self.refsets.contains_key(&fp) {
             let allow_stale = self.allow_stale;
-            let loaded = self
-                .cache_path
+            let path = self.cache_path_for(spec);
+            let loaded = path
                 .as_ref()
                 .and_then(|p| {
                     if allow_stale {
@@ -68,7 +96,7 @@ impl ExperimentContext {
                     // arithmetic depends on them); the entry-count check
                     // is registry drift, which is exactly what
                     // --allow-stale opts into replaying.
-                    rs.spec == self.config.node.gpu
+                    rs.spec == *spec
                         && rs.bin_sizes == self.config.minos.bin_sizes
                         && (allow_stale
                             || rs.entries.len() == self.registry.util_reference().len())
@@ -77,13 +105,9 @@ impl ExperimentContext {
                 Some(rs) => rs,
                 None => {
                     let wls: Vec<&Workload> = self.registry.util_reference();
-                    let rs = ReferenceSet::build(
-                        &self.config.node.gpu,
-                        &self.config.sim,
-                        &self.config.minos,
-                        &wls,
-                    );
-                    if let Some(p) = &self.cache_path {
+                    let rs =
+                        ReferenceSet::build(spec, &self.config.sim, &self.config.minos, &wls);
+                    if let Some(p) = &path {
                         let _ = std::fs::create_dir_all(
                             std::path::Path::new(p).parent().unwrap_or(std::path::Path::new(".")),
                         );
@@ -92,9 +116,9 @@ impl ExperimentContext {
                     rs
                 }
             };
-            self.refset = Some(rs);
+            self.refsets.insert(fp, rs);
         }
-        self.refset.as_ref().unwrap()
+        &self.refsets[&fp]
     }
 
     /// Profile one workload at one mode, memoized.

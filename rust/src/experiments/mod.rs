@@ -4,7 +4,7 @@
 //! substrate.
 //!
 //! ids: fig1 fig2 fig3 fig4 fig5 fig6 fig7 fig8 fig9 fig10 fig11 fig12
-//!      table1 table2 headline streaming all
+//!      table1 table2 headline streaming transfer all
 
 pub mod ablation;
 pub mod capping;
@@ -14,6 +14,7 @@ pub mod context;
 pub mod holdout;
 pub mod streaming;
 pub mod traces;
+pub mod transfer;
 
 pub use context::ExperimentContext;
 
@@ -53,6 +54,7 @@ pub fn run(ctx: &mut ExperimentContext, id: &str) -> anyhow::Result<String> {
         "fig12" => holdout::fig12(ctx),
         "headline" => casestudy::headline(ctx),
         "streaming" => streaming::streaming(ctx),
+        "transfer" => transfer::transfer(ctx),
         "ablation-metric" => ablation::metric(ctx),
         "ablation-linkage" => ablation::linkage(ctx),
         "ablation-pin" => ablation::pin(ctx),

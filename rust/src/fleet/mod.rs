@@ -1,0 +1,143 @@
+//! Device-aware fleet layer: per-device reference sets and class
+//! registries, plus cross-device class transfer.
+//!
+//! The paper profiles on *two* clusters (8×MI300X HPC Fund nodes and
+//! 3×A100 Lonestar6 nodes, §5.1), and its headline use case — serving
+//! capping decisions for unseen workloads with ~89% less profiling —
+//! only pays off at fleet scale, where a class learned on one device
+//! family must transfer to another.  "Not All GPUs Are Created Equal"
+//! shows per-device variability makes that non-trivial, so device
+//! identity is a first-class axis here:
+//!
+//! * [`FleetStore`] maps [`DeviceProfile`] → (native [`ReferenceSet`],
+//!   [`ClassRegistry`]), in deterministic insertion order; the first
+//!   entry is the *primary* device that transfer-serving falls back to.
+//! * [`transfer`] maps class artifacts across devices by normalizing
+//!   the frequency axis to `f/f_max` and power to TDP-relative units,
+//!   optionally re-anchored by a short calibration sweep (k ≪ the full
+//!   sweep — the §7.1.3 savings story, across devices), and reports a
+//!   per-class transfer confidence.
+//!
+//! Consumers: the heterogeneous coordinator
+//! ([`crate::coordinator::PowerAwareScheduler::with_fleet`]), the
+//! `minos fleet` CLI, and `minos experiment transfer`.
+
+pub mod transfer;
+
+use crate::config::{DeviceProfile, MinosParams};
+use crate::minos::reference_set::ReferenceSet;
+use crate::registry::ClassRegistry;
+
+/// One device's native serving artifacts.
+#[derive(Debug, Clone)]
+pub struct FleetEntry {
+    pub device: DeviceProfile,
+    pub refset: ReferenceSet,
+    /// Class-first index over `refset`; None when the reference set is
+    /// too small to cluster (< 2 power entries) — classification then
+    /// degrades to the flat scan, same policy as the scheduler.
+    pub registry: Option<ClassRegistry>,
+}
+
+/// Device → native artifacts, in deterministic insertion order.
+#[derive(Debug, Clone, Default)]
+pub struct FleetStore {
+    entries: Vec<FleetEntry>,
+}
+
+impl FleetStore {
+    pub fn new() -> Self {
+        FleetStore { entries: Vec::new() }
+    }
+
+    /// Register one device's native reference set, building its class
+    /// registry.  Errors on a duplicate device; a reference set too
+    /// small to cluster registers with `registry: None` (flat serving).
+    pub fn add(&mut self, refset: ReferenceSet, params: &MinosParams) -> anyhow::Result<&FleetEntry> {
+        let device = refset.device();
+        anyhow::ensure!(
+            self.get(device.fingerprint).is_none(),
+            "fleet store already holds device '{}' ({:016x})",
+            device.name,
+            device.fingerprint
+        );
+        let registry = ClassRegistry::build(&refset, params).ok();
+        self.entries.push(FleetEntry {
+            device,
+            refset,
+            registry,
+        });
+        Ok(self.entries.last().expect("just pushed"))
+    }
+
+    /// The primary device: the first registered entry, which
+    /// transfer-serving uses as the class source for devices with no
+    /// native reference set.
+    pub fn primary(&self) -> Option<&FleetEntry> {
+        self.entries.first()
+    }
+
+    pub fn get(&self, fingerprint: u64) -> Option<&FleetEntry> {
+        self.entries.iter().find(|e| e.device.fingerprint == fingerprint)
+    }
+
+    /// Lookup by device selector ("mi300x", "a100", full key/name) —
+    /// family-prefix matching, first match wins in insertion order.
+    pub fn get_key(&self, selector: &str) -> Option<&FleetEntry> {
+        self.entries.iter().find(|e| e.device.matches(selector))
+    }
+
+    pub fn entries(&self) -> &[FleetEntry] {
+        &self.entries
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn devices(&self) -> Vec<&DeviceProfile> {
+        self.entries.iter().map(|e| &e.device).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{GpuSpec, SimParams};
+    use crate::workloads;
+
+    fn small_refset(spec: &GpuSpec) -> ReferenceSet {
+        let reg = workloads::registry();
+        let picks: Vec<&workloads::Workload> = ["sgemm", "milc-6", "sdxl-b64"]
+            .iter()
+            .map(|n| reg.by_name(n).unwrap())
+            .collect();
+        ReferenceSet::build(spec, &SimParams::default(), &MinosParams::default(), &picks)
+    }
+
+    #[test]
+    fn store_routes_by_device_and_rejects_duplicates() {
+        let params = MinosParams::default();
+        let mut store = FleetStore::new();
+        store.add(small_refset(&GpuSpec::mi300x()), &params).unwrap();
+        store.add(small_refset(&GpuSpec::a100_pcie()), &params).unwrap();
+        assert_eq!(store.len(), 2);
+        assert_eq!(store.primary().unwrap().device.key, "mi300x");
+        assert_eq!(store.get_key("a100").unwrap().device.key, "a100-pcie-40gb");
+        assert_eq!(store.get_key("mi300x").unwrap().refset.spec, GpuSpec::mi300x());
+        assert!(store.get_key("h100").is_none());
+        // both registries built and device-tagged
+        for e in store.entries() {
+            let reg = e.registry.as_ref().expect("3 power entries cluster fine");
+            assert_eq!(reg.device.fingerprint, e.device.fingerprint);
+            assert!(reg.matches(&e.refset));
+        }
+        // duplicate device is an error
+        let err = store.add(small_refset(&GpuSpec::mi300x()), &params).unwrap_err();
+        assert!(err.to_string().contains("already holds"), "{err}");
+    }
+}

@@ -1,0 +1,571 @@
+//! Cross-device class transfer: reuse frequency-scaling knowledge
+//! learned on one device family to pick caps on another, without
+//! re-profiling the full sweep there.
+//!
+//! The normalization rests on what the Minos features already are:
+//! spike vectors are TDP-relative (`r = P/TDP`), so they compare across
+//! devices as-is; the frequency axis does not — a 1500 MHz cap means
+//! "71% of boost" on MI300X and "above boost" on A100.  Transfer
+//! therefore maps every scaling proxy through `φ = f / f_max`:
+//!
+//! * power percentiles (`×TDP`) carry over unchanged at equal φ,
+//! * `mean_w` is rescaled by the TDP ratio,
+//! * iteration time is reduced to the *slowdown curve* (uncapped = 1.0),
+//!   which is the only thing the PerfCentric scan ever consumes,
+//! * caps map as `snap(φ · f_max_dst)` onto the target's sweep grid, so
+//!   a transferred cap is always inside the target's valid range.
+//!
+//! An optional short **calibration sweep** (k points, k ≪ the full
+//! sweep — the §7.1.3 savings story applied across devices) re-anchors
+//! the transferred curve against real target-device observations and
+//! yields a per-class transfer **confidence** in [0, 1] from the
+//! post-anchor residuals; without calibration the confidence is pinned
+//! at the conservative [`UNCALIBRATED_CONFIDENCE`] prior.
+
+use crate::config::{DeviceProfile, GpuSpec, MinosParams, SimParams};
+use crate::fleet::FleetEntry;
+use crate::minos::algorithm::{
+    cap_perf_centric_scaling, cap_power_centric_scaling, Objective, SelectOptimalFreq,
+    TargetProfile,
+};
+use crate::minos::reference_set::{FreqPoint, ReferenceSet, ScalingData};
+use crate::registry::MinosClass;
+use crate::sim::dvfs::DvfsMode;
+use crate::sim::profiler::{profile, ProfileRequest};
+use crate::util::fnv::Fnv1a;
+use crate::workloads::Workload;
+
+/// Default calibration sweep length — k ≪ the 9-point full sweep.
+pub const DEFAULT_CALIBRATION_POINTS: usize = 3;
+
+/// Confidence prior for a transfer that was never checked against the
+/// target device.
+pub const UNCALIBRATED_CONFIDENCE: f64 = 0.5;
+
+/// Map a cap from the source device's frequency domain onto the target
+/// device's sweep grid via `φ = f / f_max` (nearest grid point, ties to
+/// the lower one).  The result is always a valid target sweep frequency.
+pub fn map_cap(cap_src_mhz: f64, src: &GpuSpec, dst: &GpuSpec) -> f64 {
+    let phi = (cap_src_mhz / src.f_max_mhz).clamp(0.0, 1.0);
+    let want = phi * dst.f_max_mhz;
+    let grid = dst.sweep_frequencies();
+    let mut best = (grid[0], (grid[0] - want).abs());
+    for &g in &grid[1..] {
+        let d = (g - want).abs();
+        if d < best.1 - 1e-9 {
+            best = (g, d);
+        }
+    }
+    best.0
+}
+
+/// Linear interpolation of the source curve at source-domain frequency
+/// `f` (clamped to the grid ends).
+fn interp(points: &[FreqPoint], f: f64, get: impl Fn(&FreqPoint) -> f64) -> f64 {
+    let first = points.first().expect("non-empty scaling");
+    let last = points.last().expect("non-empty scaling");
+    if f <= first.f_mhz {
+        return get(first);
+    }
+    if f >= last.f_mhz {
+        return get(last);
+    }
+    let hi = points.partition_point(|p| p.f_mhz < f);
+    let (a, b) = (&points[hi - 1], &points[hi]);
+    let t = (f - a.f_mhz) / (b.f_mhz - a.f_mhz);
+    get(a) + t * (get(b) - get(a))
+}
+
+/// Map a source-device [`ScalingData`] onto the target device's sweep
+/// grid (see the module docs for the unit conventions).  Transferred
+/// points carry `profiling_cost_s = 0` — nothing was profiled on the
+/// target — which is exactly what makes the calibration-vs-full-sweep
+/// savings accounting honest.
+pub fn map_scaling(src_sd: &ScalingData, src: &GpuSpec, dst: &GpuSpec) -> ScalingData {
+    let base_iter = src_sd.uncapped().iter_time_ms;
+    let points = dst
+        .sweep_frequencies()
+        .into_iter()
+        .map(|g| {
+            let phi = g / dst.f_max_mhz;
+            let f_src = phi * src.f_max_mhz;
+            FreqPoint {
+                f_mhz: g,
+                p50_rel: interp(&src_sd.points, f_src, |p| p.p50_rel),
+                p90_rel: interp(&src_sd.points, f_src, |p| p.p90_rel),
+                p95_rel: interp(&src_sd.points, f_src, |p| p.p95_rel),
+                p99_rel: interp(&src_sd.points, f_src, |p| p.p99_rel),
+                peak_rel: interp(&src_sd.points, f_src, |p| p.peak_rel),
+                mean_w: interp(&src_sd.points, f_src, |p| p.mean_w) / src.tdp_w * dst.tdp_w,
+                // normalized slowdown curve: uncapped = 1.0
+                iter_time_ms: interp(&src_sd.points, f_src, |p| p.iter_time_ms) / base_iter,
+                frac_above_tdp: interp(&src_sd.points, f_src, |p| p.frac_above_tdp),
+                profiling_cost_s: 0.0,
+            }
+        })
+        .collect();
+    ScalingData::new(points)
+}
+
+/// A transferred scaling proxy, optionally re-anchored on the target.
+#[derive(Debug, Clone)]
+pub struct TransferredScaling {
+    /// On the target sweep grid; power fields ×TDP, `iter_time_ms`
+    /// normalized to uncapped = 1.0.
+    pub scaling: ScalingData,
+    /// Transfer confidence in [0, 1]: 1 − mean post-anchor p90 residual
+    /// at the calibration points, or [`UNCALIBRATED_CONFIDENCE`] when
+    /// no calibration ran.
+    pub confidence: f64,
+    /// Calibration points actually profiled on the target device.
+    pub calibration_points: usize,
+    /// Simulated seconds those calibration profiles cost.
+    pub calibration_cost_s: f64,
+}
+
+/// Re-anchor a mapped curve with a k-point calibration sweep of
+/// `workload` on the target device.  `k = 0` skips profiling entirely
+/// and returns the prior confidence.  The anchor is multiplicative: one
+/// power factor (mean observed/predicted p90 over the calibrated
+/// points, clamped to [0.5, 2.0]) applied to every power field, and one
+/// slowdown factor applied to the degradation `iter_norm − 1`.
+pub fn calibrate(
+    mapped: ScalingData,
+    workload: &Workload,
+    dst: &GpuSpec,
+    sim: &SimParams,
+    k: usize,
+) -> TransferredScaling {
+    let n = mapped.points.len();
+    let k = k.min(n);
+    if k == 0 {
+        return TransferredScaling {
+            scaling: mapped,
+            confidence: UNCALIBRATED_CONFIDENCE,
+            calibration_points: 0,
+            calibration_cost_s: 0.0,
+        };
+    }
+    // Evenly spaced indices including both ends (k == 1 ⇒ uncapped only).
+    let mut idxs: Vec<usize> = if k == 1 {
+        vec![n - 1]
+    } else {
+        (0..k)
+            .map(|j| ((j as f64) * (n - 1) as f64 / (k - 1) as f64).round() as usize)
+            .collect()
+    };
+    idxs.dedup();
+
+    // Profile the workload at the chosen target grid points.
+    let obs: Vec<(usize, f64, f64, f64)> = idxs
+        .iter()
+        .map(|&i| {
+            let f = mapped.points[i].f_mhz;
+            let p = profile(
+                &ProfileRequest::new(dst, workload, DvfsMode::sweep_point(f, dst.f_max_mhz))
+                    .with_params(sim),
+            );
+            (i, p.trace.percentile_rel(0.90), p.iter_time_ms, p.profiling_cost_s)
+        })
+        .collect();
+    let calibration_cost_s: f64 = obs.iter().map(|o| o.3).sum();
+
+    // Power anchor: mean observed/predicted p90 ratio.
+    let ratios: Vec<f64> = obs
+        .iter()
+        .filter(|(i, q, _, _)| mapped.points[*i].p90_rel > 1e-9 && *q > 0.0)
+        .map(|(i, q, _, _)| q / mapped.points[*i].p90_rel)
+        .collect();
+    let s_p = if ratios.is_empty() {
+        1.0
+    } else {
+        (ratios.iter().sum::<f64>() / ratios.len() as f64).clamp(0.5, 2.0)
+    };
+
+    // Perf anchor: observed vs predicted slowdown, where both are
+    // meaningfully nonzero.  Needs the uncapped observation as a base —
+    // present whenever k ≥ 2 (ends included).
+    let base_obs = obs
+        .iter()
+        .find(|(i, _, _, _)| *i == n - 1)
+        .map(|(_, _, t, _)| *t);
+    let s_t = match base_obs {
+        Some(base) if base > 0.0 => {
+            let r: Vec<f64> = obs
+                .iter()
+                .filter(|(i, _, _, _)| *i != n - 1)
+                .filter_map(|(i, _, t, _)| {
+                    let pred = mapped.points[*i].iter_time_ms - 1.0;
+                    let got = t / base - 1.0;
+                    if pred > 0.02 && got > 0.0 {
+                        Some(got / pred)
+                    } else {
+                        None
+                    }
+                })
+                .collect();
+            if r.is_empty() {
+                1.0
+            } else {
+                (r.iter().sum::<f64>() / r.len() as f64).clamp(0.25, 4.0)
+            }
+        }
+        _ => 1.0,
+    };
+
+    let points = mapped
+        .points
+        .iter()
+        .map(|p| FreqPoint {
+            f_mhz: p.f_mhz,
+            p50_rel: p.p50_rel * s_p,
+            p90_rel: p.p90_rel * s_p,
+            p95_rel: p.p95_rel * s_p,
+            p99_rel: p.p99_rel * s_p,
+            peak_rel: p.peak_rel * s_p,
+            mean_w: p.mean_w * s_p,
+            iter_time_ms: 1.0 + (p.iter_time_ms - 1.0) * s_t,
+            frac_above_tdp: p.frac_above_tdp,
+            profiling_cost_s: p.profiling_cost_s,
+        })
+        .collect();
+    let scaling = ScalingData::new(points);
+
+    // Residual after anchoring → confidence.
+    let resid: Vec<f64> = obs
+        .iter()
+        .filter(|(_, q, _, _)| *q > 1e-9)
+        .map(|(i, q, _, _)| (scaling.points[*i].p90_rel - q).abs() / q)
+        .collect();
+    let confidence = if resid.is_empty() {
+        UNCALIBRATED_CONFIDENCE
+    } else {
+        (1.0 - resid.iter().sum::<f64>() / resid.len() as f64).clamp(0.0, 1.0)
+    };
+
+    TransferredScaling {
+        scaling,
+        confidence,
+        calibration_points: obs.len(),
+        calibration_cost_s,
+    }
+}
+
+/// One class transferred to another device — what `minos fleet
+/// transfer` reports per class.
+#[derive(Debug, Clone)]
+pub struct ClassTransfer {
+    pub class_id: usize,
+    pub representative: Option<String>,
+    pub members: usize,
+    pub transferred: TransferredScaling,
+    /// PowerCentric cap selected from the transferred curve (MHz, on
+    /// the target grid) and its predicted quantile (×TDP).
+    pub cap_power_mhz: f64,
+    pub predicted_q_rel: f64,
+}
+
+/// Transfer one class's scaling proxy from a fleet entry to `dst`,
+/// calibrating with the class representative when it exists in the
+/// workload registry.  Returns None for an absorbed-only class (no
+/// scaling proxy to transfer).
+pub fn transfer_class(
+    src: &FleetEntry,
+    class: &MinosClass,
+    dst: &GpuSpec,
+    params: &MinosParams,
+    sim: &SimParams,
+    k: usize,
+) -> Option<ClassTransfer> {
+    let sd = class.scaling.as_ref()?;
+    let mapped = map_scaling(sd, &src.refset.spec, dst);
+    let rep = class
+        .representative
+        .as_ref()
+        .and_then(|r| crate::workloads::registry().by_name(r).cloned());
+    let transferred = match rep {
+        Some(w) => calibrate(mapped, &w, dst, sim, k),
+        // no representative to calibrate with (absorbed-only members):
+        // ship the mapped curve at the prior confidence
+        None => TransferredScaling {
+            scaling: mapped,
+            confidence: UNCALIBRATED_CONFIDENCE,
+            calibration_points: 0,
+            calibration_cost_s: 0.0,
+        },
+    };
+    let (cap, q) = cap_power_centric_scaling(
+        &transferred.scaling,
+        params.power_quantile,
+        params.power_bound_x,
+    );
+    Some(ClassTransfer {
+        class_id: class.id,
+        representative: class.representative.clone(),
+        members: class.members.len(),
+        transferred,
+        cap_power_mhz: cap,
+        predicted_q_rel: q,
+    })
+}
+
+/// Leave-one-device-out evaluation record for one workload: the
+/// transferred decision vs the natively profiled one, with §7.1.3-style
+/// profiling-cost accounting (calibration sweep vs full sweep).
+#[derive(Debug, Clone)]
+pub struct TransferOutcome {
+    pub workload: String,
+    pub src: DeviceProfile,
+    pub dst: DeviceProfile,
+    /// Power neighbor on the source device (own app held out) whose
+    /// class scaling was transferred.
+    pub neighbor: String,
+    /// PowerCentric cap from the transferred (calibrated) curve.
+    pub cap_transfer_mhz: f64,
+    /// PowerCentric cap from native target-device classification.
+    pub cap_native_mhz: f64,
+    /// PerfCentric cap from the transferred curve (floor on the target).
+    pub perf_cap_transfer_mhz: f64,
+    /// Transferred curve's predicted quantile at its cap (×TDP).
+    pub predicted_q_rel: f64,
+    /// Ground truth (the workload's own native target sweep) at the two
+    /// caps (×TDP).
+    pub observed_q_transfer: f64,
+    pub observed_q_native: f64,
+    pub confidence: f64,
+    pub calibration_points: usize,
+    pub calibration_cost_s: f64,
+    /// What the full native sweep on the target cost — the denominator
+    /// of the savings.
+    pub full_sweep_cost_s: f64,
+}
+
+impl TransferOutcome {
+    /// Profiling saved by calibrating instead of sweeping (fraction).
+    pub fn savings_frac(&self) -> f64 {
+        if self.full_sweep_cost_s <= 0.0 {
+            return 0.0;
+        }
+        (1.0 - self.calibration_cost_s / self.full_sweep_cost_s).clamp(0.0, 1.0)
+    }
+}
+
+/// The leave-one-device-out core: treat `name` as unseen on the target
+/// device, classify it on the source (its own app held out, §7.2
+/// style), transfer the winning neighbor's scaling to the target with a
+/// k-point calibration, and score the transferred caps against the
+/// workload's native target-device sweep.
+pub fn transfer_workload(
+    rs_src: &ReferenceSet,
+    rs_dst: &ReferenceSet,
+    params: &MinosParams,
+    sim: &SimParams,
+    name: &str,
+    calibration_k: usize,
+) -> anyhow::Result<TransferOutcome> {
+    let entry_src = rs_src
+        .by_name(name)
+        .ok_or_else(|| anyhow::anyhow!("'{name}' missing from the source reference set"))?;
+    let entry_dst = rs_dst
+        .by_name(name)
+        .ok_or_else(|| anyhow::anyhow!("'{name}' missing from the target reference set"))?;
+    let w = crate::workloads::registry()
+        .by_name(name)
+        .ok_or_else(|| anyhow::anyhow!("unknown workload {name}"))?
+        .clone();
+
+    // Source-side classification, own app held out.
+    let target = TargetProfile::from_entry(entry_src);
+    let cut_src = rs_src.without_app(&entry_src.app);
+    let sel = SelectOptimalFreq::new(&cut_src, params);
+    let cls = sel
+        .classify(&target, Objective::PowerCentric)
+        .ok_or_else(|| anyhow::anyhow!("no source-device neighbor for {name}"))?;
+    let neighbor = cut_src
+        .by_name(&cls.plan.pwr_neighbor)
+        .expect("classify returned a refset entry");
+
+    // Transfer + calibrate on the target.
+    let mapped = map_scaling(&neighbor.scaling, &rs_src.spec, &rs_dst.spec);
+    let cal = calibrate(mapped, &w, &rs_dst.spec, sim, calibration_k);
+    let (cap_t, pred_q) =
+        cap_power_centric_scaling(&cal.scaling, params.power_quantile, params.power_bound_x);
+    let (perf_cap_t, _) = cap_perf_centric_scaling(
+        &cal.scaling,
+        params.perf_bound_frac,
+        params.perf_floor_mhz(rs_dst.spec.f_max_mhz),
+    );
+
+    // Native target-device decision, own app held out (the baseline the
+    // transfer is judged against).
+    let cut_dst = rs_dst.without_app(&entry_dst.app);
+    let sel_dst = SelectOptimalFreq::new(&cut_dst, params);
+    let target_dst = TargetProfile::from_entry(entry_dst);
+    let cls_dst = sel_dst
+        .classify(&target_dst, Objective::PowerCentric)
+        .ok_or_else(|| anyhow::anyhow!("no native neighbor for {name}"))?;
+    let cap_n = cls_dst.plan.f_pwr_mhz;
+
+    let q = params.power_quantile;
+    let obs_at = |cap: f64| -> anyhow::Result<f64> {
+        entry_dst
+            .scaling
+            .at(cap)
+            .map(|p| p.quantile_rel(q))
+            .ok_or_else(|| anyhow::anyhow!("{name}: no native scaling point at {cap} MHz"))
+    };
+    Ok(TransferOutcome {
+        workload: name.to_string(),
+        src: rs_src.device(),
+        dst: rs_dst.device(),
+        neighbor: cls.plan.pwr_neighbor.clone(),
+        cap_transfer_mhz: cap_t,
+        cap_native_mhz: cap_n,
+        perf_cap_transfer_mhz: perf_cap_t,
+        predicted_q_rel: pred_q,
+        observed_q_transfer: obs_at(cap_t)?,
+        observed_q_native: obs_at(cap_n)?,
+        confidence: cal.confidence,
+        calibration_points: cal.calibration_points,
+        calibration_cost_s: cal.calibration_cost_s,
+        full_sweep_cost_s: entry_dst.scaling.total_cost_s(),
+    })
+}
+
+/// FNV-1a fingerprint over the decision-bearing fields of a transfer
+/// run — the CI smoke asserts it is identical across reruns.
+pub fn decisions_digest(outcomes: &[TransferOutcome]) -> u64 {
+    let mut h = Fnv1a::new();
+    for o in outcomes {
+        h.eat(
+            format!(
+                "{}|{}>{}|{}|{:.1}|{:.1}|{:.1}|{:.6}|{}\n",
+                o.workload,
+                o.src.key,
+                o.dst.key,
+                o.neighbor,
+                o.cap_transfer_mhz,
+                o.cap_native_mhz,
+                o.perf_cap_transfer_mhz,
+                o.confidence,
+                o.calibration_points
+            )
+            .as_bytes(),
+        );
+    }
+    h.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GpuSpec;
+
+    fn sd(points: &[(f64, f64, f64)]) -> ScalingData {
+        ScalingData::new(
+            points
+                .iter()
+                .map(|&(f, p90, it)| FreqPoint {
+                    f_mhz: f,
+                    p50_rel: p90 - 0.2,
+                    p90_rel: p90,
+                    p95_rel: p90 + 0.05,
+                    p99_rel: p90 + 0.1,
+                    peak_rel: p90 + 0.2,
+                    mean_w: 600.0,
+                    iter_time_ms: it,
+                    frac_above_tdp: 0.1,
+                    profiling_cost_s: 1.0,
+                })
+                .collect(),
+        )
+    }
+
+    #[test]
+    fn map_cap_preserves_the_frequency_fraction() {
+        let mi = GpuSpec::mi300x();
+        let a = GpuSpec::a100_pcie();
+        // boost maps to boost
+        assert_eq!(map_cap(2100.0, &mi, &a), 1410.0);
+        assert_eq!(map_cap(1410.0, &a, &mi), 2100.0);
+        // the bottom of the sweep maps near the bottom of the sweep
+        let low = map_cap(1300.0, &mi, &a);
+        let grid = a.sweep_frequencies();
+        assert!(grid.contains(&low), "{low} not on the A100 grid {grid:?}");
+        assert!((low / a.f_max_mhz - 1300.0 / 2100.0).abs() < 0.05);
+        // every mapped cap is a valid target sweep point
+        for &f in &mi.sweep_frequencies() {
+            let m = map_cap(f, &mi, &a);
+            assert!(grid.contains(&m), "{f} -> {m} off-grid");
+        }
+    }
+
+    #[test]
+    fn map_scaling_is_tdp_relative_and_normalized() {
+        let mi = GpuSpec::mi300x();
+        let a = GpuSpec::a100_pcie();
+        let src = sd(&[(1300.0, 0.9, 4.0), (1700.0, 1.1, 3.0), (2100.0, 1.3, 2.0)]);
+        let out = map_scaling(&src, &mi, &a);
+        assert_eq!(out.points.len(), a.sweep_frequencies().len());
+        // grid is the target sweep
+        assert_eq!(out.frequencies(), a.sweep_frequencies());
+        // uncapped: same φ=1 → same relative power, slowdown 1.0
+        let top = out.uncapped();
+        assert!((top.p90_rel - 1.3).abs() < 1e-9);
+        assert!((top.iter_time_ms - 1.0).abs() < 1e-12);
+        // mean W rescaled by the TDP ratio
+        assert!((top.mean_w - 600.0 / 750.0 * 250.0).abs() < 1e-9);
+        // monotone source curve stays monotone after interpolation
+        for w in out.points.windows(2) {
+            assert!(w[0].p90_rel <= w[1].p90_rel + 1e-9);
+            assert!(w[0].iter_time_ms >= w[1].iter_time_ms - 1e-9);
+        }
+        // nothing was profiled on the target
+        assert_eq!(out.total_cost_s(), 0.0);
+    }
+
+    #[test]
+    fn uncalibrated_transfer_reports_the_prior_confidence() {
+        let mi = GpuSpec::mi300x();
+        let a = GpuSpec::a100_pcie();
+        let src = sd(&[(1300.0, 0.9, 4.0), (2100.0, 1.3, 2.0)]);
+        let mapped = map_scaling(&src, &mi, &a);
+        let w = crate::workloads::registry().by_name("sgemm").unwrap().clone();
+        let t = calibrate(mapped, &w, &a, &SimParams::default(), 0);
+        assert_eq!(t.confidence, UNCALIBRATED_CONFIDENCE);
+        assert_eq!(t.calibration_points, 0);
+        assert_eq!(t.calibration_cost_s, 0.0);
+    }
+
+    #[test]
+    fn calibration_uses_few_points_and_improves_the_anchor() {
+        let mi = GpuSpec::mi300x();
+        let a = GpuSpec::a100_pcie();
+        let sim = SimParams::default();
+        // real source curve: profile sgemm's sweep on MI300X quickly via
+        // a tiny synthetic stand-in (monotone, plausible)
+        let src = sd(&[
+            (1300.0, 0.95, 4.0),
+            (1500.0, 1.05, 3.4),
+            (1800.0, 1.2, 2.6),
+            (2100.0, 1.35, 2.0),
+        ]);
+        let mapped = map_scaling(&src, &mi, &a);
+        let w = crate::workloads::registry().by_name("sgemm").unwrap().clone();
+        let t = calibrate(mapped.clone(), &w, &a, &sim, DEFAULT_CALIBRATION_POINTS);
+        // strictly fewer profiled points than the full sweep
+        assert!(t.calibration_points > 0);
+        assert!(t.calibration_points < a.sweep_frequencies().len());
+        assert!(t.calibration_cost_s > 0.0);
+        assert!((0.0..=1.0).contains(&t.confidence));
+        // deterministic across reruns
+        let t2 = calibrate(mapped, &w, &a, &sim, DEFAULT_CALIBRATION_POINTS);
+        assert_eq!(t.confidence.to_bits(), t2.confidence.to_bits());
+        assert_eq!(t.calibration_cost_s.to_bits(), t2.calibration_cost_s.to_bits());
+        // grid + monotonicity preserved by the multiplicative anchor
+        assert_eq!(t.scaling.frequencies(), t2.scaling.frequencies());
+        for w2 in t.scaling.points.windows(2) {
+            assert!(w2[0].p90_rel <= w2[1].p90_rel + 1e-9);
+        }
+    }
+}

@@ -67,6 +67,7 @@ pub mod coordinator;
 pub mod exec;
 pub mod experiments;
 pub mod features;
+pub mod fleet;
 pub mod minos;
 pub mod registry;
 pub mod report;
@@ -78,6 +79,7 @@ pub mod util;
 pub mod workloads;
 
 pub use crate::minos::algorithm::{Objective, SelectOptimalFreq};
-pub use config::{GpuSpec, MinosParams, SimParams};
+pub use config::{DeviceProfile, GpuSpec, MinosParams, SimParams};
+pub use fleet::FleetStore;
 pub use registry::{ClassRegistry, SearchMode};
 pub use trace::PowerTrace;

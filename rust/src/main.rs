@@ -15,18 +15,25 @@
 //!   classify <workload>               nearest neighbors + features
 //!   select-freq <workload>            Algorithm 1, both objectives
 //!   experiment <id>                   fig1..fig12, table1, table2,
-//!                                     headline, all
-//!   serve [--queue a,b,c | --load N] [--iterations N]
-//!         [--nodes N] [--policy uniform|minos] [--budget W]
+//!                                     headline, streaming, transfer, all
+//!   serve [--queue a,b@a100,c | --load N] [--iterations N]
+//!         [--nodes N | --nodes-mixed] [--policy uniform|minos] [--budget W]
+//!   fleet <build|stats|transfer>      per-device registries + cross-device
+//!                                     class transfer
 //!   verify-artifacts                  PJRT vs native cross-check
+//!
+//! The global `--device mi300x|a100|<json>` flag points any command at a
+//! device family (reference sets, profiling, serve nodes).
 
-use minos::config::Config;
+use minos::config::{Config, GpuSpec, NodeSpec};
 use minos::coordinator::{
     outcome_digest, slot_overlaps, AdmissionMode, CapPolicy, Job, PowerAwareScheduler,
     SchedulerConfig, DEFAULT_STREAM_STABLE_K, DEFAULT_STREAM_WINDOW,
 };
 use minos::experiments::{self, ExperimentContext};
 use minos::features::UtilPoint;
+use minos::fleet::transfer::{transfer_class, DEFAULT_CALIBRATION_POINTS};
+use minos::fleet::{FleetEntry, FleetStore};
 use minos::minos::algorithm::{Objective, SelectOptimalFreq, TargetProfile};
 use minos::registry::{ClassRegistry, SearchMode, CLASS_K_MAX, CLASS_K_MIN};
 use minos::report::table;
@@ -35,21 +42,24 @@ use minos::sim::dvfs::DvfsMode;
 use minos::stream::{OnlineClassifier, OnlineConfig};
 use minos::trace::import::StreamParser;
 
-const USAGE: &str = "usage: minos [--config FILE] [--jobs N] [--allow-stale] <list|profile|classify|select-freq|experiment|stream|serve|registry|verify-artifacts> [args]
+const USAGE: &str = "usage: minos [--config FILE] [--jobs N] [--allow-stale] [--device D] <list|profile|classify|select-freq|experiment|stream|serve|registry|fleet|verify-artifacts> [args]
   --jobs N: worker threads for profiling fan-outs (default: available parallelism)
   --allow-stale: accept a reference-set cache whose registry/sim-model fingerprint mismatches
+  --device D: device every command runs against — mi300x | a100 | a GpuSpec JSON file | inline JSON
   profile <workload> [--cap MHZ | --pin MHZ]     (--cap and --pin are mutually exclusive)
   classify <workload> [--early-exit] [--window N] [--stable-k K] [--search flat|class]
   select-freq <workload>
-  experiment <fig1..fig12|ablation-*|table1|table2|headline|streaming|all|ablations>
+  experiment <fig1..fig12|ablation-*|table1|table2|headline|streaming|transfer|all|ablations>
   classify-trace <power.csv> [--tdp W] [--sm PCT --dram PCT]
   stream [power.csv|-] [--follow FILE] [--tdp W] [--dt MS] [--window N | --window-ms MS]
          [--stable-k K] [--sm PCT --dram PCT] [--objective power|perf] [--exact]
          [--search flat|class]
-  serve [--queue a,b,c | --load N] [--iterations N] [--nodes N]
+  serve [--queue a,b@a100,c@mi300x | --load N] [--iterations N] [--nodes N] [--nodes-mixed]
         [--policy uniform|minos] [--admission stream|batch] [--budget W]
-        [--search flat|class]
-  registry <build|inspect|stats|absorb <workload>> [--file SNAPSHOT.json] [--out FILE]";
+        [--search flat|class]    (queue entries pin devices with wl@device)
+  registry <build|inspect|stats|absorb <workload>> [--file SNAPSHOT.json] [--out FILE]
+  fleet <build|stats> [--devices mi300x,a100] [--out DIR]
+  fleet transfer [--from mi300x] [--to a100] [--calib K]";
 
 struct Args {
     items: Vec<String>,
@@ -178,10 +188,26 @@ fn main() -> anyhow::Result<()> {
     let mut args = Args {
         items: std::env::args().skip(1).collect(),
     };
-    let config = match args.flag("--config") {
+    let mut config = match args.flag("--config") {
         Some(p) => Config::from_file(&p)?,
         None => Config::default(),
     };
+    // Global device selector: swaps the node spec every command runs
+    // against (reference sets, profiling, serve nodes) for the named
+    // device family, with its canonical node shape (§5.1 topology).
+    // A config that already names per-node devices (`cluster`) would
+    // silently win over it in `serve`, so the combination is a hard
+    // error rather than a quiet no-op.
+    let device_selected = args.flag("--device");
+    if let Some(d) = &device_selected {
+        anyhow::ensure!(!d.is_empty(), "--device expects a selector (mi300x|a100|JSON)");
+        anyhow::ensure!(
+            config.cluster.is_none(),
+            "--device conflicts with the config's per-node `cluster` list — edit the \
+             cluster entries instead"
+        );
+        config.node = NodeSpec::for_gpu(GpuSpec::parse_selector(d)?);
+    }
     if let Some(v) = args.flag("--jobs") {
         let n: usize = v
             .parse()
@@ -724,7 +750,17 @@ fn main() -> anyhow::Result<()> {
             );
             let iterations = parse_flag::<usize>(&mut args, "--iterations")?.unwrap_or(3);
             anyhow::ensure!(iterations > 0, "--iterations must be >= 1");
-            let nodes = parse_flag::<usize>(&mut args, "--nodes")?.unwrap_or(config.nodes);
+            let nodes_mixed = args.has("--nodes-mixed");
+            anyhow::ensure!(
+                !(nodes_mixed && device_selected.is_some()),
+                "--device conflicts with --nodes-mixed (the mixed layout names its own \
+                 devices)"
+            );
+            let nodes = parse_flag::<usize>(&mut args, "--nodes")?.unwrap_or(if nodes_mixed {
+                2
+            } else {
+                config.nodes
+            });
             anyhow::ensure!(nodes >= 1, "--nodes must be >= 1");
             let budget = parse_flag::<f64>(&mut args, "--budget")?;
             let policy = match args.flag("--policy") {
@@ -740,37 +776,95 @@ fn main() -> anyhow::Result<()> {
                 })?,
             };
             let search = parse_search(&mut args)?;
-            let list: Vec<String> = match (queue_flag, load) {
+            // Queue entries optionally pin a device family: "wl@a100".
+            let parse_entry = |e: &str| -> (String, Option<String>) {
+                match e.split_once('@') {
+                    Some((wl, dev)) if !dev.trim().is_empty() => {
+                        (wl.trim().to_string(), Some(dev.trim().to_string()))
+                    }
+                    _ => (e.trim().to_string(), None),
+                }
+            };
+            let list: Vec<(String, Option<String>)> = match (queue_flag, load) {
                 (Some(q), _) => q
                     .split(',')
-                    .map(|s| s.trim().to_string())
-                    .filter(|s| !s.is_empty())
+                    .map(parse_entry)
+                    .filter(|(wl, _)| !wl.is_empty())
                     .collect(),
-                (None, Some(n)) => generated_queue(n),
-                (None, None) => generated_queue(4),
+                (None, Some(n)) => generated_queue(n).into_iter().map(|w| (w, None)).collect(),
+                (None, None) => generated_queue(4).into_iter().map(|w| (w, None)).collect(),
             };
             anyhow::ensure!(!list.is_empty(), "serve: empty job queue");
-            let mut ctx = ExperimentContext::new(config.clone()).with_allow_stale(allow_stale);
-            let refset = ctx.refset().clone();
+            // Cluster layout: `--nodes-mixed` alternates the paper's two
+            // node types; else an explicit config `cluster` list; else
+            // `nodes` copies of the config node.
+            let cluster: Option<Vec<NodeSpec>> = if nodes_mixed {
+                let n = nodes.max(2);
+                Some(
+                    (0..n)
+                        .map(|i| {
+                            if i % 2 == 0 {
+                                NodeSpec::hpc_fund()
+                            } else {
+                                NodeSpec::lonestar6()
+                            }
+                        })
+                        .collect(),
+                )
+            } else {
+                config.cluster.clone()
+            };
             let mut node = config.node.clone();
             if let Some(b) = budget {
                 anyhow::ensure!(b > 0.0, "--budget must be positive watts");
+                anyhow::ensure!(
+                    cluster.is_none(),
+                    "--budget applies to the homogeneous layout; put per-node budgets in the \
+                     config's cluster list instead"
+                );
                 node.power_budget_w = b;
             }
+            let mut ctx = ExperimentContext::new(config.clone()).with_allow_stale(allow_stale);
+            // One native reference set (and class registry) per distinct
+            // cluster device — the fleet the scheduler serves from.
+            let resolved: Vec<NodeSpec> = cluster
+                .clone()
+                .unwrap_or_else(|| vec![node.clone(); nodes]);
+            let params = config.minos.clone();
+            let mut fleet = FleetStore::new();
+            for ns in &resolved {
+                if fleet
+                    .get(minos::config::DeviceProfile::of(&ns.gpu).fingerprint)
+                    .is_none()
+                {
+                    let rs = ctx.refset_for(&ns.gpu).clone();
+                    fleet.add(rs, &params)?;
+                }
+            }
+            let devices_label = fleet
+                .devices()
+                .iter()
+                .map(|d| d.key.clone())
+                .collect::<Vec<_>>()
+                .join("+");
             println!(
-                "serve: {} jobs on {} node(s) x {} {} | budget {:.0} W/node | policy {} | admission {} | {} search",
+                "serve: {} jobs on {} node(s) [{}] | policy {} | admission {} | {} search",
                 list.len(),
-                nodes,
-                node.gpus_per_node,
-                node.gpu.name,
-                node.power_budget_w,
+                resolved.len(),
+                resolved
+                    .iter()
+                    .map(|n| format!("{}x{} ({:.0} W)", n.gpus_per_node, n.gpu.name, n.power_budget_w))
+                    .collect::<Vec<_>>()
+                    .join(", "),
                 policy.label(),
                 admission.label(),
                 search.label()
             );
+            println!("fleet: {devices_label}");
             let cfg = SchedulerConfig {
                 node,
                 nodes,
+                cluster,
                 policy,
                 admission,
                 search,
@@ -778,13 +872,14 @@ fn main() -> anyhow::Result<()> {
                 minos: config.minos.clone(),
                 sim_ms_per_wall_ms: 0.0,
             };
-            let sched = PowerAwareScheduler::new(cfg, refset);
-            for (i, wl) in list.iter().enumerate() {
+            let sched = PowerAwareScheduler::with_fleet(cfg, fleet);
+            for (i, (wl, dev)) in list.iter().enumerate() {
                 sched.submit(Job {
                     id: i as u64,
                     workload: wl.to_string(),
                     objective: default_objective(wl),
                     iterations,
+                    device: dev.clone(),
                 })?;
             }
             let mut outcomes = sched.collect(list.len());
@@ -792,11 +887,12 @@ fn main() -> anyhow::Result<()> {
             outcomes.sort_by_key(|o| o.job.id);
             for o in &outcomes {
                 println!(
-                    "job {:>3} {:<24} n{}/gpu{} cap {:.0} MHz cls {}  p90 {:.0} W (pred {:.0})  iter {:.1} ms  v[{:.0}..{:.0}] ms  [{}]",
+                    "job {:>3} {:<24} n{}/gpu{} {:<16} cap {:.0} MHz cls {}  p90 {:.0} W (pred {:.0})  iter {:.1} ms  v[{:.0}..{:.0}] ms  [{}{}]",
                     o.job.id,
                     o.job.workload,
                     o.node,
                     o.gpu,
+                    o.device,
                     o.f_cap_mhz,
                     o.class_id.map(|c| c.to_string()).unwrap_or_else(|| "-".into()),
                     o.observed_p90_w,
@@ -810,7 +906,8 @@ fn main() -> anyhow::Result<()> {
                         format!("profiled {:.0}% of trace", o.profile_fraction * 100.0)
                     } else {
                         "profiled".to_string()
-                    }
+                    },
+                    if o.transferred { ", transferred" } else { "" }
                 );
             }
             let overlaps = slot_overlaps(&outcomes);
@@ -825,6 +922,10 @@ fn main() -> anyhow::Result<()> {
             println!("outcome digest: {:#018x}", outcome_digest(&outcomes));
             let m = sched.metrics();
             println!("\n{}", m.summary());
+            if m.devices.len() > 1 && !m.plan_cache_hits.is_empty() {
+                println!("plan-cache hits by (device, class):");
+                print!("{}", m.plan_hits_table());
+            }
             anyhow::ensure!(overlaps == 0, "duplicate concurrent GPU assignment detected");
             anyhow::ensure!(
                 m.failed == 0 && outcomes.len() == list.len(),
@@ -942,6 +1043,143 @@ fn main() -> anyhow::Result<()> {
                      (or --file FILE to update a snapshot in place)"
                 ),
                 None => {}
+            }
+        }
+        "fleet" => {
+            // Per-device reference sets + class registries, and
+            // cross-device class transfer (README § "Fleet &
+            // cross-device transfer").
+            let sub = args.next().ok_or_else(|| anyhow::anyhow!(USAGE))?;
+            match sub.as_str() {
+                "build" | "stats" => {
+                    let devices = args
+                        .flag("--devices")
+                        .unwrap_or_else(|| "mi300x,a100".to_string());
+                    let out_dir = args.flag("--out");
+                    anyhow::ensure!(
+                        sub == "build" || out_dir.is_none(),
+                        "--out only applies to 'fleet build'"
+                    );
+                    let mut ctx =
+                        ExperimentContext::new(config.clone()).with_allow_stale(allow_stale);
+                    let params = config.minos.clone();
+                    let mut store = FleetStore::new();
+                    for sel in devices.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+                        let spec = GpuSpec::parse_selector(sel)?;
+                        let rs = ctx.refset_for(&spec).clone();
+                        store.add(rs, &params)?;
+                    }
+                    anyhow::ensure!(!store.is_empty(), "fleet: --devices selected no devices");
+                    let rows: Vec<Vec<String>> = store
+                        .entries()
+                        .iter()
+                        .map(|e| {
+                            vec![
+                                e.device.key.clone(),
+                                format!("{:016x}", e.device.fingerprint),
+                                e.refset.entries.len().to_string(),
+                                format!(
+                                    "{:.0}-{:.0} MHz",
+                                    e.refset.spec.sweep_frequencies()[0],
+                                    e.refset.spec.f_max_mhz
+                                ),
+                                e.registry
+                                    .as_ref()
+                                    .map(|r| r.len().to_string())
+                                    .unwrap_or_else(|| "-".into()),
+                                e.registry
+                                    .as_ref()
+                                    .map(|r| format!("{:#018x}", r.digest()))
+                                    .unwrap_or_else(|| "-".into()),
+                            ]
+                        })
+                        .collect();
+                    println!(
+                        "{}",
+                        table(
+                            &["device", "fingerprint", "entries", "sweep", "classes", "registry digest"],
+                            &rows
+                        )
+                    );
+                    if let Some(dir) = out_dir {
+                        std::fs::create_dir_all(&dir)?;
+                        for e in store.entries() {
+                            let rp = format!("{dir}/refset-{}.json", e.device.key);
+                            e.refset.save(&rp)?;
+                            println!("saved: {rp}");
+                            if let Some(reg) = &e.registry {
+                                let gp = format!("{dir}/registry-{}.json", e.device.key);
+                                reg.save(&gp)?;
+                                println!("saved: {gp}");
+                            }
+                        }
+                    }
+                    println!("fleet: {} device(s)", store.len());
+                }
+                "transfer" => {
+                    let from = args.flag("--from").unwrap_or_else(|| "mi300x".to_string());
+                    let to = args.flag("--to").unwrap_or_else(|| "a100".to_string());
+                    let calib = parse_flag::<usize>(&mut args, "--calib")?
+                        .unwrap_or(DEFAULT_CALIBRATION_POINTS);
+                    let src_spec = GpuSpec::parse_selector(&from)?;
+                    let dst_spec = GpuSpec::parse_selector(&to)?;
+                    anyhow::ensure!(
+                        src_spec != dst_spec,
+                        "fleet transfer: --from and --to name the same device"
+                    );
+                    let mut ctx =
+                        ExperimentContext::new(config.clone()).with_allow_stale(allow_stale);
+                    let params = config.minos.clone();
+                    let sim = config.sim.clone();
+                    let rs_src = ctx.refset_for(&src_spec).clone();
+                    let reg = ClassRegistry::build(&rs_src, &params)?;
+                    let entry = FleetEntry {
+                        device: rs_src.device(),
+                        refset: rs_src.clone(),
+                        registry: Some(reg),
+                    };
+                    let reg = entry.registry.as_ref().unwrap();
+                    println!(
+                        "transfer {} -> {} | {} classes | calibration {} point(s) vs {}-point full sweep",
+                        entry.device.key,
+                        dst_spec.device().key,
+                        reg.len(),
+                        calib,
+                        dst_spec.sweep_frequencies().len()
+                    );
+                    let mut rows = Vec::new();
+                    for class in &reg.classes {
+                        let Some(t) = transfer_class(&entry, class, &dst_spec, &params, &sim, calib)
+                        else {
+                            continue;
+                        };
+                        rows.push(vec![
+                            class.id.to_string(),
+                            class.members.len().to_string(),
+                            t.representative.clone().unwrap_or_else(|| "-".into()),
+                            format!("{:.0}", t.cap_power_mhz),
+                            format!("{:.2}", t.predicted_q_rel),
+                            format!("{:.2}", t.transferred.confidence),
+                            t.transferred.calibration_points.to_string(),
+                            format!("{:.1}", t.transferred.calibration_cost_s),
+                        ]);
+                    }
+                    println!(
+                        "{}",
+                        table(
+                            &["class", "n", "representative", "cap", "pred q", "conf", "points", "calib s"],
+                            &rows
+                        )
+                    );
+                    println!(
+                        "every transferred cap sits on the {}'s own sweep grid; confidence = 1 − \
+                         mean post-anchor p90 residual at the calibration points",
+                        dst_spec.device().key
+                    );
+                }
+                other => anyhow::bail!(
+                    "unknown fleet subcommand '{other}'; known: build|stats|transfer"
+                ),
             }
         }
         "verify-artifacts" => {

@@ -17,7 +17,7 @@
 
 use crate::config::MinosParams;
 use crate::features::{spike_vector, SpikeVector, UtilPoint};
-use crate::minos::reference_set::{ReferenceEntry, ReferenceSet};
+use crate::minos::reference_set::{ReferenceEntry, ReferenceSet, ScalingData};
 use crate::registry::ClassRegistry;
 use crate::sim::profiler::Profile;
 
@@ -248,38 +248,20 @@ impl<'a> SelectOptimalFreq<'a> {
 
     /// Same with an explicit quantile (p90/p95/p99 — Fig. 10).
     pub fn cap_power_centric_q(&self, neighbor: &ReferenceEntry, q: f64) -> (f64, f64) {
-        let bound = self.params.power_bound_x;
-        let mut pts: Vec<_> = neighbor.scaling.points.iter().collect();
-        pts.sort_by(|a, b| b.f_mhz.partial_cmp(&a.f_mhz).unwrap());
-        for p in &pts {
-            if p.quantile_rel(q) < bound {
-                return (p.f_mhz, p.quantile_rel(q));
-            }
-        }
-        let last = pts.last().unwrap();
-        (last.f_mhz, last.quantile_rel(q))
+        cap_power_centric_scaling(&neighbor.scaling, q, self.params.power_bound_x)
     }
 
     /// CapPerfCentric: lowest frequency (ascending scan) at which the
-    /// neighbor's slowdown is within the bound.
+    /// neighbor's slowdown is within the bound.  The §7.2.2 frequency
+    /// floor is device-relative: `perf_floor_mhz` of the reference
+    /// set's own `f_max` (so an A100 reference set floors near 1007 MHz
+    /// instead of inheriting MI300X's absolute 1500 MHz).
     pub fn cap_perf_centric(&self, neighbor: &ReferenceEntry) -> (f64, f64) {
-        let bound = self.params.perf_bound_frac;
-        let base = neighbor.scaling.uncapped().iter_time_ms;
-        let mut pts: Vec<_> = neighbor.scaling.points.iter().collect();
-        pts.sort_by(|a, b| a.f_mhz.partial_cmp(&b.f_mhz).unwrap());
-        for p in &pts {
-            // §7.2.2: operators impose a minimum allowable frequency to
-            // eliminate low-frequency outliers.
-            if p.f_mhz < self.params.perf_min_cap_mhz {
-                continue;
-            }
-            let degr = p.iter_time_ms / base - 1.0;
-            if degr <= bound {
-                return (p.f_mhz, degr);
-            }
-        }
-        let last = pts.last().unwrap();
-        (last.f_mhz, last.iter_time_ms / base - 1.0)
+        cap_perf_centric_scaling(
+            &neighbor.scaling,
+            self.params.perf_bound_frac,
+            self.params.perf_floor_mhz(self.refset.spec.f_max_mhz),
+        )
     }
 
     /// Main: the full Algorithm 1.
@@ -356,6 +338,44 @@ impl<'a> SelectOptimalFreq<'a> {
             class_margin,
         })
     }
+}
+
+/// The CapPowerCentric scan over any [`ScalingData`] — shared by the
+/// refset-bound [`SelectOptimalFreq::cap_power_centric_q`] and the
+/// cross-device transfer layer ([`crate::fleet::transfer`]), whose
+/// transferred class proxies are not reference entries.
+pub fn cap_power_centric_scaling(sd: &ScalingData, q: f64, bound_x: f64) -> (f64, f64) {
+    let mut pts: Vec<_> = sd.points.iter().collect();
+    pts.sort_by(|a, b| b.f_mhz.partial_cmp(&a.f_mhz).unwrap());
+    for p in &pts {
+        if p.quantile_rel(q) < bound_x {
+            return (p.f_mhz, p.quantile_rel(q));
+        }
+    }
+    let last = pts.last().unwrap();
+    (last.f_mhz, last.quantile_rel(q))
+}
+
+/// The CapPerfCentric scan over any [`ScalingData`].  `floor_mhz` is
+/// the §7.2.2 operator floor; the comparison carries a 0.5 MHz
+/// tolerance so a device-relative floor (a fraction of `f_max` that can
+/// float-round a hair above a grid point) can never skip the grid point
+/// it was derived from.
+pub fn cap_perf_centric_scaling(sd: &ScalingData, bound_frac: f64, floor_mhz: f64) -> (f64, f64) {
+    let base = sd.uncapped().iter_time_ms;
+    let mut pts: Vec<_> = sd.points.iter().collect();
+    pts.sort_by(|a, b| a.f_mhz.partial_cmp(&b.f_mhz).unwrap());
+    for p in &pts {
+        if p.f_mhz < floor_mhz - 0.5 {
+            continue;
+        }
+        let degr = p.iter_time_ms / base - 1.0;
+        if degr <= bound_frac {
+            return (p.f_mhz, degr);
+        }
+    }
+    let last = pts.last().unwrap();
+    (last.f_mhz, last.iter_time_ms / base - 1.0)
 }
 
 /// [`SelectOptimalFreq::classify`]'s result: the Algorithm 1 plan plus
@@ -528,8 +548,54 @@ mod tests {
         let milc6 = rs.by_name("milc-6").unwrap();
         let (f, d) = sel.cap_perf_centric(milc6);
         // memory-bound: the lowest *allowed* cap satisfies the 5% bound
-        // (the §7.2.2 frequency floor keeps us at perf_min_cap_mhz).
-        assert_eq!(f, params.perf_min_cap_mhz);
+        // (the §7.2.2 device-relative floor lands on 1500 MHz for the
+        // MI300X grid, reproducing the paper's absolute floor).
+        assert_eq!(f, 1500.0);
+        assert!((params.perf_floor_mhz(rs.spec.f_max_mhz) - 1500.0).abs() < 1e-6);
         assert!(d <= params.perf_bound_frac);
+    }
+
+    #[test]
+    fn perf_centric_on_a100_has_a_nonempty_feasible_cap_set() {
+        // The old absolute 1500 MHz floor sat above A100's entire sweep
+        // range (max 1410 MHz), so every grid point was skipped and the
+        // scan always fell through to the uncapped fallback.  The
+        // device-relative floor admits real choices.
+        let spec = GpuSpec::a100_pcie();
+        let sim = SimParams::default();
+        let params = MinosParams::default();
+        let reg = workloads::registry();
+        let picks: Vec<&workloads::Workload> = ["sgemm", "milc-6"]
+            .iter()
+            .map(|n| reg.by_name(n).unwrap())
+            .collect();
+        let rs = ReferenceSet::build(&spec, &sim, &params, &picks);
+        let floor = params.perf_floor_mhz(spec.f_max_mhz);
+        assert!(floor < spec.f_max_mhz, "floor {floor} must sit inside the range");
+        let feasible: Vec<f64> = spec
+            .sweep_frequencies()
+            .into_iter()
+            .filter(|f| *f >= floor - 0.5)
+            .collect();
+        assert!(
+            feasible.len() >= 2,
+            "A100 must keep a real feasible cap set, got {feasible:?}"
+        );
+        let sel = SelectOptimalFreq::new(&rs, &params);
+        for name in ["sgemm", "milc-6"] {
+            let e = rs.by_name(name).unwrap();
+            let (f, d) = sel.cap_perf_centric(e);
+            assert!(
+                f >= spec.f_min_mhz && f <= spec.f_max_mhz,
+                "{name}: cap {f} outside the device range"
+            );
+            assert!(f >= floor - 0.5, "{name}: cap {f} below the floor {floor}");
+            // memory-bound milc must be allowed to cap *below* f_max —
+            // the whole point of the feasible set being non-empty
+            if name == "milc-6" {
+                assert!(f < spec.f_max_mhz, "milc-6 cap {f} fell through to uncapped");
+                assert!(d <= params.perf_bound_frac + 1e-9);
+            }
+        }
     }
 }

@@ -3,7 +3,7 @@
 //! frequency-scaling data from the cap sweep (§5.3.3) — everything
 //! Algorithm 1 needs to serve predictions for new workloads.
 
-use crate::config::{GpuSpec, MinosParams, SimParams};
+use crate::config::{DeviceProfile, GpuSpec, MinosParams, SimParams};
 use crate::features::{spike_vector, SpikeVector, UtilPoint};
 use crate::sim::dvfs::DvfsMode;
 use crate::sim::profiler::{Profile, ProfileRequest};
@@ -244,6 +244,31 @@ impl ReferenceSet {
         self.registry_fingerprint == Self::current_fingerprint()
     }
 
+    /// The stable identity of the device this set was profiled on.
+    pub fn device(&self) -> DeviceProfile {
+        DeviceProfile::of(&self.spec)
+    }
+
+    /// [`ReferenceSet::load`] plus the device-tagging contract: the
+    /// snapshot must have been profiled on `spec`'s device, or the load
+    /// hard-errors (same contract as the registry/sim fingerprint
+    /// check).  An MI300X cache can never silently serve A100 queries.
+    pub fn load_for_device(path: &str, spec: &GpuSpec) -> anyhow::Result<ReferenceSet> {
+        let rs = Self::load(path)?;
+        let have = rs.device();
+        let want = DeviceProfile::of(spec);
+        anyhow::ensure!(
+            have.fingerprint == want.fingerprint,
+            "reference-set cache '{path}' was profiled on device '{}' ({:016x}) but this \
+             context serves '{}' ({:016x}) — rebuild it for this device",
+            have.name,
+            have.fingerprint,
+            want.name,
+            want.fingerprint
+        );
+        Ok(rs)
+    }
+
     pub fn by_name(&self, name: &str) -> Option<&ReferenceEntry> {
         self.entries.iter().find(|e| e.name == name)
     }
@@ -425,6 +450,7 @@ impl ReferenceSet {
     pub fn to_json(&self) -> Json {
         obj(vec![
             ("spec", self.spec.to_json()),
+            ("device_fingerprint", s(&format!("{:016x}", self.device().fingerprint))),
             ("bin_sizes", nums(&self.bin_sizes)),
             ("registry_fingerprint", s(&format!("{:016x}", self.registry_fingerprint))),
             (
@@ -435,10 +461,35 @@ impl ReferenceSet {
     }
 
     pub fn from_json(j: &Json) -> anyhow::Result<Self> {
+        let spec = GpuSpec::from_json(
+            j.get("spec").ok_or_else(|| anyhow::anyhow!("missing spec"))?,
+        )?;
+        // Device-tagging contract: a tagged snapshot must agree with its
+        // own embedded spec (anything else is a spliced/corrupt cache);
+        // an untagged snapshot predates device tagging and is trusted
+        // with a warning.
+        let want = DeviceProfile::of(&spec);
+        match j.get("device_fingerprint") {
+            Some(_) => {
+                let tag = u64::from_str_radix(&j.s("device_fingerprint")?, 16)?;
+                anyhow::ensure!(
+                    tag == want.fingerprint,
+                    "reference-set snapshot device tag {tag:016x} disagrees with its own \
+                     spec '{}' ({:016x}) — the cache was corrupted or spliced across devices",
+                    want.name,
+                    want.fingerprint
+                );
+            }
+            None => {
+                eprintln!(
+                    "warning: untagged (pre-fleet) reference-set snapshot; assuming device \
+                     '{}' ({:016x}) from its embedded spec",
+                    want.name, want.fingerprint
+                );
+            }
+        }
         Ok(ReferenceSet {
-            spec: GpuSpec::from_json(
-                j.get("spec").ok_or_else(|| anyhow::anyhow!("missing spec"))?,
-            )?,
+            spec,
             bin_sizes: j.f64s("bin_sizes")?,
             entries: j
                 .arr("entries")?
@@ -636,6 +687,46 @@ mod tests {
         assert!(corrupt(&mut j), "serialized layout changed");
         let err = ReferenceSet::from_json(&j).unwrap_err();
         assert!(err.to_string().contains("not strictly ascending"), "{err}");
+    }
+
+    #[test]
+    fn device_tag_roundtrips_and_cross_device_load_hard_errors() {
+        let rs = small_set();
+        assert_eq!(rs.device().key, "mi300x");
+        let path = std::env::temp_dir().join("minos_refset_device_test.json");
+        let path = path.to_str().unwrap();
+        rs.save(path).unwrap();
+        // the tag survives the round trip
+        let back = ReferenceSet::load_for_device(path, &GpuSpec::mi300x()).unwrap();
+        assert_eq!(back.device().fingerprint, rs.device().fingerprint);
+        // loading the MI300X snapshot for an A100 context is a hard error
+        let err = ReferenceSet::load_for_device(path, &GpuSpec::a100_pcie()).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("different device") || msg.contains("profiled on device"), "{msg}");
+        assert!(msg.contains("A100"), "{msg}");
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn untagged_legacy_snapshot_loads_with_embedded_spec() {
+        let rs = small_set();
+        let mut j = Json::parse(&rs.to_json().dump()).unwrap();
+        // strip the tag, simulating a pre-fleet snapshot
+        let Json::Obj(top) = &mut j else { panic!("layout") };
+        assert!(top.remove("device_fingerprint").is_some(), "layout changed");
+        let back = ReferenceSet::from_json(&j).unwrap();
+        assert_eq!(back.device().fingerprint, rs.device().fingerprint);
+        assert_eq!(back.entries.len(), rs.entries.len());
+        // a spliced tag (device_fingerprint from another device) is rejected
+        let mut spliced = Json::parse(&rs.to_json().dump()).unwrap();
+        let other = crate::config::DeviceProfile::of(&GpuSpec::a100_pcie());
+        let Json::Obj(top) = &mut spliced else { panic!("layout") };
+        top.insert(
+            "device_fingerprint".into(),
+            Json::Str(format!("{:016x}", other.fingerprint)),
+        );
+        let err = ReferenceSet::from_json(&spliced).unwrap_err();
+        assert!(err.to_string().contains("disagrees"), "{err}");
     }
 
     #[test]

@@ -31,7 +31,7 @@ pub mod index;
 use crate::clustering::hierarchy::{Dendrogram, Linkage};
 use crate::clustering::metrics::{pairwise, Metric};
 use crate::clustering::silhouette::silhouette_score;
-use crate::config::MinosParams;
+use crate::config::{DeviceProfile, MinosParams};
 use crate::features::{l2_norm, SpikeVector, UtilPoint};
 use crate::minos::algorithm::TargetProfile;
 use crate::minos::reference_set::{ReferenceEntry, ReferenceSet, ScalingData};
@@ -150,6 +150,13 @@ pub fn refset_digest(rs: &ReferenceSet) -> u64 {
 
 #[derive(Debug, Clone)]
 pub struct ClassRegistry {
+    /// The device the underlying reference set was profiled on.  A
+    /// snapshot is device-tagged: loading it against a reference set
+    /// for a different device hard-errors (same contract as the
+    /// [`refset_digest`] check), because nearest-neighbor classes only
+    /// transfer across devices through the explicit
+    /// [`crate::fleet::transfer`] normalization.
+    pub device: DeviceProfile,
     /// Bin size the classes were clustered at (`default_bin_size`).
     pub chosen_bin: f64,
     pub bin_sizes: Vec<f64>,
@@ -225,6 +232,7 @@ impl ClassRegistry {
         let classes = derive_classes(refset, &members, chosen_bin)?;
         let index = VectorIndex::build(refset, &members, &[])?;
         Ok(ClassRegistry {
+            device: refset.device(),
             chosen_bin,
             bin_sizes: refset.bin_sizes.clone(),
             classes,
@@ -395,6 +403,13 @@ impl ClassRegistry {
 
     pub fn to_json(&self) -> Json {
         obj(vec![
+            (
+                "device",
+                obj(vec![
+                    ("name", s(&self.device.name)),
+                    ("fingerprint", s(&format!("{:016x}", self.device.fingerprint))),
+                ]),
+            ),
             ("chosen_bin", num(self.chosen_bin)),
             ("bin_sizes", nums(&self.bin_sizes)),
             ("version", num(self.version as f64)),
@@ -467,6 +482,38 @@ impl ClassRegistry {
              ({snapshot_digest:016x} vs {:016x}) — rebuild it with `minos registry build`",
             refset_digest(refset)
         );
+        // Device-tagging contract: the refset digest alone does not see
+        // the device (entry names and bin sizes are device-independent),
+        // so an MI300X snapshot could silently classify A100 traces.  A
+        // tagged snapshot hard-errors on a device mismatch; an untagged
+        // (pre-fleet) snapshot loads against the reference set's device
+        // with a warning.
+        let device = match j.get("device") {
+            Some(dj) => {
+                let tag = u64::from_str_radix(&dj.s("fingerprint")?, 16)?;
+                let want = refset.device();
+                anyhow::ensure!(
+                    tag == want.fingerprint,
+                    "class-registry snapshot '{path}' was built for device '{}' \
+                     ({tag:016x}) but this reference set is '{}' ({:016x}) — rebuild it \
+                     with `minos registry build`, or transfer its classes with \
+                     `minos fleet transfer`",
+                    dj.s("name").unwrap_or_default(),
+                    want.name,
+                    want.fingerprint
+                );
+                want
+            }
+            None => {
+                let want = refset.device();
+                eprintln!(
+                    "warning: untagged (pre-fleet) class-registry snapshot '{path}'; \
+                     assuming device '{}' ({:016x}) from the reference set",
+                    want.name, want.fingerprint
+                );
+                want
+            }
+        };
         let chosen_bin = j.f("chosen_bin")?;
         let bin_sizes = j.f64s("bin_sizes")?;
         anyhow::ensure!(
@@ -542,6 +589,7 @@ impl ClassRegistry {
             Vec::new()
         };
         Ok(ClassRegistry {
+            device,
             chosen_bin,
             bin_sizes,
             classes,
@@ -922,6 +970,55 @@ mod tests {
         let cut = rs.without_app("app0");
         let err = ClassRegistry::load(path, &cut).unwrap_err();
         assert!(err.to_string().contains("different reference set"), "{err}");
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn snapshot_device_tag_roundtrips_and_mismatch_hard_errors() {
+        // Two reference sets that agree on everything the refset digest
+        // sees (names, power flags, bin sizes, registry fingerprint) but
+        // were profiled on different devices — exactly the hole the
+        // device tag plugs: before tagging, the digest check passed and
+        // A100 traces silently classified against MI300X neighbors.
+        let rs_mi = synth_refset(12, 3);
+        let mut rs_a100 = synth_refset(12, 3);
+        rs_a100.spec = GpuSpec::a100_pcie();
+        assert_eq!(refset_digest(&rs_mi), refset_digest(&rs_a100));
+
+        let reg = ClassRegistry::build(&rs_mi, &params()).unwrap();
+        assert_eq!(reg.device.key, "mi300x");
+        let path = std::env::temp_dir().join("minos_registry_device_test.json");
+        let path = path.to_str().unwrap();
+        reg.save(path).unwrap();
+
+        // round-trip preserves the device fingerprint
+        let back = ClassRegistry::load(path, &rs_mi).unwrap();
+        assert_eq!(back.device.fingerprint, reg.device.fingerprint);
+        assert_eq!(back.device.name, reg.device.name);
+        assert_eq!(back.digest(), reg.digest());
+
+        // tagged snapshot against the other device: hard error
+        let err = ClassRegistry::load(path, &rs_a100).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("built for device"), "{msg}");
+        assert!(msg.contains("MI300X"), "{msg}");
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn untagged_snapshot_loads_against_the_refset_device_with_warning() {
+        let rs = synth_refset(12, 3);
+        let reg = ClassRegistry::build(&rs, &params()).unwrap();
+        let mut j = Json::parse(&reg.to_json().dump()).unwrap();
+        let Json::Obj(top) = &mut j else { panic!("layout") };
+        assert!(top.remove("device").is_some(), "serialized layout changed");
+        let path = std::env::temp_dir().join("minos_registry_untagged_test.json");
+        let path = path.to_str().unwrap();
+        std::fs::write(path, j.dump()).unwrap();
+        // loads (warning goes to stderr), adopting the refset's device
+        let back = ClassRegistry::load(path, &rs).unwrap();
+        assert_eq!(back.device.fingerprint, rs.device().fingerprint);
+        assert_eq!(back.digest(), reg.digest());
         let _ = std::fs::remove_file(path);
     }
 

@@ -49,6 +49,7 @@ fn soak_queue() -> Vec<Job> {
                 Objective::PowerCentric
             },
             iterations: 2,
+            device: None,
         })
         .collect()
 }
@@ -179,6 +180,7 @@ fn concurrent_jobs_get_distinct_gpu_ids() {
                 workload: wl.to_string(),
                 objective: Objective::PowerCentric,
                 iterations: 10,
+                device: None,
             })
             .unwrap();
     }
@@ -234,6 +236,7 @@ fn four_nodes_sixty_four_jobs_acceptance() {
                         Objective::PerfCentric
                     },
                     iterations: 2,
+                    device: None,
                 })
                 .unwrap();
         }
@@ -262,6 +265,7 @@ fn collect_cannot_hang_on_short_queue() {
                 workload: "sdxl-b64".into(),
                 objective: Objective::PowerCentric,
                 iterations: 2,
+                device: None,
             })
             .unwrap();
     }
@@ -280,6 +284,7 @@ fn collect_cannot_hang_on_short_queue() {
             workload: "sdxl-b64".into(),
             objective: Objective::PowerCentric,
             iterations: 1,
+            device: None,
         })
         .is_err());
 }

@@ -1,0 +1,239 @@
+//! Acceptance tests for the device-aware fleet: leave-one-device-out
+//! cross-device transfer (caps in range, calibration strictly cheaper
+//! than a full sweep, deterministic decision digests) and the
+//! heterogeneous coordinator (device-pinned routing, per-(device,
+//! class) plan-cache hits, transfer-then-absorb fallback).
+
+use minos::config::{GpuSpec, MinosParams, NodeSpec, SimParams};
+use minos::coordinator::{outcome_table, slot_overlaps, Job, PowerAwareScheduler, SchedulerConfig};
+use minos::fleet::transfer::{decisions_digest, transfer_workload, DEFAULT_CALIBRATION_POINTS};
+use minos::fleet::FleetStore;
+use minos::minos::algorithm::Objective;
+use minos::minos::reference_set::ReferenceSet;
+use minos::workloads;
+use std::sync::OnceLock;
+
+const PICKS: [&str; 3] = ["sdxl-b64", "milc-6", "lammps-8x8x16"];
+
+fn refset_for(spec: &GpuSpec) -> ReferenceSet {
+    let reg = workloads::registry();
+    let picks: Vec<&workloads::Workload> =
+        PICKS.iter().map(|n| reg.by_name(n).unwrap()).collect();
+    ReferenceSet::build(spec, &SimParams::default(), &MinosParams::default(), &picks)
+}
+
+fn refset_mi() -> &'static ReferenceSet {
+    static RS: OnceLock<ReferenceSet> = OnceLock::new();
+    RS.get_or_init(|| refset_for(&GpuSpec::mi300x()))
+}
+
+fn refset_a100() -> &'static ReferenceSet {
+    static RS: OnceLock<ReferenceSet> = OnceLock::new();
+    RS.get_or_init(|| refset_for(&GpuSpec::a100_pcie()))
+}
+
+#[test]
+fn leave_one_device_out_caps_in_range_fewer_points_and_deterministic() {
+    let params = MinosParams::default();
+    let sim = SimParams::default();
+    let run = || -> Vec<minos::fleet::transfer::TransferOutcome> {
+        let mut out = Vec::new();
+        for (src, dst) in [
+            (refset_mi(), refset_a100()),
+            (refset_a100(), refset_mi()),
+        ] {
+            for name in PICKS {
+                out.push(
+                    transfer_workload(src, dst, &params, &sim, name, DEFAULT_CALIBRATION_POINTS)
+                        .unwrap_or_else(|e| panic!("{name}: {e}")),
+                );
+            }
+        }
+        out
+    };
+    let a = run();
+    assert_eq!(a.len(), PICKS.len() * 2);
+    for o in &a {
+        let dst = if o.dst.key == "mi300x" {
+            GpuSpec::mi300x()
+        } else {
+            GpuSpec::a100_pcie()
+        };
+        let grid = dst.sweep_frequencies();
+        // every transferred cap is a valid target-device frequency
+        for cap in [o.cap_transfer_mhz, o.perf_cap_transfer_mhz] {
+            assert!(
+                cap >= dst.f_min_mhz && cap <= dst.f_max_mhz,
+                "{} {}->{}: cap {cap} outside [{}, {}]",
+                o.workload,
+                o.src.key,
+                o.dst.key,
+                dst.f_min_mhz,
+                dst.f_max_mhz
+            );
+            assert!(grid.contains(&cap), "{}: cap {cap} off the sweep grid", o.workload);
+        }
+        // transfer + calibration profiles strictly fewer points than a
+        // full sweep, and costs strictly less simulated time
+        assert!(o.calibration_points > 0);
+        assert!(
+            o.calibration_points < grid.len(),
+            "{}: {} calibration points vs {}-point sweep",
+            o.workload,
+            o.calibration_points,
+            grid.len()
+        );
+        assert!(o.calibration_cost_s > 0.0);
+        assert!(
+            o.calibration_cost_s < o.full_sweep_cost_s,
+            "{}: calibration {} s not cheaper than the sweep {} s",
+            o.workload,
+            o.calibration_cost_s,
+            o.full_sweep_cost_s
+        );
+        assert!(o.savings_frac() > 0.0);
+        assert!((0.0..=1.0).contains(&o.confidence));
+        // the native baseline exists and is also on its grid
+        assert!(grid.contains(&o.cap_native_mhz), "{}", o.workload);
+    }
+    // decision digests pin the whole run: bit-identical across reruns
+    let b = run();
+    assert_eq!(decisions_digest(&a), decisions_digest(&b));
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.cap_transfer_mhz.to_bits(), y.cap_transfer_mhz.to_bits());
+        assert_eq!(x.confidence.to_bits(), y.confidence.to_bits());
+        assert_eq!(x.calibration_cost_s.to_bits(), y.calibration_cost_s.to_bits());
+    }
+}
+
+fn mixed_cfg() -> SchedulerConfig {
+    SchedulerConfig {
+        cluster: Some(vec![NodeSpec::hpc_fund(), NodeSpec::lonestar6()]),
+        ..Default::default()
+    }
+}
+
+fn job(id: u64, wl: &str, device: Option<&str>) -> Job {
+    Job {
+        id,
+        workload: wl.into(),
+        objective: Objective::PowerCentric,
+        iterations: 2,
+        device: device.map(str::to_string),
+    }
+}
+
+#[test]
+fn mixed_serve_routes_pins_to_compatible_devices_with_native_fleet() {
+    let params = MinosParams::default();
+    let run = || {
+        let mut fleet = FleetStore::new();
+        fleet.add(refset_mi().clone(), &params).unwrap();
+        fleet.add(refset_a100().clone(), &params).unwrap();
+        let sched = PowerAwareScheduler::with_fleet(mixed_cfg(), fleet);
+        sched.submit(job(0, "faiss-b4096", Some("a100"))).unwrap();
+        sched.submit(job(1, "sdxl-b64", Some("mi300x"))).unwrap();
+        sched.submit(job(2, "milc-6", None)).unwrap();
+        // repeat of job 0's app on the same pin: must hit the plan cache
+        sched.submit(job(3, "faiss-b4096", Some("a100"))).unwrap();
+        let outcomes = sched.collect(4);
+        sched.shutdown();
+        (outcomes, sched.metrics())
+    };
+    let (mut outcomes, m) = run();
+    outcomes.sort_by_key(|o| o.job.id);
+    assert_eq!(outcomes.len(), 4);
+    assert_eq!(m.failed, 0);
+    assert_eq!(slot_overlaps(&outcomes), 0);
+    assert_eq!(m.devices, vec!["mi300x".to_string(), "a100-pcie-40gb".to_string()]);
+
+    // pins are honoured: jobs land only on compatible devices
+    assert_eq!(outcomes[0].device, "a100-pcie-40gb");
+    assert_eq!(outcomes[3].device, "a100-pcie-40gb");
+    assert_eq!(outcomes[1].device, "mi300x");
+    // both devices are natively served — nothing is transfer-capped
+    for o in &outcomes {
+        assert!(!o.transferred, "job {} unexpectedly transferred", o.job.id);
+        let spec = if o.device == "mi300x" {
+            GpuSpec::mi300x()
+        } else {
+            GpuSpec::a100_pcie()
+        };
+        assert!(
+            o.f_cap_mhz >= spec.f_min_mhz && o.f_cap_mhz <= spec.f_max_mhz,
+            "job {}: cap {} outside {}'s range",
+            o.job.id,
+            o.f_cap_mhz,
+            o.device
+        );
+    }
+    assert_eq!(m.transfers, 0);
+
+    // the repeat hit the (device, class)-keyed plan cache, and the hit
+    // is visible under a device-scoped key
+    assert!(m.cache_hits >= 1, "repeat pinned app must hit the plan cache");
+    assert!(
+        m.plan_cache_hits.keys().any(|k| k.starts_with("dev:a100")),
+        "expected a dev:a100… plan-cache hit, got {:?}",
+        m.plan_cache_hits
+    );
+    // every plan key is device-scoped
+    for k in m.plan_cache_hits.keys() {
+        assert!(k.starts_with("dev:"), "unscoped plan key {k}");
+    }
+
+    // deterministic: a second identical run reproduces the table
+    let (outcomes2, _) = run();
+    assert_eq!(outcome_table(&outcomes), outcome_table(&outcomes2));
+}
+
+#[test]
+fn transfer_fallback_serves_devices_without_a_native_refset() {
+    // The fleet only knows MI300X; the cluster also has an A100 node.
+    // A job pinned to a100 must still be served — classified against
+    // the primary's reference set, cap mapped onto the A100 grid, and
+    // the target absorbed into the borrowed registry.
+    let sched = PowerAwareScheduler::new(mixed_cfg(), refset_mi().clone());
+    sched.submit(job(0, "faiss-b4096", Some("a100"))).unwrap();
+    sched.submit(job(1, "faiss-b4096", Some("mi300x"))).unwrap();
+    // a pin no cluster device satisfies is rejected synchronously
+    let err = sched.submit(job(9, "faiss-b4096", Some("h100"))).unwrap_err();
+    assert!(err.to_string().contains("no cluster device matches"), "{err}");
+    let mut outcomes = sched.collect(2);
+    sched.shutdown();
+    let m = sched.metrics();
+    outcomes.sort_by_key(|o| o.job.id);
+    assert_eq!(outcomes.len(), 2);
+    assert_eq!(m.failed, 0);
+
+    let a100 = &outcomes[0];
+    assert_eq!(a100.device, "a100-pcie-40gb");
+    assert!(a100.transferred, "a100 job must be transfer-served");
+    let spec = GpuSpec::a100_pcie();
+    assert!(
+        a100.f_cap_mhz >= spec.f_min_mhz && a100.f_cap_mhz <= spec.f_max_mhz,
+        "transferred cap {} outside the A100 range",
+        a100.f_cap_mhz
+    );
+    assert!(
+        spec.sweep_frequencies().contains(&a100.f_cap_mhz),
+        "transferred cap {} off the A100 sweep grid",
+        a100.f_cap_mhz
+    );
+    // the predicted admission draw was re-anchored on the A100's TDP
+    assert!(
+        a100.predicted_p90_w <= spec.tdp_w * spec.clamp_x,
+        "predicted p90 {} W not in A100 terms",
+        a100.predicted_p90_w
+    );
+
+    let mi = &outcomes[1];
+    assert_eq!(mi.device, "mi300x");
+    assert!(!mi.transferred, "the native device must not transfer");
+
+    assert!(m.transfers >= 1, "transfer placements must be counted");
+    assert!(
+        m.transfer_absorbs >= 1,
+        "transfer-serving must absorb the target into the borrowed registry"
+    );
+}

@@ -52,8 +52,8 @@ fn case_study_end_to_end_both_objectives() {
         for f in [pwr.f_cap_mhz, perf.f_cap_mhz] {
             assert!((1300.0..=2100.0).contains(&f), "{name}: cap {f}");
         }
-        // perf floor honoured (§7.2.2)
-        assert!(perf.f_cap_mhz >= params.perf_min_cap_mhz);
+        // perf floor honoured (§7.2.2; device-relative — 1500 MHz on MI300X)
+        assert!(perf.f_cap_mhz >= params.perf_floor_mhz(2100.0) - 0.5);
         // the predicted values honour the bounds when not a fallback
         if pwr.predicted_quantile_rel < params.power_bound_x {
             assert!(pwr.f_pwr_mhz >= 1300.0);
@@ -158,6 +158,7 @@ fn scheduler_respects_budget_and_caches() {
                 workload: "faiss-b4096".into(),
                 objective: Objective::PowerCentric,
                 iterations: 2,
+                device: None,
             })
             .unwrap();
     }
