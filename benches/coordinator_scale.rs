@@ -1,0 +1,120 @@
+//! Coordinator scale bench — jobs/sec across node count × queue depth ×
+//! shard count, the throughput substrate the sharded batch-classifying
+//! dispatcher exists for.  Every timed cell is **correctness-gated**
+//! first: the sharded run's outcome table must be byte-identical to the
+//! single-dispatcher run's on the same queue, so a speedup can never be
+//! bought with a schedule change.
+//!
+//! Run with: `cargo bench --bench coordinator_scale`
+
+use minos::benchkit::{bench, black_box, group, smoke};
+use minos::config::{GpuSpec, MinosParams, NodeSpec, SimParams};
+use minos::coordinator::{
+    outcome_table, AdmissionMode, Job, JobOutcome, PowerAwareScheduler, SchedulerConfig,
+};
+use minos::minos::algorithm::Objective;
+use minos::minos::reference_set::ReferenceSet;
+use minos::workloads;
+use std::time::Duration;
+
+const BUDGET: Duration = Duration::from_secs(3);
+
+/// The 8-application pool `serve --load` cycles over: 8 profiling tasks
+/// on the first tick (the part sharded lanes parallelize), every later
+/// job a plan-cache hit (the part the striped ledger keeps cheap).
+const POOL: [&str; 8] = [
+    "faiss-b4096",
+    "qwen15-moe-b32",
+    "sdxl-b64",
+    "lsms",
+    "llama3-infer-b32",
+    "lammps-8x8x16",
+    "milc-6",
+    "sgemm",
+];
+
+fn cfg(nodes: usize, shards: usize) -> SchedulerConfig {
+    let mut node = NodeSpec::hpc_fund();
+    node.gpus_per_node = 4;
+    SchedulerConfig {
+        node,
+        nodes,
+        shards,
+        admission: AdmissionMode::Batch,
+        sim_ms_per_wall_ms: 0.0,
+        ..Default::default()
+    }
+}
+
+fn drive(refset: &ReferenceSet, nodes: usize, shards: usize, njobs: usize) -> Vec<JobOutcome> {
+    let sched = PowerAwareScheduler::new(cfg(nodes, shards), refset.clone());
+    for i in 0..njobs {
+        sched
+            .submit(Job {
+                id: i as u64,
+                workload: POOL[i % POOL.len()].to_string(),
+                objective: if i % 2 == 0 {
+                    Objective::PowerCentric
+                } else {
+                    Objective::PerfCentric
+                },
+                iterations: 1,
+                device: None,
+            })
+            .expect("submit");
+    }
+    let mut out = sched.collect(njobs);
+    sched.shutdown();
+    out.sort_by_key(|o| o.job.id);
+    out
+}
+
+fn main() {
+    let spec = GpuSpec::mi300x();
+    let params = SimParams::default();
+    let minos_params = MinosParams::default();
+    let reg = workloads::registry();
+    let picks: Vec<&workloads::Workload> = ["sgemm", "milc-6", "sdxl-b64", "lammps-8x8x16"]
+        .iter()
+        .map(|n| reg.by_name(n).unwrap())
+        .collect();
+    let refset = ReferenceSet::build(&spec, &params, &minos_params, &picks);
+
+    // (nodes, queue depth): the acceptance cell is ≥4 nodes × ≥1k jobs.
+    let cells: &[(usize, usize)] = if smoke() {
+        &[(4, 64), (8, 64)]
+    } else {
+        &[(4, 256), (4, 1024), (8, 1024)]
+    };
+
+    group("correctness gate: shards=4 ≡ shards=1, byte-identical tables");
+    for &(nodes, njobs) in cells {
+        let t1 = outcome_table(&drive(&refset, nodes, 1, njobs));
+        let t4 = outcome_table(&drive(&refset, nodes, 4, njobs));
+        assert_eq!(
+            t1, t4,
+            "n{nodes}_q{njobs}: sharded outcome table diverged from single-dispatcher"
+        );
+        println!("n{nodes}_q{njobs}: OK ({} outcome rows)", njobs);
+    }
+
+    group("coordinator scale: jobs/sec vs nodes x queue depth x shards");
+    for &(nodes, njobs) in cells {
+        let mut throughput = Vec::new();
+        for shards in [1usize, 4] {
+            let r = bench(
+                &format!("coord_scale/n{nodes}_q{njobs}_s{shards}"),
+                BUDGET,
+                200,
+                || black_box(drive(&refset, nodes, shards, njobs)),
+            );
+            let jps = r.per_sec(njobs);
+            println!("{}   [{:.0} jobs/s]", r.report(), jps);
+            throughput.push(jps);
+        }
+        println!(
+            "n{nodes}_q{njobs}: sharded(4)/single speedup {:.2}x",
+            throughput[1] / throughput[0].max(1e-9)
+        );
+    }
+}

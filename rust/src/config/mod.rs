@@ -422,6 +422,11 @@ pub struct Config {
     /// whose GPU count/budget contradict its spec is a hard error
     /// naming the offending index.
     pub cluster: Option<Vec<NodeSpec>>,
+    /// Coordinator ledger/classification shards (`serve --shards N`
+    /// overrides; omitted in JSON ⇒ 1 for backwards compatibility).
+    /// Must be ≥ 1 — the scheduler's outcome table is byte-identical
+    /// for every value, so 0 has no meaning and is rejected at load.
+    pub shards: usize,
     pub sim: SimParams,
     pub minos: MinosParams,
 }
@@ -432,6 +437,7 @@ impl Default for Config {
             node: NodeSpec::hpc_fund(),
             nodes: 1,
             cluster: None,
+            shards: 1,
             sim: SimParams::default(),
             minos: MinosParams::default(),
         }
@@ -592,6 +598,7 @@ impl Config {
         let mut pairs = vec![
             ("node", self.node.to_json()),
             ("nodes", num(self.nodes as f64)),
+            ("shards", num(self.shards as f64)),
         ];
         if let Some(cluster) = &self.cluster {
             pairs.push(("cluster", arr(cluster.iter().map(|n| n.to_json()).collect())));
@@ -621,10 +628,22 @@ impl Config {
                 Some(nodes)
             }
         };
+        let shards = if j.get("shards").is_some() {
+            let n = j.u("shards")?;
+            anyhow::ensure!(
+                n >= 1,
+                "shards: must be >= 1 (the scheduler's outcome table is byte-identical \
+                 for every shard count, so 0 has no meaning)"
+            );
+            n
+        } else {
+            1
+        };
         Ok(Config {
             node,
             nodes: if j.get("nodes").is_some() { j.u("nodes")?.max(1) } else { 1 },
             cluster,
+            shards,
             sim: SimParams::from_json(
                 j.get("sim").ok_or_else(|| anyhow::anyhow!("missing sim"))?,
             )?,
@@ -693,6 +712,27 @@ mod tests {
         assert_eq!(back.nodes, 1);
         // and the full roundtrip preserves the explicit value
         assert_eq!(Config::from_json_str(&text).unwrap().nodes, 4);
+    }
+
+    #[test]
+    fn config_without_shards_key_defaults_to_one_and_zero_is_rejected() {
+        // Backwards compatibility: config files predate the coordinator
+        // `shards` dimension.
+        let c = Config {
+            shards: 4,
+            ..Config::default()
+        };
+        let text = c.to_json().dump();
+        assert!(text.contains("\"shards\":4"));
+        let stripped = text.replace("\"shards\":4,", "");
+        assert!(!stripped.contains("\"shards\""));
+        let back = Config::from_json_str(&stripped).unwrap();
+        assert_eq!(back.shards, 1);
+        assert_eq!(Config::from_json_str(&text).unwrap().shards, 4);
+        // an explicit zero is a hard load error, not a silent clamp
+        let zero = text.replace("\"shards\":4", "\"shards\":0");
+        let err = Config::from_json_str(&zero).unwrap_err().to_string();
+        assert!(err.contains("shards"), "{err}");
     }
 
     #[test]

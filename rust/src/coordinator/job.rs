@@ -40,6 +40,12 @@ pub struct JobOutcome {
     /// Device id on that node — a real slot popped from the node's
     /// free-list under the dispatcher, not a derived count.
     pub gpu: usize,
+    /// Ledger shard that owned the job's node (the `assign_shards`
+    /// device-family/node-group stripe).  **Deliberately excluded from
+    /// [`outcome_table`]**: the table is the witness that schedules are
+    /// byte-identical across shard counts, and the shard id is the one
+    /// field that legitimately differs when only `--shards` changes.
+    pub shard: usize,
     /// Device key of the node's GPU family ("mi300x", "a100-pcie-40gb").
     pub device: String,
     pub f_cap_mhz: f64,
@@ -170,6 +176,7 @@ mod tests {
             },
             node,
             gpu,
+            shard: 0,
             device: "mi300x".into(),
             transferred: false,
             f_cap_mhz: 1700.0,

@@ -73,6 +73,25 @@ pub struct SchedulerMetrics {
     /// installing their own — the class-keyed plan cache paying off
     /// across *different* applications of the same class.
     pub class_plan_shares: usize,
+    /// Configured shard count (`SchedulerConfig::shards`); the striped
+    /// state may use fewer stripes than this when the cluster has fewer
+    /// nodes.
+    pub shards: usize,
+    /// Owning shard per node (`assign_shards` of the fleet layout).
+    pub node_shard: Vec<usize>,
+    /// Completed jobs per ledger shard; sums to `completed`.  A
+    /// per-shard view of the same releases, never a second count — the
+    /// shard-summed totals must equal the single-dispatcher ones on an
+    /// identical queue.
+    pub jobs_by_shard: Vec<usize>,
+    /// Dispatch ticks that admitted at least one job (each tick drains
+    /// the inbox into one admission batch).  Timing-dependent: how
+    /// submissions chunk into ticks varies run to run even though the
+    /// outcome table does not.
+    pub admit_batches: usize,
+    /// Largest single-tick admission batch seen (timing-dependent, like
+    /// `admit_batches`).
+    pub peak_admit_batch: usize,
 }
 
 impl SchedulerMetrics {
@@ -97,12 +116,13 @@ impl SchedulerMetrics {
             String::new()
         };
         format!(
-            "nodes {}x{}gpu | jobs {}/{} ok ({} failed) | cache hits {} ({} plan keys) | classes {} (plan shares {}) | \
+            "nodes {}x{}gpu | shards {} | jobs {}/{} ok ({} failed) | cache hits {} ({} plan keys) | classes {} (plan shares {}) | \
              profiles {} ({:.1}s spent, {:.1}s saved; \
              {} early exits, mean trace fraction {:.2}) | \
              power waits {} | peak pending {} | peak admitted p90 {:.0}/{:.0} W per node | replans {} | violations {} | energy {:.0} J{}",
             self.nodes.max(1),
             self.gpus_per_node,
+            self.shards.max(1),
             self.completed,
             self.submitted,
             self.failed,
@@ -156,6 +176,7 @@ mod tests {
         let s = m.summary();
         assert!(s.contains("jobs 4/4 ok"), "{s}");
         assert!(s.contains("nodes 2x8gpu"), "{s}");
+        assert!(s.contains("shards 1"), "{s}");
         assert!(s.contains("replans 7"), "{s}");
     }
 }

@@ -19,6 +19,18 @@
 //! canonical [`outcome_table`] is byte-identical across runs regardless
 //! of worker-thread interleaving.
 //!
+//! The coordinator is **sharded** (`SchedulerConfig::shards`): the
+//! per-node power ledgers, GPU free-lists, and the (device, class)-keyed
+//! plan cache are striped by device family / node group
+//! ([`scheduler::assign_shards`]), so budget accounting never takes a
+//! global ledger lock, and each dispatch tick drains the admission
+//! queue into per-shard classification batches that go through the
+//! registry index as one SoA batch query (bit-exact against per-job
+//! queries).  The determinism contract extends across the knob: the
+//! outcome table is byte-identical for every shard count, because all
+//! order-sensitive admission state is merged serially in arrival order
+//! and placement walks nodes in global order.
+//!
 //! Classification is served **class-first** by default: the scheduler
 //! builds a [`crate::registry::ClassRegistry`] over its reference set at
 //! startup, admission queries go centroid-first (exact, so single-app
@@ -46,6 +58,6 @@ pub use job::{outcome_digest, outcome_table, slot_overlaps, Job, JobOutcome, Job
 pub use metrics::SchedulerMetrics;
 pub use nodecap::{plan as plan_node_caps, CapPolicy, NodePlan};
 pub use scheduler::{
-    pace_sleep_us, AdmissionMode, PowerAwareScheduler, SchedulerConfig, DEFAULT_STREAM_STABLE_K,
-    DEFAULT_STREAM_WINDOW, MAX_PACE_SLEEP_US,
+    assign_shards, pace_sleep_us, AdmissionMode, PowerAwareScheduler, SchedulerConfig,
+    DEFAULT_STREAM_STABLE_K, DEFAULT_STREAM_WINDOW, MAX_PACE_SLEEP_US,
 };

@@ -1,21 +1,41 @@
 //! The power-aware cluster scheduler — non-blocking, multi-node,
-//! deterministic (std::thread edition; the vendored build has no async
-//! runtime).
+//! sharded, deterministic (std::thread edition; the vendored build has
+//! no async runtime).
 //!
-//! Architecture (one PR-1-style single-writer loop instead of the old
-//! lock-per-submit design):
+//! Architecture (a sharded batch-classifying evolution of the PR-1
+//! single-writer loop):
 //!
 //! * [`PowerAwareScheduler::submit`] validates the workload name,
 //!   enqueues the job on the dispatcher's inbox channel, and **returns
 //!   immediately** — it never blocks on admission.
-//! * A single **dispatcher thread** owns every piece of cluster state
-//!   (per-node power ledgers, GPU slot free-lists, the pending FIFO).
-//!   It classifies jobs (with a per-app plan cache), admits them against
-//!   the per-node power ledger, and places them on the node with the
-//!   most power headroom.  Because exactly one thread mutates the
-//!   state, the `free_gpus`-after-unlock race of the old design cannot
-//!   exist: a GPU id is popped from the owning node's free-list in the
-//!   same state transition that debits the ledger.
+//! * A **dispatcher thread** remains the single writer for placement
+//!   and release state, so the `free_gpus`-after-unlock race of the old
+//!   design still cannot exist: a GPU id is popped from the owning
+//!   shard's free-list in the same state transition that debits the
+//!   ledger.
+//! * **Shards** (`SchedulerConfig::shards`): each dispatch tick drains
+//!   the inbox into one admission batch, collects the distinct
+//!   uncached (device, app) profiling tasks, and fans them out over up
+//!   to `shards` classification lanes.  Native-device tasks classify in
+//!   parallel (their registries are immutable after startup, behind a
+//!   read lock); under batch admission each lane pushes its per-device
+//!   group through [`crate::registry::VectorIndex`] as **one SoA batch
+//!   query** (`query_batch`), amortizing the centroid pass across the
+//!   batch — bit-exact against per-job queries by construction.
+//!   Transfer-served devices defer classification to the serial merge
+//!   (absorb mutates their registry, and order must stay arrival
+//!   order).  The merge then applies cache lookups/installs, metrics,
+//!   and pending pushes **serially in arrival order**, so the outcome
+//!   stream is invariant to how submissions chunk into ticks and to
+//!   the shard count.
+//! * The admission state itself is **sharded by device family / node
+//!   group** ([`assign_shards`]): each shard exclusively owns the power
+//!   ledgers, GPU free-lists, and resident lists of its node slice
+//!   (plus a stripe of the (device, class)-keyed plan cache), and
+//!   budget accounting for a node only ever touches its owning stripe —
+//!   there is no global ledger lock.  Placement iterates nodes in
+//!   global order through the node→(shard, slot) map, so decisions are
+//!   invariant to the shard count.
 //! * Execution runs on **worker threads** (one per placed job, bounded
 //!   by the cluster's total GPU slots) so simulated profiles compute in
 //!   parallel; a memo cache keyed by (workload, cap, iterations) makes
@@ -25,7 +45,9 @@
 //!   simulated duration is deterministic, so the dispatcher orders
 //!   releases by (virtual end, job id) regardless of which worker
 //!   thread reports first.  Same seed + same submission sequence ⇒ same
-//!   placements, same GPU ids, same caps, same outcomes — see
+//!   placements, same GPU ids, same caps, same outcomes — and the
+//!   fixed shard→virtual-time merge order keeps the global table
+//!   byte-identical across shard counts — see
 //!   [`crate::coordinator::job::outcome_table`].
 //!
 //! Admission rule, per node: a job is admitted when the node has a free
@@ -56,13 +78,13 @@ use crate::minos::algorithm::{FreqPlan, Objective, SelectOptimalFreq, TargetProf
 use crate::minos::reference_set::ReferenceSet;
 use crate::registry::{ClassRegistry, SearchMode};
 use crate::sim::dvfs::DvfsMode;
-use crate::sim::profiler::{profile, ProfileRequest};
+use crate::sim::profiler::{profile, Profile, ProfileRequest};
 use crate::stream::{OnlineClassifier, OnlineConfig};
 use crate::workloads::{Registry, Workload};
-use std::collections::{HashMap, VecDeque};
+use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, RwLock};
 use std::time::Duration;
 
 /// How the dispatcher classifies an unseen app for admission.
@@ -136,6 +158,14 @@ pub struct SchedulerConfig {
     /// neighbor lookups are exact, so single-app decisions match flat;
     /// only cross-app plan sharing differs.
     pub search: SearchMode,
+    /// Admission shards: the cluster's nodes are partitioned by device
+    /// family / node group into up to this many stripes
+    /// ([`assign_shards`]), each owning its slice of the power ledgers,
+    /// GPU free-lists, and the plan cache, and each dispatch tick fans
+    /// classification out over up to this many parallel lanes.  Must be
+    /// ≥ 1; the outcome table is byte-identical for every value (the
+    /// shard count changes throughput, never decisions).
+    pub shards: usize,
     pub sim: SimParams,
     pub minos: MinosParams,
     /// Wall-clock pacing: simulated milliseconds per wall millisecond of
@@ -167,6 +197,7 @@ impl Default for SchedulerConfig {
             policy: CapPolicy::MinosAware,
             admission: AdmissionMode::streaming_default(),
             search: SearchMode::ClassFirst,
+            shards: 1,
             sim: SimParams::default(),
             minos: MinosParams::default(),
             sim_ms_per_wall_ms: 0.0,
@@ -218,18 +249,139 @@ enum Msg {
     Shutdown,
 }
 
-/// The admission-plan cache.  Keys are device-scoped, then class-scoped
-/// under class-first search (`dev:<key>|class:<id>` — co-scheduled jobs
-/// of the same Minos class on the same device share one plan even
-/// across different applications) and app-scoped under flat search
-/// (`dev:<key>|app:<name>`, the pre-registry behavior).
+/// FNV-1a over a string — the stripe selector for the plan cache (and
+/// the same constants the outcome digest uses).
+fn fnv1a(s: &str) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for &b in s.as_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Shard assignment: nodes sorted by (device index, node index) are cut
+/// into `min(shards, nodes)` contiguous stripes of near-equal size, so
+/// a stripe owns a run of same-device nodes wherever the device mix
+/// allows — the "partition by device family / node group" rule.  Pure
+/// function of the cluster layout; placement iterates nodes in global
+/// order through the resulting map, so admission decisions are
+/// invariant to the shard count.
+pub fn assign_shards(node_device: &[usize], shards: usize) -> Vec<usize> {
+    let n = node_device.len();
+    let k = shards.max(1).min(n.max(1));
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by_key(|&i| (node_device[i], i));
+    let mut out = vec![0usize; n];
+    let base = n / k;
+    let extra = n % k; // the first `extra` stripes take one more node
+    let mut pos = 0usize;
+    for stripe in 0..k {
+        let take = base + usize::from(stripe < extra);
+        for _ in 0..take {
+            out[order[pos]] = stripe;
+            pos += 1;
+        }
+    }
+    out
+}
+
+/// One stripe of the admission-plan cache.
 #[derive(Default)]
-struct PlanCache {
+struct PlanStripe {
     /// plan-key → (plan, profiling cost of the producing run, class id).
     by_key: HashMap<String, (FreqPlan, f64, Option<usize>)>,
     /// (device idx, app) → plan-key: an app seen once on a device never
     /// profiles there again.
     app_key: HashMap<(usize, String), String>,
+    /// Per-key hit counters, folded into
+    /// [`SchedulerMetrics::plan_cache_hits`] by
+    /// [`PowerAwareScheduler::metrics`].  A key lives in exactly one
+    /// stripe, so the fold cannot double-count.
+    hits: BTreeMap<String, usize>,
+}
+
+/// The admission-plan cache, striped by key hash so cross-shard cache
+/// traffic never takes a global lock.  Keys are device-scoped, then
+/// class-scoped under class-first search (`dev:<key>|class:<id>` —
+/// co-scheduled jobs of the same Minos class on the same device share
+/// one plan even across different applications) and app-scoped under
+/// flat search (`dev:<key>|app:<name>`, the pre-registry behavior).
+struct StripedPlanCache {
+    stripes: Vec<Mutex<PlanStripe>>,
+}
+
+impl StripedPlanCache {
+    fn new(stripes: usize) -> Self {
+        StripedPlanCache {
+            stripes: (0..stripes.max(1)).map(|_| Mutex::new(PlanStripe::default())).collect(),
+        }
+    }
+
+    fn stripe_of(&self, s: &str) -> usize {
+        (fnv1a(s) % self.stripes.len() as u64) as usize
+    }
+
+    fn app_stripe_of(&self, di: usize, app: &str) -> usize {
+        self.stripe_of(&format!("{di}:{app}"))
+    }
+
+    /// Resolve the (device, app) slot to its cached plan, if any.
+    fn lookup(&self, di: usize, app: &str) -> Option<(String, FreqPlan, Option<usize>)> {
+        let key = {
+            let s = self.stripes[self.app_stripe_of(di, app)].lock().unwrap();
+            s.app_key.get(&(di, app.to_string())).cloned()?
+        };
+        let s = self.stripes[self.stripe_of(&key)].lock().unwrap();
+        s.by_key
+            .get(&key)
+            .map(|(p, _, cid)| (key.clone(), p.clone(), *cid))
+    }
+
+    fn record_hit(&self, key: &str) {
+        let mut s = self.stripes[self.stripe_of(key)].lock().unwrap();
+        *s.hits.entry(key.to_string()).or_insert(0) += 1;
+    }
+
+    /// Install a fresh plan under `key`, or — when a different app of
+    /// the same (device, class) got there first — share the installed
+    /// plan.  Returns the plan to serve and whether it was shared.
+    fn share_or_install(
+        &self,
+        key: &str,
+        fresh: FreqPlan,
+        cost_s: f64,
+        class: Option<usize>,
+    ) -> (FreqPlan, bool) {
+        let mut s = self.stripes[self.stripe_of(key)].lock().unwrap();
+        match s.by_key.get(key) {
+            Some((p, _, _)) => {
+                let p = p.clone();
+                *s.hits.entry(key.to_string()).or_insert(0) += 1;
+                (p, true)
+            }
+            None => {
+                s.by_key.insert(key.to_string(), (fresh.clone(), cost_s, class));
+                (fresh, false)
+            }
+        }
+    }
+
+    fn bind_app(&self, di: usize, app: &str, key: String) {
+        let mut s = self.stripes[self.app_stripe_of(di, app)].lock().unwrap();
+        s.app_key.insert((di, app.to_string()), key);
+    }
+
+    /// Aggregate the per-stripe hit counters (disjoint key sets).
+    fn hits_snapshot(&self) -> BTreeMap<String, usize> {
+        let mut out = BTreeMap::new();
+        for s in &self.stripes {
+            for (k, n) in &s.lock().unwrap().hits {
+                *out.entry(k.clone()).or_insert(0) += n;
+            }
+        }
+        out
+    }
 }
 
 /// One device's serving state inside the scheduler.
@@ -241,11 +393,13 @@ struct DeviceServing {
     /// under native serving, the fleet primary's under transfer
     /// serving.
     refset: ReferenceSet,
-    /// Class-first index over `refset`; behind a mutex because
-    /// transfer-serving absorbs newly classified targets online (only
-    /// the dispatcher thread ever takes it).  None under
+    /// Class-first index over `refset`.  Behind a read-write lock: the
+    /// parallel classification lanes take read guards (native-device
+    /// registries never mutate after startup), while transfer-serving
+    /// absorbs — which do mutate — happen only under the dispatcher's
+    /// serial merge with a write guard.  None under
     /// [`SearchMode::Flat`] or when the refset is too small to cluster.
-    registry: Mutex<Option<ClassRegistry>>,
+    registry: RwLock<Option<ClassRegistry>>,
     /// False when this device has no native reference set in the fleet:
     /// classification runs against the primary's refset (spike vectors
     /// are TDP-relative, so they compare across devices) and the
@@ -266,8 +420,10 @@ struct Shared {
     /// Distinct devices in first-appearance order; index 0 serves as
     /// the job-level default.
     devices: Vec<DeviceServing>,
-    /// Classification cache (see [`PlanCache`]).
-    plans: Mutex<PlanCache>,
+    /// node → owning ledger shard ([`assign_shards`]).
+    node_shard: Vec<usize>,
+    /// Classification cache (see [`StripedPlanCache`]).
+    plans: StripedPlanCache,
     /// Memo of simulated executions (deterministic, so safe to reuse).
     exec_cache: Mutex<HashMap<ExecKey, ExecResult>>,
     metrics: Mutex<SchedulerMetrics>,
@@ -344,6 +500,284 @@ struct NodeState {
     resident: Vec<u64>,
 }
 
+/// One shard's exclusively owned slice of the admission state.
+struct LedgerShard {
+    /// Global node ids this shard owns (ascending).
+    nodes: Vec<usize>,
+    states: Vec<NodeState>,
+}
+
+/// The sharded admission ledger: power ledgers, GPU free-lists, and
+/// resident lists partitioned per [`assign_shards`].  Budget accounting
+/// for a node only ever touches its owning shard's slice — there is no
+/// global ledger lock to take; the dispatcher (the single writer for
+/// placement) routes through the node→(shard, slot) map, in global
+/// node order, so decisions are invariant to the shard count.
+struct ShardedLedger {
+    shards: Vec<LedgerShard>,
+    /// global node → (shard, slot in that shard's `states`).
+    slot: Vec<(usize, usize)>,
+}
+
+impl ShardedLedger {
+    fn new(node_specs: &[NodeSpec], node_shard: &[usize]) -> Self {
+        let k = node_shard.iter().copied().max().map_or(1, |m| m + 1);
+        let mut shards: Vec<LedgerShard> = (0..k)
+            .map(|_| LedgerShard { nodes: Vec::new(), states: Vec::new() })
+            .collect();
+        let mut slot = vec![(0usize, 0usize); node_specs.len()];
+        for (ni, (&s, ns)) in node_shard.iter().zip(node_specs).enumerate() {
+            slot[ni] = (s, shards[s].states.len());
+            shards[s].nodes.push(ni);
+            shards[s].states.push(NodeState {
+                ledger_w: 0.0,
+                free: (0..ns.gpus_per_node).collect(),
+                resident: Vec::new(),
+            });
+        }
+        ShardedLedger { shards, slot }
+    }
+
+    fn shard_of(&self, ni: usize) -> usize {
+        self.slot[ni].0
+    }
+
+    fn node(&self, ni: usize) -> &NodeState {
+        let (s, i) = self.slot[ni];
+        &self.shards[s].states[i]
+    }
+
+    fn node_mut(&mut self, ni: usize) -> &mut NodeState {
+        let (s, i) = self.slot[ni];
+        &mut self.shards[s].states[i]
+    }
+}
+
+/// One distinct (device, app) profiling + classification task of a
+/// tick's admission batch.  The objective is the **first** arriving
+/// job's — exactly what a one-job-at-a-time dispatcher's plan producer
+/// would have seen; later jobs of the same app re-bind the cached plan
+/// to their own objective.
+struct FreshTask {
+    di: usize,
+    app: String,
+    workload: Workload,
+    objective: Objective,
+}
+
+/// A classification lane's output for one task.
+enum FreshCls {
+    /// Native device: classified in the parallel lane.  `None` means
+    /// classification failed (degenerate trace) — the merge rejects the
+    /// device before touching any metric, exactly like the sequential
+    /// path did.
+    Ready(Option<ClsOut>),
+    /// Transfer-served device: classification is deferred to the serial
+    /// merge, because transfer-then-absorb mutates the serving registry
+    /// and later tasks must observe that mutation in arrival order.
+    Deferred,
+}
+
+/// The classified plan a lane hands to the merge.
+struct ClsOut {
+    plan: FreqPlan,
+    class_id: Option<usize>,
+    fraction: f64,
+    early: bool,
+}
+
+/// What a lane computes per task: always the uncapped profile, plus the
+/// classification when it is safe to run outside the serial merge.
+struct FreshResult {
+    prof: Profile,
+    cls: FreshCls,
+}
+
+/// Fan a tick's distinct (device, app) tasks over up to
+/// `cfg.shards` classification lanes.  Lanes only read shared state
+/// (registries behind read guards, the refsets, the simulator), so
+/// ordering inside this phase cannot leak into the outcome table — all
+/// order-sensitive work happens later, in the serial arrival-order
+/// merge.
+fn compute_fresh(shared: &Shared, tasks: &[FreshTask]) -> Vec<FreshResult> {
+    if tasks.is_empty() {
+        return Vec::new();
+    }
+    let lanes = shared.cfg.shards.min(tasks.len()).max(1);
+    let mut out: Vec<Option<FreshResult>> = (0..tasks.len()).map(|_| None).collect();
+    if lanes <= 1 {
+        let lane: Vec<(usize, &FreshTask)> = tasks.iter().enumerate().collect();
+        for (i, r) in fresh_lane(shared, lane) {
+            out[i] = Some(r);
+        }
+    } else {
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..lanes)
+                .map(|w| {
+                    let lane: Vec<(usize, &FreshTask)> = tasks
+                        .iter()
+                        .enumerate()
+                        .filter(|&(i, _)| i % lanes == w)
+                        .collect();
+                    scope.spawn(move || fresh_lane(shared, lane))
+                })
+                .collect();
+            for h in handles {
+                for (i, r) in h.join().expect("classification lane panicked") {
+                    out[i] = Some(r);
+                }
+            }
+        });
+    }
+    out.into_iter()
+        .map(|r| r.expect("lanes covered every task"))
+        .collect()
+}
+
+/// One lane's work: profile every task, then classify the native-device
+/// ones.  Under batch admission the lane groups its native tasks per
+/// device and pushes each group through the registry index as **one SoA
+/// batch query** ([`crate::registry::VectorIndex::query_batch`] via
+/// `SelectOptimalFreq::classify_batch`), amortizing the centroid pass —
+/// bit-exact against per-task classification by construction.
+/// Streaming admission classifies per task (a streamed trace replay has
+/// no SoA form).
+fn fresh_lane<'a>(
+    shared: &Shared,
+    lane: Vec<(usize, &'a FreshTask)>,
+) -> Vec<(usize, FreshResult)> {
+    let profs: Vec<Profile> = lane
+        .iter()
+        .map(|&(_, t)| {
+            let dev = &shared.devices[t.di];
+            profile(
+                &ProfileRequest::new(&dev.spec, &t.workload, DvfsMode::Uncapped)
+                    .with_params(&shared.cfg.sim),
+            )
+        })
+        .collect();
+    let mut cls: Vec<FreshCls> = lane
+        .iter()
+        .map(|&(_, t)| {
+            if shared.devices[t.di].native {
+                FreshCls::Ready(None)
+            } else {
+                FreshCls::Deferred
+            }
+        })
+        .collect();
+    match shared.cfg.admission {
+        AdmissionMode::Streaming { window_samples, stable_k } => {
+            for (li, &(_, t)) in lane.iter().enumerate() {
+                if shared.devices[t.di].native {
+                    cls[li] = FreshCls::Ready(classify_stream_or_full(
+                        shared,
+                        t,
+                        &profs[li],
+                        window_samples,
+                        stable_k,
+                    ));
+                }
+            }
+        }
+        AdmissionMode::Batch => {
+            let mut by_dev: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+            for (li, &(_, t)) in lane.iter().enumerate() {
+                if shared.devices[t.di].native {
+                    by_dev.entry(t.di).or_default().push(li);
+                }
+            }
+            for (di, lis) in by_dev {
+                let dev = &shared.devices[di];
+                let guard = dev.registry.read().unwrap();
+                let mut sel = SelectOptimalFreq::new(&dev.refset, &shared.cfg.minos);
+                if let Some(reg) = guard.as_ref() {
+                    sel = sel.with_registry(reg);
+                }
+                let targets: Vec<TargetProfile> = lis
+                    .iter()
+                    .map(|&li| {
+                        let (_, t) = lane[li];
+                        TargetProfile::from_profile(&t.app, &profs[li], &dev.refset.bin_sizes)
+                    })
+                    .collect();
+                let pairs: Vec<(&TargetProfile, Objective)> = lis
+                    .iter()
+                    .zip(&targets)
+                    .map(|(&li, tp)| (tp, lane[li].1.objective))
+                    .collect();
+                for (&li, c) in lis.iter().zip(sel.classify_batch(&pairs)) {
+                    cls[li] = FreshCls::Ready(c.map(|c| ClsOut {
+                        plan: c.plan,
+                        class_id: c.class_id,
+                        fraction: 1.0,
+                        early: false,
+                    }));
+                }
+            }
+        }
+    }
+    lane.into_iter()
+        .zip(profs)
+        .zip(cls)
+        .map(|(((i, _), prof), cls)| (i, FreshResult { prof, cls }))
+        .collect()
+}
+
+/// Streaming-admission classification for a native-device task: replay
+/// the profiling telemetry through the online classifier and stop at
+/// the early exit; fall back to the full-trace classifier when the
+/// online path cannot decide (degenerate trace).
+fn classify_stream_or_full(
+    shared: &Shared,
+    t: &FreshTask,
+    prof: &Profile,
+    window_samples: usize,
+    stable_k: usize,
+) -> Option<ClsOut> {
+    let dev = &shared.devices[t.di];
+    let guard = dev.registry.read().unwrap();
+    let cfg = OnlineConfig::new(window_samples, stable_k, t.objective);
+    let util = UtilPoint::new(prof.app_sm_util, prof.app_dram_util);
+    let mut oc = OnlineClassifier::new(
+        &dev.refset,
+        &shared.cfg.minos,
+        cfg,
+        &t.workload.name,
+        &t.app,
+        util,
+    )
+    // normalize by the profiled trace's own TDP (the node GPU's) — the
+    // TDP-relative features are what carry across devices
+    .with_tdp(prof.trace.tdp_w)
+    .with_sample_dt(prof.trace.sample_dt_ms);
+    if let Some(reg) = guard.as_ref() {
+        oc = oc.with_registry(reg);
+    }
+    match oc.run_trace(&prof.trace) {
+        Some(d) => Some(ClsOut {
+            plan: d.plan,
+            class_id: d.class_id,
+            fraction: d.trace_fraction.unwrap_or(1.0),
+            early: d.early_exit,
+        }),
+        None => {
+            let target = TargetProfile::from_profile(&t.app, prof, &dev.refset.bin_sizes);
+            let mut sel = SelectOptimalFreq::new(&dev.refset, &shared.cfg.minos);
+            if let Some(reg) = guard.as_ref() {
+                sel = sel.with_registry(reg);
+            }
+            let c = sel.classify(&target, t.objective)?;
+            Some(ClsOut {
+                plan: c.plan,
+                class_id: c.class_id,
+                fraction: 1.0,
+                early: false,
+            })
+        }
+    }
+}
+
 /// Power-aware scheduler for a cluster of identical nodes.
 pub struct PowerAwareScheduler {
     shared: Arc<Shared>,
@@ -371,6 +805,7 @@ impl PowerAwareScheduler {
     /// the fleet's primary entry.
     pub fn with_fleet(cfg: SchedulerConfig, fleet: FleetStore) -> Self {
         assert!(!fleet.is_empty(), "fleet store must hold at least one device");
+        assert!(cfg.shards >= 1, "scheduler requires at least one shard (got 0)");
         let node_specs = cfg.resolved_nodes();
         let primary = fleet.primary().expect("non-empty fleet");
         let mut devices: Vec<DeviceServing> = Vec::new();
@@ -397,7 +832,7 @@ impl PowerAwareScheduler {
                         profile: prof,
                         spec: ns.gpu.clone(),
                         refset,
-                        registry: Mutex::new(registry),
+                        registry: RwLock::new(registry),
                         native,
                     });
                     devices.len() - 1
@@ -408,11 +843,13 @@ impl PowerAwareScheduler {
         let nodes = node_specs.len();
         let classes_active = devices
             .first()
-            .and_then(|d| d.registry.lock().unwrap().as_ref().map(|r| r.len()))
+            .and_then(|d| d.registry.read().unwrap().as_ref().map(|r| r.len()))
             .unwrap_or(0);
+        let node_shard = assign_shards(&node_device, cfg.shards);
+        let stripe_count = node_shard.iter().copied().max().map_or(1, |m| m + 1);
         let shared = Arc::new(Shared {
             registry: crate::workloads::registry(),
-            plans: Mutex::new(PlanCache::default()),
+            plans: StripedPlanCache::new(cfg.shards),
             exec_cache: Mutex::new(HashMap::new()),
             metrics: Mutex::new(SchedulerMetrics {
                 node_budget_w: node_specs[0].power_budget_w,
@@ -423,10 +860,14 @@ impl PowerAwareScheduler {
                 node_plans: vec![None; nodes],
                 devices: devices.iter().map(|d| d.profile.key.clone()).collect(),
                 classes_active,
+                shards: cfg.shards,
+                node_shard: node_shard.clone(),
+                jobs_by_shard: vec![0; stripe_count],
                 ..Default::default()
             }),
             node_specs,
             node_device,
+            node_shard,
             devices,
             cfg,
             in_flight: AtomicUsize::new(0),
@@ -450,7 +891,14 @@ impl PowerAwareScheduler {
     }
 
     pub fn metrics(&self) -> SchedulerMetrics {
-        self.shared.metrics.lock().unwrap().clone()
+        let mut m = self.shared.metrics.lock().unwrap().clone();
+        // Per-key plan-cache hit counters live in the cache stripes; fold
+        // them in here.  A key hashes to exactly one stripe, so the fold
+        // aggregates across shards without double-counting.
+        for (k, n) in self.shared.plans.hits_snapshot() {
+            *m.plan_cache_hits.entry(k).or_insert(0) += n;
+        }
+        m
     }
 
     /// Enqueue one job and return immediately.  The only synchronous
@@ -577,7 +1025,7 @@ struct Dispatcher {
     outcomes: Sender<JobOutcome>,
     pending: VecDeque<Admitted>,
     running: Vec<Running>,
-    nodes: Vec<NodeState>,
+    ledger: ShardedLedger,
     vclock_ms: f64,
     next_ticket: u64,
     /// Live worker threads keyed by ticket; reaped as reports arrive so
@@ -593,15 +1041,7 @@ impl Dispatcher {
         inbox: Sender<Msg>,
         outcomes: Sender<JobOutcome>,
     ) -> Self {
-        let nodes = shared
-            .node_specs
-            .iter()
-            .map(|ns| NodeState {
-                ledger_w: 0.0,
-                free: (0..ns.gpus_per_node).collect(),
-                resident: Vec::new(),
-            })
-            .collect();
+        let ledger = ShardedLedger::new(&shared.node_specs, &shared.node_shard);
         Dispatcher {
             shared,
             rx,
@@ -609,7 +1049,7 @@ impl Dispatcher {
             outcomes,
             pending: VecDeque::new(),
             running: Vec::new(),
-            nodes,
+            ledger,
             vclock_ms: 0.0,
             next_ticket: 0,
             workers: HashMap::new(),
@@ -638,11 +1078,22 @@ impl Dispatcher {
             if self.shutting && self.pending.is_empty() && self.running.is_empty() {
                 break;
             }
+            // One dispatch tick: block for the next message, then drain
+            // everything already queued into a single admission batch.
+            // Reports and Shutdown are applied inline; the batch goes
+            // through the sharded classify-then-merge pipeline.  The
+            // merge is serial in arrival order, so the outcome stream is
+            // invariant to how submissions chunk into ticks.
+            let mut batch: Vec<(Job, Workload)> = Vec::new();
             match self.rx.recv() {
-                Ok(Msg::Submit { job, workload }) => self.admit(job, *workload),
-                Ok(Msg::Report { ticket, result }) => self.on_report(ticket, result),
-                Ok(Msg::Shutdown) => self.shutting = true,
+                Ok(msg) => self.sort_msg(msg, &mut batch),
                 Err(_) => break, // scheduler handle dropped without shutdown
+            }
+            while let Ok(msg) = self.rx.try_recv() {
+                self.sort_msg(msg, &mut batch);
+            }
+            if !batch.is_empty() {
+                self.admit_batch(batch);
             }
         }
         // Belt-and-braces: fail anything that somehow raced past the
@@ -703,9 +1154,73 @@ impl Dispatcher {
         }
     }
 
-    /// Classify (cached per app per device) and queue one job.  The job
-    /// gets one plan per compatible device; it fails only when no
-    /// compatible device can classify it.
+    /// Route one inbox message: Submits join the tick's admission
+    /// batch, Reports and Shutdown apply immediately.
+    fn sort_msg(&mut self, msg: Msg, batch: &mut Vec<(Job, Workload)>) {
+        match msg {
+            Msg::Submit { job, workload } => batch.push((job, *workload)),
+            Msg::Report { ticket, result } => self.on_report(ticket, result),
+            Msg::Shutdown => self.shutting = true,
+        }
+    }
+
+    /// Devices a job may run on (all, or the ones matching its pin).
+    fn compat_devices(&self, job: &Job) -> Vec<usize> {
+        let ndev = self.shared.devices.len();
+        match &job.device {
+            None => (0..ndev).collect(),
+            Some(sel) => (0..ndev)
+                .filter(|&i| self.shared.devices[i].profile.matches(sel))
+                .collect(),
+        }
+    }
+
+    /// Admit one tick's batch: collect the distinct uncached
+    /// (device, app) profiling tasks in arrival order, compute them on
+    /// up to `shards` parallel classification lanes (one SoA
+    /// `query_batch` per device group under batch admission), then
+    /// merge serially in arrival order — cache installs, plan shares,
+    /// transfer absorbs, metrics, and pending pushes all happen in the
+    /// same order a one-job-at-a-time dispatcher would produce, which
+    /// is why the outcome table is invariant to batch chunking and
+    /// shard count.
+    fn admit_batch(&mut self, batch: Vec<(Job, Workload)>) {
+        let mut tasks: Vec<FreshTask> = Vec::new();
+        for (job, workload) in &batch {
+            for di in self.compat_devices(job) {
+                if self.shared.plans.lookup(di, &workload.app).is_some() {
+                    continue; // already served from the plan cache
+                }
+                if tasks.iter().any(|t| t.di == di && t.app == workload.app) {
+                    continue; // an earlier job in this batch profiles it
+                }
+                tasks.push(FreshTask {
+                    di,
+                    app: workload.app.clone(),
+                    workload: workload.clone(),
+                    objective: job.objective,
+                });
+            }
+        }
+        let results = compute_fresh(&self.shared, &tasks);
+        {
+            let mut m = self.shared.metrics.lock().unwrap();
+            m.admit_batches += 1;
+            m.peak_admit_batch = m.peak_admit_batch.max(batch.len());
+        }
+        let fresh: Vec<((usize, String), FreshResult)> = tasks
+            .into_iter()
+            .zip(results)
+            .map(|(t, r)| ((t.di, t.app), r))
+            .collect();
+        for (job, workload) in batch {
+            self.admit_one(job, workload, &fresh);
+        }
+    }
+
+    /// Queue one job of the batch.  The job gets one plan per
+    /// compatible device; it fails only when no compatible device can
+    /// classify it.
     ///
     /// Classification is **eager per compatible device**: placement
     /// compares per-device p90 predictions across candidate nodes, so
@@ -716,18 +1231,21 @@ impl Dispatcher {
     /// native alternative really is one full sweep per device — not per
     /// job.  Pin jobs (`Job::device`) to confine profiling to one
     /// device family.
-    fn admit(&mut self, job: Job, workload: Workload) {
+    fn admit_one(
+        &mut self,
+        job: Job,
+        workload: Workload,
+        fresh: &[((usize, String), FreshResult)],
+    ) {
         let ndev = self.shared.devices.len();
-        let compat: Vec<usize> = match &job.device {
-            None => (0..ndev).collect(),
-            Some(sel) => (0..ndev)
-                .filter(|&i| self.shared.devices[i].profile.matches(sel))
-                .collect(),
-        };
         let mut plans: Vec<Option<DevicePlan>> = vec![None; ndev];
         let mut all_cached = true;
-        for &di in &compat {
-            if let Some(p) = self.plan_for_device(di, &job, &workload) {
+        for di in self.compat_devices(&job) {
+            let task = fresh
+                .iter()
+                .find(|((ti, ta), _)| *ti == di && *ta == workload.app)
+                .map(|(_, r)| r);
+            if let Some(p) = self.plan_for_device(di, &job, &workload, task) {
                 all_cached &= p.cached;
                 plans[di] = Some(p);
             }
@@ -751,13 +1269,21 @@ impl Dispatcher {
     }
 
     /// One device's admission plan for one job: serve the (device, app)
-    /// plan cache, or profile on that device and classify against its
-    /// serving reference set — class-first when a registry exists,
-    /// streaming early-exit when admission is streaming.  On a
-    /// transfer-served device the cap is mapped onto the device's
-    /// frequency range and the target is absorbed into the serving
-    /// registry (transfer-then-absorb).
-    fn plan_for_device(&self, di: usize, job: &Job, workload: &Workload) -> Option<DevicePlan> {
+    /// plan cache, or consume the tick's precomputed profile (and, on a
+    /// native device, its lane-classified plan) — class-first when a
+    /// registry exists, streaming early-exit when admission is
+    /// streaming.  On a transfer-served device classification runs here,
+    /// serially: the cap is mapped onto the device's frequency range
+    /// and the target is absorbed into the serving registry
+    /// (transfer-then-absorb), and that mutation is why the merge owns
+    /// it.
+    fn plan_for_device(
+        &self,
+        di: usize,
+        job: &Job,
+        workload: &Workload,
+        fresh: Option<&FreshResult>,
+    ) -> Option<DevicePlan> {
         let shared = &self.shared;
         let dev = &shared.devices[di];
         // Re-bind a cached plan to this job's objective (both caps are
@@ -772,95 +1298,98 @@ impl Dispatcher {
             base
         };
         let (plan, cached, cost_s, fraction, class_id) = {
-            let mut cache = shared.plans.lock().unwrap();
-            let app_slot = (di, workload.app.clone());
-            let hit = cache
-                .app_key
-                .get(&app_slot)
-                .and_then(|k| cache.by_key.get(k).map(|v| (k.clone(), v.clone())));
-            if let Some((key, (p, _, cid))) = hit {
-                let mut m = shared.metrics.lock().unwrap();
-                *m.plan_cache_hits.entry(key).or_insert(0) += 1;
-                drop(m);
+            if let Some((key, p, cid)) = shared.plans.lookup(di, &workload.app) {
+                shared.plans.record_hit(&key);
                 (rebind(&p, job.objective), true, 0.0, 1.0, cid)
             } else {
-                let prof = profile(
-                    &ProfileRequest::new(&dev.spec, workload, DvfsMode::Uncapped)
-                        .with_params(&shared.cfg.sim),
-                );
-                let mut reg_guard = dev.registry.lock().unwrap();
-                // Streaming admission: replay the profiling telemetry
-                // through the online classifier and stop at the early
-                // exit — the tail of the trace is profiling time a live
-                // deployment would never have spent.  Both paths run the
-                // shared `SelectOptimalFreq::classify` (class-first when
-                // the registry exists), so the *plan* can only differ
-                // through the prefix's features, never the algorithm.
-                let online = match shared.cfg.admission {
-                    AdmissionMode::Streaming { window_samples, stable_k } => {
-                        let cfg = OnlineConfig::new(window_samples, stable_k, job.objective);
-                        let util = UtilPoint::new(prof.app_sm_util, prof.app_dram_util);
-                        let mut oc = OnlineClassifier::new(
-                            &dev.refset,
-                            &shared.cfg.minos,
-                            cfg,
-                            &workload.name,
-                            &workload.app,
-                            util,
-                        )
-                        // normalize by the profiled trace's own TDP (the
-                        // node GPU's) — under transfer serving the refset
-                        // was built for a different device, and the
-                        // TDP-relative features are what carry across
-                        .with_tdp(prof.trace.tdp_w)
-                        .with_sample_dt(prof.trace.sample_dt_ms);
-                        if let Some(reg) = reg_guard.as_ref() {
-                            oc = oc.with_registry(reg);
-                        }
-                        oc.run_trace(&prof.trace)
+                // Every (device, app) that missed the cache at batch-scan
+                // time has a task; a second job of the same app resolves
+                // through the cache branch above after the first job's
+                // merge installs the key.
+                let result = fresh?;
+                let prof = &result.prof;
+                let (fresh_plan, fresh_class, fraction, early) = match &result.cls {
+                    FreshCls::Ready(out) => {
+                        let c = out.as_ref()?;
+                        (c.plan.clone(), c.class_id, c.fraction, c.early)
                     }
-                    AdmissionMode::Batch => None,
-                };
-                let (fresh_plan, fresh_class, fraction, early) = match online {
-                    Some(d) => {
-                        let f = d.trace_fraction.unwrap_or(1.0);
-                        (d.plan, d.class_id, f, d.early_exit)
-                    }
-                    None => {
-                        // batch mode, or an online path that could not
-                        // classify (degenerate trace): full-trace fallback
-                        let target = TargetProfile::from_profile(
-                            &workload.app,
-                            &prof,
-                            &dev.refset.bin_sizes,
-                        );
-                        let mut sel = SelectOptimalFreq::new(&dev.refset, &shared.cfg.minos);
-                        if let Some(reg) = reg_guard.as_ref() {
-                            sel = sel.with_registry(reg);
-                        }
-                        let cls = sel.classify(&target, job.objective)?;
-                        (cls.plan, cls.class_id, 1.0, false)
-                    }
-                };
-                // Transfer-then-absorb: a target classified against a
-                // borrowed (primary-device) reference set joins that
-                // registry's class structure so future same-class apps
-                // on this device share its plan.
-                if !dev.native {
-                    if let Some(reg) = reg_guard.as_mut() {
-                        if reg.class_of(&workload.name).is_none() {
-                            let target = TargetProfile::from_profile(
-                                &workload.app,
-                                &prof,
-                                &dev.refset.bin_sizes,
-                            );
-                            if reg.absorb(&dev.refset, &target).is_ok() {
-                                shared.metrics.lock().unwrap().transfer_absorbs += 1;
+                    FreshCls::Deferred => {
+                        // Transfer-served device: classify now, under the
+                        // serial merge, because the absorb below mutates
+                        // the serving registry and later classifications
+                        // must observe it in arrival order.
+                        let mut reg_guard = dev.registry.write().unwrap();
+                        let online = match shared.cfg.admission {
+                            AdmissionMode::Streaming { window_samples, stable_k } => {
+                                let cfg =
+                                    OnlineConfig::new(window_samples, stable_k, job.objective);
+                                let util =
+                                    UtilPoint::new(prof.app_sm_util, prof.app_dram_util);
+                                let mut oc = OnlineClassifier::new(
+                                    &dev.refset,
+                                    &shared.cfg.minos,
+                                    cfg,
+                                    &workload.name,
+                                    &workload.app,
+                                    util,
+                                )
+                                // normalize by the profiled trace's own TDP
+                                // (the node GPU's) — the refset was built
+                                // for a different device, and the
+                                // TDP-relative features are what carry
+                                // across
+                                .with_tdp(prof.trace.tdp_w)
+                                .with_sample_dt(prof.trace.sample_dt_ms);
+                                if let Some(reg) = reg_guard.as_ref() {
+                                    oc = oc.with_registry(reg);
+                                }
+                                oc.run_trace(&prof.trace)
+                            }
+                            AdmissionMode::Batch => None,
+                        };
+                        let (fresh_plan, fresh_class, fraction, early) = match online {
+                            Some(d) => {
+                                let f = d.trace_fraction.unwrap_or(1.0);
+                                (d.plan, d.class_id, f, d.early_exit)
+                            }
+                            None => {
+                                // batch mode, or an online path that could
+                                // not classify (degenerate trace):
+                                // full-trace fallback
+                                let target = TargetProfile::from_profile(
+                                    &workload.app,
+                                    prof,
+                                    &dev.refset.bin_sizes,
+                                );
+                                let mut sel =
+                                    SelectOptimalFreq::new(&dev.refset, &shared.cfg.minos);
+                                if let Some(reg) = reg_guard.as_ref() {
+                                    sel = sel.with_registry(reg);
+                                }
+                                let cls = sel.classify(&target, job.objective)?;
+                                (cls.plan, cls.class_id, 1.0, false)
+                            }
+                        };
+                        // Transfer-then-absorb: a target classified
+                        // against a borrowed (primary-device) reference
+                        // set joins that registry's class structure so
+                        // future same-class apps on this device share its
+                        // plan.
+                        if let Some(reg) = reg_guard.as_mut() {
+                            if reg.class_of(&workload.name).is_none() {
+                                let target = TargetProfile::from_profile(
+                                    &workload.app,
+                                    prof,
+                                    &dev.refset.bin_sizes,
+                                );
+                                if reg.absorb(&dev.refset, &target).is_ok() {
+                                    shared.metrics.lock().unwrap().transfer_absorbs += 1;
+                                }
                             }
                         }
+                        (fresh_plan, fresh_class, fraction, early)
                     }
-                }
-                drop(reg_guard);
+                };
                 let used_s = prof.profiling_cost_s * fraction;
                 {
                     let mut m = shared.metrics.lock().unwrap();
@@ -885,22 +1414,17 @@ impl Dispatcher {
                     Some(cid) => format!("dev:{}|class:{cid}", dev.profile.key),
                     None => format!("dev:{}|app:{}", dev.profile.key, workload.app),
                 };
-                let plan = match cache.by_key.get(&key) {
-                    Some((p, _, _)) => {
-                        let mut m = shared.metrics.lock().unwrap();
-                        m.class_plan_shares += 1;
-                        *m.plan_cache_hits.entry(key.clone()).or_insert(0) += 1;
-                        drop(m);
-                        rebind(p, job.objective)
-                    }
-                    None => {
-                        cache
-                            .by_key
-                            .insert(key.clone(), (fresh_plan.clone(), used_s, fresh_class));
-                        fresh_plan
-                    }
+                let (plan, shared_plan) =
+                    shared
+                        .plans
+                        .share_or_install(&key, fresh_plan, used_s, fresh_class);
+                let plan = if shared_plan {
+                    shared.metrics.lock().unwrap().class_plan_shares += 1;
+                    rebind(&plan, job.objective)
+                } else {
+                    plan
                 };
-                cache.app_key.insert(app_slot, key);
+                shared.plans.bind_app(di, &workload.app, key);
                 (plan, false, used_s, fraction, fresh_class)
             }
         };
@@ -944,7 +1468,13 @@ impl Dispatcher {
                 break;
             };
             let mut best: Option<(usize, f64)> = None; // (node, headroom)
-            for (i, n) in self.nodes.iter().enumerate() {
+            // Global node order, routed through the shard map: placement
+            // reads each node's ledger from its owning shard but compares
+            // candidates in the same order regardless of shard count, so
+            // the chosen node — and the outcome table — never depend on
+            // how the fleet was striped.
+            for i in 0..self.shared.node_specs.len() {
+                let n = self.ledger.node(i);
                 if n.free.is_empty() {
                     continue;
                 }
@@ -990,15 +1520,15 @@ impl Dispatcher {
         let plan = adm.plans[di]
             .clone()
             .expect("try_place only selects nodes the job has a plan for");
-        let gpu = self.nodes[ni].free.remove(0); // lowest free device id
+        let gpu = self.ledger.node_mut(ni).free.remove(0); // lowest free device id
         {
-            let node = &mut self.nodes[ni];
+            let node = self.ledger.node_mut(ni);
             node.ledger_w += plan.predicted_p90_w;
             node.resident.push(adm.job.id);
+            let ledger_w = node.ledger_w;
             let mut m = self.shared.metrics.lock().unwrap();
-            m.node_peak_admitted_p90_w[ni] =
-                m.node_peak_admitted_p90_w[ni].max(node.ledger_w);
-            m.peak_admitted_p90_w = m.peak_admitted_p90_w.max(node.ledger_w);
+            m.node_peak_admitted_p90_w[ni] = m.node_peak_admitted_p90_w[ni].max(ledger_w);
+            m.peak_admitted_p90_w = m.peak_admitted_p90_w.max(ledger_w);
             if plan.transferred {
                 m.transfers += 1;
             }
@@ -1108,8 +1638,9 @@ impl Dispatcher {
                 std::thread::sleep(Duration::from_micros(us));
             }
         }
+        let shard = self.ledger.shard_of(r.node);
         {
-            let node = &mut self.nodes[r.node];
+            let node = self.ledger.node_mut(r.node);
             node.ledger_w = (node.ledger_w - r.plan.predicted_p90_w).max(0.0);
             let pos = node
                 .free
@@ -1126,6 +1657,7 @@ impl Dispatcher {
                     job: r.job,
                     node: r.node,
                     gpu: r.gpu,
+                    shard,
                     device: dev.profile.key.clone(),
                     f_cap_mhz: r.plan.cap_mhz,
                     pwr_neighbor: r.plan.pwr_neighbor,
@@ -1146,6 +1678,7 @@ impl Dispatcher {
                 {
                     let mut m = self.shared.metrics.lock().unwrap();
                     m.completed += 1;
+                    m.jobs_by_shard[shard] += 1;
                     m.total_energy_j += outcome.energy_j;
                     if outcome.job.objective == Objective::PowerCentric
                         && outcome.observed_p90_w
@@ -1503,5 +2036,97 @@ mod tests {
         assert_eq!(outcomes.len(), 2);
         // and a fully drained scheduler keeps returning None, not hanging
         assert!(sched.next_outcome().is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one shard")]
+    fn zero_shards_is_rejected() {
+        let cfg = SchedulerConfig {
+            shards: 0,
+            ..Default::default()
+        };
+        let _ = PowerAwareScheduler::new(cfg, small_refset());
+    }
+
+    #[test]
+    fn assign_shards_stripes_by_device_family_in_contiguous_groups() {
+        // 2 device families interleaved across 6 nodes, 2 shards: each
+        // family's nodes must land in one contiguous stripe, families
+        // first (never split a family across more stripes than needed).
+        let nd = vec![0, 1, 0, 1, 0, 1];
+        let s = assign_shards(&nd, 2);
+        assert_eq!(s.len(), 6);
+        // family 0 = nodes 0,2,4 → shard 0; family 1 = nodes 1,3,5 → shard 1
+        assert_eq!(s, vec![0, 1, 0, 1, 0, 1]);
+        // more shards than nodes clamps to one node per stripe
+        let s1 = assign_shards(&[0, 0], 8);
+        assert_eq!(s1, vec![0, 1]);
+        // one shard owns everything
+        assert!(assign_shards(&nd, 1).iter().all(|&x| x == 0));
+        // empty fleet is fine (no panics)
+        assert!(assign_shards(&[], 4).is_empty());
+    }
+
+    /// The satellite fix's witness: metrics that sharding touches
+    /// (plan_cache_hits, transfers, per-node budgets, jobs_by_shard)
+    /// must aggregate across shards without double-counting — the
+    /// shard-summed totals equal the single-dispatcher totals on an
+    /// identical queue, and the outcome tables match byte for byte.
+    #[test]
+    fn sharded_metrics_aggregate_equals_single_dispatcher_totals() {
+        let run = |shards: usize| {
+            let cfg = SchedulerConfig {
+                node: NodeSpec {
+                    gpus_per_node: 2,
+                    ..NodeSpec::hpc_fund()
+                },
+                nodes: 4,
+                admission: AdmissionMode::Batch,
+                shards,
+                ..Default::default()
+            };
+            let sched = PowerAwareScheduler::new(cfg, small_refset());
+            let pool = ["faiss-b4096", "sdxl-b64", "faiss-b4096", "milc-6", "sdxl-b64", "sgemm"];
+            for (i, wl) in pool.iter().enumerate() {
+                sched
+                    .submit(Job {
+                        id: i as u64,
+                        workload: wl.to_string(),
+                        objective: if i % 2 == 0 {
+                            Objective::PowerCentric
+                        } else {
+                            Objective::PerfCentric
+                        },
+                        iterations: 2,
+                        device: None,
+                    })
+                    .unwrap();
+            }
+            let mut outcomes = sched.collect(pool.len());
+            sched.shutdown();
+            outcomes.sort_by_key(|o| o.job.id);
+            (outcome_table(&outcomes), sched.metrics())
+        };
+        let (t1, m1) = run(1);
+        let (t4, m4) = run(4);
+        assert_eq!(t1, t4, "outcome table must be byte-identical across shard counts");
+        assert_eq!(m1.completed, m4.completed);
+        assert_eq!(m1.failed, m4.failed);
+        assert_eq!(m1.cache_hits, m4.cache_hits);
+        assert_eq!(m1.profiles_run, m4.profiles_run);
+        assert_eq!(m1.class_plan_shares, m4.class_plan_shares);
+        assert_eq!(m1.transfers, m4.transfers);
+        assert_eq!(
+            m1.plan_cache_hits, m4.plan_cache_hits,
+            "striped plan-cache hit counters must fold to the single-dispatcher map"
+        );
+        assert_eq!(m1.node_budget_w_by_node, m4.node_budget_w_by_node);
+        assert_eq!(m1.total_energy_j.to_bits(), m4.total_energy_j.to_bits());
+        // per-shard views are partitions of the totals, never re-counts
+        assert_eq!(m1.jobs_by_shard.len(), 1);
+        assert_eq!(m1.jobs_by_shard[0], m1.completed);
+        assert_eq!(m4.jobs_by_shard.iter().sum::<usize>(), m4.completed);
+        assert_eq!(m4.shards, 4);
+        assert_eq!(m4.node_shard.len(), 4);
     }
 }

@@ -17,7 +17,8 @@
 //!   experiment <id>                   fig1..fig12, table1, table2,
 //!                                     headline, streaming, transfer, all
 //!   serve [--queue a,b@a100,c | --load N] [--iterations N]
-//!         [--nodes N | --nodes-mixed] [--policy uniform|minos] [--budget W]
+//!         [--nodes N | --nodes-mixed] [--shards N] [--policy uniform|minos]
+//!         [--budget W]
 //!   fleet <build|stats|transfer>      per-device registries + cross-device
 //!                                     class transfer
 //!   verify-artifacts                  PJRT vs native cross-check
@@ -55,8 +56,9 @@ const USAGE: &str = "usage: minos [--config FILE] [--jobs N] [--allow-stale] [--
          [--stable-k K] [--sm PCT --dram PCT] [--objective power|perf] [--exact]
          [--search flat|class]
   serve [--queue a,b@a100,c@mi300x | --load N] [--iterations N] [--nodes N] [--nodes-mixed]
-        [--policy uniform|minos] [--admission stream|batch] [--budget W]
-        [--search flat|class]    (queue entries pin devices with wl@device)
+        [--shards N] [--policy uniform|minos] [--admission stream|batch] [--budget W]
+        [--search flat|class]    (queue entries pin devices with wl@device;
+         the outcome table is byte-identical for every --shards value)
   registry <build|inspect|stats|absorb <workload>> [--file SNAPSHOT.json] [--out FILE]
   fleet <build|stats> [--devices mi300x,a100] [--out DIR]
   fleet transfer [--from mi300x] [--to a100] [--calib K]";
@@ -762,6 +764,12 @@ fn main() -> anyhow::Result<()> {
                 config.nodes
             });
             anyhow::ensure!(nodes >= 1, "--nodes must be >= 1");
+            let shards = parse_flag::<usize>(&mut args, "--shards")?.unwrap_or(config.shards);
+            anyhow::ensure!(
+                shards >= 1,
+                "--shards must be >= 1 (the outcome table is byte-identical for every \
+                 value, so 0 has no meaning)"
+            );
             let budget = parse_flag::<f64>(&mut args, "--budget")?;
             let policy = match args.flag("--policy") {
                 None => CapPolicy::MinosAware,
@@ -848,7 +856,7 @@ fn main() -> anyhow::Result<()> {
                 .collect::<Vec<_>>()
                 .join("+");
             println!(
-                "serve: {} jobs on {} node(s) [{}] | policy {} | admission {} | {} search",
+                "serve: {} jobs on {} node(s) [{}] | {} shard(s) | policy {} | admission {} | {} search",
                 list.len(),
                 resolved.len(),
                 resolved
@@ -856,6 +864,7 @@ fn main() -> anyhow::Result<()> {
                     .map(|n| format!("{}x{} ({:.0} W)", n.gpus_per_node, n.gpu.name, n.power_budget_w))
                     .collect::<Vec<_>>()
                     .join(", "),
+                shards,
                 policy.label(),
                 admission.label(),
                 search.label()
@@ -871,6 +880,7 @@ fn main() -> anyhow::Result<()> {
                 sim: config.sim.clone(),
                 minos: config.minos.clone(),
                 sim_ms_per_wall_ms: 0.0,
+                shards,
             };
             let sched = PowerAwareScheduler::with_fleet(cfg, fleet);
             for (i, (wl, dev)) in list.iter().enumerate() {

@@ -18,7 +18,7 @@
 use crate::config::MinosParams;
 use crate::features::{spike_vector, SpikeVector, UtilPoint};
 use crate::minos::reference_set::{ReferenceEntry, ReferenceSet, ScalingData};
-use crate::registry::ClassRegistry;
+use crate::registry::{index::IndexHit, ClassRegistry};
 use crate::sim::profiler::Profile;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -285,10 +285,66 @@ impl<'a> SelectOptimalFreq<'a> {
         // with the winning class id + membership margin as diagnostics.
         // The flat ranking is the oracle fallback (and the only path
         // when no registry is attached).
-        let (rp, dp, runner_up, class_id, class_margin) = match self
-            .registry
-            .and_then(|reg| reg.top2(self.refset, target, c))
-        {
+        let hit = self.registry.and_then(|reg| reg.top2(self.refset, target, c));
+        self.finish_classification(target, objective, c, hit)
+    }
+
+    /// Batched Algorithm 1: classify many targets at once, amortizing
+    /// the registry's centroid pass across the batch via
+    /// [`ClassRegistry::top2_batch`].  Targets are grouped by their
+    /// chosen bin size (each target still picks its own bin exactly as
+    /// [`SelectOptimalFreq::classify`] does), one SoA batch query runs
+    /// per group, and the per-target tail is the same
+    /// `finish_classification` the single path uses — so the results
+    /// are bit-exact against calling `classify` per target.
+    pub fn classify_batch(
+        &self,
+        targets: &[(&TargetProfile, Objective)],
+    ) -> Vec<Option<Classification>> {
+        let bins: Vec<f64> = targets
+            .iter()
+            .map(|&(t, _)| self.choose_bin_size(t))
+            .collect();
+        // group target indices by chosen bin, preserving input order
+        // within each group (bin values come from the refset's own list,
+        // so bit-equality is the right grouping key)
+        let mut groups: Vec<(f64, Vec<usize>)> = Vec::new();
+        for (i, &c) in bins.iter().enumerate() {
+            match groups.iter_mut().find(|(gc, _)| gc.to_bits() == c.to_bits()) {
+                Some((_, idxs)) => idxs.push(i),
+                None => groups.push((c, vec![i])),
+            }
+        }
+        let mut hits: Vec<Option<IndexHit>> = targets.iter().map(|_| None).collect();
+        if let Some(reg) = self.registry {
+            for (c, idxs) in &groups {
+                let batch: Vec<&TargetProfile> =
+                    idxs.iter().map(|&i| targets[i].0).collect();
+                for (&i, hit) in idxs.iter().zip(reg.top2_batch(self.refset, &batch, *c)) {
+                    hits[i] = hit;
+                }
+            }
+        }
+        targets
+            .iter()
+            .zip(bins)
+            .zip(hits)
+            .map(|((&(t, obj), c), hit)| self.finish_classification(t, obj, c, hit))
+            .collect()
+    }
+
+    /// The shared tail of Algorithm 1: neighbor resolution (registry hit
+    /// or flat fallback), utilization neighbor, frequency caps, and
+    /// margins.  Both `classify` and `classify_batch` funnel through
+    /// here, which is what makes the batch path bit-exact.
+    fn finish_classification(
+        &self,
+        target: &TargetProfile,
+        objective: Objective,
+        c: f64,
+        hit: Option<IndexHit<'a>>,
+    ) -> Option<Classification> {
+        let (rp, dp, runner_up, class_id, class_margin) = match hit {
             Some(hit) => (
                 hit.best.0,
                 hit.best.1,
@@ -516,6 +572,67 @@ mod tests {
                     assert_eq!(da.to_bits(), db.to_bits(), "bin {c}");
                 }
                 (a, b) => panic!("bin {c}: {:?} vs {:?}", a.map(|x| x.1), b.map(|x| x.1)),
+            }
+        }
+    }
+
+    #[test]
+    fn classify_batch_is_bit_exact_against_per_target_classify() {
+        let (rs, params) = setup();
+        let reg = crate::registry::ClassRegistry::build(&rs, &params).unwrap();
+        let names = ["faiss-b4096", "sdxl-b64", "milc-6", "lammps-8x8x16"];
+        let targets: Vec<TargetProfile> = names.iter().map(|n| target(n)).collect();
+        let batch_in: Vec<(&TargetProfile, Objective)> = targets
+            .iter()
+            .enumerate()
+            .map(|(i, t)| {
+                let obj = if i % 2 == 0 {
+                    Objective::PowerCentric
+                } else {
+                    Objective::PerfCentric
+                };
+                (t, obj)
+            })
+            .collect();
+        // both with and without a registry attached
+        for sel in [
+            SelectOptimalFreq::new(&rs, &params),
+            SelectOptimalFreq::new(&rs, &params).with_registry(&reg),
+        ] {
+            let batch = sel.classify_batch(&batch_in);
+            assert_eq!(batch.len(), batch_in.len());
+            for (&(t, obj), b) in batch_in.iter().zip(&batch) {
+                let a = sel.classify(t, obj).expect("single classify succeeds");
+                let b = b.as_ref().expect("batch classify succeeds");
+                assert_eq!(a.plan.pwr_neighbor, b.plan.pwr_neighbor, "{}", t.name);
+                assert_eq!(
+                    a.plan.pwr_distance.to_bits(),
+                    b.plan.pwr_distance.to_bits(),
+                    "{}",
+                    t.name
+                );
+                assert_eq!(a.plan.util_neighbor, b.plan.util_neighbor, "{}", t.name);
+                assert_eq!(
+                    a.plan.f_cap_mhz.to_bits(),
+                    b.plan.f_cap_mhz.to_bits(),
+                    "{}",
+                    t.name
+                );
+                assert_eq!(
+                    a.plan.chosen_bin_size.to_bits(),
+                    b.plan.chosen_bin_size.to_bits(),
+                    "{}",
+                    t.name
+                );
+                assert_eq!(a.margin.to_bits(), b.margin.to_bits(), "{}", t.name);
+                assert_eq!(a.class_id, b.class_id, "{}", t.name);
+                assert_eq!(
+                    a.class_margin.map(f64::to_bits),
+                    b.class_margin.map(f64::to_bits),
+                    "{}",
+                    t.name
+                );
+                assert_eq!(a.runner_up.is_some(), b.runner_up.is_some(), "{}", t.name);
             }
         }
     }

@@ -228,6 +228,59 @@ impl VectorIndex {
     ) -> Option<IndexHit<'a>> {
         let b = self.bin_index(bin)?;
         let cd = self.centroid_rank(tv, bin);
+        self.refine_ranked(refset, tv, exclude_app, b, &cd)
+    }
+
+    /// Batched top-2: one SoA pass over the class centroids for *all*
+    /// targets (class-major outer loop, so each centroid row is streamed
+    /// once per batch instead of once per job), then the per-target
+    /// refine identical to [`VectorIndex::top2`].  Bit-exact against
+    /// per-job queries by construction — both paths share
+    /// [`VectorIndex::refine_ranked`] and the centroid arithmetic is the
+    /// same `cos_dist` call in the same order.
+    pub fn query_batch<'a>(
+        &self,
+        refset: &'a ReferenceSet,
+        targets: &[(&SpikeVector, Option<&str>)],
+        bin: f64,
+    ) -> Vec<Option<IndexHit<'a>>> {
+        let Some(b) = self.bin_index(bin) else {
+            return targets.iter().map(|_| None).collect();
+        };
+        let k = self.ranges.len();
+        // centroid-distance matrix, filled class-major: dist[t][ci]
+        let mut dist = vec![vec![0.0f64; k]; targets.len()];
+        for ci in 0..k {
+            let cv = &self.centroids[b][ci * NBINS..(ci + 1) * NBINS];
+            let cn = self.centroid_norms[b][ci];
+            for (t, &(tv, _)) in targets.iter().enumerate() {
+                dist[t][ci] = cos_dist(&tv.v, tv.norm, cv, cn);
+            }
+        }
+        targets
+            .iter()
+            .zip(&dist)
+            .map(|(&(tv, exclude_app), row)| {
+                let mut cd: Vec<(usize, f64)> =
+                    row.iter().enumerate().map(|(ci, &d)| (ci, d)).collect();
+                cd.sort_by(|x, y| x.1.total_cmp(&y.1).then(x.0.cmp(&y.0)));
+                self.refine_ranked(refset, tv, exclude_app, b, &cd)
+            })
+            .collect()
+    }
+
+    /// Shared refine stage: given the centroid ranking for one target,
+    /// scan member slots class by class with angular-bound pruning.
+    /// Both the single-query and batched paths funnel through here, so
+    /// their results cannot diverge.
+    fn refine_ranked<'a>(
+        &self,
+        refset: &'a ReferenceSet,
+        tv: &SpikeVector,
+        exclude_app: Option<&str>,
+        b: usize,
+        cd: &[(usize, f64)],
+    ) -> Option<IndexHit<'a>> {
         if cd.is_empty() {
             return None;
         }
@@ -244,7 +297,7 @@ impl VectorIndex {
         let mut best: Option<(usize, f64)> = None;
         let mut second: Option<(usize, f64)> = None;
         let mut scanned = 0usize;
-        for &(ci, dc) in &cd {
+        for &(ci, dc) in cd {
             if let Some((_, d2)) = second {
                 // θ(t, m) ≥ θ(t, c) − radius(class): if even the bound
                 // cannot beat the current runner-up, skip the class.  The
@@ -471,6 +524,61 @@ mod tests {
         let (fb, _) = flat_top2(&rs, &tv, None);
         assert_eq!(hit.best.0.name, fb.unwrap().0.name);
         assert_eq!(hit.best.1, 1.0);
+    }
+
+    #[test]
+    fn batch_query_is_bit_exact_against_single_queries() {
+        let (rs, classes) = synth_refset(80, 5, 11);
+        let idx = VectorIndex::build(&rs, &classes, &[]).unwrap();
+        let mut rng = Rng::new(42);
+        let mut tvs = Vec::new();
+        for t in 0..40 {
+            let p = t % 5;
+            let mut v = vec![0.0; NBINS];
+            v[4 * p] = 0.5 + rng.range(-0.3, 0.3);
+            v[4 * p + 1] = 0.5 + rng.range(-0.3, 0.3);
+            v[(4 * p + 9) % NBINS] = rng.range(0.0, 0.2);
+            tvs.push(SpikeVector::new(v, 60.0, 0.1));
+        }
+        // mix of excluded and non-excluded targets, plus a zero vector
+        tvs.push(SpikeVector::zeros(0.1));
+        let targets: Vec<(&SpikeVector, Option<&str>)> = tvs
+            .iter()
+            .enumerate()
+            .map(|(t, tv)| (tv, if t % 4 == 0 { Some("app0") } else { None }))
+            .collect();
+        let batch = idx.query_batch(&rs, &targets, 0.1);
+        assert_eq!(batch.len(), targets.len());
+        for (t, (&(tv, excl), bh)) in targets.iter().zip(&batch).enumerate() {
+            let sh = idx.top2(&rs, tv, excl, 0.1);
+            match (sh, bh) {
+                (Some(s), Some(b)) => {
+                    assert_eq!(s.best.0.name, b.best.0.name, "target {t}");
+                    assert_eq!(s.best.1.to_bits(), b.best.1.to_bits(), "target {t}");
+                    assert_eq!(s.class_id, b.class_id, "target {t}");
+                    assert_eq!(
+                        s.class_margin.to_bits(),
+                        b.class_margin.to_bits(),
+                        "target {t}"
+                    );
+                    assert_eq!(s.classes_scanned, b.classes_scanned, "target {t}");
+                    match (&s.runner_up, &b.runner_up) {
+                        (Some((se, sd)), Some((be, bd))) => {
+                            assert_eq!(se.name, be.name, "target {t}");
+                            assert_eq!(sd.to_bits(), bd.to_bits(), "target {t}");
+                        }
+                        (None, None) => {}
+                        _ => panic!("target {t}: runner_up presence diverged"),
+                    }
+                }
+                (None, None) => {}
+                _ => panic!("target {t}: hit presence diverged"),
+            }
+        }
+        // unindexed bin: the whole batch comes back None
+        let zv = SpikeVector::zeros(0.2);
+        let none = idx.query_batch(&rs, &[(&zv, None)], 0.2);
+        assert!(none[0].is_none());
     }
 
     #[test]

@@ -302,6 +302,35 @@ impl ClassRegistry {
         self.index.top2(refset, tv, Some(&target.app), c)
     }
 
+    /// Batched class-first top-2 over many targets at one bin size: one
+    /// SoA centroid pass amortized across the whole batch, then the same
+    /// per-target refine as [`ClassRegistry::top2`] — bit-exact against
+    /// issuing the single-target query per job.  Targets lacking a spike
+    /// vector at `c` come back `None`, exactly like `top2`.
+    pub fn top2_batch<'a, 'b>(
+        &self,
+        refset: &'a ReferenceSet,
+        targets: &[&'b TargetProfile],
+        c: f64,
+    ) -> Vec<Option<IndexHit<'a>>> {
+        // Partition out targets missing the bin so the batch layout
+        // only carries live vectors; reassemble in input order after.
+        let mut live: Vec<(usize, (&SpikeVector, Option<&str>))> = Vec::new();
+        for (i, t) in targets.iter().enumerate() {
+            if let Some(tv) = t.vector_for(c) {
+                live.push((i, (tv, Some(t.app.as_str()))));
+            }
+        }
+        let queries: Vec<(&SpikeVector, Option<&str>)> =
+            live.iter().map(|&(_, q)| q).collect();
+        let hits = self.index.query_batch(refset, &queries, c);
+        let mut out: Vec<Option<IndexHit<'a>>> = targets.iter().map(|_| None).collect();
+        for ((i, _), hit) in live.into_iter().zip(hits) {
+            out[i] = hit;
+        }
+        out
+    }
+
     /// Absorb a newly classified target: join the nearest class, or
     /// spawn a new one when the margin/radius gate says it belongs to no
     /// existing class.  Bumps the snapshot version and reindexes.

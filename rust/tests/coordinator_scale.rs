@@ -1,0 +1,232 @@
+//! Scale acceptance tests for the sharded batch-classifying
+//! coordinator: a 10k-job soak across 8 nodes with per-shard ledger
+//! asserts, byte-identical outcome tables for shards=1 vs shards=4
+//! across reruns (homogeneous and mixed clusters), batch-vs-single
+//! `VectorIndex` query bit-exactness over the full reference set, and
+//! rejection of an invalid shard count.
+
+use minos::config::{Config, GpuSpec, MinosParams, NodeSpec, SimParams};
+use minos::coordinator::{
+    assign_shards, outcome_table, slot_overlaps, AdmissionMode, Job, JobOutcome,
+    PowerAwareScheduler, SchedulerConfig,
+};
+use minos::minos::algorithm::{Objective, TargetProfile};
+use minos::minos::reference_set::ReferenceSet;
+use minos::registry::ClassRegistry;
+use minos::workloads;
+use std::sync::OnceLock;
+
+const PICKS: [&str; 4] = ["sdxl-b64", "lammps-8x8x16", "bfs-indochina", "milc-6"];
+
+/// The 8-application pool `serve --load` cycles over.
+const POOL: [&str; 8] = [
+    "faiss-b4096",
+    "qwen15-moe-b32",
+    "sdxl-b64",
+    "lsms",
+    "llama3-infer-b32",
+    "lammps-8x8x16",
+    "milc-6",
+    "sgemm",
+];
+
+fn refset_for(spec: &GpuSpec) -> ReferenceSet {
+    let reg = workloads::registry();
+    let picks: Vec<&workloads::Workload> =
+        PICKS.iter().map(|n| reg.by_name(n).unwrap()).collect();
+    ReferenceSet::build(spec, &SimParams::default(), &MinosParams::default(), &picks)
+}
+
+fn refset() -> &'static ReferenceSet {
+    static RS: OnceLock<ReferenceSet> = OnceLock::new();
+    RS.get_or_init(|| refset_for(&GpuSpec::mi300x()))
+}
+
+fn queue(n: usize) -> Vec<Job> {
+    (0..n as u64)
+        .map(|i| Job {
+            id: i,
+            workload: POOL[i as usize % POOL.len()].to_string(),
+            objective: if i % 2 == 0 {
+                Objective::PowerCentric
+            } else {
+                Objective::PerfCentric
+            },
+            iterations: 1,
+            device: None,
+        })
+        .collect()
+}
+
+fn run(cfg: SchedulerConfig, jobs: &[Job]) -> (Vec<JobOutcome>, minos::coordinator::SchedulerMetrics) {
+    let sched = PowerAwareScheduler::new(cfg, refset().clone());
+    for j in jobs {
+        sched.submit(j.clone()).unwrap();
+    }
+    let mut outcomes = sched.collect(jobs.len());
+    sched.shutdown();
+    outcomes.sort_by_key(|o| o.job.id);
+    (outcomes, sched.metrics())
+}
+
+fn scale_cfg(nodes: usize, shards: usize) -> SchedulerConfig {
+    let mut node = NodeSpec::hpc_fund();
+    node.gpus_per_node = 4;
+    node.power_budget_w = node.gpu.tdp_w * 3.0; // tight: admission must gate
+    SchedulerConfig {
+        node,
+        nodes,
+        shards,
+        admission: AdmissionMode::Batch,
+        sim_ms_per_wall_ms: 0.0,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn soak_10k_jobs_8_nodes_with_per_shard_ledger_asserts() {
+    let jobs = queue(10_000);
+    let (outcomes, m) = run(scale_cfg(8, 4), &jobs);
+    assert_eq!(outcomes.len(), 10_000, "every job must complete");
+    assert_eq!(m.completed, 10_000);
+    assert_eq!(m.failed, 0);
+    assert_eq!(slot_overlaps(&outcomes), 0, "no slot double-booking at scale");
+    // 8 distinct apps, one device family: exactly 8 profiling runs, the
+    // other 9 992 jobs ride the plan cache.
+    assert_eq!(m.profiles_run, POOL.len());
+    assert_eq!(m.cache_hits, 10_000 - POOL.len());
+
+    // Per-shard ledger structure: 8 nodes over 4 shards = 2 nodes each,
+    // contiguous stripes of one device family.
+    assert_eq!(m.shards, 4);
+    assert_eq!(m.node_shard, assign_shards(&[0; 8], 4));
+    assert_eq!(m.node_shard, vec![0, 0, 1, 1, 2, 2, 3, 3]);
+    assert_eq!(m.jobs_by_shard.len(), 4);
+    assert_eq!(
+        m.jobs_by_shard.iter().sum::<usize>(),
+        m.completed,
+        "per-shard completion counts must partition the total"
+    );
+    // Outcome shard ids agree with the node→shard map, and every node's
+    // peak ledger respected its budget.
+    for o in &outcomes {
+        assert_eq!(o.shard, m.node_shard[o.node], "job {}", o.job.id);
+    }
+    for (ni, &peak) in m.node_peak_admitted_p90_w.iter().enumerate() {
+        assert!(
+            peak <= m.node_budget_w_by_node[ni] + 1e-6,
+            "node {ni} ledger peaked at {peak} W over its {} W budget",
+            m.node_budget_w_by_node[ni]
+        );
+    }
+}
+
+#[test]
+fn outcome_tables_byte_identical_across_shard_counts_and_reruns() {
+    let jobs = queue(96);
+    let mut tables = Vec::new();
+    for shards in [1, 4] {
+        for _rerun in 0..2 {
+            let (outcomes, m) = run(scale_cfg(8, shards), &jobs);
+            assert_eq!(m.failed, 0);
+            tables.push(outcome_table(&outcomes));
+        }
+    }
+    assert_eq!(tables[0], tables[1], "shards=1 must be stable across reruns");
+    assert_eq!(tables[2], tables[3], "shards=4 must be stable across reruns");
+    assert_eq!(
+        tables[0], tables[2],
+        "shards=1 and shards=4 must produce byte-identical outcome tables"
+    );
+}
+
+#[test]
+fn mixed_cluster_outcome_tables_shard_invariant_with_transfer_serving() {
+    // Single-refset fleet on a mixed cluster: the Lonestar6 nodes are
+    // transfer-served (classify against the primary, absorb into the
+    // borrowed registry) — the path where merge order matters most.
+    let cluster: Vec<NodeSpec> = (0..4)
+        .map(|i| {
+            if i % 2 == 0 {
+                NodeSpec::hpc_fund()
+            } else {
+                NodeSpec::lonestar6()
+            }
+        })
+        .collect();
+    let jobs = queue(32);
+    let table_for = |shards: usize| {
+        let cfg = SchedulerConfig {
+            cluster: Some(cluster.clone()),
+            shards,
+            admission: AdmissionMode::Batch,
+            ..Default::default()
+        };
+        let (outcomes, m) = run(cfg, &jobs);
+        assert_eq!(outcomes.len(), 32);
+        assert!(m.transfers > 0, "mixed cluster must exercise transfer serving");
+        outcome_table(&outcomes)
+    };
+    assert_eq!(table_for(1), table_for(3));
+}
+
+#[test]
+fn batch_index_queries_bit_exact_over_full_reference_set() {
+    let rs = refset();
+    let params = MinosParams::default();
+    let reg = ClassRegistry::build(rs, &params).expect("registry over the full refset");
+    // Every reference entry re-queried as a target (the hold-one-out
+    // shape), at every bin size the set carries.
+    let targets: Vec<TargetProfile> =
+        rs.entries.iter().map(TargetProfile::from_entry).collect();
+    let refs: Vec<&TargetProfile> = targets.iter().collect();
+    for &c in &rs.bin_sizes {
+        let batch = reg.top2_batch(rs, &refs, c);
+        assert_eq!(batch.len(), refs.len());
+        for (t, b) in refs.iter().zip(&batch) {
+            let single = reg.top2(rs, t, c);
+            match (single, b) {
+                (None, None) => {}
+                (Some(s), Some(b)) => {
+                    assert_eq!(s.best.0.name, b.best.0.name, "{} @ {c}", t.name);
+                    assert_eq!(
+                        s.best.1.to_bits(),
+                        b.best.1.to_bits(),
+                        "{} @ {c}: best distance must be bit-exact",
+                        t.name
+                    );
+                    assert_eq!(s.class_id, b.class_id);
+                    assert_eq!(s.class_margin.to_bits(), b.class_margin.to_bits());
+                    assert_eq!(s.classes_scanned, b.classes_scanned);
+                    match (s.runner_up, b.runner_up) {
+                        (None, None) => {}
+                        (Some(sr), Some(br)) => {
+                            assert_eq!(sr.0.name, br.0.name);
+                            assert_eq!(sr.1.to_bits(), br.1.to_bits());
+                        }
+                        _ => panic!("{} @ {c}: runner-up presence diverged", t.name),
+                    }
+                }
+                _ => panic!("{} @ {c}: batch and single disagree on hit presence", t.name),
+            }
+        }
+    }
+}
+
+#[test]
+fn invalid_shard_counts_are_rejected_everywhere() {
+    // config layer: explicit zero is a load error
+    let text = Config::default().to_json().dump().replace("\"shards\":1", "\"shards\":0");
+    let err = Config::from_json_str(&text).unwrap_err().to_string();
+    assert!(err.contains("shards"), "{err}");
+
+    // scheduler layer: constructing with zero shards panics
+    let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        let cfg = SchedulerConfig {
+            shards: 0,
+            ..Default::default()
+        };
+        PowerAwareScheduler::new(cfg, refset().clone())
+    }));
+    assert!(res.is_err(), "shards=0 must be rejected by the scheduler");
+}

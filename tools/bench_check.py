@@ -1,0 +1,141 @@
+#!/usr/bin/env python3
+"""CI perf-regression gate for the bench-smoke pass.
+
+Compares a bench-smoke artifact (``bench-smoke.jsonl``, one benchkit JSON
+object per line) against the committed ``BENCH_BASELINE.json`` and fails
+when any bench's ``mean_ns`` regresses more than the threshold over the
+baseline's most recent recording of that bench id.
+
+Stdlib-only by design (the CI image installs nothing).
+
+Rules
+-----
+* Only **smoke-mode** entries are compared (``smoke: true`` on both
+  sides): full bench runs have different budgets and would make the gate
+  noisy-by-construction.
+* Matching is per bench ``name``; the baseline value for a name is taken
+  from the **latest** run in ``runs`` that recorded it, so a refreshed
+  baseline supersedes older entries without deleting history.
+* A current bench with no baseline entry is reported as "new" and never
+  fails the gate (that is how a bench lands in the same PR that adds it).
+* **Bootstrap mode**: when the baseline holds no smoke results at all,
+  the script prints the artifact as a paste-ready run entry and exits 0 —
+  the trajectory has to start somewhere.
+
+Usage
+-----
+    python3 tools/bench_check.py bench-smoke.jsonl BENCH_BASELINE.json \
+        [--threshold 0.25]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def load_artifact(path: str) -> list[dict]:
+    """Parse a bench-smoke.jsonl artifact: one JSON object per line."""
+    results = []
+    with open(path, encoding="utf-8") as fh:
+        for lineno, line in enumerate(fh, 1):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                obj = json.loads(line)
+            except json.JSONDecodeError as e:
+                raise SystemExit(f"{path}:{lineno}: bad JSON line: {e}")
+            if not isinstance(obj, dict) or "name" not in obj or "mean_ns" not in obj:
+                raise SystemExit(
+                    f"{path}:{lineno}: expected a benchkit record with "
+                    f"'name' and 'mean_ns', got: {line[:120]}"
+                )
+            results.append(obj)
+    return results
+
+
+def baseline_means(baseline: dict) -> dict[str, float]:
+    """Latest smoke-mode mean_ns per bench name across baseline runs."""
+    means: dict[str, float] = {}
+    for run in baseline.get("runs", []):
+        for rec in run.get("results", []):
+            if rec.get("smoke") and "name" in rec and "mean_ns" in rec:
+                means[rec["name"]] = float(rec["mean_ns"])  # later runs win
+    return means
+
+
+def main(argv: list[str]) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("artifact", help="bench-smoke.jsonl from the bench smoke pass")
+    ap.add_argument("baseline", help="committed BENCH_BASELINE.json")
+    ap.add_argument(
+        "--threshold",
+        type=float,
+        default=0.25,
+        help="fail when mean_ns exceeds baseline by more than this fraction "
+        "(default: 0.25 = +25%%)",
+    )
+    args = ap.parse_args(argv)
+
+    current = [r for r in load_artifact(args.artifact) if r.get("smoke")]
+    if not current:
+        print("bench_check: artifact holds no smoke-mode entries; nothing to gate")
+        return 0
+
+    with open(args.baseline, encoding="utf-8") as fh:
+        baseline = json.load(fh)
+    means = baseline_means(baseline)
+
+    if not means:
+        # Bootstrap: no recorded smoke results anywhere in the baseline.
+        print(
+            "bench_check: baseline has no recorded smoke results yet — "
+            "bootstrap mode (gate passes)."
+        )
+        print(
+            "Paste-ready run entry for BENCH_BASELINE.json "
+            "(fill in the PR number):"
+        )
+        entry = {"pr": 0, "note": "recorded from CI bench-smoke.jsonl", "results": current}
+        print(json.dumps(entry, indent=2))
+        return 0
+
+    regressions = []
+    improvements = 0
+    new = 0
+    for rec in current:
+        name = rec["name"]
+        cur = float(rec["mean_ns"])
+        base = means.get(name)
+        if base is None:
+            new += 1
+            print(f"  NEW      {name}: {cur:.0f} ns (no baseline entry)")
+            continue
+        ratio = cur / base if base > 0 else float("inf")
+        delta = (ratio - 1.0) * 100.0
+        if base > 0 and ratio > 1.0 + args.threshold:
+            regressions.append((name, base, cur, delta))
+            print(f"  REGRESS  {name}: {base:.0f} -> {cur:.0f} ns ({delta:+.1f}%)")
+        else:
+            if ratio < 1.0:
+                improvements += 1
+            print(f"  ok       {name}: {base:.0f} -> {cur:.0f} ns ({delta:+.1f}%)")
+
+    print(
+        f"bench_check: {len(current)} benches, {len(regressions)} regression(s), "
+        f"{improvements} improvement(s), {new} new "
+        f"(threshold +{args.threshold * 100:.0f}% on mean_ns, smoke mode)"
+    )
+    if regressions:
+        print(
+            "bench_check: FAIL — refresh BENCH_BASELINE.json only if the "
+            "regression is understood and intended (see README 'Perf trajectory')."
+        )
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
