@@ -1,0 +1,265 @@
+//! Firehose throughput benches — the acceptance evidence that muxed,
+//! batched classification scales to fleet-sized stream counts:
+//!
+//! * `StreamMux` end-to-end samples/sec at increasing stream counts
+//!   (100 / 1k / 10k full; smaller in smoke mode), round-robin fed in
+//!   poll batches — the per-sample cost must stay flat as the tenant
+//!   count grows.
+//! * The single-stream baseline for comparison: one dedicated
+//!   `OnlineClassifier` per stream over the same sample volume.
+//!
+//! Every run is **correctness-gated**: sampled streams are re-run
+//! through a dedicated classifier and the decisions must be
+//! bit-identical, and the fleet digest must be stable across reruns —
+//! a throughput number from a wrong or flaky decision path aborts the
+//! bench.
+//!
+//! Run with: `cargo bench --bench firehose`
+
+use minos::benchkit::{bench, black_box, group};
+use minos::config::{GpuSpec, MinosParams, SimParams};
+use minos::features::UtilPoint;
+use minos::minos::algorithm::Objective;
+use minos::minos::reference_set::ReferenceSet;
+use minos::sim::rng::Rng;
+use minos::stream::{MuxConfig, OnlineClassifier, OnlineConfig, StreamMux, StreamSpec};
+use minos::workloads;
+use std::time::Duration;
+
+const BUDGET: Duration = Duration::from_millis(600);
+const STREAM_LEN: usize = 1_024;
+const POLL_BATCH: usize = 64;
+const DT_MS: f64 = 1.5;
+
+/// Deterministic per-stream two-level telemetry (level pair and duty
+/// period vary per stream, so tenants genuinely differ).
+fn stream_watts(i: usize, len: usize) -> Vec<f64> {
+    let mut rng = Rng::new(1_000 + i as u64);
+    let hi = rng.range(700.0, 1_400.0);
+    let lo = rng.range(200.0, 600.0);
+    let period = 4 + (i % 13);
+    (0..len)
+        .map(|s| if (s / period) % 2 == 0 { hi } else { lo })
+        .collect()
+}
+
+fn tag(i: usize) -> String {
+    format!("job-{i:05}")
+}
+
+/// One full firehose run: admit every stream, feed round-robin in
+/// `POLL_BATCH`-sample rounds with a poll per round, finalize the
+/// stragglers.  Returns (samples actually offered, fleet digest).
+fn run_mux(
+    rs: &ReferenceSet,
+    params: &MinosParams,
+    cfg: OnlineConfig,
+    streams: &[Vec<f64>],
+) -> (usize, u64) {
+    let mut mux = StreamMux::new(rs, params, MuxConfig::new(cfg).with_max_streams(streams.len()));
+    let ids: Vec<_> = streams
+        .iter()
+        .enumerate()
+        .map(|(i, _)| {
+            mux.admit(
+                StreamSpec::new(&tag(i), "external:firehose", UtilPoint::new(0.0, 0.0), cfg.objective)
+                    .with_tdp(rs.spec.tdp_w)
+                    .with_sample_dt(DT_MS),
+            )
+            .unwrap()
+        })
+        .collect();
+    let mut cursors = vec![0usize; streams.len()];
+    let mut offered = 0usize;
+    loop {
+        let mut active = false;
+        for (k, watts) in streams.iter().enumerate() {
+            if cursors[k] >= watts.len() {
+                continue;
+            }
+            let end = (cursors[k] + POLL_BATCH).min(watts.len());
+            let mut decided = false;
+            for &w in &watts[cursors[k]..end] {
+                offered += 1;
+                if mux.offer_watt(ids[k], w).unwrap() {
+                    decided = true;
+                    break;
+                }
+            }
+            cursors[k] = if decided { watts.len() } else { end };
+            if cursors[k] < watts.len() {
+                active = true;
+            }
+        }
+        mux.poll();
+        if !active {
+            break;
+        }
+    }
+    for (k, _) in streams.iter().enumerate() {
+        if mux.decision(ids[k]).unwrap().is_none() {
+            mux.finalize(ids[k])
+                .unwrap()
+                .unwrap_or_else(|| panic!("{}: firehose stream failed to classify", tag(k)));
+        }
+    }
+    (offered, mux.fleet_digest())
+}
+
+/// The same sample volume through one dedicated classifier per stream.
+fn run_dedicated(
+    rs: &ReferenceSet,
+    params: &MinosParams,
+    cfg: OnlineConfig,
+    streams: &[Vec<f64>],
+) -> (usize, u64) {
+    let mut offered = 0usize;
+    let mut acc = 0u64;
+    for (i, watts) in streams.iter().enumerate() {
+        let t = tag(i);
+        let mut oc = OnlineClassifier::new(
+            rs,
+            params,
+            cfg,
+            &t,
+            "external:firehose",
+            UtilPoint::new(0.0, 0.0),
+        )
+        .with_tdp(rs.spec.tdp_w)
+        .with_sample_dt(DT_MS);
+        let mut decided = None;
+        for &w in watts {
+            offered += 1;
+            if let Some(d) = oc.push_watt(w) {
+                decided = Some(d.clone());
+                break;
+            }
+        }
+        let d = decided
+            .or_else(|| oc.finalize())
+            .unwrap_or_else(|| panic!("{t}: dedicated stream failed to classify"));
+        acc = acc.wrapping_add(d.digest());
+    }
+    (offered, acc)
+}
+
+fn main() {
+    let counts: &[usize] = if minos::benchkit::smoke() {
+        &[32, 128]
+    } else {
+        &[100, 1_000, 10_000]
+    };
+    let spec = GpuSpec::mi300x();
+    let sim = SimParams::default();
+    let params = MinosParams::default();
+    let reg = workloads::registry();
+    let picks: Vec<&workloads::Workload> = ["sgemm", "milc-6", "sdxl-b64", "lammps-8x8x16"]
+        .iter()
+        .map(|n| reg.by_name(n).unwrap())
+        .collect();
+    let rs = ReferenceSet::build(&spec, &sim, &params, &picks);
+    let cfg = OnlineConfig::new(256, 3, Objective::PowerCentric);
+
+    for &n in counts {
+        group(&format!("firehose @ {n} streams ({STREAM_LEN} samples each)"));
+        let streams: Vec<Vec<f64>> = (0..n).map(|i| stream_watts(i, STREAM_LEN)).collect();
+
+        // Correctness gate, once per stream count: sampled streams must
+        // decide bit-identically to a dedicated classifier, and the
+        // fleet digest must be stable across reruns.
+        let (offered, fleet) = run_mux(&rs, &params, cfg, &streams);
+        let (offered2, fleet2) = run_mux(&rs, &params, cfg, &streams);
+        assert_eq!(fleet, fleet2, "fleet digest not deterministic across reruns");
+        assert_eq!(offered, offered2, "offered-sample count not deterministic");
+        {
+            let mut gate = StreamMux::new(&rs, &params, MuxConfig::new(cfg).with_max_streams(n));
+            let step = (n / 16).max(1);
+            for i in (0..n).step_by(step) {
+                let id = gate
+                    .admit(
+                        StreamSpec::new(
+                            &tag(i),
+                            "external:firehose",
+                            UtilPoint::new(0.0, 0.0),
+                            cfg.objective,
+                        )
+                        .with_tdp(rs.spec.tdp_w)
+                        .with_sample_dt(DT_MS),
+                    )
+                    .unwrap();
+                for &w in &streams[i] {
+                    if gate.offer_watt(id, w).unwrap() {
+                        break;
+                    }
+                    gate.poll();
+                }
+                let muxed = match gate.decision(id).unwrap() {
+                    Some(d) => d,
+                    None => gate.finalize(id).unwrap().unwrap(),
+                };
+                let single = dedicated_one(&rs, &params, cfg, i, &streams[i]);
+                assert_eq!(
+                    muxed.digest(),
+                    single.digest(),
+                    "{}: mux decision diverged from the dedicated classifier",
+                    tag(i)
+                );
+            }
+        }
+
+        let r = bench(&format!("mux {n} streams"), BUDGET, 200, || {
+            let (o, f) = run_mux(&rs, &params, cfg, &streams);
+            assert_eq!(f, fleet, "fleet digest changed under the timer");
+            black_box(o)
+        });
+        println!(
+            "{}   [{:.0} samples/s, {} samples offered, {:.1}% of full volume]",
+            r.report(),
+            r.per_sec(offered),
+            offered,
+            100.0 * offered as f64 / (n * STREAM_LEN) as f64
+        );
+
+        let (ded_offered, _) = run_dedicated(&rs, &params, cfg, &streams);
+        let rd = bench(&format!("dedicated {n} classifiers"), BUDGET, 200, || {
+            black_box(run_dedicated(&rs, &params, cfg, &streams))
+        });
+        println!(
+            "{}   [{:.0} samples/s single-stream baseline]",
+            rd.report(),
+            rd.per_sec(ded_offered)
+        );
+    }
+}
+
+/// One stream through a dedicated classifier — the correctness-gate
+/// reference for a muxed decision.
+fn dedicated_one(
+    rs: &ReferenceSet,
+    params: &MinosParams,
+    cfg: OnlineConfig,
+    i: usize,
+    watts: &[f64],
+) -> minos::stream::OnlineDecision {
+    let t = tag(i);
+    let mut oc = OnlineClassifier::new(
+        rs,
+        params,
+        cfg,
+        &t,
+        "external:firehose",
+        UtilPoint::new(0.0, 0.0),
+    )
+    .with_tdp(rs.spec.tdp_w)
+    .with_sample_dt(DT_MS);
+    let mut decided = None;
+    for &w in watts {
+        if let Some(d) = oc.push_watt(w) {
+            decided = Some(d.clone());
+            break;
+        }
+    }
+    decided
+        .or_else(|| oc.finalize())
+        .unwrap_or_else(|| panic!("{t}: dedicated stream failed to classify"))
+}

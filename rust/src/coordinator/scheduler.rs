@@ -79,7 +79,7 @@ use crate::minos::reference_set::ReferenceSet;
 use crate::registry::{ClassRegistry, SearchMode};
 use crate::sim::dvfs::DvfsMode;
 use crate::sim::profiler::{profile, Profile, ProfileRequest};
-use crate::stream::{OnlineClassifier, OnlineConfig};
+use crate::stream::{MuxConfig, OnlineClassifier, OnlineConfig, StreamMux, StreamSpec};
 use crate::workloads::{Registry, Workload};
 use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -640,8 +640,9 @@ fn compute_fresh(shared: &Shared, tasks: &[FreshTask]) -> Vec<FreshResult> {
 /// batch query** ([`crate::registry::VectorIndex::query_batch`] via
 /// `SelectOptimalFreq::classify_batch`), amortizing the centroid pass —
 /// bit-exact against per-task classification by construction.
-/// Streaming admission classifies per task (a streamed trace replay has
-/// no SoA form).
+/// Streaming admission now batches the same way: the lane's per-device
+/// group feeds its live telemetry through one [`StreamMux`], whose due
+/// windows classify as one batch per poll (see [`classify_stream_mux`]).
 fn fresh_lane<'a>(
     shared: &Shared,
     lane: Vec<(usize, &'a FreshTask)>,
@@ -668,15 +669,17 @@ fn fresh_lane<'a>(
         .collect();
     match shared.cfg.admission {
         AdmissionMode::Streaming { window_samples, stable_k } => {
+            let mut by_dev: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
             for (li, &(_, t)) in lane.iter().enumerate() {
                 if shared.devices[t.di].native {
-                    cls[li] = FreshCls::Ready(classify_stream_or_full(
-                        shared,
-                        t,
-                        &profs[li],
-                        window_samples,
-                        stable_k,
-                    ));
+                    by_dev.entry(t.di).or_default().push(li);
+                }
+            }
+            for (di, lis) in by_dev {
+                let outs =
+                    classify_stream_mux(shared, di, &lane, &lis, &profs, window_samples, stable_k);
+                for (li, out) in lis.into_iter().zip(outs) {
+                    cls[li] = FreshCls::Ready(out);
                 }
             }
         }
@@ -724,58 +727,126 @@ fn fresh_lane<'a>(
         .collect()
 }
 
-/// Streaming-admission classification for a native-device task: replay
-/// the profiling telemetry through the online classifier and stop at
-/// the early exit; fall back to the full-trace classifier when the
-/// online path cannot decide (degenerate trace).
-fn classify_stream_or_full(
+/// Streaming-admission classification for one device's native tasks:
+/// feed every task's live profiling telemetry through one [`StreamMux`]
+/// as concurrent tagged streams, interleaved one window per stream per
+/// poll, so every due window across the group classifies as **one**
+/// `classify_batch` call per poll — the firehose analogue of the batch
+/// branch's SoA grouping.  `profile_fraction` comes from the actual
+/// early-exit point (the mux stops replaying a stream once its decision
+/// fires).  Decisions are bit-exact vs the per-task `OnlineClassifier`
+/// replay this replaced: window snapshots are captured at each stream's
+/// own sample-count boundaries, which depend only on that stream's
+/// sequence, never on the interleaving (`rust/tests/stream_mux.rs` pins
+/// the equivalence).  Falls back to the full-trace classifier per
+/// stream when the online path cannot decide (degenerate trace).
+fn classify_stream_mux(
     shared: &Shared,
-    t: &FreshTask,
-    prof: &Profile,
+    di: usize,
+    lane: &[(usize, &FreshTask)],
+    lis: &[usize],
+    profs: &[Profile],
     window_samples: usize,
     stable_k: usize,
-) -> Option<ClsOut> {
-    let dev = &shared.devices[t.di];
+) -> Vec<Option<ClsOut>> {
+    let dev = &shared.devices[di];
     let guard = dev.registry.read().unwrap();
-    let cfg = OnlineConfig::new(window_samples, stable_k, t.objective);
-    let util = UtilPoint::new(prof.app_sm_util, prof.app_dram_util);
-    let mut oc = OnlineClassifier::new(
+    let online = OnlineConfig::new(window_samples, stable_k, Objective::PowerCentric);
+    let mut mux = StreamMux::new(
         &dev.refset,
         &shared.cfg.minos,
-        cfg,
-        &t.workload.name,
-        &t.app,
-        util,
-    )
-    // normalize by the profiled trace's own TDP (the node GPU's) — the
-    // TDP-relative features are what carry across devices
-    .with_tdp(prof.trace.tdp_w)
-    .with_sample_dt(prof.trace.sample_dt_ms);
+        MuxConfig::new(online).with_max_streams(lis.len().max(1)),
+    );
     if let Some(reg) = guard.as_ref() {
-        oc = oc.with_registry(reg);
+        mux = mux.with_registry(reg);
     }
-    match oc.run_trace(&prof.trace) {
-        Some(d) => Some(ClsOut {
-            plan: d.plan,
-            class_id: d.class_id,
-            fraction: d.trace_fraction.unwrap_or(1.0),
-            early: d.early_exit,
-        }),
-        None => {
-            let target = TargetProfile::from_profile(&t.app, prof, &dev.refset.bin_sizes);
-            let mut sel = SelectOptimalFreq::new(&dev.refset, &shared.cfg.minos);
-            if let Some(reg) = guard.as_ref() {
-                sel = sel.with_registry(reg);
+    // One stream per task.  (di, app) dedup upstream guarantees unique
+    // workload names inside a device group, so the name doubles as the
+    // tag — keeping FreqPlan::target identical to the per-task path.
+    let ids: Vec<_> = lis
+        .iter()
+        .map(|&li| {
+            let (_, t) = lane[li];
+            let prof = &profs[li];
+            let util = UtilPoint::new(prof.app_sm_util, prof.app_dram_util);
+            mux.admit(
+                StreamSpec::new(&t.workload.name, &t.app, util, t.objective)
+                    // normalize by the profiled trace's own TDP (the
+                    // node GPU's) — TDP-relative features are what
+                    // carry across devices
+                    .with_tdp(prof.trace.tdp_w)
+                    .with_sample_dt(prof.trace.sample_dt_ms),
+            )
+            .expect("fresh mux admits every lane task")
+        })
+        .collect();
+    let online_window = online.window_samples;
+    let mut cursors: Vec<usize> = vec![0; lis.len()];
+    loop {
+        let mut active = 0usize;
+        for (k, &li) in lis.iter().enumerate() {
+            let raw = &profs[li].trace.raw_watts;
+            if cursors[k] >= raw.len() {
+                continue;
             }
-            let c = sel.classify(&target, t.objective)?;
-            Some(ClsOut {
-                plan: c.plan,
-                class_id: c.class_id,
-                fraction: 1.0,
-                early: false,
-            })
+            let end = (cursors[k] + online_window).min(raw.len());
+            let mut decided = false;
+            for &w in &raw[cursors[k]..end] {
+                if mux.offer_watt(ids[k], w).expect("live stream id") {
+                    decided = true;
+                    break;
+                }
+            }
+            cursors[k] = end;
+            if !decided && cursors[k] < raw.len() {
+                active += 1;
+            }
+        }
+        let _ = mux.poll();
+        if active == 0 {
+            break;
         }
     }
+    lis.iter()
+        .zip(ids)
+        .map(|(&li, id)| {
+            let (_, t) = lane[li];
+            let total = profs[li].trace.raw_watts.len();
+            let d = match mux.decision(id).expect("live stream id") {
+                Some(d) => Some(d),
+                None => mux.finalize(id).expect("live stream id"),
+            };
+            match d {
+                Some(d) => {
+                    let fraction = if total > 0 {
+                        (d.samples_used as f64 / total as f64).min(1.0)
+                    } else {
+                        1.0
+                    };
+                    Some(ClsOut {
+                        plan: d.plan,
+                        class_id: d.class_id,
+                        fraction,
+                        early: d.early_exit,
+                    })
+                }
+                None => {
+                    let target =
+                        TargetProfile::from_profile(&t.app, &profs[li], &dev.refset.bin_sizes);
+                    let mut sel = SelectOptimalFreq::new(&dev.refset, &shared.cfg.minos);
+                    if let Some(reg) = guard.as_ref() {
+                        sel = sel.with_registry(reg);
+                    }
+                    sel.classify(&target, t.objective).map(|c| ClsOut {
+                        plan: c.plan,
+                        class_id: c.class_id,
+                        fraction: 1.0,
+                        early: false,
+                    })
+                }
+            }
+        })
+        .collect()
 }
 
 /// Power-aware scheduler for a cluster of identical nodes.

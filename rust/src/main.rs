@@ -40,8 +40,10 @@ use minos::registry::{ClassRegistry, SearchMode, CLASS_K_MAX, CLASS_K_MIN};
 use minos::report::table;
 use minos::runtime::MinosRuntime;
 use minos::sim::dvfs::DvfsMode;
-use minos::stream::{OnlineClassifier, OnlineConfig};
-use minos::trace::import::StreamParser;
+use minos::stream::{
+    MuxConfig, OnlineClassifier, OnlineConfig, OnlineDecision, StreamMux, StreamSpec,
+};
+use minos::trace::import::{StreamParser, TaggedStreamParser};
 
 const USAGE: &str = "usage: minos [--config FILE] [--jobs N] [--allow-stale] [--device D] <list|profile|classify|select-freq|experiment|stream|serve|registry|fleet|verify-artifacts> [args]
   --jobs N: worker threads for profiling fan-outs (default: available parallelism)
@@ -55,6 +57,9 @@ const USAGE: &str = "usage: minos [--config FILE] [--jobs N] [--allow-stale] [--
   stream [power.csv|-] [--follow FILE] [--tdp W] [--dt MS] [--window N | --window-ms MS]
          [--stable-k K] [--sm PCT --dram PCT] [--objective power|perf] [--exact]
          [--search flat|class]
+  stream --multi <dir|-> [--poll N] [--max-streams N] [--idle-evict N] [shared stream flags]
+         (dir: one stream per trace file, tag = file stem; '-': interleaved
+          tagged stdin lines 'tag[,t_ms],watts'; prints a fleet decision digest)
   serve [--queue a,b@a100,c@mi300x | --load N] [--iterations N] [--nodes N] [--nodes-mixed]
         [--shards N] [--policy uniform|minos] [--admission stream|batch] [--budget W]
         [--search flat|class]    (queue entries pin devices with wl@device;
@@ -168,6 +173,286 @@ fn feed_and_report(
         }
     }
     false
+}
+
+/// One decision line of `stream --multi` per-stream progress output.
+fn print_stream_decision(tag: &str, d: &OnlineDecision) {
+    println!(
+        "stream {:<24} NN {:<24} cap {:>5.0} MHz  windows {:>3}  samples {:>7}  early-exit {}",
+        tag,
+        d.plan.pwr_neighbor,
+        d.plan.f_cap_mhz,
+        d.windows,
+        d.samples_used,
+        if d.early_exit { "yes" } else { "no" },
+    );
+}
+
+/// `stream --multi <dir|->`: the multi-tenant telemetry firehose.  A
+/// directory is one stream per trace file (untagged `[t_ms,]watts`
+/// format, tag = file stem, replayed round-robin in `--poll`-sample
+/// batches); stdin (`-`) is interleaved tagged `tag[,t_ms],watts` lines,
+/// with streams admitted on first sight of their tag.  Every stream
+/// classifies through one [`StreamMux`], which batches all due windows
+/// across streams per poll tick; per-stream decisions and the final
+/// fleet digest are invariant to interleaving and poll batch size.
+fn stream_multi(
+    args: &mut Args,
+    config: Config,
+    allow_stale: bool,
+    source: String,
+) -> anyhow::Result<()> {
+    use std::io::Read;
+    anyhow::ensure!(
+        !source.is_empty(),
+        "--multi expects a directory of trace files or '-' for tagged stdin"
+    );
+    let tdp = parse_flag::<f64>(args, "--tdp")?.unwrap_or(config.node.gpu.tdp_w);
+    anyhow::ensure!(tdp > 0.0, "--tdp must be positive watts");
+    let dt_flag = parse_flag::<f64>(args, "--dt")?;
+    if let Some(v) = dt_flag {
+        anyhow::ensure!(v > 0.0, "--dt must be positive milliseconds");
+    }
+    let dt = dt_flag.unwrap_or(config.sim.sample_dt_ms);
+    let window = parse_flag::<usize>(args, "--window")?;
+    let window_ms = parse_flag::<f64>(args, "--window-ms")?;
+    anyhow::ensure!(
+        window.is_none() || window_ms.is_none(),
+        "--window and --window-ms are mutually exclusive"
+    );
+    // A time-based window must mean the same sample count for every
+    // stream (the fleet digest is defined over per-stream window
+    // boundaries), so it needs one explicit sampling period up front.
+    anyhow::ensure!(
+        window_ms.is_none() || dt_flag.is_some(),
+        "--window-ms under --multi needs an explicit --dt (per-stream inference \
+         would give every stream a different window)"
+    );
+    let stable_k = parse_flag::<usize>(args, "--stable-k")?.unwrap_or(DEFAULT_STREAM_STABLE_K);
+    let sm = parse_flag::<f64>(args, "--sm")?;
+    let dram = parse_flag::<f64>(args, "--dram")?;
+    let exact = args.has("--exact");
+    let search = parse_search(args)?;
+    let objective = match args.flag("--objective") {
+        None => Objective::PowerCentric,
+        Some(o) => match o.as_str() {
+            "power" => Objective::PowerCentric,
+            "perf" => Objective::PerfCentric,
+            other => anyhow::bail!("--objective expects 'power' or 'perf', got '{other}'"),
+        },
+    };
+    anyhow::ensure!(
+        objective == Objective::PowerCentric || (sm.is_some() && dram.is_some()),
+        "--objective perf classifies in the utilization plane; pass --sm and --dram"
+    );
+    let poll_batch = parse_flag::<usize>(args, "--poll")?.unwrap_or(512).max(1);
+    let max_streams = parse_flag::<usize>(args, "--max-streams")?;
+    let idle_evict = parse_flag::<u64>(args, "--idle-evict")?.unwrap_or(0);
+    let mut ocfg = match (window, window_ms) {
+        (Some(n), None) => OnlineConfig::new(n, stable_k, objective),
+        (None, Some(ms)) => OnlineConfig::from_ms(ms, dt, stable_k, objective),
+        _ => OnlineConfig::new(DEFAULT_STREAM_WINDOW, stable_k, objective),
+    };
+    if exact {
+        ocfg = ocfg.exact();
+    }
+    let mut ctx = ExperimentContext::new(config).with_allow_stale(allow_stale);
+    let params = ctx.config.minos.clone();
+    let rs = ctx.refset().clone();
+    let class_reg = match search {
+        SearchMode::ClassFirst => match ClassRegistry::build(&rs, &params) {
+            Ok(reg) => Some(reg),
+            Err(e) => {
+                eprintln!("class-first search unavailable ({e}); falling back to the flat scan");
+                None
+            }
+        },
+        SearchMode::Flat => None,
+    };
+    let util = UtilPoint::new(sm.unwrap_or(0.0), dram.unwrap_or(0.0));
+    let mut mcfg = MuxConfig::new(ocfg).with_idle_evict_polls(idle_evict);
+    if let Some(cap) = max_streams {
+        anyhow::ensure!(cap >= 1, "--max-streams must be at least 1");
+        mcfg = mcfg.with_max_streams(cap);
+    }
+    let capacity = mcfg.max_streams;
+    let mut mux = StreamMux::new(&rs, &params, mcfg);
+    if let Some(reg) = class_reg.as_ref() {
+        mux = mux.with_registry(reg);
+    }
+    println!(
+        "stream --multi: {} | window {} samples, stable K={} | {:?} | {} search | poll batch {} | capacity {}",
+        if source == "-" {
+            "stdin (tagged)"
+        } else {
+            source.as_str()
+        },
+        ocfg.window_samples,
+        ocfg.stable_k,
+        objective,
+        search.label(),
+        poll_batch,
+        capacity
+    );
+    let mut early = 0usize;
+    if source == "-" {
+        // Interleaved tagged stdin: admit each tag on first sight, poll
+        // after every chunk.  An evicted tag that reappears is
+        // re-admitted as a fresh stream (prior samples are gone).
+        let mut parser = TaggedStreamParser::new();
+        let stdin = std::io::stdin();
+        let mut lock = stdin.lock();
+        let mut buf = vec![0u8; 64 * 1024];
+        let mut carry: Vec<u8> = Vec::new();
+        let mut out = Vec::new();
+        loop {
+            let n = lock.read(&mut buf)?;
+            out.clear();
+            if n == 0 {
+                if let Some(s) = parser.finish()? {
+                    out.push(s);
+                }
+            } else {
+                carry.extend_from_slice(&buf[..n]);
+                let k = match std::str::from_utf8(&carry) {
+                    Ok(_) => carry.len(),
+                    Err(e) if e.error_len().is_none() => e.valid_up_to(),
+                    Err(e) => {
+                        anyhow::bail!("invalid UTF-8 in input near byte {}", e.valid_up_to())
+                    }
+                };
+                let chunk =
+                    String::from_utf8(carry.drain(..k).collect()).expect("checked prefix");
+                parser.push_chunk(&chunk, &mut out)?;
+            }
+            for s in &out {
+                let id = match mux.id_of(&s.tag) {
+                    Some(id) => id,
+                    None => {
+                        let app = format!("external:{}", s.tag);
+                        mux.admit(
+                            StreamSpec::new(&s.tag, &app, util, objective)
+                                .with_tdp(tdp)
+                                .with_sample_dt(dt),
+                        )?
+                    }
+                };
+                let _ = mux.offer_watt(id, s.watts)?;
+            }
+            for d in mux.poll() {
+                if d.decision.early_exit {
+                    early += 1;
+                }
+                print_stream_decision(&d.tag, &d.decision);
+            }
+            if n == 0 {
+                break;
+            }
+        }
+    } else {
+        // Directory mode: every regular file is one stream (own parser,
+        // so a split line in one file can't corrupt another), replayed
+        // round-robin in poll batches to exercise real interleaving.
+        let mut paths: Vec<std::path::PathBuf> = std::fs::read_dir(&source)
+            .map_err(|e| anyhow::anyhow!("--multi '{source}': {e}"))?
+            .collect::<Result<Vec<_>, _>>()?
+            .into_iter()
+            .map(|e| e.path())
+            .filter(|p| p.is_file())
+            .collect();
+        paths.sort();
+        anyhow::ensure!(!paths.is_empty(), "--multi: no trace files in '{source}'");
+        let mut streams: Vec<(String, Vec<f64>)> = Vec::with_capacity(paths.len());
+        for p in &paths {
+            let tag = p
+                .file_stem()
+                .and_then(|s| s.to_str())
+                .unwrap_or("stream")
+                .to_string();
+            let text = std::fs::read_to_string(p)?;
+            let mut parser = StreamParser::new();
+            let mut samples = Vec::new();
+            parser
+                .push_chunk(&text, &mut samples)
+                .map_err(|e| anyhow::anyhow!("stream '{tag}' ({}): {e}", p.display()))?;
+            if let Some(w) = parser
+                .finish()
+                .map_err(|e| anyhow::anyhow!("stream '{tag}' ({}): {e}", p.display()))?
+            {
+                samples.push(w);
+            }
+            let sdt = match dt_flag {
+                Some(v) => v,
+                None => parser.inferred_dt_ms().unwrap_or(dt),
+            };
+            let app = format!("external:{tag}");
+            mux.admit(
+                StreamSpec::new(&tag, &app, util, objective)
+                    .with_tdp(tdp)
+                    .with_sample_dt(sdt),
+            )?;
+            streams.push((tag, samples));
+        }
+        let mut cursors = vec![0usize; streams.len()];
+        loop {
+            let mut active = false;
+            for (k, (tag, samples)) in streams.iter().enumerate() {
+                if cursors[k] >= samples.len() {
+                    continue;
+                }
+                // Evicted mid-replay (only possible with --idle-evict):
+                // drop the rest of this stream's trace.
+                let Some(id) = mux.id_of(tag) else {
+                    cursors[k] = samples.len();
+                    continue;
+                };
+                let end = (cursors[k] + poll_batch).min(samples.len());
+                let mut decided = false;
+                for &w in &samples[cursors[k]..end] {
+                    if mux.offer_watt(id, w)? {
+                        decided = true;
+                        break;
+                    }
+                }
+                cursors[k] = if decided { samples.len() } else { end };
+                if cursors[k] < samples.len() {
+                    active = true;
+                }
+            }
+            for d in mux.poll() {
+                if d.decision.early_exit {
+                    early += 1;
+                }
+                print_stream_decision(&d.tag, &d.decision);
+            }
+            if !active {
+                break;
+            }
+        }
+    }
+    // Streams that ran dry without an early exit: classify what came
+    // (identical to OnlineClassifier::finalize on the same samples).
+    for (tag, id) in mux.live() {
+        if mux.decision(id)?.is_some() {
+            continue;
+        }
+        match mux.finalize(id)? {
+            Some(d) => {
+                if d.early_exit {
+                    early += 1;
+                }
+                print_stream_decision(&tag, &d);
+            }
+            None => println!("stream {tag:<24} no classifiable samples (idle or empty)"),
+        }
+    }
+    let st = mux.stats();
+    println!(
+        "streams: {} live, {} decided ({} early exits), {} evicted, {} polls",
+        st.live, st.decided, early, st.evicted, st.polls
+    );
+    println!("fleet digest: {:#018x}", mux.fleet_digest());
+    Ok(())
 }
 
 /// `serve --load N`: a deterministic generated high-load queue cycling
@@ -482,8 +767,13 @@ fn main() -> anyhow::Result<()> {
             // (`-` or no input), a file, or `--follow FILE` tailing a
             // growing trace.  Stops as soon as the top-1 power neighbor
             // is stable for K consecutive windows (README § "Streaming
-            // classification").
+            // classification").  `--multi` switches to the firehose:
+            // many concurrent streams through one StreamMux (README
+            // § "Telemetry firehose").
             use std::io::Read;
+            if let Some(msrc) = args.flag("--multi") {
+                return stream_multi(&mut args, config, allow_stale, msrc);
+            }
             let follow = args.flag("--follow");
             let tdp = parse_flag::<f64>(&mut args, "--tdp")?.unwrap_or(config.node.gpu.tdp_w);
             anyhow::ensure!(tdp > 0.0, "--tdp must be positive watts");

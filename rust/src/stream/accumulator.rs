@@ -63,6 +63,15 @@ pub struct TraceAccumulator {
 /// tail-trimming would have dropped them had the trace ended there.
 pub const MAX_PENDING_IDLE: usize = 1 << 20;
 
+/// High-water mark for the parked-tail buffer's *capacity*.  Flushing a
+/// long interior idle run used to hand the (cleared but fully-allocated)
+/// buffer back for reuse, so one idle burst near [`MAX_PENDING_IDLE`]
+/// pinned ~8 MB per accumulator forever — untenable once a mux holds
+/// thousands of them.  After any flush or drop that grew past this mark
+/// the capacity is deterministically trimmed back; values (and therefore
+/// every feature) are untouched.
+pub const PENDING_IDLE_HIWAT: usize = 4096;
+
 impl TraceAccumulator {
     pub fn new(tdp_w: f64, sample_dt_ms: f64, bin_sizes: &[f64], mode: QuantileMode) -> Self {
         assert!(tdp_w > 0.0, "tdp must be positive");
@@ -114,18 +123,27 @@ impl TraceAccumulator {
         if busy {
             // flush the provisional tail: it turned out to be interior
             // (the buffer is swapped back afterwards to keep its
-            // capacity for the next idle stretch)
+            // capacity — bounded by PENDING_IDLE_HIWAT — for the next
+            // idle stretch)
             let mut tail = std::mem::take(&mut self.pending_tail);
             for &w in &tail {
                 self.ingest_raw(w);
             }
             tail.clear();
+            tail.shrink_to(PENDING_IDLE_HIWAT);
             self.pending_tail = tail;
         } else if self.pending_tail.len() >= MAX_PENDING_IDLE {
             // idle run too long to be interior — treat it as a trace
             // boundary and drop it (see MAX_PENDING_IDLE)
             self.pending_tail.clear();
+            self.pending_tail.shrink_to(PENDING_IDLE_HIWAT);
         }
+    }
+
+    /// Current capacity of the parked-tail buffer — exposed so tests can
+    /// pin the [`PENDING_IDLE_HIWAT`] memory bound.
+    pub fn pending_capacity(&self) -> usize {
+        self.pending_tail.capacity()
     }
 
     /// Feed one sample from a source with no busy channel (imported CSV
@@ -377,6 +395,67 @@ mod tests {
         }
         assert!(idle.is_empty(), "all-idle stream never starts");
         assert_eq!(idle.samples_offered(), 50);
+    }
+
+    #[test]
+    fn pending_tail_capacity_is_trimmed_and_features_are_unchanged() {
+        use crate::sim::telemetry::{RawTrace, Sample};
+        // long interior idle run (well past the high-water mark) wedged
+        // between busy phases, plus a trailing idle tail
+        let mut pattern: Vec<(f64, bool)> = Vec::new();
+        for i in 0..64 {
+            pattern.push((600.0 + i as f64, true));
+        }
+        for _ in 0..(PENDING_IDLE_HIWAT * 4) {
+            pattern.push((120.0, false));
+        }
+        for i in 0..64 {
+            pattern.push((900.0 + i as f64, true));
+        }
+        for _ in 0..32 {
+            pattern.push((110.0, false));
+        }
+        let raw = RawTrace {
+            samples: pattern
+                .iter()
+                .enumerate()
+                .map(|(i, &(p, b))| Sample {
+                    t_ms: i as f64 * 1.5,
+                    power_inst_w: p,
+                    power_ave_w: p,
+                    busy: b,
+                    f_mhz: 2100.0,
+                })
+                .collect(),
+            sample_dt_ms: 1.5,
+        };
+        let batch = PowerTrace::from_raw(&raw, 750.0);
+        let mut acc = TraceAccumulator::new(750.0, 1.5, &[0.05, 0.1], QuantileMode::Exact);
+        for &(p, b) in &pattern {
+            acc.push(p, b);
+        }
+        // features pinned: bit-identical to the batch pipeline even
+        // though the flush trimmed the buffer behind the scenes
+        assert_eq!(acc.len(), batch.len());
+        assert_eq!(acc.mean(), batch.mean());
+        assert_eq!(acc.peak(), batch.peak());
+        assert_eq!(acc.frac_above_tdp(), batch.frac_above_tdp());
+        assert_eq!(
+            acc.percentiles_rel().to_vec(),
+            batch.percentiles_rel(&[0.50, 0.90, 0.95, 0.99])
+        );
+        for (got, &c) in acc.spike_vectors().iter().zip([0.05, 0.1].iter()) {
+            let want = spike_vector(&batch, c);
+            assert_eq!(got.v, want.v, "bin size {c}");
+        }
+        // ... and the memory bound held: the 4×HIWAT idle run must not
+        // leave its full allocation parked on the accumulator
+        assert!(
+            acc.pending_capacity() <= PENDING_IDLE_HIWAT,
+            "pending capacity {} exceeds high-water mark {}",
+            acc.pending_capacity(),
+            PENDING_IDLE_HIWAT
+        );
     }
 
     #[test]

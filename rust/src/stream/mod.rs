@@ -17,6 +17,12 @@
 //!   consecutive windows, reporting a margin-based confidence and the
 //!   fraction of the trace it consumed — the online analogue of the
 //!   paper's §7.1.3 profiling-savings accounting.
+//! * [`mux::StreamMux`] — the multi-tenant firehose: thousands of
+//!   concurrent accumulators in a generation-checked slab arena, window
+//!   snapshots batched through `classify_batch` per poll (bit-exact vs
+//!   per-stream classification), LRU eviction + backpressure, and a
+//!   tag-ordered fleet digest invariant to interleaving and poll
+//!   batching.
 //!
 //! Consumers: the `minos stream` CLI subcommand (stdin / `--follow`
 //! tailing), `classify --early-exit`, the coordinator's dispatcher
@@ -24,9 +30,11 @@
 //! the `streaming` bench target.
 
 pub mod accumulator;
+pub mod mux;
 pub mod online;
 pub mod sketch;
 
 pub use accumulator::TraceAccumulator;
-pub use online::{OnlineClassifier, OnlineConfig, OnlineDecision};
+pub use mux::{MuxConfig, MuxDecision, MuxStats, StreamId, StreamMux, StreamSpec};
+pub use online::{OnlineClassifier, OnlineConfig, OnlineDecision, WindowClock};
 pub use sketch::{P2Quantile, QuantileMode, QuantileTracker};

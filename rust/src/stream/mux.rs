@@ -1,0 +1,690 @@
+//! Multi-tenant telemetry firehose: thousands of concurrent streams,
+//! one classification engine.
+//!
+//! Production clusters emit *system-wide* telemetry — every job's power
+//! stream at once — while [`crate::stream::online::OnlineClassifier`]
+//! serves exactly one source.  [`StreamMux`] closes that gap:
+//!
+//! * **Slab arena.**  Per-stream state (a [`TraceAccumulator`] plus a
+//!   [`WindowClock`]) lives in a slot vector with a free list; a
+//!   [`StreamId`] is `(index, generation)`, so handles stay stable
+//!   while slots are recycled and a stale handle from before an
+//!   eviction is rejected instead of silently reading a new tenant's
+//!   stream.
+//! * **Batched classification.**  [`StreamMux::offer`] only
+//!   accumulates; when a stream crosses a window boundary the feature
+//!   snapshot ([`TargetProfile`]) is captured *at that boundary* and
+//!   queued.  [`StreamMux::poll`] then classifies every queued window
+//!   across all streams through one
+//!   [`SelectOptimalFreq::classify_batch`] call — the same SoA chain
+//!   the sharded coordinator batches through — and applies the results
+//!   per stream in queue order.  Because the snapshot is taken at the
+//!   boundary and `classify_batch` is bit-exact vs per-target
+//!   `classify`, every decision is **bit-identical** to what a
+//!   dedicated `OnlineClassifier` would have produced for that stream
+//!   alone, regardless of how streams interleave or how many samples a
+//!   poll batch delivers (`rust/tests/stream_mux.rs` pins this).
+//! * **Eviction + backpressure.**  Streams idle for
+//!   [`MuxConfig::idle_evict_polls`] polls are retired (LRU by last
+//!   activity); when the arena is full, `admit` evicts the
+//!   least-recently-active stream that is decided or idle, and reports
+//!   backpressure instead of evicting anyone who is still actively
+//!   streaming undecided.
+//!
+//! Determinism contract: per-stream decisions depend only on that
+//! stream's own sample sequence, and [`StreamMux::fleet_digest`] folds
+//! decision digests in tag order — so the fleet digest is invariant to
+//! poll batching, stream interleaving, and decision arrival order.
+
+use std::collections::BTreeMap;
+
+use crate::config::MinosParams;
+use crate::features::UtilPoint;
+use crate::minos::algorithm::{Classification, Objective, SelectOptimalFreq, TargetProfile};
+use crate::minos::reference_set::ReferenceSet;
+use crate::stream::accumulator::TraceAccumulator;
+use crate::stream::online::{OnlineConfig, OnlineDecision, WindowClock};
+
+/// Stable, generation-checked handle to a muxed stream.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct StreamId {
+    index: u32,
+    gen: u32,
+}
+
+impl StreamId {
+    /// Arena slot index — stable for the lifetime of the stream.
+    pub fn index(&self) -> usize {
+        self.index as usize
+    }
+}
+
+/// Everything `admit` needs to know about a new stream.
+#[derive(Debug, Clone)]
+pub struct StreamSpec {
+    /// Unique stream tag (job id, node id, file stem, ...).
+    pub tag: String,
+    /// Application family — filters the candidate reference entries,
+    /// exactly as in single-stream classification.
+    pub app: String,
+    pub util: UtilPoint,
+    pub objective: Objective,
+    /// TDP override for telemetry from a non-reference device
+    /// (defaults to the reference set's GPU).
+    pub tdp_w: Option<f64>,
+    /// Sampling period override (ms) for cost accounting.
+    pub sample_dt_ms: Option<f64>,
+}
+
+impl StreamSpec {
+    pub fn new(tag: &str, app: &str, util: UtilPoint, objective: Objective) -> Self {
+        StreamSpec {
+            tag: tag.to_string(),
+            app: app.to_string(),
+            util,
+            objective,
+            tdp_w: None,
+            sample_dt_ms: None,
+        }
+    }
+
+    pub fn with_tdp(mut self, tdp_w: f64) -> Self {
+        self.tdp_w = Some(tdp_w);
+        self
+    }
+
+    pub fn with_sample_dt(mut self, dt_ms: f64) -> Self {
+        self.sample_dt_ms = Some(dt_ms);
+        self
+    }
+}
+
+/// Mux tuning knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct MuxConfig {
+    /// Window/stability/objective/quantile-mode knobs shared with the
+    /// single-stream classifier (`objective` is the default for specs
+    /// that don't override it — each stream carries its own).
+    pub online: OnlineConfig,
+    /// Arena capacity: at most this many live streams.
+    pub max_streams: usize,
+    /// Evict a stream after this many polls without a sample
+    /// (0 = never evict on idleness).
+    pub idle_evict_polls: u64,
+}
+
+impl MuxConfig {
+    pub fn new(online: OnlineConfig) -> Self {
+        MuxConfig {
+            online,
+            max_streams: 16_384,
+            idle_evict_polls: 0,
+        }
+    }
+
+    pub fn with_max_streams(mut self, n: usize) -> Self {
+        self.max_streams = n.max(1);
+        self
+    }
+
+    pub fn with_idle_evict_polls(mut self, polls: u64) -> Self {
+        self.idle_evict_polls = polls;
+        self
+    }
+}
+
+/// A newly-fired decision returned by [`StreamMux::poll`].
+#[derive(Debug, Clone)]
+pub struct MuxDecision {
+    pub id: StreamId,
+    pub tag: String,
+    pub decision: OnlineDecision,
+}
+
+/// Aggregate counters for progress reporting.
+#[derive(Debug, Clone, Copy)]
+pub struct MuxStats {
+    pub live: usize,
+    pub decided: usize,
+    pub evicted: u64,
+    pub polls: u64,
+    pub capacity: usize,
+}
+
+/// Per-stream state held in the arena.
+#[derive(Debug)]
+struct StreamState {
+    tag: String,
+    app: String,
+    util: UtilPoint,
+    objective: Objective,
+    acc: TraceAccumulator,
+    clock: WindowClock,
+    last: Option<Classification>,
+    decision: Option<OnlineDecision>,
+    last_seen_poll: u64,
+}
+
+#[derive(Debug, Default)]
+struct Slot {
+    gen: u32,
+    state: Option<StreamState>,
+}
+
+/// A window snapshot queued for the next poll's batch classification.
+/// The target is captured at the boundary, so later samples absorbed
+/// before the poll cannot skew the evaluation.
+struct PendingEval {
+    id: StreamId,
+    target: TargetProfile,
+    objective: Objective,
+    samples_at: usize,
+}
+
+/// The firehose multiplexer (see module docs).
+pub struct StreamMux<'a> {
+    sel: SelectOptimalFreq<'a>,
+    cfg: MuxConfig,
+    slots: Vec<Slot>,
+    free: Vec<u32>,
+    by_tag: BTreeMap<String, StreamId>,
+    due: Vec<PendingEval>,
+    polls: u64,
+    evicted: u64,
+    /// Decision digests by tag (latest wins on readmission) — the
+    /// tag-ordered source of [`StreamMux::fleet_digest`].
+    decided: BTreeMap<String, u64>,
+}
+
+impl<'a> StreamMux<'a> {
+    pub fn new(refset: &'a ReferenceSet, params: &MinosParams, cfg: MuxConfig) -> Self {
+        StreamMux {
+            sel: SelectOptimalFreq::new(refset, params),
+            cfg,
+            slots: Vec::new(),
+            free: Vec::new(),
+            by_tag: BTreeMap::new(),
+            due: Vec::new(),
+            polls: 0,
+            evicted: 0,
+            decided: BTreeMap::new(),
+        }
+    }
+
+    /// Search class-first through a registry (decisions unchanged, the
+    /// per-window lookup gets cheaper) — same contract as
+    /// [`crate::stream::online::OnlineClassifier::with_registry`].
+    pub fn with_registry(mut self, registry: &'a crate::registry::ClassRegistry) -> Self {
+        self.sel = self.sel.with_registry(registry);
+        self
+    }
+
+    pub fn stats(&self) -> MuxStats {
+        MuxStats {
+            live: self.by_tag.len(),
+            decided: self.decided.len(),
+            evicted: self.evicted,
+            polls: self.polls,
+            capacity: self.cfg.max_streams,
+        }
+    }
+
+    pub fn id_of(&self, tag: &str) -> Option<StreamId> {
+        self.by_tag.get(tag).copied()
+    }
+
+    /// Live (admitted, not yet retired) streams, tag-sorted.
+    pub fn live(&self) -> Vec<(String, StreamId)> {
+        self.by_tag.iter().map(|(t, id)| (t.clone(), *id)).collect()
+    }
+
+    /// Admit a new stream.  Errors on a duplicate live tag, and reports
+    /// backpressure when the arena is full of actively-streaming,
+    /// undecided tenants (decided or idle tenants are LRU-evicted to
+    /// make room).
+    pub fn admit(&mut self, spec: StreamSpec) -> anyhow::Result<StreamId> {
+        anyhow::ensure!(
+            !self.by_tag.contains_key(&spec.tag),
+            "stream '{}' already admitted",
+            spec.tag
+        );
+        if self.by_tag.len() >= self.cfg.max_streams {
+            let victim = self.lru_evictable();
+            let Some(vi) = victim else {
+                anyhow::bail!(
+                    "mux backpressure: {} live streams at capacity {}, all active and \
+                     undecided — poll() and retire finished streams before admitting",
+                    self.by_tag.len(),
+                    self.cfg.max_streams
+                );
+            };
+            self.retire_index(vi);
+            self.evicted += 1;
+        }
+        let refspec = self.sel.refset;
+        let tdp = spec.tdp_w.unwrap_or(refspec.spec.tdp_w);
+        let dt = spec.sample_dt_ms.unwrap_or(1.0);
+        let acc = TraceAccumulator::new(
+            if tdp > 0.0 { tdp } else { refspec.spec.tdp_w },
+            if dt > 0.0 { dt } else { 1.0 },
+            &refspec.bin_sizes,
+            self.cfg.online.mode,
+        );
+        let state = StreamState {
+            tag: spec.tag.clone(),
+            app: spec.app,
+            util: spec.util,
+            objective: spec.objective,
+            acc,
+            clock: WindowClock::new(self.cfg.online.window_samples, self.cfg.online.stable_k),
+            last: None,
+            decision: None,
+            last_seen_poll: self.polls,
+        };
+        let index = match self.free.pop() {
+            Some(i) => {
+                self.slots[i as usize].state = Some(state);
+                i
+            }
+            None => {
+                self.slots.push(Slot { gen: 0, state: Some(state) });
+                (self.slots.len() - 1) as u32
+            }
+        };
+        let id = StreamId { index, gen: self.slots[index as usize].gen };
+        self.by_tag.insert(spec.tag, id);
+        Ok(id)
+    }
+
+    /// Feed one sample to a stream.  Returns true when the stream has
+    /// already decided (the sample is dropped, mirroring how the
+    /// single-stream classifier no-ops pushes after a decision).
+    pub fn offer(&mut self, id: StreamId, raw_w: f64, busy: bool) -> anyhow::Result<bool> {
+        let polls = self.polls;
+        let pending = {
+            let st = self.state_mut(id)?;
+            st.last_seen_poll = polls;
+            if st.decision.is_some() {
+                return Ok(true);
+            }
+            st.acc.push(raw_w, busy);
+            if st.clock.due(st.acc.samples_offered()) && !st.acc.is_empty() {
+                Some(PendingEval {
+                    id,
+                    target: st.acc.target_profile(&st.tag, &st.app, st.util),
+                    objective: st.objective,
+                    samples_at: st.acc.samples_offered(),
+                })
+            } else {
+                None
+            }
+        };
+        if let Some(pe) = pending {
+            self.due.push(pe);
+        }
+        Ok(false)
+    }
+
+    /// [`StreamMux::offer`] for sources without a busy channel.
+    pub fn offer_watt(&mut self, id: StreamId, raw_w: f64) -> anyhow::Result<bool> {
+        self.offer(id, raw_w, true)
+    }
+
+    /// Run one tick: classify every queued window snapshot as a single
+    /// batch, apply the results per stream in queue order, then sweep
+    /// idle streams.  Returns the decisions that fired this tick,
+    /// sorted by tag.
+    pub fn poll(&mut self) -> Vec<MuxDecision> {
+        self.polls += 1;
+        let due = std::mem::take(&mut self.due);
+        // Pre-filter stale handles (retired mid-interval) and streams
+        // that decided before this poll; in-queue decisions are handled
+        // during application below.
+        let live: Vec<PendingEval> = due
+            .into_iter()
+            .filter(|pe| self.undecided(pe.id))
+            .collect();
+        let mut fired = Vec::new();
+        if !live.is_empty() {
+            let pairs: Vec<(&TargetProfile, Objective)> =
+                live.iter().map(|pe| (&pe.target, pe.objective)).collect();
+            let results = self.sel.classify_batch(&pairs);
+            for (pe, cls) in live.into_iter().zip(results) {
+                let Ok(st) = self.state_mut(pe.id) else { continue };
+                if st.decision.is_some() {
+                    continue; // decided earlier in this same queue
+                }
+                let Some(cls) = cls else {
+                    continue; // unclassifiable snapshot: no streak update
+                };
+                let stable = st.clock.observe(&cls.plan.pwr_neighbor, cls.margin);
+                st.last = Some(cls);
+                if stable {
+                    let cls = st.last.as_ref().unwrap();
+                    let d = OnlineDecision {
+                        plan: cls.plan.clone(),
+                        class_id: cls.class_id,
+                        confidence: st.clock.confidence(),
+                        windows: st.clock.windows(),
+                        samples_used: pe.samples_at,
+                        early_exit: true,
+                        trace_fraction: None,
+                    };
+                    st.decision = Some(d.clone());
+                    let tag = st.tag.clone();
+                    self.decided.insert(tag.clone(), d.digest());
+                    fired.push(MuxDecision { id: pe.id, tag, decision: d });
+                }
+            }
+        }
+        fired.sort_by(|a, b| a.tag.cmp(&b.tag));
+        self.sweep_idle();
+        fired
+    }
+
+    /// End of one stream: process its still-queued window snapshots
+    /// (serially — bit-exact vs the batch, per the `classify_batch`
+    /// contract), then classify the final partial window exactly as
+    /// [`crate::stream::online::OnlineClassifier::finalize`] would.
+    /// Returns None only for an empty/idle/unclassifiable stream.
+    pub fn finalize(&mut self, id: StreamId) -> anyhow::Result<Option<OnlineDecision>> {
+        // Drain this stream's queued evals, preserving queue order.
+        let mut mine = Vec::new();
+        let mut rest = Vec::new();
+        for pe in std::mem::take(&mut self.due) {
+            if pe.id == id {
+                mine.push(pe);
+            } else {
+                rest.push(pe);
+            }
+        }
+        self.due = rest;
+        for pe in mine {
+            if self.state_ref(id)?.decision.is_some() {
+                break;
+            }
+            let cls = self.sel.classify(&pe.target, pe.objective);
+            let st = self.state_mut(id)?;
+            let Some(cls) = cls else { continue };
+            let stable = st.clock.observe(&cls.plan.pwr_neighbor, cls.margin);
+            st.last = Some(cls);
+            if stable {
+                let cls = st.last.as_ref().unwrap();
+                let d = OnlineDecision {
+                    plan: cls.plan.clone(),
+                    class_id: cls.class_id,
+                    confidence: st.clock.confidence(),
+                    windows: st.clock.windows(),
+                    samples_used: pe.samples_at,
+                    early_exit: true,
+                    trace_fraction: None,
+                };
+                st.decision = Some(d.clone());
+                let tag = st.tag.clone();
+                self.decided.insert(tag, d.digest());
+            }
+        }
+        // Final partial window, unless the stream already decided or
+        // ended exactly on an evaluated boundary.
+        let final_eval = {
+            let st = self.state_ref(id)?;
+            if let Some(d) = &st.decision {
+                return Ok(Some(d.clone()));
+            }
+            if st.acc.is_empty() {
+                return Ok(None);
+            }
+            if st.clock.on_boundary(st.acc.samples_offered()) {
+                None
+            } else {
+                Some((st.acc.target_profile(&st.tag, &st.app, st.util), st.objective))
+            }
+        };
+        if let Some((target, objective)) = final_eval {
+            let cls = self.sel.classify(&target, objective);
+            if let Some(cls) = cls {
+                let st = self.state_mut(id)?;
+                st.clock.observe_final();
+                st.last = Some(cls);
+            }
+        }
+        let st = self.state_mut(id)?;
+        let Some(cls) = st.last.as_ref() else {
+            return Ok(None);
+        };
+        let d = OnlineDecision {
+            plan: cls.plan.clone(),
+            class_id: cls.class_id,
+            confidence: st.clock.final_confidence(&cls.plan.pwr_neighbor, cls.margin),
+            windows: st.clock.windows(),
+            samples_used: st.acc.samples_offered(),
+            early_exit: false,
+            trace_fraction: Some(1.0),
+        };
+        st.decision = Some(d.clone());
+        let tag = st.tag.clone();
+        self.decided.insert(tag, d.digest());
+        Ok(Some(d))
+    }
+
+    /// The stream's decision, if it has fired.
+    pub fn decision(&self, id: StreamId) -> anyhow::Result<Option<OnlineDecision>> {
+        Ok(self.state_ref(id)?.decision.clone())
+    }
+
+    /// Samples offered to one stream so far.
+    pub fn samples_offered(&self, id: StreamId) -> anyhow::Result<usize> {
+        Ok(self.state_ref(id)?.acc.samples_offered())
+    }
+
+    /// Retire a stream, freeing its slot for reuse.  The slot's
+    /// generation is bumped, so the retired [`StreamId`] goes stale.
+    pub fn retire(&mut self, id: StreamId) -> anyhow::Result<()> {
+        self.state_ref(id)?; // validate before mutating
+        self.retire_index(id.index as usize);
+        Ok(())
+    }
+
+    /// FNV-1a digest over all decisions so far, folded in tag order —
+    /// invariant to poll batching, interleaving, and decision order.
+    pub fn fleet_digest(&self) -> u64 {
+        let mut h: u64 = 0xcbf29ce484222325;
+        for (tag, digest) in &self.decided {
+            for b in format!("{tag}={digest:016x}\n").bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x100000001b3);
+            }
+        }
+        h
+    }
+
+    /// Per-tag decision digests recorded so far (tag-ordered).
+    pub fn decision_digests(&self) -> &BTreeMap<String, u64> {
+        &self.decided
+    }
+
+    fn undecided(&self, id: StreamId) -> bool {
+        self.state_ref(id).is_ok_and(|st| st.decision.is_none())
+    }
+
+    /// Least-recently-active stream that may be evicted to make room:
+    /// decided, or idle since before the current poll.  Ties break on
+    /// the lowest slot index, keeping eviction deterministic.
+    fn lru_evictable(&self) -> Option<usize> {
+        let mut best: Option<(u64, usize)> = None;
+        for (i, slot) in self.slots.iter().enumerate() {
+            let Some(st) = &slot.state else { continue };
+            let evictable = st.decision.is_some() || st.last_seen_poll < self.polls;
+            if !evictable {
+                continue;
+            }
+            let better = match best {
+                None => true,
+                Some((seen, _)) => st.last_seen_poll < seen,
+            };
+            if better {
+                best = Some((st.last_seen_poll, i));
+            }
+        }
+        best.map(|(_, i)| i)
+    }
+
+    fn sweep_idle(&mut self) {
+        if self.cfg.idle_evict_polls == 0 {
+            return;
+        }
+        for i in 0..self.slots.len() {
+            let evict = match &self.slots[i].state {
+                Some(st) => self.polls.saturating_sub(st.last_seen_poll) >= self.cfg.idle_evict_polls,
+                None => false,
+            };
+            if evict {
+                self.retire_index(i);
+                self.evicted += 1;
+            }
+        }
+    }
+
+    fn retire_index(&mut self, i: usize) {
+        if let Some(st) = self.slots[i].state.take() {
+            self.by_tag.remove(&st.tag);
+            self.slots[i].gen = self.slots[i].gen.wrapping_add(1);
+            self.free.push(i as u32);
+        }
+    }
+
+    fn state_ref(&self, id: StreamId) -> anyhow::Result<&StreamState> {
+        let slot = self
+            .slots
+            .get(id.index as usize)
+            .filter(|s| s.gen == id.gen)
+            .ok_or_else(|| anyhow::anyhow!("stale or unknown stream id {id:?}"))?;
+        slot.state
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("stream id {id:?} was retired"))
+    }
+
+    fn state_mut(&mut self, id: StreamId) -> anyhow::Result<&mut StreamState> {
+        let slot = self
+            .slots
+            .get_mut(id.index as usize)
+            .filter(|s| s.gen == id.gen)
+            .ok_or_else(|| anyhow::anyhow!("stale or unknown stream id {id:?}"))?;
+        slot.state
+            .as_mut()
+            .ok_or_else(|| anyhow::anyhow!("stream id {id:?} was retired"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{GpuSpec, MinosParams, SimParams};
+    use crate::workloads;
+
+    fn small_refset() -> ReferenceSet {
+        let spec = GpuSpec::mi300x();
+        let sim = SimParams::default();
+        let minos = MinosParams::default();
+        let reg = workloads::registry();
+        let picks: Vec<&workloads::Workload> = ["sdxl-b64", "milc-6", "lammps-8x8x16"]
+            .iter()
+            .map(|n| reg.by_name(n).unwrap())
+            .collect();
+        ReferenceSet::build(&spec, &sim, &minos, &picks)
+    }
+
+    fn cfg(window: usize, k: usize) -> MuxConfig {
+        MuxConfig::new(OnlineConfig::new(window, k, Objective::PowerCentric))
+    }
+
+    #[test]
+    fn generation_check_rejects_stale_ids() {
+        let rs = small_refset();
+        let params = MinosParams::default();
+        let mut mux = StreamMux::new(&rs, &params, cfg(64, 3));
+        let spec = StreamSpec::new("a", "faiss", UtilPoint::new(50.0, 30.0), Objective::PowerCentric);
+        let id = mux.admit(spec.clone()).unwrap();
+        mux.offer_watt(id, 500.0).unwrap();
+        mux.retire(id).unwrap();
+        assert!(mux.offer_watt(id, 500.0).is_err(), "stale id must be rejected");
+        // the slot is recycled with a new generation; the old id stays dead
+        let id2 = mux.admit(spec).unwrap();
+        assert_eq!(id.index(), id2.index());
+        assert_ne!(id, id2);
+        assert!(mux.offer_watt(id2, 500.0).is_ok());
+        assert!(mux.offer_watt(id, 500.0).is_err());
+    }
+
+    #[test]
+    fn duplicate_tags_are_rejected() {
+        let rs = small_refset();
+        let params = MinosParams::default();
+        let mut mux = StreamMux::new(&rs, &params, cfg(64, 3));
+        let spec = StreamSpec::new("a", "faiss", UtilPoint::new(50.0, 30.0), Objective::PowerCentric);
+        mux.admit(spec.clone()).unwrap();
+        assert!(mux.admit(spec).is_err());
+    }
+
+    #[test]
+    fn backpressure_when_arena_is_full_of_active_streams() {
+        let rs = small_refset();
+        let params = MinosParams::default();
+        let mut mux = StreamMux::new(&rs, &params, cfg(64, 3).with_max_streams(2));
+        let mk = |t: &str| {
+            StreamSpec::new(t, "faiss", UtilPoint::new(50.0, 30.0), Objective::PowerCentric)
+        };
+        let a = mux.admit(mk("a")).unwrap();
+        let b = mux.admit(mk("b")).unwrap();
+        mux.offer_watt(a, 500.0).unwrap();
+        mux.offer_watt(b, 500.0).unwrap();
+        // both streams active in the current interval and undecided:
+        // admission must report backpressure, not evict a live tenant
+        let err = mux.admit(mk("c")).unwrap_err();
+        assert!(err.to_string().contains("backpressure"), "{err}");
+        // after a poll both are idle-since-last-interval → LRU eviction
+        // makes room and admission succeeds
+        mux.poll();
+        let c = mux.admit(mk("c")).unwrap();
+        assert!(mux.offer_watt(c, 500.0).is_ok());
+        assert_eq!(mux.stats().evicted, 1);
+        assert_eq!(mux.stats().live, 2);
+    }
+
+    #[test]
+    fn idle_sweep_evicts_only_silent_streams() {
+        let rs = small_refset();
+        let params = MinosParams::default();
+        let mut mux = StreamMux::new(&rs, &params, cfg(64, 3).with_idle_evict_polls(2));
+        let mk = |t: &str| {
+            StreamSpec::new(t, "faiss", UtilPoint::new(50.0, 30.0), Objective::PowerCentric)
+        };
+        let a = mux.admit(mk("a")).unwrap();
+        let b = mux.admit(mk("b")).unwrap();
+        for _ in 0..3 {
+            mux.offer_watt(a, 500.0).unwrap();
+            mux.poll(); // b never offers a sample
+        }
+        assert!(mux.offer_watt(a, 500.0).is_ok(), "active stream survives");
+        assert!(mux.offer_watt(b, 500.0).is_err(), "idle stream was evicted");
+        assert_eq!(mux.stats().evicted, 1);
+    }
+
+    #[test]
+    fn fleet_digest_is_order_invariant_and_content_sensitive() {
+        let rs = small_refset();
+        let params = MinosParams::default();
+        let mux = StreamMux::new(&rs, &params, cfg(64, 3));
+        let empty = mux.fleet_digest();
+        let mut a = StreamMux::new(&rs, &params, cfg(64, 3));
+        a.decided.insert("s1".into(), 0xdead);
+        a.decided.insert("s2".into(), 0xbeef);
+        let mut b = StreamMux::new(&rs, &params, cfg(64, 3));
+        b.decided.insert("s2".into(), 0xbeef);
+        b.decided.insert("s1".into(), 0xdead);
+        assert_eq!(a.fleet_digest(), b.fleet_digest());
+        assert_ne!(a.fleet_digest(), empty);
+        b.decided.insert("s2".into(), 0xbee0);
+        assert_ne!(a.fleet_digest(), b.fleet_digest());
+    }
+}

@@ -107,6 +107,104 @@ impl OnlineDecision {
     }
 }
 
+/// Window-due scheduling and stability-streak bookkeeping, factored
+/// out of [`OnlineClassifier`] so the multi-stream mux
+/// ([`crate::stream::mux::StreamMux`]) can run the *same* due/streak
+/// arithmetic per stream while batching the classification itself
+/// across streams.  One clock per stream; it never touches the
+/// accumulator or the reference set, so single-stream and mux paths
+/// reach bit-identical decisions by construction.
+#[derive(Debug, Clone)]
+pub struct WindowClock {
+    window_samples: usize,
+    stable_k: usize,
+    windows: usize,
+    streak: usize,
+    streak_neighbor: Option<String>,
+    streak_min_margin: f64,
+}
+
+impl WindowClock {
+    pub fn new(window_samples: usize, stable_k: usize) -> Self {
+        WindowClock {
+            window_samples: window_samples.max(1),
+            stable_k: stable_k.max(1),
+            windows: 0,
+            streak: 0,
+            streak_neighbor: None,
+            streak_min_margin: 1.0,
+        }
+    }
+
+    pub fn window_samples(&self) -> usize {
+        self.window_samples
+    }
+
+    pub fn stable_k(&self) -> usize {
+        self.stable_k
+    }
+
+    /// Algorithm 1 evaluations recorded so far.
+    pub fn windows(&self) -> usize {
+        self.windows
+    }
+
+    pub fn streak(&self) -> usize {
+        self.streak
+    }
+
+    /// Minimum neighbor margin observed over the current streak.
+    pub fn confidence(&self) -> f64 {
+        self.streak_min_margin
+    }
+
+    /// True when an evaluation is due at this offered-sample count
+    /// (every `window_samples` offered samples).
+    pub fn due(&self, samples_offered: usize) -> bool {
+        samples_offered % self.window_samples == 0
+    }
+
+    /// True when the stream ended exactly on an already-evaluated
+    /// window boundary — finalization must not re-evaluate that state
+    /// (it would inflate the window count and burn a redundant pass).
+    pub fn on_boundary(&self, samples_offered: usize) -> bool {
+        self.windows > 0 && samples_offered % self.window_samples == 0
+    }
+
+    /// Record one window evaluation; returns true when the top-1 power
+    /// neighbor has now been stable for `stable_k` consecutive windows.
+    pub fn observe(&mut self, neighbor: &str, margin: f64) -> bool {
+        self.windows += 1;
+        if self.streak_neighbor.as_deref() == Some(neighbor) {
+            self.streak += 1;
+            self.streak_min_margin = self.streak_min_margin.min(margin);
+        } else {
+            self.streak_neighbor = Some(neighbor.to_string());
+            self.streak = 1;
+            self.streak_min_margin = margin;
+        }
+        self.streak >= self.stable_k
+    }
+
+    /// Record the end-of-stream partial-window evaluation *without*
+    /// touching the streak — a last-window flip must not fabricate
+    /// stability it never earned.
+    pub fn observe_final(&mut self) {
+        self.windows += 1;
+    }
+
+    /// Confidence for an end-of-stream decision: the streak's min
+    /// margin only qualifies if the final evaluation confirms the
+    /// streak's neighbor; a flip falls back to the final margin alone.
+    pub fn final_confidence(&self, neighbor: &str, margin: f64) -> f64 {
+        if self.streak_neighbor.as_deref() == Some(neighbor) {
+            margin.min(self.streak_min_margin)
+        } else {
+            margin
+        }
+    }
+}
+
 /// Incremental Algorithm 1 over a live telemetry stream.
 pub struct OnlineClassifier<'a> {
     sel: SelectOptimalFreq<'a>,
@@ -115,10 +213,7 @@ pub struct OnlineClassifier<'a> {
     name: String,
     app: String,
     util: UtilPoint,
-    windows: usize,
-    streak: usize,
-    streak_neighbor: Option<String>,
-    streak_min_margin: f64,
+    clock: WindowClock,
     last: Option<Classification>,
     decision: Option<OnlineDecision>,
 }
@@ -145,10 +240,7 @@ impl<'a> OnlineClassifier<'a> {
             name: name.to_string(),
             app: app.to_string(),
             util,
-            windows: 0,
-            streak: 0,
-            streak_neighbor: None,
-            streak_min_margin: 1.0,
+            clock: WindowClock::new(cfg.window_samples, cfg.stable_k),
             last: None,
             decision: None,
         }
@@ -197,7 +289,7 @@ impl<'a> OnlineClassifier<'a> {
     }
 
     pub fn windows_evaluated(&self) -> usize {
-        self.windows
+        self.clock.windows()
     }
 
     pub fn samples_offered(&self) -> usize {
@@ -205,7 +297,7 @@ impl<'a> OnlineClassifier<'a> {
     }
 
     pub fn current_streak(&self) -> usize {
-        self.streak
+        self.clock.streak()
     }
 
     /// Feed one raw sample (with busy flag); returns the decision once
@@ -217,7 +309,7 @@ impl<'a> OnlineClassifier<'a> {
             return self.decision.as_ref();
         }
         self.acc.push(raw_w, busy);
-        if self.acc.samples_offered() % self.cfg.window_samples == 0 {
+        if self.clock.due(self.acc.samples_offered()) {
             self.evaluate_window();
         }
         self.decision.as_ref()
@@ -237,24 +329,15 @@ impl<'a> OnlineClassifier<'a> {
         let Some(cls) = self.sel.classify(&target, self.cfg.objective) else {
             return;
         };
-        self.windows += 1;
-        let neighbor = cls.plan.pwr_neighbor.clone();
-        if self.streak_neighbor.as_deref() == Some(neighbor.as_str()) {
-            self.streak += 1;
-            self.streak_min_margin = self.streak_min_margin.min(cls.margin);
-        } else {
-            self.streak_neighbor = Some(neighbor);
-            self.streak = 1;
-            self.streak_min_margin = cls.margin;
-        }
+        let stable = self.clock.observe(&cls.plan.pwr_neighbor, cls.margin);
         self.last = Some(cls);
-        if self.streak >= self.cfg.stable_k {
+        if stable {
             let cls = self.last.as_ref().unwrap();
             self.decision = Some(OnlineDecision {
                 plan: cls.plan.clone(),
                 class_id: cls.class_id,
-                confidence: self.streak_min_margin,
-                windows: self.windows,
+                confidence: self.clock.confidence(),
+                windows: self.clock.windows(),
                 samples_used: self.acc.samples_offered(),
                 early_exit: true,
                 trace_fraction: None,
@@ -274,34 +357,21 @@ impl<'a> OnlineClassifier<'a> {
         }
         // Evaluate the final partial window — unless the stream ended
         // exactly on a window boundary, where this state was already
-        // evaluated by the last push (re-running would inflate the
-        // window count and burn a redundant classify pass).
-        let on_boundary = self.windows > 0
-            && self.acc.samples_offered() % self.cfg.window_samples == 0;
-        if !on_boundary {
+        // evaluated by the last push.
+        if !self.clock.on_boundary(self.acc.samples_offered()) {
             let target = self.acc.target_profile(&self.name, &self.app, self.util);
             if let Some(cls) = self.sel.classify(&target, self.cfg.objective) {
-                self.windows += 1;
+                self.clock.observe_final();
                 self.last = Some(cls);
             }
         }
         let cls = self.last.as_ref()?;
-        let margin = cls.margin;
-        // The streak's min margin only qualifies this decision if the
-        // final evaluation confirms the streak's neighbor — a last-
-        // window flip must not inherit a margin that was measured for a
-        // different candidate.
-        let confidence =
-            if self.streak_neighbor.as_deref() == Some(cls.plan.pwr_neighbor.as_str()) {
-                margin.min(self.streak_min_margin)
-            } else {
-                margin
-            };
+        let confidence = self.clock.final_confidence(&cls.plan.pwr_neighbor, cls.margin);
         self.decision = Some(OnlineDecision {
             plan: cls.plan.clone(),
             class_id: cls.class_id,
             confidence,
-            windows: self.windows,
+            windows: self.clock.windows(),
             samples_used: self.acc.samples_offered(),
             early_exit: false,
             trace_fraction: Some(1.0),
@@ -454,6 +524,38 @@ mod tests {
         assert!(flat.class_id.is_none());
         assert_eq!(fast.class_id, reg.class_of(&fast.plan.pwr_neighbor));
         assert!(fast.class_id.is_some());
+    }
+
+    #[test]
+    fn window_clock_mirrors_streak_semantics() {
+        let mut c = WindowClock::new(8, 3);
+        assert!(!c.due(7));
+        assert!(c.due(8));
+        assert!(c.due(16));
+        // boundary only counts once a window was actually evaluated
+        assert!(!c.on_boundary(8));
+        assert!(!c.observe("a", 0.9));
+        assert!(c.on_boundary(8));
+        assert!(!c.observe("a", 0.4));
+        assert_eq!(c.streak(), 2);
+        // a flip resets the streak and its margin floor
+        assert!(!c.observe("b", 0.7));
+        assert_eq!(c.streak(), 1);
+        assert!((c.confidence() - 0.7).abs() < 1e-12);
+        assert!(!c.observe("b", 0.5));
+        assert!(c.observe("b", 0.6));
+        assert_eq!(c.windows(), 5);
+        assert!((c.confidence() - 0.5).abs() < 1e-12);
+        // final confidence: streak margin only if the neighbor matches
+        assert!((c.final_confidence("b", 0.8) - 0.5).abs() < 1e-12);
+        assert!((c.final_confidence("z", 0.8) - 0.8).abs() < 1e-12);
+        c.observe_final();
+        assert_eq!(c.windows(), 6);
+        assert_eq!(c.streak(), 3, "final eval must not touch the streak");
+        // degenerate knobs clamp to 1 instead of dividing by zero
+        let z = WindowClock::new(0, 0);
+        assert_eq!(z.window_samples(), 1);
+        assert_eq!(z.stable_k(), 1);
     }
 
     #[test]

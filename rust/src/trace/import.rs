@@ -185,6 +185,175 @@ impl StreamParser {
     }
 }
 
+/// One parsed sample from a tagged multi-stream source.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TaggedSample {
+    /// Stream tag (first column) — typically a job or node id.
+    pub tag: String,
+    /// Per-stream timestamp, when the stream uses the 3-column format.
+    pub t_ms: Option<f64>,
+    pub watts: f64,
+}
+
+/// Per-stream parse state inside a [`TaggedStreamParser`].
+#[derive(Debug, Default)]
+struct TagState {
+    /// Data/error lines seen *for this stream* — error messages count
+    /// per stream, since each tag is logically its own telemetry file.
+    lineno: usize,
+    format: Option<LineFormat>,
+    last_t_ms: Option<f64>,
+    samples: usize,
+}
+
+/// Incremental parser for *interleaved tagged* telemetry — the firehose
+/// input format of `minos stream --multi -`:
+///
+/// ```text
+/// job-17,412.0          # tag,watts
+/// job-03,0.0,845.2      # tag,t_ms,watts
+/// ```
+///
+/// One physical byte stream carries many logical streams; lines from
+/// different tags interleave arbitrarily.  The chunk carry reassembles
+/// a line split across chunk boundaries before it is attributed to its
+/// stream, so a partial line can never leak samples into the wrong tag.
+/// All of [`StreamParser`]'s hardening applies **per stream**: each tag
+/// locks its own column format on its first data line, timestamps must
+/// be strictly increasing within a tag (other tags' clocks are
+/// independent), and every error names the stream tag and its
+/// per-stream line number alongside the global input line.
+#[derive(Debug, Default)]
+pub struct TaggedStreamParser {
+    /// Partial line carried across chunk boundaries.
+    carry: String,
+    /// Global line number across the interleaved source.
+    lineno: usize,
+    streams: std::collections::BTreeMap<String, TagState>,
+}
+
+impl TaggedStreamParser {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Distinct stream tags seen so far.
+    pub fn stream_count(&self) -> usize {
+        self.streams.len()
+    }
+
+    /// Data samples parsed for one tag (0 for an unseen tag).
+    pub fn stream_samples(&self, tag: &str) -> usize {
+        self.streams.get(tag).map_or(0, |s| s.samples)
+    }
+
+    /// Parse one complete line.  `Ok(None)` for blank/comment lines,
+    /// `Ok(Some(sample))` for a data line.
+    pub fn parse_line(&mut self, line: &str) -> anyhow::Result<Option<TaggedSample>> {
+        self.lineno += 1;
+        let g = self.lineno;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            return Ok(None);
+        }
+        let cols: Vec<&str> = line.split(',').map(str::trim).collect();
+        let fmt = match cols.len() {
+            2 => LineFormat::Watts,
+            3 => LineFormat::TimeWatts,
+            n => anyhow::bail!(
+                "input line {g}: expected 2 or 3 columns (tag,[t_ms,]watts), got {n}"
+            ),
+        };
+        let tag = cols[0];
+        anyhow::ensure!(!tag.is_empty(), "input line {g}: empty stream tag");
+        let st = self.streams.entry(tag.to_string()).or_default();
+        st.lineno += 1;
+        let sl = st.lineno;
+        match st.format {
+            None => st.format = Some(fmt),
+            Some(locked) if locked != fmt => anyhow::bail!(
+                "stream '{tag}' line {sl} (input line {g}): mixed formats — \
+                 stream started {} but this line is {}",
+                match locked {
+                    LineFormat::Watts => "2-column (tag,watts)",
+                    LineFormat::TimeWatts => "3-column (tag,t_ms,watts)",
+                },
+                match fmt {
+                    LineFormat::Watts => "2-column",
+                    LineFormat::TimeWatts => "3-column",
+                }
+            ),
+            Some(_) => {}
+        }
+        let (t_ms, watts_col) = match fmt {
+            LineFormat::Watts => (None, cols[1]),
+            LineFormat::TimeWatts => {
+                let t = cols[1].parse::<f64>().map_err(|e| {
+                    anyhow::anyhow!(
+                        "stream '{tag}' line {sl} (input line {g}): bad timestamp '{}': {e}",
+                        cols[1]
+                    )
+                })?;
+                anyhow::ensure!(
+                    t.is_finite(),
+                    "stream '{tag}' line {sl} (input line {g}): non-finite timestamp"
+                );
+                if let Some(prev) = st.last_t_ms {
+                    anyhow::ensure!(
+                        t > prev,
+                        "stream '{tag}' line {sl} (input line {g}): \
+                         non-monotonic timestamp {t} after {prev}"
+                    );
+                }
+                st.last_t_ms = Some(t);
+                (Some(t), cols[2])
+            }
+        };
+        let w = watts_col.parse::<f64>().map_err(|e| {
+            anyhow::anyhow!(
+                "stream '{tag}' line {sl} (input line {g}): bad watts '{watts_col}': {e}"
+            )
+        })?;
+        anyhow::ensure!(
+            w.is_finite() && w >= 0.0,
+            "stream '{tag}' line {sl} (input line {g}): \
+             negative or non-finite watts '{watts_col}'"
+        );
+        st.samples += 1;
+        Ok(Some(TaggedSample {
+            tag: tag.to_string(),
+            t_ms,
+            watts: w,
+        }))
+    }
+
+    /// Feed an arbitrary text chunk (lines may split anywhere, including
+    /// mid-tag); parsed samples are appended to `out` in input order.
+    pub fn push_chunk(&mut self, chunk: &str, out: &mut Vec<TaggedSample>) -> anyhow::Result<()> {
+        let mut text = std::mem::take(&mut self.carry);
+        text.push_str(chunk);
+        let mut start = 0usize;
+        while let Some(nl) = text[start..].find('\n') {
+            let line = &text[start..start + nl];
+            if let Some(s) = self.parse_line(line)? {
+                out.push(s);
+            }
+            start += nl + 1;
+        }
+        self.carry = text[start..].to_string();
+        Ok(())
+    }
+
+    /// End of stream: parse the trailing unterminated line, if any.
+    pub fn finish(&mut self) -> anyhow::Result<Option<TaggedSample>> {
+        let tail = std::mem::take(&mut self.carry);
+        if tail.trim().is_empty() {
+            return Ok(None);
+        }
+        self.parse_line(&tail)
+    }
+}
+
 /// Parse a power-trace file into a [`PowerTrace`].
 ///
 /// The imported samples are treated as the *raw* instantaneous channel;
@@ -301,6 +470,84 @@ mod tests {
         p.push_chunk("100\n200\n", &mut out).unwrap();
         let err = p.push_chunk("oops\n", &mut out).unwrap_err();
         assert!(err.to_string().contains("line 3"), "{err}");
+    }
+
+    #[test]
+    fn tagged_lines_reassemble_across_chunk_boundaries_per_stream() {
+        let text = "# firehose\na,400\nb,0.0,500\na,410\nb,1.5,520\na,420\nb,3.0,540";
+        // reference: whole-input parse
+        let mut whole = TaggedStreamParser::new();
+        let mut want = Vec::new();
+        whole.push_chunk(text, &mut want).unwrap();
+        if let Some(s) = whole.finish().unwrap() {
+            want.push(s);
+        }
+        assert_eq!(want.len(), 6);
+        // split mid-line, mid-tag, mid-number — including inside 'b,1.5'
+        for cuts in [vec![4usize, 12, 13, 25, 36], vec![1, 2, 20, 21, 22], vec![30]] {
+            let mut p = TaggedStreamParser::new();
+            let mut out = Vec::new();
+            let mut prev = 0usize;
+            for &c in &cuts {
+                p.push_chunk(&text[prev..c.min(text.len())], &mut out).unwrap();
+                prev = c.min(text.len());
+            }
+            p.push_chunk(&text[prev..], &mut out).unwrap();
+            if let Some(s) = p.finish().unwrap() {
+                out.push(s);
+            }
+            assert_eq!(out, want, "cuts {cuts:?}");
+            assert_eq!(p.stream_samples("a"), 3, "cuts {cuts:?}");
+            assert_eq!(p.stream_samples("b"), 3, "cuts {cuts:?}");
+        }
+    }
+
+    #[test]
+    fn tagged_malformed_line_names_stream_and_line() {
+        let mut p = TaggedStreamParser::new();
+        let mut out = Vec::new();
+        p.push_chunk("a,100\nb,200\na,150\n", &mut out).unwrap();
+        // third 'a' line is garbage: the error must carry the tag and
+        // the *per-stream* line number (3), not just the global one (5)
+        let err = p.push_chunk("b,210\na,oops\n", &mut out).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("stream 'a'"), "{msg}");
+        assert!(msg.contains("line 3"), "{msg}");
+        assert!(msg.contains("input line 5"), "{msg}");
+    }
+
+    #[test]
+    fn tagged_mixed_formats_are_rejected_per_stream() {
+        // a stream may not switch column formats mid-flight...
+        let mut p = TaggedStreamParser::new();
+        let mut out = Vec::new();
+        let err = p.push_chunk("a,0.0,100\na,200\n", &mut out).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("mixed formats"), "{msg}");
+        assert!(msg.contains("stream 'a'"), "{msg}");
+        assert!(msg.contains("line 2"), "{msg}");
+        // ...but two different streams may use different formats
+        let mut p = TaggedStreamParser::new();
+        let mut out = Vec::new();
+        p.push_chunk("a,0.0,100\nb,200\na,1.5,300\nb,210\n", &mut out).unwrap();
+        assert_eq!(out.len(), 4);
+        // untagged (1-column) lines are rejected outright
+        let mut p = TaggedStreamParser::new();
+        assert!(p.push_chunk("400\n", &mut Vec::new()).is_err());
+    }
+
+    #[test]
+    fn tagged_timestamps_are_monotonic_per_stream_not_globally() {
+        let mut p = TaggedStreamParser::new();
+        let mut out = Vec::new();
+        // globally non-monotonic (a:2.0 then b:1.0) is fine — clocks are
+        // per stream
+        p.push_chunk("a,2.0,100\nb,1.0,50\nb,2.5,60\n", &mut out).unwrap();
+        // but a's own clock going backwards is a hard error
+        let err = p.push_chunk("a,1.0,200\n", &mut out).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("non-monotonic"), "{msg}");
+        assert!(msg.contains("stream 'a'"), "{msg}");
     }
 
     #[test]

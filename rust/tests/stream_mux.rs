@@ -1,0 +1,302 @@
+//! Firehose acceptance suite for [`minos::stream::StreamMux`]:
+//!
+//! * every muxed stream's decision must be **bit-identical** to a
+//!   dedicated [`OnlineClassifier`] fed the same samples (the batched
+//!   `classify_batch` path vs the serial path, on real simulated
+//!   profiles);
+//! * per-stream decisions and the fleet digest must be invariant to
+//!   stream interleaving and poll batch size;
+//! * evicting and readmitting an idle stream must not perturb anyone
+//!   else's decision, and the readmitted stream starts fresh.
+
+use std::collections::BTreeMap;
+use std::sync::OnceLock;
+
+use minos::config::{GpuSpec, MinosParams, SimParams};
+use minos::features::UtilPoint;
+use minos::minos::algorithm::Objective;
+use minos::minos::reference_set::ReferenceSet;
+use minos::sim::dvfs::DvfsMode;
+use minos::sim::profiler::{profile, Profile, ProfileRequest};
+use minos::stream::{MuxConfig, OnlineClassifier, OnlineConfig, OnlineDecision, StreamMux, StreamSpec};
+use minos::workloads;
+
+/// One shared reference set for the whole binary (frequency sweeps
+/// dominate debug-build test time).
+fn refset() -> &'static ReferenceSet {
+    static RS: OnceLock<ReferenceSet> = OnceLock::new();
+    RS.get_or_init(|| {
+        let spec = GpuSpec::mi300x();
+        let sim = SimParams::default();
+        let minos = MinosParams::default();
+        let reg = workloads::registry();
+        let picks: Vec<&workloads::Workload> =
+            ["sdxl-b64", "sdxl-b32", "milc-24", "milc-6", "lammps-8x8x16", "deepmd-water-b64"]
+                .iter()
+                .map(|n| reg.by_name(n).unwrap())
+                .collect();
+        ReferenceSet::build(&spec, &sim, &minos, &picks)
+    })
+}
+
+fn prof(name: &str) -> Profile {
+    let spec = GpuSpec::mi300x();
+    let reg = workloads::registry();
+    let w = reg.by_name(name).unwrap();
+    profile(&ProfileRequest::new(&spec, w, DvfsMode::Uncapped).with_params(&SimParams::default()))
+}
+
+/// Tag, app, util, tdp, dt, samples — one firehose tenant.
+struct Tenant {
+    tag: String,
+    app: String,
+    util: UtilPoint,
+    tdp: f64,
+    dt: f64,
+    watts: Vec<f64>,
+}
+
+/// Real simulated profiles as tenants (app/util/tdp/dt all from the
+/// profile, exactly what the single-stream acceptance test uses).
+fn profile_tenants(names: &[&str]) -> Vec<Tenant> {
+    let reg = workloads::registry();
+    names
+        .iter()
+        .map(|name| {
+            let p = prof(name);
+            Tenant {
+                tag: name.to_string(),
+                app: reg.by_name(name).unwrap().app.clone(),
+                util: UtilPoint::new(p.app_sm_util, p.app_dram_util),
+                tdp: p.trace.tdp_w,
+                dt: p.trace.sample_dt_ms,
+                watts: p.trace.raw_watts.clone(),
+            }
+        })
+        .collect()
+}
+
+/// Reference decision: a dedicated single-stream classifier fed the
+/// same samples (stop at the early exit, finalize otherwise).
+fn single_stream_decision(cfg: OnlineConfig, t: &Tenant) -> OnlineDecision {
+    let rs = refset();
+    let params = MinosParams::default();
+    let mut oc = OnlineClassifier::new(rs, &params, cfg, &t.tag, &t.app, t.util)
+        .with_tdp(t.tdp)
+        .with_sample_dt(t.dt);
+    let mut decided = None;
+    for &w in &t.watts {
+        if let Some(d) = oc.push_watt(w) {
+            decided = Some(d.clone());
+            break;
+        }
+    }
+    decided
+        .or_else(|| oc.finalize())
+        .unwrap_or_else(|| panic!("{}: single-stream classification failed", t.tag))
+}
+
+/// Run every tenant through one mux, feeding round-robin in
+/// `chunk`-sample batches over the given tenant order, polling after
+/// each round.  Returns (per-tag decisions, fleet digest).
+fn mux_decisions(
+    cfg: OnlineConfig,
+    tenants: &[Tenant],
+    order: &[usize],
+    chunk: usize,
+) -> (BTreeMap<String, OnlineDecision>, u64) {
+    let rs = refset();
+    let params = MinosParams::default();
+    let mut mux = StreamMux::new(rs, &params, MuxConfig::new(cfg));
+    let ids: Vec<_> = tenants
+        .iter()
+        .map(|t| {
+            mux.admit(
+                StreamSpec::new(&t.tag, &t.app, t.util, cfg.objective)
+                    .with_tdp(t.tdp)
+                    .with_sample_dt(t.dt),
+            )
+            .unwrap()
+        })
+        .collect();
+    let mut cursors = vec![0usize; tenants.len()];
+    loop {
+        let mut active = false;
+        for &k in order {
+            let t = &tenants[k];
+            if cursors[k] >= t.watts.len() {
+                continue;
+            }
+            let end = (cursors[k] + chunk).min(t.watts.len());
+            let mut decided = false;
+            for &w in &t.watts[cursors[k]..end] {
+                if mux.offer_watt(ids[k], w).unwrap() {
+                    decided = true;
+                    break;
+                }
+            }
+            cursors[k] = if decided { t.watts.len() } else { end };
+            if cursors[k] < t.watts.len() {
+                active = true;
+            }
+        }
+        mux.poll();
+        if !active {
+            break;
+        }
+    }
+    let mut out = BTreeMap::new();
+    for (k, t) in tenants.iter().enumerate() {
+        let d = match mux.decision(ids[k]).unwrap() {
+            Some(d) => d,
+            None => mux
+                .finalize(ids[k])
+                .unwrap()
+                .unwrap_or_else(|| panic!("{}: mux classification failed", t.tag)),
+        };
+        out.insert(t.tag.clone(), d);
+    }
+    (out, mux.fleet_digest())
+}
+
+/// The tentpole acceptance criterion: batched-through-the-mux
+/// classification is bit-identical to a dedicated per-stream
+/// classifier, on real simulated profiles.
+#[test]
+fn mux_decisions_match_dedicated_classifiers_bit_exactly() {
+    let tenants = profile_tenants(&["faiss-b4096", "sdxl-b64", "milc-6", "lammps-8x8x16"]);
+    let cfg = OnlineConfig::new(256, 3, Objective::PowerCentric);
+    let order: Vec<usize> = (0..tenants.len()).collect();
+    let (muxed, _) = mux_decisions(cfg, &tenants, &order, 64);
+    for t in &tenants {
+        let single = single_stream_decision(cfg, t);
+        let m = &muxed[&t.tag];
+        assert_eq!(m.digest(), single.digest(), "{}: decision digest diverged", t.tag);
+        assert_eq!(m.plan.pwr_neighbor, single.plan.pwr_neighbor, "{}", t.tag);
+        assert_eq!(m.plan.f_cap_mhz, single.plan.f_cap_mhz, "{}", t.tag);
+        assert_eq!(m.windows, single.windows, "{}", t.tag);
+        assert_eq!(m.samples_used, single.samples_used, "{}", t.tag);
+        assert_eq!(m.early_exit, single.early_exit, "{}", t.tag);
+        assert_eq!(m.confidence, single.confidence, "{}: confidence", t.tag);
+    }
+}
+
+/// Per-stream decisions and the fleet digest are invariant to how the
+/// streams interleave and how many samples each poll round delivers.
+#[test]
+fn interleaving_and_poll_batching_are_invisible() {
+    let tenants = profile_tenants(&["faiss-b4096", "sdxl-b64", "milc-6"]);
+    let cfg = OnlineConfig::new(256, 3, Objective::PowerCentric);
+    let fwd: Vec<usize> = (0..tenants.len()).collect();
+    let rev: Vec<usize> = (0..tenants.len()).rev().collect();
+    let runs = [
+        mux_decisions(cfg, &tenants, &fwd, 1),
+        mux_decisions(cfg, &tenants, &fwd, 64),
+        mux_decisions(cfg, &tenants, &fwd, usize::MAX / 2), // sequential: whole stream per round
+        mux_decisions(cfg, &tenants, &rev, 7),
+    ];
+    let (base, base_fleet) = &runs[0];
+    let base_digests: BTreeMap<&String, u64> =
+        base.iter().map(|(t, d)| (t, d.digest())).collect();
+    for (i, (run, fleet)) in runs.iter().enumerate().skip(1) {
+        let digests: BTreeMap<&String, u64> = run.iter().map(|(t, d)| (t, d.digest())).collect();
+        assert_eq!(base_digests, digests, "run {i}: per-stream decisions diverged");
+        assert_eq!(base_fleet, fleet, "run {i}: fleet digest diverged");
+    }
+}
+
+/// Evicting an idle tenant and readmitting it later must not perturb
+/// the other streams' decisions, and the readmitted stream starts from
+/// zero samples (no state bleeds through the recycled slot).
+#[test]
+fn eviction_and_readmission_are_isolated() {
+    let rs = refset();
+    let params = MinosParams::default();
+    let tenants = profile_tenants(&["faiss-b4096", "sdxl-b64"]);
+    let cfg = OnlineConfig::new(256, 3, Objective::PowerCentric);
+    let order: Vec<usize> = (0..tenants.len()).collect();
+    let (baseline, _) = mux_decisions(cfg, &tenants, &order, 64);
+
+    // Same run, plus a third tenant that goes silent after a few
+    // samples and is swept by the idle evictor mid-run.
+    let mcfg = MuxConfig::new(cfg).with_idle_evict_polls(2);
+    let mut mux = StreamMux::new(rs, &params, mcfg);
+    let ids: Vec<_> = tenants
+        .iter()
+        .map(|t| {
+            mux.admit(
+                StreamSpec::new(&t.tag, &t.app, t.util, cfg.objective)
+                    .with_tdp(t.tdp)
+                    .with_sample_dt(t.dt),
+            )
+            .unwrap()
+        })
+        .collect();
+    let ghost_spec = StreamSpec::new("ghost", "faiss", UtilPoint::new(40.0, 20.0), cfg.objective)
+        .with_tdp(rs.spec.tdp_w);
+    let ghost = mux.admit(ghost_spec.clone()).unwrap();
+    for &w in &[480.0, 510.0, 495.0] {
+        mux.offer_watt(ghost, w).unwrap();
+    }
+    // Decisions are captured as they fire: once a stream decides (or
+    // runs dry and is finalized) it stops offering, so the idle sweeper
+    // may legitimately retire it later — its decision must survive.
+    let mut fired: BTreeMap<String, OnlineDecision> = BTreeMap::new();
+    let mut cursors = vec![0usize; tenants.len()];
+    loop {
+        let mut active = false;
+        for (k, t) in tenants.iter().enumerate() {
+            if cursors[k] >= t.watts.len() {
+                continue;
+            }
+            let end = (cursors[k] + 64).min(t.watts.len());
+            let mut decided = false;
+            for &w in &t.watts[cursors[k]..end] {
+                if mux.offer_watt(ids[k], w).unwrap() {
+                    decided = true;
+                    break;
+                }
+            }
+            cursors[k] = if decided { t.watts.len() } else { end };
+            if cursors[k] >= t.watts.len() && !decided && !fired.contains_key(&t.tag) {
+                // Ran dry without an early exit: finalize before the
+                // sweeper can retire the now-silent stream.
+                let d = mux.finalize(ids[k]).unwrap().unwrap();
+                fired.insert(t.tag.clone(), d);
+            }
+            if cursors[k] < t.watts.len() {
+                active = true;
+            }
+        }
+        for d in mux.poll() {
+            // the ghost never offers again → swept after 2 polls
+            fired.insert(d.tag, d.decision);
+        }
+        if !active {
+            break;
+        }
+    }
+    assert!(
+        mux.offer_watt(ghost, 500.0).is_err(),
+        "idle ghost stream must have been evicted"
+    );
+    assert!(mux.stats().evicted >= 1);
+    for t in &tenants {
+        let d = fired
+            .get(&t.tag)
+            .unwrap_or_else(|| panic!("{}: no decision fired", t.tag));
+        assert_eq!(
+            d.digest(),
+            baseline[&t.tag].digest(),
+            "{}: eviction of an unrelated stream changed the decision",
+            t.tag
+        );
+    }
+    // Readmission recycles the slot under a new generation and starts
+    // from zero samples.
+    let ghost2 = mux.admit(ghost_spec).unwrap();
+    assert_ne!(ghost, ghost2);
+    assert_eq!(mux.samples_offered(ghost2).unwrap(), 0);
+    assert!(mux.offer_watt(ghost, 500.0).is_err(), "old handle stays dead");
+    assert!(mux.offer_watt(ghost2, 500.0).is_ok());
+}
