@@ -33,7 +33,7 @@ impl<'a> GuerreiroClassifier<'a> {
             .power_entries(Some(&target.app))
             .into_iter()
             .map(|e| (e, (e.mean_power_w - target.mean_power_w).abs()))
-            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .min_by(|a, b| a.1.total_cmp(&b.1))
     }
 
     /// PowerCentric cap from the mean-power neighbor's scaling data,
@@ -43,7 +43,7 @@ impl<'a> GuerreiroClassifier<'a> {
         let q = self.params.power_quantile;
         let bound = self.params.power_bound_x;
         let mut pts: Vec<_> = nn.scaling.points.iter().collect();
-        pts.sort_by(|a, b| b.f_mhz.partial_cmp(&a.f_mhz).unwrap());
+        pts.sort_by(|a, b| b.f_mhz.total_cmp(&a.f_mhz));
         for p in &pts {
             if p.quantile_rel(q) < bound {
                 return Some((p.f_mhz, p.quantile_rel(q), nn));

@@ -89,7 +89,7 @@ pub fn bench<T, F: FnMut() -> T>(name: &str, budget: Duration, max_iters: usize,
         black_box(f());
         samples.push(t0.elapsed().as_nanos() as f64);
     }
-    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    samples.sort_by(|a, b| a.total_cmp(b));
     let n = samples.len();
     let mean = samples.iter().sum::<f64>() / n as f64;
     let result = BenchResult {

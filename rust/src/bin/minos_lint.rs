@@ -1,0 +1,122 @@
+//! `minos-lint` — CLI front-end for the self-hosted determinism &
+//! abort-safety pass (rule catalog: README.md §Static analysis).
+//!
+//! Usage:
+//!
+//! ```text
+//! minos-lint                  # lint the enclosing repo (Cargo.toml walk-up)
+//! minos-lint <root>...        # lint explicit roots (fixture corpora in tests/CI)
+//! minos-lint --list-allows    # print the suppression inventory instead
+//! ```
+//!
+//! Exit status: 0 when every root is clean, 1 on findings or I/O
+//! errors, 2 on usage errors.  CI runs this as a hard gate right after
+//! clippy, plus a must-fail invocation against the violating fixtures
+//! to prove the gate actually fires.
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+use minos::lint::{lint_root, LintReport};
+
+fn print_usage() {
+    eprintln!("usage: minos-lint [--list-allows] [root ...]");
+}
+
+/// Walk up from the current directory to the nearest Cargo.toml.
+fn discover_root() -> Option<PathBuf> {
+    let mut dir = std::env::current_dir().ok()?;
+    loop {
+        if dir.join("Cargo.toml").is_file() {
+            return Some(dir);
+        }
+        if !dir.pop() {
+            return None;
+        }
+    }
+}
+
+fn print_findings(root: &Path, r: &LintReport) -> bool {
+    for f in &r.findings {
+        println!("{}", f.render());
+    }
+    if r.is_clean() {
+        println!(
+            "minos-lint: clean — {} file(s) scanned under {}, {} allow annotation(s)",
+            r.files_scanned,
+            root.display(),
+            r.allows.len()
+        );
+        true
+    } else {
+        println!(
+            "minos-lint: {} finding(s) under {}",
+            r.findings.len(),
+            root.display()
+        );
+        false
+    }
+}
+
+fn print_allows(root: &Path, r: &LintReport) {
+    for (a, used) in r.allows.iter().zip(&r.used) {
+        let tag = if *used { "" } else { "  [unused]" };
+        println!("{}:{}: allow({}) -- {}{}", a.file, a.line, a.rule, a.reason, tag);
+    }
+    println!(
+        "minos-lint: {} allow annotation(s) under {}",
+        r.allows.len(),
+        root.display()
+    );
+}
+
+fn main() -> ExitCode {
+    let mut list_allows = false;
+    let mut roots: Vec<PathBuf> = Vec::new();
+    for arg in std::env::args().skip(1) {
+        match arg.as_str() {
+            "--list-allows" => list_allows = true,
+            "--help" | "-h" => {
+                print_usage();
+                return ExitCode::SUCCESS;
+            }
+            other if other.starts_with('-') => {
+                eprintln!("minos-lint: unknown flag `{other}`");
+                print_usage();
+                return ExitCode::from(2);
+            }
+            dir => roots.push(PathBuf::from(dir)),
+        }
+    }
+    if roots.is_empty() {
+        match discover_root() {
+            Some(r) => roots.push(r),
+            None => {
+                eprintln!("minos-lint: no Cargo.toml found walking up from the current directory");
+                return ExitCode::from(2);
+            }
+        }
+    }
+
+    let mut failed = false;
+    for root in &roots {
+        match lint_root(root) {
+            Ok(report) => {
+                if list_allows {
+                    print_allows(root, &report);
+                } else if !print_findings(root, &report) {
+                    failed = true;
+                }
+            }
+            Err(e) => {
+                eprintln!("minos-lint: {}: {e}", root.display());
+                failed = true;
+            }
+        }
+    }
+    if failed {
+        ExitCode::FAILURE
+    } else {
+        ExitCode::SUCCESS
+    }
+}

@@ -153,7 +153,7 @@ impl Dendrogram {
         }
         let keep = self.n - k; // number of merges to apply
         let mut sorted: Vec<&Merge> = self.merges.iter().collect();
-        sorted.sort_by(|a, b| a.distance.partial_cmp(&b.distance).unwrap());
+        sorted.sort_by(|a, b| a.distance.total_cmp(&b.distance));
         let t = sorted[keep - 1].distance;
         // merges are monotone for ward/average in practice; slice at t
         self.slice(t)
@@ -251,7 +251,7 @@ mod tests {
         let d = pairwise(Metric::Cosine, &toy());
         let dg = Dendrogram::build(&d, Linkage::Ward);
         let mut heights = dg.merge_heights();
-        heights.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        heights.sort_by(|a, b| a.total_cmp(b));
         for k in 1..=dg.n {
             let labels = dg.cut_k(k);
             let distinct = labels

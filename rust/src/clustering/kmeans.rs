@@ -16,7 +16,8 @@ pub struct KMeansResult {
     pub inertia: f64,
 }
 
-/// One Lloyd iteration — native mirror of `kernels/kmeans_step.py`.
+/// One Lloyd iteration — native mirror of
+/// `python/compile/kernels/kmeans_step.py`.
 /// Returns (assignments, new centroids).
 pub fn lloyd_step(points: &[Vec<f64>], centroids: &[Vec<f64>]) -> (Vec<usize>, Vec<Vec<f64>>) {
     let k = centroids.len();

@@ -4,7 +4,8 @@
 //! euclidean distances are biased toward vector magnitude, cosine toward
 //! direction; spike vectors are L1-normalized so direction is the
 //! signal.  The zero-vector convention (similarity 0 → distance 1)
-//! matches `kernels/pairwise_cosine.py` and its ref oracle.
+//! matches `python/compile/kernels/pairwise_cosine.py` and its ref
+//! oracle.
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Metric {

@@ -2032,7 +2032,7 @@ mod tests {
         assert!(m.peak_admitted_p90_w < min_pred * 2.0 - 1e-6);
         assert!(m.power_waits >= 1, "expected admission waits");
         // serialized in virtual time: no two runs overlap
-        outcomes.sort_by(|a, b| a.v_start_ms.partial_cmp(&b.v_start_ms).unwrap());
+        outcomes.sort_by(|a, b| a.v_start_ms.total_cmp(&b.v_start_ms));
         for w in outcomes.windows(2) {
             assert!(w[1].v_start_ms >= w[0].v_end_ms - 1e-9);
         }

@@ -59,7 +59,7 @@ fn holdout_with_distance<F: Fn(&[f64], &[f64]) -> f64 + Sync>(
             .power_entries(None)
             .into_iter()
             .filter_map(|e| e.vector_for(c).map(|ev| (e, dist(&tv.v, &ev.v))))
-            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())?;
+            .min_by(|a, b| a.1.total_cmp(&b.1))?;
         let sel = SelectOptimalFreq::new(&cut, &params);
         let (cap, _) = sel.cap_power_centric(nn);
         entry
@@ -68,7 +68,7 @@ fn holdout_with_distance<F: Fn(&[f64], &[f64]) -> f64 + Sync>(
             .map(|p| (p.p90_rel - bound).max(0.0) * 100.0)
     });
     let errs: Vec<f64> = per.into_iter().flatten().collect();
-    let hits = errs.iter().filter(|&&e| e == 0.0).count();
+    let hits = errs.iter().filter(|&&e| e <= 0.0).count();
     Ok((mean(&errs), hits))
 }
 
@@ -137,7 +137,7 @@ pub fn linkage(ctx: &mut ExperimentContext) -> anyhow::Result<String> {
             .map(|(s, n)| if *n > 0 { s / *n as f64 } else { 0.0 })
             .collect();
         let mut order: Vec<usize> = (0..k).collect();
-        order.sort_by(|&a, &b| means[a].partial_cmp(&means[b]).unwrap());
+        order.sort_by(|&a, &b| means[a].total_cmp(&means[b]));
         let mut mapping = vec![crate::workloads::PwrClass::Mixed; k];
         mapping[order[0]] = crate::workloads::PwrClass::LowSpike;
         mapping[order[k - 1]] = crate::workloads::PwrClass::HighSpike;
@@ -253,6 +253,7 @@ pub fn oversub(ctx: &mut ExperimentContext) -> anyhow::Result<String> {
         };
         cfg.node.power_budget_w = cfg.node.gpu.tdp_w * budget_x;
         let sched = PowerAwareScheduler::new(cfg, refset.clone());
+        // minos-lint: allow(wallclock-decision) -- measures real wall-clock of the scheduler soak for the report's "wall" column; it is never a decision input
         let t0 = std::time::Instant::now();
         for (i, wl) in queue.iter().enumerate() {
             sched.submit(Job {

@@ -66,7 +66,7 @@ pub fn power_clustering(
         .map(|(s, n)| if *n > 0 { s / *n as f64 } else { 0.0 })
         .collect();
     let mut order: Vec<usize> = (0..k).collect();
-    order.sort_by(|&a, &b| means[a].partial_cmp(&means[b]).unwrap());
+    order.sort_by(|&a, &b| means[a].total_cmp(&means[b]));
     let mut mapping = vec![PwrClass::Mixed; k];
     if k >= 1 {
         mapping[order[0]] = PwrClass::LowSpike;

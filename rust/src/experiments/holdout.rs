@@ -185,7 +185,7 @@ pub fn fig9(ctx: &mut ExperimentContext) -> anyhow::Result<String> {
         out.push_str(&format!("{:>14}", short[i]));
         let nn = (0..names.len())
             .filter(|&j| j != i)
-            .min_by(|&a, &b| d[i][a].partial_cmp(&d[i][b]).unwrap())
+            .min_by(|&a, &b| d[i][a].total_cmp(&d[i][b]))
             .unwrap();
         for j in 0..names.len() {
             let mark = if j == nn { "*" } else { " " };
@@ -288,7 +288,7 @@ pub fn fig11(ctx: &mut ExperimentContext) -> anyhow::Result<String> {
             .collect();
         let nn = (0..names.len())
             .filter(|&j| j != i)
-            .min_by(|&a, &b| dists[a].partial_cmp(&dists[b]).unwrap())
+            .min_by(|&a, &b| dists[a].total_cmp(&dists[b]))
             .unwrap();
         for (j, dv) in dists.iter().enumerate() {
             let mark = if j == nn { "*" } else { " " };
@@ -318,7 +318,7 @@ pub fn fig11(ctx: &mut ExperimentContext) -> anyhow::Result<String> {
         &rows,
     ));
     let errs: Vec<f64> = results.iter().map(|r| r.bound_err_pp).collect();
-    let zero = results.iter().filter(|r| r.bound_err_pp == 0.0).count();
+    let zero = results.iter().filter(|r| r.bound_err_pp <= 0.0).count();
     out.push_str(&format!(
         "mean bound error {:.1}%; perfect predictions {}/{}   (paper: 3%, 8/11)\n",
         mean(&errs),

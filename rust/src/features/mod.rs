@@ -7,7 +7,8 @@
 
 use crate::trace::PowerTrace;
 
-/// Fixed feature width shared with the AOT artifacts (shapes.py NBINS).
+/// Fixed feature width shared with the AOT artifacts
+/// (python/compile/shapes.py NBINS).
 pub const NBINS: usize = 64;
 /// Spike-detection threshold in units of TDP (§4.1.1 step 1).
 pub const SPIKE_LO: f64 = 0.5;
@@ -73,7 +74,8 @@ impl SpikeVector {
 
 /// Extract the spike vector from an EMA-filtered trace (§4.1.1 steps 1–4).
 ///
-/// Identical arithmetic to `kernels/ref.py::spike_features_ref` modulo
+/// Identical arithmetic to
+/// `python/compile/kernels/ref.py::spike_features_ref` modulo
 /// the EMA (already applied by `PowerTrace::from_raw`): detect samples
 /// with r ≥ 0.5, bin index `floor((r−0.5)/c)` clipped to [0, 63],
 /// normalize by the spike count.

@@ -68,6 +68,7 @@ pub mod exec;
 pub mod experiments;
 pub mod features;
 pub mod fleet;
+pub mod lint;
 pub mod minos;
 pub mod registry;
 pub mod report;

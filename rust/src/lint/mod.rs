@@ -1,0 +1,525 @@
+//! `minos-lint`: the self-hosted determinism & abort-safety pass.
+//!
+//! The repo's central claim — decisions are bit-identical across
+//! reruns, shard counts, and stream interleavings — is enforced by
+//! digest tests, but the hazard classes that *break* it (NaN-aborting
+//! comparators, unordered hash iteration feeding printed tables,
+//! wall-clock reads in decision paths) are invisible to `clippy`.
+//! This module walks `rust/` and `benches/`, tokenizes every file
+//! (comment/string/raw-string-aware, see `tokenizer.rs`), and runs the
+//! deny rules in `rules.rs`.
+//!
+//! Suppression is explicit and reasoned:
+//!
+//! ```text
+//! // minos-lint: allow(<rule-id>) -- <reason>
+//! ```
+//!
+//! as a *plain* `//` comment on the offending line or the line above
+//! (a `#`-comment form works in Cargo.toml); doc comments are prose
+//! and never carry allows, which lets documentation quote the marker.
+//! The reason is mandatory; a marker that fails to parse is itself a
+//! finding (`malformed-allow`) so a typo can never silently disable
+//! the gate.  `minos-lint --list-allows` prints the suppression
+//! inventory.  Rule catalog: README.md §Static analysis.
+
+pub mod rules;
+pub mod tokenizer;
+
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+use tokenizer::{lex, Lexed, TokKind, Token};
+
+/// One rule violation, post-suppression.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    /// Root-relative path (always `/`-separated).
+    pub file: String,
+    /// 1-based line.
+    pub line: usize,
+    pub rule: &'static str,
+    pub message: String,
+    /// The offending source line, trimmed (empty for file-level findings).
+    pub snippet: String,
+}
+
+impl Finding {
+    pub fn render(&self) -> String {
+        if self.snippet.is_empty() {
+            format!("{}:{}: [{}] {}", self.file, self.line, self.rule, self.message)
+        } else {
+            format!(
+                "{}:{}: [{}] {}\n    {}",
+                self.file, self.line, self.rule, self.message, self.snippet
+            )
+        }
+    }
+}
+
+/// One parsed `minos-lint: allow(..)` annotation.
+#[derive(Debug, Clone)]
+pub struct Allow {
+    pub file: String,
+    pub line: usize,
+    pub rule: String,
+    pub reason: String,
+}
+
+/// Result of linting one root.
+pub struct LintReport {
+    /// Surviving findings, sorted by (file, line, rule).
+    pub findings: Vec<Finding>,
+    /// Every allow annotation in the tree, in scan order.
+    pub allows: Vec<Allow>,
+    /// Parallel to `allows`: whether the annotation suppressed a finding.
+    pub used: Vec<bool>,
+    pub files_scanned: usize,
+}
+
+impl LintReport {
+    pub fn is_clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+}
+
+/// Token-index span of one `fn` body (inclusive of `fn` and the
+/// closing brace) — the scope unit for the sink analysis in rule 2.
+pub struct FnSpan {
+    pub tok_start: usize,
+    pub tok_end: usize,
+}
+
+/// A tokenized source file plus the derived facts rules need:
+/// test/bench classification, `#[cfg(test)]` line regions, fn spans.
+pub struct SourceFile {
+    pub rel: String,
+    /// Under a `tests/` path component: rules 2–4 skip these files.
+    pub is_test: bool,
+    /// Under `benches/`, or the pacing harness `benchkit.rs`:
+    /// allowlisted for the wall-clock rule.
+    pub is_bench: bool,
+    pub lexed: Lexed,
+    lines: Vec<String>,
+    fn_spans: Vec<FnSpan>,
+    test_regions: Vec<(usize, usize)>,
+}
+
+impl SourceFile {
+    pub fn parse(rel: &str, text: &str) -> SourceFile {
+        let lexed = lex(text);
+        let fn_spans = build_fn_spans(&lexed.tokens);
+        let test_regions = build_test_regions(&lexed.tokens);
+        let comps: Vec<&str> = rel.split('/').collect();
+        let is_test = comps.contains(&"tests") && !comps.contains(&"lint_fixtures");
+        let is_bench = comps.contains(&"benches") || comps.last() == Some(&"benchkit.rs");
+        SourceFile {
+            rel: rel.to_string(),
+            is_test,
+            is_bench,
+            lexed,
+            lines: text.lines().map(String::from).collect(),
+            fn_spans,
+            test_regions,
+        }
+    }
+
+    /// Whole-file test classification OR inside a `#[cfg(test)]` region.
+    pub fn in_test_code(&self, line: usize) -> bool {
+        self.is_test || self.test_regions.iter().any(|&(a, b)| line >= a && line <= b)
+    }
+
+    pub fn snippet(&self, line: usize) -> String {
+        self.lines.get(line.wrapping_sub(1)).map(|s| s.trim().to_string()).unwrap_or_default()
+    }
+
+    /// Innermost fn body containing token index `tok`, if any.
+    pub fn innermost_fn(&self, tok: usize) -> Option<&FnSpan> {
+        self.fn_spans
+            .iter()
+            .filter(|s| s.tok_start <= tok && tok <= s.tok_end)
+            .max_by_key(|s| s.tok_start)
+    }
+}
+
+fn is_kw(t: &[Token], i: usize, kw: &str) -> bool {
+    t.get(i).is_some_and(|x| x.kind == TokKind::Ident && x.text == kw)
+}
+
+fn is_p(t: &[Token], i: usize, p: &str) -> bool {
+    t.get(i).is_some_and(|x| x.text == p)
+}
+
+/// Index of the token closing the delimiter opened at `open`.
+fn match_delim(t: &[Token], open: usize, o: &str, c: &str) -> Option<usize> {
+    let mut depth = 0usize;
+    for (j, tok) in t.iter().enumerate().skip(open) {
+        if tok.text == o {
+            depth += 1;
+        } else if tok.text == c {
+            depth -= 1;
+            if depth == 0 {
+                return Some(j);
+            }
+        }
+    }
+    None
+}
+
+/// From `start`, find the body `{` at signature depth 0 (skipping
+/// parens/brackets, stopping at a bare `;`), then return the span of
+/// the matched braces.  Shared by fn-span and cfg(test)-region builders.
+fn find_body(t: &[Token], start: usize) -> Option<(usize, usize)> {
+    let mut paren = 0i32;
+    let mut brack = 0i32;
+    let mut j = start;
+    let mut steps = 0usize;
+    let open = loop {
+        if j >= t.len() || steps > 400 {
+            return None;
+        }
+        match t[j].text.as_str() {
+            "(" => paren += 1,
+            ")" => paren -= 1,
+            "[" => brack += 1,
+            "]" => brack -= 1,
+            ";" if paren == 0 && brack == 0 => return None,
+            "{" if paren == 0 && brack == 0 => break j,
+            _ => {}
+        }
+        j += 1;
+        steps += 1;
+    };
+    let close = match_delim(t, open, "{", "}")?;
+    Some((open, close))
+}
+
+fn build_fn_spans(t: &[Token]) -> Vec<FnSpan> {
+    let mut spans = Vec::new();
+    for k in 0..t.len() {
+        if t[k].kind != TokKind::Ident || t[k].text != "fn" {
+            continue;
+        }
+        if let Some((_, close)) = find_body(t, k + 1) {
+            spans.push(FnSpan { tok_start: k, tok_end: close });
+        }
+    }
+    spans
+}
+
+/// Line ranges of `#[cfg(test)] mod .. { .. }` (and `#[cfg(test)] fn`)
+/// bodies.  `cfg(not(test))` and friends are deliberately NOT regions.
+fn build_test_regions(t: &[Token]) -> Vec<(usize, usize)> {
+    let mut out = Vec::new();
+    let mut k = 0usize;
+    while k < t.len() {
+        if !(is_p(t, k, "#") && is_p(t, k + 1, "[")) {
+            k += 1;
+            continue;
+        }
+        let Some(rb) = match_delim(t, k + 1, "[", "]") else {
+            k += 1;
+            continue;
+        };
+        let mentions_test = is_kw(t, k + 2, "cfg")
+            && is_p(t, k + 3, "(")
+            && (k + 4..rb).any(|j| is_kw(t, j, "test"))
+            && !(k + 4..rb).any(|j| is_kw(t, j, "not"));
+        if !mentions_test {
+            k = rb + 1;
+            continue;
+        }
+        // Skip trailing attributes and visibility before the item.
+        let mut j = rb + 1;
+        while is_p(t, j, "#") && is_p(t, j + 1, "[") {
+            match match_delim(t, j + 1, "[", "]") {
+                Some(e) => j = e + 1,
+                None => break,
+            }
+        }
+        if is_kw(t, j, "pub") {
+            j += 1;
+            if is_p(t, j, "(") {
+                if let Some(e) = match_delim(t, j, "(", ")") {
+                    j = e + 1;
+                }
+            }
+        }
+        if is_kw(t, j, "mod") || is_kw(t, j, "fn") {
+            if let Some((_, close)) = find_body(t, j + 1) {
+                out.push((t[k].line, t[close].line));
+                k = j + 1;
+                continue;
+            }
+        }
+        k = rb + 1;
+    }
+    out
+}
+
+// ------------------------------------------------------------- allows
+
+enum AllowParse {
+    Absent,
+    Parsed { rule: String, reason: String },
+    Malformed(String),
+}
+
+/// Parse `minos-lint: allow(<rule>) -- <reason>` out of a comment.
+/// Anything that *starts* the marker but fails the grammar is an
+/// error, not a silent no-op.
+fn parse_allow_marker(text: &str) -> AllowParse {
+    const MARKER: &str = "minos-lint:";
+    let Some(pos) = text.find(MARKER) else {
+        return AllowParse::Absent;
+    };
+    let rest = text[pos + MARKER.len()..].trim_start();
+    let Some(inner) = rest.strip_prefix("allow(") else {
+        return AllowParse::Malformed(
+            "expected `allow(<rule>) -- <reason>` after `minos-lint:`".to_string(),
+        );
+    };
+    let Some(close) = inner.find(')') else {
+        return AllowParse::Malformed("unclosed `allow(`".to_string());
+    };
+    let rule = inner[..close].trim();
+    if !rules::RULE_IDS.contains(&rule) {
+        return AllowParse::Malformed(format!(
+            "unknown rule `{rule}` in allow(..); known rules: {}",
+            rules::RULE_IDS.join(", ")
+        ));
+    }
+    let after = inner[close + 1..].trim_start();
+    let Some(reason) = after.strip_prefix("--") else {
+        return AllowParse::Malformed(
+            "allow(..) requires a reason: `allow(<rule>) -- <reason>`".to_string(),
+        );
+    };
+    let reason = reason.trim();
+    if reason.is_empty() {
+        return AllowParse::Malformed("allow(..) reason must be non-empty".to_string());
+    }
+    AllowParse::Parsed { rule: rule.to_string(), reason: reason.to_string() }
+}
+
+fn harvest_allows<'a>(
+    file: &str,
+    items: impl Iterator<Item = (usize, &'a str)>,
+    allows: &mut Vec<Allow>,
+    findings: &mut Vec<Finding>,
+) {
+    for (line, text) in items {
+        match parse_allow_marker(text) {
+            AllowParse::Absent => {}
+            AllowParse::Parsed { rule, reason } => {
+                allows.push(Allow { file: file.to_string(), line, rule, reason });
+            }
+            AllowParse::Malformed(message) => findings.push(Finding {
+                file: file.to_string(),
+                line,
+                rule: rules::MALFORMED_ALLOW,
+                message,
+                snippet: text.trim().to_string(),
+            }),
+        }
+    }
+}
+
+// -------------------------------------------------------------- engine
+
+/// Recursively collect `*.rs` under `dir`, skipping the lint fixture
+/// corpus (linted explicitly by its own roots), build output, and
+/// dotdirs.  Missing dirs are fine (fixture roots may lack `benches/`).
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    let Ok(rd) = fs::read_dir(dir) else {
+        return Ok(());
+    };
+    for e in rd {
+        let e = e?;
+        let p = e.path();
+        let name = e.file_name().to_string_lossy().into_owned();
+        if p.is_dir() {
+            if name == "lint_fixtures" || name == "target" || name.starts_with('.') {
+                continue;
+            }
+            collect_rs(&p, out)?;
+        } else if name.ends_with(".rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// Lint one root: walk `<root>/rust` + `<root>/benches`, cross-check
+/// `<root>/Cargo.toml` targets, apply allow annotations, and return
+/// the report.  The real repo and each fixture corpus are both just
+/// roots to this function — that is what makes the fixtures honest.
+pub fn lint_root(root: &Path) -> io::Result<LintReport> {
+    let mut files: Vec<PathBuf> = Vec::new();
+    collect_rs(&root.join("rust"), &mut files)?;
+    collect_rs(&root.join("benches"), &mut files)?;
+    files.sort();
+
+    let mut findings: Vec<Finding> = Vec::new();
+    let mut allows: Vec<Allow> = Vec::new();
+    let mut files_scanned = 0usize;
+
+    for path in &files {
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let text = fs::read_to_string(path)?;
+        let sf = SourceFile::parse(&rel, &text);
+        files_scanned += 1;
+        rules::nan_cmp_unwrap(&sf, &mut findings);
+        rules::unordered_iter(&sf, &mut findings);
+        rules::wallclock_decision(&sf, &mut findings);
+        rules::float_exact_eq(&sf, &mut findings);
+        rules::stale_doc_ref(&sf, root, &mut findings);
+        harvest_allows(
+            &rel,
+            // Doc comments are prose (and fair game for the lint's own
+            // documentation to quote the marker); only plain comments
+            // can carry a live allow annotation.
+            sf.lexed
+                .comments
+                .iter()
+                .filter(|c| !c.doc)
+                .map(|c| (c.line, c.text.as_str())),
+            &mut allows,
+            &mut findings,
+        );
+    }
+
+    if let Ok(manifest) = fs::read_to_string(root.join("Cargo.toml")) {
+        rules::unregistered_target(root, &manifest, &mut findings);
+        harvest_allows(
+            "Cargo.toml",
+            manifest
+                .lines()
+                .enumerate()
+                .filter(|(_, l)| l.contains('#'))
+                .map(|(i, l)| (i + 1, l)),
+            &mut allows,
+            &mut findings,
+        );
+    }
+
+    // Apply suppression: an allow covers its own line and the next
+    // (annotation above the offending line).  `malformed-allow` is
+    // never suppressible.
+    let mut used = vec![false; allows.len()];
+    findings.retain(|fd| {
+        if fd.rule == rules::MALFORMED_ALLOW {
+            return true;
+        }
+        match allows
+            .iter()
+            .position(|a| a.rule == fd.rule && a.file == fd.file && (a.line == fd.line || a.line + 1 == fd.line))
+        {
+            Some(ix) => {
+                used[ix] = true;
+                false
+            }
+            None => true,
+        }
+    });
+    findings.sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
+
+    Ok(LintReport { findings, allows, used, files_scanned })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allow_marker_grammar() {
+        match parse_allow_marker("// minos-lint: allow(wallclock-decision) -- pacing only") {
+            AllowParse::Parsed { rule, reason } => {
+                assert_eq!(rule, "wallclock-decision");
+                assert_eq!(reason, "pacing only");
+            }
+            _ => panic!("expected parse"),
+        }
+        assert!(matches!(parse_allow_marker("// nothing here"), AllowParse::Absent));
+        assert!(matches!(
+            parse_allow_marker("// minos-lint: allow(wallclock-decision)"),
+            AllowParse::Malformed(_)
+        ));
+        assert!(matches!(
+            parse_allow_marker("// minos-lint: allow(no-such-rule) -- x"),
+            AllowParse::Malformed(_)
+        ));
+        assert!(matches!(
+            parse_allow_marker("// minos-lint: allow(float-exact-eq) -- "),
+            AllowParse::Malformed(_)
+        ));
+        assert!(matches!(
+            parse_allow_marker("// minos-lint: deny(float-exact-eq)"),
+            AllowParse::Malformed(_)
+        ));
+    }
+
+    #[test]
+    fn cfg_test_regions_and_fn_spans() {
+        let src = "\
+fn live() { body(); }
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn check() { other(); }
+}
+";
+        let sf = SourceFile::parse("rust/src/x.rs", src);
+        assert!(!sf.in_test_code(1));
+        assert!(sf.in_test_code(4));
+        assert!(sf.in_test_code(6));
+        assert!(!sf.is_test);
+        // live() + check() both get fn spans.
+        assert_eq!(sf.fn_spans.len(), 2);
+    }
+
+    #[test]
+    fn cfg_not_test_is_not_a_test_region() {
+        let src = "#[cfg(not(test))]\nmod live { fn f() { x(); } }\n";
+        let sf = SourceFile::parse("rust/src/x.rs", src);
+        assert!(!sf.in_test_code(2));
+    }
+
+    #[test]
+    fn classification_from_path() {
+        assert!(SourceFile::parse("rust/tests/t.rs", "").is_test);
+        assert!(SourceFile::parse("benches/b.rs", "").is_bench);
+        assert!(SourceFile::parse("rust/src/benchkit.rs", "").is_bench);
+        let plain = SourceFile::parse("rust/src/minos/algorithm.rs", "");
+        assert!(!plain.is_test && !plain.is_bench);
+    }
+
+    #[test]
+    fn innermost_fn_picks_the_nested_body() {
+        let src = "fn outer() { fn inner() { probe(); } }";
+        let sf = SourceFile::parse("rust/src/x.rs", src);
+        let probe = sf
+            .lexed
+            .tokens
+            .iter()
+            .position(|t| t.text == "probe")
+            .unwrap();
+        let span = sf.innermost_fn(probe).unwrap();
+        // The innermost span starts at the second `fn`.
+        let fns: Vec<usize> = sf
+            .lexed
+            .tokens
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| t.text == "fn")
+            .map(|(i, _)| i)
+            .collect();
+        assert_eq!(span.tok_start, fns[1]);
+    }
+}

@@ -1,0 +1,508 @@
+//! The six `minos-lint` deny rules.
+//!
+//! Each rule is a pure function over a parsed [`SourceFile`] (or, for
+//! the repo-level `unregistered-target` rule, over the manifest text)
+//! that appends [`Finding`]s.  Rules match token streams, never raw
+//! text, so comments and string literals can never trip them.
+//!
+//! Rule ids are the stable public contract: they appear in findings,
+//! in `allow(..)` annotations, and in the README catalog.  Adding a
+//! rule means adding an id here, a detector function, a dispatch call
+//! in `mod.rs`, and fixtures under `rust/tests/lint_fixtures/`.
+
+use std::collections::BTreeSet;
+use std::path::Path;
+
+use super::tokenizer::{TokKind, Token};
+use super::{Finding, SourceFile};
+
+/// `partial_cmp(..).unwrap()` or a sort/min/max comparator built on
+/// `partial_cmp`: aborts (or silently misorders) on NaN telemetry.
+pub const NAN_CMP: &str = "nan-cmp-unwrap";
+/// Iterating a `HashMap`/`HashSet` inside a function that reaches
+/// printed output or a digest: iteration order is nondeterministic.
+pub const UNORDERED_ITER: &str = "unordered-iter";
+/// `Instant::now` / `SystemTime::now` outside pacing/bench modules:
+/// wall-clock reads make decisions irreproducible.
+pub const WALLCLOCK: &str = "wallclock-decision";
+/// Exact float `==` / `!=` outside `#[cfg(test)]`.
+pub const FLOAT_EQ: &str = "float-exact-eq";
+/// Cargo.toml `[[test]]`/`[[bench]]`/`[[bin]]` entries vs files on
+/// disk, checked in both directions.
+pub const UNREGISTERED: &str = "unregistered-target";
+/// Doc comment referencing a file that no longer exists.
+pub const STALE_DOC: &str = "stale-doc-ref";
+/// Internal: a `minos-lint:` marker that fails to parse (wrong shape,
+/// unknown rule id, or missing reason).  Not suppressible.
+pub const MALFORMED_ALLOW: &str = "malformed-allow";
+
+/// Every suppressible rule, in catalog order.
+pub const RULE_IDS: &[&str] = &[
+    NAN_CMP,
+    UNORDERED_ITER,
+    WALLCLOCK,
+    FLOAT_EQ,
+    UNREGISTERED,
+    STALE_DOC,
+];
+
+fn ident_at(t: &[Token], i: usize) -> Option<&str> {
+    t.get(i)
+        .filter(|x| x.kind == TokKind::Ident)
+        .map(|x| x.text.as_str())
+}
+
+fn text_at(t: &[Token], i: usize, s: &str) -> bool {
+    t.get(i).is_some_and(|x| x.text == s)
+}
+
+/// Index of the token matching the opener at `open` (one of
+/// `(`/`[`/`{`), or `None` if unbalanced.
+fn matching_close(t: &[Token], open: usize) -> Option<usize> {
+    let (o, c) = match t.get(open).map(|x| x.text.as_str()) {
+        Some("(") => ("(", ")"),
+        Some("[") => ("[", "]"),
+        Some("{") => ("{", "}"),
+        _ => return None,
+    };
+    let mut depth = 0usize;
+    for (j, tok) in t.iter().enumerate().skip(open) {
+        if tok.text == o {
+            depth += 1;
+        } else if tok.text == c {
+            depth -= 1;
+            if depth == 0 {
+                return Some(j);
+            }
+        }
+    }
+    None
+}
+
+fn push(out: &mut Vec<Finding>, f: &SourceFile, line: usize, rule: &'static str, msg: String) {
+    out.push(Finding {
+        file: f.rel.clone(),
+        line,
+        rule,
+        message: msg,
+        snippet: f.snippet(line),
+    });
+}
+
+// ---------------------------------------------------------------- rule 1
+
+/// Comparator adapters whose closure argument must be NaN-total.
+const CMP_ADAPTERS: &[&str] = &[
+    "sort_by",
+    "sort_unstable_by",
+    "min_by",
+    "max_by",
+    "binary_search_by",
+    "select_nth_unstable_by",
+];
+
+/// Applies everywhere, including test code: a NaN abort in a test
+/// harness hides the production hazard it was meant to catch.
+pub fn nan_cmp_unwrap(f: &SourceFile, out: &mut Vec<Finding>) {
+    let t = &f.lexed.tokens;
+    let mut flagged: BTreeSet<usize> = BTreeSet::new();
+    for i in 0..t.len() {
+        if ident_at(t, i) != Some("partial_cmp") || !text_at(t, i + 1, "(") {
+            continue;
+        }
+        if let Some(close) = matching_close(t, i + 1) {
+            if text_at(t, close + 1, ".") && ident_at(t, close + 2) == Some("unwrap") {
+                push(
+                    out,
+                    f,
+                    t[i].line,
+                    NAN_CMP,
+                    "abort-on-NaN comparison (a partial comparison unwrapped); use `total_cmp`"
+                        .to_string(),
+                );
+                flagged.insert(t[i].line);
+            }
+        }
+    }
+    for i in 0..t.len() {
+        let Some(name) = ident_at(t, i) else { continue };
+        if !CMP_ADAPTERS.contains(&name) || !text_at(t, i + 1, "(") {
+            continue;
+        }
+        let Some(close) = matching_close(t, i + 1) else { continue };
+        for j in i + 2..close {
+            if ident_at(t, j) == Some("partial_cmp") && !flagged.contains(&t[j].line) {
+                push(
+                    out,
+                    f,
+                    t[i].line,
+                    NAN_CMP,
+                    format!("`{name}` comparator built on a partial comparison can abort or misorder on NaN; use `total_cmp`"),
+                );
+                flagged.insert(t[i].line);
+                break;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------- rule 2
+
+const ITER_METHODS: &[&str] = &[
+    "iter",
+    "iter_mut",
+    "keys",
+    "values",
+    "values_mut",
+    "drain",
+    "into_iter",
+    "into_keys",
+    "into_values",
+];
+
+/// Macro / method / function names whose presence in a function marks
+/// it as output-visible: printed tables, formatted rows, digests.
+const SINK_MACROS: &[&str] = &[
+    "println",
+    "print",
+    "eprintln",
+    "eprint",
+    "write",
+    "writeln",
+    "format",
+    "format_args",
+];
+const SINK_CALLS: &[&str] = &["push_str", "outcome_table", "fnv1a"];
+
+/// Identifiers whose declared type (or initializer) names a hash
+/// collection: `x: HashMap<..>`, `x: &HashSet<..>`, `let x = HashMap::new()`.
+fn hash_idents(t: &[Token]) -> BTreeSet<String> {
+    let mut named = BTreeSet::new();
+    for i in 0..t.len() {
+        let Some(name) = ident_at(t, i) else { continue };
+        if text_at(t, i + 1, ":") {
+            // Scan the type expression until a same-depth delimiter.
+            let mut depth: i32 = 0;
+            let mut j = i + 2;
+            let mut steps = 0usize;
+            while j < t.len() && steps < 64 {
+                let s = t[j].text.as_str();
+                if s == "<" || s == "(" || s == "[" {
+                    depth += 1;
+                } else if s == ">" {
+                    depth -= 1;
+                } else if s == ">>" {
+                    depth -= 2;
+                } else if s == ")" || s == "]" {
+                    if depth == 0 {
+                        break;
+                    }
+                    depth -= 1;
+                } else if depth <= 0 && (s == "," || s == ";" || s == "=" || s == "{" || s == "|") {
+                    break;
+                } else if s == "HashMap" || s == "HashSet" {
+                    named.insert(name.to_string());
+                }
+                j += 1;
+                steps += 1;
+            }
+        } else if text_at(t, i + 1, "=") {
+            // `let x = HashMap::new()` / `x = HashSet::from(..)`.
+            let mut j = i + 2;
+            while j < t.len() && j < i + 8 {
+                let s = t[j].text.as_str();
+                if s == ";" {
+                    break;
+                }
+                if s == "HashMap" || s == "HashSet" {
+                    named.insert(name.to_string());
+                    break;
+                }
+                j += 1;
+            }
+        }
+    }
+    named
+}
+
+fn span_has_sink(t: &[Token], start: usize, end: usize) -> bool {
+    for j in start..=end.min(t.len().saturating_sub(1)) {
+        let Some(name) = ident_at(t, j) else { continue };
+        if SINK_MACROS.contains(&name) && text_at(t, j + 1, "!") {
+            return true;
+        }
+        if SINK_CALLS.contains(&name) || name.contains("digest") {
+            return true;
+        }
+    }
+    false
+}
+
+pub fn unordered_iter(f: &SourceFile, out: &mut Vec<Finding>) {
+    if f.is_test {
+        return;
+    }
+    let t = &f.lexed.tokens;
+    let hashed = hash_idents(t);
+    if hashed.is_empty() {
+        return;
+    }
+    let mut flagged: BTreeSet<usize> = BTreeSet::new();
+    for i in 0..t.len() {
+        let mut hit: Option<(usize, &str)> = None; // (token idx, ident)
+        if let Some(name) = ident_at(t, i) {
+            // `map.keys()` / `map.iter()` / `map.drain()` …
+            if hashed.contains(name)
+                && text_at(t, i + 1, ".")
+                && ident_at(t, i + 2).is_some_and(|m| ITER_METHODS.contains(&m))
+                && text_at(t, i + 3, "(")
+            {
+                hit = Some((i, name));
+            }
+            // `for x in &map {` / `for x in map {` (IntoIterator sugar).
+            if name == "in" {
+                let mut j = i + 1;
+                if text_at(t, j, "&") {
+                    j += 1;
+                }
+                if ident_at(t, j) == Some("mut") {
+                    j += 1;
+                }
+                if ident_at(t, j) == Some("self") && text_at(t, j + 1, ".") {
+                    j += 2;
+                }
+                if let Some(name2) = ident_at(t, j) {
+                    if hashed.contains(name2) && text_at(t, j + 1, "{") {
+                        hit = Some((j, name2));
+                    }
+                }
+            }
+        }
+        let Some((idx, name)) = hit else { continue };
+        let line = t[idx].line;
+        if f.in_test_code(line) || flagged.contains(&line) {
+            continue;
+        }
+        if let Some(span) = f.innermost_fn(idx) {
+            if span_has_sink(t, span.tok_start, span.tok_end) {
+                push(
+                    out,
+                    f,
+                    line,
+                    UNORDERED_ITER,
+                    format!("iterating hash collection `{name}` in an output-visible function; iteration order is nondeterministic — sort keys or use BTreeMap/BTreeSet"),
+                );
+                flagged.insert(line);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------- rule 3
+
+pub fn wallclock_decision(f: &SourceFile, out: &mut Vec<Finding>) {
+    if f.is_test || f.is_bench {
+        return;
+    }
+    let t = &f.lexed.tokens;
+    for i in 0..t.len() {
+        let Some(name) = ident_at(t, i) else { continue };
+        if (name == "Instant" || name == "SystemTime")
+            && text_at(t, i + 1, "::")
+            && ident_at(t, i + 2) == Some("now")
+            && !f.in_test_code(t[i].line)
+        {
+            push(
+                out,
+                f,
+                t[i].line,
+                WALLCLOCK,
+                format!("`{name}::now()` outside pacing/bench modules; wall-clock reads make decisions irreproducible — thread virtual time instead"),
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------- rule 4
+
+pub fn float_exact_eq(f: &SourceFile, out: &mut Vec<Finding>) {
+    if f.is_test {
+        return;
+    }
+    let t = &f.lexed.tokens;
+    for i in 0..t.len() {
+        if t[i].kind != TokKind::Punct || (t[i].text != "==" && t[i].text != "!=") {
+            continue;
+        }
+        let float_side = (i > 0 && t[i - 1].kind == TokKind::Float)
+            || t.get(i + 1).is_some_and(|x| x.kind == TokKind::Float);
+        if float_side && !f.in_test_code(t[i].line) {
+            push(
+                out,
+                f,
+                t[i].line,
+                FLOAT_EQ,
+                "exact float comparison; compare with a tolerance or restructure the predicate"
+                    .to_string(),
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------- rule 5
+
+/// Directories whose direct `*.rs` children must all be registered,
+/// and the Cargo.toml section that must register them.
+const TARGET_DIRS: &[(&str, &str)] = &[
+    ("rust/tests", "test"),
+    ("rust/src/bin", "bin"),
+    ("benches", "bench"),
+];
+
+pub fn unregistered_target(root: &Path, manifest: &str, out: &mut Vec<Finding>) {
+    // Parse `[[test]]` / `[[bench]]` / `[[bin]]` path entries.
+    let mut section = String::new();
+    let mut entries: Vec<(String, String, usize)> = Vec::new(); // (section, path, line)
+    for (ix, raw) in manifest.lines().enumerate() {
+        let line = raw.trim();
+        if line.starts_with("[[") {
+            section = line.trim_matches(['[', ']']).trim().to_string();
+            continue;
+        }
+        if line.starts_with('[') {
+            section = String::new();
+            continue;
+        }
+        if !matches!(section.as_str(), "test" | "bench" | "bin") {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("path") {
+            let rest = rest.trim_start();
+            if let Some(rest) = rest.strip_prefix('=') {
+                let p: String = rest.trim().trim_matches('"').to_string();
+                entries.push((section.clone(), p, ix + 1));
+            }
+        }
+    }
+    // Forward: every registered path must exist on disk.
+    for (sec, p, line) in &entries {
+        if !root.join(p).is_file() {
+            out.push(Finding {
+                file: "Cargo.toml".to_string(),
+                line: *line,
+                rule: UNREGISTERED,
+                message: format!("[[{sec}]] path `{p}` does not exist on disk"),
+                snippet: manifest.lines().nth(*line - 1).unwrap_or("").trim().to_string(),
+            });
+        }
+    }
+    // Reverse: every target-shaped file on disk must be registered.
+    for (dir, sec) in TARGET_DIRS {
+        let Ok(rd) = std::fs::read_dir(root.join(dir)) else { continue };
+        let mut names: Vec<String> = rd
+            .filter_map(|e| e.ok())
+            .filter(|e| e.path().is_file())
+            .filter_map(|e| e.file_name().into_string().ok())
+            .filter(|n| n.ends_with(".rs"))
+            .collect();
+        names.sort();
+        for name in names {
+            let rel = format!("{dir}/{name}");
+            let registered = entries.iter().any(|(s, p, _)| s == sec && p == &rel);
+            if !registered {
+                out.push(Finding {
+                    file: rel.clone(),
+                    line: 1,
+                    rule: UNREGISTERED,
+                    message: format!(
+                        "`{rel}` is not registered as a [[{sec}]] target in Cargo.toml (autodiscovery is off; it will silently never build)"
+                    ),
+                    snippet: String::new(),
+                });
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------- rule 6
+
+// Deliberately excludes `.json`/`.jsonl`: JSON paths in this repo's docs
+// name runtime-generated artifacts (`artifacts/manifest.json`), not
+// checked-in files, and a "stale" check against the working tree would
+// only produce noise for them.
+const DOC_REF_EXTS: &[&str] = &[".rs", ".md", ".py", ".toml", ".yml"];
+
+/// Extract path-shaped candidates from doc-comment text: runs of
+/// `[A-Za-z0-9_./-]` ending in a known extension.  Absolute paths and
+/// URL remnants (anything starting with `/`) are skipped.
+fn path_candidates(text: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut run = String::new();
+    for ch in text.chars().chain(std::iter::once(' ')) {
+        if ch.is_ascii_alphanumeric() || ch == '_' || ch == '.' || ch == '/' || ch == '-' {
+            run.push(ch);
+            continue;
+        }
+        if !run.is_empty() {
+            let cand = run.trim_end_matches(['.', '-']).trim_start_matches("./");
+            if !cand.starts_with('/')
+                && !cand.starts_with('.')
+                && cand.contains('.')
+                && DOC_REF_EXTS.iter().any(|e| cand.len() > e.len() && cand.ends_with(e))
+            {
+                out.push(cand.to_string());
+            }
+            run.clear();
+        }
+    }
+    out
+}
+
+pub fn stale_doc_ref(f: &SourceFile, root: &Path, out: &mut Vec<Finding>) {
+    let dir = root.join(&f.rel);
+    let dir = dir.parent().unwrap_or(root);
+    for c in f.lexed.comments.iter().filter(|c| c.doc) {
+        for cand in path_candidates(&c.text) {
+            let resolved = [
+                root.join(&cand),
+                dir.join(&cand),
+                root.join("rust/src").join(&cand),
+                root.join("rust").join(&cand),
+            ];
+            if resolved.iter().any(|p| p.exists()) {
+                continue;
+            }
+            push(
+                out,
+                f,
+                c.line,
+                STALE_DOC,
+                format!("doc comment references `{cand}`, which does not exist in the repo"),
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn path_candidates_extracts_and_filters() {
+        let got = path_candidates(
+            "/// see python/compile/aot.py and README.md; skip /opt/ext/x.md and https://a.b/c.md, e.g. nothing.",
+        );
+        assert_eq!(got, vec!["python/compile/aot.py".to_string(), "README.md".to_string()]);
+    }
+
+    #[test]
+    fn hash_idents_sees_types_and_initializers() {
+        let lx = super::super::tokenizer::lex(
+            "fn f(m: &mut HashMap<String, u32>) { let s = HashSet::new(); let v: Vec<u8> = vec![]; }",
+        );
+        let h = hash_idents(&lx.tokens);
+        assert!(h.contains("m"));
+        assert!(h.contains("s"));
+        assert!(!h.contains("v"));
+    }
+}

@@ -1,0 +1,474 @@
+//! Comment/string/raw-string-aware Rust tokenizer for `minos-lint`.
+//!
+//! Not a full Rust lexer — just enough fidelity that a rule pattern can
+//! never fire inside a comment, a string/char literal, or a raw string,
+//! and that float literals and multi-char operators arrive as single
+//! tokens.  Rules match on token text, so formatting (spaces, line
+//! breaks, nesting) cannot hide or fake a pattern the way it can with
+//! grep.  Comments are not discarded: they carry the
+//! `minos-lint: allow(..)` annotations and the doc text scanned by the
+//! `stale-doc-ref` rule, so they come back as a separate stream.
+
+/// Token class.  `Int` vs `Float` matters to the `float-exact-eq` rule;
+/// `Str`/`CharLit` exist so their *content* is inert; `Lifetime` exists
+/// so `'a` is never half a char literal.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    Ident,
+    Punct,
+    Int,
+    Float,
+    Str,
+    CharLit,
+    Lifetime,
+}
+
+#[derive(Debug, Clone)]
+pub struct Token {
+    /// 1-based line of the token's first character.
+    pub line: usize,
+    pub kind: TokKind,
+    pub text: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct Comment {
+    /// 1-based line of the `//` / `/*`.
+    pub line: usize,
+    /// Doc comment (`///`, `//!`, `/**`, `/*!`) — scanned for file refs.
+    pub doc: bool,
+    pub text: String,
+}
+
+pub struct Lexed {
+    pub tokens: Vec<Token>,
+    pub comments: Vec<Comment>,
+}
+
+/// Multi-char operators, longest-match-first.  `==`/`!=` must be single
+/// tokens (so `<=` can never look like an exact comparison) and `::`
+/// keeps path patterns one token wide.
+const PUNCTS: &[&str] = &[
+    "<<=", ">>=", "..=", "...", "::", "->", "=>", "==", "!=", "<=", ">=", "&&", "||", "+=", "-=",
+    "*=", "/=", "%=", "^=", "&=", "|=", "<<", ">>", "..",
+];
+
+fn is_ident_start(c: char) -> bool {
+    c.is_alphabetic() || c == '_'
+}
+
+fn is_ident_char(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+pub fn lex(src: &str) -> Lexed {
+    let c: Vec<char> = src.chars().collect();
+    let mut i = 0usize;
+    let mut line = 1usize;
+    let mut tokens: Vec<Token> = Vec::new();
+    let mut comments: Vec<Comment> = Vec::new();
+
+    while i < c.len() {
+        let ch = c[i];
+        if ch == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if ch.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // Line comment (incl. doc comments).
+        if ch == '/' && i + 1 < c.len() && c[i + 1] == '/' {
+            let start = i;
+            while i < c.len() && c[i] != '\n' {
+                i += 1;
+            }
+            let text: String = c[start..i].iter().collect();
+            let doc = text.starts_with("///") || text.starts_with("//!");
+            comments.push(Comment { line, doc, text });
+            continue;
+        }
+        // Block comment, nested (incl. `/**`, `/*!` doc blocks).
+        if ch == '/' && i + 1 < c.len() && c[i + 1] == '*' {
+            let start = i;
+            let start_line = line;
+            let mut depth = 0usize;
+            while i < c.len() {
+                if c[i] == '/' && i + 1 < c.len() && c[i + 1] == '*' {
+                    depth += 1;
+                    i += 2;
+                } else if c[i] == '*' && i + 1 < c.len() && c[i + 1] == '/' {
+                    depth -= 1;
+                    i += 2;
+                    if depth == 0 {
+                        break;
+                    }
+                } else {
+                    if c[i] == '\n' {
+                        line += 1;
+                    }
+                    i += 1;
+                }
+            }
+            let text: String = c[start..i.min(c.len())].iter().collect();
+            let doc = text.starts_with("/**") || text.starts_with("/*!");
+            comments.push(Comment { line: start_line, doc, text });
+            continue;
+        }
+        // Raw strings / raw idents / byte strings share the r/b prefix.
+        if ch == 'r' || ch == 'b' {
+            let mut j = i + 1;
+            let mut raw = ch == 'r';
+            if ch == 'b' && j < c.len() && c[j] == 'r' {
+                raw = true;
+                j += 1;
+            }
+            if raw {
+                let mut hashes = 0usize;
+                while j < c.len() && c[j] == '#' {
+                    hashes += 1;
+                    j += 1;
+                }
+                if j < c.len() && c[j] == '"' {
+                    // Raw (byte) string: no escapes, ends at `"` + hashes.
+                    let start_line = line;
+                    j += 1;
+                    'scan: while j < c.len() {
+                        if c[j] == '\n' {
+                            line += 1;
+                            j += 1;
+                            continue;
+                        }
+                        if c[j] == '"' {
+                            let mut k = 0usize;
+                            while k < hashes && j + 1 + k < c.len() && c[j + 1 + k] == '#' {
+                                k += 1;
+                            }
+                            if k == hashes {
+                                j += 1 + hashes;
+                                break 'scan;
+                            }
+                        }
+                        j += 1;
+                    }
+                    tokens.push(Token {
+                        line: start_line,
+                        kind: TokKind::Str,
+                        text: c[i..j.min(c.len())].iter().collect(),
+                    });
+                    i = j;
+                    continue;
+                }
+                if ch == 'r' && hashes == 1 && j < c.len() && is_ident_start(c[j]) {
+                    // Raw identifier r#name — keep the prefix so `r#fn`
+                    // can never be mistaken for the `fn` keyword.
+                    let start = i;
+                    while j < c.len() && is_ident_char(c[j]) {
+                        j += 1;
+                    }
+                    tokens.push(Token {
+                        line,
+                        kind: TokKind::Ident,
+                        text: c[start..j].iter().collect(),
+                    });
+                    i = j;
+                    continue;
+                }
+                // fall through: plain ident starting with r/b (`ref`, `break`, …)
+            }
+            if ch == 'b' && i + 1 < c.len() && (c[i + 1] == '"' || c[i + 1] == '\'') {
+                // Byte string / byte char: escapes allowed — handled by
+                // the generic string/char scanners below, shifted by one.
+                let quote = c[i + 1];
+                let start = i;
+                let start_line = line;
+                let mut j = i + 2;
+                while j < c.len() {
+                    if c[j] == '\\' {
+                        j += 2;
+                        continue;
+                    }
+                    if c[j] == '\n' {
+                        line += 1;
+                    }
+                    if c[j] == quote {
+                        j += 1;
+                        break;
+                    }
+                    j += 1;
+                }
+                tokens.push(Token {
+                    line: start_line,
+                    kind: if quote == '"' { TokKind::Str } else { TokKind::CharLit },
+                    text: c[start..j.min(c.len())].iter().collect(),
+                });
+                i = j;
+                continue;
+            }
+        }
+        // Plain string literal with escapes.
+        if ch == '"' {
+            let start = i;
+            let start_line = line;
+            let mut j = i + 1;
+            while j < c.len() {
+                if c[j] == '\\' {
+                    j += 2;
+                    continue;
+                }
+                if c[j] == '\n' {
+                    line += 1;
+                }
+                if c[j] == '"' {
+                    j += 1;
+                    break;
+                }
+                j += 1;
+            }
+            tokens.push(Token {
+                line: start_line,
+                kind: TokKind::Str,
+                text: c[start..j.min(c.len())].iter().collect(),
+            });
+            i = j;
+            continue;
+        }
+        // Char literal vs lifetime.
+        if ch == '\'' {
+            let next = c.get(i + 1).copied();
+            let after = c.get(i + 2).copied();
+            let is_char = match next {
+                Some('\\') => true,
+                Some(_) => after == Some('\''),
+                None => false,
+            };
+            if is_char {
+                let start = i;
+                let mut j = i + 1;
+                if c.get(j) == Some(&'\\') {
+                    j += 2; // skip the escape head; scan to the quote
+                    while j < c.len() && c[j] != '\'' {
+                        j += 1;
+                    }
+                    j += 1;
+                } else {
+                    j = i + 3;
+                }
+                tokens.push(Token {
+                    line,
+                    kind: TokKind::CharLit,
+                    text: c[start..j.min(c.len())].iter().collect(),
+                });
+                i = j;
+                continue;
+            }
+            // Lifetime: consume the quote + ident chars.
+            let start = i;
+            let mut j = i + 1;
+            while j < c.len() && is_ident_char(c[j]) {
+                j += 1;
+            }
+            tokens.push(Token {
+                line,
+                kind: TokKind::Lifetime,
+                text: c[start..j].iter().collect(),
+            });
+            i = j;
+            continue;
+        }
+        // Number literal.
+        if ch.is_ascii_digit() {
+            let start = i;
+            let mut j = i;
+            let mut float = false;
+            if ch == '0' && matches!(c.get(i + 1).copied(), Some('x' | 'X' | 'o' | 'b')) {
+                j += 2;
+                while j < c.len() && (c[j].is_ascii_alphanumeric() || c[j] == '_') {
+                    j += 1;
+                }
+            } else {
+                while j < c.len() && (c[j].is_ascii_digit() || c[j] == '_') {
+                    j += 1;
+                }
+                // Fractional part only when a digit follows the dot
+                // (`0..n` ranges and `x.0` tuple indexes stay integers).
+                if j + 1 < c.len() && c[j] == '.' && c[j + 1].is_ascii_digit() {
+                    float = true;
+                    j += 1;
+                    while j < c.len() && (c[j].is_ascii_digit() || c[j] == '_') {
+                        j += 1;
+                    }
+                }
+                // Exponent.
+                if j < c.len() && (c[j] == 'e' || c[j] == 'E') {
+                    let mut k = j + 1;
+                    if k < c.len() && (c[k] == '+' || c[k] == '-') {
+                        k += 1;
+                    }
+                    if k < c.len() && c[k].is_ascii_digit() {
+                        float = true;
+                        j = k;
+                        while j < c.len() && (c[j].is_ascii_digit() || c[j] == '_') {
+                            j += 1;
+                        }
+                    }
+                }
+                // Type suffix (`1.0f64`, `3usize`, …).
+                let suffix_start = j;
+                while j < c.len() && is_ident_char(c[j]) {
+                    j += 1;
+                }
+                let suffix: String = c[suffix_start..j].iter().collect();
+                if suffix == "f32" || suffix == "f64" {
+                    float = true;
+                }
+            }
+            tokens.push(Token {
+                line,
+                kind: if float { TokKind::Float } else { TokKind::Int },
+                text: c[start..j].iter().collect(),
+            });
+            i = j;
+            continue;
+        }
+        // Identifier / keyword.
+        if is_ident_start(ch) {
+            let start = i;
+            let mut j = i;
+            while j < c.len() && is_ident_char(c[j]) {
+                j += 1;
+            }
+            tokens.push(Token {
+                line,
+                kind: TokKind::Ident,
+                text: c[start..j].iter().collect(),
+            });
+            i = j;
+            continue;
+        }
+        // Punctuation: longest multi-char operator first.
+        let mut matched = 0usize;
+        for p in PUNCTS {
+            let pc: Vec<char> = p.chars().collect();
+            if i + pc.len() <= c.len() && c[i..i + pc.len()] == pc[..] {
+                matched = pc.len();
+                tokens.push(Token {
+                    line,
+                    kind: TokKind::Punct,
+                    text: (*p).to_string(),
+                });
+                break;
+            }
+        }
+        if matched > 0 {
+            i += matched;
+            continue;
+        }
+        tokens.push(Token {
+            line,
+            kind: TokKind::Punct,
+            text: ch.to_string(),
+        });
+        i += 1;
+    }
+
+    Lexed { tokens, comments }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn texts(src: &str) -> Vec<String> {
+        lex(src).tokens.into_iter().map(|t| t.text).collect()
+    }
+
+    #[test]
+    fn strings_and_comments_are_inert() {
+        let src = r##"
+            // partial_cmp in a comment
+            let s = "partial_cmp(x).unwrap()";
+            let r = r#"Instant::now"#;
+            /* == 0.0 */
+            call();
+        "##;
+        let ts = texts(src);
+        assert!(!ts.iter().any(|t| t == "partial_cmp"));
+        assert!(!ts.iter().any(|t| t == "Instant"));
+        assert!(ts.iter().any(|t| t == "call"));
+        let lx = lex(src);
+        assert_eq!(lx.comments.len(), 2);
+    }
+
+    #[test]
+    fn float_vs_int_vs_range_vs_tuple_index() {
+        let lx = lex("a == 0.0; b.0 == c; 0..10; 1e3; 2f64; 0x1f;");
+        let floats: Vec<&str> = lx
+            .tokens
+            .iter()
+            .filter(|t| t.kind == TokKind::Float)
+            .map(|t| t.text.as_str())
+            .collect();
+        assert_eq!(floats, vec!["0.0", "1e3", "2f64"]);
+        let ints: Vec<&str> = lx
+            .tokens
+            .iter()
+            .filter(|t| t.kind == TokKind::Int)
+            .map(|t| t.text.as_str())
+            .collect();
+        assert!(ints.contains(&"0x1f"));
+        assert!(ints.contains(&"10"));
+    }
+
+    #[test]
+    fn multichar_operators_are_single_tokens() {
+        let ts = texts("a <= b; a == b; a != b; x::y; m -> n; v >>= 1;");
+        assert!(ts.contains(&"<=".to_string()));
+        assert!(ts.contains(&"==".to_string()));
+        assert!(ts.contains(&"!=".to_string()));
+        assert!(ts.contains(&"::".to_string()));
+        assert!(ts.contains(&"->".to_string()));
+        assert!(ts.contains(&">>=".to_string()));
+    }
+
+    #[test]
+    fn lifetimes_do_not_eat_the_file() {
+        let lx = lex("fn f<'a>(x: &'a str) -> &'a str { 'l: loop { break 'l; } }");
+        assert!(lx.tokens.iter().any(|t| t.kind == TokKind::Lifetime && t.text == "'a"));
+        // The `{` after the lifetime must still be present — a lifetime
+        // lexed as an unterminated char literal would swallow it.
+        assert!(lx.tokens.iter().filter(|t| t.text == "{").count() >= 2);
+    }
+
+    #[test]
+    fn char_literals_with_escapes() {
+        let lx = lex(r"let a = '\n'; let b = 'x'; let c = '\u{41}';");
+        let chars = lx.tokens.iter().filter(|t| t.kind == TokKind::CharLit).count();
+        assert_eq!(chars, 3);
+    }
+
+    #[test]
+    fn raw_strings_with_hashes_and_quotes() {
+        let src = "let s = r#\"inner \" quote and Instant::now\"#; next_token();";
+        let ts = texts(src);
+        assert!(!ts.contains(&"Instant".to_string()));
+        assert!(ts.contains(&"next_token".to_string()));
+    }
+
+    #[test]
+    fn doc_comments_flagged() {
+        let lx = lex("/// see README.md\n//! inner\n// plain\nfn f() {}\n");
+        let docs: Vec<bool> = lx.comments.iter().map(|x| x.doc).collect();
+        assert_eq!(docs, vec![true, true, false]);
+    }
+
+    #[test]
+    fn line_numbers_track_newlines_everywhere() {
+        let src = "let a = \"multi\nline\";\nlet b = 1;\n";
+        let lx = lex(src);
+        let b = lx.tokens.iter().find(|t| t.text == "b").unwrap();
+        assert_eq!(b.line, 3);
+    }
+}

@@ -218,7 +218,7 @@ impl<'a> SelectOptimalFreq<'a> {
             .util_entries(Some(&target.app))
             .into_iter()
             .map(|e| (e, target.util.euclidean(&e.util)))
-            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .min_by(|a, b| a.1.total_cmp(&b.1))
     }
 
     /// ChooseBinSize: pick the candidate c minimizing the default-
@@ -402,7 +402,7 @@ impl<'a> SelectOptimalFreq<'a> {
 /// transferred class proxies are not reference entries.
 pub fn cap_power_centric_scaling(sd: &ScalingData, q: f64, bound_x: f64) -> (f64, f64) {
     let mut pts: Vec<_> = sd.points.iter().collect();
-    pts.sort_by(|a, b| b.f_mhz.partial_cmp(&a.f_mhz).unwrap());
+    pts.sort_by(|a, b| b.f_mhz.total_cmp(&a.f_mhz));
     for p in &pts {
         if p.quantile_rel(q) < bound_x {
             return (p.f_mhz, p.quantile_rel(q));
@@ -420,7 +420,7 @@ pub fn cap_power_centric_scaling(sd: &ScalingData, q: f64, bound_x: f64) -> (f64
 pub fn cap_perf_centric_scaling(sd: &ScalingData, bound_frac: f64, floor_mhz: f64) -> (f64, f64) {
     let base = sd.uncapped().iter_time_ms;
     let mut pts: Vec<_> = sd.points.iter().collect();
-    pts.sort_by(|a, b| a.f_mhz.partial_cmp(&b.f_mhz).unwrap());
+    pts.sort_by(|a, b| a.f_mhz.total_cmp(&b.f_mhz));
     for p in &pts {
         if p.f_mhz < floor_mhz - 0.5 {
             continue;

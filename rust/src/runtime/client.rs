@@ -3,8 +3,7 @@
 //!
 //! Interchange format is HLO **text**, not serialized HloModuleProto —
 //! jax ≥ 0.5 emits 64-bit instruction ids that xla_extension 0.5.1
-//! rejects; the text parser reassigns ids (see aot.py and
-//! /opt/xla-example/README.md).
+//! rejects; the text parser reassigns ids (see python/compile/aot.py).
 
 use std::collections::HashMap;
 use std::path::Path;
@@ -47,12 +46,16 @@ impl PjrtRuntime {
         self.executables.contains_key(name)
     }
 
+    /// Loaded artifact names, sorted so callers that print or digest
+    /// the list are independent of hash iteration order.
     pub fn names(&self) -> Vec<&str> {
-        self.executables.keys().map(|s| s.as_str()).collect()
+        let mut names: Vec<&str> = self.executables.keys().map(|s| s.as_str()).collect();
+        names.sort_unstable();
+        names
     }
 
     /// Execute `name` with the given literals; returns the elements of
-    /// the result tuple (aot.py lowers with return_tuple=True).
+    /// the result tuple (python/compile/aot.py lowers with return_tuple=True).
     pub fn execute(&self, name: &str, inputs: &[xla::Literal]) -> anyhow::Result<Vec<xla::Literal>> {
         let exe = self
             .executables

@@ -149,10 +149,10 @@ pub fn percentile(data: &[f64], q: f64) -> f64 {
     percentiles_of(data, &[q])[0]
 }
 
-/// Several percentiles from ONE sort — the §Perf optimization for the
+/// Several percentiles from ONE sort — the perf optimization for the
 /// scaling-data hot path (FreqPoint needs p50/p90/p95/p99 per profile;
 /// sorting once instead of four times cut the batch-percentile path ~4x,
-/// see EXPERIMENTS.md §Perf).
+/// measured by benches/classification.rs).
 ///
 /// NaN-safe: `total_cmp` orders NaN last instead of panicking, so one
 /// bad sample that slipped past the trace boundary cannot abort a serve

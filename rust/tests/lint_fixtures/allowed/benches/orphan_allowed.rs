@@ -1,0 +1,2 @@
+// minos-lint: allow(unregistered-target) -- fixture: deliberately unregistered to pin the reverse cross-check suppression
+fn main() {}

@@ -1,0 +1,30 @@
+// Fixture: one deliberate exception per rule, each suppressed by an
+// allow annotation with the mandatory reason.
+
+use std::collections::HashMap;
+
+pub fn direct(xs: &[f64]) -> std::cmp::Ordering {
+    // minos-lint: allow(nan-cmp-unwrap) -- fixture: inputs are compile-time constants, never NaN
+    xs[0].partial_cmp(&xs[1]).unwrap()
+}
+
+pub fn print_table(counts: &HashMap<String, u32>) {
+    // minos-lint: allow(unordered-iter) -- fixture: order-insensitive debug dump
+    for (k, v) in counts.iter() {
+        println!("{k} {v}");
+    }
+}
+
+pub fn paced() -> u128 {
+    let t0 = std::time::Instant::now(); // minos-lint: allow(wallclock-decision) -- fixture: pacing only, never a decision input
+    t0.elapsed().as_millis()
+}
+
+pub fn is_zero(x: f64) -> bool {
+    // minos-lint: allow(float-exact-eq) -- fixture: sentinel comparison, exact by construction
+    x == 0.0
+}
+
+// minos-lint: allow(stale-doc-ref) -- fixture: reference kept for the historical record
+/// See `docs/retired_design.md` for the original sketch.
+pub fn documented() {}

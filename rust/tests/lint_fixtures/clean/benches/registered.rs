@@ -1,0 +1,5 @@
+// Bench fixture: wall-clock reads are allowlisted under benches/.
+fn main() {
+    let t0 = std::time::Instant::now();
+    let _ = t0.elapsed();
+}

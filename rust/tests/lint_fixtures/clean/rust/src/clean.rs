@@ -1,0 +1,29 @@
+//! Clean fixture: the deterministic idioms every rule accepts —
+//! `total_cmp` comparators, ordered maps for printed tables, tolerance
+//! comparisons, and wall-clock confined to `#[cfg(test)]` (see also
+//! `benches/registered.rs` for the bench allowlist).
+
+use std::collections::BTreeMap;
+
+pub fn ordered(xs: &mut [f64]) {
+    xs.sort_by(|a, b| a.total_cmp(b));
+}
+
+pub fn print_table(counts: &BTreeMap<String, u32>) {
+    for (k, v) in counts {
+        println!("{k} {v}");
+    }
+}
+
+pub fn near_zero(x: f64) -> bool {
+    x.abs() < 1e-9
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn wallclock_and_exact_eq_are_fine_in_tests() {
+        let _t = std::time::Instant::now();
+        assert!(0.25_f64.min(0.5) == 0.25);
+    }
+}

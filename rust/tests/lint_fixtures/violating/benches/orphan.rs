@@ -1,0 +1,3 @@
+// Fixture: exists on disk but carries no [[bench]] entry in the
+// manifest — with autodiscovery off it would silently never build.
+fn main() {}

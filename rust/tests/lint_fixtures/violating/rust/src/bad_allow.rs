@@ -1,0 +1,4 @@
+// minos-lint: allow(nan-cmp-unwrap)
+pub fn reason_is_missing(a: f64, b: f64) -> std::cmp::Ordering {
+    a.partial_cmp(&b).unwrap()
+}

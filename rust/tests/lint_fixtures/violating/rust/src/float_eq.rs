@@ -1,0 +1,5 @@
+// Fixture: exact float comparison in non-test code.
+
+pub fn is_zero(x: f64) -> bool {
+    x == 0.0
+}

@@ -1,0 +1,11 @@
+// Fixture: both forms of the NaN-abort hazard must fire — the direct
+// unwrapped partial comparison, and a sort comparator built on one
+// (even when the unwrap is softened to unwrap_or).
+
+pub fn direct(xs: &[f64]) -> std::cmp::Ordering {
+    xs[0].partial_cmp(&xs[1]).unwrap()
+}
+
+pub fn comparator(xs: &mut [f64]) {
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+}

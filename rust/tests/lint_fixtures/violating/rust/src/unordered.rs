@@ -1,0 +1,10 @@
+// Fixture: hash-map iteration inside an output-visible function — the
+// printed rows come out in nondeterministic order.
+
+use std::collections::HashMap;
+
+pub fn print_table(counts: &HashMap<String, u32>) {
+    for (k, v) in counts.iter() {
+        println!("{k} {v}");
+    }
+}

@@ -1,0 +1,6 @@
+// Fixture: wall-clock read outside any pacing/bench allowlist.
+
+pub fn decide() -> u128 {
+    let t0 = std::time::Instant::now();
+    t0.elapsed().as_millis()
+}

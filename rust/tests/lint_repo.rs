@@ -1,0 +1,124 @@
+//! The lint gate, self-applied — tier-1 catches lint regressions
+//! before CI does.
+//!
+//! Four contracts: (1) the live tree under `rust/` + `benches/` is
+//! clean with all six rules enabled; (2) the violating fixture corpus
+//! trips every rule (the gate actually fires); (3) the clean corpus
+//! trips nothing (no false positives on the blessed idioms); (4) the
+//! allow-annotated corpus is clean, every annotation is used, carries
+//! a reason, and the inventory covers every rule.
+
+use std::path::{Path, PathBuf};
+
+use minos::lint::{lint_root, rules};
+
+fn repo() -> &'static Path {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+}
+
+fn fixture(name: &str) -> PathBuf {
+    repo().join("rust/tests/lint_fixtures").join(name)
+}
+
+#[test]
+fn repo_tree_is_lint_clean() {
+    let report = lint_root(repo()).expect("walk repo");
+    assert!(
+        report.files_scanned > 50,
+        "suspiciously small walk: {} files",
+        report.files_scanned
+    );
+    let rendered: Vec<String> = report.findings.iter().map(|f| f.render()).collect();
+    assert!(
+        report.is_clean(),
+        "minos-lint findings on the live tree:\n{}",
+        rendered.join("\n")
+    );
+    // Every live allow annotation must pull its weight and say why.
+    for (a, used) in report.allows.iter().zip(&report.used) {
+        assert!(!a.reason.is_empty(), "{}:{}: allow without reason", a.file, a.line);
+        assert!(*used, "{}:{}: unused allow({})", a.file, a.line, a.rule);
+    }
+}
+
+#[test]
+fn violating_fixtures_trip_every_rule() {
+    let report = lint_root(&fixture("violating")).expect("walk violating fixtures");
+    let got: Vec<(&str, &str, usize)> = report
+        .findings
+        .iter()
+        .map(|f| (f.rule, f.file.as_str(), f.line))
+        .collect();
+    for rule in rules::RULE_IDS {
+        assert!(
+            report.findings.iter().any(|f| f.rule == *rule),
+            "rule {rule} produced no finding; got: {got:?}"
+        );
+    }
+    // Both directions of the Cargo.toml cross-check fire.
+    assert!(report
+        .findings
+        .iter()
+        .any(|f| f.rule == rules::UNREGISTERED && f.file == "Cargo.toml"));
+    assert!(report
+        .findings
+        .iter()
+        .any(|f| f.rule == rules::UNREGISTERED && f.file == "benches/orphan.rs"));
+    // Both nan-cmp forms fire (direct unwrap + comparator adapter).
+    assert!(report.findings.iter().filter(|f| f.rule == rules::NAN_CMP).count() >= 3);
+    // The reason-less marker in bad_allow.rs is itself a finding, and
+    // it does NOT suppress the violation it sits on.
+    assert!(report.findings.iter().any(|f| f.rule == rules::MALFORMED_ALLOW));
+    assert!(report
+        .findings
+        .iter()
+        .any(|f| f.rule == rules::NAN_CMP && f.file.ends_with("bad_allow.rs")));
+    // Findings carry file:line + snippet for every in-file rule.
+    for f in &report.findings {
+        assert!(f.line >= 1);
+        if f.rule != rules::UNREGISTERED {
+            assert!(!f.snippet.is_empty(), "{}: empty snippet", f.render());
+        }
+    }
+}
+
+#[test]
+fn clean_fixtures_are_clean() {
+    let report = lint_root(&fixture("clean")).expect("walk clean fixtures");
+    let rendered: Vec<String> = report.findings.iter().map(|f| f.render()).collect();
+    assert!(
+        report.is_clean(),
+        "false positives on the clean corpus:\n{}",
+        rendered.join("\n")
+    );
+    assert!(report.allows.is_empty(), "clean corpus should need no allows");
+}
+
+#[test]
+fn allow_annotations_suppress_with_reasons() {
+    let report = lint_root(&fixture("allowed")).expect("walk allowed fixtures");
+    let rendered: Vec<String> = report.findings.iter().map(|f| f.render()).collect();
+    assert!(
+        report.is_clean(),
+        "allow-annotated corpus still tripped:\n{}",
+        rendered.join("\n")
+    );
+    assert!(
+        report.allows.len() >= 6,
+        "expected a full suppression inventory, got {}",
+        report.allows.len()
+    );
+    for (a, used) in report.allows.iter().zip(&report.used) {
+        assert!(!a.reason.is_empty(), "{}:{}: allow without reason", a.file, a.line);
+        assert!(*used, "{}:{}: unused allow({})", a.file, a.line, a.rule);
+    }
+    // Every rule id is represented in the inventory, including the
+    // TOML-comment form for the manifest cross-check.
+    for rule in rules::RULE_IDS {
+        assert!(
+            report.allows.iter().any(|a| a.rule == *rule),
+            "no allow for rule {rule} in the fixture inventory"
+        );
+    }
+    assert!(report.allows.iter().any(|a| a.file == "Cargo.toml"));
+}

@@ -1,0 +1,150 @@
+//! NaN-injection regression tests for the PR 8 `total_cmp`
+//! conversions (the `nan-cmp-unwrap` lint's dogfood).
+//!
+//! Two contracts, per the determinism story:
+//!
+//! 1. **No abort on poisoned telemetry** — a NaN that slips past the
+//!    trace boundary must degrade gracefully (NaN orders last under
+//!    `total_cmp`), never panic a dispatcher or an experiment driver.
+//! 2. **Bit-identical on clean data** — on NaN-free inputs the
+//!    `total_cmp` comparators select and order exactly as the old
+//!    `partial_cmp().unwrap()` comparators did, so every pinned digest
+//!    (outcome tables, registry, fleet) is unchanged by the swap.
+//!    The reference comparators below replay the pre-PR-8 ordering and
+//!    are allow-annotated — that is the deliberate exception the lint's
+//!    suppression syntax exists for.
+
+use minos::clustering::hierarchy::{Dendrogram, Linkage};
+use minos::clustering::metrics::{pairwise, Metric};
+use minos::minos::algorithm::{cap_perf_centric_scaling, cap_power_centric_scaling};
+use minos::minos::reference_set::{FreqPoint, ScalingData};
+
+fn rows() -> Vec<Vec<f64>> {
+    // two tight groups + one outlier (mirrors the hierarchy unit toy)
+    vec![
+        vec![1.0, 0.0, 0.0],
+        vec![0.98, 0.02, 0.0],
+        vec![0.0, 1.0, 0.0],
+        vec![0.0, 0.97, 0.03],
+        vec![0.3, 0.3, 0.4],
+    ]
+}
+
+/// Deterministic pseudo-random NaN-free samples (xorshift, fixed seed).
+fn clean_samples(n: usize) -> Vec<f64> {
+    let mut state = 0x9e3779b97f4a7c15u64;
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        state ^= state << 13;
+        state ^= state >> 7;
+        state ^= state << 17;
+        // include exact duplicates so tie-breaking is exercised
+        if i % 7 == 3 {
+            out.push(42.5);
+        } else {
+            out.push((state % 100_000) as f64 / 100.0 - 250.0);
+        }
+    }
+    out
+}
+
+fn fp(f_mhz: f64, p90: f64, iter_ms: f64) -> FreqPoint {
+    FreqPoint {
+        f_mhz,
+        p50_rel: p90 * 0.9,
+        p90_rel: p90,
+        p95_rel: p90 * 1.02,
+        p99_rel: p90 * 1.05,
+        peak_rel: p90 * 1.1,
+        mean_w: 500.0,
+        iter_time_ms: iter_ms,
+        frac_above_tdp: 0.0,
+        profiling_cost_s: 1.0,
+    }
+}
+
+#[test]
+fn dendrogram_survives_nan_distances() {
+    let mut d = pairwise(Metric::Euclidean, &rows());
+    d[1][3] = f64::NAN;
+    d[3][1] = f64::NAN;
+    let n = d.len();
+    let dg = Dendrogram::build(&d, Linkage::Average);
+    for k in 1..=n {
+        let labels = dg.cut_k(k);
+        assert_eq!(labels.len(), n);
+        assert!(labels.iter().all(|&l| l < n), "labels must stay a valid partition");
+    }
+    // slice() at a NaN threshold must not panic either
+    let _ = dg.slice(f64::NAN);
+}
+
+#[test]
+fn cap_scans_survive_nan_scaling_points() {
+    // Struct-literal construction bypasses ScalingData::new's ascending
+    // assert on purpose: this simulates a corrupted snapshot reaching
+    // the frequency scans, which previously aborted in sort_by.
+    let sd = ScalingData {
+        points: vec![fp(900.0, 0.8, 10.0), fp(f64::NAN, f64::NAN, f64::NAN), fp(1500.0, 1.1, 8.0)],
+    };
+    let (f_pwr, _) = cap_power_centric_scaling(&sd, 0.9, 1.0);
+    let (f_perf, _) = cap_perf_centric_scaling(&sd, 0.10, 900.0);
+    // NaN orders last under total_cmp, so the real grid points are
+    // still scanned first and the picked caps are finite.
+    assert!(f_pwr.is_finite(), "power-centric cap must come from a real point");
+    assert!(f_perf.is_finite(), "perf-centric cap must come from a real point");
+}
+
+#[test]
+fn nan_entry_never_wins_a_neighbor_scan() {
+    // Shape of util_neighbor / guerreiro::neighbor: min_by over
+    // (entry, distance) pairs.  A NaN distance must lose to every real
+    // candidate instead of aborting the scan.
+    let dists = [2.0, f64::NAN, 1.0, 7.5];
+    let best = dists
+        .iter()
+        .enumerate()
+        .min_by(|a, b| a.1.total_cmp(b.1))
+        .map(|(i, _)| i);
+    assert_eq!(best, Some(2));
+}
+
+#[test]
+fn total_cmp_sort_is_bit_identical_on_clean_data() {
+    let data = clean_samples(4096);
+    let mut now = data.clone();
+    now.sort_by(|a, b| a.total_cmp(b));
+    let mut reference = data.clone();
+    // minos-lint: allow(nan-cmp-unwrap) -- replays the pre-PR-8 comparator to pin bit-identity; data is NaN-free by construction
+    reference.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    assert_eq!(now.len(), reference.len());
+    for (x, y) in now.iter().zip(&reference) {
+        assert_eq!(x.to_bits(), y.to_bits(), "ordering changed on clean data");
+    }
+}
+
+#[test]
+fn min_by_selection_is_identical_on_clean_data() {
+    let data = clean_samples(513);
+    let picked_now = (0..data.len()).min_by(|&i, &j| data[i].total_cmp(&data[j]));
+    // minos-lint: allow(nan-cmp-unwrap) -- replays the pre-PR-8 selection to pin first-wins ties; data is NaN-free by construction
+    let picked_ref = (0..data.len()).min_by(|&i, &j| data[i].partial_cmp(&data[j]).unwrap());
+    assert_eq!(picked_now, picked_ref, "min_by must pick the same index, ties included");
+}
+
+#[test]
+fn cut_k_labels_unchanged_by_the_total_cmp_swap() {
+    let d = pairwise(Metric::Cosine, &rows());
+    let n = d.len();
+    let dg = Dendrogram::build(&d, Linkage::Ward);
+    for k in 1..n {
+        let now = dg.cut_k(k);
+        // Replay cut_k's threshold selection with the pre-PR-8 sort.
+        let mut heights = dg.merge_heights();
+        // minos-lint: allow(nan-cmp-unwrap) -- replays the pre-PR-8 comparator to pin cut_k bit-identity on clean data
+        heights.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let reference = dg.slice(heights[n - k - 1]);
+        assert_eq!(now, reference, "cut_k({k}) drifted");
+    }
+    assert_eq!(dg.cut_k(n), (0..n).collect::<Vec<_>>());
+}

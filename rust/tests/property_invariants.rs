@@ -53,7 +53,7 @@ fn percentile_properties() {
     check("percentile bounds + monotonicity", N, 13, |rng| {
         let data = vec_f64(rng, 512, -10.0, 10.0);
         let mut sorted = data.clone();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        sorted.sort_by(|a, b| a.total_cmp(b));
         let mut prev = f64::NEG_INFINITY;
         for i in 0..=10 {
             let q = i as f64 / 10.0;
