@@ -69,6 +69,61 @@ fn drive(refset: &ReferenceSet, nodes: usize, shards: usize, njobs: usize) -> Ve
     out
 }
 
+/// Mixed 8-node cluster for the skewed scenario: odd nodes are
+/// transfer-served Lonestar6, even nodes the tightly-budgeted primary.
+fn skew_cfg(shards: usize, steal: bool) -> SchedulerConfig {
+    let cluster: Vec<NodeSpec> = (0..8)
+        .map(|i| {
+            if i % 2 == 0 {
+                let mut n = NodeSpec::hpc_fund();
+                n.gpus_per_node = 4;
+                n
+            } else {
+                NodeSpec::lonestar6()
+            }
+        })
+        .collect();
+    SchedulerConfig {
+        cluster: Some(cluster),
+        shards,
+        steal,
+        admission: AdmissionMode::Batch,
+        sim_ms_per_wall_ms: 0.0,
+        ..Default::default()
+    }
+}
+
+/// 90% of jobs pinned to the primary device family — the skew that
+/// leaves every stripe but the primary's starved of classification
+/// work, which is exactly where lane stealing should pay.
+fn drive_skewed(
+    refset: &ReferenceSet,
+    shards: usize,
+    steal: bool,
+    njobs: usize,
+) -> Vec<JobOutcome> {
+    let sched = PowerAwareScheduler::new(skew_cfg(shards, steal), refset.clone());
+    for i in 0..njobs {
+        sched
+            .submit(Job {
+                id: i as u64,
+                workload: POOL[i % POOL.len()].to_string(),
+                objective: if i % 2 == 0 {
+                    Objective::PowerCentric
+                } else {
+                    Objective::PerfCentric
+                },
+                iterations: 1,
+                device: Some(if i % 10 == 0 { "a100".into() } else { "mi300x".into() }),
+            })
+            .expect("submit");
+    }
+    let mut out = sched.collect(njobs);
+    sched.shutdown();
+    out.sort_by_key(|o| o.job.id);
+    out
+}
+
 fn main() {
     let spec = GpuSpec::mi300x();
     let params = SimParams::default();
@@ -117,4 +172,39 @@ fn main() {
             throughput[1] / throughput[0].max(1e-9)
         );
     }
+
+    group("skewed queue (90% one family): steal on/off jobs/sec");
+    let njobs = if smoke() { 64 } else { 512 };
+    // Correctness gate first: steal-schedule invariance — one table for
+    // the serial dispatcher and every sharded/steal setting.
+    let t_ref = outcome_table(&drive_skewed(&refset, 1, true, njobs));
+    for (shards, steal) in [(4usize, false), (4, true)] {
+        assert_eq!(
+            t_ref,
+            outcome_table(&drive_skewed(&refset, shards, steal, njobs)),
+            "skewed s{shards} steal={steal}: outcome table diverged from serial"
+        );
+    }
+    println!("skewed_q{njobs}: OK (tables identical across steal settings)");
+    let mut jps = Vec::new();
+    for (label, shards, steal) in [
+        ("serial  s1", 1usize, true),
+        ("steal off s4", 4, false),
+        ("steal on  s4", 4, true),
+    ] {
+        let r = bench(
+            &format!("coord_skew/q{njobs}_{}", label.replace(' ', "")),
+            BUDGET,
+            200,
+            || black_box(drive_skewed(&refset, shards, steal, njobs)),
+        );
+        let v = r.per_sec(njobs);
+        println!("{}   [{:.0} jobs/s] ({label})", r.report(), v);
+        jps.push(v);
+    }
+    println!(
+        "skewed_q{njobs}: steal-on/serial speedup {:.2}x | steal-on/steal-off {:.2}x",
+        jps[2] / jps[0].max(1e-9),
+        jps[2] / jps[1].max(1e-9)
+    );
 }

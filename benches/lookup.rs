@@ -104,6 +104,48 @@ fn main() {
             reg.len(),
             rf.mean_ns / rc.mean_ns.max(1.0)
         );
+
+        // Blocked batch kernel: one `top2_batch` call (register-blocked
+        // QBLOCK-wide dot products) vs the same queries through the
+        // scalar one-at-a-time path — bit-exact first, then timed.
+        let queries: Vec<TargetProfile> = (0..32)
+            .map(|i| TargetProfile::from_entry(&rs.entries[(i * 7) % rs.entries.len()]))
+            .collect();
+        let qrefs: Vec<&TargetProfile> = queries.iter().collect();
+        let batch = reg.top2_batch(&rs, &qrefs, 0.1);
+        for (q, b) in qrefs.iter().zip(&batch) {
+            match (reg.top2(&rs, q, 0.1), b) {
+                (None, None) => {}
+                (Some(s), Some(b)) => {
+                    assert_eq!(s.best.0.name, b.best.0.name, "{} at n={n}", q.name);
+                    assert_eq!(
+                        s.best.1.to_bits(),
+                        b.best.1.to_bits(),
+                        "{} at n={n}: blocked distance drifted",
+                        q.name
+                    );
+                }
+                _ => panic!("{} at n={n}: blocked and scalar disagree on hit presence", q.name),
+            }
+        }
+        let rb = bench(
+            &format!("batch blocked    n={n:>5} (32 q)"),
+            BUDGET,
+            20_000,
+            || black_box(reg.top2_batch(&rs, &qrefs, 0.1)),
+        );
+        println!("{}", rb.report());
+        let rl = bench(
+            &format!("batch scalar     n={n:>5} (32 q)"),
+            BUDGET,
+            20_000,
+            || black_box(qrefs.iter().map(|q| reg.top2(&rs, q, 0.1)).filter(|h| h.is_some()).count()),
+        );
+        println!("{}", rl.report());
+        println!(
+            "  {label} registry: blocked batch kernel speedup {:.1}x over scalar loop",
+            rl.mean_ns / rb.mean_ns.max(1.0)
+        );
     }
 
     group("full classify (ChooseBinSize + caps) at the 100x registry");

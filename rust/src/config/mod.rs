@@ -427,6 +427,12 @@ pub struct Config {
     /// Must be ≥ 1 — the scheduler's outcome table is byte-identical
     /// for every value, so 0 has no meaning and is rejected at load.
     pub shards: usize,
+    /// Classification work-stealing between ledger stripes
+    /// (`serve --steal on|off` overrides; omitted in JSON ⇒ on).
+    /// Steal-schedule-invariant: the outcome table is byte-identical
+    /// for on and off — the knob only trades steady-state throughput
+    /// for strict stripe isolation.
+    pub steal: bool,
     pub sim: SimParams,
     pub minos: MinosParams,
 }
@@ -438,6 +444,7 @@ impl Default for Config {
             nodes: 1,
             cluster: None,
             shards: 1,
+            steal: true,
             sim: SimParams::default(),
             minos: MinosParams::default(),
         }
@@ -599,6 +606,7 @@ impl Config {
             ("node", self.node.to_json()),
             ("nodes", num(self.nodes as f64)),
             ("shards", num(self.shards as f64)),
+            ("steal", Json::Bool(self.steal)),
         ];
         if let Some(cluster) = &self.cluster {
             pairs.push(("cluster", arr(cluster.iter().map(|n| n.to_json()).collect())));
@@ -639,11 +647,16 @@ impl Config {
         } else {
             1
         };
+        // `steal` must be a real JSON bool when present: a string like
+        // "on" in a hand-edited file is a hard error here, mirroring the
+        // CLI's `--steal on|off` validation.
+        let steal = if j.get("steal").is_some() { j.b("steal")? } else { true };
         Ok(Config {
             node,
             nodes: if j.get("nodes").is_some() { j.u("nodes")?.max(1) } else { 1 },
             cluster,
             shards,
+            steal,
             sim: SimParams::from_json(
                 j.get("sim").ok_or_else(|| anyhow::anyhow!("missing sim"))?,
             )?,
@@ -733,6 +746,28 @@ mod tests {
         let zero = text.replace("\"shards\":4", "\"shards\":0");
         let err = Config::from_json_str(&zero).unwrap_err().to_string();
         assert!(err.contains("shards"), "{err}");
+    }
+
+    #[test]
+    fn config_without_steal_key_defaults_to_on_and_non_bool_is_rejected() {
+        // Backwards compatibility: config files predate the lane
+        // work-stealing knob.
+        let c = Config {
+            steal: false,
+            ..Config::default()
+        };
+        let text = c.to_json().dump();
+        assert!(text.contains("\"steal\":false"));
+        let stripped = text.replace("\"steal\":false,", "");
+        assert!(!stripped.contains("\"steal\""));
+        let back = Config::from_json_str(&stripped).unwrap();
+        assert!(back.steal, "omitted key must default to stealing on");
+        assert!(!Config::from_json_str(&text).unwrap().steal);
+        // a non-bool value (e.g. the CLI's "on" spelling pasted into the
+        // JSON) is a hard load error, not a silent coercion
+        let bad = text.replace("\"steal\":false", "\"steal\":\"on\"");
+        let err = Config::from_json_str(&bad).unwrap_err().to_string();
+        assert!(err.contains("steal"), "{err}");
     }
 
     #[test]

@@ -82,8 +82,18 @@ pub struct SchedulerMetrics {
     /// Completed jobs per ledger shard; sums to `completed`.  A
     /// per-shard view of the same releases, never a second count — the
     /// shard-summed totals must equal the single-dispatcher ones on an
-    /// identical queue.
+    /// identical queue.  Shard here means the node's *owning ledger*
+    /// stripe (placement-based), so this is also the post-steal
+    /// occupancy: classification stealing moves lane work, never
+    /// placements, and the partition is identical for steal on/off.
     pub jobs_by_shard: Vec<usize>,
+    /// Classification groups an idle lane stole from another stripe's
+    /// queue (`SchedulerConfig::steal`).  Timing-dependent like
+    /// `admit_batches`: whether a lane goes idle first varies run to
+    /// run, so two byte-identical outcome tables may report different
+    /// steal counts.  Guaranteed 0 when the knob is off (asserted at
+    /// shutdown).
+    pub steals: usize,
     /// Dispatch ticks that admitted at least one job (each tick drains
     /// the inbox into one admission batch).  Timing-dependent: how
     /// submissions chunk into ticks varies run to run even though the
@@ -119,7 +129,7 @@ impl SchedulerMetrics {
             "nodes {}x{}gpu | shards {} | jobs {}/{} ok ({} failed) | cache hits {} ({} plan keys) | classes {} (plan shares {}) | \
              profiles {} ({:.1}s spent, {:.1}s saved; \
              {} early exits, mean trace fraction {:.2}) | \
-             power waits {} | peak pending {} | peak admitted p90 {:.0}/{:.0} W per node | replans {} | violations {} | energy {:.0} J{}",
+             power waits {} | peak pending {} | peak admitted p90 {:.0}/{:.0} W per node | replans {} | steals {} | violations {} | energy {:.0} J{}",
             self.nodes.max(1),
             self.gpus_per_node,
             self.shards.max(1),
@@ -140,6 +150,7 @@ impl SchedulerMetrics {
             self.peak_admitted_p90_w,
             self.node_budget_w,
             self.replans,
+            self.steals,
             self.bound_violations,
             self.total_energy_j,
             devices
@@ -178,5 +189,6 @@ mod tests {
         assert!(s.contains("nodes 2x8gpu"), "{s}");
         assert!(s.contains("shards 1"), "{s}");
         assert!(s.contains("replans 7"), "{s}");
+        assert!(s.contains("steals 0"), "{s}");
     }
 }

@@ -8,34 +8,50 @@
 //! * [`PowerAwareScheduler::submit`] validates the workload name,
 //!   enqueues the job on the dispatcher's inbox channel, and **returns
 //!   immediately** — it never blocks on admission.
-//! * A **dispatcher thread** remains the single writer for placement
-//!   and release state, so the `free_gpus`-after-unlock race of the old
-//!   design still cannot exist: a GPU id is popped from the owning
-//!   shard's free-list in the same state transition that debits the
-//!   ledger.
+//! * A **dispatcher thread** remains the single *decider* for placement
+//!   and release order, but the state transitions themselves run in
+//!   persistent per-stripe **lane threads** ([`lane_loop`]): each lane
+//!   exclusively owns one [`LedgerShard`] end-to-end, so a GPU id is
+//!   still popped from the owning stripe's free-list in the same state
+//!   transition that debits the ledger — the `free_gpus`-after-unlock
+//!   race of the old design cannot exist, and the co-location re-plan
+//!   (`nodecap::plan`, the expensive part of steady state) runs inside
+//!   the lane, off the dispatcher thread, outside the metrics lock.
+//!   Placement is a distributed scan with a sequential merge: every
+//!   lane proposes its admissible (node, headroom) candidates and the
+//!   dispatcher replays the exact single-threaded best-headroom
+//!   comparison over the merged list in global node order, so the
+//!   chosen node is byte-identical for every shard count.
 //! * **Shards** (`SchedulerConfig::shards`): each dispatch tick drains
 //!   the inbox into one admission batch, collects the distinct
-//!   uncached (device, app) profiling tasks, and fans them out over up
-//!   to `shards` classification lanes.  Native-device tasks classify in
-//!   parallel (their registries are immutable after startup, behind a
-//!   read lock); under batch admission each lane pushes its per-device
-//!   group through [`crate::registry::VectorIndex`] as **one SoA batch
-//!   query** (`query_batch`), amortizing the centroid pass across the
-//!   batch — bit-exact against per-job queries by construction.
+//!   uncached (device, app) profiling tasks, groups them per device,
+//!   and fans the groups out over up to `shards` classification lanes
+//!   seeded by the device's home stripe.  Native-device tasks classify
+//!   in parallel (their registries are immutable after startup, behind
+//!   a read lock); under batch admission each group goes through
+//!   [`crate::registry::VectorIndex`] as **one SoA batch query**
+//!   (`query_batch`, register-blocked over 4 query vectors), amortizing
+//!   the centroid pass across the batch — bit-exact against per-job
+//!   queries by construction.  When one device family dominates the
+//!   queue, idle lanes **steal whole device groups** from the longest
+//!   stripe queue ([`crate::exec::StealQueues`];
+//!   `SchedulerConfig::steal` gates it, `SchedulerMetrics::steals`
+//!   counts it) — stealing moves work between threads, never between
+//!   results, so the outcome table is steal-schedule-invariant.
 //!   Transfer-served devices defer classification to the serial merge
 //!   (absorb mutates their registry, and order must stay arrival
 //!   order).  The merge then applies cache lookups/installs, metrics,
 //!   and pending pushes **serially in arrival order**, so the outcome
-//!   stream is invariant to how submissions chunk into ticks and to
-//!   the shard count.
+//!   stream is invariant to how submissions chunk into ticks, to the
+//!   shard count, and to the steal schedule.
 //! * The admission state itself is **sharded by device family / node
-//!   group** ([`assign_shards`]): each shard exclusively owns the power
-//!   ledgers, GPU free-lists, and resident lists of its node slice
-//!   (plus a stripe of the (device, class)-keyed plan cache), and
-//!   budget accounting for a node only ever touches its owning stripe —
-//!   there is no global ledger lock.  Placement iterates nodes in
-//!   global order through the node→(shard, slot) map, so decisions are
-//!   invariant to the shard count.
+//!   group** ([`assign_shards`]): each stripe lane exclusively owns the
+//!   power ledgers, GPU free-lists, and resident lists of its node
+//!   slice (plus a stripe of the (device, class)-keyed plan cache), and
+//!   budget accounting for a node only ever touches its owning lane —
+//!   there is no global ledger lock, and commands to one lane apply in
+//!   FIFO order (a release is always visible to every later placement
+//!   scan of that stripe).
 //! * Execution runs on **worker threads** (one per placed job, bounded
 //!   by the cluster's total GPU slots) so simulated profiles compute in
 //!   parallel; a memo cache keyed by (workload, cap, iterations) makes
@@ -56,11 +72,12 @@
 //! ledger of predicted p90 draws plus the job's predicted p90 fits the
 //! node budget.
 //!
-//! Whenever a node's resident mix changes the dispatcher re-plans the
-//! node's co-located cap vector via [`crate::coordinator::nodecap::plan`]
-//! (using each resident's power neighbor as its scaling proxy); the
-//! latest [`crate::coordinator::nodecap::NodePlan`] per node is exported
-//! through [`SchedulerMetrics::node_plans`].
+//! Whenever a node's resident mix changes its owning stripe lane
+//! re-plans the node's co-located cap vector via
+//! [`crate::coordinator::nodecap::plan`] (using each resident's power
+//! neighbor as its scaling proxy, read from the stripe's own resident
+//! list); the latest [`crate::coordinator::nodecap::NodePlan`] per node
+//! is exported through [`SchedulerMetrics::node_plans`].
 //!
 //! Device identity is a first-class axis: every node carries its own
 //! [`NodeSpec`] (heterogeneous clusters via `SchedulerConfig::cluster`),
@@ -72,6 +89,7 @@ use crate::config::{DeviceProfile, GpuSpec, MinosParams, NodeSpec, SimParams};
 use crate::coordinator::job::{Job, JobOutcome};
 use crate::coordinator::metrics::SchedulerMetrics;
 use crate::coordinator::nodecap::{self, CapPolicy};
+use crate::exec::StealQueues;
 use crate::features::UtilPoint;
 use crate::fleet::{transfer, FleetStore};
 use crate::minos::algorithm::{FreqPlan, Objective, SelectOptimalFreq, TargetProfile};
@@ -166,6 +184,17 @@ pub struct SchedulerConfig {
     /// ≥ 1; the outcome table is byte-identical for every value (the
     /// shard count changes throughput, never decisions).
     pub shards: usize,
+    /// Work-stealing between classification stripes: when one device
+    /// family dominates a tick's admission batch, idle lanes steal
+    /// whole per-device task groups from the back of the longest
+    /// stripe queue ([`crate::exec::StealQueues`]).  Stealing changes
+    /// which lane runs a group — never the per-task results
+    /// (classification is read-only and bit-exact per task) — so the
+    /// outcome table is steal-schedule-invariant; `false` pins every
+    /// group to its home stripe.  [`PowerAwareScheduler::shutdown`]
+    /// asserts that a disabled knob recorded zero
+    /// [`SchedulerMetrics::steals`].
+    pub steal: bool,
     pub sim: SimParams,
     pub minos: MinosParams,
     /// Wall-clock pacing: simulated milliseconds per wall millisecond of
@@ -198,6 +227,7 @@ impl Default for SchedulerConfig {
             admission: AdmissionMode::streaming_default(),
             search: SearchMode::ClassFirst,
             shards: 1,
+            steal: true,
             sim: SimParams::default(),
             minos: MinosParams::default(),
             sim_ms_per_wall_ms: 0.0,
@@ -422,6 +452,11 @@ struct Shared {
     devices: Vec<DeviceServing>,
     /// node → owning ledger shard ([`assign_shards`]).
     node_shard: Vec<usize>,
+    /// device → home stripe (the stripe owning the device's first
+    /// node): classification groups seed onto their home stripe's lane,
+    /// so classify locality mirrors the ledger striping and stealing
+    /// only fires on genuine imbalance.
+    device_home_shard: Vec<usize>,
     /// Classification cache (see [`StripedPlanCache`]).
     plans: StripedPlanCache,
     /// Memo of simulated executions (deterministic, so safe to reuse).
@@ -491,65 +526,180 @@ impl Running {
 
 /// One node's admission state.  GPU slots are owned objects: an id
 /// exists either in `free` or in exactly one `Running`, and moves
-/// between the two only inside the dispatcher.
+/// between the two only inside the node's owning stripe lane.
 struct NodeState {
     ledger_w: f64,
     /// Free device ids, sorted ascending; placement hands out the lowest.
     free: Vec<usize>,
-    /// Job ids currently resident (for the co-location re-plan).
-    resident: Vec<u64>,
+    /// (job id, power-neighbor name) currently resident — the lane
+    /// re-plans the node's caps from this list, so it carries the
+    /// neighbor names the dispatcher's `running` vec used to provide.
+    resident: Vec<(u64, String)>,
 }
 
-/// One shard's exclusively owned slice of the admission state.
+/// One stripe's exclusively owned slice of the admission state: power
+/// ledgers, GPU free-lists, and resident lists for its node slice
+/// (partitioned per [`assign_shards`]).  Each stripe is moved into its
+/// lane thread, which owns it end-to-end — there is no shared ledger
+/// lock anywhere in steady state.
 struct LedgerShard {
-    /// Global node ids this shard owns (ascending).
+    /// Global node ids this stripe owns (ascending).
     nodes: Vec<usize>,
     states: Vec<NodeState>,
 }
 
-/// The sharded admission ledger: power ledgers, GPU free-lists, and
-/// resident lists partitioned per [`assign_shards`].  Budget accounting
-/// for a node only ever touches its owning shard's slice — there is no
-/// global ledger lock to take; the dispatcher (the single writer for
-/// placement) routes through the node→(shard, slot) map, in global
-/// node order, so decisions are invariant to the shard count.
-struct ShardedLedger {
-    shards: Vec<LedgerShard>,
-    /// global node → (shard, slot in that shard's `states`).
-    slot: Vec<(usize, usize)>,
+/// Build the per-stripe admission state for [`assign_shards`]'s map.
+fn build_stripes(node_specs: &[NodeSpec], node_shard: &[usize]) -> Vec<LedgerShard> {
+    let k = node_shard.iter().copied().max().map_or(1, |m| m + 1);
+    let mut shards: Vec<LedgerShard> = (0..k)
+        .map(|_| LedgerShard { nodes: Vec::new(), states: Vec::new() })
+        .collect();
+    for (ni, (&s, ns)) in node_shard.iter().zip(node_specs).enumerate() {
+        shards[s].nodes.push(ni);
+        shards[s].states.push(NodeState {
+            ledger_w: 0.0,
+            free: (0..ns.gpus_per_node).collect(),
+            resident: Vec::new(),
+        });
+    }
+    shards
 }
 
-impl ShardedLedger {
-    fn new(node_specs: &[NodeSpec], node_shard: &[usize]) -> Self {
-        let k = node_shard.iter().copied().max().map_or(1, |m| m + 1);
-        let mut shards: Vec<LedgerShard> = (0..k)
-            .map(|_| LedgerShard { nodes: Vec::new(), states: Vec::new() })
-            .collect();
-        let mut slot = vec![(0usize, 0usize); node_specs.len()];
-        for (ni, (&s, ns)) in node_shard.iter().zip(node_specs).enumerate() {
-            slot[ni] = (s, shards[s].states.len());
-            shards[s].nodes.push(ni);
-            shards[s].states.push(NodeState {
-                ledger_w: 0.0,
-                free: (0..ns.gpus_per_node).collect(),
-                resident: Vec::new(),
-            });
+/// Commands the dispatcher sends a stripe lane.  A lane applies them in
+/// FIFO order, so a `Release` or `Commit` is always visible to every
+/// later `Propose` of the same stripe — the happens-before edge that
+/// makes the distributed placement scan equivalent to the old
+/// single-threaded one.
+enum LaneCmd {
+    /// Scan the stripe's nodes (ascending global id) and reply with
+    /// every admissible (node, headroom) candidate for a job whose
+    /// per-device p90 predictions are given (`None` = the job has no
+    /// plan for that device).
+    Propose { p90_by_device: Vec<Option<f64>> },
+    /// Debit the ledger, record the resident, and hand out the node's
+    /// lowest free GPU slot; the lane replies `Granted` immediately and
+    /// then runs the peak metrics + co-location re-plan asynchronously.
+    Commit { node: usize, job_id: u64, p90_w: f64, neighbor: String },
+    /// Credit the ledger, return the GPU slot, drop the resident, and
+    /// re-plan.  Fire-and-forget: the dispatcher never blocks on it.
+    Release { node: usize, job_id: u64, p90_w: f64, gpu: usize },
+    Quit,
+}
+
+/// A stripe lane's replies (one per `Propose`/`Commit`, none for
+/// `Release`/`Quit`).
+enum LaneReply {
+    Candidates(Vec<(usize, f64)>),
+    Granted(usize),
+}
+
+/// One placement lane: a persistent thread owning one [`LedgerShard`].
+struct Lane {
+    tx: Sender<LaneCmd>,
+    rx: Receiver<LaneReply>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+/// The stripe-lane event loop.  Every command's effect is a pure
+/// function of the stripe state it exclusively owns, and the
+/// dispatcher's per-lane command order is deterministic, so lane state
+/// — and everything derived from it — replays identically across runs.
+/// `Propose` replies carry *every* admissible candidate (not a
+/// per-stripe argmax) so the dispatcher can replay the exact global
+/// node-order headroom comparison: an epsilon-chain of near-equal
+/// headrooms resolves differently when compared in a different order,
+/// and only the sequential replay is shard-count-invariant.
+fn lane_loop(
+    shared: &Shared,
+    mut shard: LedgerShard,
+    rx: Receiver<LaneCmd>,
+    tx: Sender<LaneReply>,
+) {
+    while let Ok(cmd) = rx.recv() {
+        match cmd {
+            LaneCmd::Propose { p90_by_device } => {
+                let mut cands = Vec::new();
+                for (st, &ni) in shard.states.iter().zip(&shard.nodes) {
+                    if st.free.is_empty() {
+                        continue;
+                    }
+                    let Some(p90) = p90_by_device[shared.node_device[ni]] else {
+                        continue; // incompatible device for this job
+                    };
+                    let budget = shared.node_specs[ni].power_budget_w;
+                    let admissible =
+                        st.resident.is_empty() || st.ledger_w + p90 <= budget + 1e-9;
+                    if admissible {
+                        cands.push((ni, budget - st.ledger_w));
+                    }
+                }
+                let _ = tx.send(LaneReply::Candidates(cands));
+            }
+            LaneCmd::Commit { node, job_id, p90_w, neighbor } => {
+                let si = shard
+                    .nodes
+                    .binary_search(&node)
+                    .expect("Commit routed to the owning stripe");
+                let st = &mut shard.states[si];
+                let gpu = st.free.remove(0); // lowest free device id
+                st.ledger_w += p90_w;
+                st.resident.push((job_id, neighbor));
+                let ledger_w = st.ledger_w;
+                // Reply before the (expensive) re-plan: the dispatcher
+                // only needs the slot id to start execution.
+                let _ = tx.send(LaneReply::Granted(gpu));
+                {
+                    let mut m = shared.metrics.lock().unwrap();
+                    m.node_peak_admitted_p90_w[node] =
+                        m.node_peak_admitted_p90_w[node].max(ledger_w);
+                    m.peak_admitted_p90_w = m.peak_admitted_p90_w.max(ledger_w);
+                }
+                replan_node(shared, node, &shard.states[si]);
+            }
+            LaneCmd::Release { node, job_id, p90_w, gpu } => {
+                let si = shard
+                    .nodes
+                    .binary_search(&node)
+                    .expect("Release routed to the owning stripe");
+                let st = &mut shard.states[si];
+                st.ledger_w = (st.ledger_w - p90_w).max(0.0);
+                let pos = st
+                    .free
+                    .binary_search(&gpu)
+                    .expect_err("GPU slot double-free: id already in free-list");
+                st.free.insert(pos, gpu);
+                st.resident.retain(|(id, _)| *id != job_id);
+                replan_node(shared, node, &shard.states[si]);
+            }
+            LaneCmd::Quit => break,
         }
-        ShardedLedger { shards, slot }
     }
+}
 
-    fn shard_of(&self, ni: usize) -> usize {
-        self.slot[ni].0
+/// Recompute the co-located cap vector for node `ni` from its stripe's
+/// own resident list (insertion order — deterministic, and identical
+/// across shard counts and steal settings because placements are).
+/// Transfer-served nodes skip the re-plan: their neighbors' curves live
+/// in the source device's frequency domain, so a co-location plan would
+/// quote out-of-range caps.  `nodecap::plan` runs *before* the metrics
+/// lock is taken, so parallel stripes never serialize on it.
+fn replan_node(shared: &Shared, ni: usize, st: &NodeState) {
+    let dev = &shared.devices[shared.node_device[ni]];
+    if st.resident.is_empty() || !dev.native {
+        shared.metrics.lock().unwrap().node_plans[ni] = None;
+        return;
     }
-
-    fn node(&self, ni: usize) -> &NodeState {
-        let (s, i) = self.slot[ni];
-        &self.shards[s].states[i]
-    }
-
-    fn node_mut(&mut self, ni: usize) -> &mut NodeState {
-        let (s, i) = self.slot[ni];
-        &mut self.shards[s].states[i]
+    let names: Vec<&str> = st.resident.iter().map(|(_, n)| n.as_str()).collect();
+    let plan = nodecap::plan(
+        &dev.refset,
+        &names,
+        shared.node_specs[ni].power_budget_w,
+        shared.cfg.policy,
+    );
+    if let Some(p) = plan {
+        let mut m = shared.metrics.lock().unwrap();
+        m.replans += 1;
+        m.node_plans[ni] = Some(p);
     }
 }
 
@@ -593,158 +743,164 @@ struct FreshResult {
     cls: FreshCls,
 }
 
-/// Fan a tick's distinct (device, app) tasks over up to
-/// `cfg.shards` classification lanes.  Lanes only read shared state
-/// (registries behind read guards, the refsets, the simulator), so
-/// ordering inside this phase cannot leak into the outcome table — all
-/// order-sensitive work happens later, in the serial arrival-order
+/// Fan a tick's distinct (device, app) tasks over up to `cfg.shards`
+/// classification lanes.  The unit of lane work is a whole **device
+/// group** (one SoA batch query, or one stream mux): groups are seeded
+/// onto their device's home stripe, and — when `cfg.steal` is on — an
+/// idle lane steals one group from the back of the longest sibling
+/// queue ([`crate::exec::StealQueues`]), so a queue dominated by one
+/// device family still uses every lane.  Lanes only read shared state
+/// (registries behind read guards, the refsets, the simulator) and
+/// write results by task index, so neither the grouping, the lane
+/// assignment, nor the steal schedule can leak into the outcome table —
+/// all order-sensitive work happens later, in the serial arrival-order
 /// merge.
 fn compute_fresh(shared: &Shared, tasks: &[FreshTask]) -> Vec<FreshResult> {
     if tasks.is_empty() {
         return Vec::new();
     }
-    let lanes = shared.cfg.shards.min(tasks.len()).max(1);
-    let mut out: Vec<Option<FreshResult>> = (0..tasks.len()).map(|_| None).collect();
+    // Group by device: classification batches per device group.  Splitting
+    // a dominant family's group across lanes would shrink its SoA batch,
+    // so stealing moves whole groups instead.
+    let mut by_dev: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+    for (i, t) in tasks.iter().enumerate() {
+        by_dev.entry(t.di).or_default().push(i);
+    }
+    let groups: Vec<(usize, Vec<usize>)> = by_dev.into_iter().collect();
+    let lanes = shared.cfg.shards.min(groups.len()).max(1);
+    let out: Vec<Mutex<Option<FreshResult>>> =
+        (0..tasks.len()).map(|_| Mutex::new(None)).collect();
     if lanes <= 1 {
-        let lane: Vec<(usize, &FreshTask)> = tasks.iter().enumerate().collect();
-        for (i, r) in fresh_lane(shared, lane) {
-            out[i] = Some(r);
+        for (di, gis) in &groups {
+            fresh_group(shared, tasks, *di, gis, &out);
         }
     } else {
+        let queues: StealQueues<usize> = StealQueues::new(lanes);
+        for (gi, (di, _)) in groups.iter().enumerate() {
+            queues.seed(shared.device_home_shard[*di], gi);
+        }
+        let allow_steal = shared.cfg.steal;
         std::thread::scope(|scope| {
-            let handles: Vec<_> = (0..lanes)
-                .map(|w| {
-                    let lane: Vec<(usize, &FreshTask)> = tasks
-                        .iter()
-                        .enumerate()
-                        .filter(|&(i, _)| i % lanes == w)
-                        .collect();
-                    scope.spawn(move || fresh_lane(shared, lane))
-                })
-                .collect();
-            for h in handles {
-                for (i, r) in h.join().expect("classification lane panicked") {
-                    out[i] = Some(r);
-                }
+            for w in 0..lanes {
+                let queues = &queues;
+                let groups = &groups;
+                let out = &out;
+                scope.spawn(move || {
+                    while let Some(gi) = queues.pop(w, allow_steal) {
+                        let (di, gis) = &groups[gi];
+                        fresh_group(shared, tasks, *di, gis, out);
+                    }
+                });
             }
         });
+        let stolen = queues.steals();
+        if stolen > 0 {
+            shared.metrics.lock().unwrap().steals += stolen;
+        }
     }
     out.into_iter()
-        .map(|r| r.expect("lanes covered every task"))
+        .map(|m| {
+            m.into_inner()
+                .expect("fresh result slot poisoned")
+                .expect("groups covered every task")
+        })
         .collect()
 }
 
-/// One lane's work: profile every task, then classify the native-device
-/// ones.  Under batch admission the lane groups its native tasks per
-/// device and pushes each group through the registry index as **one SoA
-/// batch query** ([`crate::registry::VectorIndex::query_batch`] via
-/// `SelectOptimalFreq::classify_batch`), amortizing the centroid pass —
-/// bit-exact against per-task classification by construction.
-/// Streaming admission now batches the same way: the lane's per-device
-/// group feeds its live telemetry through one [`StreamMux`], whose due
-/// windows classify as one batch per poll (see [`classify_stream_mux`]).
-fn fresh_lane<'a>(
+/// Classify one device group: profile every task, then classify the
+/// native ones — one SoA batch query
+/// ([`crate::registry::VectorIndex::query_batch`] via
+/// `SelectOptimalFreq::classify_batch`, amortizing the register-blocked
+/// centroid pass) under batch admission, one [`StreamMux`] under
+/// streaming (see [`classify_stream_mux`]); transfer-served devices
+/// defer to the serial merge.  Results land in `out` by task index, so
+/// *which lane* ran the group is invisible downstream — the property
+/// that makes group stealing outcome-invariant.
+fn fresh_group(
     shared: &Shared,
-    lane: Vec<(usize, &'a FreshTask)>,
-) -> Vec<(usize, FreshResult)> {
-    let profs: Vec<Profile> = lane
+    tasks: &[FreshTask],
+    di: usize,
+    gis: &[usize],
+    out: &[Mutex<Option<FreshResult>>],
+) {
+    let dev = &shared.devices[di];
+    let profs: Vec<Profile> = gis
         .iter()
-        .map(|&(_, t)| {
-            let dev = &shared.devices[t.di];
+        .map(|&i| {
             profile(
-                &ProfileRequest::new(&dev.spec, &t.workload, DvfsMode::Uncapped)
+                &ProfileRequest::new(&dev.spec, &tasks[i].workload, DvfsMode::Uncapped)
                     .with_params(&shared.cfg.sim),
             )
         })
         .collect();
-    let mut cls: Vec<FreshCls> = lane
-        .iter()
-        .map(|&(_, t)| {
-            if shared.devices[t.di].native {
-                FreshCls::Ready(None)
-            } else {
-                FreshCls::Deferred
+    let cls: Vec<FreshCls> = if !dev.native {
+        gis.iter().map(|_| FreshCls::Deferred).collect()
+    } else {
+        match shared.cfg.admission {
+            AdmissionMode::Streaming { window_samples, stable_k } => {
+                classify_stream_mux(shared, di, tasks, gis, &profs, window_samples, stable_k)
+                    .into_iter()
+                    .map(FreshCls::Ready)
+                    .collect()
             }
-        })
-        .collect();
-    match shared.cfg.admission {
-        AdmissionMode::Streaming { window_samples, stable_k } => {
-            let mut by_dev: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
-            for (li, &(_, t)) in lane.iter().enumerate() {
-                if shared.devices[t.di].native {
-                    by_dev.entry(t.di).or_default().push(li);
-                }
-            }
-            for (di, lis) in by_dev {
-                let outs =
-                    classify_stream_mux(shared, di, &lane, &lis, &profs, window_samples, stable_k);
-                for (li, out) in lis.into_iter().zip(outs) {
-                    cls[li] = FreshCls::Ready(out);
-                }
-            }
-        }
-        AdmissionMode::Batch => {
-            let mut by_dev: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
-            for (li, &(_, t)) in lane.iter().enumerate() {
-                if shared.devices[t.di].native {
-                    by_dev.entry(t.di).or_default().push(li);
-                }
-            }
-            for (di, lis) in by_dev {
-                let dev = &shared.devices[di];
+            AdmissionMode::Batch => {
                 let guard = dev.registry.read().unwrap();
                 let mut sel = SelectOptimalFreq::new(&dev.refset, &shared.cfg.minos);
                 if let Some(reg) = guard.as_ref() {
                     sel = sel.with_registry(reg);
                 }
-                let targets: Vec<TargetProfile> = lis
+                let targets: Vec<TargetProfile> = gis
                     .iter()
-                    .map(|&li| {
-                        let (_, t) = lane[li];
-                        TargetProfile::from_profile(&t.app, &profs[li], &dev.refset.bin_sizes)
+                    .zip(&profs)
+                    .map(|(&i, p)| {
+                        TargetProfile::from_profile(&tasks[i].app, p, &dev.refset.bin_sizes)
                     })
                     .collect();
-                let pairs: Vec<(&TargetProfile, Objective)> = lis
+                let pairs: Vec<(&TargetProfile, Objective)> = gis
                     .iter()
                     .zip(&targets)
-                    .map(|(&li, tp)| (tp, lane[li].1.objective))
+                    .map(|(&i, tp)| (tp, tasks[i].objective))
                     .collect();
-                for (&li, c) in lis.iter().zip(sel.classify_batch(&pairs)) {
-                    cls[li] = FreshCls::Ready(c.map(|c| ClsOut {
-                        plan: c.plan,
-                        class_id: c.class_id,
-                        fraction: 1.0,
-                        early: false,
-                    }));
-                }
+                sel.classify_batch(&pairs)
+                    .into_iter()
+                    .map(|c| {
+                        FreshCls::Ready(c.map(|c| ClsOut {
+                            plan: c.plan,
+                            class_id: c.class_id,
+                            fraction: 1.0,
+                            early: false,
+                        }))
+                    })
+                    .collect()
             }
         }
+    };
+    for ((&i, prof), cls) in gis.iter().zip(profs).zip(cls) {
+        *out[i].lock().expect("fresh result slot poisoned") = Some(FreshResult { prof, cls });
     }
-    lane.into_iter()
-        .zip(profs)
-        .zip(cls)
-        .map(|(((i, _), prof), cls)| (i, FreshResult { prof, cls }))
-        .collect()
 }
 
-/// Streaming-admission classification for one device's native tasks:
-/// feed every task's live profiling telemetry through one [`StreamMux`]
-/// as concurrent tagged streams, interleaved one window per stream per
-/// poll, so every due window across the group classifies as **one**
-/// `classify_batch` call per poll — the firehose analogue of the batch
-/// branch's SoA grouping.  `profile_fraction` comes from the actual
-/// early-exit point (the mux stops replaying a stream once its decision
-/// fires).  Decisions are bit-exact vs the per-task `OnlineClassifier`
-/// replay this replaced: window snapshots are captured at each stream's
-/// own sample-count boundaries, which depend only on that stream's
+/// Streaming-admission classification for one device group (`gis`
+/// indexes `tasks`; `profs` is parallel to `gis`): feed every task's
+/// live profiling telemetry through one [`StreamMux`] as concurrent
+/// tagged streams, interleaved one window per stream per poll, so every
+/// due window across the group classifies as **one** `classify_batch`
+/// call per poll — the firehose analogue of the batch branch's SoA
+/// grouping.  `profile_fraction` comes from the actual early-exit point
+/// (the mux stops replaying a stream once its decision fires).
+/// Decisions are bit-exact vs the per-task `OnlineClassifier` replay
+/// this replaced: window snapshots are captured at each stream's own
+/// sample-count boundaries, which depend only on that stream's
 /// sequence, never on the interleaving (`rust/tests/stream_mux.rs` pins
-/// the equivalence).  Falls back to the full-trace classifier per
-/// stream when the online path cannot decide (degenerate trace).
+/// the equivalence) — which is also why a *stolen* group classifies
+/// identically on the thief lane.  Falls back to the full-trace
+/// classifier per stream when the online path cannot decide
+/// (degenerate trace).
 fn classify_stream_mux(
     shared: &Shared,
     di: usize,
-    lane: &[(usize, &FreshTask)],
-    lis: &[usize],
+    tasks: &[FreshTask],
+    gis: &[usize],
     profs: &[Profile],
     window_samples: usize,
     stable_k: usize,
@@ -755,7 +911,7 @@ fn classify_stream_mux(
     let mut mux = StreamMux::new(
         &dev.refset,
         &shared.cfg.minos,
-        MuxConfig::new(online).with_max_streams(lis.len().max(1)),
+        MuxConfig::new(online).with_max_streams(gis.len().max(1)),
     );
     if let Some(reg) = guard.as_ref() {
         mux = mux.with_registry(reg);
@@ -763,11 +919,11 @@ fn classify_stream_mux(
     // One stream per task.  (di, app) dedup upstream guarantees unique
     // workload names inside a device group, so the name doubles as the
     // tag — keeping FreqPlan::target identical to the per-task path.
-    let ids: Vec<_> = lis
+    let ids: Vec<_> = gis
         .iter()
-        .map(|&li| {
-            let (_, t) = lane[li];
-            let prof = &profs[li];
+        .zip(profs)
+        .map(|(&gi, prof)| {
+            let t = &tasks[gi];
             let util = UtilPoint::new(prof.app_sm_util, prof.app_dram_util);
             mux.admit(
                 StreamSpec::new(&t.workload.name, &t.app, util, t.objective)
@@ -777,15 +933,15 @@ fn classify_stream_mux(
                     .with_tdp(prof.trace.tdp_w)
                     .with_sample_dt(prof.trace.sample_dt_ms),
             )
-            .expect("fresh mux admits every lane task")
+            .expect("fresh mux admits every group task")
         })
         .collect();
     let online_window = online.window_samples;
-    let mut cursors: Vec<usize> = vec![0; lis.len()];
+    let mut cursors: Vec<usize> = vec![0; gis.len()];
     loop {
         let mut active = 0usize;
-        for (k, &li) in lis.iter().enumerate() {
-            let raw = &profs[li].trace.raw_watts;
+        for (k, prof) in profs.iter().enumerate() {
+            let raw = &prof.trace.raw_watts;
             if cursors[k] >= raw.len() {
                 continue;
             }
@@ -807,11 +963,12 @@ fn classify_stream_mux(
             break;
         }
     }
-    lis.iter()
+    gis.iter()
+        .zip(profs)
         .zip(ids)
-        .map(|(&li, id)| {
-            let (_, t) = lane[li];
-            let total = profs[li].trace.raw_watts.len();
+        .map(|((&gi, prof), id)| {
+            let t = &tasks[gi];
+            let total = prof.trace.raw_watts.len();
             let d = match mux.decision(id).expect("live stream id") {
                 Some(d) => Some(d),
                 None => mux.finalize(id).expect("live stream id"),
@@ -832,7 +989,7 @@ fn classify_stream_mux(
                 }
                 None => {
                     let target =
-                        TargetProfile::from_profile(&t.app, &profs[li], &dev.refset.bin_sizes);
+                        TargetProfile::from_profile(&t.app, prof, &dev.refset.bin_sizes);
                     let mut sel = SelectOptimalFreq::new(&dev.refset, &shared.cfg.minos);
                     if let Some(reg) = guard.as_ref() {
                         sel = sel.with_registry(reg);
@@ -918,6 +1075,17 @@ impl PowerAwareScheduler {
             .unwrap_or(0);
         let node_shard = assign_shards(&node_device, cfg.shards);
         let stripe_count = node_shard.iter().copied().max().map_or(1, |m| m + 1);
+        // Every device has at least one node by construction (`devices`
+        // is built from the node list), so `position` always hits.
+        let device_home_shard: Vec<usize> = (0..devices.len())
+            .map(|di| {
+                node_device
+                    .iter()
+                    .position(|&d| d == di)
+                    .map(|ni| node_shard[ni])
+                    .unwrap_or(0)
+            })
+            .collect();
         let shared = Arc::new(Shared {
             registry: crate::workloads::registry(),
             plans: StripedPlanCache::new(cfg.shards),
@@ -939,6 +1107,7 @@ impl PowerAwareScheduler {
             node_specs,
             node_device,
             node_shard,
+            device_home_shard,
             devices,
             cfg,
             in_flight: AtomicUsize::new(0),
@@ -1077,6 +1246,18 @@ impl PowerAwareScheduler {
         }
         if let Some(h) = self.dispatcher.lock().unwrap().take() {
             let _ = h.join();
+            // Third validation layer for the steal knob (the CLI parser
+            // and `Config::from_json` are the other two): a disabled
+            // knob must leave no trace in the metrics.  Skipped during
+            // unwind — a double panic would abort instead of reporting
+            // the original failure.
+            if !self.shared.cfg.steal && !std::thread::panicking() {
+                assert_eq!(
+                    self.shared.metrics.lock().unwrap().steals,
+                    0,
+                    "steal=off scheduler recorded steals"
+                );
+            }
         }
     }
 }
@@ -1087,7 +1268,12 @@ impl Drop for PowerAwareScheduler {
     }
 }
 
-/// The single-writer event loop that owns all cluster state.
+/// The event loop that decides placement and release order.  Since the
+/// in-lane rework it owns no ledger state itself: every stripe's
+/// ledgers/free-lists/residents live in that stripe's [`lane_loop`]
+/// thread, and the dispatcher drives them through [`LaneCmd`]s — a
+/// distributed scan (Propose) merged sequentially here, a synchronous
+/// slot grant (Commit), and a fire-and-forget credit (Release).
 struct Dispatcher {
     shared: Arc<Shared>,
     rx: Receiver<Msg>,
@@ -1096,7 +1282,8 @@ struct Dispatcher {
     outcomes: Sender<JobOutcome>,
     pending: VecDeque<Admitted>,
     running: Vec<Running>,
-    ledger: ShardedLedger,
+    /// One placement lane per ledger stripe (index = stripe id).
+    lanes: Vec<Lane>,
     vclock_ms: f64,
     next_ticket: u64,
     /// Live worker threads keyed by ticket; reaped as reports arrive so
@@ -1112,7 +1299,17 @@ impl Dispatcher {
         inbox: Sender<Msg>,
         outcomes: Sender<JobOutcome>,
     ) -> Self {
-        let ledger = ShardedLedger::new(&shared.node_specs, &shared.node_shard);
+        let lanes: Vec<Lane> = build_stripes(&shared.node_specs, &shared.node_shard)
+            .into_iter()
+            .map(|shard| {
+                let (cmd_tx, cmd_rx) = channel();
+                let (rep_tx, rep_rx) = channel();
+                let shared = Arc::clone(&shared);
+                let handle =
+                    std::thread::spawn(move || lane_loop(&shared, shard, cmd_rx, rep_tx));
+                Lane { tx: cmd_tx, rx: rep_rx, handle: Some(handle) }
+            })
+            .collect();
         Dispatcher {
             shared,
             rx,
@@ -1120,7 +1317,7 @@ impl Dispatcher {
             outcomes,
             pending: VecDeque::new(),
             running: Vec::new(),
-            ledger,
+            lanes,
             vclock_ms: 0.0,
             next_ticket: 0,
             workers: HashMap::new(),
@@ -1177,6 +1374,17 @@ impl Dispatcher {
         }
         for (_, h) in self.workers.drain() {
             let _ = h.join();
+        }
+        // Park the stripe lanes only after every worker has reported:
+        // joining them flushes all in-flight metric updates and
+        // re-plans, so a post-shutdown `metrics()` read is complete.
+        for lane in &self.lanes {
+            let _ = lane.tx.send(LaneCmd::Quit);
+        }
+        for lane in &mut self.lanes {
+            if let Some(h) = lane.handle.take() {
+                let _ = h.join();
+            }
         }
     }
 
@@ -1532,39 +1740,47 @@ impl Dispatcher {
     }
 
     /// Place pending jobs (FIFO, no overtaking) while the head fits on
-    /// some node whose device the head has a plan for.
+    /// some node whose device the head has a plan for.  The scan is
+    /// distributed: every stripe lane proposes its admissible
+    /// (node, headroom) candidates in parallel, and the dispatcher
+    /// replays the exact sequential best-headroom comparison over the
+    /// merged list in global node order — byte-identical to a
+    /// single-threaded scan for every shard count.  (A per-stripe
+    /// argmax would not be: an epsilon-chain of near-equal headrooms
+    /// resolves differently when compared in a different order.)
     fn try_place(&mut self) {
         loop {
             let Some(head) = self.pending.front() else {
                 break;
             };
+            let p90_by_device: Vec<Option<f64>> = head
+                .plans
+                .iter()
+                .map(|p| p.as_ref().map(|p| p.predicted_p90_w))
+                .collect();
+            for lane in &self.lanes {
+                lane.tx
+                    .send(LaneCmd::Propose { p90_by_device: p90_by_device.clone() })
+                    .expect("stripe lane alive");
+            }
+            let mut cands: Vec<(usize, f64)> = Vec::new();
+            for lane in &self.lanes {
+                match lane.rx.recv().expect("stripe lane alive") {
+                    LaneReply::Candidates(mut c) => cands.append(&mut c),
+                    LaneReply::Granted(_) => unreachable!("Propose replies with Candidates"),
+                }
+            }
+            // Stripes interleave in global node order; restore it before
+            // the sequential comparison.
+            cands.sort_unstable_by_key(|&(ni, _)| ni);
             let mut best: Option<(usize, f64)> = None; // (node, headroom)
-            // Global node order, routed through the shard map: placement
-            // reads each node's ledger from its owning shard but compares
-            // candidates in the same order regardless of shard count, so
-            // the chosen node — and the outcome table — never depend on
-            // how the fleet was striped.
-            for i in 0..self.shared.node_specs.len() {
-                let n = self.ledger.node(i);
-                if n.free.is_empty() {
-                    continue;
-                }
-                let Some(plan) = &head.plans[self.shared.node_device[i]] else {
-                    continue; // incompatible device for this job
-                };
-                let budget = self.shared.node_specs[i].power_budget_w;
-                let admissible = n.resident.is_empty()
-                    || n.ledger_w + plan.predicted_p90_w <= budget + 1e-9;
-                if !admissible {
-                    continue;
-                }
-                let headroom = budget - n.ledger_w;
+            for &(ni, headroom) in &cands {
                 let better = match best {
                     None => true,
                     Some((_, h)) => headroom > h + 1e-12,
                 };
                 if better {
-                    best = Some((i, headroom));
+                    best = Some((ni, headroom));
                 }
             }
             match best {
@@ -1585,24 +1801,31 @@ impl Dispatcher {
         }
     }
 
-    /// Debit the ledger, hand out a GPU slot, and start execution.
+    /// Debit the ledger (in the owning stripe's lane) and start
+    /// execution.  The lane replies with the granted GPU slot id
+    /// immediately, then runs the peak metrics and the co-location
+    /// re-plan on its own thread — off this, the steady-state critical
+    /// path.
     fn place(&mut self, adm: Admitted, ni: usize) {
         let di = self.shared.node_device[ni];
         let plan = adm.plans[di]
             .clone()
             .expect("try_place only selects nodes the job has a plan for");
-        let gpu = self.ledger.node_mut(ni).free.remove(0); // lowest free device id
-        {
-            let node = self.ledger.node_mut(ni);
-            node.ledger_w += plan.predicted_p90_w;
-            node.resident.push(adm.job.id);
-            let ledger_w = node.ledger_w;
-            let mut m = self.shared.metrics.lock().unwrap();
-            m.node_peak_admitted_p90_w[ni] = m.node_peak_admitted_p90_w[ni].max(ledger_w);
-            m.peak_admitted_p90_w = m.peak_admitted_p90_w.max(ledger_w);
-            if plan.transferred {
-                m.transfers += 1;
-            }
+        let lane = &self.lanes[self.shared.node_shard[ni]];
+        lane.tx
+            .send(LaneCmd::Commit {
+                node: ni,
+                job_id: adm.job.id,
+                p90_w: plan.predicted_p90_w,
+                neighbor: plan.pwr_neighbor.clone(),
+            })
+            .expect("stripe lane alive");
+        let gpu = match lane.rx.recv().expect("stripe lane alive") {
+            LaneReply::Granted(g) => g,
+            LaneReply::Candidates(_) => unreachable!("Commit replies with Granted"),
+        };
+        if plan.transferred {
+            self.shared.metrics.lock().unwrap().transfers += 1;
         }
         let ticket = self.next_ticket;
         self.next_ticket += 1;
@@ -1639,7 +1862,6 @@ impl Dispatcher {
         if needs_worker {
             self.spawn_worker(self.running.len() - 1);
         }
-        self.replan(ni);
     }
 
     /// Spawn the execution worker for `running[idx]` on its node's
@@ -1709,18 +1931,19 @@ impl Dispatcher {
                 std::thread::sleep(Duration::from_micros(us));
             }
         }
-        let shard = self.ledger.shard_of(r.node);
-        {
-            let node = self.ledger.node_mut(r.node);
-            node.ledger_w = (node.ledger_w - r.plan.predicted_p90_w).max(0.0);
-            let pos = node
-                .free
-                .binary_search(&r.gpu)
-                .expect_err("GPU slot double-free: id already in free-list");
-            node.free.insert(pos, r.gpu);
-            node.resident.retain(|&id| id != r.job.id);
-        }
-        self.replan(r.node);
+        let shard = self.shared.node_shard[r.node];
+        // Fire-and-forget credit: the owning lane returns the slot,
+        // credits the ledger, and re-plans on its own thread.  Lane FIFO
+        // guarantees every later Propose of this stripe sees the credit.
+        self.lanes[shard]
+            .tx
+            .send(LaneCmd::Release {
+                node: r.node,
+                job_id: r.job.id,
+                p90_w: r.plan.predicted_p90_w,
+                gpu: r.gpu,
+            })
+            .expect("stripe lane alive");
         let dev = &self.shared.devices[self.shared.node_device[r.node]];
         match r.exec.expect("release_min before execution reported") {
             Ok(e) => {
@@ -1767,35 +1990,6 @@ impl Dispatcher {
         self.shared.in_flight.fetch_sub(1, Ordering::SeqCst);
     }
 
-    /// Recompute the co-located cap vector for node `ni` from each
-    /// resident's power-neighbor scaling data.  Transfer-served nodes
-    /// skip the re-plan: their neighbors' curves live in the source
-    /// device's frequency domain, so a co-location plan would quote
-    /// out-of-range caps.
-    fn replan(&self, ni: usize) {
-        let di = self.shared.node_device[ni];
-        let dev = &self.shared.devices[di];
-        let names: Vec<&str> = self
-            .running
-            .iter()
-            .filter(|r| r.node == ni)
-            .map(|r| r.plan.pwr_neighbor.as_str())
-            .collect();
-        let mut m = self.shared.metrics.lock().unwrap();
-        if names.is_empty() || !dev.native {
-            m.node_plans[ni] = None;
-            return;
-        }
-        if let Some(p) = nodecap::plan(
-            &dev.refset,
-            &names,
-            self.shared.node_specs[ni].power_budget_w,
-            self.shared.cfg.policy,
-        ) {
-            m.replans += 1;
-            m.node_plans[ni] = Some(p);
-        }
-    }
 }
 
 #[cfg(test)]

@@ -37,4 +37,4 @@ pub mod batch;
 pub mod pool;
 
 pub use batch::{par_map, par_map_indexed, par_map_jobs};
-pub use pool::{available_parallelism, current_jobs, set_jobs, WorkerPool};
+pub use pool::{available_parallelism, current_jobs, set_jobs, StealQueues, WorkerPool};

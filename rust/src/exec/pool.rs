@@ -1,6 +1,9 @@
 //! The scoped-thread worker pool: work-stealing chunk dispatch with
-//! index-ordered (deterministic) result collection.
+//! index-ordered (deterministic) result collection, plus the
+//! owner/thief deque primitive ([`StealQueues`]) for pre-partitioned
+//! work with a home-affinity seed.
 
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
@@ -134,6 +137,100 @@ impl WorkerPool {
     }
 }
 
+/// Owner/thief deques for group-granular work stealing.
+///
+/// The shared-cursor chunking of [`WorkerPool`] balances *homogeneous*
+/// item streams; `StealQueues` is the complementary discipline for
+/// *pre-partitioned* work, where each worker has a home queue (seeded
+/// by affinity — e.g. the coordinator's device→stripe map) and load
+/// imbalance is the exception: the owner drains its queue
+/// front-to-back (FIFO, preserving the seeded order), and a worker
+/// whose queue runs dry steals one item from the **back** of the
+/// longest sibling queue — the deque split that minimizes owner/thief
+/// contention.  Stealing moves work between threads, never between
+/// results: callers write results by item index, so output is
+/// steal-schedule-invariant as long as each item computes a pure
+/// function — the same contract the chunked pool relies on.
+pub struct StealQueues<T> {
+    queues: Vec<Mutex<VecDeque<T>>>,
+    steals: AtomicUsize,
+}
+
+impl<T> StealQueues<T> {
+    /// `workers` empty home queues (clamped to at least 1).
+    pub fn new(workers: usize) -> Self {
+        StealQueues {
+            queues: (0..workers.max(1)).map(|_| Mutex::new(VecDeque::new())).collect(),
+            steals: AtomicUsize::new(0),
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.queues.len()
+    }
+
+    /// Seed one item onto worker `home`'s queue (homes past the worker
+    /// count wrap).  Owners drain front-to-back, so seeding order is
+    /// the owner's execution order.
+    pub fn seed(&self, home: usize, item: T) {
+        self.queues[home % self.queues.len()]
+            .lock()
+            .expect("steal queue poisoned")
+            .push_back(item);
+    }
+
+    /// The owner's pop: the front of its own queue.
+    pub fn pop_own(&self, w: usize) -> Option<T> {
+        self.queues[w].lock().expect("steal queue poisoned").pop_front()
+    }
+
+    /// A thief's pop: the back of the longest sibling queue (ties go to
+    /// the lowest worker id, so victim choice is deterministic for a
+    /// fixed queue snapshot — though which thief arrives first is not,
+    /// which is why callers must keep per-item results
+    /// schedule-invariant).  Returns `None` only when every sibling
+    /// queue was empty at scan time.
+    pub fn steal(&self, w: usize) -> Option<T> {
+        loop {
+            let mut victim: Option<(usize, usize)> = None; // (len, worker)
+            for (i, q) in self.queues.iter().enumerate() {
+                if i == w {
+                    continue;
+                }
+                let len = q.lock().expect("steal queue poisoned").len();
+                let better = match victim {
+                    None => len > 0,
+                    Some((bl, _)) => len > bl,
+                };
+                if better {
+                    victim = Some((len, i));
+                }
+            }
+            let (_, vi) = victim?;
+            // The victim may have drained between the scan and this
+            // lock; rescan rather than give up, so `None` really means
+            // "nothing left anywhere".
+            if let Some(item) =
+                self.queues[vi].lock().expect("steal queue poisoned").pop_back()
+            {
+                self.steals.fetch_add(1, Ordering::Relaxed);
+                return Some(item);
+            }
+        }
+    }
+
+    /// Pop for worker `w`: own queue first, then (when allowed) steal.
+    pub fn pop(&self, w: usize, allow_steal: bool) -> Option<T> {
+        self.pop_own(w)
+            .or_else(|| if allow_steal { self.steal(w) } else { None })
+    }
+
+    /// Number of successful steals so far.
+    pub fn steals(&self) -> usize {
+        self.steals.load(Ordering::Relaxed)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -206,6 +303,41 @@ mod tests {
     fn current_jobs_is_positive() {
         assert!(current_jobs() >= 1);
         assert!(available_parallelism() >= 1);
+    }
+
+    #[test]
+    fn steal_queues_owner_fifo_thief_lifo() {
+        let q: StealQueues<u32> = StealQueues::new(2);
+        for x in [1, 2, 3] {
+            q.seed(0, x);
+        }
+        assert_eq!(q.pop_own(0), Some(1), "owner drains front-to-back");
+        assert_eq!(q.steal(1), Some(3), "thief takes the back");
+        assert_eq!(q.steals(), 1);
+        assert_eq!(q.pop(0, false), Some(2));
+        assert_eq!(q.pop(0, false), None, "steal disabled: home queue only");
+        assert_eq!(q.steal(1), None);
+    }
+
+    #[test]
+    fn steal_targets_longest_queue_and_home_wraps() {
+        let q: StealQueues<u32> = StealQueues::new(3);
+        q.seed(0, 10);
+        q.seed(1, 20);
+        q.seed(1, 21);
+        q.seed(4, 30); // wraps to worker 1 → queue 1 is the longest
+        assert_eq!(q.workers(), 3);
+        assert_eq!(q.steal(2), Some(30));
+        assert_eq!(q.steal(2), Some(21));
+        assert_eq!(q.steal(2), Some(10), "queue 0 is the only one left");
+        assert_eq!(q.steals(), 3);
+        assert_eq!(q.pop(2, true), Some(20), "pop falls back to stealing");
+        assert_eq!(q.pop(2, true), None);
+        assert_eq!(q.steals(), 4);
+        // zero workers clamps instead of panicking on the modulo
+        let z: StealQueues<u32> = StealQueues::new(0);
+        z.seed(7, 1);
+        assert_eq!(z.pop(0, true), Some(1));
     }
 
     #[test]

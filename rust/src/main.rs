@@ -17,8 +17,8 @@
 //!   experiment <id>                   fig1..fig12, table1, table2,
 //!                                     headline, streaming, transfer, all
 //!   serve [--queue a,b@a100,c | --load N] [--iterations N]
-//!         [--nodes N | --nodes-mixed] [--shards N] [--policy uniform|minos]
-//!         [--budget W]
+//!         [--nodes N | --nodes-mixed] [--shards N] [--steal on|off]
+//!         [--policy uniform|minos] [--budget W]
 //!   fleet <build|stats|transfer>      per-device registries + cross-device
 //!                                     class transfer
 //!   verify-artifacts                  PJRT vs native cross-check
@@ -61,9 +61,9 @@ const USAGE: &str = "usage: minos [--config FILE] [--jobs N] [--allow-stale] [--
          (dir: one stream per trace file, tag = file stem; '-': interleaved
           tagged stdin lines 'tag[,t_ms],watts'; prints a fleet decision digest)
   serve [--queue a,b@a100,c@mi300x | --load N] [--iterations N] [--nodes N] [--nodes-mixed]
-        [--shards N] [--policy uniform|minos] [--admission stream|batch] [--budget W]
-        [--search flat|class]    (queue entries pin devices with wl@device;
-         the outcome table is byte-identical for every --shards value)
+        [--shards N] [--steal on|off] [--policy uniform|minos] [--admission stream|batch]
+        [--budget W] [--search flat|class]    (queue entries pin devices with wl@device;
+         the outcome table is byte-identical for every --shards and --steal value)
   registry <build|inspect|stats|absorb <workload>> [--file SNAPSHOT.json] [--out FILE]
   fleet <build|stats> [--devices mi300x,a100] [--out DIR]
   fleet transfer [--from mi300x] [--to a100] [--calib K]";
@@ -1060,6 +1060,18 @@ fn main() -> anyhow::Result<()> {
                 "--shards must be >= 1 (the outcome table is byte-identical for every \
                  value, so 0 has no meaning)"
             );
+            let steal = match args.flag("--steal") {
+                None => config.steal,
+                Some(v) => match v.as_str() {
+                    "on" => true,
+                    "off" => false,
+                    other => anyhow::bail!(
+                        "--steal expects 'on' or 'off', got '{other}' (the outcome table \
+                         is byte-identical either way; the knob only trades steady-state \
+                         throughput for strict stripe isolation)"
+                    ),
+                },
+            };
             let budget = parse_flag::<f64>(&mut args, "--budget")?;
             let policy = match args.flag("--policy") {
                 None => CapPolicy::MinosAware,
@@ -1146,7 +1158,7 @@ fn main() -> anyhow::Result<()> {
                 .collect::<Vec<_>>()
                 .join("+");
             println!(
-                "serve: {} jobs on {} node(s) [{}] | {} shard(s) | policy {} | admission {} | {} search",
+                "serve: {} jobs on {} node(s) [{}] | {} shard(s) (steal {}) | policy {} | admission {} | {} search",
                 list.len(),
                 resolved.len(),
                 resolved
@@ -1155,6 +1167,7 @@ fn main() -> anyhow::Result<()> {
                     .collect::<Vec<_>>()
                     .join(", "),
                 shards,
+                if steal { "on" } else { "off" },
                 policy.label(),
                 admission.label(),
                 search.label()
@@ -1171,6 +1184,7 @@ fn main() -> anyhow::Result<()> {
                 minos: config.minos.clone(),
                 sim_ms_per_wall_ms: 0.0,
                 shards,
+                steal,
             };
             let sched = PowerAwareScheduler::with_fleet(cfg, fleet);
             for (i, (wl, dev)) in list.iter().enumerate() {

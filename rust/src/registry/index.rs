@@ -49,6 +49,65 @@ fn angle(cos_dist: f64) -> f64 {
     (1.0 - cos_dist).clamp(-1.0, 1.0).acos()
 }
 
+/// Width of the query-side register block in the batched kernel.
+const QBLOCK: usize = 4;
+
+/// Dot products of up to [`QBLOCK`] query vectors against one reference
+/// row, unroll-and-jammed *across queries*: a single pass over the row's
+/// dims drives one independent accumulator per query.  Every accumulator
+/// sums `q[d] * row[d]` for ascending `d` starting from `0.0` — the
+/// exact accumulation order of [`cos_dist`]'s `zip(..).sum()` — so each
+/// per-query dot is bit-identical to the one-at-a-time path.  Blocking
+/// only changes *which query* a given multiply feeds, never the order of
+/// adds within one dot, so no reassociation ever happens.
+fn dots_block(qs: &[&[f64]], row: &[f64]) -> [f64; QBLOCK] {
+    let mut acc = [0.0f64; QBLOCK];
+    let n = row.len();
+    if let [q0, q1, q2, q3] = qs {
+        if q0.len() >= n && q1.len() >= n && q2.len() >= n && q3.len() >= n {
+            for (d, &r) in row.iter().enumerate() {
+                acc[0] += q0[d] * r;
+                acc[1] += q1[d] * r;
+                acc[2] += q2[d] * r;
+                acc[3] += q3[d] * r;
+            }
+            return acc;
+        }
+    }
+    // Partial block (batch tail) or a malformed short vector: fall back
+    // to the scalar zip, which truncates exactly like `cos_dist`.
+    for (a, q) in acc.iter_mut().zip(qs) {
+        *a = q.iter().zip(row).map(|(x, y)| x * y).sum();
+    }
+    acc
+}
+
+/// The flat scan's first-wins best/second update, factored out so the
+/// scalar refine and the blocked batch refine share one definition of
+/// "better" (lexicographic (distance, refset index)).
+fn push_candidate(
+    cand: (usize, f64),
+    best: &mut Option<(usize, f64)>,
+    second: &mut Option<(usize, f64)>,
+    order: &[usize],
+) {
+    let better = |a: (usize, f64), bst: (usize, f64)| -> bool {
+        a.1 < bst.1 || (a.1 == bst.1 && order[a.0] < order[bst.0])
+    };
+    match *best {
+        None => *best = Some(cand),
+        Some(bst) if better(cand, bst) => {
+            *second = Some(bst);
+            *best = Some(cand);
+        }
+        Some(_) => match *second {
+            None => *second = Some(cand),
+            Some(sec) if better(cand, sec) => *second = Some(cand),
+            Some(_) => {}
+        },
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct VectorIndex {
     bin_sizes: Vec<f64>,
@@ -231,13 +290,17 @@ impl VectorIndex {
         self.refine_ranked(refset, tv, exclude_app, b, &cd)
     }
 
-    /// Batched top-2: one SoA pass over the class centroids for *all*
-    /// targets (class-major outer loop, so each centroid row is streamed
-    /// once per batch instead of once per job), then the per-target
-    /// refine identical to [`VectorIndex::top2`].  Bit-exact against
-    /// per-job queries by construction — both paths share
-    /// [`VectorIndex::refine_ranked`] and the centroid arithmetic is the
-    /// same `cos_dist` call in the same order.
+    /// Batched top-2: a register-blocked SoA pass over the class
+    /// centroids for *all* targets (class-major outer loop streams each
+    /// centroid row once per batch; [`dots_block`] jams [`QBLOCK`] query
+    /// accumulators into that single pass), then a round-based blocked
+    /// refine that computes member-slot distances [`QBLOCK`] queries at
+    /// a time.  Bit-exact against per-job [`VectorIndex::top2`] queries
+    /// by construction: every per-query dot keeps the scalar accumulation
+    /// order (blocking never reassociates within one dot), the ε floors
+    /// are applied to the same operands, prune decisions replay the
+    /// scalar cursor walk, and best/second updates go through the shared
+    /// [`push_candidate`] in the same slot order.
     pub fn query_batch<'a>(
         &self,
         refset: &'a ReferenceSet,
@@ -248,23 +311,170 @@ impl VectorIndex {
             return targets.iter().map(|_| None).collect();
         };
         let k = self.ranges.len();
+        let nt = targets.len();
+        // ε-floored query norms, hoisted out of every row pass (the
+        // scalar path re-floors per cos_dist call; max is idempotent so
+        // hoisting is bit-neutral).
+        let tnorm: Vec<f64> = targets.iter().map(|&(tv, _)| tv.norm.max(1e-12)).collect();
         // centroid-distance matrix, filled class-major: dist[t][ci]
-        let mut dist = vec![vec![0.0f64; k]; targets.len()];
+        let mut dist = vec![vec![0.0f64; k]; nt];
         for ci in 0..k {
             let cv = &self.centroids[b][ci * NBINS..(ci + 1) * NBINS];
-            let cn = self.centroid_norms[b][ci];
-            for (t, &(tv, _)) in targets.iter().enumerate() {
-                dist[t][ci] = cos_dist(&tv.v, tv.norm, cv, cn);
+            let cn = self.centroid_norms[b][ci].max(1e-12);
+            let mut t = 0;
+            while t < nt {
+                let hi = (t + QBLOCK).min(nt);
+                let qs: Vec<&[f64]> =
+                    targets[t..hi].iter().map(|&(tv, _)| tv.v.as_slice()).collect();
+                let dots = dots_block(&qs, cv);
+                for (j, tt) in (t..hi).enumerate() {
+                    dist[tt][ci] = 1.0 - dots[j] / (tnorm[tt] * cn);
+                }
+                t = hi;
             }
         }
-        targets
+        let ranks: Vec<Vec<(usize, f64)>> = dist
             .iter()
-            .zip(&dist)
-            .map(|(&(tv, exclude_app), row)| {
+            .map(|row| {
                 let mut cd: Vec<(usize, f64)> =
                     row.iter().enumerate().map(|(ci, &d)| (ci, d)).collect();
                 cd.sort_by(|x, y| x.1.total_cmp(&y.1).then(x.0.cmp(&y.0)));
-                self.refine_ranked(refset, tv, exclude_app, b, &cd)
+                cd
+            })
+            .collect();
+        self.refine_batch(refset, targets, &tnorm, b, &ranks)
+    }
+
+    /// Blocked counterpart of [`VectorIndex::refine_ranked`], operating
+    /// on the whole batch in rounds.  Each round, every unfinished
+    /// target walks its own centroid ranking — applying the identical
+    /// prune test with its *current* runner-up, exactly as the scalar
+    /// cursor would — until it names the next class it must scan (or
+    /// exhausts the ranking).  Requests are then grouped by class so
+    /// member rows are streamed once per group with [`QBLOCK`]-wide
+    /// query blocks.  Per target, the candidate sequence (slot order
+    /// within each class, classes in its own ranked order, runner-up
+    /// state at every prune decision) is identical to the scalar walk,
+    /// so results — including `classes_scanned` — are bit-exact.
+    fn refine_batch<'a>(
+        &self,
+        refset: &'a ReferenceSet,
+        targets: &[(&SpikeVector, Option<&str>)],
+        tnorm: &[f64],
+        b: usize,
+        ranks: &[Vec<(usize, f64)>],
+    ) -> Vec<Option<IndexHit<'a>>> {
+        struct Refine {
+            cursor: usize,
+            best: Option<(usize, f64)>,
+            second: Option<(usize, f64)>,
+            scanned: usize,
+            done: bool,
+        }
+        let mut states: Vec<Refine> = ranks
+            .iter()
+            .map(|cd| Refine {
+                cursor: 0,
+                best: None,
+                second: None,
+                scanned: 0,
+                done: cd.is_empty(),
+            })
+            .collect();
+        loop {
+            // (class, target) scan requests for this round, produced in
+            // target order then stably grouped by class.
+            let mut requests: Vec<(usize, usize)> = Vec::new();
+            for (t, st) in states.iter_mut().enumerate() {
+                if st.done {
+                    continue;
+                }
+                let cd = &ranks[t];
+                let mut next = None;
+                while st.cursor < cd.len() {
+                    let (ci, dc) = cd[st.cursor];
+                    st.cursor += 1;
+                    if let Some((_, d2)) = st.second {
+                        // Same bound and ε slack as the scalar refine.
+                        let lb = 1.0 - (angle(dc) - self.radii[b][ci]).max(0.0).cos();
+                        if lb > d2 + 1e-9 {
+                            continue;
+                        }
+                    }
+                    next = Some(ci);
+                    break;
+                }
+                match next {
+                    Some(ci) => {
+                        st.scanned += 1;
+                        requests.push((ci, t));
+                    }
+                    None => st.done = true,
+                }
+            }
+            if requests.is_empty() {
+                break;
+            }
+            // (class, target) tuple order groups by class, targets
+            // ascending within each group — fully deterministic.
+            requests.sort_unstable();
+            let mut r = 0;
+            while r < requests.len() {
+                let ci = requests[r].0;
+                let mut r1 = r;
+                while r1 < requests.len() && requests[r1].0 == ci {
+                    r1 += 1;
+                }
+                let group = &requests[r..r1];
+                let (s0, s1) = self.ranges[ci];
+                for chunk in group.chunks(QBLOCK) {
+                    let qs: Vec<&[f64]> =
+                        chunk.iter().map(|&(_, t)| targets[t].0.v.as_slice()).collect();
+                    for slot in s0..s1 {
+                        let e = &refset.entries[self.order[slot]];
+                        if !e.power_profiled {
+                            continue;
+                        }
+                        let mv = &self.vecs[b][slot * NBINS..(slot + 1) * NBINS];
+                        let mn = self.norms[b][slot].max(1e-12);
+                        let dots = dots_block(&qs, mv);
+                        for (j, &(_, t)) in chunk.iter().enumerate() {
+                            if targets[t].1.map(|a| e.app == a).unwrap_or(false) {
+                                continue;
+                            }
+                            let d = 1.0 - dots[j] / (tnorm[t] * mn);
+                            let st = &mut states[t];
+                            push_candidate((slot, d), &mut st.best, &mut st.second, &self.order);
+                        }
+                    }
+                }
+                r = r1;
+            }
+        }
+        states
+            .iter()
+            .zip(ranks)
+            .map(|(st, cd)| {
+                let (bslot, bd) = st.best?;
+                let class_margin = match (cd.first(), cd.get(1)) {
+                    (Some(&(_, d1)), Some(&(_, d2))) if d2 > 0.0 => {
+                        ((d2 - d1) / d2).clamp(0.0, 1.0)
+                    }
+                    (Some(_), Some(_)) => 0.0,
+                    _ => 1.0,
+                };
+                let class_id = self
+                    .ranges
+                    .iter()
+                    .position(|&(s0, s1)| (s0..s1).contains(&bslot))
+                    .expect("slot outside every class range");
+                Some(IndexHit {
+                    best: (&refset.entries[self.order[bslot]], bd),
+                    runner_up: st.second.map(|(slot, d)| (&refset.entries[self.order[slot]], d)),
+                    class_id,
+                    class_margin,
+                    classes_scanned: st.scanned,
+                })
             })
             .collect()
     }
@@ -288,11 +498,6 @@ impl VectorIndex {
             (Some(&(_, d1)), Some(&(_, d2))) if d2 > 0.0 => ((d2 - d1) / d2).clamp(0.0, 1.0),
             (Some(_), Some(_)) => 0.0,
             _ => 1.0,
-        };
-        // Lexicographic (distance, refset index) ordering reproduces the
-        // flat scan's strict-< first-wins tie-breaking exactly.
-        let better = |a: (usize, f64), bst: (usize, f64), order: &[usize]| -> bool {
-            a.1 < bst.1 || (a.1 == bst.1 && order[a.0] < order[bst.0])
         };
         let mut best: Option<(usize, f64)> = None;
         let mut second: Option<(usize, f64)> = None;
@@ -320,19 +525,7 @@ impl VectorIndex {
                 }
                 let mv = &self.vecs[b][slot * NBINS..(slot + 1) * NBINS];
                 let d = cos_dist(&tv.v, tv.norm, mv, self.norms[b][slot]);
-                let cand = (slot, d);
-                match best {
-                    None => best = Some(cand),
-                    Some(bst) if better(cand, bst, &self.order) => {
-                        second = Some(bst);
-                        best = Some(cand);
-                    }
-                    Some(_) => match second {
-                        None => second = Some(cand),
-                        Some(sec) if better(cand, sec, &self.order) => second = Some(cand),
-                        Some(_) => {}
-                    },
-                }
+                push_candidate((slot, d), &mut best, &mut second, &self.order);
             }
         }
         let (bslot, bd) = best?;
@@ -579,6 +772,37 @@ mod tests {
         let zv = SpikeVector::zeros(0.2);
         let none = idx.query_batch(&rs, &[(&zv, None)], 0.2);
         assert!(none[0].is_none());
+    }
+
+    /// Partial query blocks (batch sizes not divisible by the register
+    /// block width) go through the scalar-zip tail of `dots_block`; pin
+    /// that every batch size from 1 up stays bit-exact vs `top2`.
+    #[test]
+    fn partial_blocks_stay_bit_exact() {
+        let (rs, classes) = synth_refset(40, 5, 23);
+        let idx = VectorIndex::build(&rs, &classes, &[]).unwrap();
+        let mut rng = Rng::new(7);
+        let tvs: Vec<SpikeVector> = (0..7)
+            .map(|t| {
+                let p = t % 5;
+                let mut v = vec![0.0; NBINS];
+                v[4 * p] = 0.5 + rng.range(-0.2, 0.2);
+                v[4 * p + 1] = 0.5 + rng.range(-0.2, 0.2);
+                SpikeVector::new(v, 40.0, 0.1)
+            })
+            .collect();
+        for n in 1..=tvs.len() {
+            let targets: Vec<(&SpikeVector, Option<&str>)> =
+                tvs[..n].iter().map(|tv| (tv, None)).collect();
+            let batch = idx.query_batch(&rs, &targets, 0.1);
+            for (t, (&(tv, _), bh)) in targets.iter().zip(&batch).enumerate() {
+                let s = idx.top2(&rs, tv, None, 0.1).unwrap();
+                let b = bh.as_ref().unwrap();
+                assert_eq!(s.best.0.name, b.best.0.name, "n={n} t={t}");
+                assert_eq!(s.best.1.to_bits(), b.best.1.to_bits(), "n={n} t={t}");
+                assert_eq!(s.classes_scanned, b.classes_scanned, "n={n} t={t}");
+            }
+        }
     }
 
     #[test]

@@ -24,6 +24,17 @@
 //!   dedicated `OnlineClassifier` would have produced for that stream
 //!   alone, regardless of how streams interleave or how many samples a
 //!   poll batch delivers (`rust/tests/stream_mux.rs` pins this).
+//! * **Adaptive polling.**  When fewer than
+//!   [`MuxConfig::batch_threshold`] windows are queued, `poll` defers
+//!   classification and carries the queue to the next tick, so sparse
+//!   ticks amortize into one SoA batch instead of many tiny ones.
+//!   Deferral is capped at [`MuxConfig::max_defer_polls`] consecutive
+//!   ticks so decisions never starve.  Deferral moves only the tick a
+//!   decision *fires* on — never its content: snapshots were already
+//!   captured at their window boundaries, queue order is preserved,
+//!   and `classify_batch` is batch-size-invariant, so decisions stay
+//!   bit-identical to eager polling (pinned in
+//!   `rust/tests/stream_mux.rs`).
 //! * **Eviction + backpressure.**  Streams idle for
 //!   [`MuxConfig::idle_evict_polls`] polls are retired (LRU by last
 //!   activity); when the arena is full, `admit` evicts the
@@ -111,6 +122,14 @@ pub struct MuxConfig {
     /// Evict a stream after this many polls without a sample
     /// (0 = never evict on idleness).
     pub idle_evict_polls: u64,
+    /// Adaptive polling: a poll with fewer than this many queued window
+    /// snapshots defers classification to a later tick (1 = eager,
+    /// classify whatever is queued every poll — the default).
+    pub batch_threshold: usize,
+    /// Cap on *consecutive* deferred polls before a short queue is
+    /// classified anyway, so decisions never starve (only meaningful
+    /// when `batch_threshold > 1`).
+    pub max_defer_polls: u64,
 }
 
 impl MuxConfig {
@@ -119,6 +138,8 @@ impl MuxConfig {
             online,
             max_streams: 16_384,
             idle_evict_polls: 0,
+            batch_threshold: 1,
+            max_defer_polls: 4,
         }
     }
 
@@ -129,6 +150,20 @@ impl MuxConfig {
 
     pub fn with_idle_evict_polls(mut self, polls: u64) -> Self {
         self.idle_evict_polls = polls;
+        self
+    }
+
+    /// Enable adaptive polling: defer classification while fewer than
+    /// `threshold` windows are queued, for at most `max_defer_polls`
+    /// consecutive ticks.  Decisions are bit-identical to eager
+    /// polling; only the tick they fire on moves.  Caveat: combined
+    /// with idle eviction, keep `idle_evict_polls` above
+    /// `max_defer_polls` (or 0) — a stream that goes silent right
+    /// after queueing a window must not be swept before its deferred
+    /// snapshot classifies.
+    pub fn with_batch_threshold(mut self, threshold: usize, max_defer_polls: u64) -> Self {
+        self.batch_threshold = threshold.max(1);
+        self.max_defer_polls = max_defer_polls;
         self
     }
 }
@@ -148,6 +183,9 @@ pub struct MuxStats {
     pub decided: usize,
     pub evicted: u64,
     pub polls: u64,
+    /// Polls that deferred a short due queue instead of classifying
+    /// (adaptive polling; 0 under the eager default).
+    pub defers: u64,
     pub capacity: usize,
 }
 
@@ -191,6 +229,11 @@ pub struct StreamMux<'a> {
     due: Vec<PendingEval>,
     polls: u64,
     evicted: u64,
+    /// Consecutive polls that deferred the current short due queue
+    /// (reset whenever a poll classifies or finds nothing queued).
+    deferred_polls: u64,
+    /// Total deferred polls over the mux's lifetime.
+    defers: u64,
     /// Decision digests by tag (latest wins on readmission) — the
     /// tag-ordered source of [`StreamMux::fleet_digest`].
     decided: BTreeMap<String, u64>,
@@ -207,6 +250,8 @@ impl<'a> StreamMux<'a> {
             due: Vec::new(),
             polls: 0,
             evicted: 0,
+            deferred_polls: 0,
+            defers: 0,
             decided: BTreeMap::new(),
         }
     }
@@ -225,6 +270,7 @@ impl<'a> StreamMux<'a> {
             decided: self.decided.len(),
             evicted: self.evicted,
             polls: self.polls,
+            defers: self.defers,
             capacity: self.cfg.max_streams,
         }
     }
@@ -334,8 +380,25 @@ impl<'a> StreamMux<'a> {
     /// batch, apply the results per stream in queue order, then sweep
     /// idle streams.  Returns the decisions that fired this tick,
     /// sorted by tag.
+    ///
+    /// With `batch_threshold > 1`, a tick whose due queue is shorter
+    /// than the threshold defers: the queue is carried (in order) to
+    /// the next tick and nothing classifies, for at most
+    /// `max_defer_polls` consecutive ticks.  The poll counter and the
+    /// idle sweep still run on a deferred tick, so eviction semantics
+    /// are unchanged.
     pub fn poll(&mut self) -> Vec<MuxDecision> {
         self.polls += 1;
+        if !self.due.is_empty()
+            && self.due.len() < self.cfg.batch_threshold
+            && self.deferred_polls < self.cfg.max_defer_polls
+        {
+            self.deferred_polls += 1;
+            self.defers += 1;
+            self.sweep_idle();
+            return Vec::new();
+        }
+        self.deferred_polls = 0;
         let due = std::mem::take(&mut self.due);
         // Pre-filter stale handles (retired mid-interval) and streams
         // that decided before this poll; in-queue decisions are handled
@@ -668,6 +731,31 @@ mod tests {
         assert!(mux.offer_watt(a, 500.0).is_ok(), "active stream survives");
         assert!(mux.offer_watt(b, 500.0).is_err(), "idle stream was evicted");
         assert_eq!(mux.stats().evicted, 1);
+    }
+
+    #[test]
+    fn short_due_queues_defer_until_the_cap_then_flush() {
+        let rs = small_refset();
+        let params = MinosParams::default();
+        let mut mux = StreamMux::new(&rs, &params, cfg(4, 1).with_batch_threshold(8, 2));
+        let a = mux
+            .admit(StreamSpec::new("a", "faiss", UtilPoint::new(50.0, 30.0), Objective::PowerCentric))
+            .unwrap();
+        for _ in 0..4 {
+            mux.offer_watt(a, 500.0).unwrap();
+        }
+        assert_eq!(mux.due.len(), 1, "window boundary queued one snapshot");
+        mux.poll();
+        assert_eq!(mux.due.len(), 1, "short queue carried to the next tick");
+        mux.poll();
+        assert_eq!(mux.due.len(), 1, "still short, cap not yet reached");
+        assert_eq!(mux.stats().defers, 2);
+        mux.poll();
+        assert_eq!(mux.due.len(), 0, "deferral cap reached: queue flushed");
+        assert_eq!(mux.stats().defers, 2, "the flush tick is not a defer");
+        mux.poll(); // an empty queue never defers
+        assert_eq!(mux.stats().defers, 2);
+        assert_eq!(mux.stats().polls, 4);
     }
 
     #[test]

@@ -1,9 +1,11 @@
 //! Scale acceptance tests for the sharded batch-classifying
 //! coordinator: a 10k-job soak across 8 nodes with per-shard ledger
 //! asserts, byte-identical outcome tables for shards=1 vs shards=4
-//! across reruns (homogeneous and mixed clusters), batch-vs-single
-//! `VectorIndex` query bit-exactness over the full reference set, and
-//! rejection of an invalid shard count.
+//! across reruns (homogeneous and mixed clusters), a skewed 10k soak
+//! (90% of jobs pinned to one device family) byte-identical across
+//! shards × steal × reruns, batch-vs-single `VectorIndex` query
+//! bit-exactness over the full reference set, and rejection of an
+//! invalid shard count.
 
 use minos::config::{Config, GpuSpec, MinosParams, NodeSpec, SimParams};
 use minos::coordinator::{
@@ -117,6 +119,93 @@ fn soak_10k_jobs_8_nodes_with_per_shard_ledger_asserts() {
             peak <= m.node_budget_w_by_node[ni] + 1e-6,
             "node {ni} ledger peaked at {peak} W over its {} W budget",
             m.node_budget_w_by_node[ni]
+        );
+    }
+}
+
+/// 90% of jobs pinned to the primary device family, 10% to the
+/// transfer-served one — the skew that starves every stripe but the
+/// primary's of classification work, so idle lanes must steal to help.
+fn skewed_queue(n: usize) -> Vec<Job> {
+    (0..n as u64)
+        .map(|i| Job {
+            id: i,
+            workload: POOL[i as usize % POOL.len()].to_string(),
+            objective: if i % 2 == 0 {
+                Objective::PowerCentric
+            } else {
+                Objective::PerfCentric
+            },
+            iterations: 1,
+            device: Some(if i % 10 == 0 { "a100".into() } else { "mi300x".into() }),
+        })
+        .collect()
+}
+
+/// Mixed 8-node cluster with tight budgets on the primary nodes, so
+/// admission gates and the per-stripe ledgers stay under pressure.
+fn skewed_cfg(shards: usize, steal: bool) -> SchedulerConfig {
+    let cluster: Vec<NodeSpec> = (0..8)
+        .map(|i| {
+            if i % 2 == 0 {
+                let mut n = NodeSpec::hpc_fund();
+                n.gpus_per_node = 4;
+                n.power_budget_w = n.gpu.tdp_w * 3.0; // tight: admission must gate
+                n
+            } else {
+                NodeSpec::lonestar6()
+            }
+        })
+        .collect();
+    SchedulerConfig {
+        cluster: Some(cluster),
+        shards,
+        steal,
+        admission: AdmissionMode::Batch,
+        sim_ms_per_wall_ms: 0.0,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn skewed_soak_tables_invariant_across_shards_steal_and_reruns() {
+    let jobs = skewed_queue(10_000);
+    let mut tables = Vec::new();
+    // shards {1,4} × steal {on,off}, plus a rerun of the most
+    // concurrent setting — one byte-identical table for all of them.
+    let settings = [(1, true), (4, true), (4, true), (4, false), (1, false)];
+    for &(shards, steal) in &settings {
+        let (outcomes, m) = run(skewed_cfg(shards, steal), &jobs);
+        assert_eq!(outcomes.len(), 10_000, "shards {shards} steal {steal}");
+        assert_eq!(m.failed, 0, "shards {shards} steal {steal}");
+        assert!(m.transfers > 0, "a100-pinned jobs must exercise transfer serving");
+        if !steal {
+            assert_eq!(m.steals, 0, "steal=off must never steal (shards {shards})");
+        }
+        // Per-stripe ledger accounting stays exact under the tight
+        // budgets: completions partition across stripes, and every
+        // node's ledger peak is non-negative and within budget.
+        assert_eq!(
+            m.jobs_by_shard.iter().sum::<usize>(),
+            m.completed,
+            "shards {shards} steal {steal}: per-stripe counts must partition the total"
+        );
+        for (ni, &peak) in m.node_peak_admitted_p90_w.iter().enumerate() {
+            assert!(peak >= 0.0, "node {ni}: ledger peak went negative ({peak} W)");
+            assert!(
+                peak <= m.node_budget_w_by_node[ni] + 1e-6,
+                "node {ni} ledger peaked at {peak} W over its {} W budget (shards {shards} steal {steal})",
+                m.node_budget_w_by_node[ni]
+            );
+        }
+        tables.push(outcome_table(&outcomes));
+    }
+    for (i, t) in tables.iter().enumerate().skip(1) {
+        assert_eq!(
+            &tables[0], t,
+            "setting {:?} diverged from {:?}: the outcome table must be \
+             byte-identical across shard counts, the steal knob, and reruns",
+            settings[i], settings[0]
         );
     }
 }

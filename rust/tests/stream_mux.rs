@@ -105,9 +105,22 @@ fn mux_decisions(
     order: &[usize],
     chunk: usize,
 ) -> (BTreeMap<String, OnlineDecision>, u64) {
+    mux_decisions_with(MuxConfig::new(cfg), tenants, order, chunk)
+}
+
+/// [`mux_decisions`] with full control over the mux knobs (adaptive
+/// polling, eviction, ...); the stream objective comes from
+/// `mcfg.online.objective`.
+fn mux_decisions_with(
+    mcfg: MuxConfig,
+    tenants: &[Tenant],
+    order: &[usize],
+    chunk: usize,
+) -> (BTreeMap<String, OnlineDecision>, u64) {
+    let cfg = mcfg.online;
     let rs = refset();
     let params = MinosParams::default();
-    let mut mux = StreamMux::new(rs, &params, MuxConfig::new(cfg));
+    let mut mux = StreamMux::new(rs, &params, mcfg);
     let ids: Vec<_> = tenants
         .iter()
         .map(|t| {
@@ -202,6 +215,33 @@ fn interleaving_and_poll_batching_are_invisible() {
         let digests: BTreeMap<&String, u64> = run.iter().map(|(t, d)| (t, d.digest())).collect();
         assert_eq!(base_digests, digests, "run {i}: per-stream decisions diverged");
         assert_eq!(base_fleet, fleet, "run {i}: fleet digest diverged");
+    }
+}
+
+/// Adaptive polling (defer short due queues, cap the deferral streak)
+/// may move the tick a decision fires on, but never its content: every
+/// per-stream decision and the fleet digest must be bit-identical to
+/// the eager default, across thresholds and chunk sizes.
+#[test]
+fn adaptive_polling_is_bit_identical_to_eager() {
+    let tenants = profile_tenants(&["faiss-b4096", "sdxl-b64", "milc-6"]);
+    let cfg = OnlineConfig::new(256, 3, Objective::PowerCentric);
+    let order: Vec<usize> = (0..tenants.len()).collect();
+    for chunk in [64, 257] {
+        let (eager, eager_fleet) = mux_decisions_with(MuxConfig::new(cfg), &tenants, &order, chunk);
+        for (threshold, cap) in [(4, 2), (16, 3), (usize::MAX, 1)] {
+            let mcfg = MuxConfig::new(cfg).with_batch_threshold(threshold, cap);
+            let (adaptive, fleet) = mux_decisions_with(mcfg, &tenants, &order, chunk);
+            for t in &tenants {
+                assert_eq!(
+                    adaptive[&t.tag].digest(),
+                    eager[&t.tag].digest(),
+                    "{}: threshold {threshold} cap {cap} chunk {chunk} changed the decision",
+                    t.tag
+                );
+            }
+            assert_eq!(fleet, eager_fleet, "threshold {threshold} cap {cap} chunk {chunk}");
+        }
     }
 }
 

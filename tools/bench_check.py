@@ -18,14 +18,22 @@ Rules
   baseline supersedes older entries without deleting history.
 * A current bench with no baseline entry is reported as "new" and never
   fails the gate (that is how a bench lands in the same PR that adds it).
-* **Bootstrap mode**: when the baseline holds no smoke results at all,
-  the script prints the artifact as a paste-ready run entry and exits 0 —
-  the trajectory has to start somewhere.
+* **Previous-run fallback** (``--prev``): when the committed baseline has
+  no entry for a bench id, the gate falls back to that bench's smoke
+  entry in the previous CI run's downloaded ``bench-smoke.jsonl`` (the
+  CI workflow fetches it from the last successful main run).  The
+  committed baseline always wins when it has an entry; a missing or
+  unreadable ``--prev`` file is a warning, never a failure — fork PRs
+  and first runs have no artifact to download.
+* **Bootstrap mode**: when neither the baseline nor the ``--prev``
+  artifact holds any smoke results, the script prints the artifact as a
+  paste-ready run entry and exits 0 — the trajectory has to start
+  somewhere.
 
 Usage
 -----
     python3 tools/bench_check.py bench-smoke.jsonl BENCH_BASELINE.json \
-        [--threshold 0.25]
+        [--threshold 0.25] [--prev prev-bench-smoke.jsonl]
 """
 
 from __future__ import annotations
@@ -77,6 +85,13 @@ def main(argv: list[str]) -> int:
         help="fail when mean_ns exceeds baseline by more than this fraction "
         "(default: 0.25 = +25%%)",
     )
+    ap.add_argument(
+        "--prev",
+        default=None,
+        help="bench-smoke.jsonl downloaded from the previous CI run; used as "
+        "the fallback baseline for bench ids the committed baseline has no "
+        "entry for (missing/unreadable file is a warning, not a failure)",
+    )
     args = ap.parse_args(argv)
 
     current = [r for r in load_artifact(args.artifact) if r.get("smoke")]
@@ -88,19 +103,38 @@ def main(argv: list[str]) -> int:
         baseline = json.load(fh)
     means = baseline_means(baseline)
 
+    prev_means: dict[str, float] = {}
+    if args.prev:
+        try:
+            prev_means = {
+                r["name"]: float(r["mean_ns"])
+                for r in load_artifact(args.prev)
+                if r.get("smoke")
+            }
+            print(
+                f"bench_check: previous-run artifact loaded "
+                f"({len(prev_means)} smoke entries from {args.prev})"
+            )
+        except (OSError, SystemExit, ValueError) as e:
+            print(
+                f"bench_check: --prev artifact unavailable ({e}) — "
+                "gating against the committed baseline only"
+            )
+
     if not means:
-        # Bootstrap: no recorded smoke results anywhere in the baseline.
+        # No recorded smoke results in the committed baseline: print the
+        # paste-ready refresh entry either way, then either bootstrap
+        # (nothing at all to compare against) or gate vs the previous run.
         print(
-            "bench_check: baseline has no recorded smoke results yet — "
-            "bootstrap mode (gate passes)."
-        )
-        print(
-            "Paste-ready run entry for BENCH_BASELINE.json "
-            "(fill in the PR number):"
+            "bench_check: committed baseline has no recorded smoke results — "
+            "paste-ready run entry for BENCH_BASELINE.json (fill in the PR number):"
         )
         entry = {"pr": 0, "note": "recorded from CI bench-smoke.jsonl", "results": current}
         print(json.dumps(entry, indent=2))
-        return 0
+        if not prev_means:
+            print("bench_check: no previous-run artifact either — bootstrap mode (gate passes).")
+            return 0
+        print("bench_check: gating against the previous CI run's artifact instead.")
 
     regressions = []
     improvements = 0
@@ -109,19 +143,23 @@ def main(argv: list[str]) -> int:
         name = rec["name"]
         cur = float(rec["mean_ns"])
         base = means.get(name)
+        src = "baseline"
+        if base is None and name in prev_means:
+            base = prev_means[name]
+            src = "prev run"
         if base is None:
             new += 1
-            print(f"  NEW      {name}: {cur:.0f} ns (no baseline entry)")
+            print(f"  NEW      {name}: {cur:.0f} ns (no baseline or prev-run entry)")
             continue
         ratio = cur / base if base > 0 else float("inf")
         delta = (ratio - 1.0) * 100.0
         if base > 0 and ratio > 1.0 + args.threshold:
             regressions.append((name, base, cur, delta))
-            print(f"  REGRESS  {name}: {base:.0f} -> {cur:.0f} ns ({delta:+.1f}%)")
+            print(f"  REGRESS  {name}: {base:.0f} -> {cur:.0f} ns ({delta:+.1f}%) [{src}]")
         else:
             if ratio < 1.0:
                 improvements += 1
-            print(f"  ok       {name}: {base:.0f} -> {cur:.0f} ns ({delta:+.1f}%)")
+            print(f"  ok       {name}: {base:.0f} -> {cur:.0f} ns ({delta:+.1f}%) [{src}]")
 
     print(
         f"bench_check: {len(current)} benches, {len(regressions)} regression(s), "
