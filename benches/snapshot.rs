@@ -1,0 +1,210 @@
+//! Cold-start bench for the binary snapshot format (README § "Instant
+//! start"): binary load vs JSON load vs a full in-memory rebuild, for
+//! the reference set and the class registry at 1×/10× synthetic sizes,
+//! plus [`FleetStore::load_dir`] vs a per-device registry rebuild.
+//! Correctness-gated: every loaded artifact is asserted digest- and
+//! decision-identical to the built one before anything is timed.
+//!
+//! The headline claim: `ClassRegistry::load_bin` decodes the *built*
+//! state (classes, sweep, SoA vector index with cached norms/centroids)
+//! verbatim, skipping the O(n³) silhouette sweep and index rebuild the
+//! JSON path re-runs — ≥10× faster than the rebuild at the 10× size.
+//!
+//! Run with: `cargo bench --bench snapshot`
+
+use minos::benchkit::{bench, black_box, group};
+use minos::config::{GpuSpec, MinosParams};
+use minos::features::{SpikeVector, UtilPoint, NBINS};
+use minos::fleet::FleetStore;
+use minos::minos::algorithm::TargetProfile;
+use minos::minos::reference_set::{FreqPoint, ReferenceEntry, ReferenceSet, ScalingData};
+use minos::registry::{refset_digest, ClassRegistry};
+use minos::sim::rng::Rng;
+use std::time::Duration;
+
+const BUDGET: Duration = Duration::from_millis(300);
+const PROTOS: usize = 8;
+
+fn freq_points(spec: &GpuSpec) -> Vec<FreqPoint> {
+    spec.sweep_frequencies()
+        .into_iter()
+        .enumerate()
+        .map(|(i, f)| FreqPoint {
+            f_mhz: f,
+            p50_rel: 0.7,
+            p90_rel: 0.9 + 0.02 * i as f64,
+            p95_rel: 1.0 + 0.02 * i as f64,
+            p99_rel: 1.1 + 0.02 * i as f64,
+            peak_rel: 1.2 + 0.02 * i as f64,
+            mean_w: 0.8 * spec.tdp_w,
+            iter_time_ms: 4.0 - 0.3 * i as f64,
+            frac_above_tdp: 0.1,
+            profiling_cost_s: 1.0,
+        })
+        .collect()
+}
+
+fn synth_refset(spec: &GpuSpec, n: usize, bin_sizes: &[f64], seed: u64) -> ReferenceSet {
+    let mut rng = Rng::new(seed);
+    let entries = (0..n)
+        .map(|i| {
+            let p = i % PROTOS;
+            let mut v = vec![0.0; NBINS];
+            v[6 * p] = 0.5 + rng.range(-0.03, 0.03);
+            v[6 * p + 1] = 0.3 + rng.range(-0.03, 0.03);
+            v[6 * p + 2] = 0.2 + rng.range(-0.03, 0.03);
+            ReferenceEntry {
+                name: format!("w{i}"),
+                app: format!("app{i}"),
+                vectors: bin_sizes
+                    .iter()
+                    .map(|&c| SpikeVector::new(v.clone(), 100.0, c))
+                    .collect(),
+                util: UtilPoint::new(rng.range(10.0, 90.0), rng.range(5.0, 50.0)),
+                mean_power_w: 0.8 * spec.tdp_w,
+                scaling: ScalingData::new(freq_points(spec)),
+                power_profiled: true,
+            }
+        })
+        .collect();
+    ReferenceSet {
+        spec: spec.clone(),
+        bin_sizes: bin_sizes.to_vec(),
+        entries,
+        registry_fingerprint: ReferenceSet::current_fingerprint(),
+    }
+}
+
+fn tmp(name: &str) -> String {
+    std::env::temp_dir().join(name).to_str().unwrap().to_string()
+}
+
+fn main() {
+    let params = MinosParams {
+        bin_sizes: vec![0.1],
+        default_bin_size: 0.1,
+        ..MinosParams::default()
+    };
+    let pd = params.digest();
+
+    for (label, n) in [("1x", 33usize), ("10x", 330)] {
+        group(&format!(
+            "snapshot cold start  n={n} entries ({label} registry size)"
+        ));
+        let rs = synth_refset(&GpuSpec::mi300x(), n, &params.bin_sizes, 7);
+        let reg = ClassRegistry::build(&rs, &params).expect("clusters");
+        let rs_json = tmp(&format!("bench-snap-refset-{n}.json"));
+        let rs_bin = tmp(&format!("bench-snap-refset-{n}.bin"));
+        let reg_json = tmp(&format!("bench-snap-registry-{n}.json"));
+        let reg_bin = tmp(&format!("bench-snap-registry-{n}.bin"));
+        rs.save(&rs_json).expect("refset json");
+        rs.save_bin(&rs_bin, pd).expect("refset bin");
+        reg.save(&reg_json).expect("registry json");
+        reg.save_bin(&reg_bin, pd).expect("registry bin");
+
+        // correctness gate: every load path lands on the built state —
+        // same digests, bit-identical top-2 answers — before timing
+        let rb = ReferenceSet::load_bin(&rs_bin, pd).expect("refset decode");
+        assert_eq!(refset_digest(&rb), refset_digest(&rs));
+        let gb = ClassRegistry::load_bin(&reg_bin, &rs, pd).expect("registry decode");
+        let gj = ClassRegistry::load(&reg_json, &rs).expect("registry json");
+        assert_eq!(gb.digest(), reg.digest());
+        assert_eq!(gj.digest(), reg.digest());
+        for i in (0..n).step_by((n / 8).max(1)) {
+            let t = TargetProfile::from_entry(&rs.entries[i]);
+            let a = reg.top2(&rs, &t, 0.1).expect("built hit");
+            let b = gb.top2(&rs, &t, 0.1).expect("decoded hit");
+            assert_eq!(a.best.0.name, b.best.0.name);
+            assert_eq!(a.best.1.to_bits(), b.best.1.to_bits());
+            assert_eq!(a.class_id, b.class_id);
+        }
+
+        let r_bin = bench(
+            &format!("refset: binary load        n={n:>4}"),
+            BUDGET,
+            200_000,
+            || black_box(ReferenceSet::load_bin(&rs_bin, pd).expect("decode").entries.len()),
+        );
+        println!("{}", r_bin.report());
+        let r_json = bench(
+            &format!("refset: JSON load          n={n:>4}"),
+            BUDGET,
+            200_000,
+            || black_box(ReferenceSet::load(&rs_json).expect("parse").entries.len()),
+        );
+        println!("{}", r_json.report());
+
+        let g_bin = bench(
+            &format!("registry: binary load      n={n:>4}"),
+            BUDGET,
+            200_000,
+            || black_box(ClassRegistry::load_bin(&reg_bin, &rs, pd).expect("decode").len()),
+        );
+        println!("{}", g_bin.report());
+        let g_json = bench(
+            &format!("registry: JSON load        n={n:>4}"),
+            BUDGET,
+            200_000,
+            || black_box(ClassRegistry::load(&reg_json, &rs).expect("parse").len()),
+        );
+        println!("{}", g_json.report());
+        let g_build = bench(
+            &format!("registry: full rebuild     n={n:>4}"),
+            BUDGET,
+            200_000,
+            || black_box(ClassRegistry::build(&rs, &params).expect("clusters").len()),
+        );
+        println!("{}", g_build.report());
+        println!(
+            "  {label}: registry binary load is {:.1}x faster than the JSON load, {:.1}x faster than the full rebuild",
+            g_json.mean_ns / g_bin.mean_ns.max(1.0),
+            g_build.mean_ns / g_bin.mean_ns.max(1.0)
+        );
+
+        for p in [&rs_json, &rs_bin, &reg_json, &reg_bin] {
+            let _ = std::fs::remove_file(p);
+        }
+    }
+
+    group("fleet cold boot: snapshot dir vs per-device rebuild (2 devices)");
+    let mut store = FleetStore::new();
+    store
+        .add(synth_refset(&GpuSpec::mi300x(), 330, &params.bin_sizes, 7), &params)
+        .expect("mi300x");
+    store
+        .add(synth_refset(&GpuSpec::a100_pcie(), 330, &params.bin_sizes, 11), &params)
+        .expect("a100");
+    let dir = tmp("bench-snap-fleet");
+    let _ = std::fs::remove_dir_all(&dir);
+    store.save_dir(&dir, &params).expect("save_dir");
+
+    // correctness gate: the booted fleet carries the same registries
+    let booted = FleetStore::load_dir(&dir, &params).expect("load_dir");
+    assert_eq!(booted.len(), store.len());
+    for (a, b) in store.entries().iter().zip(booted.entries()) {
+        assert_eq!(
+            a.registry.as_ref().expect("built").digest(),
+            b.registry.as_ref().expect("booted").digest()
+        );
+    }
+
+    let f_snap = bench("fleet: snapshot cold boot  n= 330/device", BUDGET, 200_000, || {
+        black_box(FleetStore::load_dir(&dir, &params).expect("boot").len())
+    });
+    println!("{}", f_snap.report());
+    let refsets: Vec<ReferenceSet> =
+        store.entries().iter().map(|e| e.refset.clone()).collect();
+    let f_rebuild = bench("fleet: per-device rebuild  n= 330/device", BUDGET, 200_000, || {
+        let mut fresh = FleetStore::new();
+        for rs in &refsets {
+            fresh.add(rs.clone(), &params).expect("add");
+        }
+        black_box(fresh.len())
+    });
+    println!("{}", f_rebuild.report());
+    println!(
+        "  fleet snapshot boot is {:.1}x faster than the per-device registry rebuild",
+        f_rebuild.mean_ns / f_snap.mean_ns.max(1.0)
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -295,6 +295,84 @@ impl MinosParams {
         self.perf_min_cap_mhz
             .unwrap_or(self.perf_min_cap_frac * f_max_mhz)
     }
+
+    /// FNV-1a digest over every field, in declaration order, as
+    /// little-endian bytes (floats via `to_bits`, usize as u64,
+    /// `Option<f64>` as a presence byte then bits).  Stamped into
+    /// binary snapshot headers so a params change — a new bin grid, a
+    /// different power bound — invalidates stale snapshots instead of
+    /// silently serving decisions built under other parameters.
+    pub fn digest(&self) -> u64 {
+        let mut h = crate::util::fnv::Fnv1a::new();
+        h.eat(&self.spike_lo.to_bits().to_le_bytes());
+        h.eat(&(self.bin_sizes.len() as u64).to_le_bytes());
+        for &b in &self.bin_sizes {
+            h.eat(&b.to_bits().to_le_bytes());
+        }
+        h.eat(&self.default_bin_size.to_bits().to_le_bytes());
+        h.eat(&self.power_quantile.to_bits().to_le_bytes());
+        h.eat(&self.power_bound_x.to_bits().to_le_bytes());
+        h.eat(&self.perf_bound_frac.to_bits().to_le_bytes());
+        h.eat(&self.perf_min_cap_frac.to_bits().to_le_bytes());
+        match self.perf_min_cap_mhz {
+            Some(v) => {
+                h.eat(&[1]);
+                h.eat(&v.to_bits().to_le_bytes());
+            }
+            None => h.eat(&[0]),
+        }
+        h.eat(&self.dendrogram_slice.to_bits().to_le_bytes());
+        h.eat(&(self.kutil_min as u64).to_le_bytes());
+        h.eat(&(self.kutil_max as u64).to_le_bytes());
+        h.finish()
+    }
+
+    /// Device-keyed parameter defaults (ROADMAP carried-forward item:
+    /// the A100's smaller spike range wants its own `bin_sizes` grid).
+    /// The A100 grid is a strict **superset** of the default grid —
+    /// experiments iterate the config grid and look bins up in the
+    /// refset (`vector_for(...).expect(...)`), so dropping a default
+    /// bin from a device grid would panic there, not degrade.
+    pub fn for_device_key(key: &str) -> MinosParams {
+        if key.starts_with("a100") {
+            MinosParams {
+                // A100-PCIe TDP is 250 W vs MI300X's 750 W, so the same
+                // absolute spike range maps to 3× the TDP-relative
+                // span: add finer bins below the default grid.
+                bin_sizes: vec![0.025, 0.05, 0.075, 0.1, 0.15, 0.2, 0.25, 0.3],
+                // Tighter PowerCentric bound: the A100's governor
+                // headroom (1.35) sits closer to TDP than MI300X's.
+                power_bound_x: 1.25,
+                ..MinosParams::default()
+            }
+        } else {
+            MinosParams::default()
+        }
+    }
+
+    /// Device-keyed defaults by spec.
+    pub fn for_device(spec: &GpuSpec) -> MinosParams {
+        Self::for_device_key(&device_key(&spec.name))
+    }
+
+    /// Resolve the effective params for a device: an explicitly
+    /// customized config (anything differing from the stock defaults)
+    /// wins for every device — the operator said so — otherwise the
+    /// device-keyed defaults apply.
+    pub fn resolve(config_minos: &MinosParams, spec: &GpuSpec) -> MinosParams {
+        Self::resolve_key(config_minos, &device_key(&spec.name))
+    }
+
+    /// [`MinosParams::resolve`] by device key — for callers that know
+    /// the key before any spec is decoded (e.g. a fleet snapshot
+    /// manifest).
+    pub fn resolve_key(config_minos: &MinosParams, key: &str) -> MinosParams {
+        if *config_minos != MinosParams::default() {
+            config_minos.clone()
+        } else {
+            Self::for_device_key(key)
+        }
+    }
 }
 
 impl Default for MinosParams {
@@ -778,6 +856,86 @@ mod tests {
         assert_eq!(m.power_bound_x, 1.3);
         assert_eq!(m.perf_bound_frac, 0.05);
         assert_eq!(m.power_quantile, 0.90);
+    }
+
+    #[test]
+    fn device_keyed_params_a100_grid_is_a_superset_of_the_default() {
+        let d = MinosParams::default();
+        let a = MinosParams::for_device(&GpuSpec::a100_pcie());
+        for b in &d.bin_sizes {
+            assert!(
+                a.bin_sizes.iter().any(|x| (x - b).abs() < 1e-12),
+                "A100 grid dropped default bin {b} — experiments index the \
+                 config grid into device refsets and would panic"
+            );
+        }
+        // the default bin size stays servable on both grids
+        assert_eq!(a.default_bin_size, d.default_bin_size);
+        assert_eq!(a.power_bound_x, 1.25);
+        // registry-build-relevant knobs are identical across variants,
+        // so snapshot and rebuild registries match byte-for-byte
+        assert_eq!(a.dendrogram_slice, d.dendrogram_slice);
+        assert_eq!(a.kutil_min, d.kutil_min);
+        assert_eq!(a.kutil_max, d.kutil_max);
+        // MI300X and unknown devices keep the paper defaults exactly
+        assert_eq!(MinosParams::for_device(&GpuSpec::mi300x()), d);
+        assert_eq!(MinosParams::for_device_key("h100-sxm"), d);
+    }
+
+    #[test]
+    fn resolve_prefers_custom_config_over_device_defaults() {
+        let a100 = GpuSpec::a100_pcie();
+        // stock config → device defaults win
+        assert_eq!(
+            MinosParams::resolve(&MinosParams::default(), &a100),
+            MinosParams::for_device(&a100)
+        );
+        // any customization → the operator's config wins on every device
+        let custom = MinosParams {
+            power_bound_x: 1.1,
+            ..MinosParams::default()
+        };
+        assert_eq!(MinosParams::resolve(&custom, &a100), custom);
+        assert_eq!(MinosParams::resolve(&custom, &GpuSpec::mi300x()), custom);
+    }
+
+    #[test]
+    fn params_digest_is_stable_and_field_sensitive() {
+        let d = MinosParams::default();
+        assert_eq!(d.digest(), MinosParams::default().digest());
+        // every class of field moves the digest
+        let variants = [
+            MinosParams {
+                spike_lo: 0.6,
+                ..d.clone()
+            },
+            MinosParams {
+                bin_sizes: vec![0.1],
+                ..d.clone()
+            },
+            MinosParams {
+                perf_min_cap_mhz: Some(1500.0),
+                ..d.clone()
+            },
+            MinosParams {
+                kutil_max: 18,
+                ..d.clone()
+            },
+            MinosParams::for_device_key("a100-pcie-40gb"),
+        ];
+        for v in &variants {
+            assert_ne!(v.digest(), d.digest(), "{v:?}");
+        }
+        // Some(x) must not collide with a shifted field layout
+        let none = MinosParams {
+            perf_min_cap_mhz: None,
+            ..d.clone()
+        };
+        let some = MinosParams {
+            perf_min_cap_mhz: Some(none.dendrogram_slice),
+            ..d.clone()
+        };
+        assert_ne!(none.digest(), some.digest());
     }
 
     #[test]

@@ -1027,6 +1027,18 @@ impl PowerAwareScheduler {
         Self::with_fleet(cfg, fleet)
     }
 
+    /// Snapshot constructor: boot the fleet from a binary snapshot
+    /// directory written by `minos fleet build --out` (see
+    /// [`FleetStore::load_dir`]) — no profiling, no re-clustering — then
+    /// serve exactly as [`PowerAwareScheduler::with_fleet`] would.  The
+    /// snapshot's params digests are validated against `cfg.minos`, so a
+    /// scheduler configured with different classifier parameters refuses
+    /// a stale snapshot instead of silently serving from it.
+    pub fn from_snapshot(cfg: SchedulerConfig, dir: &str) -> anyhow::Result<Self> {
+        let fleet = FleetStore::load_dir(dir, &cfg.minos)?;
+        Ok(Self::with_fleet(cfg, fleet))
+    }
+
     /// Fleet constructor: every cluster device with a native entry in
     /// `fleet` serves from its own reference set + class registry;
     /// devices without one fall back to transfer-then-absorb against

@@ -1,7 +1,7 @@
 //! Shared experiment state: the (expensive) per-device reference sets,
 //! built once and cached on disk, plus the PJRT runtime.
 
-use crate::config::{Config, DeviceProfile, GpuSpec};
+use crate::config::{Config, DeviceProfile, GpuSpec, MinosParams};
 use crate::minos::reference_set::ReferenceSet;
 use crate::runtime::MinosRuntime;
 use crate::sim::dvfs::DvfsMode;
@@ -80,16 +80,35 @@ impl ExperimentContext {
         let fp = DeviceProfile::of(spec).fingerprint;
         if !self.refsets.contains_key(&fp) {
             let allow_stale = self.allow_stale;
-            let path = self.cache_path_for(spec);
-            let loaded = path
+            // Per-device parameter resolution: an explicit (non-default)
+            // config wins; otherwise each device family gets its own
+            // tuned grid (A100 vs the paper's MI300X defaults).
+            let params = MinosParams::resolve(&self.config.minos, spec);
+            let pd = params.digest();
+            let json_path = self.cache_path_for(spec);
+            let bin_path = json_path.as_ref().map(|p| bin_sibling(p));
+            // The binary sibling loads first: a straight buffer decode
+            // with no re-binning or norm recompute, validated against
+            // the resolved params digest.  JSON stays the interoperable
+            // fallback and rebuild-source of record.
+            let loaded = bin_path
                 .as_ref()
                 .and_then(|p| {
                     if allow_stale {
-                        ReferenceSet::load_unchecked(p).ok()
+                        ReferenceSet::load_bin_unchecked(p, pd).ok()
                     } else {
-                        // checked load: fingerprint mismatch ⇒ Err ⇒ rebuild
-                        ReferenceSet::load(p).ok()
+                        ReferenceSet::load_bin(p, pd).ok()
                     }
+                })
+                .or_else(|| {
+                    json_path.as_ref().and_then(|p| {
+                        if allow_stale {
+                            ReferenceSet::load_unchecked(p).ok()
+                        } else {
+                            // checked load: fingerprint mismatch ⇒ Err ⇒ rebuild
+                            ReferenceSet::load(p).ok()
+                        }
+                    })
                 })
                 .filter(|rs| {
                     // spec/bin-size compatibility is non-negotiable (the
@@ -97,7 +116,7 @@ impl ExperimentContext {
                     // is registry drift, which is exactly what
                     // --allow-stale opts into replaying.
                     rs.spec == *spec
-                        && rs.bin_sizes == self.config.minos.bin_sizes
+                        && rs.bin_sizes == params.bin_sizes
                         && (allow_stale
                             || rs.entries.len() == self.registry.util_reference().len())
                 });
@@ -105,13 +124,15 @@ impl ExperimentContext {
                 Some(rs) => rs,
                 None => {
                     let wls: Vec<&Workload> = self.registry.util_reference();
-                    let rs =
-                        ReferenceSet::build(spec, &self.config.sim, &self.config.minos, &wls);
-                    if let Some(p) = &path {
+                    let rs = ReferenceSet::build(spec, &self.config.sim, &params, &wls);
+                    if let Some(p) = &json_path {
                         let _ = std::fs::create_dir_all(
                             std::path::Path::new(p).parent().unwrap_or(std::path::Path::new(".")),
                         );
                         let _ = rs.save(p);
+                    }
+                    if let Some(p) = &bin_path {
+                        let _ = rs.save_bin(p, pd);
                     }
                     rs
                 }
@@ -119,6 +140,19 @@ impl ExperimentContext {
             self.refsets.insert(fp, rs);
         }
         &self.refsets[&fp]
+    }
+
+    /// Pre-populate the per-device refset cache from a binary fleet
+    /// snapshot directory (written by `minos fleet build --out`), so
+    /// every device in the snapshot boots without a profiling sweep.
+    /// Returns the number of devices loaded.
+    pub fn preload_snapshot(&mut self, dir: &str) -> anyhow::Result<usize> {
+        let fleet = crate::fleet::FleetStore::load_dir(dir, &self.config.minos)?;
+        let n = fleet.len();
+        for e in fleet.entries() {
+            self.refsets.insert(e.device.fingerprint, e.refset.clone());
+        }
+        Ok(n)
     }
 
     /// Profile one workload at one mode, memoized.
@@ -151,4 +185,13 @@ impl ExperimentContext {
 pub fn default_cache_path() -> String {
     std::env::var("MINOS_CACHE")
         .unwrap_or_else(|_| "target/minos-cache/refset.json".to_string())
+}
+
+/// The binary-snapshot sibling of a JSON cache path:
+/// `refset-mi300x.json` → `refset-mi300x.bin`.
+fn bin_sibling(json_path: &str) -> String {
+    match json_path.strip_suffix(".json") {
+        Some(stem) => format!("{stem}.bin"),
+        None => format!("{json_path}.bin"),
+    }
 }

@@ -27,6 +27,7 @@ pub mod transfer;
 use crate::config::{DeviceProfile, MinosParams};
 use crate::minos::reference_set::ReferenceSet;
 use crate::registry::ClassRegistry;
+use crate::util::json;
 
 /// One device's native serving artifacts.
 #[derive(Debug, Clone)]
@@ -102,6 +103,125 @@ impl FleetStore {
     pub fn devices(&self) -> Vec<&DeviceProfile> {
         self.entries.iter().map(|e| &e.device).collect()
     }
+
+    /// Name of the manifest file a snapshot directory carries.
+    pub const MANIFEST: &'static str = "manifest.json";
+
+    /// Write the whole fleet as per-device binary snapshot pairs plus a
+    /// `manifest.json` naming them in insertion order (the manifest
+    /// order *is* the fleet order, so the primary device survives the
+    /// round trip).  Each device's artifacts are stamped with its
+    /// *resolved* params digest ([`MinosParams::resolve`] over
+    /// `config_minos`), so a params change invalidates stale snapshots.
+    pub fn save_dir(&self, dir: &str, config_minos: &MinosParams) -> anyhow::Result<()> {
+        std::fs::create_dir_all(dir)?;
+        let mut devices = Vec::with_capacity(self.entries.len());
+        for e in &self.entries {
+            let params = MinosParams::resolve(config_minos, &e.refset.spec);
+            let pd = params.digest();
+            let refset_file = format!("refset-{}.bin", e.device.key);
+            e.refset.save_bin(&format!("{dir}/{refset_file}"), pd)?;
+            let registry_file = match &e.registry {
+                Some(reg) => {
+                    let f = format!("registry-{}.bin", e.device.key);
+                    reg.save_bin(&format!("{dir}/{f}"), pd)?;
+                    json::s(&f)
+                }
+                None => json::Json::Null,
+            };
+            devices.push(json::obj(vec![
+                ("key", json::s(&e.device.key)),
+                ("name", json::s(&e.device.name)),
+                ("fingerprint", json::s(&format!("{:016x}", e.device.fingerprint))),
+                ("params_digest", json::s(&format!("{pd:016x}"))),
+                ("refset", json::s(&refset_file)),
+                ("registry", registry_file),
+            ]));
+        }
+        let manifest = json::obj(vec![
+            ("format", json::num(1.0)),
+            ("devices", json::arr(devices)),
+        ]);
+        std::fs::write(format!("{dir}/{}", Self::MANIFEST), manifest.dump())?;
+        Ok(())
+    }
+
+    /// Boot a fleet from a snapshot directory written by
+    /// [`FleetStore::save_dir`]: a straight per-device binary decode —
+    /// no profiling, no re-clustering, no re-indexing.  Every artifact
+    /// is validated against the manifest's device fingerprint and the
+    /// params digest resolved from `config_minos` for that device key;
+    /// any disagreement is a hard error naming the offending file.
+    pub fn load_dir(dir: &str, config_minos: &MinosParams) -> anyhow::Result<FleetStore> {
+        let mpath = format!("{dir}/{}", Self::MANIFEST);
+        let manifest = json::Json::parse(&std::fs::read_to_string(&mpath).map_err(|e| {
+            anyhow::anyhow!("fleet snapshot manifest '{mpath}': {e}")
+        })?)
+        .map_err(|e| anyhow::anyhow!("fleet snapshot manifest '{mpath}': {e}"))?;
+        let format = manifest.u("format")?;
+        anyhow::ensure!(
+            format == 1,
+            "fleet snapshot manifest '{mpath}': format {format} but this build reads \
+             format 1 — rebuild the snapshot with `minos fleet build --out`"
+        );
+        let mut store = FleetStore::new();
+        for dj in manifest.arr("devices")? {
+            let key = dj.s("key")?;
+            let fingerprint = u64::from_str_radix(&dj.s("fingerprint")?, 16)?;
+            let stamped = u64::from_str_radix(&dj.s("params_digest")?, 16)?;
+            let params = MinosParams::resolve_key(config_minos, &key);
+            let pd = params.digest();
+            anyhow::ensure!(
+                stamped == pd,
+                "fleet snapshot manifest '{mpath}': device '{key}' was built under \
+                 params digest {stamped:016x} but the effective MinosParams digest is \
+                 {pd:016x} — rebuild the snapshot with `minos fleet build --out`"
+            );
+            let rpath = format!("{dir}/{}", dj.s("refset")?);
+            let refset = ReferenceSet::load_bin(&rpath, pd)?;
+            let device = refset.device();
+            anyhow::ensure!(
+                device.fingerprint == fingerprint,
+                "fleet snapshot manifest '{mpath}': device '{key}' lists fingerprint \
+                 {fingerprint:016x} but '{rpath}' decodes to '{}' ({:016x}) — the \
+                 snapshot directory was corrupted or spliced",
+                device.name,
+                device.fingerprint
+            );
+            anyhow::ensure!(
+                store.get(device.fingerprint).is_none(),
+                "fleet snapshot manifest '{mpath}': duplicate device '{}' ({:016x})",
+                device.name,
+                device.fingerprint
+            );
+            let registry = match dj.get("registry") {
+                Some(json::Json::Null) | None => None,
+                Some(rj) => {
+                    let file = rj.as_str().ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "fleet snapshot manifest '{mpath}': device '{key}': field \
+                             'registry' must be a file name or null"
+                        )
+                    })?;
+                    Some(ClassRegistry::load_bin(
+                        &format!("{dir}/{file}"),
+                        &refset,
+                        pd,
+                    )?)
+                }
+            };
+            store.entries.push(FleetEntry {
+                device,
+                refset,
+                registry,
+            });
+        }
+        anyhow::ensure!(
+            !store.is_empty(),
+            "fleet snapshot manifest '{mpath}': no devices"
+        );
+        Ok(store)
+    }
 }
 
 #[cfg(test)]
@@ -139,5 +259,50 @@ mod tests {
         // duplicate device is an error
         let err = store.add(small_refset(&GpuSpec::mi300x()), &params).unwrap_err();
         assert!(err.to_string().contains("already holds"), "{err}");
+    }
+
+    #[test]
+    fn snapshot_dir_roundtrips_the_fleet() {
+        let params = MinosParams::default();
+        let mut store = FleetStore::new();
+        store.add(small_refset(&GpuSpec::mi300x()), &params).unwrap();
+        store.add(small_refset(&GpuSpec::a100_pcie()), &params).unwrap();
+        let dir = std::env::temp_dir().join("minos-fleet-snap-roundtrip");
+        let dir = dir.to_str().unwrap().to_string();
+        let _ = std::fs::remove_dir_all(&dir);
+        store.save_dir(&dir, &params).unwrap();
+
+        let back = FleetStore::load_dir(&dir, &params).unwrap();
+        assert_eq!(back.len(), store.len());
+        // manifest order preserved: primary survives the round trip
+        assert_eq!(back.primary().unwrap().device.key, "mi300x");
+        for (a, b) in store.entries().iter().zip(back.entries()) {
+            assert_eq!(a.device.fingerprint, b.device.fingerprint);
+            assert_eq!(a.refset.spec, b.refset.spec);
+            assert_eq!(
+                crate::registry::refset_digest(&a.refset),
+                crate::registry::refset_digest(&b.refset)
+            );
+            let (ra, rb) = (a.registry.as_ref().unwrap(), b.registry.as_ref().unwrap());
+            assert_eq!(ra.digest(), rb.digest());
+        }
+
+        // a manifest params digest that disagrees with the effective params
+        // is a hard error naming the manifest
+        let custom = MinosParams {
+            default_bin_size: 0.15,
+            ..MinosParams::default()
+        };
+        let err = FleetStore::load_dir(&dir, &custom).unwrap_err().to_string();
+        assert!(err.contains("params digest"), "{err}");
+        assert!(err.contains("manifest.json"), "{err}");
+
+        // missing manifest names the path
+        let err = FleetStore::load_dir("/nonexistent-minos-snap", &params)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("/nonexistent-minos-snap/manifest.json"), "{err}");
+
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -18,9 +18,10 @@
 //!                                     headline, streaming, transfer, all
 //!   serve [--queue a,b@a100,c | --load N] [--iterations N]
 //!         [--nodes N | --nodes-mixed] [--shards N] [--steal on|off]
-//!         [--policy uniform|minos] [--budget W]
+//!         [--policy uniform|minos] [--budget W] [--snapshot DIR]
 //!   fleet <build|stats|transfer>      per-device registries + cross-device
-//!                                     class transfer
+//!                                     class transfer; build --out writes the
+//!                                     binary snapshot dir --snapshot boots from
 //!   verify-artifacts                  PJRT vs native cross-check
 //!
 //! The global `--device mi300x|a100|<json>` flag points any command at a
@@ -51,21 +52,26 @@ const USAGE: &str = "usage: minos [--config FILE] [--jobs N] [--allow-stale] [--
   --device D: device every command runs against — mi300x | a100 | a GpuSpec JSON file | inline JSON
   profile <workload> [--cap MHZ | --pin MHZ]     (--cap and --pin are mutually exclusive)
   classify <workload> [--early-exit] [--window N] [--stable-k K] [--search flat|class]
+           [--snapshot DIR]
   select-freq <workload>
   experiment <fig1..fig12|ablation-*|table1|table2|headline|streaming|transfer|all|ablations>
+             [--snapshot DIR]
   classify-trace <power.csv> [--tdp W] [--sm PCT --dram PCT]
   stream [power.csv|-] [--follow FILE] [--tdp W] [--dt MS] [--window N | --window-ms MS]
          [--stable-k K] [--sm PCT --dram PCT] [--objective power|perf] [--exact]
-         [--search flat|class]
+         [--search flat|class] [--snapshot DIR]
   stream --multi <dir|-> [--poll N] [--max-streams N] [--idle-evict N] [shared stream flags]
          (dir: one stream per trace file, tag = file stem; '-': interleaved
           tagged stdin lines 'tag[,t_ms],watts'; prints a fleet decision digest)
   serve [--queue a,b@a100,c@mi300x | --load N] [--iterations N] [--nodes N] [--nodes-mixed]
         [--shards N] [--steal on|off] [--policy uniform|minos] [--admission stream|batch]
-        [--budget W] [--search flat|class]    (queue entries pin devices with wl@device;
-         the outcome table is byte-identical for every --shards and --steal value)
+        [--budget W] [--search flat|class] [--snapshot DIR]
+        (queue entries pin devices with wl@device; the outcome table is byte-identical
+         for every --shards and --steal value, and for --snapshot vs a profile rebuild)
   registry <build|inspect|stats|absorb <workload>> [--file SNAPSHOT.json] [--out FILE]
   fleet <build|stats> [--devices mi300x,a100] [--out DIR]
+        (build --out writes per-device JSON artifacts plus binary .bin snapshots and a
+         manifest.json; any serving command boots from them with --snapshot DIR)
   fleet transfer [--from mi300x] [--to a100] [--calib K]";
 
 struct Args {
@@ -248,6 +254,7 @@ fn stream_multi(
     let poll_batch = parse_flag::<usize>(args, "--poll")?.unwrap_or(512).max(1);
     let max_streams = parse_flag::<usize>(args, "--max-streams")?;
     let idle_evict = parse_flag::<u64>(args, "--idle-evict")?.unwrap_or(0);
+    let snapshot = args.flag("--snapshot");
     let mut ocfg = match (window, window_ms) {
         (Some(n), None) => OnlineConfig::new(n, stable_k, objective),
         (None, Some(ms)) => OnlineConfig::from_ms(ms, dt, stable_k, objective),
@@ -257,6 +264,9 @@ fn stream_multi(
         ocfg = ocfg.exact();
     }
     let mut ctx = ExperimentContext::new(config).with_allow_stale(allow_stale);
+    if let Some(dir) = &snapshot {
+        ctx.preload_snapshot(dir)?;
+    }
     let params = ctx.config.minos.clone();
     let rs = ctx.refset().clone();
     let class_reg = match search {
@@ -574,8 +584,12 @@ fn main() -> anyhow::Result<()> {
             let window = parse_flag::<usize>(&mut args, "--window")?;
             let stable_k = parse_flag::<usize>(&mut args, "--stable-k")?;
             let search = parse_search(&mut args)?;
+            let snapshot = args.flag("--snapshot");
             let workload = args.next().ok_or_else(|| anyhow::anyhow!(USAGE))?;
             let mut ctx = ExperimentContext::new(config).with_allow_stale(allow_stale);
+            if let Some(dir) = &snapshot {
+                ctx.preload_snapshot(dir)?;
+            }
             let w = ctx
                 .registry
                 .by_name(&workload)
@@ -794,6 +808,7 @@ fn main() -> anyhow::Result<()> {
             let dram = parse_flag::<f64>(&mut args, "--dram")?;
             let exact = args.has("--exact");
             let search = parse_search(&mut args)?;
+            let snapshot = args.flag("--snapshot");
             let objective = match args.flag("--objective") {
                 None => Objective::PowerCentric,
                 Some(o) => match o.as_str() {
@@ -853,6 +868,9 @@ fn main() -> anyhow::Result<()> {
                 ocfg = ocfg.exact();
             }
             let mut ctx = ExperimentContext::new(config).with_allow_stale(allow_stale);
+            if let Some(dir) = &snapshot {
+                ctx.preload_snapshot(dir)?;
+            }
             let params = ctx.config.minos.clone();
             let rs = ctx.refset().clone();
             let label = follow
@@ -1028,8 +1046,13 @@ fn main() -> anyhow::Result<()> {
             println!("decision digest: {:#018x}", d.digest());
         }
         "experiment" => {
+            let snapshot = args.flag("--snapshot");
             let id = args.next().ok_or_else(|| anyhow::anyhow!(USAGE))?;
             let mut ctx = ExperimentContext::new(config).with_allow_stale(allow_stale);
+            if let Some(dir) = &snapshot {
+                let n = ctx.preload_snapshot(dir)?;
+                eprintln!("snapshot: {n} device refset(s) preloaded from {dir}");
+            }
             let report = experiments::run(&mut ctx, &id)?;
             println!("{report}");
         }
@@ -1086,6 +1109,7 @@ fn main() -> anyhow::Result<()> {
                 })?,
             };
             let search = parse_search(&mut args)?;
+            let snapshot = args.flag("--snapshot");
             // Queue entries optionally pin a device family: "wl@a100".
             let parse_entry = |e: &str| -> (String, Option<String>) {
                 match e.split_once('@') {
@@ -1134,23 +1158,55 @@ fn main() -> anyhow::Result<()> {
                 );
                 node.power_budget_w = b;
             }
-            let mut ctx = ExperimentContext::new(config.clone()).with_allow_stale(allow_stale);
             // One native reference set (and class registry) per distinct
             // cluster device — the fleet the scheduler serves from.
+            // `--snapshot DIR` boots it from binary snapshots (no
+            // profiling, no clustering); otherwise it is rebuilt from
+            // the per-device reference-set cache or a full sweep.
             let resolved: Vec<NodeSpec> = cluster
                 .clone()
                 .unwrap_or_else(|| vec![node.clone(); nodes]);
-            let params = config.minos.clone();
-            let mut fleet = FleetStore::new();
-            for ns in &resolved {
-                if fleet
-                    .get(minos::config::DeviceProfile::of(&ns.gpu).fingerprint)
-                    .is_none()
-                {
-                    let rs = ctx.refset_for(&ns.gpu).clone();
-                    fleet.add(rs, &params)?;
+            // minos-lint: allow(wallclock-decision) -- cold-boot wall-time report only, never a decision input
+            let boot_t0 = std::time::Instant::now();
+            let fleet = match &snapshot {
+                Some(dir) => {
+                    let fleet = FleetStore::load_dir(dir, &config.minos)?;
+                    // Every distinct cluster device must be in the
+                    // snapshot: the rebuild path would have profiled it,
+                    // so silently falling back to transfer-serving here
+                    // would break snapshot/rebuild byte-identity.
+                    for ns in &resolved {
+                        let prof = minos::config::DeviceProfile::of(&ns.gpu);
+                        anyhow::ensure!(
+                            fleet.get(prof.fingerprint).is_some(),
+                            "snapshot '{dir}' holds no entry for cluster device '{}' \
+                             ({:016x}) — rebuild it with `minos fleet build --devices \
+                             ... --out {dir}`",
+                            prof.key,
+                            prof.fingerprint
+                        );
+                    }
+                    fleet
                 }
-            }
+                None => {
+                    let mut ctx =
+                        ExperimentContext::new(config.clone()).with_allow_stale(allow_stale);
+                    let mut fleet = FleetStore::new();
+                    for ns in &resolved {
+                        if fleet
+                            .get(minos::config::DeviceProfile::of(&ns.gpu).fingerprint)
+                            .is_none()
+                        {
+                            let rs = ctx.refset_for(&ns.gpu).clone();
+                            let params =
+                                minos::config::MinosParams::resolve(&config.minos, &ns.gpu);
+                            fleet.add(rs, &params)?;
+                        }
+                    }
+                    fleet
+                }
+            };
+            let boot_ms = boot_t0.elapsed().as_secs_f64() * 1000.0;
             let devices_label = fleet
                 .devices()
                 .iter()
@@ -1172,7 +1228,15 @@ fn main() -> anyhow::Result<()> {
                 admission.label(),
                 search.label()
             );
-            println!("fleet: {devices_label}");
+            println!(
+                "fleet: {devices_label} ({} in {:.1} ms)",
+                if snapshot.is_some() {
+                    "snapshot cold boot"
+                } else {
+                    "built"
+                },
+                boot_ms
+            );
             let cfg = SchedulerConfig {
                 node,
                 nodes,
@@ -1376,11 +1440,13 @@ fn main() -> anyhow::Result<()> {
                     );
                     let mut ctx =
                         ExperimentContext::new(config.clone()).with_allow_stale(allow_stale);
-                    let params = config.minos.clone();
                     let mut store = FleetStore::new();
                     for sel in devices.split(',').map(str::trim).filter(|s| !s.is_empty()) {
                         let spec = GpuSpec::parse_selector(sel)?;
                         let rs = ctx.refset_for(&spec).clone();
+                        // Per-device parameter resolution: explicit config
+                        // wins, else each family's own tuned grid.
+                        let params = minos::config::MinosParams::resolve(&config.minos, &spec);
                         store.add(rs, &params)?;
                     }
                     anyhow::ensure!(!store.is_empty(), "fleet: --devices selected no devices");
@@ -1427,6 +1493,11 @@ fn main() -> anyhow::Result<()> {
                                 println!("saved: {gp}");
                             }
                         }
+                        // Binary snapshots + manifest alongside the JSON:
+                        // the instant-start path every serving command
+                        // boots from with --snapshot DIR.
+                        store.save_dir(&dir, &config.minos)?;
+                        println!("saved: {dir}/{} (+ per-device .bin snapshots)", FleetStore::MANIFEST);
                     }
                     println!("fleet: {} device(s)", store.len());
                 }

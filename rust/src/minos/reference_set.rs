@@ -501,6 +501,191 @@ impl ReferenceSet {
     }
 }
 
+// ---- binary snapshot codec (instant start; JSON stays the escape hatch) ----
+
+use crate::util::binfmt::{self, Reader, Writer};
+
+impl ReferenceSet {
+    /// Write the built set as a binary snapshot: every float as
+    /// `to_bits()` so a later [`ReferenceSet::load_bin`] reproduces this
+    /// set bit-exactly with zero re-normalization.  `params_digest` is
+    /// the [`MinosParams::digest`] of the params the set was built
+    /// under; the loader rejects snapshots whose digest disagrees.
+    pub fn save_bin(&self, path: &str, params_digest: u64) -> anyhow::Result<()> {
+        let mut w = Writer::new(binfmt::Header {
+            kind: binfmt::KIND_REFSET,
+            device_fingerprint: self.device().fingerprint,
+            refset_digest: crate::registry::refset_digest(self),
+            params_digest,
+        });
+        // The GpuSpec rides along as its JSON form: tiny, cold, and it
+        // reuses the validating codec (Rust float formatting is
+        // shortest-roundtrip, so the spec survives bit-exactly too).
+        w.str(&self.spec.to_json().dump());
+        w.u64(self.registry_fingerprint);
+        w.f64s(&self.bin_sizes);
+        w.usize(self.entries.len());
+        for e in &self.entries {
+            w.str(&e.name);
+            w.str(&e.app);
+            w.usize(e.vectors.len());
+            for v in &e.vectors {
+                w.f64s(&v.v);
+                w.f64(v.total);
+                w.f64(v.bin_width);
+            }
+            w.f64(e.util.sm);
+            w.f64(e.util.dram);
+            w.f64(e.mean_power_w);
+            w.usize(e.scaling.points.len());
+            for p in &e.scaling.points {
+                for x in [
+                    p.f_mhz,
+                    p.p50_rel,
+                    p.p90_rel,
+                    p.p95_rel,
+                    p.p99_rel,
+                    p.peak_rel,
+                    p.mean_w,
+                    p.iter_time_ms,
+                    p.frac_above_tdp,
+                    p.profiling_cost_s,
+                ] {
+                    w.f64(x);
+                }
+            }
+            w.bool(e.power_profiled);
+        }
+        std::fs::write(path, w.into_bytes())?;
+        Ok(())
+    }
+
+    /// Load a binary snapshot with every contract the JSON path
+    /// enforces: staleness (registry/sim fingerprint), the embedded
+    /// spec vs header device fingerprint (splice detection), a content
+    /// digest recomputed over the decoded set, and the params digest.
+    pub fn load_bin(path: &str, expected_params_digest: u64) -> anyhow::Result<ReferenceSet> {
+        let rs = Self::load_bin_unchecked(path, expected_params_digest)?;
+        anyhow::ensure!(
+            rs.is_current(),
+            "stale binary reference-set snapshot '{path}': fingerprint {:016x} but current \
+             registry/sim-model is {:016x} — rebuild it, or pass --allow-stale to use anyway",
+            rs.registry_fingerprint,
+            Self::current_fingerprint()
+        );
+        Ok(rs)
+    }
+
+    /// [`ReferenceSet::load_bin`] without the staleness check — the
+    /// `--allow-stale` escape hatch.  Corruption, device-splice, and
+    /// params-digest mismatches stay hard errors.
+    pub fn load_bin_unchecked(
+        path: &str,
+        expected_params_digest: u64,
+    ) -> anyhow::Result<ReferenceSet> {
+        let bytes = std::fs::read(path)?;
+        let mut r = Reader::new(path, &bytes);
+        let h = r.header(binfmt::KIND_REFSET, "reference set")?;
+        let spec_json = r.str("spec")?;
+        let spec = GpuSpec::from_json(&Json::parse(&spec_json)?)?;
+        let registry_fingerprint = r.u64("registry_fingerprint")?;
+        let bin_sizes = r.f64s("bin_sizes")?;
+        let n = r.usize("entries.len")?;
+        let mut entries = Vec::with_capacity(n.min(1024));
+        for i in 0..n {
+            let name = r.str(&format!("entries[{i}].name"))?;
+            let app = r.str(&format!("entries[{i}].app"))?;
+            let nv = r.usize(&format!("entries[{i}].vectors.len"))?;
+            let mut vectors = Vec::with_capacity(nv.min(64));
+            for vi in 0..nv {
+                let field = format!("entries[{i}].vectors[{vi}]");
+                let v = r.f64s(&field)?;
+                let total = r.f64(&field)?;
+                let bin_width = r.f64(&field)?;
+                vectors.push(SpikeVector::new(v, total, bin_width));
+            }
+            let sm = r.f64(&format!("entries[{i}].sm"))?;
+            let dram = r.f64(&format!("entries[{i}].dram"))?;
+            let mean_power_w = r.f64(&format!("entries[{i}].mean_power_w"))?;
+            let np = r.usize(&format!("entries[{i}].scaling.len"))?;
+            let mut points = Vec::with_capacity(np.min(64));
+            for pi in 0..np {
+                let field = format!("entries[{i}].scaling[{pi}]");
+                let mut vals = [0.0_f64; 10];
+                for v in vals.iter_mut() {
+                    *v = r.f64(&field)?;
+                }
+                // same finiteness contract as the JSON FreqPoint codec
+                anyhow::ensure!(
+                    vals.iter().all(|v| v.is_finite()),
+                    "corrupt snapshot '{path}': field '{field}': not a finite number"
+                );
+                points.push(FreqPoint {
+                    f_mhz: vals[0],
+                    p50_rel: vals[1],
+                    p90_rel: vals[2],
+                    p95_rel: vals[3],
+                    p99_rel: vals[4],
+                    peak_rel: vals[5],
+                    mean_w: vals[6],
+                    iter_time_ms: vals[7],
+                    frac_above_tdp: vals[8],
+                    profiling_cost_s: vals[9],
+                });
+            }
+            anyhow::ensure!(
+                points.windows(2).all(|w| w[0].f_mhz < w[1].f_mhz),
+                "corrupt snapshot '{path}': entry '{name}': scaling frequency grid is not \
+                 strictly ascending"
+            );
+            let power_profiled = r.bool(&format!("entries[{i}].power_profiled"))?;
+            entries.push(ReferenceEntry {
+                name,
+                app,
+                vectors,
+                util: UtilPoint::new(sm, dram),
+                mean_power_w,
+                scaling: ScalingData::new(points),
+                power_profiled,
+            });
+        }
+        r.finish()?;
+        let rs = ReferenceSet {
+            spec,
+            bin_sizes,
+            entries,
+            registry_fingerprint,
+        };
+        let want = rs.device();
+        anyhow::ensure!(
+            h.device_fingerprint == want.fingerprint,
+            "binary reference-set snapshot '{path}': field 'device_fingerprint' \
+             ({:016x}) disagrees with its embedded spec '{}' ({:016x}) — the snapshot was \
+             corrupted or spliced across devices",
+            h.device_fingerprint,
+            want.name,
+            want.fingerprint
+        );
+        let content = crate::registry::refset_digest(&rs);
+        anyhow::ensure!(
+            h.refset_digest == content,
+            "binary reference-set snapshot '{path}': field 'refset_digest' ({:016x}) does \
+             not match the decoded content ({:016x}) — the snapshot is corrupt",
+            h.refset_digest,
+            content
+        );
+        anyhow::ensure!(
+            h.params_digest == expected_params_digest,
+            "binary reference-set snapshot '{path}': field 'params_digest' ({:016x}) does \
+             not match the effective MinosParams digest ({:016x}) — the snapshot was built \
+             under different classifier parameters; rebuild it",
+            h.params_digest,
+            expected_params_digest
+        );
+        Ok(rs)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -735,5 +920,73 @@ mod tests {
         let cut = rs.without_app("milc");
         assert!(cut.by_name("milc-6").is_none());
         assert!(cut.by_name("sgemm").is_some());
+    }
+
+    #[test]
+    fn binary_snapshot_roundtrips_bit_exactly() {
+        let rs = small_set();
+        let pd = MinosParams::default().digest();
+        let path = std::env::temp_dir().join("minos_refset_bin_test.bin");
+        let path = path.to_str().unwrap();
+        rs.save_bin(path, pd).unwrap();
+        let back = ReferenceSet::load_bin(path, pd).unwrap();
+        assert_eq!(back.spec, rs.spec);
+        assert_eq!(back.registry_fingerprint, rs.registry_fingerprint);
+        assert_eq!(back.bin_sizes.len(), rs.bin_sizes.len());
+        for (a, b) in back.bin_sizes.iter().zip(&rs.bin_sizes) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(back.entries.len(), rs.entries.len());
+        for (a, b) in back.entries.iter().zip(&rs.entries) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.app, b.app);
+            assert_eq!(a.power_profiled, b.power_profiled);
+            assert_eq!(a.util.sm.to_bits(), b.util.sm.to_bits());
+            assert_eq!(a.mean_power_w.to_bits(), b.mean_power_w.to_bits());
+            assert_eq!(a.vectors.len(), b.vectors.len());
+            for (va, vb) in a.vectors.iter().zip(&b.vectors) {
+                assert_eq!(va.bin_width.to_bits(), vb.bin_width.to_bits());
+                assert_eq!(va.total.to_bits(), vb.total.to_bits());
+                assert_eq!(va.v.len(), vb.v.len());
+                for (x, y) in va.v.iter().zip(&vb.v) {
+                    assert_eq!(x.to_bits(), y.to_bits());
+                }
+            }
+            assert_eq!(a.scaling.points.len(), b.scaling.points.len());
+            for (pa, pb) in a.scaling.points.iter().zip(&b.scaling.points) {
+                assert_eq!(pa.f_mhz.to_bits(), pb.f_mhz.to_bits());
+                assert_eq!(pa.iter_time_ms.to_bits(), pb.iter_time_ms.to_bits());
+                assert_eq!(pa.p90_rel.to_bits(), pb.p90_rel.to_bits());
+            }
+        }
+        // the same content digest falls out of both representations
+        assert_eq!(
+            crate::registry::refset_digest(&back),
+            crate::registry::refset_digest(&rs)
+        );
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn binary_snapshot_rejects_params_mismatch_and_staleness() {
+        let mut rs = small_set();
+        let pd = MinosParams::default().digest();
+        let path = std::env::temp_dir().join("minos_refset_bin_guard_test.bin");
+        let path = path.to_str().unwrap();
+        rs.save_bin(path, pd).unwrap();
+        // a different effective params digest is a hard error
+        let other = MinosParams::for_device_key("a100-pcie-40gb").digest();
+        assert_ne!(other, pd);
+        let err = ReferenceSet::load_bin(path, other).unwrap_err().to_string();
+        assert!(err.contains("'params_digest'"), "{err}");
+        assert!(err.contains(path), "{err}");
+        // staleness mirrors the JSON contract, with the same escape hatch
+        rs.registry_fingerprint ^= 0xdead_beef;
+        rs.save_bin(path, pd).unwrap();
+        let err = ReferenceSet::load_bin(path, pd).unwrap_err().to_string();
+        assert!(err.contains("stale binary reference-set snapshot"), "{err}");
+        let back = ReferenceSet::load_bin_unchecked(path, pd).unwrap();
+        assert!(!back.is_current());
+        let _ = std::fs::remove_file(path);
     }
 }

@@ -245,6 +245,117 @@ impl VectorIndex {
         self.order.len()
     }
 
+    /// Serialize the built index verbatim — SoA vectors, cached norms,
+    /// class slot grouping, centroids, and radii — so a binary snapshot
+    /// load skips `build()` entirely (no re-normalization, no centroid
+    /// or radius recompute).
+    pub(crate) fn encode(&self, w: &mut crate::util::binfmt::Writer) {
+        w.f64s(&self.bin_sizes);
+        w.usize(self.order.len());
+        for &ei in &self.order {
+            w.usize(ei);
+        }
+        w.usize(self.ranges.len());
+        for &(s0, s1) in &self.ranges {
+            w.usize(s0);
+            w.usize(s1);
+        }
+        for plane in [&self.vecs, &self.norms, &self.centroids] {
+            for row in plane.iter() {
+                w.f64s(row);
+            }
+        }
+        for plane in [&self.centroid_norms, &self.radii] {
+            for row in plane.iter() {
+                w.f64s(row);
+            }
+        }
+    }
+
+    /// Decode an index written by [`VectorIndex::encode`], validating
+    /// every shape invariant `build()` establishes: slot indices within
+    /// the reference set (`nentries`), contiguous class ranges covering
+    /// `order`, and per-bin plane lengths.  `path` names the snapshot in
+    /// shape-violation errors; truncation errors come from the reader.
+    pub(crate) fn decode(
+        r: &mut crate::util::binfmt::Reader<'_>,
+        path: &str,
+        nentries: usize,
+    ) -> anyhow::Result<VectorIndex> {
+        let bin_sizes = r.f64s("index.bin_sizes")?;
+        let nb = bin_sizes.len();
+        anyhow::ensure!(
+            nb > 0,
+            "corrupt snapshot '{path}': field 'index.bin_sizes' is empty"
+        );
+        let nslots = r.usize("index.order.len")?;
+        let mut order = Vec::with_capacity(nslots.min(4096));
+        for i in 0..nslots {
+            let ei = r.usize(&format!("index.order[{i}]"))?;
+            anyhow::ensure!(
+                ei < nentries,
+                "corrupt snapshot '{path}': field 'index.order[{i}]' is {ei}, outside the \
+                 {nentries}-entry reference set"
+            );
+            order.push(ei);
+        }
+        let k = r.usize("index.ranges.len")?;
+        let mut ranges = Vec::with_capacity(k.min(4096));
+        for i in 0..k {
+            let s0 = r.usize(&format!("index.ranges[{i}].start"))?;
+            let s1 = r.usize(&format!("index.ranges[{i}].end"))?;
+            let expect = ranges.last().map(|&(_, e)| e).unwrap_or(0);
+            anyhow::ensure!(
+                s0 == expect && s1 >= s0,
+                "corrupt snapshot '{path}': field 'index.ranges[{i}]' is [{s0}, {s1}) but \
+                 class ranges must tile slots contiguously from {expect}"
+            );
+            ranges.push((s0, s1));
+        }
+        anyhow::ensure!(
+            ranges.last().map(|&(_, e)| e).unwrap_or(0) == nslots,
+            "corrupt snapshot '{path}': field 'index.ranges' covers {} slot(s) but 'index.order' \
+             holds {nslots}",
+            ranges.last().map(|&(_, e)| e).unwrap_or(0)
+        );
+        let mut planes: Vec<Vec<Vec<f64>>> = Vec::with_capacity(5);
+        for (name, want) in [
+            ("index.vecs", nslots * NBINS),
+            ("index.norms", nslots),
+            ("index.centroids", k * NBINS),
+            ("index.centroid_norms", k),
+            ("index.radii", k),
+        ] {
+            let mut plane = Vec::with_capacity(nb);
+            for b in 0..nb {
+                let field = format!("{name}[{b}]");
+                let row = r.f64s(&field)?;
+                anyhow::ensure!(
+                    row.len() == want,
+                    "corrupt snapshot '{path}': field '{field}' holds {} value(s), expected {want}",
+                    row.len()
+                );
+                plane.push(row);
+            }
+            planes.push(plane);
+        }
+        let radii = planes.pop().expect("five planes");
+        let centroid_norms = planes.pop().expect("five planes");
+        let centroids = planes.pop().expect("five planes");
+        let norms = planes.pop().expect("five planes");
+        let vecs = planes.pop().expect("five planes");
+        Ok(VectorIndex {
+            bin_sizes,
+            order,
+            ranges,
+            vecs,
+            norms,
+            centroids,
+            centroid_norms,
+            radii,
+        })
+    }
+
     fn bin_index(&self, c: f64) -> Option<usize> {
         self.bin_sizes.iter().position(|&b| (b - c).abs() < 1e-9)
     }
@@ -812,5 +923,49 @@ mod tests {
         let tv = SpikeVector::zeros(0.2);
         assert!(idx.top2(&rs, &tv, None, 0.2).is_none());
         assert!(idx.centroid_rank(&tv, 0.2).is_empty());
+    }
+
+    #[test]
+    fn encode_decode_roundtrips_queries_bit_exactly() {
+        use crate::util::binfmt::{Header, Reader, Writer, KIND_REGISTRY};
+        let (rs, classes) = synth_refset(40, 5, 13);
+        let idx = VectorIndex::build(&rs, &classes, &[]).unwrap();
+        let h = Header {
+            kind: KIND_REGISTRY,
+            device_fingerprint: 0,
+            refset_digest: 0,
+            params_digest: 0,
+        };
+        let mut w = Writer::new(h);
+        idx.encode(&mut w);
+        let bytes = w.into_bytes();
+        let mut r = Reader::new("idx.bin", &bytes);
+        r.header(KIND_REGISTRY, "class registry").unwrap();
+        let back = VectorIndex::decode(&mut r, "idx.bin", rs.entries.len()).unwrap();
+        r.finish().unwrap();
+        assert_eq!(back.classes(), idx.classes());
+        assert_eq!(back.slots(), idx.slots());
+        let mut rng = Rng::new(5);
+        for t in 0..30 {
+            let p = t % 5;
+            let mut v = vec![0.0; NBINS];
+            v[4 * p] = 0.5 + rng.range(-0.2, 0.2);
+            v[4 * p + 1] = 0.5 + rng.range(-0.2, 0.2);
+            let tv = SpikeVector::new(v, 50.0, 0.1);
+            let a = idx.top2(&rs, &tv, None, 0.1).unwrap();
+            let b = back.top2(&rs, &tv, None, 0.1).unwrap();
+            assert_eq!(a.best.0.name, b.best.0.name, "target {t}");
+            assert_eq!(a.best.1.to_bits(), b.best.1.to_bits(), "target {t}");
+            assert_eq!(a.class_id, b.class_id, "target {t}");
+            assert_eq!(a.classes_scanned, b.classes_scanned, "target {t}");
+        }
+        // a decoded index whose order points outside the refset is rejected
+        let mut w = Writer::new(h);
+        idx.encode(&mut w);
+        let bytes = w.into_bytes();
+        let mut r = Reader::new("idx.bin", &bytes);
+        r.header(KIND_REGISTRY, "class registry").unwrap();
+        let e = VectorIndex::decode(&mut r, "idx.bin", 3).unwrap_err().to_string();
+        assert!(e.contains("index.order"), "{e}");
     }
 }

@@ -630,6 +630,273 @@ impl ClassRegistry {
             index,
         })
     }
+
+    // ---- binary snapshot (the whole built state, index included) ----
+
+    /// Write the registry as a binary snapshot carrying **everything**
+    /// the JSON path re-derives at load: classes with representatives
+    /// and merged scaling, the silhouette sweep, absorbed entries, and
+    /// the built [`VectorIndex`] (SoA vectors, norms, centroids, radii)
+    /// verbatim.  A [`ClassRegistry::load_bin`] is a straight decode —
+    /// no re-clustering, no re-normalization, no re-indexing, and no
+    /// O(n³) sweep recompute.
+    pub fn save_bin(&self, path: &str, params_digest: u64) -> anyhow::Result<()> {
+        let mut w = crate::util::binfmt::Writer::new(crate::util::binfmt::Header {
+            kind: crate::util::binfmt::KIND_REGISTRY,
+            device_fingerprint: self.device.fingerprint,
+            refset_digest: self.refset_digest,
+            params_digest,
+        });
+        w.str(&self.device.name);
+        w.f64(self.chosen_bin);
+        w.f64s(&self.bin_sizes);
+        w.u64(self.version);
+        w.u64(self.registry_fingerprint);
+        w.usize(self.classes.len());
+        for c in &self.classes {
+            w.usize(c.members.len());
+            for &m in &c.members {
+                w.usize(m);
+            }
+            for n in &c.member_names {
+                w.str(n);
+            }
+            match &c.representative {
+                Some(r) => {
+                    w.bool(true);
+                    w.str(r);
+                }
+                None => w.bool(false),
+            }
+            match &c.scaling {
+                Some(sd) => {
+                    w.bool(true);
+                    w.usize(sd.points.len());
+                    for p in &sd.points {
+                        for x in [
+                            p.f_mhz,
+                            p.p50_rel,
+                            p.p90_rel,
+                            p.p95_rel,
+                            p.p99_rel,
+                            p.peak_rel,
+                            p.mean_w,
+                            p.iter_time_ms,
+                            p.frac_above_tdp,
+                            p.profiling_cost_s,
+                        ] {
+                            w.f64(x);
+                        }
+                    }
+                }
+                None => w.bool(false),
+            }
+        }
+        w.usize(self.sweep.len());
+        for &(k, score) in &self.sweep {
+            w.usize(k);
+            w.f64(score);
+        }
+        w.usize(self.absorbed.len());
+        for a in &self.absorbed {
+            w.str(&a.name);
+            w.str(&a.app);
+            w.usize(a.class_id);
+            w.f64(a.util.sm);
+            w.f64(a.util.dram);
+            w.usize(a.vectors.len());
+            for v in &a.vectors {
+                w.f64s(&v.v);
+                w.f64(v.total);
+                w.f64(v.bin_width);
+            }
+        }
+        self.index.encode(&mut w);
+        std::fs::write(path, w.into_bytes())?;
+        Ok(())
+    }
+
+    /// Decode a binary snapshot written by [`ClassRegistry::save_bin`],
+    /// enforcing the same contracts as the JSON [`ClassRegistry::load`]
+    /// — refset digest, device tag, bin sizes — plus the params digest,
+    /// all checked against the header before the body is even decoded.
+    pub fn load_bin(
+        path: &str,
+        refset: &ReferenceSet,
+        expected_params_digest: u64,
+    ) -> anyhow::Result<ClassRegistry> {
+        let bytes = std::fs::read(path)?;
+        let mut r = crate::util::binfmt::Reader::new(path, &bytes);
+        let h = r.header(crate::util::binfmt::KIND_REGISTRY, "class registry")?;
+        anyhow::ensure!(
+            h.refset_digest == refset_digest(refset),
+            "class-registry snapshot '{path}': field 'refset_digest' says it was built for \
+             a different reference set ({:016x} vs {:016x}) — rebuild it with \
+             `minos registry build`",
+            h.refset_digest,
+            refset_digest(refset)
+        );
+        let want = refset.device();
+        anyhow::ensure!(
+            h.device_fingerprint == want.fingerprint,
+            "class-registry snapshot '{path}': field 'device_fingerprint' says it was built \
+             for device {:016x} but this reference set is '{}' ({:016x}) — rebuild it with \
+             `minos registry build`, or transfer its classes with `minos fleet transfer`",
+            h.device_fingerprint,
+            want.name,
+            want.fingerprint
+        );
+        anyhow::ensure!(
+            h.params_digest == expected_params_digest,
+            "class-registry snapshot '{path}': field 'params_digest' ({:016x}) does not \
+             match the effective MinosParams digest ({:016x}) — the snapshot was built under \
+             different classifier parameters; rebuild it",
+            h.params_digest,
+            expected_params_digest
+        );
+        let device_name = r.str("device.name")?;
+        anyhow::ensure!(
+            device_name == want.name,
+            "class-registry snapshot '{path}': field 'device.name' is '{device_name}' but \
+             the header fingerprint resolves to '{}' — the snapshot was corrupted or spliced",
+            want.name
+        );
+        let chosen_bin = r.f64("chosen_bin")?;
+        let bin_sizes = r.f64s("bin_sizes")?;
+        anyhow::ensure!(
+            bin_sizes == refset.bin_sizes,
+            "class-registry snapshot '{path}': field 'bin_sizes' disagrees with the \
+             reference set"
+        );
+        let version = r.u64("version")?;
+        let registry_fingerprint = r.u64("registry_fingerprint")?;
+        let nc = r.usize("classes.len")?;
+        let mut classes = Vec::with_capacity(nc.min(1024));
+        for id in 0..nc {
+            let nm = r.usize(&format!("classes[{id}].members.len"))?;
+            let mut members = Vec::with_capacity(nm.min(4096));
+            for mi in 0..nm {
+                let ei = r.usize(&format!("classes[{id}].members[{mi}]"))?;
+                anyhow::ensure!(
+                    ei < refset.entries.len(),
+                    "corrupt snapshot '{path}': field 'classes[{id}].members[{mi}]' is {ei}, \
+                     outside the {}-entry reference set",
+                    refset.entries.len()
+                );
+                members.push(ei);
+            }
+            let mut member_names = Vec::with_capacity(nm.min(4096));
+            for (mi, &ei) in members.iter().enumerate() {
+                let n = r.str(&format!("classes[{id}].member_names[{mi}]"))?;
+                anyhow::ensure!(
+                    n == refset.entries[ei].name,
+                    "corrupt snapshot '{path}': field 'classes[{id}].member_names[{mi}]' is \
+                     '{n}' but reference entry {ei} is '{}'",
+                    refset.entries[ei].name
+                );
+                member_names.push(n);
+            }
+            let representative = if r.bool(&format!("classes[{id}].has_representative"))? {
+                Some(r.str(&format!("classes[{id}].representative"))?)
+            } else {
+                None
+            };
+            let scaling = if r.bool(&format!("classes[{id}].has_scaling"))? {
+                let np = r.usize(&format!("classes[{id}].scaling.len"))?;
+                let mut points = Vec::with_capacity(np.min(64));
+                for pi in 0..np {
+                    let field = format!("classes[{id}].scaling[{pi}]");
+                    let mut vals = [0.0_f64; 10];
+                    for v in vals.iter_mut() {
+                        *v = r.f64(&field)?;
+                    }
+                    anyhow::ensure!(
+                        vals.iter().all(|v| v.is_finite()),
+                        "corrupt snapshot '{path}': field '{field}': not a finite number"
+                    );
+                    points.push(crate::minos::reference_set::FreqPoint {
+                        f_mhz: vals[0],
+                        p50_rel: vals[1],
+                        p90_rel: vals[2],
+                        p95_rel: vals[3],
+                        p99_rel: vals[4],
+                        peak_rel: vals[5],
+                        mean_w: vals[6],
+                        iter_time_ms: vals[7],
+                        frac_above_tdp: vals[8],
+                        profiling_cost_s: vals[9],
+                    });
+                }
+                anyhow::ensure!(
+                    points.windows(2).all(|w| w[0].f_mhz < w[1].f_mhz),
+                    "corrupt snapshot '{path}': field 'classes[{id}].scaling': frequency \
+                     grid is not strictly ascending"
+                );
+                Some(ScalingData::new(points))
+            } else {
+                None
+            };
+            classes.push(MinosClass {
+                id,
+                members,
+                member_names,
+                representative,
+                scaling,
+            });
+        }
+        let ns = r.usize("sweep.len")?;
+        let mut sweep = Vec::with_capacity(ns.min(64));
+        for i in 0..ns {
+            let k = r.usize(&format!("sweep[{i}].k"))?;
+            let score = r.f64(&format!("sweep[{i}].score"))?;
+            sweep.push((k, score));
+        }
+        let na = r.usize("absorbed.len")?;
+        let mut absorbed = Vec::with_capacity(na.min(4096));
+        for i in 0..na {
+            let name = r.str(&format!("absorbed[{i}].name"))?;
+            let app = r.str(&format!("absorbed[{i}].app"))?;
+            let class_id = r.usize(&format!("absorbed[{i}].class"))?;
+            anyhow::ensure!(
+                class_id < classes.len(),
+                "corrupt snapshot '{path}': field 'absorbed[{i}].class' is {class_id} but \
+                 only {} class(es) exist",
+                classes.len()
+            );
+            let sm = r.f64(&format!("absorbed[{i}].sm"))?;
+            let dram = r.f64(&format!("absorbed[{i}].dram"))?;
+            let nv = r.usize(&format!("absorbed[{i}].vectors.len"))?;
+            let mut vectors = Vec::with_capacity(nv.min(64));
+            for vi in 0..nv {
+                let field = format!("absorbed[{i}].vectors[{vi}]");
+                let v = r.f64s(&field)?;
+                let total = r.f64(&field)?;
+                let bin_width = r.f64(&field)?;
+                vectors.push(SpikeVector::new(v, total, bin_width));
+            }
+            absorbed.push(AbsorbedEntry {
+                name,
+                app,
+                class_id,
+                vectors,
+                util: UtilPoint::new(sm, dram),
+            });
+        }
+        let index = VectorIndex::decode(&mut r, path, refset.entries.len())?;
+        r.finish()?;
+        Ok(ClassRegistry {
+            device: want,
+            chosen_bin,
+            bin_sizes,
+            classes,
+            sweep,
+            version,
+            registry_fingerprint,
+            refset_digest: h.refset_digest,
+            absorbed,
+            index,
+        })
+    }
 }
 
 fn sorted(mut v: Vec<usize>) -> Vec<usize> {
@@ -1093,5 +1360,80 @@ mod tests {
         p.default_bin_size = 0.25;
         let err2 = ClassRegistry::build(&rs2, &p).unwrap_err();
         assert!(err2.to_string().contains("no spike vectors"), "{err2}");
+    }
+
+    #[test]
+    fn binary_snapshot_roundtrips_the_whole_built_state() {
+        let rs = synth_refset(12, 3);
+        let mut reg = ClassRegistry::build(&rs, &params()).unwrap();
+        let near = TargetProfile::from_entry(&synth_entry("abs0", "aapp", 2, 0.003, &[0.1]));
+        reg.absorb(&rs, &near).unwrap();
+        let pd = params().digest();
+        let path = std::env::temp_dir().join("minos_registry_bin_test.bin");
+        let path = path.to_str().unwrap();
+        reg.save_bin(path, pd).unwrap();
+        let back = ClassRegistry::load_bin(path, &rs, pd).unwrap();
+        // verbatim state, including what the JSON path re-derives
+        assert_eq!(back.digest(), reg.digest());
+        assert_eq!(back.version, reg.version);
+        assert_eq!(back.len(), reg.len());
+        assert_eq!(back.sweep.len(), reg.sweep.len());
+        for ((ka, sa), (kb, sb)) in back.sweep.iter().zip(&reg.sweep) {
+            assert_eq!(ka, kb);
+            assert_eq!(sa.to_bits(), sb.to_bits());
+        }
+        assert_eq!(back.class_of("abs0"), reg.class_of("abs0"));
+        for (a, b) in back.classes.iter().zip(&reg.classes) {
+            assert_eq!(a.members, b.members);
+            assert_eq!(a.representative, b.representative);
+            match (&a.scaling, &b.scaling) {
+                (Some(sa), Some(sb)) => {
+                    assert_eq!(sa.points.len(), sb.points.len());
+                    for (pa, pb) in sa.points.iter().zip(&sb.points) {
+                        assert_eq!(pa.iter_time_ms.to_bits(), pb.iter_time_ms.to_bits());
+                        assert_eq!(pa.p90_rel.to_bits(), pb.p90_rel.to_bits());
+                    }
+                }
+                (None, None) => {}
+                _ => panic!("scaling presence diverged"),
+            }
+        }
+        // the decoded index answers bit-identically (no rebuild happened)
+        for e in &rs.entries {
+            let t = TargetProfile::from_entry(e);
+            let a = reg.top2(&rs, &t, 0.1).unwrap();
+            let b = back.top2(&rs, &t, 0.1).unwrap();
+            assert_eq!(a.best.0.name, b.best.0.name, "target {}", e.name);
+            assert_eq!(a.best.1.to_bits(), b.best.1.to_bits(), "target {}", e.name);
+            assert_eq!(a.class_id, b.class_id);
+            assert_eq!(a.classes_scanned, b.classes_scanned);
+        }
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn binary_snapshot_rejects_wrong_refset_params_and_device() {
+        let rs = synth_refset(12, 3);
+        let reg = ClassRegistry::build(&rs, &params()).unwrap();
+        let pd = params().digest();
+        let path = std::env::temp_dir().join("minos_registry_bin_guard_test.bin");
+        let path = path.to_str().unwrap();
+        reg.save_bin(path, pd).unwrap();
+        // a different reference set: field-named hard error
+        let cut = rs.without_app("app0");
+        let err = ClassRegistry::load_bin(path, &cut, pd).unwrap_err().to_string();
+        assert!(err.contains("'refset_digest'"), "{err}");
+        assert!(err.contains("different reference set"), "{err}");
+        // a different params digest
+        let err = ClassRegistry::load_bin(path, &rs, pd ^ 1).unwrap_err().to_string();
+        assert!(err.contains("'params_digest'"), "{err}");
+        // a spliced device: same refset digest, different device spec
+        let mut rs_a100 = synth_refset(12, 3);
+        rs_a100.spec = GpuSpec::a100_pcie();
+        assert_eq!(refset_digest(&rs), refset_digest(&rs_a100));
+        let err = ClassRegistry::load_bin(path, &rs_a100, pd).unwrap_err().to_string();
+        assert!(err.contains("'device_fingerprint'"), "{err}");
+        assert!(err.contains("fleet transfer"), "{err}");
+        let _ = std::fs::remove_file(path);
     }
 }

@@ -1,0 +1,442 @@
+//! Compact, versioned binary snapshot format for serving-state
+//! artifacts (reference sets, class registries, fleet directories).
+//!
+//! Layout, all integers little-endian:
+//!
+//! ```text
+//! offset  size  field
+//!      0     8  magic            b"MINOSNAP"
+//!      8     4  format_version   u32 (this build reads FORMAT_VERSION)
+//!     12     1  kind             1 = reference set, 2 = class registry
+//!     13     8  device_fingerprint  u64 (DeviceProfile::of(spec).fingerprint)
+//!     21     8  refset_digest    u64 (registry::refset_digest contract)
+//!     29     8  params_digest    u64 (MinosParams::digest of the build params)
+//!     37     …  payload          primitives below
+//! ```
+//!
+//! Payload primitives: `u8`, `u32`/`u64`/`usize` (LE), `bool` (one byte,
+//! 0 or 1 — anything else is corruption), `f64` as `to_bits()` LE so
+//! floats roundtrip **bit-exactly** (no decimal formatting on the hot
+//! path), length-prefixed UTF-8 strings, and length-prefixed `f64`
+//! slices.  Every decode error is a hard error naming the file, the
+//! field, and the byte offset; a reader must call [`Reader::finish`] so
+//! trailing garbage is also a hard error.  JSON stays the interoperable
+//! escape hatch — this format trades readability for a straight
+//! buffer-to-struct decode.
+
+/// File magic: 8 bytes at offset 0.
+pub const MAGIC: [u8; 8] = *b"MINOSNAP";
+
+/// Format version this build writes and reads. Bump on any layout change.
+pub const FORMAT_VERSION: u32 = 1;
+
+/// Snapshot kind byte for a [`crate::minos::reference_set::ReferenceSet`].
+pub const KIND_REFSET: u8 = 1;
+
+/// Snapshot kind byte for a [`crate::registry::ClassRegistry`].
+pub const KIND_REGISTRY: u8 = 2;
+
+/// Decoded snapshot header (everything after magic + version).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Header {
+    pub kind: u8,
+    pub device_fingerprint: u64,
+    pub refset_digest: u64,
+    pub params_digest: u64,
+}
+
+/// Append-only snapshot encoder over an owned byte buffer.
+pub struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    /// Start a snapshot: writes magic, format version, and the header.
+    pub fn new(header: Header) -> Writer {
+        let mut w = Writer {
+            buf: Vec::with_capacity(4096),
+        };
+        w.buf.extend_from_slice(&MAGIC);
+        w.buf.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
+        w.buf.push(header.kind);
+        w.buf.extend_from_slice(&header.device_fingerprint.to_le_bytes());
+        w.buf.extend_from_slice(&header.refset_digest.to_le_bytes());
+        w.buf.extend_from_slice(&header.params_digest.to_le_bytes());
+        w
+    }
+
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn usize(&mut self, v: usize) {
+        self.u64(v as u64);
+    }
+
+    pub fn bool(&mut self, v: bool) {
+        self.buf.push(v as u8);
+    }
+
+    /// Bit-exact float: `to_bits()` little-endian.
+    pub fn f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+
+    /// Length-prefixed UTF-8 string.
+    pub fn str(&mut self, v: &str) {
+        self.usize(v.len());
+        self.buf.extend_from_slice(v.as_bytes());
+    }
+
+    /// Length-prefixed slice of bit-exact floats.
+    pub fn f64s(&mut self, v: &[f64]) {
+        self.usize(v.len());
+        for &x in v {
+            self.buf.extend_from_slice(&x.to_bits().to_le_bytes());
+        }
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+}
+
+/// Cursor decoder. Every read names the field it is decoding so a
+/// truncated or corrupt file fails with the file, field, and offset.
+pub struct Reader<'a> {
+    path: String,
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(path: &str, buf: &'a [u8]) -> Reader<'a> {
+        Reader {
+            path: path.to_string(),
+            buf,
+            pos: 0,
+        }
+    }
+
+    /// Current byte offset (for callers embedding it in their own errors).
+    pub fn offset(&self) -> usize {
+        self.pos
+    }
+
+    fn take(&mut self, n: usize, field: &str) -> anyhow::Result<&'a [u8]> {
+        let end = self.pos.checked_add(n).ok_or_else(|| {
+            anyhow::anyhow!(
+                "corrupt snapshot '{}': field '{}' length overflows at offset {}",
+                self.path,
+                field,
+                self.pos
+            )
+        })?;
+        anyhow::ensure!(
+            end <= self.buf.len(),
+            "truncated snapshot '{}': field '{}' needs {} byte(s) at offset {} but the file ends at byte {}",
+            self.path,
+            field,
+            n,
+            self.pos,
+            self.buf.len()
+        );
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    /// Validate magic + format version + kind and return the header.
+    /// `kind_label` names the expected artifact in error messages.
+    pub fn header(&mut self, expected_kind: u8, kind_label: &str) -> anyhow::Result<Header> {
+        let magic = self.take(8, "magic")?;
+        anyhow::ensure!(
+            magic == MAGIC,
+            "not a Minos binary snapshot '{}': field 'magic' at offset 0 is {:02x?}, expected {:02x?}",
+            self.path,
+            magic,
+            MAGIC
+        );
+        let at = self.pos;
+        let version = self.u32("format_version")?;
+        anyhow::ensure!(
+            version == FORMAT_VERSION,
+            "binary snapshot '{}': field 'format_version' at offset {} is {}, but this build reads version {} — rebuild the snapshot",
+            self.path,
+            at,
+            version,
+            FORMAT_VERSION
+        );
+        let at = self.pos;
+        let kind = self.u8("kind")?;
+        anyhow::ensure!(
+            kind == expected_kind,
+            "binary snapshot '{}': field 'kind' at offset {} is {}, expected {} ({})",
+            self.path,
+            at,
+            kind,
+            expected_kind,
+            kind_label
+        );
+        let device_fingerprint = self.u64("device_fingerprint")?;
+        let refset_digest = self.u64("refset_digest")?;
+        let params_digest = self.u64("params_digest")?;
+        Ok(Header {
+            kind,
+            device_fingerprint,
+            refset_digest,
+            params_digest,
+        })
+    }
+
+    pub fn u8(&mut self, field: &str) -> anyhow::Result<u8> {
+        Ok(self.take(1, field)?[0])
+    }
+
+    pub fn u32(&mut self, field: &str) -> anyhow::Result<u32> {
+        let b = self.take(4, field)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    pub fn u64(&mut self, field: &str) -> anyhow::Result<u64> {
+        let b = self.take(8, field)?;
+        Ok(u64::from_le_bytes([
+            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+        ]))
+    }
+
+    pub fn usize(&mut self, field: &str) -> anyhow::Result<usize> {
+        let at = self.pos;
+        let v = self.u64(field)?;
+        usize::try_from(v).map_err(|_| {
+            anyhow::anyhow!(
+                "corrupt snapshot '{}': field '{}' at offset {} is {} — does not fit in usize",
+                self.path,
+                field,
+                at,
+                v
+            )
+        })
+    }
+
+    pub fn bool(&mut self, field: &str) -> anyhow::Result<bool> {
+        let at = self.pos;
+        match self.u8(field)? {
+            0 => Ok(false),
+            1 => Ok(true),
+            b => Err(anyhow::anyhow!(
+                "corrupt snapshot '{}': field '{}' at offset {} is byte {}, expected 0 or 1",
+                self.path,
+                field,
+                at,
+                b
+            )),
+        }
+    }
+
+    /// Bit-exact float: `from_bits` of a little-endian u64.
+    pub fn f64(&mut self, field: &str) -> anyhow::Result<f64> {
+        Ok(f64::from_bits(self.u64(field)?))
+    }
+
+    /// Length-prefixed UTF-8 string.
+    pub fn str(&mut self, field: &str) -> anyhow::Result<String> {
+        let n = self.usize(field)?;
+        let at = self.pos;
+        let bytes = self.take(n, field)?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| {
+            anyhow::anyhow!(
+                "corrupt snapshot '{}': field '{}' at offset {} is not valid UTF-8",
+                self.path,
+                field,
+                at
+            )
+        })
+    }
+
+    /// Length-prefixed slice of bit-exact floats. The byte take is
+    /// bounds-checked before any allocation, so a corrupt length fails
+    /// as truncation instead of a huge reserve.
+    pub fn f64s(&mut self, field: &str) -> anyhow::Result<Vec<f64>> {
+        let n = self.usize(field)?;
+        let bytes_needed = n.checked_mul(8).ok_or_else(|| {
+            anyhow::anyhow!(
+                "corrupt snapshot '{}': field '{}' length {} overflows at offset {}",
+                self.path,
+                field,
+                n,
+                self.pos
+            )
+        })?;
+        let bytes = self.take(bytes_needed, field)?;
+        let mut out = Vec::with_capacity(n);
+        for chunk in bytes.chunks_exact(8) {
+            out.push(f64::from_bits(u64::from_le_bytes([
+                chunk[0], chunk[1], chunk[2], chunk[3], chunk[4], chunk[5], chunk[6], chunk[7],
+            ])));
+        }
+        Ok(out)
+    }
+
+    /// Assert the whole buffer was consumed — trailing bytes mean the
+    /// file was written by a different layout (or spliced) and must not
+    /// be silently accepted.
+    pub fn finish(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.pos == self.buf.len(),
+            "corrupt snapshot '{}': {} trailing byte(s) after the last field at offset {}",
+            self.path,
+            self.buf.len() - self.pos,
+            self.pos
+        );
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn header() -> Header {
+        Header {
+            kind: KIND_REFSET,
+            device_fingerprint: 0xdead_beef_cafe_f00d,
+            refset_digest: 0x0123_4567_89ab_cdef,
+            params_digest: 0xfeed_face_0bad_f00d,
+        }
+    }
+
+    #[test]
+    fn primitives_roundtrip_bit_exact() {
+        let mut w = Writer::new(header());
+        w.u8(7);
+        w.u32(0xdeadbeef);
+        w.u64(u64::MAX - 3);
+        w.usize(42);
+        w.bool(true);
+        w.bool(false);
+        // Exercise bit-exactness on values decimal formatting mangles:
+        // subnormals, negative zero, and a non-canonical NaN payload.
+        let floats = [
+            0.1,
+            -0.0,
+            f64::MIN_POSITIVE / 2.0,
+            f64::from_bits(0x7ff8_0000_0000_0001),
+            1500.0 / 2100.0,
+        ];
+        for &f in &floats {
+            w.f64(f);
+        }
+        w.str("bert-large μbatch");
+        w.f64s(&floats);
+        let bytes = w.into_bytes();
+
+        let mut r = Reader::new("test.bin", &bytes);
+        let h = r.header(KIND_REFSET, "reference set").unwrap();
+        assert_eq!(h, header());
+        assert_eq!(r.u8("a").unwrap(), 7);
+        assert_eq!(r.u32("b").unwrap(), 0xdeadbeef);
+        assert_eq!(r.u64("c").unwrap(), u64::MAX - 3);
+        assert_eq!(r.usize("d").unwrap(), 42);
+        assert!(r.bool("e").unwrap());
+        assert!(!r.bool("f").unwrap());
+        for &f in &floats {
+            assert_eq!(r.f64("g").unwrap().to_bits(), f.to_bits());
+        }
+        assert_eq!(r.str("h").unwrap(), "bert-large μbatch");
+        let back = r.f64s("i").unwrap();
+        assert_eq!(back.len(), floats.len());
+        for (a, b) in back.iter().zip(&floats) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        r.finish().unwrap();
+    }
+
+    #[test]
+    fn truncation_names_file_field_and_offset() {
+        let mut w = Writer::new(header());
+        w.u64(99);
+        let mut bytes = w.into_bytes();
+        bytes.truncate(bytes.len() - 3);
+        let mut r = Reader::new("cut.bin", &bytes);
+        r.header(KIND_REFSET, "reference set").unwrap();
+        let e = r.u64("mean_power_w").unwrap_err().to_string();
+        assert!(e.contains("truncated snapshot 'cut.bin'"), "{e}");
+        assert!(e.contains("'mean_power_w'"), "{e}");
+        assert!(e.contains("offset 37"), "{e}");
+    }
+
+    #[test]
+    fn flipped_magic_is_a_hard_error() {
+        let w = Writer::new(header());
+        let mut bytes = w.into_bytes();
+        bytes[0] ^= 0xff;
+        let mut r = Reader::new("bad.bin", &bytes);
+        let e = r.header(KIND_REFSET, "reference set").unwrap_err().to_string();
+        assert!(e.contains("not a Minos binary snapshot 'bad.bin'"), "{e}");
+        assert!(e.contains("'magic'"), "{e}");
+    }
+
+    #[test]
+    fn wrong_format_version_is_a_hard_error() {
+        let w = Writer::new(header());
+        let mut bytes = w.into_bytes();
+        bytes[8..12].copy_from_slice(&(FORMAT_VERSION + 1).to_le_bytes());
+        let mut r = Reader::new("future.bin", &bytes);
+        let e = r.header(KIND_REFSET, "reference set").unwrap_err().to_string();
+        assert!(e.contains("'format_version'"), "{e}");
+        assert!(e.contains("rebuild the snapshot"), "{e}");
+    }
+
+    #[test]
+    fn wrong_kind_is_a_hard_error() {
+        let w = Writer::new(header());
+        let bytes = w.into_bytes();
+        let mut r = Reader::new("kind.bin", &bytes);
+        let e = r
+            .header(KIND_REGISTRY, "class registry")
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("'kind'"), "{e}");
+        assert!(e.contains("class registry"), "{e}");
+    }
+
+    #[test]
+    fn trailing_bytes_are_a_hard_error() {
+        let mut w = Writer::new(header());
+        w.u32(5);
+        let mut bytes = w.into_bytes();
+        bytes.push(0xaa);
+        let mut r = Reader::new("tail.bin", &bytes);
+        r.header(KIND_REFSET, "reference set").unwrap();
+        r.u32("n").unwrap();
+        let e = r.finish().unwrap_err().to_string();
+        assert!(e.contains("1 trailing byte(s)"), "{e}");
+    }
+
+    #[test]
+    fn corrupt_bool_and_huge_length_fail_cleanly() {
+        let mut w = Writer::new(header());
+        w.u8(2); // invalid bool byte
+        let bytes = w.into_bytes();
+        let mut r = Reader::new("b.bin", &bytes);
+        r.header(KIND_REFSET, "reference set").unwrap();
+        let e = r.bool("power_profiled").unwrap_err().to_string();
+        assert!(e.contains("expected 0 or 1"), "{e}");
+
+        let mut w = Writer::new(header());
+        w.u64(u64::MAX); // length prefix that cannot possibly fit
+        let bytes = w.into_bytes();
+        let mut r = Reader::new("len.bin", &bytes);
+        r.header(KIND_REFSET, "reference set").unwrap();
+        assert!(r.f64s("vectors").is_err());
+    }
+}

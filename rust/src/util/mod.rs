@@ -3,6 +3,7 @@
 //! property-testing helper (`propcheck`), and the shared FNV-1a digest
 //! (`fnv`).
 
+pub mod binfmt;
 pub mod fnv;
 pub mod json;
 pub mod propcheck;

@@ -1,0 +1,248 @@
+//! End-to-end acceptance for the binary snapshot format (README
+//! § "Instant start"): JSON↔binary equivalence (same digests, same
+//! classify decisions), hard errors on truncated/corrupt/spliced/stale
+//! files that name the file and the field, fleet snapshot directories,
+//! and byte-identical serving when the scheduler cold-boots from a
+//! snapshot instead of rebuilding its artifacts from a profile.
+
+use minos::config::{GpuSpec, MinosParams, NodeSpec, SimParams};
+use minos::coordinator::{
+    outcome_digest, outcome_table, Job, PowerAwareScheduler, SchedulerConfig,
+};
+use minos::fleet::FleetStore;
+use minos::minos::algorithm::{Objective, SelectOptimalFreq, TargetProfile};
+use minos::minos::reference_set::ReferenceSet;
+use minos::registry::{refset_digest, ClassRegistry};
+use minos::workloads;
+
+const PICKS: [&str; 4] = ["sgemm", "milc-6", "sdxl-b64", "lammps-8x8x16"];
+
+fn build_refset(spec: &GpuSpec) -> ReferenceSet {
+    let reg = workloads::registry();
+    let picks: Vec<&workloads::Workload> =
+        PICKS.iter().map(|n| reg.by_name(n).unwrap()).collect();
+    ReferenceSet::build(spec, &SimParams::default(), &MinosParams::default(), &picks)
+}
+
+fn tmp(name: &str) -> String {
+    std::env::temp_dir().join(name).to_str().unwrap().to_string()
+}
+
+#[test]
+fn json_and_binary_refset_snapshots_are_equivalent() {
+    let rs = build_refset(&GpuSpec::mi300x());
+    let params = MinosParams::default();
+    let pd = params.digest();
+    let jp = tmp("snap-equiv-refset.json");
+    let bp = tmp("snap-equiv-refset.bin");
+    rs.save(&jp).unwrap();
+    rs.save_bin(&bp, pd).unwrap();
+
+    let from_json = ReferenceSet::load(&jp).unwrap();
+    let from_bin = ReferenceSet::load_bin(&bp, pd).unwrap();
+    assert_eq!(refset_digest(&from_json), refset_digest(&rs));
+    assert_eq!(refset_digest(&from_bin), refset_digest(&rs));
+    assert_eq!(from_bin.spec, rs.spec);
+    assert_eq!(from_bin.bin_sizes, rs.bin_sizes);
+
+    // same classify decisions from either snapshot, bit for bit
+    let sel_j = SelectOptimalFreq::new(&from_json, &params);
+    let sel_b = SelectOptimalFreq::new(&from_bin, &params);
+    for e in &rs.entries {
+        let t = TargetProfile::from_entry(e);
+        for obj in [Objective::PowerCentric, Objective::PerfCentric] {
+            let a = sel_j.select(&t, obj);
+            let b = sel_b.select(&t, obj);
+            match (a, b) {
+                (Some(a), Some(b)) => {
+                    assert_eq!(
+                        a.f_cap_mhz.to_bits(),
+                        b.f_cap_mhz.to_bits(),
+                        "{}: cap diverged between JSON and binary snapshots",
+                        e.name
+                    );
+                    assert_eq!(a.pwr_neighbor, b.pwr_neighbor, "{}", e.name);
+                }
+                (None, None) => {}
+                _ => panic!("{}: one snapshot classified, the other refused", e.name),
+            }
+        }
+    }
+    let _ = std::fs::remove_file(&jp);
+    let _ = std::fs::remove_file(&bp);
+}
+
+#[test]
+fn json_and_binary_registry_snapshots_are_equivalent() {
+    let rs = build_refset(&GpuSpec::mi300x());
+    let params = MinosParams::default();
+    let pd = params.digest();
+    let reg = ClassRegistry::build(&rs, &params).unwrap();
+    let jp = tmp("snap-equiv-registry.json");
+    let bp = tmp("snap-equiv-registry.bin");
+    reg.save(&jp).unwrap();
+    reg.save_bin(&bp, pd).unwrap();
+
+    // the JSON path re-derives + re-indexes + re-sweeps; the binary path
+    // decodes the built state verbatim — both must land on the same
+    // registry digest and the same top-2 answers, bit for bit.
+    let from_json = ClassRegistry::load(&jp, &rs).unwrap();
+    let from_bin = ClassRegistry::load_bin(&bp, &rs, pd).unwrap();
+    assert_eq!(from_json.digest(), reg.digest());
+    assert_eq!(from_bin.digest(), reg.digest());
+    assert_eq!(from_bin.version, reg.version);
+    for e in &rs.entries {
+        let t = TargetProfile::from_entry(e);
+        for c in rs.bin_sizes.clone() {
+            let a = from_json.top2(&rs, &t, c);
+            let b = from_bin.top2(&rs, &t, c);
+            match (a, b) {
+                (Some(a), Some(b)) => {
+                    assert_eq!(a.best.0.name, b.best.0.name, "{}", e.name);
+                    assert_eq!(a.best.1.to_bits(), b.best.1.to_bits(), "{}", e.name);
+                    assert_eq!(a.class_id, b.class_id, "{}", e.name);
+                }
+                (None, None) => {}
+                _ => panic!("{}: JSON and binary registries disagree on top2", e.name),
+            }
+        }
+    }
+    let _ = std::fs::remove_file(&jp);
+    let _ = std::fs::remove_file(&bp);
+}
+
+#[test]
+fn corrupt_snapshots_are_hard_errors_naming_file_and_field() {
+    let rs = build_refset(&GpuSpec::mi300x());
+    let pd = MinosParams::default().digest();
+    let bp = tmp("snap-corrupt-refset.bin");
+    rs.save_bin(&bp, pd).unwrap();
+    let good = std::fs::read(&bp).unwrap();
+
+    // truncation mid-payload
+    std::fs::write(&bp, &good[..good.len() - 5]).unwrap();
+    let e = ReferenceSet::load_bin(&bp, pd).unwrap_err().to_string();
+    assert!(e.contains("truncated snapshot"), "{e}");
+    assert!(e.contains("snap-corrupt-refset.bin"), "{e}");
+
+    // flipped magic
+    let mut bad = good.clone();
+    bad[0] ^= 0xff;
+    std::fs::write(&bp, &bad).unwrap();
+    let e = ReferenceSet::load_bin(&bp, pd).unwrap_err().to_string();
+    assert!(e.contains("not a Minos binary snapshot"), "{e}");
+    assert!(e.contains("'magic'"), "{e}");
+
+    // future format version
+    let mut bad = good.clone();
+    bad[8..12].copy_from_slice(&2u32.to_le_bytes());
+    std::fs::write(&bp, &bad).unwrap();
+    let e = ReferenceSet::load_bin(&bp, pd).unwrap_err().to_string();
+    assert!(e.contains("'format_version'"), "{e}");
+    assert!(e.contains("rebuild the snapshot"), "{e}");
+
+    // spliced device fingerprint (header bytes 13..21)
+    let mut bad = good.clone();
+    bad[13] ^= 0x01;
+    std::fs::write(&bp, &bad).unwrap();
+    let e = ReferenceSet::load_bin(&bp, pd).unwrap_err().to_string();
+    assert!(e.contains("'device_fingerprint'"), "{e}");
+
+    // stale refset digest (header bytes 21..29)
+    let mut bad = good.clone();
+    bad[21] ^= 0x01;
+    std::fs::write(&bp, &bad).unwrap();
+    let e = ReferenceSet::load_bin(&bp, pd).unwrap_err().to_string();
+    assert!(e.contains("'refset_digest'"), "{e}");
+
+    // params digest mismatch (intact file, wrong effective params)
+    std::fs::write(&bp, &good).unwrap();
+    let e = ReferenceSet::load_bin(&bp, pd ^ 1).unwrap_err().to_string();
+    assert!(e.contains("'params_digest'"), "{e}");
+
+    let _ = std::fs::remove_file(&bp);
+}
+
+fn snapshot_queue() -> Vec<Job> {
+    let mut q: Vec<Job> = PICKS
+        .iter()
+        .enumerate()
+        .map(|(i, wl)| Job {
+            id: i as u64,
+            workload: wl.to_string(),
+            objective: Objective::PowerCentric,
+            iterations: 2,
+            device: None,
+        })
+        .collect();
+    q.push(Job {
+        id: q.len() as u64,
+        workload: "milc-6".to_string(),
+        objective: Objective::PerfCentric,
+        iterations: 2,
+        device: Some("a100".to_string()),
+    });
+    q
+}
+
+fn run(sched: PowerAwareScheduler, queue: &[Job]) -> Vec<minos::coordinator::JobOutcome> {
+    for j in queue {
+        sched.submit(j.clone()).unwrap();
+    }
+    let mut outcomes = sched.collect(queue.len());
+    sched.shutdown();
+    outcomes.sort_by_key(|o| o.job.id);
+    outcomes
+}
+
+#[test]
+fn scheduler_booted_from_snapshot_serves_byte_identically() {
+    let params = MinosParams::default();
+    let mut fleet = FleetStore::new();
+    fleet
+        .add(build_refset(&GpuSpec::mi300x()), &params)
+        .unwrap();
+    fleet
+        .add(build_refset(&GpuSpec::a100_pcie()), &params)
+        .unwrap();
+    let dir = tmp("snap-serve-fleet");
+    let _ = std::fs::remove_dir_all(&dir);
+    fleet.save_dir(&dir, &params).unwrap();
+
+    let cfg = SchedulerConfig {
+        cluster: Some(vec![NodeSpec::hpc_fund(), NodeSpec::lonestar6()]),
+        sim_ms_per_wall_ms: 0.0,
+        ..Default::default()
+    };
+    let queue = snapshot_queue();
+    let rebuilt = run(
+        PowerAwareScheduler::with_fleet(cfg.clone(), fleet),
+        &queue,
+    );
+    let snapped = run(
+        PowerAwareScheduler::from_snapshot(cfg, &dir).unwrap(),
+        &queue,
+    );
+
+    assert_eq!(rebuilt.len(), queue.len());
+    // the whole outcome table — caps, classes, placements, timings —
+    // must be byte-identical between the rebuild and snapshot boots
+    assert_eq!(outcome_table(&rebuilt), outcome_table(&snapped));
+    assert_eq!(outcome_digest(&rebuilt), outcome_digest(&snapped));
+
+    // a snapshot that lacks a cluster device is a submit-time hard error,
+    // not a silent transfer fallback
+    let solo_dir = tmp("snap-serve-solo");
+    let _ = std::fs::remove_dir_all(&solo_dir);
+    let mut solo = FleetStore::new();
+    solo.add(build_refset(&GpuSpec::mi300x()), &params).unwrap();
+    solo.save_dir(&solo_dir, &params).unwrap();
+    let loaded = FleetStore::load_dir(&solo_dir, &params).unwrap();
+    assert_eq!(loaded.len(), 1);
+    assert!(loaded
+        .get(minos::config::DeviceProfile::of(&GpuSpec::a100_pcie()).fingerprint)
+        .is_none());
+
+    let _ = std::fs::remove_dir_all(&dir);
+    let _ = std::fs::remove_dir_all(&solo_dir);
+}

@@ -1,0 +1,161 @@
+"""Unit tests for the CI perf-regression gate (tools/bench_check.py).
+
+Stdlib ``unittest`` only, discovered in CI with
+``python3 -m unittest discover -s tools -p 'test_*.py'`` (discovery puts
+``tools/`` on ``sys.path``, so ``import bench_check`` resolves).
+
+Covered contracts:
+
+* bootstrap mode: no recorded baseline and no previous artifact passes;
+* ``--prev`` fallback: gates against the previous run's artifact when the
+  committed baseline has no entry, and a missing file is only a warning;
+* the +25% ``mean_ns`` threshold is strictly greater-than (exactly +25%
+  passes, one more nanosecond over fails);
+* a bench with no baseline anywhere is "new" and never fails;
+* the committed baseline always wins over the ``--prev`` artifact;
+* malformed JSONL is a hard ``SystemExit``.
+"""
+
+import contextlib
+import io
+import json
+import os
+import tempfile
+import unittest
+
+import bench_check
+
+
+def smoke(name, mean_ns):
+    return {"name": name, "mean_ns": mean_ns, "smoke": True}
+
+
+class BenchCheckCase(unittest.TestCase):
+    def setUp(self):
+        self._tmp = tempfile.TemporaryDirectory()
+        self.addCleanup(self._tmp.cleanup)
+
+    def path(self, name):
+        return os.path.join(self._tmp.name, name)
+
+    def write_artifact(self, name, records):
+        p = self.path(name)
+        with open(p, "w", encoding="utf-8") as fh:
+            for rec in records:
+                fh.write(json.dumps(rec) + "\n")
+        return p
+
+    def write_baseline(self, name, runs):
+        p = self.path(name)
+        with open(p, "w", encoding="utf-8") as fh:
+            json.dump({"runs": runs}, fh)
+        return p
+
+    def run_gate(self, artifact, baseline, extra=None):
+        argv = [artifact, baseline] + (extra or [])
+        out = io.StringIO()
+        with contextlib.redirect_stdout(out):
+            code = bench_check.main(argv)
+        return code, out.getvalue()
+
+    def test_bootstrap_mode_passes_and_prints_paste_ready_entry(self):
+        artifact = self.write_artifact("cur.jsonl", [smoke("a", 1000.0)])
+        baseline = self.write_baseline("base.json", [{"pr": 1, "results": []}])
+        code, out = self.run_gate(artifact, baseline)
+        self.assertEqual(code, 0)
+        self.assertIn("bootstrap mode", out)
+        self.assertIn('"mean_ns"', out)
+
+    def test_exactly_plus_25_percent_passes_one_more_ns_fails(self):
+        baseline = self.write_baseline(
+            "base.json", [{"pr": 1, "results": [smoke("a", 1000.0)]}]
+        )
+        at_limit = self.write_artifact("at.jsonl", [smoke("a", 1250.0)])
+        code, out = self.run_gate(at_limit, baseline)
+        self.assertEqual(code, 0, out)
+        over = self.write_artifact("over.jsonl", [smoke("a", 1251.0)])
+        code, out = self.run_gate(over, baseline)
+        self.assertEqual(code, 1, out)
+        self.assertIn("REGRESS", out)
+
+    def test_new_bench_never_fails(self):
+        baseline = self.write_baseline(
+            "base.json", [{"pr": 1, "results": [smoke("old", 1000.0)]}]
+        )
+        artifact = self.write_artifact(
+            "cur.jsonl", [smoke("old", 1000.0), smoke("brand-new", 9_999_999.0)]
+        )
+        code, out = self.run_gate(artifact, baseline)
+        self.assertEqual(code, 0, out)
+        self.assertIn("NEW", out)
+
+    def test_prev_artifact_is_the_fallback_baseline(self):
+        baseline = self.write_baseline("base.json", [{"pr": 1, "results": []}])
+        prev = self.write_artifact("prev.jsonl", [smoke("a", 1000.0)])
+        regressed = self.write_artifact("cur.jsonl", [smoke("a", 2000.0)])
+        code, out = self.run_gate(regressed, baseline, ["--prev", prev])
+        self.assertEqual(code, 1, out)
+        self.assertIn("[prev run]", out)
+        steady = self.write_artifact("ok.jsonl", [smoke("a", 1100.0)])
+        code, out = self.run_gate(steady, baseline, ["--prev", prev])
+        self.assertEqual(code, 0, out)
+
+    def test_committed_baseline_wins_over_prev(self):
+        baseline = self.write_baseline(
+            "base.json", [{"pr": 1, "results": [smoke("a", 1000.0)]}]
+        )
+        # prev says 100 ns; if it won, 1100 ns would be a 10x regression
+        prev = self.write_artifact("prev.jsonl", [smoke("a", 100.0)])
+        artifact = self.write_artifact("cur.jsonl", [smoke("a", 1100.0)])
+        code, out = self.run_gate(artifact, baseline, ["--prev", prev])
+        self.assertEqual(code, 0, out)
+        self.assertIn("[baseline]", out)
+
+    def test_missing_prev_is_a_warning_not_a_failure(self):
+        baseline = self.write_baseline(
+            "base.json", [{"pr": 1, "results": [smoke("a", 1000.0)]}]
+        )
+        artifact = self.write_artifact("cur.jsonl", [smoke("a", 1000.0)])
+        code, out = self.run_gate(
+            artifact, baseline, ["--prev", self.path("does-not-exist.jsonl")]
+        )
+        self.assertEqual(code, 0, out)
+        self.assertIn("--prev artifact unavailable", out)
+
+    def test_latest_baseline_run_supersedes_older_entries(self):
+        baseline = self.write_baseline(
+            "base.json",
+            [
+                {"pr": 1, "results": [smoke("a", 100.0)]},
+                {"pr": 2, "results": [smoke("a", 1000.0)]},
+            ],
+        )
+        artifact = self.write_artifact("cur.jsonl", [smoke("a", 1100.0)])
+        code, out = self.run_gate(artifact, baseline)
+        self.assertEqual(code, 0, out)
+
+    def test_non_smoke_entries_are_ignored(self):
+        baseline = self.write_baseline(
+            "base.json", [{"pr": 1, "results": [smoke("a", 1000.0)]}]
+        )
+        artifact = self.write_artifact(
+            "cur.jsonl", [{"name": "a", "mean_ns": 99_999_999.0, "smoke": False}]
+        )
+        code, out = self.run_gate(artifact, baseline)
+        self.assertEqual(code, 0, out)
+        self.assertIn("no smoke-mode entries", out)
+
+    def test_malformed_jsonl_is_a_hard_error(self):
+        p = self.path("bad.jsonl")
+        with open(p, "w", encoding="utf-8") as fh:
+            fh.write('{"name": "a", "mean_ns": 1}\nnot json at all\n')
+        baseline = self.write_baseline("base.json", [{"pr": 1, "results": []}])
+        with self.assertRaises(SystemExit):
+            self.run_gate(p, baseline)
+        missing_fields = self.write_artifact("fields.jsonl", [{"iters": 3}])
+        with self.assertRaises(SystemExit):
+            self.run_gate(missing_fields, baseline)
+
+
+if __name__ == "__main__":
+    unittest.main()
